@@ -1,0 +1,162 @@
+//! END-TO-END driver: the complete three-layer system on a real workload.
+//!
+//! Raw glyph images → PJRT controller (the jax/HAT-trained Conv4, AOT-
+//! lowered to HLO and executed from rust) → quantize + MTMC encode →
+//! (simulated) NAND MCAM block → AVSS search → classification, on the
+//! paper's many-class setting (200-way 10-shot SynthOmniglot), serving
+//! queries through the coordinator with wall-clock latency/throughput and
+//! accuracy reporting.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_fsl_pipeline
+//! ```
+
+use anyhow::{Context, Result};
+use mcamvss::coordinator::{Coordinator, CoordinatorConfig, Payload};
+use mcamvss::encoding::Encoding;
+use mcamvss::fsl::store::ArtifactStore;
+use mcamvss::metrics::LatencyHistogram;
+use mcamvss::runtime::embed_service::EmbedService;
+use mcamvss::runtime::image_slice;
+use mcamvss::search::engine::EngineConfig;
+use mcamvss::search::SearchMode;
+use mcamvss::testutil::Rng;
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+const N_WAY: usize = 200;
+const K_SHOT: usize = 10;
+const N_QUERY: usize = 2; // per class
+const CL: usize = 32; // the paper's full-precision Omniglot setting
+
+fn main() -> Result<()> {
+    let store = ArtifactStore::open_default()
+        .context("artifacts missing — run `make artifacts` first")?;
+
+    // ---- L2: the HAT-trained controller (AOT HLO) behind the embed
+    //      service thread (PJRT handles are !Send) ----
+    let hw = store.image_hw("omniglot")?;
+    let dim = store.embed_dim("omniglot")?;
+    let service = EmbedService::spawn(
+        store.controller_hlo("omniglot", "hat_avss", 8),
+        8,
+        hw,
+        dim,
+    )?;
+    let embedder = service.handle();
+    println!("controller: conv4 omniglot/hat_avss, batch 8, {hw}x{hw} -> {dim}-d (PJRT CPU)");
+
+    // ---- episode from raw test images ----
+    let images = store.test_images("omniglot")?;
+    let labels = store.test_labels("omniglot")?;
+    let mut by_class: BTreeMap<u32, Vec<usize>> = BTreeMap::new();
+    for (i, &label) in labels.iter().enumerate() {
+        by_class.entry(label).or_default().push(i);
+    }
+    let mut rng = Rng::new(0xE2E);
+    let classes: Vec<u32> = by_class.keys().copied().collect();
+    let chosen = rng.choose_distinct(classes.len(), N_WAY);
+
+    // Embed the support set through the PJRT controller, batched.
+    let embed_images = |idxs: &[usize]| -> Result<Vec<f32>> {
+        let mut out = Vec::with_capacity(idxs.len() * dim);
+        for chunk in idxs.chunks(8) {
+            let mut flat = Vec::with_capacity(chunk.len() * hw * hw);
+            for &i in chunk {
+                flat.extend_from_slice(image_slice(&images, i)?);
+            }
+            out.extend(embedder.embed(&flat, chunk.len())?);
+        }
+        Ok(out)
+    };
+
+    let mut support_idx = Vec::new();
+    let mut support_labels = Vec::new();
+    let mut query_idx = Vec::new();
+    let mut query_truth = Vec::new();
+    for (local, &ci) in chosen.iter().enumerate() {
+        let rows = &by_class[&classes[ci]];
+        let picks = rng.choose_distinct(rows.len(), K_SHOT + N_QUERY);
+        for &p in &picks[..K_SHOT] {
+            support_idx.push(rows[p]);
+            support_labels.push(local as u32);
+        }
+        for &p in &picks[K_SHOT..] {
+            query_idx.push(rows[p]);
+            query_truth.push(local as u32);
+        }
+    }
+    let t0 = Instant::now();
+    let support_emb = embed_images(&support_idx)?;
+    println!(
+        "embedded {} support images through PJRT in {:.2}s",
+        support_idx.len(),
+        t0.elapsed().as_secs_f64()
+    );
+    let support: Vec<&[f32]> =
+        (0..support_idx.len()).map(|i| &support_emb[i * dim..(i + 1) * dim]).collect();
+
+    // ---- L3: coordinator with MCAM engines (image payloads) ----
+    let clip = store.clip("omniglot", "hat_avss")?;
+    let engine_cfg = EngineConfig::new(Encoding::Mtmc, CL, SearchMode::Avss, clip);
+    let embed_fn = embedder.as_embed_fn();
+    let coord = Coordinator::start(
+        CoordinatorConfig { workers: 2, queue_capacity: 512, ..Default::default() },
+        engine_cfg,
+        dim,
+        &support,
+        &support_labels,
+        embed_fn,
+    )?;
+    println!(
+        "coordinator up: 2 workers, {}-way {}-shot support = {} vectors x {} strings",
+        N_WAY,
+        K_SHOT,
+        support.len(),
+        mcamvss::mapping::VectorLayout::new(dim, Encoding::Mtmc, CL).strings_per_vector()
+    );
+
+    // ---- serve raw-image queries ----
+    let t0 = Instant::now();
+    for &qi in &query_idx {
+        coord.submit(Payload::Image(image_slice(&images, qi)?.to_vec()));
+    }
+    let mut responses = coord.shutdown();
+    let wall = t0.elapsed();
+    responses.sort_by_key(|r| r.id);
+
+    let mut latency = LatencyHistogram::default();
+    let mut correct = 0usize;
+    let mut device_us = 0f64;
+    for r in &responses {
+        latency.record(r.wall_latency);
+        device_us += r.device_latency_us;
+        if r.label == query_truth[r.id as usize] {
+            correct += 1;
+        }
+    }
+    let n = responses.len();
+    println!("\n=== end-to-end results ({N_WAY}-way {K_SHOT}-shot, MTMC cl={CL}, AVSS) ===");
+    println!(
+        "served {n} image queries in {:.2}s -> {:.1} req/s wall",
+        wall.as_secs_f64(),
+        n as f64 / wall.as_secs_f64()
+    );
+    println!(
+        "accuracy {:.2}% ({correct}/{n})",
+        100.0 * correct as f64 / n.max(1) as f64
+    );
+    println!(
+        "wall latency us: mean {:.0} p50 {:.0} p99 {:.0}",
+        latency.mean_us(),
+        latency.quantile_us(0.5),
+        latency.quantile_us(0.99)
+    );
+    println!(
+        "simulated MCAM device: {:.0} us/search ({} iterations x 50 us), {:.1} searches/s device-bound",
+        device_us / n.max(1) as f64,
+        mcamvss::mapping::VectorLayout::new(dim, Encoding::Mtmc, CL).avss_iterations(),
+        1e6 * n as f64 / device_us.max(1e-9)
+    );
+    Ok(())
+}

@@ -1,0 +1,80 @@
+//! Energy–accuracy trade-off explorer: a compact Fig. 9 sweep.
+//!
+//! Sweeps code word lengths for all four encodings on the Omniglot test
+//! embeddings and prints the Pareto table (AVSS, noisy device), plus the
+//! software float baseline.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example energy_pareto
+//! ```
+
+use anyhow::{Context, Result};
+use mcamvss::device::variation::VariationModel;
+use mcamvss::encoding::Encoding;
+use mcamvss::experiments::{run_mcam_eval, run_software_baseline, EpisodeSettings};
+use mcamvss::fsl::store::ArtifactStore;
+use mcamvss::search::SearchMode;
+
+fn main() -> Result<()> {
+    let store = ArtifactStore::open_default()
+        .context("artifacts missing — run `make artifacts` first")?;
+    let settings = EpisodeSettings {
+        n_way: 100,
+        k_shot: 5,
+        n_query: 2,
+        episodes: 2,
+        seed: 0xEA,
+    };
+    println!("energy-accuracy sweep: omniglot, 100-way 5-shot, AVSS, noisy device\n");
+    println!("encoding  cl  levels  nJ/search  accuracy%");
+    for (enc, cls) in [
+        (Encoding::Sre, vec![1, 4, 8]),
+        (Encoding::B4e, vec![1, 3, 5]),
+        (Encoding::B4we, vec![1, 2, 3]),
+        (Encoding::Mtmc, vec![1, 4, 8, 16]),
+    ] {
+        for cl in cls {
+            let r = run_mcam_eval(
+                &store,
+                "omniglot",
+                "std",
+                enc,
+                cl,
+                SearchMode::Avss,
+                VariationModel::nand_default(),
+                settings,
+            )?;
+            println!(
+                "{:>8} {:>3} {:>7} {:>10.2} {:>9.2}",
+                enc.name(),
+                cl,
+                enc.levels(cl),
+                r.nj_per_search,
+                r.accuracy.accuracy_pct()
+            );
+        }
+    }
+    // MTMC + HAT controller
+    for cl in [8, 16] {
+        let r = run_mcam_eval(
+            &store,
+            "omniglot",
+            "hat_avss",
+            Encoding::Mtmc,
+            cl,
+            SearchMode::Avss,
+            VariationModel::nand_default(),
+            settings,
+        )?;
+        println!(
+            "mtmc+hat {:>3} {:>7} {:>10.2} {:>9.2}",
+            cl,
+            Encoding::Mtmc.levels(cl),
+            r.nj_per_search,
+            r.accuracy.accuracy_pct()
+        );
+    }
+    let sw = run_software_baseline(&store, "omniglot", "std", settings)?;
+    println!("\nsoftware float L1 prototypical baseline: {:.2}%", sw.accuracy_pct());
+    Ok(())
+}

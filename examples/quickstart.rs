@@ -1,0 +1,70 @@
+//! Quickstart: the public API in ~40 lines of user code, no artifacts
+//! needed.
+//!
+//! Build an MCAM search engine, program a small support set, and run a
+//! few queries under AVSS with the paper's MTMC encoding:
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use mcamvss::encoding::Encoding;
+use mcamvss::search::engine::{EngineConfig, SearchEngine};
+use mcamvss::search::SearchMode;
+use mcamvss::testutil::Rng;
+
+fn main() {
+    // 1. Make a toy support set: 10 classes x 5 shots of 48-d embeddings.
+    let mut rng = Rng::new(42);
+    let dims = 48;
+    let mut support: Vec<Vec<f32>> = Vec::new();
+    let mut labels: Vec<u32> = Vec::new();
+    let mut prototypes: Vec<Vec<f64>> = Vec::new();
+    for class in 0..10u32 {
+        let proto: Vec<f64> = (0..dims).map(|_| rng.range_f64(0.2, 2.8)).collect();
+        for _ in 0..5 {
+            support.push(
+                proto.iter().map(|&p| (p + 0.05 * rng.gaussian()).max(0.0) as f32).collect(),
+            );
+            labels.push(class);
+        }
+        prototypes.push(proto);
+    }
+
+    // 2. Configure the engine: MTMC code word length 8, asymmetric search
+    //    (AVSS), NAND device noise on, clip point 3.0.
+    let cfg = EngineConfig::new(Encoding::Mtmc, 8, SearchMode::Avss, 3.0);
+    let mut engine = SearchEngine::new(cfg, dims, support.len());
+
+    // 3. Program the support set into the (simulated) MCAM block.
+    let refs: Vec<&[f32]> = support.iter().map(|v| v.as_slice()).collect();
+    engine.program_support(&refs, &labels);
+    println!(
+        "programmed {} support vectors into {} NAND strings",
+        engine.n_vectors(),
+        engine.n_vectors() * engine.layout().strings_per_vector()
+    );
+
+    // 4. Search: noisy queries near each prototype.
+    let mut correct = 0;
+    for (class, proto) in prototypes.iter().enumerate() {
+        let query: Vec<f32> =
+            proto.iter().map(|&p| (p + 0.05 * rng.gaussian()).max(0.0) as f32).collect();
+        let result = engine.search(&query);
+        println!(
+            "query class {class} -> predicted {} ({} MCAM iterations, winner score {:.0})",
+            result.label,
+            result.iterations,
+            result.scores[result.winner]
+        );
+        if result.label == class as u32 {
+            correct += 1;
+        }
+    }
+    println!("\naccuracy {correct}/10");
+    println!(
+        "energy {:.2} nJ/search, simulated device latency {:.0} us total",
+        engine.energy().nj_per_search(),
+        engine.timing().latency_us()
+    );
+}

@@ -1,0 +1,255 @@
+"""AOT export: train controllers, lower jitted L2 functions to HLO text,
+dump embeddings + cross-layer test vectors into ``artifacts/``.
+
+Interchange is **HLO text**, not ``lowered.compile().serialize()`` — the
+image's xla_extension 0.5.1 rejects jax≥0.5 serialized protos with 64-bit
+instruction ids; the text parser reassigns ids and round-trips cleanly
+(see /opt/xla-example/README.md).
+
+Outputs (all under ``--out-dir``, default ``artifacts/``):
+
+    hlo/controller_{ds}_{variant}_b{B}.hlo.txt   controller forward, fixed batch
+    hlo/mcam_search_{N}.hlo.txt                  L1 Pallas kernel at N strings
+    data/emb_{ds}_{variant}_{split}.mvt          embeddings (f32 [n, d])
+    data/labels_{ds}_{split}.mvt                 global class ids (i32 [n])
+    data/images_{ds}_test.mvt                    raw test images (f32 [n,H,W])
+    testvec/*.mvt                                shared rust/python vectors
+    weights/*.npz                                cached trained parameters
+    manifest.txt                                 key = value metadata
+
+``make artifacts`` invokes this module; it is incremental — every output
+is skipped if it already exists (delete ``artifacts/`` to force a rebuild).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import datasets, encodings
+from .binio import write_tensor
+from .hat import CUB_TRAIN, OMNIGLOT_TRAIN, VARIANTS, embed_all, train_all
+from .kernels.mcam_search import (
+    CELLS_PER_STRING,
+    DEFAULT_PARAMS,
+    mcam_search_block,
+)
+from .kernels.ref import ref_search_np
+from .model import apply_controller
+from .quant import CLIP_SIGMA
+
+CONTROLLER_BATCHES = (1, 8)
+KERNEL_STRINGS = 4096
+TESTVEC_STRINGS = 256
+DATASETS = ("omniglot", "cub")
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo → XlaComputation → HLO text (the 0.5.1-safe interchange).
+
+    NOTE: the default ``as_hlo_text()`` ELIDES large constants
+    (``constant({...})``) — the trained controller weights — and the HLO
+    text parser fills them with zeros. ``print_large_constants`` keeps the
+    weights verbatim.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # jax 0.8 emits metadata attributes (source_end_line, ...) that the
+    # 0.5.1 HLO text parser rejects — strip metadata entirely.
+    opts.print_metadata = False
+    return comp.get_hlo_module().to_string(opts)
+
+
+def _write_text(path: str, text: str) -> None:
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        f.write(text)
+
+
+def _fresh(path: str) -> bool:
+    return not os.path.exists(path)
+
+
+# ---------------------------------------------------------------------------
+# exports
+# ---------------------------------------------------------------------------
+
+
+def export_controller_hlo(out_dir, ds_name, variant, params, cfg, log):
+    for batch in CONTROLLER_BATCHES:
+        path = os.path.join(
+            out_dir, "hlo", f"controller_{ds_name}_{variant}_b{batch}.hlo.txt"
+        )
+        if not _fresh(path):
+            continue
+        spec = jax.ShapeDtypeStruct(
+            (batch, cfg.image_hw, cfg.image_hw, 1), jnp.float32
+        )
+        frozen = {k: jnp.asarray(v) for k, v in params.items()}
+
+        def fwd(images):
+            return (apply_controller(frozen, images, cfg),)
+
+        lowered = jax.jit(fwd).lower(spec)
+        _write_text(path, to_hlo_text(lowered))
+        log(f"  wrote {path}")
+
+
+def export_kernel_hlo(out_dir, log):
+    path = os.path.join(out_dir, "hlo", f"mcam_search_{KERNEL_STRINGS}.hlo.txt")
+    if not _fresh(path):
+        return
+    qspec = jax.ShapeDtypeStruct((CELLS_PER_STRING,), jnp.int32)
+    sspec = jax.ShapeDtypeStruct((KERNEL_STRINGS, CELLS_PER_STRING), jnp.int32)
+
+    def fn(q, s):
+        return mcam_search_block(q, s)
+
+    lowered = jax.jit(fn).lower(qspec, sspec)
+    _write_text(path, to_hlo_text(lowered))
+    log(f"  wrote {path}")
+
+
+def export_embeddings(out_dir, ds_name, ds, variants_params, cfg, log):
+    """Embeddings for every (variant, split) + labels/images once per ds."""
+    data_dir = os.path.join(out_dir, "data")
+    os.makedirs(data_dir, exist_ok=True)
+    manifest_lines = []
+
+    for split in ("train", "test"):
+        classes = ds.split_classes(split)
+        mask = np.isin(ds.labels, classes)
+        labels_path = os.path.join(data_dir, f"labels_{ds_name}_{split}.mvt")
+        if _fresh(labels_path):
+            write_tensor(labels_path, ds.labels[mask].astype(np.int32))
+            log(f"  wrote {labels_path}")
+        for variant, params in variants_params.items():
+            path = os.path.join(data_dir, f"emb_{ds_name}_{variant}_{split}.mvt")
+            clip_key = f"clip_{ds_name}_{variant}"
+            if _fresh(path):
+                emb = embed_all(params, ds.images[mask], cfg)
+                write_tensor(path, emb.astype(np.float32))
+                log(f"  wrote {path}")
+            if split == "train":
+                emb = None
+                # clip calibration always from train-split embeddings
+                emb = embed_all(params, ds.images[mask], cfg)
+                clip = float(emb.mean() + CLIP_SIGMA * emb.std())
+                manifest_lines.append(f"{clip_key} = {clip:.6f}")
+
+    img_path = os.path.join(data_dir, f"images_{ds_name}_test.mvt")
+    if _fresh(img_path):
+        test_mask = np.isin(ds.labels, ds.split_classes("test"))
+        write_tensor(img_path, ds.images[test_mask][..., 0].astype(np.float32))
+        log(f"  wrote {img_path}")
+    return manifest_lines
+
+
+def export_testvecs(out_dir, log):
+    """Deterministic cross-layer vectors: encodings + string currents."""
+    tv = os.path.join(out_dir, "testvec")
+    os.makedirs(tv, exist_ok=True)
+    rng = np.random.default_rng(1234)
+
+    # --- encoding vectors: values + expected code words per scheme/CL ---
+    for enc, cl in [("sre", 5), ("b4e", 3), ("b4we", 3), ("mtmc", 5), ("mtmc", 8)]:
+        levels = encodings.levels_for(enc, cl)
+        values = rng.integers(0, levels, size=128).astype(np.int64)
+        words = encodings.encode(values, enc, cl)
+        base = os.path.join(tv, f"enc_{enc}_cl{cl}")
+        if _fresh(base + "_values.mvt"):
+            write_tensor(base + "_values.mvt", values.astype(np.int32))
+            write_tensor(base + "_words.mvt", words.astype(np.int32))
+            log(f"  wrote {base}_*.mvt")
+
+    # --- MCAM string-current vectors (no-noise device) ---
+    base = os.path.join(tv, "mcam")
+    if _fresh(base + "_query.mvt"):
+        query = rng.integers(0, 4, size=CELLS_PER_STRING).astype(np.int32)
+        support = rng.integers(
+            0, 4, size=(TESTVEC_STRINGS, CELLS_PER_STRING)
+        ).astype(np.int32)
+        current, total, mx = ref_search_np(query, support, DEFAULT_PARAMS)
+        write_tensor(base + "_query.mvt", query)
+        write_tensor(base + "_support.mvt", support)
+        write_tensor(base + "_current.mvt", current.astype(np.float32))
+        write_tensor(base + "_total.mvt", total.astype(np.int32))
+        write_tensor(base + "_max.mvt", mx.astype(np.int32))
+        log(f"  wrote {base}_*.mvt")
+
+
+# ---------------------------------------------------------------------------
+# main
+# ---------------------------------------------------------------------------
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=None, help="artifacts directory")
+    ap.add_argument(
+        "--datasets", default="omniglot,cub", help="comma-separated subset"
+    )
+    ap.add_argument("--skip-train", action="store_true", help="testvecs/kernel only")
+    args = ap.parse_args(argv)
+
+    repo = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    out_dir = args.out_dir or os.path.join(repo, "artifacts")
+    os.makedirs(out_dir, exist_ok=True)
+    log = print
+
+    log(f"[aot] artifacts → {out_dir}")
+    export_testvecs(out_dir, log)
+    export_kernel_hlo(out_dir, log)
+
+    manifest = [
+        f"cells_per_string = {CELLS_PER_STRING}",
+        f"kernel_strings = {KERNEL_STRINGS}",
+        f"r0 = {DEFAULT_PARAMS.r0}",
+        f"alpha = {DEFAULT_PARAMS.alpha}",
+        f"v_bl = {DEFAULT_PARAMS.v_bl}",
+        f"clip_sigma = {CLIP_SIGMA}",
+    ]
+
+    if not args.skip_train:
+        for ds_name in args.datasets.split(","):
+            settings = OMNIGLOT_TRAIN if ds_name == "omniglot" else CUB_TRAIN
+            cfg = settings.controller
+            log(f"[aot] dataset {ds_name} ({cfg.name}, d={cfg.embed_dim})")
+            ds = (
+                datasets.synth_omniglot(cache_dir=os.path.join(out_dir, "data"))
+                if ds_name == "omniglot"
+                else datasets.synth_cub(cache_dir=os.path.join(out_dir, "data"))
+            )
+            variants = train_all(
+                ds_name,
+                weights_dir=os.path.join(out_dir, "weights"),
+                data_dir=os.path.join(out_dir, "data"),
+                log=log,
+            )
+            manifest += export_embeddings(out_dir, ds_name, ds, variants, cfg, log)
+            for variant in VARIANTS:
+                export_controller_hlo(
+                    out_dir, ds_name, variant, variants[variant], cfg, log
+                )
+            manifest.append(f"embed_dim_{ds_name} = {cfg.embed_dim}")
+            manifest.append(f"image_hw_{ds_name} = {cfg.image_hw}")
+
+    manifest_path = os.path.join(out_dir, "manifest.txt")
+    with open(manifest_path, "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    log(f"[aot] wrote {manifest_path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,52 @@
+"""Minimal binary tensor interchange format ("MVT1") shared with rust.
+
+No serde / protobuf is available in the offline rust image, so artifacts
+that cross the python→rust boundary (embeddings, labels, test vectors) use
+this trivial format, mirrored by ``rust/src/util/binio.rs``:
+
+    magic   : 4 bytes  b"MVT1"
+    dtype   : u32 LE   (0 = f32, 1 = i32)
+    ndim    : u32 LE
+    dims    : ndim × u32 LE
+    data    : product(dims) elements, LE, row-major
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+__all__ = ["write_tensor", "read_tensor"]
+
+MAGIC = b"MVT1"
+_DTYPES = {0: np.float32, 1: np.int32}
+_CODES = {np.dtype(np.float32): 0, np.dtype(np.int32): 1}
+
+
+def write_tensor(path: str, array: np.ndarray) -> None:
+    array = np.ascontiguousarray(array)
+    if array.dtype not in _CODES:
+        if np.issubdtype(array.dtype, np.floating):
+            array = array.astype(np.float32)
+        elif np.issubdtype(array.dtype, np.integer):
+            array = array.astype(np.int32)
+        else:
+            raise TypeError(f"unsupported dtype {array.dtype}")
+    code = _CODES[array.dtype]
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<II", code, array.ndim))
+        f.write(struct.pack(f"<{array.ndim}I", *array.shape))
+        f.write(array.astype(array.dtype.newbyteorder("<")).tobytes())
+
+
+def read_tensor(path: str) -> np.ndarray:
+    with open(path, "rb") as f:
+        if f.read(4) != MAGIC:
+            raise ValueError(f"{path}: bad magic")
+        code, ndim = struct.unpack("<II", f.read(8))
+        dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim))
+        dtype = np.dtype(_DTYPES[code]).newbyteorder("<")
+        data = np.frombuffer(f.read(), dtype=dtype)
+    return data.reshape(dims).astype(_DTYPES[code])

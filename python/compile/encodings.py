@@ -1,0 +1,226 @@
+"""Code-word encodings for the (simulated) NAND-flash MCAM.
+
+Every encoder maps an integer-quantized vector (values in ``[0, levels)``)
+to a matrix of 4-ary code words (values in ``{0,1,2,3}``), one code word per
+MLC unit cell of a NAND string.  The four schemes evaluated by the paper:
+
+* **SRE**  — simple repetition encoding [11]: 4-level value repeated ``cl``
+  times (robustness through redundancy, no extra precision).
+* **B4E**  — base-4 encoding [18]: bit slicing; digit *i* carries weight
+  ``4**i`` in the similarity accumulation (Eq. 2 of the paper).
+* **B4WE** — base-4 *weighted* encoding [19]: B4E digits with digit *i*
+  physically duplicated ``4**i`` times, so plain unweighted vote
+  accumulation realises the base-4 weighting.
+* **MTMC** — the paper's multi-bit thermometer code: value ``m`` with code
+  word length ``cl`` becomes ``cl - n`` words of ``x`` followed by ``n``
+  words of ``x + 1`` where ``x = m // cl`` and ``n = m % cl``.  Consecutive
+  values differ by one level in exactly one word, so
+  ``sum_i |enc(a)_i - enc(b)_i| == |a - b|`` (L1 preserved) and
+  ``max_i |enc(a)_i - enc(b)_i| <= ceil(|a - b| / cl)`` (no bottleneck
+  mismatch-3 for nearby values).
+
+All functions are plain numpy and operate on arrays of arbitrary leading
+shape; the code-word axis is appended last.  The rust crate re-implements
+these rules (``rust/src/encoding``); ``aot.py`` exports shared test vectors
+so both sides are proven identical.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = [
+    "Encoding",
+    "sre_levels",
+    "b4e_levels",
+    "b4we_levels",
+    "b4we_word_length",
+    "mtmc_levels",
+    "encode_sre",
+    "encode_b4e",
+    "encode_b4we",
+    "encode_mtmc",
+    "encode",
+    "levels_for",
+    "word_length_for",
+    "accumulation_weights",
+    "decode_mtmc",
+    "decode_b4e",
+]
+
+ENCODINGS = ("sre", "b4e", "b4we", "mtmc")
+
+
+class Encoding:
+    """String-literal namespace for the four encoding names."""
+
+    SRE = "sre"
+    B4E = "b4e"
+    B4WE = "b4we"
+    MTMC = "mtmc"
+
+
+# ---------------------------------------------------------------------------
+# quantization-level arithmetic
+# ---------------------------------------------------------------------------
+
+
+def sre_levels(cl: int) -> int:
+    """SRE always stores a 4-level value, regardless of repetition count."""
+    if cl < 1:
+        raise ValueError(f"code word length must be >= 1, got {cl}")
+    return 4
+
+
+def b4e_levels(cl: int) -> int:
+    """B4E with ``cl`` digits represents ``4**cl`` levels."""
+    if cl < 1:
+        raise ValueError(f"code word length must be >= 1, got {cl}")
+    return 4**cl
+
+
+def b4we_word_length(base_cl: int) -> int:
+    """Physical word length of B4WE for ``base_cl`` base-4 digits.
+
+    Digit *i* (0-indexed, LSB first) is duplicated ``4**i`` times:
+    ``sum_{i<cl} 4**i = (4**cl - 1) / 3`` — 1, 5, 21, ... matching the
+    Fig. 9 data points of the paper.
+    """
+    if base_cl < 1:
+        raise ValueError(f"base code word length must be >= 1, got {base_cl}")
+    return (4**base_cl - 1) // 3
+
+
+def b4we_levels(base_cl: int) -> int:
+    return b4e_levels(base_cl)
+
+
+def mtmc_levels(cl: int) -> int:
+    """MTMC with ``cl`` words represents values ``0 .. 3*cl`` inclusive."""
+    if cl < 1:
+        raise ValueError(f"code word length must be >= 1, got {cl}")
+    return 3 * cl + 1
+
+
+def levels_for(encoding: str, cl: int) -> int:
+    """Quantization levels afforded by ``encoding`` at code word length ``cl``.
+
+    For B4WE, ``cl`` is the *base* digit count (physical length is
+    ``b4we_word_length(cl)``).
+    """
+    if encoding == Encoding.SRE:
+        return sre_levels(cl)
+    if encoding == Encoding.B4E:
+        return b4e_levels(cl)
+    if encoding == Encoding.B4WE:
+        return b4we_levels(cl)
+    if encoding == Encoding.MTMC:
+        return mtmc_levels(cl)
+    raise ValueError(f"unknown encoding {encoding!r}")
+
+
+def word_length_for(encoding: str, cl: int) -> int:
+    """Physical code-word count stored per dimension."""
+    if encoding == Encoding.B4WE:
+        return b4we_word_length(cl)
+    if encoding in (Encoding.SRE, Encoding.B4E, Encoding.MTMC):
+        return cl
+    raise ValueError(f"unknown encoding {encoding!r}")
+
+
+# ---------------------------------------------------------------------------
+# encoders
+# ---------------------------------------------------------------------------
+
+
+def _check_range(values: np.ndarray, levels: int, name: str) -> np.ndarray:
+    values = np.asarray(values)
+    if not np.issubdtype(values.dtype, np.integer):
+        raise TypeError(f"{name} expects integer inputs, got {values.dtype}")
+    if values.size and (values.min() < 0 or values.max() >= levels):
+        raise ValueError(
+            f"{name}: values must lie in [0, {levels}), "
+            f"got range [{values.min()}, {values.max()}]"
+        )
+    return values
+
+
+def encode_sre(values: np.ndarray, cl: int) -> np.ndarray:
+    """Repeat the 4-level value ``cl`` times along a new last axis."""
+    values = _check_range(values, sre_levels(cl), "encode_sre")
+    return np.repeat(values[..., None], cl, axis=-1).astype(np.int8)
+
+
+def encode_b4e(values: np.ndarray, cl: int) -> np.ndarray:
+    """Base-4 digits, least-significant digit first."""
+    values = _check_range(values, b4e_levels(cl), "encode_b4e")
+    shifts = 4 ** np.arange(cl, dtype=np.int64)
+    digits = (values[..., None] // shifts) % 4
+    return digits.astype(np.int8)
+
+
+def encode_b4we(values: np.ndarray, base_cl: int) -> np.ndarray:
+    """B4E digits with digit ``i`` duplicated ``4**i`` times (LSB first)."""
+    digits = encode_b4e(values, base_cl)
+    reps = 4 ** np.arange(base_cl, dtype=np.int64)
+    return np.repeat(digits, reps, axis=-1)
+
+
+def encode_mtmc(values: np.ndarray, cl: int) -> np.ndarray:
+    """Multi-bit thermometer code (paper §3.1, Table 1).
+
+    ``m -> [x]*(cl-n) + [x+1]*n`` with ``x = m // cl``, ``n = m % cl``.
+    """
+    values = _check_range(values, mtmc_levels(cl), "encode_mtmc")
+    x = values[..., None] // cl
+    n = values[..., None] % cl
+    # Word j (0-indexed) equals x + 1 iff j >= cl - n.
+    j = np.arange(cl, dtype=np.int64)
+    words = x + (j >= (cl - n)).astype(np.int64)
+    return words.astype(np.int8)
+
+
+def encode(values: np.ndarray, encoding: str, cl: int) -> np.ndarray:
+    """Dispatch to the requested encoder."""
+    if encoding == Encoding.SRE:
+        return encode_sre(values, cl)
+    if encoding == Encoding.B4E:
+        return encode_b4e(values, cl)
+    if encoding == Encoding.B4WE:
+        return encode_b4we(values, cl)
+    if encoding == Encoding.MTMC:
+        return encode_mtmc(values, cl)
+    raise ValueError(f"unknown encoding {encoding!r}")
+
+
+# ---------------------------------------------------------------------------
+# decoders (used by tests and the Fig. 6 distance analysis)
+# ---------------------------------------------------------------------------
+
+
+def decode_mtmc(words: np.ndarray) -> np.ndarray:
+    """Inverse of :func:`encode_mtmc`: the word sum equals the value."""
+    return np.asarray(words, dtype=np.int64).sum(axis=-1)
+
+
+def decode_b4e(words: np.ndarray) -> np.ndarray:
+    words = np.asarray(words, dtype=np.int64)
+    cl = words.shape[-1]
+    shifts = 4 ** np.arange(cl, dtype=np.int64)
+    return (words * shifts).sum(axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# similarity accumulation weights (paper Eq. 2)
+# ---------------------------------------------------------------------------
+
+
+def accumulation_weights(encoding: str, cl: int) -> np.ndarray:
+    """Per-code-word weights ``s_i`` for accumulating matching results.
+
+    B4E weights digit *i* by ``4**i``; the other three schemes use uniform
+    weights (B4WE realises the base-4 weighting through duplication).
+    """
+    if encoding == Encoding.B4E:
+        return (4.0 ** np.arange(cl)).astype(np.float64)
+    return np.ones(word_length_for(encoding, cl), dtype=np.float64)

@@ -1,0 +1,314 @@
+"""Two-stage controller training: pre-training + meta-training (paper §3.3).
+
+Stage 1 — **pre-train**: the controller plus a linear classifier minimise
+standard cross-entropy over all training classes (the widely adopted
+transferable-feature stage [24-27]).
+
+Stage 2 — **meta-train**, three variants sharing the stage-1 weights:
+
+* ``std``      — standard episodic meta-baseline [24]: cosine-similarity
+                 prototypical logits, no hardware modeling.  Used for the
+                 SRE / B4E / B4WE / MTMC rows of Fig. 9 and the
+                 "before QAT" bars of Fig. 7.
+* ``hat_avss`` — the paper's HAT: asymmetric fake-quant (query 4 levels,
+                 support 3·CL+1), MTMC encoding with STE, simulated MCAM
+                 with device noise, SA sigmoid-backward voting.
+* ``hat_svss`` — HAT with symmetric quantization (both sides CL words),
+                 for the SVSS column of Table 2 / Fig. 7.
+
+Everything is sized for the CPU-only build budget (DESIGN.md §2): episode
+shapes are smaller than the paper's training episodes but test episodes
+keep the paper's 200-way 10-shot / 50-way 5-shot settings.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import datasets
+from .datasets import FewShotDataset, sample_episode
+from .mcam_sim import SimConfig, episode_logits
+from .model import (
+    CUB_CONTROLLER,
+    OMNIGLOT_CONTROLLER,
+    ControllerConfig,
+    adam_init,
+    adam_update,
+    apply_classifier,
+    apply_controller,
+    init_classifier_head,
+    init_controller,
+    l2_normalize,
+)
+
+__all__ = [
+    "TrainSettings",
+    "OMNIGLOT_TRAIN",
+    "CUB_TRAIN",
+    "pretrain",
+    "meta_train",
+    "train_all",
+    "embed_all",
+    "save_params",
+    "load_params",
+]
+
+VARIANTS = ("std", "hat_svss", "hat_avss")
+
+
+class TrainSettings:
+    """Budgeted hyper-parameters for one dataset."""
+
+    def __init__(
+        self,
+        controller: ControllerConfig,
+        pretrain_steps: int,
+        pretrain_bs: int,
+        meta_episodes: int,
+        n_way: int,
+        k_shot: int,
+        n_query: int,
+        hat_cl: int,
+        lr: float = 1e-3,
+        meta_lr: float = 2e-4,
+    ):
+        self.controller = controller
+        self.pretrain_steps = pretrain_steps
+        self.pretrain_bs = pretrain_bs
+        self.meta_episodes = meta_episodes
+        self.n_way = n_way
+        self.k_shot = k_shot
+        self.n_query = n_query
+        self.hat_cl = hat_cl
+        self.lr = lr
+        self.meta_lr = meta_lr
+
+
+OMNIGLOT_TRAIN = TrainSettings(
+    OMNIGLOT_CONTROLLER,
+    pretrain_steps=600,
+    pretrain_bs=64,
+    meta_episodes=120,
+    n_way=20,
+    k_shot=5,
+    n_query=5,
+    hat_cl=8,
+)
+CUB_TRAIN = TrainSettings(
+    CUB_CONTROLLER,
+    pretrain_steps=400,
+    pretrain_bs=64,
+    meta_episodes=80,
+    n_way=10,
+    k_shot=5,
+    n_query=4,
+    hat_cl=8,
+)
+
+
+# ---------------------------------------------------------------------------
+# stage 1: pre-training
+# ---------------------------------------------------------------------------
+
+
+def pretrain(ds: FewShotDataset, settings: TrainSettings, seed: int = 0, log=print):
+    cfg = settings.controller
+    rng = np.random.default_rng(seed)
+    key = jax.random.PRNGKey(seed)
+    k_ctrl, k_head = jax.random.split(key)
+    train_classes = ds.split_classes("train")
+    n_train = len(train_classes)
+    params = init_controller(cfg, k_ctrl)
+    head = init_classifier_head(cfg, n_train, k_head)
+    state = adam_init({"ctrl": params, "head": head})
+
+    mask = np.isin(ds.labels, train_classes)
+    images = ds.images[mask]
+    labels = ds.labels[mask].astype(np.int32)  # train labels are 0..n_train-1
+
+    @jax.jit
+    def step(bundle, opt_state, x, y):
+        def loss_fn(b):
+            emb = apply_controller(b["ctrl"], x, cfg)
+            logits = apply_classifier(b["head"], emb)
+            logp = jax.nn.log_softmax(logits)
+            return -logp[jnp.arange(y.shape[0]), y].mean()
+
+        loss, grads = jax.value_and_grad(loss_fn)(bundle)
+        bundle, opt_state = adam_update(bundle, grads, opt_state, lr=settings.lr)
+        return bundle, opt_state, loss
+
+    bundle = {"ctrl": params, "head": head}
+    t0 = time.time()
+    for i in range(settings.pretrain_steps):
+        idx = rng.integers(0, len(images), size=settings.pretrain_bs)
+        bundle, state, loss = step(
+            bundle, state, jnp.asarray(images[idx]), jnp.asarray(labels[idx])
+        )
+        if i % 100 == 0 or i == settings.pretrain_steps - 1:
+            log(
+                f"  [pretrain {cfg.name}] step {i:4d} loss {float(loss):.4f} "
+                f"({time.time() - t0:.0f}s)"
+            )
+    return bundle["ctrl"]
+
+
+# ---------------------------------------------------------------------------
+# stage 2: meta-training
+# ---------------------------------------------------------------------------
+
+
+def _make_meta_step(settings: TrainSettings, variant: str):
+    cfg = settings.controller
+    n_way = settings.n_way
+    if variant == "std":
+
+        @jax.jit
+        def step(params, opt_state, sx, sy_onehot, qx, qy, key):
+            del key
+
+            def loss_fn(p):
+                s_emb = l2_normalize(apply_controller(p, sx, cfg))
+                q_emb = l2_normalize(apply_controller(p, qx, cfg))
+                # class prototypes = mean of shots
+                proto = (sy_onehot.T @ s_emb) / sy_onehot.sum(axis=0)[:, None]
+                logits = 10.0 * q_emb @ l2_normalize(proto).T
+                logp = jax.nn.log_softmax(logits)
+                return -logp[jnp.arange(qy.shape[0]), qy].mean()
+
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+            params, opt_state = adam_update(
+                params, grads, opt_state, lr=settings.meta_lr
+            )
+            return params, opt_state, loss
+
+        return step
+
+    sim_cfg = SimConfig(cl=settings.hat_cl, asymmetric=(variant == "hat_avss"))
+
+    @jax.jit
+    def step(params, opt_state, sx, sy_onehot, qx, qy, key):
+        def loss_fn(p):
+            s_emb = apply_controller(p, sx, cfg)
+            q_emb = apply_controller(p, qx, cfg)
+            logits = episode_logits(q_emb, s_emb, sy_onehot, sim_cfg, key)
+            # Vote totals reach the hundreds; standardize per query so the
+            # softmax stays in its responsive range (otherwise CE
+            # saturates to exactly 0 and the STE gradients vanish).
+            mu = logits.mean(axis=1, keepdims=True)
+            sd = logits.std(axis=1, keepdims=True) + 1e-6
+            logits = 3.0 * (logits - mu) / sd
+            logp = jax.nn.log_softmax(logits)
+            return -logp[jnp.arange(qy.shape[0]), qy].mean()
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt_state = adam_update(params, grads, opt_state, lr=settings.meta_lr)
+        return params, opt_state, loss
+
+    return step
+
+
+def meta_train(
+    params,
+    ds: FewShotDataset,
+    settings: TrainSettings,
+    variant: str,
+    seed: int = 1,
+    log=print,
+):
+    if variant not in VARIANTS:
+        raise ValueError(f"unknown meta-training variant {variant!r}")
+    rng = np.random.default_rng(seed)
+    key = jax.random.PRNGKey(seed)
+    state = adam_init(params)
+    step = _make_meta_step(settings, variant)
+    n_way = settings.n_way
+    t0 = time.time()
+    for ep in range(settings.meta_episodes):
+        sx, sy, qx, qy = sample_episode(
+            ds, rng, "train", n_way, settings.k_shot, settings.n_query
+        )
+        onehot = np.eye(n_way, dtype=np.float32)[sy]
+        key, sub = jax.random.split(key)
+        params, state, loss = step(
+            params,
+            state,
+            jnp.asarray(sx),
+            jnp.asarray(onehot),
+            jnp.asarray(qx),
+            jnp.asarray(qy),
+            sub,
+        )
+        if ep % 40 == 0 or ep == settings.meta_episodes - 1:
+            log(
+                f"  [meta {variant}] episode {ep:4d} loss {float(loss):.4f} "
+                f"({time.time() - t0:.0f}s)"
+            )
+    return params
+
+
+# ---------------------------------------------------------------------------
+# orchestration + persistence
+# ---------------------------------------------------------------------------
+
+
+def save_params(params, path: str) -> None:
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    np.savez(path, **{k: np.asarray(v) for k, v in params.items()})
+
+
+def load_params(path: str):
+    with np.load(path) as z:
+        return {k: jnp.asarray(z[k]) for k in z.files}
+
+
+def train_all(
+    ds_name: str, weights_dir: str, data_dir: str, seed: int = 0, log=print
+) -> Dict[str, dict]:
+    """Train (or load cached) std / hat_svss / hat_avss controllers."""
+    if ds_name == "omniglot":
+        ds = datasets.synth_omniglot(cache_dir=data_dir)
+        settings = OMNIGLOT_TRAIN
+    elif ds_name == "cub":
+        ds = datasets.synth_cub(cache_dir=data_dir)
+        settings = CUB_TRAIN
+    else:
+        raise ValueError(f"unknown dataset {ds_name!r}")
+
+    out: Dict[str, dict] = {}
+    pre_path = os.path.join(weights_dir, f"{ds_name}_pretrained.npz")
+    if os.path.exists(pre_path):
+        pre = load_params(pre_path)
+        log(f"  [pretrain {ds_name}] loaded cache {pre_path}")
+    else:
+        pre = pretrain(ds, settings, seed=seed, log=log)
+        save_params(pre, pre_path)
+
+    for variant in VARIANTS:
+        path = os.path.join(weights_dir, f"{ds_name}_{variant}.npz")
+        if os.path.exists(path):
+            out[variant] = load_params(path)
+            log(f"  [meta {variant}] loaded cache {path}")
+            continue
+        trained = meta_train(
+            dict(pre), ds, settings, variant, seed=seed + 1, log=log
+        )
+        save_params(trained, path)
+        out[variant] = trained
+    return out
+
+
+def embed_all(params, images: np.ndarray, cfg: ControllerConfig, batch: int = 256):
+    """Embed a full image set in batches (build-time only)."""
+    chunks = []
+    for i in range(0, len(images), batch):
+        chunks.append(
+            np.asarray(apply_controller(params, jnp.asarray(images[i : i + batch]), cfg))
+        )
+    return np.concatenate(chunks, axis=0)

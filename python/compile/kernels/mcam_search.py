@@ -1,0 +1,139 @@
+"""L1 Pallas kernel: one MCAM search iteration over a block of NAND strings.
+
+Physical model (DESIGN.md §6): a NAND string is 24 serially connected MLC
+unit cells.  Cell at mismatch level ``m = |q - s|`` (``q`` = word-line
+search level, ``s`` = programmed level, both in {0,1,2,3}) contributes a
+resistance ``r0 * alpha**m``; the string current is
+
+    I = v_bl / sum_i r0 * alpha**(m_i)
+
+which reproduces both measured effects of [14]: the current falls with the
+*total* string mismatch, and a single high-mismatch cell dominates the sum
+(the bottleneck effect the paper's MTMC encoding attacks).
+
+The kernel evaluates one word-line application: ``query`` (24 search
+levels, shared across the block) against ``support`` (n_strings × 24
+programmed levels) → per-string ``(current, total_mismatch, max_mismatch)``.
+The L3 rust coordinator schedules iterations (SVSS: one word column per
+iteration; AVSS: all CL columns of a dim group at once — see
+rust/src/search/).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the string axis is tiled by
+``BlockSpec`` into VMEM-resident (TILE × 24) slabs — elementwise VPU work
+plus three lane reductions; ``interpret=True`` is mandatory on this CPU
+image (Mosaic custom-calls cannot execute on the CPU PJRT plugin).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["McamParams", "DEFAULT_PARAMS", "STRING_TILE", "mcam_search_block"]
+
+# Strings evaluated per Pallas grid step (VMEM slab: 256*24*4B ≈ 24 KiB for
+# the support tile — comfortably within a TPU core's ~16 MiB VMEM together
+# with double buffering).
+STRING_TILE = 256
+
+CELLS_PER_STRING = 24
+
+
+class McamParams(NamedTuple):
+    """Electrical constants of the string-current model."""
+
+    r0: float = 1.0  # match-state unit-cell resistance (normalised)
+    alpha: float = 6.0  # resistance growth per mismatch level
+    v_bl: float = 24.0  # bit-line drive; I(all-match) == 1.0 at defaults
+
+    @property
+    def i_max(self) -> float:
+        return self.v_bl / (CELLS_PER_STRING * self.r0)
+
+    @property
+    def i_min(self) -> float:
+        return self.v_bl / (CELLS_PER_STRING * self.r0 * self.alpha**3)
+
+
+DEFAULT_PARAMS = McamParams()
+
+
+def _search_kernel(query_ref, support_ref, current_ref, total_ref, max_ref, *, r0, alpha, v_bl):
+    """Pallas body for one (STRING_TILE × 24) slab."""
+    q = query_ref[...].astype(jnp.float32)  # (24,)
+    s = support_ref[...].astype(jnp.float32)  # (TILE, 24)
+    mismatch = jnp.abs(q[None, :] - s)  # (TILE, 24), values 0..3
+    resistance = r0 * jnp.exp(mismatch * jnp.log(alpha))
+    series = jnp.sum(resistance, axis=1)  # (TILE,)
+    current_ref[...] = v_bl / series
+    total_ref[...] = jnp.sum(mismatch, axis=1).astype(jnp.int32)
+    max_ref[...] = jnp.max(mismatch, axis=1).astype(jnp.int32)
+
+
+def mcam_search_block(
+    query: jnp.ndarray,
+    support: jnp.ndarray,
+    params: McamParams = DEFAULT_PARAMS,
+    tile: int = STRING_TILE,
+):
+    """Evaluate one search iteration.
+
+    Args:
+      query: (24,) int32 word-line search levels in {0..3}.
+      support: (n_strings, 24) int32 programmed levels; ``n_strings`` must
+        be a multiple of ``tile`` (the caller pads — see
+        :func:`mcam_search_padded`).
+
+    Returns:
+      ``(current f32[n], total_mismatch i32[n], max_mismatch i32[n])``.
+    """
+    n, cells = support.shape
+    if cells != CELLS_PER_STRING:
+        raise ValueError(f"support must have {CELLS_PER_STRING} cells, got {cells}")
+    if n % tile != 0:
+        raise ValueError(f"n_strings={n} not a multiple of tile={tile}")
+    grid = (n // tile,)
+    kernel = lambda q, s, c, t, m: _search_kernel(
+        q, s, c, t, m, r0=params.r0, alpha=params.alpha, v_bl=params.v_bl
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((CELLS_PER_STRING,), lambda i: (0,)),
+            pl.BlockSpec((tile, CELLS_PER_STRING), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+        ],
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(query, support)
+
+
+def mcam_search_padded(
+    query: jnp.ndarray,
+    support: jnp.ndarray,
+    params: McamParams = DEFAULT_PARAMS,
+    tile: int = STRING_TILE,
+):
+    """Pad the string axis to a tile multiple, run the kernel, strip padding.
+
+    Padding strings are all-zero; they are discarded before returning.
+    """
+    n = support.shape[0]
+    padded = -(-n // tile) * tile
+    if padded != n:
+        pad = jnp.zeros((padded - n, CELLS_PER_STRING), dtype=support.dtype)
+        support = jnp.concatenate([support, pad], axis=0)
+    current, total, mx = mcam_search_block(query, support, params, tile)
+    return current[:n], total[:n], mx[:n]

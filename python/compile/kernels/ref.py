@@ -1,0 +1,42 @@
+"""Pure-jnp / numpy correctness oracle for the MCAM search kernel.
+
+``ref_search`` implements the exact same string-current math as the Pallas
+kernel in ``mcam_search.py`` with no tiling, and is the ground truth for:
+
+* pytest kernel-vs-ref allclose checks (``python/tests/test_kernel.py``),
+* the cross-layer test vectors exported by ``aot.py`` that the rust device
+  simulator replays bit-for-bit (``rust/tests/test_crosslayer.rs``).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from .mcam_search import DEFAULT_PARAMS, McamParams
+
+__all__ = ["ref_search", "ref_search_np"]
+
+
+def ref_search(query, support, params: McamParams = DEFAULT_PARAMS):
+    """jnp reference: (current, total_mismatch, max_mismatch)."""
+    q = jnp.asarray(query, dtype=jnp.float32)
+    s = jnp.asarray(support, dtype=jnp.float32)
+    mismatch = jnp.abs(q[None, :] - s)
+    resistance = params.r0 * params.alpha**mismatch
+    current = params.v_bl / jnp.sum(resistance, axis=1)
+    total = jnp.sum(mismatch, axis=1).astype(jnp.int32)
+    mx = jnp.max(mismatch, axis=1).astype(jnp.int32)
+    return current, total, mx
+
+
+def ref_search_np(query, support, params: McamParams = DEFAULT_PARAMS):
+    """float64 numpy reference (used for test-vector export)."""
+    q = np.asarray(query, dtype=np.float64)
+    s = np.asarray(support, dtype=np.float64)
+    mismatch = np.abs(q[None, :] - s)
+    resistance = params.r0 * np.power(params.alpha, mismatch)
+    current = params.v_bl / resistance.sum(axis=1)
+    total = mismatch.sum(axis=1).astype(np.int64)
+    mx = mismatch.max(axis=1).astype(np.int64)
+    return current, total, mx

@@ -1,0 +1,202 @@
+"""Differentiable MCAM simulation for Hardware-Aware Training (paper §3.3).
+
+This is the L2 training-time model of the NAND-flash MCAM: the same
+string-current physics as the L1 Pallas kernel, wrapped with the three
+straight-through estimators Fig. 8 of the paper describes:
+
+* **fake-quant** (``quant.fake_quant_ste``): round-to-level forward,
+  identity-in-range backward (QAT [23]);
+* **MTMC encoding**: piece-wise-constant forward, the paper observes the
+  trend line has slope ``1/CL`` and back-propagates through that line
+  (Fig. 8(b)) — implemented in :func:`encode_mtmc_ste`;
+* **sense amplifier**: hard threshold forward, sigmoid derivative backward
+  (Fig. 8(c)) — implemented in :func:`sa_votes_ste`.
+
+Layout (shared with ``rust/src/mapping``): dimensions are padded to a
+multiple of 24 and split into *groups* of 24; a support vector with code
+word length CL occupies ``groups × CL`` NAND strings where string (g, c)
+stores code word *c* of the 24 dims of group *g* — word line *l* of that
+string corresponds to dim ``24 g + l``.  Under AVSS all CL column-strings
+of a group are sensed in one iteration; under SVSS one column per
+iteration.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.mcam_search import CELLS_PER_STRING, DEFAULT_PARAMS, McamParams
+from .quant import CLIP_SIGMA, fake_quant_ste
+
+__all__ = [
+    "SimConfig",
+    "encode_mtmc_ste",
+    "sa_thresholds",
+    "sa_votes_ste",
+    "mcam_similarity",
+    "episode_logits",
+]
+
+
+class SimConfig(NamedTuple):
+    """HAT simulation knobs (defaults follow DESIGN.md §6)."""
+
+    cl: int = 8  # support code word length
+    asymmetric: bool = True  # AVSS (query CL=1) vs SVSS
+    noise_sigma: float = 0.15  # lognormal device-variation sigma
+    n_thresholds: int = 16  # SA sensing-ladder depth
+    sa_beta: float = 40.0  # sigmoid sharpness of the SA backward pass
+    params: McamParams = DEFAULT_PARAMS
+
+    @property
+    def levels(self) -> int:
+        return 3 * self.cl + 1
+
+
+# ---------------------------------------------------------------------------
+# straight-through building blocks
+# ---------------------------------------------------------------------------
+
+
+def encode_mtmc_ste(values: jnp.ndarray, cl: int) -> jnp.ndarray:
+    """MTMC encode with the paper's slope-1/CL straight-through gradient.
+
+    ``values`` are (already fake-quantized) integer-valued floats in
+    ``[0, 3*cl]``.  Output appends a code-word axis of length ``cl``;
+    forward is the exact Table-1 rule, backward treats every word as the
+    line ``value / cl``.
+    """
+    v = jnp.round(values)
+    x = jnp.floor(v / cl)
+    n = v - x * cl  # mod(v, cl)
+    j = jnp.arange(cl, dtype=values.dtype)
+    hard = x[..., None] + (j >= (cl - n[..., None])).astype(values.dtype)
+    soft = values[..., None] / cl  # the slope-1/CL trend line
+    return soft + jax.lax.stop_gradient(hard - soft)
+
+
+def sa_thresholds(cfg: SimConfig) -> jnp.ndarray:
+    """Log-spaced sensing ladder spanning the feasible current range."""
+    p = cfg.params
+    lo = jnp.log(p.i_min)
+    hi = jnp.log(p.i_max)
+    # Strictly inside (i_min, i_max) so both extremes are distinguishable.
+    frac = (jnp.arange(cfg.n_thresholds) + 0.5) / cfg.n_thresholds
+    return jnp.exp(lo + (hi - lo) * frac)
+
+
+def sa_votes_ste(current: jnp.ndarray, cfg: SimConfig) -> jnp.ndarray:
+    """Multi-level sensing: votes = #thresholds exceeded.
+
+    Forward is the hard step ladder (what the SA + voting scheme computes);
+    backward uses the sigmoid derivative (Fig. 8(c)).  Comparison happens in
+    log-current so the sigmoid sharpness is scale-free.
+    """
+    thr = sa_thresholds(cfg)
+    z = cfg.sa_beta * (jnp.log(current[..., None]) - jnp.log(thr))
+    soft = jax.nn.sigmoid(z)
+    hard = (z > 0).astype(current.dtype)
+    return (soft + jax.lax.stop_gradient(hard - soft)).sum(axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# string currents + similarity
+# ---------------------------------------------------------------------------
+
+
+def _pad_dims(words: jnp.ndarray) -> jnp.ndarray:
+    """Pad the dim axis (-2) to a multiple of 24 with match-all zeros."""
+    d = words.shape[-2]
+    pad = (-d) % CELLS_PER_STRING
+    if pad == 0:
+        return words
+    widths = [(0, 0)] * words.ndim
+    widths[-2] = (0, pad)
+    return jnp.pad(words, widths)
+
+
+def mcam_similarity(
+    query_words: jnp.ndarray,
+    support_words: jnp.ndarray,
+    cfg: SimConfig,
+    noise_key: jax.Array | None = None,
+) -> jnp.ndarray:
+    """Similarity (accumulated SA votes) of every query/support pair.
+
+    Args:
+      query_words: (Q, d, CLq) — CLq == 1 under AVSS, CL under SVSS.
+      support_words: (S, d, CL).
+      noise_key: per-read lognormal resistance noise (None → ideal device).
+
+    Returns:
+      (Q, S) float similarity scores (higher = more similar).
+    """
+    cl = support_words.shape[-1]
+    q = _pad_dims(query_words)  # (Q, D, CLq)
+    s = _pad_dims(support_words)  # (S, D, CL)
+    d_padded = s.shape[-2]
+    groups = d_padded // CELLS_PER_STRING
+
+    if q.shape[-1] not in (1, cl):
+        raise ValueError("query CL must be 1 (AVSS) or equal support CL (SVSS)")
+    # (g, c) string layout: cell l of string (g, c) holds word c of dim
+    # 24 g + l.  Query words broadcast across support columns: AVSS has a
+    # single query word (axis length 1 broadcasts over all CL columns),
+    # SVSS matches column-for-column.
+    q_g = q.reshape(q.shape[0], groups, CELLS_PER_STRING, q.shape[-1])
+    s_g = s.reshape(s.shape[0], groups, CELLS_PER_STRING, cl)
+    mismatch = jnp.abs(q_g[:, None] - s_g[None])  # (Q, S, G, 24, CL)
+
+    p = cfg.params
+    resistance = p.r0 * jnp.exp(mismatch * jnp.log(p.alpha))
+    if noise_key is not None and cfg.noise_sigma > 0:
+        eps = jax.random.normal(noise_key, resistance.shape, dtype=resistance.dtype)
+        resistance = resistance * jnp.exp(cfg.noise_sigma * eps)
+    current = p.v_bl / resistance.sum(axis=-2)  # series over cells → (Q,S,G,CL)
+    votes = sa_votes_ste(current, cfg)
+    return votes.sum(axis=(-2, -1))  # accumulate over groups and columns
+
+
+# ---------------------------------------------------------------------------
+# full episode pipeline (what HAT back-propagates through)
+# ---------------------------------------------------------------------------
+
+
+def episode_logits(
+    query_emb: jnp.ndarray,
+    support_emb: jnp.ndarray,
+    support_onehot: jnp.ndarray,
+    cfg: SimConfig,
+    noise_key: jax.Array | None = None,
+) -> jnp.ndarray:
+    """Embeddings → quantize → encode → simulated MCAM → class logits.
+
+    ``support_onehot`` is (S, n_way).  The class logit is the max vote
+    total over the class's shots (winner-take-all voting, matching the SA
+    voting scheme in the rust engine).
+    """
+    all_emb = jnp.concatenate([query_emb, support_emb], axis=0)
+    clip = jax.lax.stop_gradient(
+        jnp.mean(all_emb) + CLIP_SIGMA * jnp.std(all_emb) + 1e-6
+    )
+    levels = cfg.levels
+    step = clip / (levels - 1)
+
+    s_quant = fake_quant_ste(support_emb, levels, clip) / step  # values 0..3CL
+    s_words = encode_mtmc_ste(s_quant, cfg.cl)
+
+    if cfg.asymmetric:
+        q_step = clip / 3.0
+        q_quant = fake_quant_ste(query_emb, 4, clip) / q_step  # values 0..3
+        q_words = q_quant[..., None]  # (Q, d, 1)
+    else:
+        q_quant = fake_quant_ste(query_emb, levels, clip) / step
+        q_words = encode_mtmc_ste(q_quant, cfg.cl)
+
+    sim = mcam_similarity(q_words, s_words, cfg, noise_key)  # (Q, S)
+    # Max over each class's shots; -inf for other classes' slots.
+    masked = sim[:, :, None] + jnp.where(support_onehot[None], 0.0, -jnp.inf)
+    return masked.max(axis=1)  # (Q, n_way)

@@ -1,0 +1,209 @@
+"""L2 controllers: pure-jax Conv4 feature extractors (MANN controllers).
+
+The paper uses Conv4 (48-d embeddings) for Omniglot and ResNet12 (480-d)
+for CUB.  We implement Conv4 and a wider Conv4 variant producing 480-d
+embeddings for SynthCUB (the ResNet12 substitution is documented in
+DESIGN.md §2).  Everything is hand-rolled jax — parameter pytrees + apply
+functions — so the jitted forward lowers to a single self-contained HLO
+module with the trained weights baked in as constants (what the rust
+runtime loads).
+
+Embeddings are post-ReLU (non-negative), matching the quantizer in
+``quant.py`` which maps ``[0, clip]`` onto integer states.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "ControllerConfig",
+    "OMNIGLOT_CONTROLLER",
+    "CUB_CONTROLLER",
+    "init_controller",
+    "apply_controller",
+    "init_classifier_head",
+    "apply_classifier",
+    "adam_init",
+    "adam_update",
+    "l2_normalize",
+]
+
+Params = Dict[str, Any]
+
+
+class ControllerConfig:
+    """Static architecture description for a Conv4-family controller."""
+
+    def __init__(
+        self,
+        name: str,
+        image_hw: int,
+        channels: int,
+        n_blocks: int,
+        embed_dim: int,
+    ):
+        self.name = name
+        self.image_hw = image_hw
+        self.channels = channels
+        self.n_blocks = n_blocks
+        self.embed_dim = embed_dim
+
+    @property
+    def flat_dim(self) -> int:
+        hw = self.image_hw
+        for _ in range(self.n_blocks):
+            hw = hw // 2
+        return max(hw, 1) * max(hw, 1) * self.channels
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return (
+            f"ControllerConfig({self.name}, hw={self.image_hw}, "
+            f"ch={self.channels}, blocks={self.n_blocks}, d={self.embed_dim})"
+        )
+
+
+# Conv4 with 48-d embeddings (paper's Omniglot controller).
+OMNIGLOT_CONTROLLER = ControllerConfig("conv4_omniglot", 28, 32, 4, 48)
+# Wider Conv4 with 480-d embeddings (ResNet12 stand-in, DESIGN.md §2).
+CUB_CONTROLLER = ControllerConfig("conv4w_cub", 32, 64, 4, 480)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _he_conv(key, kh, kw, cin, cout):
+    fan_in = kh * kw * cin
+    std = float(np.sqrt(2.0 / fan_in))
+    return jax.random.normal(key, (kh, kw, cin, cout), dtype=jnp.float32) * std
+
+
+def _he_dense(key, din, dout):
+    std = float(np.sqrt(2.0 / din))
+    return jax.random.normal(key, (din, dout), dtype=jnp.float32) * std
+
+
+def init_controller(cfg: ControllerConfig, key: jax.Array) -> Params:
+    """Initialise Conv4 parameters (He init, zero biases)."""
+    params: Params = {}
+    cin = 1
+    keys = jax.random.split(key, cfg.n_blocks + 1)
+    for b in range(cfg.n_blocks):
+        params[f"conv{b}_w"] = _he_conv(keys[b], 3, 3, cin, cfg.channels)
+        params[f"conv{b}_b"] = jnp.zeros((cfg.channels,), dtype=jnp.float32)
+        cin = cfg.channels
+    params["head_w"] = _he_dense(keys[-1], cfg.flat_dim, cfg.embed_dim)
+    params["head_b"] = jnp.zeros((cfg.embed_dim,), dtype=jnp.float32)
+    return params
+
+
+def init_classifier_head(cfg: ControllerConfig, n_classes: int, key) -> Params:
+    return {
+        "cls_w": _he_dense(key, cfg.embed_dim, n_classes),
+        "cls_b": jnp.zeros((n_classes,), dtype=jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# apply
+# ---------------------------------------------------------------------------
+
+
+def _conv2d_same(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    out = jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(1, 1),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return out + b
+
+
+def _maxpool2(x: jnp.ndarray) -> jnp.ndarray:
+    return jax.lax.reduce_window(
+        x,
+        -jnp.inf,
+        jax.lax.max,
+        window_dimensions=(1, 2, 2, 1),
+        window_strides=(1, 2, 2, 1),
+        padding="VALID",
+    )
+
+
+@partial(jax.jit, static_argnums=2)
+def _apply_controller_impl(
+    params: Params, images: jnp.ndarray, n_blocks: int
+) -> jnp.ndarray:
+    x = images
+    for b in range(n_blocks):
+        x = _conv2d_same(x, params[f"conv{b}_w"], params[f"conv{b}_b"])
+        x = jax.nn.relu(x)
+        x = _maxpool2(x)
+    x = x.reshape((x.shape[0], -1))
+    x = x @ params["head_w"] + params["head_b"]
+    # Non-negative embeddings: the MCAM quantizer covers [0, clip].
+    return jax.nn.relu(x)
+
+
+def apply_controller(
+    params: Params, images: jnp.ndarray, cfg: ControllerConfig
+) -> jnp.ndarray:
+    """images (B, H, W, 1) float32 → embeddings (B, embed_dim) >= 0."""
+    return _apply_controller_impl(params, images, cfg.n_blocks)
+
+
+def apply_classifier(head: Params, emb: jnp.ndarray) -> jnp.ndarray:
+    return emb @ head["cls_w"] + head["cls_b"]
+
+
+def l2_normalize(x: jnp.ndarray, eps: float = 1e-8) -> jnp.ndarray:
+    return x / (jnp.linalg.norm(x, axis=-1, keepdims=True) + eps)
+
+
+# ---------------------------------------------------------------------------
+# hand-rolled Adam (no optax in the offline image)
+# ---------------------------------------------------------------------------
+
+
+def adam_init(params: Params):
+    return {
+        "m": jax.tree_util.tree_map(jnp.zeros_like, params),
+        "v": jax.tree_util.tree_map(jnp.zeros_like, params),
+        "t": 0,
+    }
+
+
+def adam_update(
+    params: Params,
+    grads: Params,
+    state,
+    lr: float = 1e-3,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(
+        lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads
+    )
+    v = jax.tree_util.tree_map(
+        lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads
+    )
+    mhat_scale = 1.0 / (1 - b1**t)
+    vhat_scale = 1.0 / (1 - b2**t)
+    new_params = jax.tree_util.tree_map(
+        lambda p, m_, v_: p
+        - lr * (m_ * mhat_scale) / (jnp.sqrt(v_ * vhat_scale) + eps),
+        params,
+        m,
+        v,
+    )
+    return new_params, {"m": m, "v": v, "t": t}

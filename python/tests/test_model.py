@@ -1,0 +1,85 @@
+"""Controller architecture tests: shapes, non-negativity, trainability."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.model import (
+    CUB_CONTROLLER,
+    OMNIGLOT_CONTROLLER,
+    adam_init,
+    adam_update,
+    apply_classifier,
+    apply_controller,
+    init_classifier_head,
+    init_controller,
+    l2_normalize,
+)
+
+
+def test_omniglot_controller_shapes():
+    cfg = OMNIGLOT_CONTROLLER
+    params = init_controller(cfg, jax.random.PRNGKey(0))
+    x = jnp.zeros((4, cfg.image_hw, cfg.image_hw, 1))
+    emb = apply_controller(params, x, cfg)
+    assert emb.shape == (4, 48)
+
+
+def test_cub_controller_shapes():
+    cfg = CUB_CONTROLLER
+    params = init_controller(cfg, jax.random.PRNGKey(0))
+    x = jnp.ones((2, cfg.image_hw, cfg.image_hw, 1))
+    emb = apply_controller(params, x, cfg)
+    assert emb.shape == (2, 480)
+
+
+def test_embeddings_non_negative():
+    cfg = OMNIGLOT_CONTROLLER
+    params = init_controller(cfg, jax.random.PRNGKey(1))
+    x = jnp.asarray(np.random.default_rng(0).uniform(0, 1, (8, 28, 28, 1)), jnp.float32)
+    emb = np.asarray(apply_controller(params, x, cfg))
+    assert emb.min() >= 0.0
+    assert emb.std() > 0  # not collapsed
+
+
+def test_flat_dim():
+    assert OMNIGLOT_CONTROLLER.flat_dim == 1 * 1 * 32  # 28→14→7→3→1
+    assert CUB_CONTROLLER.flat_dim == 2 * 2 * 64  # 32→16→8→4→2
+
+
+def test_classifier_head():
+    cfg = OMNIGLOT_CONTROLLER
+    head = init_classifier_head(cfg, 11, jax.random.PRNGKey(2))
+    logits = apply_classifier(head, jnp.zeros((3, cfg.embed_dim)))
+    assert logits.shape == (3, 11)
+
+
+def test_l2_normalize():
+    x = jnp.asarray([[3.0, 4.0]])
+    n = np.asarray(l2_normalize(x))
+    np.testing.assert_allclose(np.linalg.norm(n, axis=1), 1.0, rtol=1e-5)
+
+
+def test_adam_decreases_quadratic():
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = adam_init(params)
+
+    def loss(p):
+        return (p["w"] ** 2).sum()
+
+    l0 = float(loss(params))
+    for _ in range(100):
+        grads = jax.grad(loss)(params)
+        params, state = adam_update(params, grads, state, lr=0.1)
+    assert float(loss(params)) < l0 * 0.05
+
+
+def test_adam_bias_correction_first_step():
+    """First Adam step should be ≈ lr * sign(grad) regardless of magnitude."""
+    params = {"w": jnp.asarray([1.0])}
+    state = adam_init(params)
+    grads = {"w": jnp.asarray([1e-3])}
+    new, _ = adam_update(params, grads, state, lr=0.01)
+    np.testing.assert_allclose(
+        float((params["w"] - new["w"])[0]), 0.01, rtol=1e-3
+    )

@@ -1,0 +1,82 @@
+"""Quantizer tests: calibration, range handling, STE gradients, and the
+AVSS asymmetric query/support alignment."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.quant import (
+    CLIP_SIGMA,
+    QuantSpec,
+    asymmetric_pair_np,
+    calibrate_clip,
+    dequantize_np,
+    fake_quant_ste,
+    quantize_np,
+)
+
+
+def test_calibrate_clip_formula():
+    x = np.array([0.0, 1.0, 2.0, 3.0])
+    assert np.isclose(calibrate_clip(x), x.mean() + CLIP_SIGMA * x.std())
+
+
+def test_calibrate_clip_degenerate():
+    assert calibrate_clip(np.zeros(10)) > 0
+
+
+@given(
+    seed=st.integers(0, 10_000),
+    levels=st.integers(2, 97),
+    clip=st.floats(0.5, 10.0),
+)
+@settings(max_examples=50, deadline=None)
+def test_quantize_in_range(seed, levels, clip):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(1.0, 2.0, size=100)
+    q = quantize_np(x, QuantSpec(levels, clip))
+    assert q.min() >= 0 and q.max() <= levels - 1
+    # round-trip error bounded by half a step for in-range values
+    inside = (x >= 0) & (x <= clip)
+    err = np.abs(dequantize_np(q, QuantSpec(levels, clip)) - x)[inside]
+    if err.size:
+        assert err.max() <= clip / (levels - 1) / 2 + 1e-9
+
+
+def test_fake_quant_forward_matches_np():
+    # Random points kept away from half-step rounding boundaries, where
+    # f32 (jax) and f64 (numpy) arithmetic could legitimately round apart.
+    rng = np.random.default_rng(0)
+    spec = QuantSpec(levels=16, clip=3.0)
+    x = rng.uniform(-1, 5, size=400)
+    frac = np.abs((x / spec.step) % 1.0 - 0.5)
+    x = x[frac > 0.05]
+    ste = np.asarray(fake_quant_ste(jnp.asarray(x, jnp.float32), 16, 3.0))
+    np_q = dequantize_np(quantize_np(x, spec), spec)
+    np.testing.assert_allclose(ste, np_q, atol=1e-5)
+
+
+def test_fake_quant_gradient_is_clip_mask():
+    grad = jax.grad(lambda x: fake_quant_ste(x, 16, 3.0).sum())(
+        jnp.asarray([-0.5, 0.5, 2.9, 3.5])
+    )
+    np.testing.assert_allclose(np.asarray(grad), [0.0, 1.0, 1.0, 0.0])
+
+
+def test_asymmetric_pair_alignment():
+    """Query state q maps to support value q*(L-1)/3 in the shared range."""
+    clip = 3.0
+    support_levels = 25  # CL=8 MTMC
+    q = np.array([0.0, 1.0, 2.0, 3.0])  # exactly the 4 query levels
+    s = q.copy()
+    q4, sq = asymmetric_pair_np(q, s, support_levels, clip)
+    assert list(q4) == [0, 1, 2, 3]
+    assert list(sq) == [0, 8, 16, 24]
+    np.testing.assert_array_equal(q4 * (support_levels - 1) // 3, sq)
+
+
+def test_single_level_spec():
+    q = quantize_np(np.array([0.3, 2.0]), QuantSpec(1, 1.0))
+    assert (q == 0).all()

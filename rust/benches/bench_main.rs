@@ -1,0 +1,328 @@
+//! Benchmark harness (criterion is not vendored in the offline image, so
+//! this is a hand-rolled `harness = false` bench binary).
+//!
+//! Two kinds of targets, selectable by substring filter
+//! (`cargo bench -- fig9`):
+//!
+//! * **paper targets** — regenerate every table/figure of the paper's
+//!   evaluation (table1, fig2, fig3, fig5, fig6, fig7, fig9_omniglot,
+//!   fig9_cub, table2, headline); these print the same rows/series the
+//!   paper reports and are recorded in EXPERIMENTS.md;
+//! * **perf targets** (`perf_`) — microbenchmarks of the L3 hot path
+//!   (block search, engine end-to-end, coordinator overhead) with
+//!   throughput numbers for EXPERIMENTS.md §Perf.
+
+use mcamvss::coordinator::{Coordinator, CoordinatorConfig, Payload};
+use mcamvss::device::block::McamBlock;
+use mcamvss::device::sense::SenseLadder;
+use mcamvss::device::variation::VariationModel;
+use mcamvss::device::McamParams;
+use mcamvss::encoding::Encoding;
+use mcamvss::experiments::{self, EpisodeSettings};
+use mcamvss::fsl::store::ArtifactStore;
+use mcamvss::search::engine::{EngineConfig, SearchEngine};
+use mcamvss::search::SearchMode;
+use mcamvss::testutil::Rng;
+use mcamvss::CELLS_PER_STRING;
+use std::time::Instant;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    // cargo bench passes --bench; ignore flags, keep substring filters
+    let filters: Vec<&str> = args
+        .iter()
+        .filter(|a| !a.starts_with('-'))
+        .map(|s| s.as_str())
+        .collect();
+    let want = |name: &str| filters.is_empty() || filters.iter().any(|f| name.contains(f));
+
+    let store = ArtifactStore::open_default().ok();
+    if store.is_none() {
+        eprintln!("NOTE: artifacts not built; artifact-driven benches will be skipped");
+    }
+
+    // ---------------- paper targets ----------------
+    if want("table1") {
+        section("table1");
+        println!("{}", experiments::table1::render());
+    }
+    if want("headline") {
+        section("headline");
+        println!("{}", experiments::headline::render_iteration_claims());
+    }
+    if want("fig2") {
+        section("fig2");
+        let t0 = Instant::now();
+        println!("{}", experiments::fig2::render());
+        println!("[fig2 wall: {:.1}s]\n", t0.elapsed().as_secs_f64());
+    }
+    if want("fig3") {
+        section("fig3 (B4E)");
+        println!("{}", experiments::fig3_5::render_panel_b(Encoding::B4e));
+        if let Some(store) = &store {
+            let rows = experiments::fig3_5::panel_a(
+                store,
+                "omniglot",
+                "std",
+                Encoding::B4e,
+                &[1, 2, 4, 8],
+                20_000,
+                0x3A,
+            )
+            .unwrap();
+            println!("{}", experiments::fig3_5::render_panel_a(&rows));
+        }
+    }
+    if want("fig5") {
+        section("fig5 (MTMC)");
+        println!("{}", experiments::fig3_5::render_panel_b(Encoding::Mtmc));
+        if let Some(store) = &store {
+            let rows = experiments::fig3_5::panel_a(
+                store,
+                "omniglot",
+                "std",
+                Encoding::Mtmc,
+                &[1, 2, 4, 8],
+                20_000,
+                0x5A,
+            )
+            .unwrap();
+            println!("{}", experiments::fig3_5::render_panel_a(&rows));
+        }
+    }
+    if want("fig6") {
+        if let Some(store) = &store {
+            section("fig6");
+            for ds in ["omniglot", "cub"] {
+                let stats = experiments::fig6::run(store, ds, "std", 8, 3000, 6).unwrap();
+                println!("dataset {ds}:\n{}", experiments::fig6::render(&stats));
+            }
+        }
+    }
+    if want("fig7") {
+        if let Some(store) = &store {
+            section("fig7");
+            for ds in ["omniglot", "cub"] {
+                let t0 = Instant::now();
+                let bars =
+                    experiments::fig7::run(store, ds, 8, EpisodeSettings::for_dataset(ds))
+                        .unwrap();
+                println!("{}", experiments::fig7::render(ds, &bars));
+                println!("[fig7 {ds} wall: {:.1}s]\n", t0.elapsed().as_secs_f64());
+            }
+        }
+    }
+    if want("fig9_omniglot") {
+        if let Some(store) = &store {
+            section("fig9 omniglot");
+            let t0 = Instant::now();
+            let points =
+                experiments::fig9::run(store, "omniglot", EpisodeSettings::omniglot()).unwrap();
+            println!("{}", experiments::fig9::render("omniglot", &points));
+            println!("[fig9 omniglot wall: {:.1}s]\n", t0.elapsed().as_secs_f64());
+        }
+    }
+    if want("fig9_cub") {
+        if let Some(store) = &store {
+            section("fig9 cub");
+            let t0 = Instant::now();
+            let points = experiments::fig9::run(store, "cub", EpisodeSettings::cub()).unwrap();
+            println!("{}", experiments::fig9::render("cub", &points));
+            println!("[fig9 cub wall: {:.1}s]\n", t0.elapsed().as_secs_f64());
+        }
+    }
+    if want("table2") {
+        if let Some(store) = &store {
+            section("table2");
+            for ds in ["omniglot", "cub"] {
+                let t0 = Instant::now();
+                let cells =
+                    experiments::table2::run(store, ds, EpisodeSettings::for_dataset(ds))
+                        .unwrap();
+                println!("{}", experiments::table2::render(&cells));
+                println!("[table2 {ds} wall: {:.1}s]\n", t0.elapsed().as_secs_f64());
+            }
+        }
+    }
+
+    if want("ablation") {
+        if let Some(store) = &store {
+            section("ablations");
+            let settings = EpisodeSettings {
+                n_way: 100,
+                k_shot: 5,
+                n_query: 2,
+                episodes: 2,
+                seed: 0xAB,
+            };
+            let rows = experiments::ablation::ladder_depth(store, "omniglot", settings).unwrap();
+            println!("{}", experiments::ablation::render("SA ladder depth (omniglot)", &rows));
+            let rows =
+                experiments::ablation::variation_severity(store, "omniglot", settings).unwrap();
+            println!(
+                "{}",
+                experiments::ablation::render("variation severity, MTMC vs B4E (omniglot)", &rows)
+            );
+            let rows =
+                experiments::ablation::fault_injection(store, "omniglot", settings).unwrap();
+            println!("{}", experiments::ablation::render("fault injection (omniglot)", &rows));
+        }
+    }
+
+    // ---------------- perf targets ----------------
+    if want("perf_block_search") {
+        section("perf_block_search");
+        perf_block_search();
+    }
+    if want("perf_engine") {
+        section("perf_engine");
+        perf_engine();
+    }
+    if want("perf_coordinator") {
+        section("perf_coordinator");
+        perf_coordinator();
+    }
+    if want("perf_sense") {
+        section("perf_sense");
+        perf_sense();
+    }
+}
+
+fn section(name: &str) {
+    println!("==================== {name} ====================");
+}
+
+/// Hot path: word-line search over a fully programmed 128K-string block.
+fn perf_block_search() {
+    let mut rng = Rng::new(1);
+    let n = mcamvss::STRINGS_PER_BLOCK;
+    let mut block = McamBlock::new(n, McamParams::default(), VariationModel::IDEAL, 1);
+    let mut cells = [0u8; CELLS_PER_STRING];
+    for _ in 0..n {
+        for c in cells.iter_mut() {
+            *c = rng.below(4) as u8;
+        }
+        block.program_string(&cells);
+    }
+    let mut wordline = [0u8; CELLS_PER_STRING];
+    for c in wordline.iter_mut() {
+        *c = rng.below(4) as u8;
+    }
+    let mut out = Vec::with_capacity(n);
+    // warmup
+    block.search_range(&wordline, 0, n, &mut out);
+    let reps = 10;
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        out.clear();
+        block.search_range(&wordline, 0, n, &mut out);
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let cell_evals = (reps * n * CELLS_PER_STRING) as f64;
+    println!("block search: {n} strings x {CELLS_PER_STRING} cells, {reps} reps in {dt:.3}s");
+    println!(
+        "  {:.1} M strings/s, {:.1} M cell-evals/s\n",
+        reps as f64 * n as f64 / dt / 1e6,
+        cell_evals / dt / 1e6
+    );
+    assert_eq!(out.len(), n);
+}
+
+/// End-to-end engine search at the paper's Omniglot operating point.
+fn perf_engine() {
+    let mut rng = Rng::new(2);
+    let dims = 48;
+    let n_vectors = 2000; // 200-way 10-shot
+    let embs: Vec<Vec<f32>> = (0..n_vectors)
+        .map(|_| (0..dims).map(|_| rng.range_f64(0.0, 3.0) as f32).collect())
+        .collect();
+    let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
+    let labels: Vec<u32> = (0..n_vectors as u32).map(|i| i / 10).collect();
+    for (mode, cl) in [(SearchMode::Avss, 32), (SearchMode::Svss, 32)] {
+        let cfg = EngineConfig::new(Encoding::Mtmc, cl, mode, 3.0)
+            .with_variation(VariationModel::nand_default());
+        let mut engine = SearchEngine::new(cfg, dims, n_vectors);
+        engine.program_support(&refs, &labels);
+        let query = &embs[0];
+        engine.search(query); // warmup
+        let reps = 20;
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            engine.search(query);
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "engine {} cl={} ({} vectors, {} strings): {:.2} ms/search, {:.0} searches/s (host)",
+            mode.name(),
+            cl,
+            n_vectors,
+            n_vectors * engine.layout().strings_per_vector(),
+            dt / reps as f64 * 1e3,
+            reps as f64 / dt
+        );
+    }
+    println!();
+}
+
+/// Coordinator overhead: served throughput vs bare engine throughput.
+fn perf_coordinator() {
+    let mut rng = Rng::new(3);
+    let dims = 48;
+    let n_vectors = 500;
+    let embs: Vec<Vec<f32>> = (0..n_vectors)
+        .map(|_| (0..dims).map(|_| rng.range_f64(0.0, 3.0) as f32).collect())
+        .collect();
+    let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
+    let labels: Vec<u32> = (0..n_vectors as u32).collect();
+    let ecfg = EngineConfig::new(Encoding::Mtmc, 8, SearchMode::Avss, 3.0).ideal();
+
+    // bare engine
+    let mut engine = SearchEngine::new(ecfg, dims, n_vectors);
+    engine.program_support(&refs, &labels);
+    let reps = 200;
+    let t0 = Instant::now();
+    for i in 0..reps {
+        engine.search(&embs[i % embs.len()]);
+    }
+    let bare = reps as f64 / t0.elapsed().as_secs_f64();
+
+    for workers in [1, 2, 4] {
+        let coord = Coordinator::start(
+            CoordinatorConfig { workers, queue_capacity: 512, ..Default::default() },
+            ecfg,
+            dims,
+            &refs,
+            &labels,
+            mcamvss::coordinator::worker::identity_embed(),
+        )
+        .unwrap();
+        let t0 = Instant::now();
+        for i in 0..reps {
+            coord.submit(Payload::Embedding(embs[i % embs.len()].clone()));
+        }
+        let responses = coord.shutdown();
+        let served = responses.len() as f64 / t0.elapsed().as_secs_f64();
+        println!(
+            "coordinator {workers} worker(s): {served:.0} req/s (bare engine {bare:.0}/s, {:.2}x)",
+            served / bare
+        );
+    }
+    println!();
+}
+
+/// SA ladder voting microbenchmark.
+fn perf_sense() {
+    let ladder = SenseLadder::new(&McamParams::default(), 16);
+    let mut rng = Rng::new(4);
+    let currents: Vec<f64> = (0..1_000_000).map(|_| rng.range_f64(0.001, 1.0)).collect();
+    let t0 = Instant::now();
+    let mut acc = 0u64;
+    for &c in &currents {
+        acc += ladder.votes(c) as u64;
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "sense ladder: {:.1} M votes/s (checksum {acc})\n",
+        currents.len() as f64 / dt / 1e6
+    );
+}

@@ -1,0 +1,176 @@
+//! Software baselines: exact float vector similarity search in the style
+//! of prototypical networks [34] — the "software baseline" series of
+//! Fig. 9 — plus a nearest-support variant matching the MANN
+//! winner-take-all decision rule.
+
+/// Distance/similarity metric for the float baselines.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Metric {
+    L1,
+    L2,
+    Cosine,
+}
+
+impl Metric {
+    /// Distance (lower = more similar) between two vectors.
+    pub fn distance(&self, a: &[f32], b: &[f32]) -> f64 {
+        assert_eq!(a.len(), b.len());
+        match self {
+            Metric::L1 => a
+                .iter()
+                .zip(b)
+                .map(|(&x, &y)| (x as f64 - y as f64).abs())
+                .sum(),
+            Metric::L2 => a
+                .iter()
+                .zip(b)
+                .map(|(&x, &y)| (x as f64 - y as f64).powi(2))
+                .sum::<f64>()
+                .sqrt(),
+            Metric::Cosine => {
+                let mut dot = 0f64;
+                let mut na = 0f64;
+                let mut nb = 0f64;
+                for (&x, &y) in a.iter().zip(b) {
+                    dot += x as f64 * y as f64;
+                    na += (x as f64).powi(2);
+                    nb += (y as f64).powi(2);
+                }
+                1.0 - dot / (na.sqrt() * nb.sqrt() + 1e-12)
+            }
+        }
+    }
+}
+
+/// Prototypical-network prediction: class prototypes are the mean of each
+/// class's support embeddings; the query is assigned to the nearest
+/// prototype under `metric`.
+pub fn protonet_predict(
+    support: &[&[f32]],
+    labels: &[u32],
+    query: &[f32],
+    metric: Metric,
+) -> u32 {
+    assert_eq!(support.len(), labels.len());
+    assert!(!support.is_empty(), "empty support set");
+    let dims = query.len();
+    let max_label = *labels.iter().max().unwrap() as usize;
+    let mut sums = vec![0f64; (max_label + 1) * dims];
+    let mut counts = vec![0usize; max_label + 1];
+    for (vec, &label) in support.iter().zip(labels) {
+        assert_eq!(vec.len(), dims);
+        let base = label as usize * dims;
+        for (d, &x) in vec.iter().enumerate() {
+            sums[base + d] += x as f64;
+        }
+        counts[label as usize] += 1;
+    }
+    let mut best = (u32::MAX, f64::INFINITY);
+    let mut proto = vec![0f32; dims];
+    for label in 0..=max_label {
+        if counts[label] == 0 {
+            continue;
+        }
+        for d in 0..dims {
+            proto[d] = (sums[label * dims + d] / counts[label] as f64) as f32;
+        }
+        let dist = metric.distance(&proto, query);
+        if dist < best.1 {
+            best = (label as u32, dist);
+        }
+    }
+    best.0
+}
+
+/// Nearest-support prediction (the MANN winner-take-all rule, in floats).
+pub fn nearest_support_predict(
+    support: &[&[f32]],
+    labels: &[u32],
+    query: &[f32],
+    metric: Metric,
+) -> u32 {
+    assert_eq!(support.len(), labels.len());
+    assert!(!support.is_empty(), "empty support set");
+    let mut best = (0usize, f64::INFINITY);
+    for (i, vec) in support.iter().enumerate() {
+        let dist = metric.distance(vec, query);
+        if dist < best.1 {
+            best = (i, dist);
+        }
+    }
+    labels[best.0]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{assert_close, Rng};
+
+    #[test]
+    fn metric_values() {
+        let a = [1.0f32, 2.0];
+        let b = [4.0f32, 6.0];
+        assert_close(Metric::L1.distance(&a, &b), 7.0, 1e-12);
+        assert_close(Metric::L2.distance(&a, &b), 5.0, 1e-12);
+        assert!(Metric::Cosine.distance(&a, &a).abs() < 1e-9);
+        assert!(Metric::Cosine.distance(&[1.0, 0.0], &[0.0, 1.0]) > 0.99);
+    }
+
+    #[test]
+    fn protonet_uses_class_means() {
+        // Two classes; class 0 supports straddle the query, class 1 far.
+        let s0a = [0.0f32, 0.0];
+        let s0b = [2.0f32, 2.0];
+        let s1 = [10.0f32, 10.0];
+        let support: Vec<&[f32]> = vec![&s0a, &s0b, &s1];
+        let labels = [0, 0, 1];
+        // query at (1,1): exactly the class-0 prototype
+        assert_eq!(protonet_predict(&support, &labels, &[1.0, 1.0], Metric::L1), 0);
+        assert_eq!(protonet_predict(&support, &labels, &[9.0, 9.0], Metric::L1), 1);
+    }
+
+    #[test]
+    fn nearest_support_differs_from_protonet() {
+        // A lone outlier support of class 1 sits right next to the query,
+        // but class 0's prototype is nearer than class 1's.
+        let s0a = [1.0f32, 1.0];
+        let s0b = [1.2f32, 1.2];
+        let s1a = [1.4f32, 1.4];
+        let s1b = [9.0f32, 9.0];
+        let support: Vec<&[f32]> = vec![&s0a, &s0b, &s1a, &s1b];
+        let labels = [0, 0, 1, 1];
+        let query = [1.45f32, 1.45];
+        assert_eq!(nearest_support_predict(&support, &labels, &query, Metric::L1), 1);
+        assert_eq!(protonet_predict(&support, &labels, &query, Metric::L1), 0);
+    }
+
+    #[test]
+    fn clustered_accuracy() {
+        let mut rng = Rng::new(9);
+        let dims = 16;
+        let protos: Vec<Vec<f32>> = (0..8)
+            .map(|_| (0..dims).map(|_| rng.range_f64(0.0, 3.0) as f32).collect())
+            .collect();
+        let mut support_vecs: Vec<Vec<f32>> = Vec::new();
+        let mut labels = Vec::new();
+        for (c, p) in protos.iter().enumerate() {
+            for _ in 0..4 {
+                support_vecs.push(
+                    p.iter().map(|&x| x + 0.05 * rng.gaussian() as f32).collect(),
+                );
+                labels.push(c as u32);
+            }
+        }
+        let refs: Vec<&[f32]> = support_vecs.iter().map(|v| v.as_slice()).collect();
+        for (c, p) in protos.iter().enumerate() {
+            assert_eq!(protonet_predict(&refs, &labels, p, Metric::L1), c as u32);
+            assert_eq!(nearest_support_predict(&refs, &labels, p, Metric::Cosine), c as u32);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "empty support")]
+    fn empty_support_panics() {
+        protonet_predict(&[], &[], &[1.0], Metric::L1);
+    }
+}

@@ -1,0 +1,104 @@
+//! Hand-rolled CLI argument parser (no clap in the offline image):
+//! `binary <command> [--key value]... [--flag]...`.
+
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    options: HashMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+/// Option keys that take a value (everything else after `--` is a flag).
+const VALUE_KEYS: &[&str] = &[
+    "config", "dataset", "variant", "encoding", "cl", "mode", "n-way", "k-shot",
+    "n-query", "episodes", "workers", "requests", "seed", "out", "artifacts",
+    "filter", "batch",
+];
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut args = Args::default();
+        let mut iter = argv.iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(key) = arg.strip_prefix("--") {
+                if VALUE_KEYS.contains(&key) {
+                    let Some(value) = iter.next() else {
+                        bail!("option --{key} requires a value");
+                    };
+                    args.options.insert(key.to_string(), value.clone());
+                } else {
+                    args.flags.push(key.to_string());
+                }
+            } else if args.command.is_none() {
+                args.command = Some(arg.clone());
+            } else {
+                args.positional.push(arg.clone());
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Self::parse(&argv)
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn opt_usize(&self, key: &str) -> Result<Option<usize>> {
+        match self.opt(key) {
+            None => Ok(None),
+            Some(raw) => match raw.parse() {
+                Ok(v) => Ok(Some(v)),
+                Err(_) => bail!("--{key}: expected integer, got {raw:?}"),
+            },
+        }
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(parts: &[&str]) -> Args {
+        Args::parse(&parts.iter().map(|s| s.to_string()).collect::<Vec<_>>()).unwrap()
+    }
+
+    #[test]
+    fn parses_command_options_flags() {
+        let args = parse(&["eval", "--dataset", "cub", "--cl", "8", "--ideal", "x"]);
+        assert_eq!(args.command.as_deref(), Some("eval"));
+        assert_eq!(args.opt("dataset"), Some("cub"));
+        assert_eq!(args.opt_usize("cl").unwrap(), Some(8));
+        assert!(args.flag("ideal"));
+        assert!(!args.flag("other"));
+        assert_eq!(args.positional(), &["x".to_string()]);
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        let argv: Vec<String> = vec!["eval".into(), "--dataset".into()];
+        assert!(Args::parse(&argv).is_err());
+    }
+
+    #[test]
+    fn bad_int_errors() {
+        let args = parse(&["eval", "--cl", "abc"]);
+        assert!(args.opt_usize("cl").is_err());
+    }
+}

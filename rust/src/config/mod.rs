@@ -1,0 +1,218 @@
+//! Typed configuration + a minimal TOML-subset parser (sections,
+//! `key = value` with strings / ints / floats / bools — no serde in the
+//! offline image) and presets matching the paper's two evaluation setups.
+
+mod toml;
+
+pub use toml::{TomlDoc, TomlValue};
+
+use crate::device::variation::VariationModel;
+use crate::encoding::Encoding;
+use crate::search::SearchMode;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Full system configuration for the `mcamvss` binary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Config {
+    pub dataset: String,
+    pub variant: String,
+    pub encoding: Encoding,
+    pub cl: usize,
+    pub mode: SearchMode,
+    pub n_way: usize,
+    pub k_shot: usize,
+    pub n_query: usize,
+    pub episodes: usize,
+    pub workers: usize,
+    pub queue_capacity: usize,
+    pub max_batch: usize,
+    pub ladder_len: usize,
+    pub variation: VariationModel,
+    pub seed: u64,
+}
+
+impl Config {
+    /// Paper setup: Omniglot, 200-way 10-shot, MTMC CL=32, AVSS, HAT.
+    pub fn omniglot_preset() -> Config {
+        Config {
+            dataset: "omniglot".into(),
+            variant: "hat_avss".into(),
+            encoding: Encoding::Mtmc,
+            cl: 32,
+            mode: SearchMode::Avss,
+            n_way: 200,
+            k_shot: 10,
+            n_query: 5,
+            episodes: 10,
+            workers: 2,
+            queue_capacity: 256,
+            max_batch: 8,
+            ladder_len: 16,
+            variation: VariationModel::nand_default(),
+            seed: 0x5EED,
+        }
+    }
+
+    /// Paper setup: CUB, 50-way 5-shot, MTMC CL=25, AVSS, HAT.
+    pub fn cub_preset() -> Config {
+        Config {
+            dataset: "cub".into(),
+            variant: "hat_avss".into(),
+            encoding: Encoding::Mtmc,
+            cl: 25,
+            mode: SearchMode::Avss,
+            n_way: 50,
+            k_shot: 5,
+            n_query: 5,
+            episodes: 10,
+            workers: 2,
+            queue_capacity: 256,
+            max_batch: 8,
+            ladder_len: 16,
+            variation: VariationModel::nand_default(),
+            seed: 0x5EED,
+        }
+    }
+
+    pub fn preset(name: &str) -> Result<Config> {
+        match name {
+            "omniglot" => Ok(Self::omniglot_preset()),
+            "cub" => Ok(Self::cub_preset()),
+            other => bail!("unknown preset {other:?} (omniglot | cub)"),
+        }
+    }
+
+    /// Parse a TOML-subset config file, starting from the preset named in
+    /// `[system] dataset` and overriding fields present in the file.
+    pub fn from_toml(doc: &TomlDoc) -> Result<Config> {
+        let dataset = doc
+            .get_str("system", "dataset")
+            .unwrap_or("omniglot")
+            .to_string();
+        let mut cfg = Config::preset(&dataset)?;
+        if let Some(v) = doc.get_str("system", "variant") {
+            cfg.variant = v.to_string();
+        }
+        if let Some(e) = doc.get_str("search", "encoding") {
+            cfg.encoding =
+                Encoding::from_name(e).with_context(|| format!("bad encoding {e:?}"))?;
+        }
+        if let Some(cl) = doc.get_int("search", "cl") {
+            cfg.cl = cl as usize;
+        }
+        if let Some(m) = doc.get_str("search", "mode") {
+            cfg.mode = SearchMode::from_name(m).with_context(|| format!("bad mode {m:?}"))?;
+        }
+        if let Some(n) = doc.get_int("episode", "n_way") {
+            cfg.n_way = n as usize;
+        }
+        if let Some(k) = doc.get_int("episode", "k_shot") {
+            cfg.k_shot = k as usize;
+        }
+        if let Some(q) = doc.get_int("episode", "n_query") {
+            cfg.n_query = q as usize;
+        }
+        if let Some(e) = doc.get_int("episode", "episodes") {
+            cfg.episodes = e as usize;
+        }
+        if let Some(w) = doc.get_int("server", "workers") {
+            cfg.workers = w as usize;
+        }
+        if let Some(c) = doc.get_int("server", "queue_capacity") {
+            cfg.queue_capacity = c as usize;
+        }
+        if let Some(b) = doc.get_int("server", "max_batch") {
+            cfg.max_batch = b as usize;
+        }
+        if let Some(l) = doc.get_int("device", "ladder_len") {
+            cfg.ladder_len = l as usize;
+        }
+        if let Some(p) = doc.get_float("device", "program_sigma") {
+            cfg.variation.program_sigma = p;
+        }
+        if let Some(r) = doc.get_float("device", "read_sigma") {
+            cfg.variation.read_sigma = r;
+        }
+        if let Some(s) = doc.get_int("system", "seed") {
+            cfg.seed = s as u64;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn load(path: &Path) -> Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read config {}", path.display()))?;
+        Self::from_toml(&TomlDoc::parse(&text)?)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.cl == 0 {
+            bail!("cl must be >= 1");
+        }
+        if self.n_way == 0 || self.k_shot == 0 || self.n_query == 0 {
+            bail!("episode shape must be positive");
+        }
+        if self.workers == 0 {
+            bail!("need at least one worker");
+        }
+        if self.encoding == Encoding::B4e && self.cl > 9 {
+            bail!("B4E beyond CL=9 overflows 4^CL levels (paper sweeps 1..9)");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_validate() {
+        Config::omniglot_preset().validate().unwrap();
+        Config::cub_preset().validate().unwrap();
+        assert!(Config::preset("nope").is_err());
+    }
+
+    #[test]
+    fn toml_overrides() {
+        let doc = TomlDoc::parse(
+            r#"
+[system]
+dataset = "cub"
+variant = "std"
+[search]
+encoding = "b4e"
+cl = 3
+mode = "svss"
+[episode]
+n_way = 10
+[server]
+workers = 4
+[device]
+program_sigma = 0.3
+"#,
+        )
+        .unwrap();
+        let cfg = Config::from_toml(&doc).unwrap();
+        assert_eq!(cfg.dataset, "cub");
+        assert_eq!(cfg.variant, "std");
+        assert_eq!(cfg.encoding, Encoding::B4e);
+        assert_eq!(cfg.cl, 3);
+        assert_eq!(cfg.mode, SearchMode::Svss);
+        assert_eq!(cfg.n_way, 10);
+        assert_eq!(cfg.workers, 4);
+        assert_eq!(cfg.variation.program_sigma, 0.3);
+        // untouched fields keep the preset
+        assert_eq!(cfg.k_shot, 5);
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        let doc = TomlDoc::parse("[search]\nencoding = \"huffman\"\n").unwrap();
+        assert!(Config::from_toml(&doc).is_err());
+        let doc = TomlDoc::parse("[search]\nencoding = \"b4e\"\ncl = 20\n").unwrap();
+        assert!(Config::from_toml(&doc).is_err());
+    }
+}

@@ -1,0 +1,163 @@
+//! Minimal TOML-subset parser: `[section]` headers and `key = value`
+//! lines where value is a quoted string, integer, float, or bool.
+//! Comments (`#`) and blank lines are ignored. No arrays/tables-of-tables
+//! — the config schema doesn't need them.
+
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct TomlDoc {
+    sections: HashMap<String, HashMap<String, TomlValue>>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<TomlDoc> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let Some(name) = name.strip_suffix(']') else {
+                    bail!("line {}: unterminated section header", lineno + 1);
+                };
+                section = name.trim().to_string();
+                doc.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let Some((key, value)) = line.split_once('=') else {
+                bail!("line {}: expected key = value, got {:?}", lineno + 1, line);
+            };
+            let value = parse_value(value.trim())
+                .ok_or_else(|| anyhow::anyhow!("line {}: bad value {:?}", lineno + 1, value))?;
+            doc.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(key.trim().to_string(), value);
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.sections.get(section)?.get(key)
+    }
+
+    pub fn get_str(&self, section: &str, key: &str) -> Option<&str> {
+        match self.get(section, key) {
+            Some(TomlValue::Str(s)) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn get_int(&self, section: &str, key: &str) -> Option<i64> {
+        match self.get(section, key) {
+            Some(TomlValue::Int(i)) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn get_float(&self, section: &str, key: &str) -> Option<f64> {
+        match self.get(section, key) {
+            Some(TomlValue::Float(f)) => Some(*f),
+            Some(TomlValue::Int(i)) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str) -> Option<bool> {
+        match self.get(section, key) {
+            Some(TomlValue::Bool(b)) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // a '#' inside a quoted string is preserved
+    let mut in_string = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_string = !in_string,
+            '#' if !in_string => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(raw: &str) -> Option<TomlValue> {
+    if let Some(stripped) = raw.strip_prefix('"') {
+        let inner = stripped.strip_suffix('"')?;
+        return Some(TomlValue::Str(inner.to_string()));
+    }
+    match raw {
+        "true" => return Some(TomlValue::Bool(true)),
+        "false" => return Some(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = raw.parse::<i64>() {
+        return Some(TomlValue::Int(i));
+    }
+    if let Ok(f) = raw.parse::<f64>() {
+        return Some(TomlValue::Float(f));
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_types() {
+        let doc = TomlDoc::parse(
+            "[a]\ns = \"hi\"\ni = 42\nf = 2.5\nb = true\nneg = -7\n",
+        )
+        .unwrap();
+        assert_eq!(doc.get_str("a", "s"), Some("hi"));
+        assert_eq!(doc.get_int("a", "i"), Some(42));
+        assert_eq!(doc.get_float("a", "f"), Some(2.5));
+        assert_eq!(doc.get_float("a", "i"), Some(42.0)); // int coerces
+        assert_eq!(doc.get_bool("a", "b"), Some(true));
+        assert_eq!(doc.get_int("a", "neg"), Some(-7));
+    }
+
+    #[test]
+    fn comments_and_blanks() {
+        let doc = TomlDoc::parse("# top\n[s] # trailing\nk = 1 # note\n\nq = \"a#b\"\n").unwrap();
+        assert_eq!(doc.get_int("s", "k"), Some(1));
+        assert_eq!(doc.get_str("s", "q"), Some("a#b"));
+    }
+
+    #[test]
+    fn missing_keys_are_none() {
+        let doc = TomlDoc::parse("[s]\nk = 1\n").unwrap();
+        assert_eq!(doc.get_int("s", "missing"), None);
+        assert_eq!(doc.get_int("missing", "k"), None);
+        assert_eq!(doc.get_str("s", "k"), None); // wrong type
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(TomlDoc::parse("[unterminated\n").is_err());
+        assert!(TomlDoc::parse("[s]\nnot a kv\n").is_err());
+        assert!(TomlDoc::parse("[s]\nk = @@\n").is_err());
+    }
+
+    #[test]
+    fn keyless_sections_ok() {
+        let doc = TomlDoc::parse("[empty]\n").unwrap();
+        assert_eq!(doc.get_int("empty", "x"), None);
+    }
+}

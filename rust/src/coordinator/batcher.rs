@@ -1,0 +1,178 @@
+//! Dynamic batcher (leader thread): groups ingress requests into batches
+//! of up to `max_batch`, flushing early after `max_wait`, and round-robins
+//! batches across worker queues.
+//!
+//! Batching matters for the PJRT controller (fixed-batch executables
+//! amortize dispatch) and keeps MCAM search cache-warm per worker.
+
+use super::queue::BoundedQueue;
+use super::{Request, ServerStats};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone, Copy)]
+pub struct BatcherConfig {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// Spawn the batcher thread. It exits when the ingress queue closes and
+/// drains, after closing all worker queues.
+pub fn spawn(
+    cfg: BatcherConfig,
+    ingress: Arc<BoundedQueue<Request>>,
+    workers: Vec<Arc<BoundedQueue<Vec<Request>>>>,
+    stats: Arc<ServerStats>,
+) -> JoinHandle<()> {
+    assert!(!workers.is_empty(), "batcher needs at least one worker");
+    std::thread::Builder::new()
+        .name("mcamvss-batcher".into())
+        .spawn(move || {
+            let mut next_worker = 0usize;
+            let mut batch: Vec<Request> = Vec::with_capacity(cfg.max_batch);
+            let mut deadline: Option<Instant> = None;
+            loop {
+                let timeout = match deadline {
+                    Some(d) => d.saturating_duration_since(Instant::now()),
+                    None => Duration::from_millis(50),
+                };
+                match ingress.pop_timeout(timeout) {
+                    Ok(Some(req)) => {
+                        if batch.is_empty() {
+                            deadline = Some(Instant::now() + cfg.max_wait);
+                        }
+                        batch.push(req);
+                        let expired =
+                            deadline.map(|d| Instant::now() >= d).unwrap_or(false);
+                        if batch.len() >= cfg.max_batch || expired {
+                            flush(&mut batch, &workers, &mut next_worker, &stats);
+                            deadline = None;
+                        }
+                    }
+                    Ok(None) => {
+                        // ingress closed + drained
+                        flush(&mut batch, &workers, &mut next_worker, &stats);
+                        break;
+                    }
+                    Err(()) => {
+                        // timeout: flush a partial batch if its deadline hit
+                        if !batch.is_empty() {
+                            flush(&mut batch, &workers, &mut next_worker, &stats);
+                            deadline = None;
+                        }
+                    }
+                }
+            }
+            for w in &workers {
+                w.close();
+            }
+        })
+        .expect("spawn batcher")
+}
+
+fn flush(
+    batch: &mut Vec<Request>,
+    workers: &[Arc<BoundedQueue<Vec<Request>>>],
+    next_worker: &mut usize,
+    stats: &ServerStats,
+) {
+    if batch.is_empty() {
+        return;
+    }
+    let out = std::mem::take(batch);
+    stats.batches.fetch_add(1, Ordering::Relaxed);
+    workers[*next_worker % workers.len()].push(out);
+    *next_worker += 1;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Payload;
+
+    fn req(id: u64) -> Request {
+        Request { id, payload: Payload::Embedding(vec![]), submitted_at: Instant::now() }
+    }
+
+    #[test]
+    fn batches_up_to_max() {
+        let ingress = Arc::new(BoundedQueue::new(64));
+        let worker: Arc<BoundedQueue<Vec<Request>>> = Arc::new(BoundedQueue::new(64));
+        let stats = Arc::new(ServerStats::default());
+        let handle = spawn(
+            BatcherConfig { max_batch: 3, max_wait: Duration::from_millis(100) },
+            Arc::clone(&ingress),
+            vec![Arc::clone(&worker)],
+            Arc::clone(&stats),
+        );
+        for i in 0..7 {
+            ingress.push(req(i));
+        }
+        ingress.close();
+        handle.join().unwrap();
+        let mut sizes = Vec::new();
+        while let Some(batch) = worker.pop() {
+            sizes.push(batch.len());
+        }
+        assert_eq!(sizes.iter().sum::<usize>(), 7);
+        assert!(sizes.iter().all(|&s| s <= 3), "{sizes:?}");
+        assert_eq!(stats.batches.load(Ordering::Relaxed) as usize, sizes.len());
+    }
+
+    #[test]
+    fn flushes_partial_batch_on_timeout() {
+        let ingress = Arc::new(BoundedQueue::new(64));
+        let worker: Arc<BoundedQueue<Vec<Request>>> = Arc::new(BoundedQueue::new(64));
+        let stats = Arc::new(ServerStats::default());
+        let handle = spawn(
+            BatcherConfig { max_batch: 100, max_wait: Duration::from_millis(5) },
+            Arc::clone(&ingress),
+            vec![Arc::clone(&worker)],
+            Arc::clone(&stats),
+        );
+        ingress.push(req(0));
+        // partial batch must arrive without more input
+        let batch = worker.pop().expect("timed flush");
+        assert_eq!(batch.len(), 1);
+        ingress.close();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn round_robins_workers() {
+        let ingress = Arc::new(BoundedQueue::new(64));
+        let w1: Arc<BoundedQueue<Vec<Request>>> = Arc::new(BoundedQueue::new(64));
+        let w2: Arc<BoundedQueue<Vec<Request>>> = Arc::new(BoundedQueue::new(64));
+        let stats = Arc::new(ServerStats::default());
+        let handle = spawn(
+            BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(1) },
+            Arc::clone(&ingress),
+            vec![Arc::clone(&w1), Arc::clone(&w2)],
+            Arc::clone(&stats),
+        );
+        for i in 0..6 {
+            ingress.push(req(i));
+        }
+        ingress.close();
+        handle.join().unwrap();
+        let mut n1 = 0;
+        while w1.pop().is_some() {
+            n1 += 1;
+        }
+        let mut n2 = 0;
+        while w2.pop().is_some() {
+            n2 += 1;
+        }
+        assert_eq!(n1 + n2, 6);
+        assert_eq!(n1, 3);
+        assert_eq!(n2, 3);
+    }
+}

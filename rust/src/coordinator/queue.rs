@@ -1,0 +1,214 @@
+//! Bounded MPMC queue with blocking push (backpressure) and blocking pop,
+//! built on Mutex + Condvar (no crossbeam/tokio in the offline image).
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+struct Inner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// A bounded multi-producer multi-consumer queue.
+pub struct BoundedQueue<T> {
+    inner: Mutex<Inner<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    capacity: usize,
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(capacity: usize) -> BoundedQueue<T> {
+        assert!(capacity > 0, "capacity must be positive");
+        BoundedQueue {
+            inner: Mutex::new(Inner { items: VecDeque::with_capacity(capacity), closed: false }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+            capacity,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Blocking push; silently drops the item if the queue is closed.
+    pub fn push(&self, item: T) {
+        let mut inner = self.inner.lock().unwrap();
+        while inner.items.len() >= self.capacity && !inner.closed {
+            inner = self.not_full.wait(inner).unwrap();
+        }
+        if inner.closed {
+            return;
+        }
+        inner.items.push_back(item);
+        drop(inner);
+        self.not_empty.notify_one();
+    }
+
+    /// Non-blocking push; `false` when full or closed.
+    pub fn try_push(&self, item: T) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.closed || inner.items.len() >= self.capacity {
+            return false;
+        }
+        inner.items.push_back(item);
+        drop(inner);
+        self.not_empty.notify_one();
+        true
+    }
+
+    /// Blocking pop; `None` once the queue is closed *and* drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = inner.items.pop_front() {
+                drop(inner);
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if inner.closed {
+                return None;
+            }
+            inner = self.not_empty.wait(inner).unwrap();
+        }
+    }
+
+    /// Pop with a timeout; `Ok(None)` on closed+drained, `Err(())` on
+    /// timeout with nothing available.
+    pub fn pop_timeout(&self, timeout: Duration) -> Result<Option<T>, ()> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = inner.items.pop_front() {
+                drop(inner);
+                self.not_full.notify_one();
+                return Ok(Some(item));
+            }
+            if inner.closed {
+                return Ok(None);
+            }
+            let (guard, result) = self.not_empty.wait_timeout(inner, timeout).unwrap();
+            inner = guard;
+            if result.timed_out() && inner.items.is_empty() {
+                if inner.closed {
+                    return Ok(None);
+                }
+                return Err(());
+            }
+        }
+    }
+
+    /// Close the queue: producers stop, consumers drain then see `None`.
+    pub fn close(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.closed = true;
+        drop(inner);
+        self.not_full.notify_all();
+        self.not_empty.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::thread;
+
+    #[test]
+    fn fifo_order() {
+        let q = BoundedQueue::new(4);
+        q.push(1);
+        q.push(2);
+        q.push(3);
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), Some(3));
+    }
+
+    #[test]
+    fn try_push_respects_capacity() {
+        let q = BoundedQueue::new(2);
+        assert!(q.try_push(1));
+        assert!(q.try_push(2));
+        assert!(!q.try_push(3));
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let q = BoundedQueue::new(4);
+        q.push(1);
+        q.close();
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), None);
+        assert!(!q.try_push(2));
+    }
+
+    #[test]
+    fn blocking_push_waits_for_space() {
+        let q = Arc::new(BoundedQueue::new(1));
+        q.push(1);
+        let q2 = Arc::clone(&q);
+        let producer = thread::spawn(move || {
+            q2.push(2); // blocks until the consumer pops
+        });
+        thread::sleep(Duration::from_millis(10));
+        assert_eq!(q.pop(), Some(1));
+        producer.join().unwrap();
+        assert_eq!(q.pop(), Some(2));
+    }
+
+    #[test]
+    fn mpmc_delivers_everything() {
+        let q = Arc::new(BoundedQueue::new(8));
+        let mut handles = Vec::new();
+        for p in 0..4 {
+            let q = Arc::clone(&q);
+            handles.push(thread::spawn(move || {
+                for i in 0..50 {
+                    q.push(p * 100 + i);
+                }
+            }));
+        }
+        let mut consumers = Vec::new();
+        for _ in 0..2 {
+            let q = Arc::clone(&q);
+            consumers.push(thread::spawn(move || {
+                let mut got = Vec::new();
+                while let Some(v) = q.pop() {
+                    got.push(v);
+                }
+                got
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        q.close();
+        let mut all: Vec<i32> = consumers
+            .into_iter()
+            .flat_map(|c| c.join().unwrap())
+            .collect();
+        all.sort_unstable();
+        assert_eq!(all.len(), 200);
+        all.dedup();
+        assert_eq!(all.len(), 200, "duplicates delivered");
+    }
+
+    #[test]
+    fn pop_timeout_times_out() {
+        let q: BoundedQueue<i32> = BoundedQueue::new(1);
+        assert_eq!(q.pop_timeout(Duration::from_millis(5)), Err(()));
+        q.push(7);
+        assert_eq!(q.pop_timeout(Duration::from_millis(5)), Ok(Some(7)));
+    }
+}

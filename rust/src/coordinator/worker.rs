@@ -1,0 +1,219 @@
+//! Worker pool: each worker owns a replicated MCAM [`SearchEngine`] and an
+//! embedding function (PJRT controller in production, identity for
+//! pre-embedded requests/tests), consumes request batches, and appends
+//! responses.
+
+use super::queue::BoundedQueue;
+use super::{Payload, Request, Response, ServerStats};
+use crate::search::engine::SearchEngine;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+/// Batch embedding function: flattened images → flattened embeddings.
+/// Must accept any number of images (workers see partial batches).
+pub type EmbedFn = Arc<dyn Fn(&[f32], usize) -> anyhow::Result<Vec<f32>> + Send + Sync>;
+
+/// Identity embed: payloads already carry embeddings.
+pub fn identity_embed() -> EmbedFn {
+    Arc::new(|_images, _n| {
+        anyhow::bail!("identity embed cannot process image payloads")
+    })
+}
+
+pub struct WorkerPool {
+    senders: Vec<Arc<BoundedQueue<Vec<Request>>>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    pub fn start(
+        engines: Vec<SearchEngine>,
+        embed: EmbedFn,
+        responses: Arc<Mutex<Vec<Response>>>,
+        stats: Arc<ServerStats>,
+    ) -> WorkerPool {
+        let mut senders = Vec::new();
+        let mut handles = Vec::new();
+        for (w, mut engine) in engines.into_iter().enumerate() {
+            let queue: Arc<BoundedQueue<Vec<Request>>> = Arc::new(BoundedQueue::new(64));
+            senders.push(Arc::clone(&queue));
+            let responses = Arc::clone(&responses);
+            let stats = Arc::clone(&stats);
+            let embed = Arc::clone(&embed);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("mcamvss-worker-{w}"))
+                    .spawn(move || {
+                        while let Some(batch) = queue.pop() {
+                            let out = process_batch(&mut engine, &embed, batch);
+                            stats.completed.fetch_add(out.len() as u64, Ordering::Relaxed);
+                            responses.lock().unwrap().extend(out);
+                        }
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+        WorkerPool { senders, handles }
+    }
+
+    pub fn senders(&self) -> Vec<Arc<BoundedQueue<Vec<Request>>>> {
+        self.senders.clone()
+    }
+
+    pub fn join(self) {
+        for s in &self.senders {
+            s.close();
+        }
+        for h in self.handles {
+            let _ = h.join();
+        }
+    }
+}
+
+fn process_batch(
+    engine: &mut SearchEngine,
+    embed: &EmbedFn,
+    batch: Vec<Request>,
+) -> Vec<Response> {
+    // Split the batch: image payloads go through the controller together
+    // (amortized PJRT dispatch), embeddings search directly.
+    let mut image_reqs: Vec<(usize, &Request)> = Vec::new();
+    let mut flat_images: Vec<f32> = Vec::new();
+    for (i, req) in batch.iter().enumerate() {
+        if let Payload::Image(img) = &req.payload {
+            image_reqs.push((i, req));
+            flat_images.extend_from_slice(img);
+        }
+    }
+    let mut image_embeddings: Vec<Vec<f32>> = Vec::new();
+    if !image_reqs.is_empty() {
+        match embed(&flat_images, image_reqs.len()) {
+            Ok(flat) => {
+                let d = flat.len() / image_reqs.len();
+                image_embeddings =
+                    flat.chunks(d).map(|c| c.to_vec()).collect();
+            }
+            Err(_) => {
+                // Controller failure: drop the image requests (the caller
+                // observes missing responses + stats mismatch).
+                image_reqs.clear();
+            }
+        }
+    }
+
+    let mut out = Vec::with_capacity(batch.len());
+    let mut img_cursor = 0usize;
+    for req in &batch {
+        let emb: &[f32] = match &req.payload {
+            Payload::Embedding(e) => e,
+            Payload::Image(_) => {
+                if img_cursor >= image_embeddings.len() {
+                    continue; // dropped by controller failure
+                }
+                let e = &image_embeddings[img_cursor];
+                img_cursor += 1;
+                e
+            }
+        };
+        let result = engine.search(emb);
+        out.push(Response {
+            id: req.id,
+            label: result.label,
+            winner: result.winner,
+            wall_latency: req.submitted_at.elapsed(),
+            device_latency_us: result.iterations as f64
+                * crate::device::timing::SEARCH_ITERATION_US,
+            iterations: result.iterations,
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::encoding::Encoding;
+    use crate::search::engine::EngineConfig;
+    use crate::search::SearchMode;
+    use std::time::Instant;
+
+    fn engine_with_support() -> (SearchEngine, Vec<Vec<f32>>) {
+        let embs: Vec<Vec<f32>> = (0..4)
+            .map(|c| (0..48).map(|d| ((c * 13 + d) % 7) as f32 * 0.4).collect())
+            .collect();
+        let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
+        let labels: Vec<u32> = (0..4).collect();
+        let cfg = EngineConfig::new(Encoding::Mtmc, 8, SearchMode::Avss, 3.0).ideal();
+        let mut engine = SearchEngine::new(cfg, 48, 4);
+        engine.program_support(&refs, &labels);
+        (engine, embs)
+    }
+
+    #[test]
+    fn processes_embedding_batch() {
+        let (mut engine, embs) = engine_with_support();
+        let batch: Vec<Request> = embs
+            .iter()
+            .enumerate()
+            .map(|(i, e)| Request {
+                id: i as u64,
+                payload: Payload::Embedding(e.clone()),
+                submitted_at: Instant::now(),
+            })
+            .collect();
+        let out = process_batch(&mut engine, &identity_embed(), batch);
+        assert_eq!(out.len(), 4);
+        for (i, r) in out.iter().enumerate() {
+            assert_eq!(r.label, i as u32);
+        }
+    }
+
+    #[test]
+    fn image_payloads_use_embed_fn() {
+        let (mut engine, embs) = engine_with_support();
+        // "controller" that maps a 4-float image to the i-th support emb
+        let table = embs.clone();
+        let embed: EmbedFn = Arc::new(move |images: &[f32], n: usize| {
+            let per = images.len() / n;
+            let mut out = Vec::new();
+            for i in 0..n {
+                let idx = images[i * per] as usize;
+                out.extend_from_slice(&table[idx]);
+            }
+            Ok(out)
+        });
+        let batch: Vec<Request> = (0..4)
+            .map(|i| Request {
+                id: i as u64,
+                payload: Payload::Image(vec![i as f32; 4]),
+                submitted_at: Instant::now(),
+            })
+            .collect();
+        let out = process_batch(&mut engine, &embed, batch);
+        assert_eq!(out.len(), 4);
+        for (i, r) in out.iter().enumerate() {
+            assert_eq!(r.label, i as u32, "request {i}");
+        }
+    }
+
+    #[test]
+    fn controller_failure_drops_only_images() {
+        let (mut engine, embs) = engine_with_support();
+        let batch = vec![
+            Request {
+                id: 0,
+                payload: Payload::Image(vec![0.0; 4]),
+                submitted_at: Instant::now(),
+            },
+            Request {
+                id: 1,
+                payload: Payload::Embedding(embs[1].clone()),
+                submitted_at: Instant::now(),
+            },
+        ];
+        let out = process_batch(&mut engine, &identity_embed(), batch);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].id, 1);
+    }
+}

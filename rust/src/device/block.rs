@@ -1,0 +1,305 @@
+//! A NAND-flash MCAM block: up to 128K strings × 24 MLC unit cells.
+//!
+//! Supports the two operations of the IMAS system [14]:
+//!
+//! * **program** — write 24 cell levels into a string (with program-time
+//!   variation sampled per cell), and
+//! * **search** — drive 24 word-line levels and read the resulting
+//!   series-conductance current of selected strings.
+//!
+//! The search hot path is the crate's performance-critical kernel (3M
+//! cell evaluations per iteration at full block occupancy); see
+//! EXPERIMENTS.md §Perf for the optimization log.
+
+use super::faults::FaultModel;
+use super::variation::VariationModel;
+use super::McamParams;
+use crate::testutil::Rng;
+use crate::CELLS_PER_STRING;
+
+/// One MCAM block.
+pub struct McamBlock {
+    params: McamParams,
+    variation: VariationModel,
+    faults: FaultModel,
+    capacity: usize,
+    /// Programmed cell levels, `capacity * 24`, string-major.
+    levels: Vec<u8>,
+    /// Program-time per-cell resistance variation factor, `capacity * 24`.
+    /// (Kept separate from the levels instead of expanding per-drive
+    /// resistances: 120 B/string of traffic instead of 384 B — see
+    /// EXPERIMENTS.md §Perf.)
+    var: Vec<f32>,
+    /// 4x4 match-resistance lookup `lut[q][s]` (L1-resident).
+    lut: [[f32; 4]; 4],
+    programmed: usize,
+    rng: Rng,
+}
+
+impl McamBlock {
+    pub fn new(
+        capacity: usize,
+        params: McamParams,
+        variation: VariationModel,
+        seed: u64,
+    ) -> McamBlock {
+        McamBlock {
+            lut: params.resistance_lut(),
+            params,
+            variation,
+            faults: FaultModel::NONE,
+            capacity,
+            levels: vec![0; capacity * CELLS_PER_STRING],
+            var: vec![1.0; capacity * CELLS_PER_STRING],
+            programmed: 0,
+            rng: Rng::new(seed),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn programmed(&self) -> usize {
+        self.programmed
+    }
+
+    pub fn params(&self) -> &McamParams {
+        &self.params
+    }
+
+    pub fn variation(&self) -> &VariationModel {
+        &self.variation
+    }
+
+    /// Erase the block (programmed count returns to zero; variation is
+    /// resampled on the next program, modeling a program/erase cycle).
+    pub fn erase(&mut self) {
+        self.programmed = 0;
+    }
+
+    /// Set the fault-injection model applied to subsequently programmed
+    /// strings (reliability ablations).
+    pub fn set_faults(&mut self, faults: FaultModel) {
+        self.faults = faults;
+    }
+
+    /// Program the next free string with `cells` levels. Returns the
+    /// string index.
+    pub fn program_string(&mut self, cells: &[u8; CELLS_PER_STRING]) -> usize {
+        assert!(
+            self.programmed < self.capacity,
+            "MCAM block full ({} strings)",
+            self.capacity
+        );
+        let mut cells = *cells;
+        if !self.faults.is_none() {
+            self.faults.corrupt_string(&mut cells, &mut self.rng);
+        }
+        let idx = self.programmed;
+        let base = idx * CELLS_PER_STRING;
+        for (l, &s) in cells.iter().enumerate() {
+            assert!(s <= 3, "cell level {s} out of range");
+            self.levels[base + l] = s;
+            self.var[base + l] = self.variation.cell_factor(&mut self.rng);
+        }
+        self.programmed += 1;
+        idx
+    }
+
+    /// Programmed levels of string `idx` (test/debug).
+    pub fn string_levels(&self, idx: usize) -> &[u8] {
+        let base = idx * CELLS_PER_STRING;
+        &self.levels[base..base + CELLS_PER_STRING]
+    }
+
+    /// Ideal (noise-free) current of string `idx` under `wordline`.
+    #[inline]
+    pub fn string_current_ideal(&self, idx: usize, wordline: &[u8; CELLS_PER_STRING]) -> f64 {
+        let base = idx * CELLS_PER_STRING;
+        let levels = &self.levels[base..base + CELLS_PER_STRING];
+        let var = &self.var[base..base + CELLS_PER_STRING];
+        let mut series = 0f32;
+        for l in 0..CELLS_PER_STRING {
+            let q = wordline[l];
+            debug_assert!(q <= 3);
+            series += self.lut[q as usize][levels[l] as usize] * var[l];
+        }
+        self.params.v_bl / series as f64
+    }
+
+    /// Search: drive `wordline` and sense the strings in
+    /// `[first, first + count)`, appending currents (with read noise) to
+    /// `out`.
+    pub fn search_range(
+        &mut self,
+        wordline: &[u8; CELLS_PER_STRING],
+        first: usize,
+        count: usize,
+        out: &mut Vec<f64>,
+    ) {
+        assert!(first + count <= self.programmed, "search beyond programmed region");
+        out.reserve(count);
+        let read_sigma = self.variation.read_sigma;
+        for idx in first..first + count {
+            let current = self.string_current_ideal(idx, wordline);
+            let current = if read_sigma == 0.0 {
+                current
+            } else {
+                self.variation.read_current(current, &mut self.rng)
+            };
+            out.push(current);
+        }
+    }
+
+    /// Search a strided set of strings: indices `first + k * stride` for
+    /// `k in [0, count)` — the SVSS access pattern (one column of every
+    /// support vector's string group).
+    pub fn search_strided(
+        &mut self,
+        wordline: &[u8; CELLS_PER_STRING],
+        first: usize,
+        stride: usize,
+        count: usize,
+        out: &mut Vec<f64>,
+    ) {
+        out.reserve(count);
+        for k in 0..count {
+            let idx = first + k * stride;
+            assert!(idx < self.programmed, "strided search beyond programmed region");
+            let current = self.string_current_ideal(idx, wordline);
+            let current = if self.variation.read_sigma == 0.0 {
+                current
+            } else {
+                self.variation.read_current(current, &mut self.rng)
+            };
+            out.push(current);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::assert_close;
+
+    fn ideal_block(capacity: usize) -> McamBlock {
+        McamBlock::new(capacity, McamParams::default(), VariationModel::IDEAL, 7)
+    }
+
+    #[test]
+    fn perfect_match_draws_i_max() {
+        let mut block = ideal_block(4);
+        let cells = [2u8; CELLS_PER_STRING];
+        let idx = block.program_string(&cells);
+        let i = block.string_current_ideal(idx, &cells);
+        assert_close(i, block.params().i_max(), 1e-9);
+    }
+
+    #[test]
+    fn current_matches_series_formula() {
+        let mut block = ideal_block(4);
+        let mut cells = [0u8; CELLS_PER_STRING];
+        cells[0] = 3;
+        cells[1] = 1;
+        let idx = block.program_string(&cells);
+        let wordline = [0u8; CELLS_PER_STRING];
+        let p = McamParams::default();
+        let series = 22.0 * p.resistance(0) + p.resistance(3) + p.resistance(1);
+        assert_close(
+            block.string_current_ideal(idx, &wordline),
+            p.v_bl / series,
+            1e-9,
+        );
+    }
+
+    #[test]
+    fn bottleneck_ordering() {
+        // Same total mismatch (6): max-3 string draws less than max-1.
+        let mut block = ideal_block(4);
+        let mut worst = [0u8; CELLS_PER_STRING];
+        worst[0] = 3;
+        worst[1] = 3;
+        let mut best = [0u8; CELLS_PER_STRING];
+        for c in best.iter_mut().take(6) {
+            *c = 1;
+        }
+        let a = block.program_string(&worst);
+        let b = block.program_string(&best);
+        let wl = [0u8; CELLS_PER_STRING];
+        assert!(block.string_current_ideal(a, &wl) < block.string_current_ideal(b, &wl));
+    }
+
+    #[test]
+    fn search_range_collects_all() {
+        let mut block = ideal_block(8);
+        for v in 0..8u8 {
+            block.program_string(&[v % 4; CELLS_PER_STRING]);
+        }
+        let mut out = Vec::new();
+        block.search_range(&[0; CELLS_PER_STRING], 0, 8, &mut out);
+        assert_eq!(out.len(), 8);
+        // levels 0 and 4%4=0 strings draw the max current
+        assert_close(out[0], 1.0, 1e-9);
+        assert!(out[3] < out[2] && out[2] < out[1] && out[1] < out[0]);
+    }
+
+    #[test]
+    fn search_strided_picks_columns() {
+        let mut block = ideal_block(8);
+        for v in 0..8u8 {
+            block.program_string(&[v % 4; CELLS_PER_STRING]);
+        }
+        let mut strided = Vec::new();
+        block.search_strided(&[0; CELLS_PER_STRING], 1, 4, 2, &mut strided);
+        let mut direct = Vec::new();
+        block.search_range(&[0; CELLS_PER_STRING], 1, 1, &mut direct);
+        block.search_range(&[0; CELLS_PER_STRING], 5, 1, &mut direct);
+        assert_eq!(strided, direct);
+    }
+
+    #[test]
+    #[should_panic(expected = "full")]
+    fn program_beyond_capacity_panics() {
+        let mut block = ideal_block(1);
+        block.program_string(&[0; CELLS_PER_STRING]);
+        block.program_string(&[0; CELLS_PER_STRING]);
+    }
+
+    #[test]
+    #[should_panic(expected = "beyond programmed")]
+    fn search_unprogrammed_panics() {
+        let mut block = ideal_block(4);
+        let mut out = Vec::new();
+        block.search_range(&[0; CELLS_PER_STRING], 0, 1, &mut out);
+    }
+
+    #[test]
+    fn erase_resets() {
+        let mut block = ideal_block(2);
+        block.program_string(&[1; CELLS_PER_STRING]);
+        assert_eq!(block.programmed(), 1);
+        block.erase();
+        assert_eq!(block.programmed(), 0);
+        block.program_string(&[2; CELLS_PER_STRING]);
+        assert_eq!(block.programmed(), 1);
+    }
+
+    #[test]
+    fn variation_perturbs_currents() {
+        let mut block = McamBlock::new(
+            16,
+            McamParams::default(),
+            VariationModel { program_sigma: 0.2, read_sigma: 0.0 },
+            9,
+        );
+        let cells = [1u8; CELLS_PER_STRING];
+        for _ in 0..16 {
+            block.program_string(&cells);
+        }
+        let mut out = Vec::new();
+        block.search_range(&[1; CELLS_PER_STRING], 0, 16, &mut out);
+        let mean = out.iter().sum::<f64>() / out.len() as f64;
+        assert!(out.iter().any(|&c| (c - mean).abs() > 1e-6), "no spread");
+    }
+}

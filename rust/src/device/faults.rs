@@ -1,0 +1,109 @@
+//! Failure injection: NAND reliability effects beyond Gaussian variation
+//! (§2.3's "non-ideal effects", extended per [16, 17] — retention loss,
+//! stuck cells, read disturb). Used by the ablation experiments to probe
+//! how far each encoding's reliability margin stretches.
+
+use crate::testutil::Rng;
+use crate::CELLS_PER_STRING;
+
+/// A fault model applied to programmed cell levels at read time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultModel {
+    /// Probability a cell is stuck at level 0 (erase-state defect).
+    pub stuck_low: f64,
+    /// Probability a cell is stuck at level 3 (program-state defect).
+    pub stuck_high: f64,
+    /// Probability a cell drifts one level toward 0 (retention loss).
+    pub retention_drift: f64,
+}
+
+impl FaultModel {
+    pub const NONE: FaultModel =
+        FaultModel { stuck_low: 0.0, stuck_high: 0.0, retention_drift: 0.0 };
+
+    /// Mild end-of-life profile.
+    pub fn worn() -> FaultModel {
+        FaultModel { stuck_low: 0.002, stuck_high: 0.002, retention_drift: 0.02 }
+    }
+
+    pub fn is_none(&self) -> bool {
+        *self == Self::NONE
+    }
+
+    /// Apply the model to a string's programmed levels (in place).
+    /// Returns the number of corrupted cells.
+    pub fn corrupt_string(&self, cells: &mut [u8; CELLS_PER_STRING], rng: &mut Rng) -> usize {
+        if self.is_none() {
+            return 0;
+        }
+        let mut corrupted = 0;
+        for cell in cells.iter_mut() {
+            let u = rng.next_f64();
+            if u < self.stuck_low {
+                if *cell != 0 {
+                    corrupted += 1;
+                }
+                *cell = 0;
+            } else if u < self.stuck_low + self.stuck_high {
+                if *cell != 3 {
+                    corrupted += 1;
+                }
+                *cell = 3;
+            } else if u < self.stuck_low + self.stuck_high + self.retention_drift && *cell > 0 {
+                *cell -= 1;
+                corrupted += 1;
+            }
+        }
+        corrupted
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_is_identity() {
+        let mut rng = Rng::new(1);
+        let mut cells = [2u8; CELLS_PER_STRING];
+        assert_eq!(FaultModel::NONE.corrupt_string(&mut cells, &mut rng), 0);
+        assert_eq!(cells, [2u8; CELLS_PER_STRING]);
+    }
+
+    #[test]
+    fn stuck_low_zeroes_cells() {
+        let model = FaultModel { stuck_low: 1.0, stuck_high: 0.0, retention_drift: 0.0 };
+        let mut rng = Rng::new(2);
+        let mut cells = [3u8; CELLS_PER_STRING];
+        let n = model.corrupt_string(&mut cells, &mut rng);
+        assert_eq!(n, CELLS_PER_STRING);
+        assert_eq!(cells, [0u8; CELLS_PER_STRING]);
+    }
+
+    #[test]
+    fn retention_drifts_one_level_down() {
+        let model = FaultModel { stuck_low: 0.0, stuck_high: 0.0, retention_drift: 1.0 };
+        let mut rng = Rng::new(3);
+        let mut cells = [2u8; CELLS_PER_STRING];
+        model.corrupt_string(&mut cells, &mut rng);
+        assert_eq!(cells, [1u8; CELLS_PER_STRING]);
+        // level-0 cells cannot drift below 0
+        let mut zeros = [0u8; CELLS_PER_STRING];
+        assert_eq!(model.corrupt_string(&mut zeros, &mut rng), 0);
+        assert_eq!(zeros, [0u8; CELLS_PER_STRING]);
+    }
+
+    #[test]
+    fn corruption_rate_tracks_probability() {
+        let model = FaultModel { stuck_low: 0.05, stuck_high: 0.0, retention_drift: 0.0 };
+        let mut rng = Rng::new(4);
+        let mut total = 0usize;
+        let trials = 2000;
+        for _ in 0..trials {
+            let mut cells = [1u8; CELLS_PER_STRING];
+            total += model.corrupt_string(&mut cells, &mut rng);
+        }
+        let rate = total as f64 / (trials * CELLS_PER_STRING) as f64;
+        assert!((rate - 0.05).abs() < 0.01, "rate {rate}");
+    }
+}

@@ -1,0 +1,106 @@
+//! Cycle-level simulator of the 3D NAND-flash MCAM of [14].
+//!
+//! The paper's evaluation runs on measured silicon; this module is the
+//! documented substitution (DESIGN.md §2): a behavioural device model
+//! exposing exactly the knobs the paper's claims depend on — string
+//! current as a function of (total mismatch, max mismatch), per-cell
+//! device variation, sense-amplifier thresholding with a voting scheme,
+//! and search timing.
+//!
+//! * [`McamParams`] — electrical constants of the series-conductance
+//!   string model (shared with the L1 Pallas kernel).
+//! * [`block::McamBlock`] — a 128K-string block: program / word-line
+//!   search operations over the flat cell array.
+//! * [`variation::VariationModel`] — program-time lognormal cell
+//!   variation + per-read current noise.
+//! * [`sense::SenseLadder`] — multi-threshold SA sensing and voting.
+//! * [`timing::SearchTiming`] — per-iteration latency (Table 2's
+//!   throughput arithmetic).
+
+pub mod block;
+pub mod faults;
+pub mod sense;
+pub mod timing;
+pub mod variation;
+
+use crate::CELLS_PER_STRING;
+
+/// Electrical constants of the string-current model. Defaults match the
+/// python side (`McamParams` in `kernels/mcam_search.py`): a unit cell at
+/// mismatch `m` contributes resistance `r0 * alpha^m`; the string current
+/// is `v_bl / Σ r_i`, which yields both the total-mismatch dependence and
+/// the bottleneck effect of Figs. 2(b)/(c).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct McamParams {
+    pub r0: f64,
+    pub alpha: f64,
+    pub v_bl: f64,
+}
+
+impl Default for McamParams {
+    fn default() -> Self {
+        McamParams { r0: 1.0, alpha: 6.0, v_bl: 24.0 }
+    }
+}
+
+impl McamParams {
+    /// Resistance of a unit cell at mismatch level `m`.
+    pub fn resistance(&self, mismatch: u8) -> f64 {
+        debug_assert!(mismatch <= 3);
+        self.r0 * self.alpha.powi(mismatch as i32)
+    }
+
+    /// Current of an all-match string (the feasible maximum).
+    pub fn i_max(&self) -> f64 {
+        self.v_bl / (CELLS_PER_STRING as f64 * self.r0)
+    }
+
+    /// Current of an all-mismatch-3 string (the feasible minimum).
+    pub fn i_min(&self) -> f64 {
+        self.v_bl / (CELLS_PER_STRING as f64 * self.r0 * self.alpha.powi(3))
+    }
+
+    /// 4×4 lookup `resistance(|q - s|)` for the search hot path.
+    pub fn resistance_lut(&self) -> [[f32; 4]; 4] {
+        let mut lut = [[0f32; 4]; 4];
+        for (q, row) in lut.iter_mut().enumerate() {
+            for (s, r) in row.iter_mut().enumerate() {
+                *r = self.resistance((q as i32 - s as i32).unsigned_abs() as u8) as f32;
+            }
+        }
+        lut
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::assert_close;
+
+    #[test]
+    fn default_current_bounds() {
+        let p = McamParams::default();
+        assert_close(p.i_max(), 1.0, 1e-12);
+        assert_close(p.i_min(), 1.0 / 216.0, 1e-12);
+    }
+
+    #[test]
+    fn resistance_monotone() {
+        let p = McamParams::default();
+        for m in 0..3u8 {
+            assert!(p.resistance(m) < p.resistance(m + 1));
+        }
+    }
+
+    #[test]
+    fn lut_matches_direct() {
+        let p = McamParams { r0: 0.5, alpha: 4.0, v_bl: 10.0 };
+        let lut = p.resistance_lut();
+        for q in 0..4usize {
+            for s in 0..4usize {
+                let m = (q as i32 - s as i32).unsigned_abs() as u8;
+                assert_close(lut[q][s] as f64, p.resistance(m), 1e-6);
+            }
+        }
+    }
+}

@@ -1,0 +1,152 @@
+//! Sense amplifier + voting scheme (§2.2 of the paper).
+//!
+//! Instead of measuring exact analog currents, the IMAS system senses each
+//! string against a ladder of current thresholds; the number of thresholds
+//! a string clears is its *vote count* for that iteration. Votes
+//! accumulate across iterations (weighted per Eq. 2 for B4E) and the
+//! support vector with the most votes wins.
+//!
+//! The ladder is log-spaced across the feasible current range
+//! `[i_min, i_max]` with midpoints `(t + 0.5) / T` — identical to
+//! `sa_thresholds` in `python/compile/mcam_sim.py`.
+
+use super::McamParams;
+
+/// A descending-capability SA threshold ladder.
+#[derive(Debug, Clone)]
+pub struct SenseLadder {
+    thresholds: Vec<f64>,
+}
+
+impl SenseLadder {
+    /// Build a `n`-threshold log-spaced ladder for `params`.
+    pub fn new(params: &McamParams, n: usize) -> SenseLadder {
+        assert!(n >= 1, "ladder needs at least one threshold");
+        let lo = params.i_min().ln();
+        let hi = params.i_max().ln();
+        let thresholds = (0..n)
+            .map(|t| {
+                let frac = (t as f64 + 0.5) / n as f64;
+                (lo + (hi - lo) * frac).exp()
+            })
+            .collect();
+        SenseLadder { thresholds }
+    }
+
+    pub fn len(&self) -> usize {
+        self.thresholds.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.thresholds.is_empty()
+    }
+
+    pub fn thresholds(&self) -> &[f64] {
+        &self.thresholds
+    }
+
+    /// Vote count of a sensed current: thresholds strictly below it.
+    pub fn votes(&self, current: f64) -> u32 {
+        // The ladder is sorted ascending → binary search would work, but
+        // with <= 32 thresholds a linear scan is faster and branch-
+        // predictable; see EXPERIMENTS.md §Perf.
+        let mut votes = 0;
+        for &t in &self.thresholds {
+            if current > t {
+                votes += 1;
+            } else {
+                break;
+            }
+        }
+        votes
+    }
+
+    /// Votes for a batch of currents (hot-path helper).
+    pub fn votes_batch(&self, currents: &[f64], out: &mut Vec<u32>) {
+        out.reserve(currents.len());
+        for &c in currents {
+            out.push(self.votes(c));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::forall;
+
+    fn ladder(n: usize) -> SenseLadder {
+        SenseLadder::new(&McamParams::default(), n)
+    }
+
+    #[test]
+    fn ladder_is_sorted_and_in_range() {
+        let p = McamParams::default();
+        let l = ladder(16);
+        assert_eq!(l.len(), 16);
+        for w in l.thresholds().windows(2) {
+            assert!(w[0] < w[1]);
+        }
+        assert!(l.thresholds()[0] > p.i_min());
+        assert!(l.thresholds()[15] < p.i_max());
+    }
+
+    #[test]
+    fn votes_monotone_in_current() {
+        let l = ladder(16);
+        let p = McamParams::default();
+        let mut last = 0;
+        let mut c = p.i_min();
+        while c < p.i_max() {
+            let v = l.votes(c);
+            assert!(v >= last);
+            last = v;
+            c *= 1.2;
+        }
+    }
+
+    #[test]
+    fn extremes() {
+        let l = ladder(16);
+        let p = McamParams::default();
+        assert_eq!(l.votes(p.i_min()), 0);
+        assert_eq!(l.votes(p.i_max()), 16);
+        assert_eq!(l.votes(0.0), 0);
+    }
+
+    #[test]
+    fn matches_python_formula() {
+        // thr_t = exp(lo + (hi - lo) * (t + 0.5) / T)
+        let p = McamParams::default();
+        let l = ladder(8);
+        let (lo, hi) = (p.i_min().ln(), p.i_max().ln());
+        for (t, &thr) in l.thresholds().iter().enumerate() {
+            let want = (lo + (hi - lo) * (t as f64 + 0.5) / 8.0).exp();
+            assert!((thr - want).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn votes_equal_linear_count() {
+        let l = ladder(16);
+        forall(
+            "votes == #thresholds below",
+            256,
+            |rng| rng.range_f64(0.0, 1.2),
+            |&c| {
+                let direct = l.thresholds().iter().filter(|&&t| c > t).count() as u32;
+                l.votes(c) == direct
+            },
+        );
+    }
+
+    #[test]
+    fn batch_matches_scalar() {
+        let l = ladder(12);
+        let currents = [0.001, 0.01, 0.1, 0.5, 1.0];
+        let mut out = Vec::new();
+        l.votes_batch(&currents, &mut out);
+        let scalar: Vec<u32> = currents.iter().map(|&c| l.votes(c)).collect();
+        assert_eq!(out, scalar);
+    }
+}

@@ -1,0 +1,58 @@
+//! Search timing model behind Table 2's throughput column.
+//!
+//! A single constant — 50 µs per search iteration — reproduces all four
+//! of the paper's throughput entries exactly (DESIGN.md §2):
+//!
+//! | dataset  | mode | iterations | 1 / (it × 50 µs) | paper      |
+//! |----------|------|-----------:|-----------------:|-----------:|
+//! | Omniglot | SVSS |         64 |        312.5 s⁻¹ | 312.5 s⁻¹  |
+//! | Omniglot | AVSS |          2 |       10 000 s⁻¹ | 10 000 s⁻¹ |
+//! | CUB      | SVSS |        500 |           40 s⁻¹ | 40 s⁻¹     |
+//! | CUB      | AVSS |         20 |        1 000 s⁻¹ | 1 000 s⁻¹  |
+
+/// Microseconds per MCAM search iteration (word-line setup + sensing).
+pub const SEARCH_ITERATION_US: f64 = 50.0;
+
+/// Timing accounting for one or more searches.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct SearchTiming {
+    pub iterations: u64,
+}
+
+impl SearchTiming {
+    pub fn add_iterations(&mut self, n: u64) {
+        self.iterations += n;
+    }
+
+    /// Simulated latency of the accumulated iterations, in microseconds.
+    pub fn latency_us(&self) -> f64 {
+        self.iterations as f64 * SEARCH_ITERATION_US
+    }
+
+    /// Searches per second at `iterations_per_search`.
+    pub fn throughput_per_s(iterations_per_search: u64) -> f64 {
+        1e6 / (iterations_per_search as f64 * SEARCH_ITERATION_US)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::assert_close;
+
+    #[test]
+    fn reproduces_table2_throughputs() {
+        assert_close(SearchTiming::throughput_per_s(64), 312.5, 1e-12);
+        assert_close(SearchTiming::throughput_per_s(2), 10_000.0, 1e-12);
+        assert_close(SearchTiming::throughput_per_s(500), 40.0, 1e-12);
+        assert_close(SearchTiming::throughput_per_s(20), 1_000.0, 1e-12);
+    }
+
+    #[test]
+    fn latency_accumulates() {
+        let mut t = SearchTiming::default();
+        t.add_iterations(2);
+        t.add_iterations(3);
+        assert_close(t.latency_us(), 250.0, 1e-12);
+    }
+}

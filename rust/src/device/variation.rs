@@ -1,0 +1,83 @@
+//! Device non-idealities (§2.2 / Fig. 2(b) of the paper): threshold-voltage
+//! spread from fabrication + program operations, modeled as a lognormal
+//! multiplicative factor on each cell's resistance (fixed at program
+//! time), plus optional per-read current noise (sensing noise).
+
+use crate::testutil::Rng;
+
+/// Variation knobs. `sigma = 0` disables a component entirely, making the
+/// device bit-exact against the python reference (cross-layer testvecs).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct VariationModel {
+    /// Lognormal sigma of the per-cell resistance factor (program-time).
+    pub program_sigma: f64,
+    /// Lognormal sigma applied to the string current at each read.
+    pub read_sigma: f64,
+}
+
+impl VariationModel {
+    pub const IDEAL: VariationModel = VariationModel { program_sigma: 0.0, read_sigma: 0.0 };
+
+    /// Default calibrated so the ideal-vs-noisy accuracy gap lands in the
+    /// few-percent range the paper reports (>3.67% loss on Omniglot).
+    pub fn nand_default() -> VariationModel {
+        VariationModel { program_sigma: 0.15, read_sigma: 0.05 }
+    }
+
+    pub fn is_ideal(&self) -> bool {
+        self.program_sigma == 0.0 && self.read_sigma == 0.0
+    }
+
+    /// Sample a program-time resistance factor for one cell.
+    pub fn cell_factor(&self, rng: &mut Rng) -> f32 {
+        if self.program_sigma == 0.0 {
+            1.0
+        } else {
+            (self.program_sigma * rng.gaussian()).exp() as f32
+        }
+    }
+
+    /// Apply read noise to a sensed current.
+    pub fn read_current(&self, current: f64, rng: &mut Rng) -> f64 {
+        if self.read_sigma == 0.0 {
+            current
+        } else {
+            current * (self.read_sigma * rng.gaussian()).exp()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ideal_is_identity() {
+        let mut rng = Rng::new(1);
+        assert_eq!(VariationModel::IDEAL.cell_factor(&mut rng), 1.0);
+        assert_eq!(VariationModel::IDEAL.read_current(0.5, &mut rng), 0.5);
+        assert!(VariationModel::IDEAL.is_ideal());
+    }
+
+    #[test]
+    fn lognormal_factor_statistics() {
+        let v = VariationModel { program_sigma: 0.2, read_sigma: 0.0 };
+        let mut rng = Rng::new(2);
+        let n = 20_000;
+        let lns: Vec<f64> = (0..n).map(|_| (v.cell_factor(&mut rng) as f64).ln()).collect();
+        let mean = lns.iter().sum::<f64>() / n as f64;
+        let var = lns.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.01, "ln-mean {mean}");
+        assert!((var.sqrt() - 0.2).abs() < 0.01, "ln-sigma {}", var.sqrt());
+    }
+
+    #[test]
+    fn read_noise_perturbs() {
+        let v = VariationModel::nand_default();
+        let mut rng = Rng::new(3);
+        let a = v.read_current(0.5, &mut rng);
+        let b = v.read_current(0.5, &mut rng);
+        assert_ne!(a, b);
+        assert!(a > 0.0 && b > 0.0);
+    }
+}

@@ -1,0 +1,175 @@
+//! Mismatch-level analytics behind Figs. 3 and 5 of the paper.
+//!
+//! Two analyses:
+//!
+//! * [`mismatch_type_distribution`] — fraction of code-word positions at
+//!   each mismatch level (0..=3) over a set of value pairs (Figs. 3(a),
+//!   5(a): target vs non-target query/support pairs at various CL).
+//! * [`max_mismatch_by_distance`] — for every value pair `(a, b)` of a
+//!   quantization grid, the probability that the *maximum* word mismatch
+//!   equals each level, bucketed by `|a - b|` (Figs. 3(b), 5(b)).
+
+use super::Encoding;
+
+/// Counts of code-word positions at mismatch level 0, 1, 2, 3.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MismatchHistogram {
+    pub counts: [u64; 4],
+}
+
+impl MismatchHistogram {
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Fractions at each level (0 when empty).
+    pub fn fractions(&self) -> [f64; 4] {
+        let total = self.total().max(1) as f64;
+        [
+            self.counts[0] as f64 / total,
+            self.counts[1] as f64 / total,
+            self.counts[2] as f64 / total,
+            self.counts[3] as f64 / total,
+        ]
+    }
+
+    pub fn accumulate_pair(&mut self, enc: Encoding, cl: usize, a: u32, b: u32) {
+        let wa = enc.encode(a, cl);
+        let wb = enc.encode(b, cl);
+        for (&x, &y) in wa.iter().zip(&wb) {
+            self.counts[(x as i32 - y as i32).unsigned_abs() as usize] += 1;
+        }
+    }
+}
+
+/// Per-code-word mismatch-type distribution over a list of value pairs.
+pub fn mismatch_type_distribution(
+    enc: Encoding,
+    cl: usize,
+    pairs: &[(u32, u32)],
+) -> MismatchHistogram {
+    let mut hist = MismatchHistogram::default();
+    for &(a, b) in pairs {
+        hist.accumulate_pair(enc, cl, a, b);
+    }
+    hist
+}
+
+/// One row of the Fig. 3(b)/5(b) table: at value distance `distance`, the
+/// probability that the maximum word mismatch of a pair equals 0..=3.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MaxMismatchRow {
+    pub distance: u32,
+    pub prob: [f64; 4],
+    pub pairs: u64,
+}
+
+/// Sweep **all** value pairs `(a, b)` in `[0, levels)` for `enc` at `cl`,
+/// bucketing the max word mismatch by `|a - b|`.
+pub fn max_mismatch_by_distance(enc: Encoding, cl: usize) -> Vec<MaxMismatchRow> {
+    let levels = enc.levels(cl) as u32;
+    let max_distance = (levels - 1) as usize;
+    let mut counts = vec![[0u64; 4]; max_distance + 1];
+    let mut totals = vec![0u64; max_distance + 1];
+
+    // Cache every encoding once; the pair sweep is O(levels^2 * words).
+    let encoded: Vec<Vec<u8>> = (0..levels).map(|v| enc.encode(v, cl)).collect();
+    for a in 0..levels as usize {
+        for b in 0..levels as usize {
+            let mx = encoded[a]
+                .iter()
+                .zip(&encoded[b])
+                .map(|(&x, &y)| (x as i32 - y as i32).unsigned_abs())
+                .max()
+                .unwrap_or(0) as usize;
+            let d = a.abs_diff(b);
+            counts[d][mx] += 1;
+            totals[d] += 1;
+        }
+    }
+
+    (0..=max_distance)
+        .map(|d| {
+            let total = totals[d].max(1) as f64;
+            MaxMismatchRow {
+                distance: d as u32,
+                prob: [
+                    counts[d][0] as f64 / total,
+                    counts[d][1] as f64 / total,
+                    counts[d][2] as f64 / total,
+                    counts[d][3] as f64 / total,
+                ],
+                pairs: totals[d],
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_fractions_sum_to_one() {
+        let pairs: Vec<(u32, u32)> = (0..16).map(|a| (a, (a + 3) % 16)).collect();
+        let hist = mismatch_type_distribution(Encoding::Mtmc, 5, &pairs);
+        let sum: f64 = hist.fractions().iter().sum();
+        assert!((sum - 1.0).abs() < 1e-12);
+        assert_eq!(hist.total(), 16 * 5);
+    }
+
+    #[test]
+    fn mtmc_near_pairs_never_mismatch3() {
+        // Fig. 5(b): |a-b| < CL implies max mismatch <= 1.
+        let rows = max_mismatch_by_distance(Encoding::Mtmc, 5);
+        for row in &rows {
+            if (row.distance as usize) < 5 {
+                assert_eq!(row.prob[2], 0.0, "distance {}", row.distance);
+                assert_eq!(row.prob[3], 0.0, "distance {}", row.distance);
+            }
+        }
+    }
+
+    #[test]
+    fn b4e_small_distance_can_mismatch3() {
+        // Fig. 3(b): B4E shows mismatch-3 even at distance 1 (3 vs 4).
+        let rows = max_mismatch_by_distance(Encoding::B4e, 3);
+        assert!(rows[1].prob[3] > 0.0);
+    }
+
+    #[test]
+    fn distance_zero_is_all_mismatch0() {
+        for enc in super::super::ALL_ENCODINGS {
+            let rows = max_mismatch_by_distance(enc, 2);
+            assert_eq!(rows[0].prob[0], 1.0, "{enc:?}");
+        }
+    }
+
+    #[test]
+    fn probabilities_sum_to_one() {
+        for enc in [Encoding::B4e, Encoding::Mtmc] {
+            for row in max_mismatch_by_distance(enc, 3) {
+                if row.pairs > 0 {
+                    let s: f64 = row.prob.iter().sum();
+                    assert!((s - 1.0).abs() < 1e-12);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn b4e_mismatch3_fraction_grows_with_cl() {
+        // Fig. 3(a)'s trend: longer B4E code words → more mismatch-3 mass
+        // (uniform random pairs stand in for the embedding pairs here;
+        // the artifact-driven version lives in experiments::fig3_5).
+        let mut rng = crate::testutil::Rng::new(0xF16);
+        let mut frac3 = |cl: usize| {
+            let levels = Encoding::B4e.levels(cl);
+            let pairs: Vec<(u32, u32)> = (0..4000)
+                .map(|_| (rng.below(levels) as u32, rng.below(levels) as u32))
+                .collect();
+            mismatch_type_distribution(Encoding::B4e, cl, &pairs).fractions()[3]
+        };
+        assert!(frac3(4) > frac3(1) * 0.9, "mismatch-3 mass should not shrink");
+    }
+}

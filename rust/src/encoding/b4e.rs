@@ -1,0 +1,65 @@
+//! Base-4 encoding (B4E) [18]: bit slicing into base-4 digits, least
+//! significant digit first (matching `python/compile/encodings.py`).
+//! Precision scales as `4^cl` but small value distances can produce
+//! mismatch-3 words (e.g. 4 = `10` vs 3 = `03`), the bottleneck pathology
+//! Fig. 3(b) of the paper quantifies.
+
+/// Append the `cl` base-4 digits of `value`, LSB first.
+pub fn encode_b4e(value: u32, cl: usize, out: &mut Vec<u8>) {
+    let mut v = value;
+    for _ in 0..cl {
+        out.push((v % 4) as u8);
+        v /= 4;
+    }
+    assert!(v == 0, "B4E value {value} needs more than {cl} digits");
+}
+
+/// Inverse of [`encode_b4e`].
+pub fn decode_b4e(words: &[u8]) -> u32 {
+    let mut value = 0u32;
+    for (i, &w) in words.iter().enumerate() {
+        value += (w as u32) << (2 * i);
+    }
+    value
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::forall;
+
+    #[test]
+    fn table1_rows() {
+        // Paper Table 1 (CL=2, printed MSB-first there): 7 -> "13".
+        let mut out = Vec::new();
+        encode_b4e(7, 2, &mut out);
+        assert_eq!(out, vec![3, 1]); // LSB first
+        out.clear();
+        encode_b4e(12, 2, &mut out);
+        assert_eq!(out, vec![0, 3]); // "30"
+    }
+
+    #[test]
+    fn roundtrip() {
+        forall(
+            "b4e roundtrip",
+            128,
+            |rng| {
+                let cl = 1 + rng.below(9);
+                let value = rng.below(4usize.pow(cl as u32)) as u32;
+                (cl, value)
+            },
+            |&(cl, value)| {
+                let mut out = Vec::new();
+                encode_b4e(value, cl, &mut out);
+                decode_b4e(&out) == value
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "needs more")]
+    fn rejects_overflow() {
+        encode_b4e(16, 2, &mut Vec::new());
+    }
+}

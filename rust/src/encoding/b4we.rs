@@ -1,0 +1,54 @@
+//! Base-4 *weighted* encoding (B4WE) [19]: B4E digits with digit *i*
+//! physically duplicated `4^i` times, so unweighted vote accumulation
+//! realises the base-4 digit weighting while the duplication adds SRE-like
+//! robustness. Word length `(4^cl - 1) / 3` — 1, 5, 21 for base lengths
+//! 1, 2, 3 (the Fig. 9 data points).
+
+use super::b4e::encode_b4e;
+
+/// Physical word count for `base_cl` base-4 digits.
+pub fn b4we_word_length(base_cl: usize) -> usize {
+    assert!(base_cl >= 1);
+    (4usize.pow(base_cl as u32) - 1) / 3
+}
+
+/// Append the B4WE code words for `value` (digit *i* repeated `4^i`
+/// times, LSB first).
+pub fn encode_b4we(value: u32, base_cl: usize, out: &mut Vec<u8>) {
+    let mut digits = Vec::with_capacity(base_cl);
+    encode_b4e(value, base_cl, &mut digits);
+    for (i, &d) in digits.iter().enumerate() {
+        for _ in 0..4usize.pow(i as u32) {
+            out.push(d);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn word_lengths_match_fig9() {
+        assert_eq!(b4we_word_length(1), 1);
+        assert_eq!(b4we_word_length(2), 5);
+        assert_eq!(b4we_word_length(3), 21);
+    }
+
+    #[test]
+    fn duplication_counts() {
+        // 7 = digits (3, 1): digit0 x1, digit1 x4.
+        let mut out = Vec::new();
+        encode_b4we(7, 2, &mut out);
+        assert_eq!(out, vec![3, 1, 1, 1, 1]);
+    }
+
+    #[test]
+    fn length_matches_formula() {
+        for base_cl in 1..=3 {
+            let mut out = Vec::new();
+            encode_b4we(1, base_cl, &mut out);
+            assert_eq!(out.len(), b4we_word_length(base_cl));
+        }
+    }
+}

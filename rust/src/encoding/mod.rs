@@ -1,0 +1,193 @@
+//! Code-word encodings for the MCAM (mirror of `python/compile/encodings.py`).
+//!
+//! Every encoder maps integer-quantized values in `[0, levels)` to 4-ary
+//! code words in `{0,1,2,3}`, one per MLC unit cell. The four schemes the
+//! paper evaluates:
+//!
+//! * [`Encoding::Sre`]  — simple repetition encoding [11],
+//! * [`Encoding::B4e`]  — base-4 bit slicing [18] (digit *i* weighted
+//!   `4^i` in the Eq.-2 accumulation),
+//! * [`Encoding::B4we`] — base-4 weighted encoding [19] (digit *i*
+//!   duplicated `4^i` times),
+//! * [`Encoding::Mtmc`] — the paper's multi-bit thermometer code, which
+//!   preserves L1 distance exactly and bounds the per-word mismatch for
+//!   nearby values (§3.1).
+//!
+//! Python/rust equivalence is proven by the shared test vectors under
+//! `artifacts/testvec/` (see `rust/tests/test_crosslayer.rs`).
+
+mod b4e;
+mod b4we;
+mod mtmc;
+mod sre;
+
+pub mod analysis;
+
+pub use b4e::{decode_b4e, encode_b4e};
+pub use b4we::{b4we_word_length, encode_b4we};
+pub use mtmc::{decode_mtmc, encode_mtmc};
+pub use sre::encode_sre;
+
+/// The four code-word encoding schemes of the paper's evaluation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Encoding {
+    Sre,
+    B4e,
+    B4we,
+    Mtmc,
+}
+
+pub const ALL_ENCODINGS: [Encoding; 4] =
+    [Encoding::Sre, Encoding::B4e, Encoding::B4we, Encoding::Mtmc];
+
+impl Encoding {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Encoding::Sre => "sre",
+            Encoding::B4e => "b4e",
+            Encoding::B4we => "b4we",
+            Encoding::Mtmc => "mtmc",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<Encoding> {
+        match name {
+            "sre" => Some(Encoding::Sre),
+            "b4e" => Some(Encoding::B4e),
+            "b4we" => Some(Encoding::B4we),
+            "mtmc" => Some(Encoding::Mtmc),
+            _ => None,
+        }
+    }
+
+    /// Quantization levels afforded at code word length `cl` (for B4WE,
+    /// `cl` is the *base* digit count; the physical length is larger).
+    pub fn levels(&self, cl: usize) -> usize {
+        assert!(cl >= 1, "code word length must be >= 1");
+        match self {
+            Encoding::Sre => 4,
+            Encoding::B4e | Encoding::B4we => {
+                4usize.checked_pow(cl as u32).expect("levels overflow")
+            }
+            Encoding::Mtmc => 3 * cl + 1,
+        }
+    }
+
+    /// Physical code words stored per dimension.
+    pub fn word_length(&self, cl: usize) -> usize {
+        assert!(cl >= 1, "code word length must be >= 1");
+        match self {
+            Encoding::Sre | Encoding::B4e | Encoding::Mtmc => cl,
+            Encoding::B4we => b4we_word_length(cl),
+        }
+    }
+
+    /// Encode one value into its code words (appended to `out`).
+    pub fn encode_into(&self, value: u32, cl: usize, out: &mut Vec<u8>) {
+        debug_assert!(
+            (value as usize) < self.levels(cl),
+            "value {value} out of range for {self:?} cl={cl}"
+        );
+        match self {
+            Encoding::Sre => encode_sre(value, cl, out),
+            Encoding::B4e => encode_b4e(value, cl, out),
+            Encoding::B4we => encode_b4we(value, cl, out),
+            Encoding::Mtmc => encode_mtmc(value, cl, out),
+        }
+    }
+
+    /// Encode one value, returning a fresh vec (convenience for tests).
+    pub fn encode(&self, value: u32, cl: usize) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.word_length(cl));
+        self.encode_into(value, cl, &mut out);
+        out
+    }
+
+    /// Encode a whole vector: `values.len() * word_length(cl)` words,
+    /// dimension-major.
+    pub fn encode_vector(&self, values: &[u32], cl: usize) -> Vec<u8> {
+        let mut out = Vec::with_capacity(values.len() * self.word_length(cl));
+        for &v in values {
+            self.encode_into(v, cl, &mut out);
+        }
+        out
+    }
+
+    /// Per-code-word accumulation weights `s_i` (paper Eq. 2): B4E weights
+    /// digit *i* by `4^i`, all other schemes are uniform (B4WE realises
+    /// the weighting through duplication).
+    pub fn accumulation_weights(&self, cl: usize) -> Vec<f64> {
+        match self {
+            Encoding::B4e => (0..cl).map(|i| 4f64.powi(i as i32)).collect(),
+            _ => vec![1.0; self.word_length(cl)],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::forall;
+
+    #[test]
+    fn names_roundtrip() {
+        for enc in ALL_ENCODINGS {
+            assert_eq!(Encoding::from_name(enc.name()), Some(enc));
+        }
+        assert_eq!(Encoding::from_name("nope"), None);
+    }
+
+    #[test]
+    fn levels_match_paper() {
+        assert_eq!(Encoding::Sre.levels(7), 4);
+        assert_eq!(Encoding::B4e.levels(3), 64);
+        assert_eq!(Encoding::Mtmc.levels(5), 16);
+        assert_eq!(Encoding::Mtmc.levels(32), 97);
+        assert_eq!(Encoding::B4we.levels(3), 64);
+    }
+
+    #[test]
+    fn word_lengths() {
+        assert_eq!(Encoding::Sre.word_length(6), 6);
+        assert_eq!(Encoding::B4e.word_length(6), 6);
+        assert_eq!(Encoding::Mtmc.word_length(25), 25);
+        // Fig. 9 B4WE data points: 1, 5, 21
+        assert_eq!(Encoding::B4we.word_length(1), 1);
+        assert_eq!(Encoding::B4we.word_length(2), 5);
+        assert_eq!(Encoding::B4we.word_length(3), 21);
+    }
+
+    #[test]
+    fn all_words_are_2bit() {
+        forall(
+            "words in 0..=3",
+            64,
+            |rng| {
+                let enc = ALL_ENCODINGS[rng.below(4)];
+                let cl = 1 + rng.below(5);
+                let value = rng.below(enc.levels(cl)) as u32;
+                (enc, cl, value)
+            },
+            |&(enc, cl, value)| {
+                let words = enc.encode(value, cl);
+                words.len() == enc.word_length(cl) && words.iter().all(|&w| w <= 3)
+            },
+        );
+    }
+
+    #[test]
+    fn vector_encoding_is_dimension_major() {
+        let words = Encoding::Mtmc.encode_vector(&[0, 5, 15], 5);
+        assert_eq!(words.len(), 15);
+        assert_eq!(&words[0..5], &[0, 0, 0, 0, 0]);
+        assert_eq!(&words[5..10], &[1, 1, 1, 1, 1]);
+        assert_eq!(&words[10..15], &[3, 3, 3, 3, 3]);
+    }
+
+    #[test]
+    fn weights() {
+        assert_eq!(Encoding::B4e.accumulation_weights(3), vec![1.0, 4.0, 16.0]);
+        assert_eq!(Encoding::Mtmc.accumulation_weights(3), vec![1.0; 3]);
+        assert_eq!(Encoding::B4we.accumulation_weights(2).len(), 5);
+    }
+}

@@ -1,0 +1,132 @@
+//! Multi-bit thermometer code (MTMC) — the paper's contribution (§3.1,
+//! Table 1). Value `m` with code word length `cl` becomes `cl - n` words
+//! of `x` followed by `n` words of `x + 1`, where `x = m / cl`,
+//! `n = m % cl`. Two properties drive the paper's results:
+//!
+//! * **L1 preservation**: `Σ_i |enc(a)_i − enc(b)_i| == |a − b|`, and
+//! * **bounded bottleneck**: `|a − b| < cl` implies every word mismatch
+//!   is ≤ 1 — no single mismatch-3 cell can throttle the string current
+//!   for nearby value pairs.
+
+/// Append the `cl` MTMC code words for `value` (must be `<= 3*cl`).
+pub fn encode_mtmc(value: u32, cl: usize, out: &mut Vec<u8>) {
+    assert!(
+        (value as usize) <= 3 * cl,
+        "MTMC value {value} out of range for cl={cl}"
+    );
+    let x = (value as usize / cl) as u8;
+    let n = value as usize % cl;
+    for j in 0..cl {
+        out.push(if j >= cl - n { x + 1 } else { x });
+    }
+}
+
+/// Inverse of [`encode_mtmc`]: the word sum equals the value.
+pub fn decode_mtmc(words: &[u8]) -> u32 {
+    words.iter().map(|&w| w as u32).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::forall;
+
+    #[test]
+    fn table1_rows() {
+        // Paper Table 1, CL=5: every value 0..=15.
+        let expected: [&[u8; 5]; 16] = [
+            &[0, 0, 0, 0, 0],
+            &[0, 0, 0, 0, 1],
+            &[0, 0, 0, 1, 1],
+            &[0, 0, 1, 1, 1],
+            &[0, 1, 1, 1, 1],
+            &[1, 1, 1, 1, 1],
+            &[1, 1, 1, 1, 2],
+            &[1, 1, 1, 2, 2],
+            &[1, 1, 2, 2, 2],
+            &[1, 2, 2, 2, 2],
+            &[2, 2, 2, 2, 2],
+            &[2, 2, 2, 2, 3],
+            &[2, 2, 2, 3, 3],
+            &[2, 2, 3, 3, 3],
+            &[2, 3, 3, 3, 3],
+            &[3, 3, 3, 3, 3],
+        ];
+        for (value, want) in expected.iter().enumerate() {
+            let mut out = Vec::new();
+            encode_mtmc(value as u32, 5, &mut out);
+            assert_eq!(&out[..], &want[..], "value {value}");
+        }
+    }
+
+    #[test]
+    fn l1_preserved() {
+        forall(
+            "mtmc L1 preservation",
+            256,
+            |rng| {
+                let cl = 1 + rng.below(32);
+                let a = rng.below(3 * cl + 1) as u32;
+                let b = rng.below(3 * cl + 1) as u32;
+                (cl, a, b)
+            },
+            |&(cl, a, b)| {
+                let (mut wa, mut wb) = (Vec::new(), Vec::new());
+                encode_mtmc(a, cl, &mut wa);
+                encode_mtmc(b, cl, &mut wb);
+                let l1: u32 = wa
+                    .iter()
+                    .zip(&wb)
+                    .map(|(&x, &y)| (x as i32 - y as i32).unsigned_abs())
+                    .sum();
+                l1 == a.abs_diff(b)
+            },
+        );
+    }
+
+    #[test]
+    fn max_mismatch_bounded_for_near_values() {
+        forall(
+            "mtmc bounded bottleneck",
+            256,
+            |rng| {
+                let cl = 2 + rng.below(30);
+                let a = rng.below(3 * cl + 1) as i64;
+                let delta = rng.below(2 * cl - 1) as i64 - (cl as i64 - 1);
+                let b = (a + delta).clamp(0, 3 * cl as i64);
+                (cl, a as u32, b as u32)
+            },
+            |&(cl, a, b)| {
+                if a.abs_diff(b) as usize >= cl {
+                    return true; // property only claims |a-b| < cl
+                }
+                let (mut wa, mut wb) = (Vec::new(), Vec::new());
+                encode_mtmc(a, cl, &mut wa);
+                encode_mtmc(b, cl, &mut wb);
+                wa.iter()
+                    .zip(&wb)
+                    .map(|(&x, &y)| (x as i32 - y as i32).unsigned_abs())
+                    .max()
+                    .unwrap()
+                    <= 1
+            },
+        );
+    }
+
+    #[test]
+    fn roundtrip() {
+        for cl in [1usize, 3, 5, 25, 32] {
+            for value in 0..=(3 * cl) as u32 {
+                let mut out = Vec::new();
+                encode_mtmc(value, cl, &mut out);
+                assert_eq!(decode_mtmc(&out), value);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn rejects_overflow() {
+        encode_mtmc(16, 5, &mut Vec::new());
+    }
+}

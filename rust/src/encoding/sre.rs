@@ -1,0 +1,29 @@
+//! Simple repetition encoding (SRE) [11]: the 4-level value duplicated
+//! `cl` times. No precision gain — redundancy averages out device noise
+//! in the voting scheme.
+
+/// Append the SRE code words for `value` (must be `< 4`).
+pub fn encode_sre(value: u32, cl: usize, out: &mut Vec<u8>) {
+    assert!(value < 4, "SRE value {value} out of range");
+    for _ in 0..cl {
+        out.push(value as u8);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn repeats() {
+        let mut out = Vec::new();
+        encode_sre(2, 6, &mut out);
+        assert_eq!(out, vec![2; 6]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn rejects_large_value() {
+        encode_sre(4, 2, &mut Vec::new());
+    }
+}

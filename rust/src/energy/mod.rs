@@ -1,0 +1,117 @@
+//! Parametric search-energy model (Fig. 9's x-axis).
+//!
+//! The paper estimates search energy from the measurements of [14]; those
+//! absolute numbers are not public, so we use a parametric model whose
+//! constants are shared by every encoding — the Pareto *ordering* of
+//! Fig. 9 is invariant to the absolute scale (DESIGN.md §2):
+//!
+//! ```text
+//! E_search = Σ_iterations ( sensed_strings × 24 × E_cell
+//!                         + sensed_strings × T × E_sa )
+//! ```
+//!
+//! where `T` is the SA ladder depth. Under both SVSS and AVSS a support
+//! vector's `groups × word_length` strings are each sensed exactly once
+//! per search, so at equal code word length the two modes cost the same
+//! energy — AVSS wins *iterations* (throughput), not energy, exactly as
+//! in the paper.
+
+use crate::CELLS_PER_STRING;
+
+/// Energy constants, in picojoules per event.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EnergyModel {
+    /// Per cell-evaluation (word-line drive of one unit cell).
+    pub e_cell_pj: f64,
+    /// Per SA threshold comparison on one string.
+    pub e_sa_pj: f64,
+}
+
+impl Default for EnergyModel {
+    fn default() -> Self {
+        // [14]-plausible magnitudes: ~10 fJ/cell search event, ~0.5 pJ per
+        // SA comparison. Only ratios matter for the reproduced figures.
+        EnergyModel { e_cell_pj: 0.01, e_sa_pj: 0.5 }
+    }
+}
+
+impl EnergyModel {
+    /// Energy of sensing `strings` strings once through a `ladder_len`
+    /// threshold ladder.
+    pub fn sense_energy_pj(&self, strings: u64, ladder_len: usize) -> f64 {
+        strings as f64
+            * (CELLS_PER_STRING as f64 * self.e_cell_pj + ladder_len as f64 * self.e_sa_pj)
+    }
+}
+
+/// Running energy account for a workload.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct EnergyAccount {
+    pub total_pj: f64,
+    pub sensed_strings: u64,
+    pub searches: u64,
+}
+
+impl EnergyAccount {
+    pub fn add_sense(&mut self, model: &EnergyModel, strings: u64, ladder_len: usize) {
+        self.total_pj += model.sense_energy_pj(strings, ladder_len);
+        self.sensed_strings += strings;
+    }
+
+    pub fn finish_search(&mut self) {
+        self.searches += 1;
+    }
+
+    /// Average energy per search, in nanojoules.
+    pub fn nj_per_search(&self) -> f64 {
+        if self.searches == 0 {
+            0.0
+        } else {
+            self.total_pj / 1000.0 / self.searches as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::assert_close;
+
+    #[test]
+    fn sense_energy_formula() {
+        let m = EnergyModel { e_cell_pj: 0.01, e_sa_pj: 0.5 };
+        // 10 strings: 10 * (24*0.01 + 16*0.5) = 10 * 8.24 = 82.4 pJ
+        assert_close(m.sense_energy_pj(10, 16), 82.4, 1e-12);
+    }
+
+    #[test]
+    fn account_accumulates() {
+        let m = EnergyModel::default();
+        let mut acc = EnergyAccount::default();
+        acc.add_sense(&m, 100, 16);
+        acc.finish_search();
+        acc.add_sense(&m, 100, 16);
+        acc.finish_search();
+        assert_eq!(acc.searches, 2);
+        assert_eq!(acc.sensed_strings, 200);
+        assert_close(
+            acc.nj_per_search(),
+            m.sense_energy_pj(100, 16) / 1000.0,
+            1e-12,
+        );
+    }
+
+    #[test]
+    fn empty_account_is_zero() {
+        assert_eq!(EnergyAccount::default().nj_per_search(), 0.0);
+    }
+
+    #[test]
+    fn energy_scales_with_word_length() {
+        // Fig. 9's x-axis: longer code words → more strings → more energy.
+        let m = EnergyModel::default();
+        let short = m.sense_energy_pj(2 * 4, 16); // groups=2, CL=4
+        let long = m.sense_energy_pj(2 * 16, 16); // groups=2, CL=16
+        assert!(long > short * 3.9);
+    }
+}

@@ -1,0 +1,140 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!
+//! * SA ladder depth (sensing resolution vs energy),
+//! * device-variation severity (ideal → nand-default → 2× sigma),
+//! * fault injection (fresh vs worn device),
+//! * encoding robustness under each of the above (MTMC vs B4E — the
+//!   reliability story behind Fig. 9 in isolation).
+
+use super::{run_mcam_eval, EpisodeSettings};
+use crate::device::faults::FaultModel;
+use crate::device::variation::VariationModel;
+use crate::encoding::Encoding;
+use crate::fsl::store::ArtifactStore;
+use crate::fsl::{evaluate_episode, sample_episode};
+use crate::metrics::AccuracyMeter;
+use crate::search::engine::{EngineConfig, SearchEngine};
+use crate::search::SearchMode;
+use crate::testutil::Rng;
+use anyhow::Result;
+
+#[derive(Debug, Clone)]
+pub struct AblationRow {
+    pub name: String,
+    pub accuracy_pct: f64,
+    pub ci95_pct: f64,
+}
+
+/// SA ladder-depth sweep (MTMC cl=8, AVSS, noisy device).
+pub fn ladder_depth(
+    store: &ArtifactStore,
+    dataset: &str,
+    settings: EpisodeSettings,
+) -> Result<Vec<AblationRow>> {
+    let ds = store.embeddings(dataset, "std", "test")?;
+    let clip = store.clip(dataset, "std")?;
+    let mut rows = Vec::new();
+    for depth in [2usize, 4, 8, 16, 32] {
+        let mut cfg = EngineConfig::new(Encoding::Mtmc, 8, SearchMode::Avss, clip)
+            .with_seed(settings.seed);
+        cfg.ladder_len = depth;
+        let mut engine = SearchEngine::new(cfg, ds.dims, settings.n_way * settings.k_shot);
+        let mut rng = Rng::new(settings.seed);
+        let mut acc = AccuracyMeter::default();
+        for _ in 0..settings.episodes {
+            let ep = sample_episode(&ds, &mut rng, settings.n_way, settings.k_shot, settings.n_query);
+            let (c, t) = evaluate_episode(&mut engine, &ds, &ep);
+            acc.push_episode(c, t);
+        }
+        rows.push(AblationRow {
+            name: format!("ladder={depth}"),
+            accuracy_pct: acc.accuracy_pct(),
+            ci95_pct: acc.ci95_pct(),
+        });
+    }
+    Ok(rows)
+}
+
+/// Device-variation severity sweep, MTMC vs B4E (reliability margin).
+pub fn variation_severity(
+    store: &ArtifactStore,
+    dataset: &str,
+    settings: EpisodeSettings,
+) -> Result<Vec<AblationRow>> {
+    let mut rows = Vec::new();
+    for (label, variation) in [
+        ("ideal", VariationModel::IDEAL),
+        ("nand", VariationModel::nand_default()),
+        (
+            "2x-sigma",
+            VariationModel { program_sigma: 0.30, read_sigma: 0.10 },
+        ),
+    ] {
+        for (enc, cl) in [(Encoding::Mtmc, 8), (Encoding::B4e, 4)] {
+            let r = run_mcam_eval(
+                store,
+                dataset,
+                "std",
+                enc,
+                cl,
+                SearchMode::Avss,
+                variation,
+                settings,
+            )?;
+            rows.push(AblationRow {
+                name: format!("{label}/{}", enc.name()),
+                accuracy_pct: r.accuracy.accuracy_pct(),
+                ci95_pct: r.accuracy.ci95_pct(),
+            });
+        }
+    }
+    Ok(rows)
+}
+
+/// Fault-injection sweep (fresh vs worn device), MTMC cl=8.
+pub fn fault_injection(
+    store: &ArtifactStore,
+    dataset: &str,
+    settings: EpisodeSettings,
+) -> Result<Vec<AblationRow>> {
+    let ds = store.embeddings(dataset, "std", "test")?;
+    let clip = store.clip(dataset, "std")?;
+    let mut rows = Vec::new();
+    for (label, faults) in [
+        ("fresh", FaultModel::NONE),
+        ("worn", FaultModel::worn()),
+        (
+            "heavy-retention",
+            FaultModel { stuck_low: 0.0, stuck_high: 0.0, retention_drift: 0.10 },
+        ),
+    ] {
+        let cfg = EngineConfig::new(Encoding::Mtmc, 8, SearchMode::Avss, clip)
+            .with_seed(settings.seed);
+        let mut engine = SearchEngine::new(cfg, ds.dims, settings.n_way * settings.k_shot);
+        engine.set_faults(faults);
+        let mut rng = Rng::new(settings.seed);
+        let mut acc = AccuracyMeter::default();
+        for _ in 0..settings.episodes {
+            let ep = sample_episode(&ds, &mut rng, settings.n_way, settings.k_shot, settings.n_query);
+            let (c, t) = evaluate_episode(&mut engine, &ds, &ep);
+            acc.push_episode(c, t);
+        }
+        rows.push(AblationRow {
+            name: format!("faults={label}"),
+            accuracy_pct: acc.accuracy_pct(),
+            ci95_pct: acc.ci95_pct(),
+        });
+    }
+    Ok(rows)
+}
+
+pub fn render(title: &str, rows: &[AblationRow]) -> String {
+    let mut out = format!("Ablation: {title}\n");
+    for row in rows {
+        out.push_str(&format!(
+            "  {:<16} {:>6.2}% ±{:.2}\n",
+            row.name, row.accuracy_pct, row.ci95_pct
+        ));
+    }
+    out
+}

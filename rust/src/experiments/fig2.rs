@@ -1,0 +1,209 @@
+//! Fig. 2(b)/(c): simulated string-current distributions.
+//!
+//! (b) current vs *total* string mismatch level (0..72 in the paper's
+//!     48-layer strings; 0..72 here too since 24 cells × mismatch ≤ 3),
+//!     Monte-Carlo over random mismatch compositions with device
+//!     variation on.
+//! (c) current at fixed total mismatch 6, split by the *maximum* cell
+//!     mismatch (1/2/3) — the bottleneck effect.
+
+use crate::device::block::McamBlock;
+use crate::device::variation::VariationModel;
+use crate::device::McamParams;
+use crate::metrics::Welford;
+use crate::testutil::Rng;
+use crate::CELLS_PER_STRING;
+
+/// Mean ± std of string current at one mismatch composition.
+#[derive(Debug, Clone, Copy)]
+pub struct CurrentPoint {
+    pub total_mismatch: u32,
+    pub max_mismatch: u32,
+    pub mean_current: f64,
+    pub std_current: f64,
+    pub samples: usize,
+}
+
+/// Decompose `total` mismatch into 24 per-cell levels with maximum level
+/// exactly `max_level` (if feasible). Returns None when infeasible.
+fn compose(total: u32, max_level: u32, rng: &mut Rng) -> Option<[u8; CELLS_PER_STRING]> {
+    if max_level == 0 {
+        return if total == 0 { Some([0; CELLS_PER_STRING]) } else { None };
+    }
+    if total < max_level || total > (CELLS_PER_STRING as u32) * max_level {
+        return None;
+    }
+    let mut cells = [0u8; CELLS_PER_STRING];
+    // pin one cell at the max level, distribute the rest randomly < max
+    cells[0] = max_level as u8;
+    let mut remaining = total - max_level;
+    let mut guard = 0;
+    while remaining > 0 {
+        let i = 1 + rng.below(CELLS_PER_STRING - 1);
+        if (cells[i] as u32) < max_level {
+            cells[i] += 1;
+            remaining -= 1;
+        }
+        guard += 1;
+        if guard > 100_000 {
+            return None; // saturated
+        }
+    }
+    rng.shuffle(&mut cells);
+    Some(cells)
+}
+
+fn measure(
+    cells_list: &[[u8; CELLS_PER_STRING]],
+    variation: VariationModel,
+    seed: u64,
+) -> (f64, f64) {
+    let params = McamParams::default();
+    let mut block = McamBlock::new(cells_list.len(), params, variation, seed);
+    for cells in cells_list {
+        block.program_string(cells);
+    }
+    let wordline = [0u8; CELLS_PER_STRING];
+    let mut out = Vec::new();
+    block.search_range(&wordline, 0, cells_list.len(), &mut out);
+    let mut w = Welford::default();
+    for &c in &out {
+        w.push(c);
+    }
+    (w.mean(), w.std())
+}
+
+/// Fig. 2(b): current distribution vs total string mismatch level.
+pub fn fig2b(samples_per_level: usize, seed: u64) -> Vec<CurrentPoint> {
+    let mut rng = Rng::new(seed);
+    let variation = VariationModel::nand_default();
+    let mut points = Vec::new();
+    for total in (0..=72u32).step_by(6) {
+        let mut compositions = Vec::new();
+        // feasible max-mismatch range for this total
+        let lo = total.div_ceil(CELLS_PER_STRING as u32);
+        let hi = total.min(3);
+        for _ in 0..samples_per_level {
+            let max_level = if total == 0 {
+                0
+            } else {
+                lo + rng.below((hi - lo + 1) as usize) as u32
+            };
+            if let Some(cells) = compose(total, max_level, &mut rng) {
+                compositions.push(cells);
+            }
+        }
+        if compositions.is_empty() {
+            continue;
+        }
+        let (mean, std) = measure(&compositions, variation, seed ^ total as u64);
+        points.push(CurrentPoint {
+            total_mismatch: total,
+            max_mismatch: 0, // mixed
+            mean_current: mean,
+            std_current: std,
+            samples: compositions.len(),
+        });
+    }
+    points
+}
+
+/// Fig. 2(c): current at total mismatch 6, by max mismatch level 1/2/3.
+pub fn fig2c(samples_per_level: usize, seed: u64) -> Vec<CurrentPoint> {
+    let mut rng = Rng::new(seed);
+    let variation = VariationModel::nand_default();
+    let mut points = Vec::new();
+    for max_level in 1..=3u32 {
+        let mut compositions = Vec::new();
+        for _ in 0..samples_per_level {
+            if let Some(cells) = compose(6, max_level, &mut rng) {
+                compositions.push(cells);
+            }
+        }
+        let (mean, std) = measure(&compositions, variation, seed ^ max_level as u64);
+        points.push(CurrentPoint {
+            total_mismatch: 6,
+            max_mismatch: max_level,
+            mean_current: mean,
+            std_current: std,
+            samples: compositions.len(),
+        });
+    }
+    points
+}
+
+pub fn render() -> String {
+    let mut out = String::from("Fig 2(b): current vs total string mismatch (noisy device)\n");
+    out.push_str("total_mismatch  mean_I  std_I\n");
+    for p in fig2b(400, 0xF19_2B) {
+        out.push_str(&format!(
+            "{:>14}  {:.4}  {:.4}\n",
+            p.total_mismatch, p.mean_current, p.std_current
+        ));
+    }
+    out.push_str("\nFig 2(c): current at total mismatch 6, by max mismatch level\n");
+    out.push_str("max_mismatch  mean_I  std_I\n");
+    for p in fig2c(400, 0xF19_2C) {
+        out.push_str(&format!(
+            "{:>12}  {:.4}  {:.4}\n",
+            p.max_mismatch, p.mean_current, p.std_current
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig2b_current_decreases_with_total_mismatch() {
+        let points = fig2b(200, 1);
+        assert!(points.len() >= 10);
+        for w in points.windows(2) {
+            assert!(
+                w[1].mean_current < w[0].mean_current,
+                "current must fall: {} vs {}",
+                w[0].mean_current,
+                w[1].mean_current
+            );
+        }
+        assert_eq!(points[0].total_mismatch, 0);
+        // all-match strings draw ~I_max = 1.0 (mean preserved under
+        // symmetric lognormal-in-log noise up to bias)
+        assert!((points[0].mean_current - 1.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn fig2c_bottleneck_ordering() {
+        // Paper: same total mismatch, larger max mismatch → smaller current.
+        let points = fig2c(300, 2);
+        assert_eq!(points.len(), 3);
+        assert!(points[0].mean_current > points[1].mean_current);
+        assert!(points[1].mean_current > points[2].mean_current);
+    }
+
+    #[test]
+    fn fig2b_variation_produces_spread() {
+        let points = fig2b(200, 3);
+        // strings with mismatch show current sigma from device variation
+        assert!(points.iter().skip(1).all(|p| p.std_current > 0.0));
+    }
+
+    #[test]
+    fn compose_respects_constraints() {
+        let mut rng = Rng::new(4);
+        for (total, max) in [(6, 1), (6, 2), (6, 3), (72, 3), (0, 0)] {
+            if let Some(cells) = compose(total, max, &mut rng) {
+                let sum: u32 = cells.iter().map(|&c| c as u32).sum();
+                let mx = cells.iter().copied().max().unwrap() as u32;
+                assert_eq!(sum, total);
+                assert_eq!(mx, max);
+            } else {
+                panic!("composition ({total},{max}) should be feasible");
+            }
+        }
+        assert!(compose(5, 0, &mut rng).is_none());
+        assert!(compose(100, 1, &mut rng).is_none());
+    }
+}

@@ -1,0 +1,77 @@
+//! Fig. 7: accuracy of SVSS vs AVSS, before and after (asymmetric) QAT.
+//!
+//! "Before QAT" evaluates the standard-trained controller under each
+//! search mode; "after QAT" evaluates the controller meta-trained with the
+//! matching quantization scheme (hat_svss / hat_avss — our HAT variants
+//! subsume the modified-QAT of §3.2). The paper's claim: the SVSS→AVSS
+//! accuracy gap shrinks to within ~1% after QAT.
+
+use super::{run_mcam_eval, EpisodeSettings, RunResult};
+use crate::device::variation::VariationModel;
+use crate::encoding::Encoding;
+use crate::fsl::store::ArtifactStore;
+use crate::search::SearchMode;
+use anyhow::Result;
+
+#[derive(Debug, Clone)]
+pub struct Fig7Bar {
+    pub mode: SearchMode,
+    pub qat: bool,
+    pub variant: &'static str,
+    pub result: RunResult,
+}
+
+pub fn run(
+    store: &ArtifactStore,
+    dataset: &str,
+    cl: usize,
+    settings: EpisodeSettings,
+) -> Result<Vec<Fig7Bar>> {
+    let variation = VariationModel::nand_default();
+    let cases: [(SearchMode, bool, &'static str); 4] = [
+        (SearchMode::Svss, false, "std"),
+        (SearchMode::Avss, false, "std"),
+        (SearchMode::Svss, true, "hat_svss"),
+        (SearchMode::Avss, true, "hat_avss"),
+    ];
+    let mut bars = Vec::new();
+    for (mode, qat, variant) in cases {
+        let result = run_mcam_eval(
+            store,
+            dataset,
+            variant,
+            Encoding::Mtmc,
+            cl,
+            mode,
+            variation,
+            settings,
+        )?;
+        bars.push(Fig7Bar { mode, qat, variant, result });
+    }
+    Ok(bars)
+}
+
+pub fn render(dataset: &str, bars: &[Fig7Bar]) -> String {
+    let mut out = format!("Fig 7 ({dataset}): SVSS vs AVSS accuracy, before/after QAT\n");
+    out.push_str("mode  qat    variant    accuracy%\n");
+    for bar in bars {
+        out.push_str(&format!(
+            "{:<5} {:<6} {:<10} {}\n",
+            bar.mode.name(),
+            if bar.qat { "after" } else { "before" },
+            bar.variant,
+            super::pct(&bar.result.accuracy),
+        ));
+    }
+    // the paper's headline: gap shrinks after QAT
+    if bars.len() == 4 {
+        let gap_before =
+            bars[0].result.accuracy.accuracy_pct() - bars[1].result.accuracy.accuracy_pct();
+        let gap_after =
+            bars[2].result.accuracy.accuracy_pct() - bars[3].result.accuracy.accuracy_pct();
+        out.push_str(&format!(
+            "SVSS-AVSS gap: before QAT {gap_before:+.2}%, after QAT {gap_after:+.2}%\n"
+        ));
+    }
+    out
+}

@@ -1,0 +1,174 @@
+//! Fig. 9: Pareto fronts of the energy–accuracy trade-off.
+//!
+//! Sweeps code word length for each encoding (SRE / B4E / B4WE / MTMC on
+//! the standard controller, MTMC+HAT on the HAT controller), recording
+//! per-search energy (x) and episode accuracy (y); the software
+//! prototypical-network L1 baseline is the float reference line.
+//! AVSS is used everywhere, matching the paper's setup.
+
+use super::{run_mcam_eval, run_software_baseline, EpisodeSettings};
+use crate::device::variation::VariationModel;
+use crate::encoding::Encoding;
+use crate::fsl::store::ArtifactStore;
+use crate::search::SearchMode;
+use anyhow::Result;
+
+#[derive(Debug, Clone)]
+pub struct ParetoPoint {
+    pub series: String,
+    pub cl: usize,
+    pub nj_per_search: f64,
+    pub accuracy_pct: f64,
+    pub ci95_pct: f64,
+}
+
+/// Code-word-length sweeps per encoding (paper §4.2: B4WE points are the
+/// base lengths giving word lengths 1/5/21; B4E sweeps 1..9; SRE/MTMC
+/// sweep up to 32 for Omniglot, 25 for CUB — subsampled for runtime).
+pub fn sweep_points(dataset: &str) -> Vec<(Encoding, Vec<usize>)> {
+    let max_cl = if dataset == "cub" { 25 } else { 32 };
+    let mut mtmc_cls = vec![1, 2, 4, 8, 16];
+    if max_cl > 16 {
+        mtmc_cls.push(max_cl);
+    } else {
+        mtmc_cls.retain(|&c| c <= max_cl);
+    }
+    vec![
+        (Encoding::Sre, mtmc_cls.clone()),
+        (Encoding::B4e, vec![1, 2, 3, 5, 7, 9]),
+        (Encoding::B4we, vec![1, 2, 3]),
+        (Encoding::Mtmc, mtmc_cls),
+    ]
+}
+
+/// Run the full Fig. 9 sweep for one dataset.
+pub fn run(
+    store: &ArtifactStore,
+    dataset: &str,
+    settings: EpisodeSettings,
+) -> Result<Vec<ParetoPoint>> {
+    let variation = VariationModel::nand_default();
+    let mut points = Vec::new();
+    for (encoding, cls) in sweep_points(dataset) {
+        for cl in cls {
+            let r = run_mcam_eval(
+                store,
+                dataset,
+                "std",
+                encoding,
+                cl,
+                SearchMode::Avss,
+                variation,
+                settings,
+            )?;
+            points.push(ParetoPoint {
+                series: encoding.name().to_string(),
+                cl,
+                nj_per_search: r.nj_per_search,
+                accuracy_pct: r.accuracy.accuracy_pct(),
+                ci95_pct: r.accuracy.ci95_pct(),
+            });
+        }
+    }
+    // MTMC + HAT series on the HAT-trained controller
+    for (encoding, cls) in sweep_points(dataset) {
+        if encoding != Encoding::Mtmc {
+            continue;
+        }
+        for cl in cls {
+            let r = run_mcam_eval(
+                store,
+                dataset,
+                "hat_avss",
+                encoding,
+                cl,
+                SearchMode::Avss,
+                variation,
+                settings,
+            )?;
+            points.push(ParetoPoint {
+                series: "mtmc+hat".to_string(),
+                cl,
+                nj_per_search: r.nj_per_search,
+                accuracy_pct: r.accuracy.accuracy_pct(),
+                ci95_pct: r.accuracy.ci95_pct(),
+            });
+        }
+    }
+    // software float baseline (x = n/a, rendered separately)
+    let sw = run_software_baseline(store, dataset, "std", settings)?;
+    points.push(ParetoPoint {
+        series: "software-l1".to_string(),
+        cl: 0,
+        nj_per_search: f64::NAN,
+        accuracy_pct: sw.accuracy_pct(),
+        ci95_pct: sw.ci95_pct(),
+    });
+    Ok(points)
+}
+
+pub fn render(dataset: &str, points: &[ParetoPoint]) -> String {
+    let mut out = format!("Fig 9 ({dataset}): energy-accuracy Pareto (AVSS)\n");
+    out.push_str("series      cl  nJ/search  accuracy%  ±ci95\n");
+    for p in points {
+        out.push_str(&format!(
+            "{:<10} {:>3}  {:>9.2}  {:>8.2}  {:>5.2}\n",
+            p.series,
+            p.cl,
+            p.nj_per_search,
+            p.accuracy_pct,
+            p.ci95_pct
+        ));
+    }
+    out
+}
+
+/// Best accuracy of a series (for the headline comparisons).
+pub fn best_accuracy(points: &[ParetoPoint], series: &str) -> Option<f64> {
+    points
+        .iter()
+        .filter(|p| p.series == series)
+        .map(|p| p.accuracy_pct)
+        .fold(None, |acc, x| Some(acc.map_or(x, |a: f64| a.max(x))))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweeps_match_paper_ranges() {
+        let omni = sweep_points("omniglot");
+        let mtmc = &omni.iter().find(|(e, _)| *e == Encoding::Mtmc).unwrap().1;
+        assert!(mtmc.contains(&32), "Omniglot MTMC sweeps to CL=32");
+        let cub = sweep_points("cub");
+        let mtmc = &cub.iter().find(|(e, _)| *e == Encoding::Mtmc).unwrap().1;
+        assert!(mtmc.contains(&25), "CUB MTMC sweeps to CL=25");
+        let b4e = &omni.iter().find(|(e, _)| *e == Encoding::B4e).unwrap().1;
+        assert!(b4e.iter().all(|&c| c <= 9), "B4E capped at CL=9");
+        let b4we = &omni.iter().find(|(e, _)| *e == Encoding::B4we).unwrap().1;
+        assert_eq!(b4we, &vec![1, 2, 3], "B4WE base lengths → words 1/5/21");
+    }
+
+    #[test]
+    fn best_accuracy_picks_max() {
+        let pts = vec![
+            ParetoPoint {
+                series: "a".into(),
+                cl: 1,
+                nj_per_search: 1.0,
+                accuracy_pct: 50.0,
+                ci95_pct: 0.0,
+            },
+            ParetoPoint {
+                series: "a".into(),
+                cl: 2,
+                nj_per_search: 2.0,
+                accuracy_pct: 70.0,
+                ci95_pct: 0.0,
+            },
+        ];
+        assert_eq!(best_accuracy(&pts, "a"), Some(70.0));
+        assert_eq!(best_accuracy(&pts, "b"), None);
+    }
+}

@@ -1,0 +1,167 @@
+//! Experiment harnesses: one module per table/figure of the paper
+//! (DESIGN.md §5 maps each to its bench target). Every harness returns
+//! typed rows plus a rendered text table so `cargo bench` regenerates the
+//! paper's artifacts and EXPERIMENTS.md records paper-vs-measured.
+
+pub mod ablation;
+pub mod fig2;
+pub mod fig3_5;
+pub mod fig6;
+pub mod fig7;
+pub mod fig9;
+pub mod headline;
+pub mod table1;
+pub mod table2;
+
+use crate::device::variation::VariationModel;
+use crate::encoding::Encoding;
+use crate::fsl::store::ArtifactStore;
+use crate::fsl::{evaluate_episode, sample_episode};
+use crate::metrics::AccuracyMeter;
+use crate::search::engine::{EngineConfig, SearchEngine};
+use crate::search::SearchMode;
+use crate::testutil::Rng;
+use anyhow::Result;
+
+/// Episode settings for an experiment run (paper way/shot settings with a
+/// budgeted episode/query count).
+#[derive(Debug, Clone, Copy)]
+pub struct EpisodeSettings {
+    pub n_way: usize,
+    pub k_shot: usize,
+    pub n_query: usize,
+    pub episodes: usize,
+    pub seed: u64,
+}
+
+impl EpisodeSettings {
+    /// Omniglot: the paper's 200-way 10-shot many-class setting.
+    pub fn omniglot() -> EpisodeSettings {
+        EpisodeSettings { n_way: 200, k_shot: 10, n_query: 2, episodes: 3, seed: 0xE9 }
+    }
+
+    /// CUB: the paper's 50-way 5-shot setting.
+    pub fn cub() -> EpisodeSettings {
+        EpisodeSettings { n_way: 50, k_shot: 5, n_query: 5, episodes: 4, seed: 0xE9 }
+    }
+
+    pub fn for_dataset(dataset: &str) -> EpisodeSettings {
+        match dataset {
+            "cub" => Self::cub(),
+            _ => Self::omniglot(),
+        }
+    }
+
+    /// Lighter settings for smoke tests.
+    pub fn smoke(mut self) -> EpisodeSettings {
+        self.n_way = self.n_way.min(20);
+        self.k_shot = self.k_shot.min(3);
+        self.n_query = 1;
+        self.episodes = 1;
+        self
+    }
+}
+
+/// Result of an MCAM episode evaluation run.
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    pub accuracy: AccuracyMeter,
+    pub nj_per_search: f64,
+    pub iterations_per_search: usize,
+    pub throughput_per_s: f64,
+}
+
+/// Evaluate an engine configuration over episodes of (dataset, variant)
+/// test embeddings.
+pub fn run_mcam_eval(
+    store: &ArtifactStore,
+    dataset: &str,
+    variant: &str,
+    encoding: Encoding,
+    cl: usize,
+    mode: SearchMode,
+    variation: VariationModel,
+    settings: EpisodeSettings,
+) -> Result<RunResult> {
+    let ds = store.embeddings(dataset, variant, "test")?;
+    let clip = store.clip(dataset, variant)?;
+    let cfg = EngineConfig::new(encoding, cl, mode, clip)
+        .with_variation(variation)
+        .with_seed(settings.seed);
+    let mut engine =
+        SearchEngine::new(cfg, ds.dims, settings.n_way * settings.k_shot);
+    let mut rng = Rng::new(settings.seed);
+    let mut accuracy = AccuracyMeter::default();
+    for _ in 0..settings.episodes {
+        let ep = sample_episode(&ds, &mut rng, settings.n_way, settings.k_shot, settings.n_query);
+        let (correct, total) = evaluate_episode(&mut engine, &ds, &ep);
+        accuracy.push_episode(correct, total);
+    }
+    let iterations = engine.iterations_per_search();
+    Ok(RunResult {
+        accuracy,
+        nj_per_search: engine.energy().nj_per_search(),
+        iterations_per_search: iterations,
+        throughput_per_s: crate::device::timing::SearchTiming::throughput_per_s(
+            iterations as u64,
+        ),
+    })
+}
+
+/// Evaluate the software (float prototypical-network L1) baseline on the
+/// same episode stream.
+pub fn run_software_baseline(
+    store: &ArtifactStore,
+    dataset: &str,
+    variant: &str,
+    settings: EpisodeSettings,
+) -> Result<AccuracyMeter> {
+    let ds = store.embeddings(dataset, variant, "test")?;
+    let mut rng = Rng::new(settings.seed);
+    let mut accuracy = AccuracyMeter::default();
+    for _ in 0..settings.episodes {
+        let ep = sample_episode(&ds, &mut rng, settings.n_way, settings.k_shot, settings.n_query);
+        let support: Vec<&[f32]> =
+            ep.support.iter().map(|&(row, _)| ds.embedding(row)).collect();
+        let labels: Vec<u32> = ep.support.iter().map(|&(_, l)| l).collect();
+        let mut correct = 0;
+        for &(row, truth) in &ep.queries {
+            let pred = crate::baselines::protonet_predict(
+                &support,
+                &labels,
+                ds.embedding(row),
+                crate::baselines::Metric::L1,
+            );
+            if pred == truth {
+                correct += 1;
+            }
+        }
+        accuracy.push_episode(correct, ep.queries.len());
+    }
+    Ok(accuracy)
+}
+
+/// Render a percentage with CI for tables.
+pub fn pct(meter: &AccuracyMeter) -> String {
+    format!("{:.2}±{:.2}", meter.accuracy_pct(), meter.ci95_pct())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn settings_match_paper() {
+        let o = EpisodeSettings::omniglot();
+        assert_eq!((o.n_way, o.k_shot), (200, 10));
+        let c = EpisodeSettings::cub();
+        assert_eq!((c.n_way, c.k_shot), (50, 5));
+        assert_eq!(EpisodeSettings::for_dataset("cub").n_way, 50);
+    }
+
+    #[test]
+    fn smoke_shrinks() {
+        let s = EpisodeSettings::omniglot().smoke();
+        assert!(s.n_way <= 20 && s.episodes == 1);
+    }
+}

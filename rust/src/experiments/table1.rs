@@ -1,0 +1,74 @@
+//! Table 1: encoding rules of B4E (CL=2) vs MTMC (CL=5) for values 0–15.
+
+use crate::encoding::Encoding;
+
+pub struct Table1Row {
+    pub value: u32,
+    pub b4e: String,
+    pub mtmc: String,
+}
+
+pub fn rows() -> Vec<Table1Row> {
+    (0..16u32)
+        .map(|value| {
+            let b4e = Encoding::B4e.encode(value, 2);
+            let mtmc = Encoding::Mtmc.encode(value, 5);
+            Table1Row {
+                value,
+                // paper prints B4E most-significant digit first
+                b4e: b4e.iter().rev().map(|d| d.to_string()).collect(),
+                mtmc: mtmc.iter().map(|d| d.to_string()).collect(),
+            }
+        })
+        .collect()
+}
+
+pub fn render() -> String {
+    let mut out = String::from("Table 1: encoding rules (paper reproduction)\n");
+    out.push_str("value  B4E  MTMC\n");
+    for row in rows() {
+        out.push_str(&format!("{:>5}  {:>3}  {}\n", row.value, row.b4e, row.mtmc));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_paper_table1() {
+        let expected = [
+            (0, "00", "00000"),
+            (1, "01", "00001"),
+            (2, "02", "00011"),
+            (3, "03", "00111"),
+            (4, "10", "01111"),
+            (5, "11", "11111"),
+            (6, "12", "11112"),
+            (7, "13", "11122"),
+            (8, "20", "11222"),
+            (9, "21", "12222"),
+            (10, "22", "22222"),
+            (11, "23", "22223"),
+            (12, "30", "22233"),
+            (13, "31", "22333"),
+            (14, "32", "23333"),
+            (15, "33", "33333"),
+        ];
+        let rows = rows();
+        assert_eq!(rows.len(), 16);
+        for ((value, b4e, mtmc), row) in expected.iter().zip(&rows) {
+            assert_eq!(row.value, *value);
+            assert_eq!(row.b4e, *b4e, "B4E value {value}");
+            assert_eq!(row.mtmc, *mtmc, "MTMC value {value}");
+        }
+    }
+
+    #[test]
+    fn render_contains_all_rows() {
+        let text = render();
+        assert!(text.contains("33333"));
+        assert_eq!(text.lines().count(), 18);
+    }
+}

@@ -1,0 +1,84 @@
+//! Table 2: accuracy and throughput of SVSS vs AVSS with HAT, at the
+//! paper's full-precision settings (Omniglot MTMC CL=32, CUB CL=25).
+
+use super::{run_mcam_eval, EpisodeSettings, RunResult};
+use crate::device::variation::VariationModel;
+use crate::encoding::Encoding;
+use crate::fsl::store::ArtifactStore;
+use crate::search::SearchMode;
+use anyhow::Result;
+
+#[derive(Debug, Clone)]
+pub struct Table2Cell {
+    pub dataset: String,
+    pub mode: SearchMode,
+    pub result: RunResult,
+}
+
+pub fn paper_cl(dataset: &str) -> usize {
+    if dataset == "cub" {
+        25
+    } else {
+        32
+    }
+}
+
+pub fn run(store: &ArtifactStore, dataset: &str, settings: EpisodeSettings) -> Result<Vec<Table2Cell>> {
+    let cl = paper_cl(dataset);
+    let variation = VariationModel::nand_default();
+    let mut cells = Vec::new();
+    for (mode, variant) in [
+        (SearchMode::Svss, "hat_svss"),
+        (SearchMode::Avss, "hat_avss"),
+    ] {
+        let result = run_mcam_eval(
+            store,
+            dataset,
+            variant,
+            Encoding::Mtmc,
+            cl,
+            mode,
+            variation,
+            settings,
+        )?;
+        cells.push(Table2Cell { dataset: dataset.to_string(), mode, result });
+    }
+    Ok(cells)
+}
+
+pub fn render(cells: &[Table2Cell]) -> String {
+    let mut out = String::from(
+        "Table 2: SVSS vs AVSS with HAT\n\
+         dataset   mode  accuracy%        iterations  throughput(search/s)\n",
+    );
+    for c in cells {
+        out.push_str(&format!(
+            "{:<9} {:<5} {:<16} {:>10}  {:>12.1}\n",
+            c.dataset,
+            c.mode.name(),
+            super::pct(&c.result.accuracy),
+            c.result.iterations_per_search,
+            c.result.throughput_per_s,
+        ));
+    }
+    if cells.len() == 2 {
+        let speedup = cells[1].result.throughput_per_s / cells[0].result.throughput_per_s;
+        let drop = cells[0].result.accuracy.accuracy_pct()
+            - cells[1].result.accuracy.accuracy_pct();
+        out.push_str(&format!(
+            "AVSS speedup {speedup:.0}x, accuracy delta {drop:+.2}% (paper: 32x/25x, -0.96%/-0.65%)\n"
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_cls() {
+        assert_eq!(paper_cl("omniglot"), 32);
+        assert_eq!(paper_cl("cub"), 25);
+    }
+}

@@ -1,0 +1,212 @@
+//! Few-shot-learning harness: embedding datasets exported by the AOT
+//! pipeline, N-way K-shot episode sampling, and episode evaluation
+//! against a [`crate::search::engine::SearchEngine`].
+
+pub mod store;
+
+use crate::search::engine::SearchEngine;
+use crate::testutil::Rng;
+use std::collections::BTreeMap;
+
+/// A set of embeddings with global class labels, class-indexed.
+#[derive(Debug, Clone)]
+pub struct EmbeddingDataset {
+    pub dims: usize,
+    /// Row-major `n × dims`.
+    data: Vec<f32>,
+    labels: Vec<u32>,
+    /// class label → row indices.
+    by_class: BTreeMap<u32, Vec<usize>>,
+}
+
+impl EmbeddingDataset {
+    pub fn new(dims: usize, data: Vec<f32>, labels: Vec<u32>) -> EmbeddingDataset {
+        assert!(dims > 0);
+        assert_eq!(data.len(), labels.len() * dims, "data/label size mismatch");
+        let mut by_class: BTreeMap<u32, Vec<usize>> = BTreeMap::new();
+        for (row, &label) in labels.iter().enumerate() {
+            by_class.entry(label).or_default().push(row);
+        }
+        EmbeddingDataset { dims, data, labels, by_class }
+    }
+
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    pub fn embedding(&self, row: usize) -> &[f32] {
+        &self.data[row * self.dims..(row + 1) * self.dims]
+    }
+
+    pub fn label(&self, row: usize) -> u32 {
+        self.labels[row]
+    }
+
+    pub fn classes(&self) -> Vec<u32> {
+        self.by_class.keys().copied().collect()
+    }
+
+    pub fn n_classes(&self) -> usize {
+        self.by_class.len()
+    }
+
+    pub fn class_rows(&self, class: u32) -> &[usize] {
+        self.by_class.get(&class).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+}
+
+/// One N-way K-shot episode with episode-local labels.
+#[derive(Debug, Clone)]
+pub struct Episode {
+    pub n_way: usize,
+    pub k_shot: usize,
+    /// (dataset row, local label) for each support vector.
+    pub support: Vec<(usize, u32)>,
+    /// (dataset row, local label) for each query.
+    pub queries: Vec<(usize, u32)>,
+}
+
+/// Sample an episode: `n_way` distinct classes, `k_shot` support +
+/// `n_query` query samples per class (disjoint).
+pub fn sample_episode(
+    ds: &EmbeddingDataset,
+    rng: &mut Rng,
+    n_way: usize,
+    k_shot: usize,
+    n_query: usize,
+) -> Episode {
+    let classes = ds.classes();
+    assert!(
+        n_way <= classes.len(),
+        "{n_way}-way episode but only {} classes",
+        classes.len()
+    );
+    let chosen = rng.choose_distinct(classes.len(), n_way);
+    let mut support = Vec::with_capacity(n_way * k_shot);
+    let mut queries = Vec::with_capacity(n_way * n_query);
+    for (local, &ci) in chosen.iter().enumerate() {
+        let rows = ds.class_rows(classes[ci]);
+        assert!(
+            rows.len() >= k_shot + n_query,
+            "class {} has only {} samples",
+            classes[ci],
+            rows.len()
+        );
+        let picks = rng.choose_distinct(rows.len(), k_shot + n_query);
+        for &p in &picks[..k_shot] {
+            support.push((rows[p], local as u32));
+        }
+        for &p in &picks[k_shot..] {
+            queries.push((rows[p], local as u32));
+        }
+    }
+    Episode { n_way, k_shot, support, queries }
+}
+
+/// Program an episode's support set and classify its queries.
+/// Returns `(correct, total)`.
+pub fn evaluate_episode(
+    engine: &mut SearchEngine,
+    ds: &EmbeddingDataset,
+    episode: &Episode,
+) -> (usize, usize) {
+    let embs: Vec<&[f32]> = episode.support.iter().map(|&(row, _)| ds.embedding(row)).collect();
+    let labels: Vec<u32> = episode.support.iter().map(|&(_, l)| l).collect();
+    engine.program_support(&embs, &labels);
+    let mut correct = 0;
+    for &(row, truth) in &episode.queries {
+        if engine.search(ds.embedding(row)).label == truth {
+            correct += 1;
+        }
+    }
+    (correct, episode.queries.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::encoding::Encoding;
+    use crate::search::engine::EngineConfig;
+    use crate::search::SearchMode;
+
+    fn toy_dataset(n_classes: usize, per_class: usize, dims: usize) -> EmbeddingDataset {
+        let mut rng = Rng::new(1);
+        let mut data = Vec::new();
+        let mut labels = Vec::new();
+        for c in 0..n_classes {
+            let proto: Vec<f64> = (0..dims).map(|_| rng.range_f64(0.3, 2.7)).collect();
+            for _ in 0..per_class {
+                data.extend(proto.iter().map(|&p| (p + 0.03 * rng.gaussian()).max(0.0) as f32));
+                labels.push(c as u32);
+            }
+        }
+        EmbeddingDataset::new(dims, data, labels)
+    }
+
+    #[test]
+    fn dataset_indexing() {
+        let ds = toy_dataset(5, 4, 8);
+        assert_eq!(ds.len(), 20);
+        assert_eq!(ds.n_classes(), 5);
+        assert_eq!(ds.class_rows(2).len(), 4);
+        assert_eq!(ds.label(4), 1);
+        assert_eq!(ds.embedding(0).len(), 8);
+        assert!(ds.class_rows(99).is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "size mismatch")]
+    fn bad_sizes_panic() {
+        EmbeddingDataset::new(4, vec![0.0; 7], vec![0, 1]);
+    }
+
+    #[test]
+    fn episode_structure() {
+        let ds = toy_dataset(10, 6, 8);
+        let mut rng = Rng::new(2);
+        let ep = sample_episode(&ds, &mut rng, 4, 2, 3);
+        assert_eq!(ep.support.len(), 8);
+        assert_eq!(ep.queries.len(), 12);
+        // local labels cover 0..n_way
+        let mut locals: Vec<u32> = ep.support.iter().map(|&(_, l)| l).collect();
+        locals.sort_unstable();
+        locals.dedup();
+        assert_eq!(locals, vec![0, 1, 2, 3]);
+        // support and query rows are disjoint
+        for &(qrow, _) in &ep.queries {
+            assert!(ep.support.iter().all(|&(srow, _)| srow != qrow));
+        }
+        // support/query of the same local label share the global class
+        for &(srow, sl) in &ep.support {
+            for &(qrow, ql) in &ep.queries {
+                if sl == ql {
+                    assert_eq!(ds.label(srow), ds.label(qrow));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn evaluate_clustered_episode() {
+        let ds = toy_dataset(12, 8, 48);
+        let mut rng = Rng::new(3);
+        let ep = sample_episode(&ds, &mut rng, 10, 3, 4);
+        let cfg = EngineConfig::new(Encoding::Mtmc, 8, SearchMode::Avss, 3.0).ideal();
+        let mut engine = SearchEngine::new(cfg, 48, ep.support.len());
+        let (correct, total) = evaluate_episode(&mut engine, &ds, &ep);
+        assert_eq!(total, 40);
+        assert!(correct as f64 / total as f64 > 0.9, "{correct}/{total}");
+    }
+
+    #[test]
+    #[should_panic(expected = "-way episode")]
+    fn too_many_ways_panics() {
+        let ds = toy_dataset(3, 4, 8);
+        let mut rng = Rng::new(4);
+        sample_episode(&ds, &mut rng, 5, 1, 1);
+    }
+}

@@ -1,0 +1,122 @@
+//! Artifact store: typed access to the `artifacts/` tree produced by
+//! `python/compile/aot.py` (embeddings, labels, raw images, clip
+//! calibrations, controller HLO paths).
+
+use super::EmbeddingDataset;
+use crate::util::binio::{read_tensor, Tensor};
+use crate::util::manifest::Manifest;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Controller training variants exported by the AOT pipeline.
+pub const VARIANTS: [&str; 3] = ["std", "hat_svss", "hat_avss"];
+
+/// Dataset names exported by the AOT pipeline.
+pub const DATASETS: [&str; 2] = ["omniglot", "cub"];
+
+#[derive(Debug, Clone)]
+pub struct ArtifactStore {
+    root: PathBuf,
+    manifest: Manifest,
+}
+
+impl ArtifactStore {
+    pub fn open(root: &Path) -> Result<ArtifactStore> {
+        let manifest = Manifest::load(&root.join("manifest.txt"))
+            .with_context(|| format!("artifact tree at {} incomplete", root.display()))?;
+        Ok(ArtifactStore { root: root.to_path_buf(), manifest })
+    }
+
+    /// Open the default location (`MCAMVSS_ARTIFACTS` or `artifacts/`).
+    pub fn open_default() -> Result<ArtifactStore> {
+        Self::open(&crate::util::artifacts_dir())
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Quantizer clip point calibrated for (dataset, variant).
+    pub fn clip(&self, dataset: &str, variant: &str) -> Result<f64> {
+        self.manifest.get_f64(&format!("clip_{dataset}_{variant}"))
+    }
+
+    pub fn embed_dim(&self, dataset: &str) -> Result<usize> {
+        self.manifest.get_usize(&format!("embed_dim_{dataset}"))
+    }
+
+    pub fn image_hw(&self, dataset: &str) -> Result<usize> {
+        self.manifest.get_usize(&format!("image_hw_{dataset}"))
+    }
+
+    /// Load the embeddings of (dataset, variant, split) as an
+    /// [`EmbeddingDataset`].
+    pub fn embeddings(&self, dataset: &str, variant: &str, split: &str) -> Result<EmbeddingDataset> {
+        let emb_path = self.root.join("data").join(format!("emb_{dataset}_{variant}_{split}.mvt"));
+        let lab_path = self.root.join("data").join(format!("labels_{dataset}_{split}.mvt"));
+        let emb = read_tensor(&emb_path)?;
+        let labels = read_tensor(&lab_path)?;
+        let dims = match emb.dims() {
+            [_, d] => *d,
+            other => bail!("embeddings must be 2-D, got {:?}", other),
+        };
+        let data = emb.as_f32()?.to_vec();
+        let labels: Vec<u32> = labels.as_i32()?.iter().map(|&l| l as u32).collect();
+        Ok(EmbeddingDataset::new(dims, data, labels))
+    }
+
+    /// Raw test-split images `(n, hw, hw)` for the end-to-end path.
+    pub fn test_images(&self, dataset: &str) -> Result<Tensor> {
+        read_tensor(&self.root.join("data").join(format!("images_{dataset}_test.mvt")))
+    }
+
+    /// Test-split labels (global class ids).
+    pub fn test_labels(&self, dataset: &str) -> Result<Vec<u32>> {
+        let t = read_tensor(&self.root.join("data").join(format!("labels_{dataset}_test.mvt")))?;
+        Ok(t.as_i32()?.iter().map(|&l| l as u32).collect())
+    }
+
+    /// Path to the AOT-compiled controller HLO for (dataset, variant) at
+    /// a given batch size.
+    pub fn controller_hlo(&self, dataset: &str, variant: &str, batch: usize) -> PathBuf {
+        self.root
+            .join("hlo")
+            .join(format!("controller_{dataset}_{variant}_b{batch}.hlo.txt"))
+    }
+
+    /// Path to the AOT-compiled L1 Pallas kernel HLO.
+    pub fn kernel_hlo(&self, strings: usize) -> PathBuf {
+        self.root.join("hlo").join(format!("mcam_search_{strings}.hlo.txt"))
+    }
+
+    /// Path to a cross-layer test vector.
+    pub fn testvec(&self, name: &str) -> PathBuf {
+        self.root.join("testvec").join(format!("{name}.mvt"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn open_missing_fails() {
+        assert!(ArtifactStore::open(Path::new("/nonexistent/path")).is_err());
+    }
+
+    // Artifact-dependent behaviour is covered by the integration tests in
+    // rust/tests/, which skip gracefully when artifacts are absent.
+    #[test]
+    fn paths_are_deterministic() {
+        if let Ok(store) = ArtifactStore::open_default() {
+            let p = store.controller_hlo("omniglot", "std", 8);
+            assert!(p.to_string_lossy().ends_with("controller_omniglot_std_b8.hlo.txt"));
+            let k = store.kernel_hlo(4096);
+            assert!(k.to_string_lossy().ends_with("mcam_search_4096.hlo.txt"));
+        }
+    }
+}

@@ -1,0 +1,50 @@
+//! # mcamvss
+//!
+//! Reproduction of *"Efficient and Reliable Vector Similarity Search Using
+//! Asymmetric Encoding with NAND-Flash for Many-Class Few-Shot Learning"*
+//! (cs.AR 2024) as a three-layer rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the serving coordinator and every hardware
+//!   substrate: a cycle-level NAND-flash MCAM device simulator
+//!   ([`device`]), the four code-word encodings ([`encoding`]), the
+//!   SVSS/AVSS search engines ([`search`]), a request router / batcher /
+//!   worker pool ([`coordinator`]), energy + timing accounting
+//!   ([`energy`], [`device::timing`]) and the experiment harnesses that
+//!   regenerate every table and figure of the paper ([`experiments`]).
+//! * **L2/L1 (python, build time only)** — JAX controllers trained with
+//!   Hardware-Aware Training and the Pallas MCAM kernel, AOT-lowered to
+//!   HLO text under `artifacts/` and executed from rust through the PJRT
+//!   C API ([`runtime`]). Python never runs on the request path.
+//!
+//! See `DESIGN.md` for the system inventory and the paper→module map, and
+//! `EXPERIMENTS.md` for measured-vs-paper results.
+
+pub mod baselines;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod device;
+pub mod encoding;
+pub mod energy;
+pub mod experiments;
+pub mod fsl;
+pub mod mapping;
+pub mod metrics;
+pub mod quant;
+pub mod runtime;
+pub mod search;
+pub mod testutil;
+pub mod util;
+
+/// Crate version (mirrors `Cargo.toml`).
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}
+
+/// Number of unit cells (word lines) per NAND string in the MCAM block
+/// — fixed by the 48-layer 3D-NAND architecture of [14] (two MLC flash
+/// devices per unit cell, 24 unit cells per string).
+pub const CELLS_PER_STRING: usize = 24;
+
+/// NAND strings per MCAM block (the paper's 128K-string block).
+pub const STRINGS_PER_BLOCK: usize = 128 * 1024;

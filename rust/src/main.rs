@@ -1,0 +1,335 @@
+//! `mcamvss` — leader binary: info / eval / serve / experiment commands.
+//!
+//! ```text
+//! mcamvss info
+//! mcamvss eval   --dataset omniglot --variant hat_avss --encoding mtmc
+//!                --cl 32 --mode avss --episodes 3 [--ideal]
+//! mcamvss serve  --dataset omniglot --requests 200 --workers 4
+//! mcamvss experiment --filter table2
+//! ```
+
+use anyhow::{bail, Context, Result};
+use mcamvss::cli::Args;
+use mcamvss::config::Config;
+use mcamvss::coordinator::{Coordinator, CoordinatorConfig, Payload};
+use mcamvss::device::variation::VariationModel;
+use mcamvss::encoding::Encoding;
+use mcamvss::experiments::{self, EpisodeSettings};
+use mcamvss::fsl::sample_episode;
+use mcamvss::fsl::store::ArtifactStore;
+use mcamvss::metrics::LatencyHistogram;
+use mcamvss::search::engine::EngineConfig;
+use mcamvss::search::SearchMode;
+use mcamvss::testutil::Rng;
+use std::time::Instant;
+
+fn main() {
+    if let Err(err) = run() {
+        eprintln!("error: {err:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.command.as_deref() {
+        Some("info") | None => cmd_info(),
+        Some("eval") => cmd_eval(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("experiment") => cmd_experiment(&args),
+        Some(other) => bail!("unknown command {other:?} (info | eval | serve | experiment)"),
+    }
+}
+
+fn load_config(args: &Args) -> Result<Config> {
+    let mut cfg = match args.opt("config") {
+        Some(path) => Config::load(std::path::Path::new(path))?,
+        None => Config::preset(args.opt("dataset").unwrap_or("omniglot"))?,
+    };
+    if let Some(v) = args.opt("variant") {
+        cfg.variant = v.to_string();
+    }
+    if let Some(e) = args.opt("encoding") {
+        cfg.encoding = Encoding::from_name(e).context("bad --encoding")?;
+    }
+    if let Some(cl) = args.opt_usize("cl")? {
+        cfg.cl = cl;
+    }
+    if let Some(m) = args.opt("mode") {
+        cfg.mode = SearchMode::from_name(m).context("bad --mode")?;
+    }
+    if let Some(n) = args.opt_usize("n-way")? {
+        cfg.n_way = n;
+    }
+    if let Some(k) = args.opt_usize("k-shot")? {
+        cfg.k_shot = k;
+    }
+    if let Some(q) = args.opt_usize("n-query")? {
+        cfg.n_query = q;
+    }
+    if let Some(e) = args.opt_usize("episodes")? {
+        cfg.episodes = e;
+    }
+    if let Some(w) = args.opt_usize("workers")? {
+        cfg.workers = w;
+    }
+    if args.flag("ideal") {
+        cfg.variation = VariationModel::IDEAL;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn open_store(args: &Args) -> Result<ArtifactStore> {
+    match args.opt("artifacts") {
+        Some(dir) => ArtifactStore::open(std::path::Path::new(dir)),
+        None => ArtifactStore::open_default(),
+    }
+    .context("artifacts missing — run `make artifacts` first")
+}
+
+fn cmd_info() -> Result<()> {
+    println!(
+        "mcamvss {} — NAND-flash MCAM vector similarity search",
+        mcamvss::version()
+    );
+    println!("cells/string: {}", mcamvss::CELLS_PER_STRING);
+    println!("strings/block: {}", mcamvss::STRINGS_PER_BLOCK);
+    match ArtifactStore::open_default() {
+        Ok(store) => {
+            println!(
+                "artifacts: {} ({} manifest keys)",
+                store.root().display(),
+                store.manifest().len()
+            );
+        }
+        Err(_) => println!("artifacts: NOT BUILT (run `make artifacts`)"),
+    }
+    println!("{}", experiments::headline::render_iteration_claims());
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let store = open_store(args)?;
+    let settings = EpisodeSettings {
+        n_way: cfg.n_way,
+        k_shot: cfg.k_shot,
+        n_query: cfg.n_query,
+        episodes: cfg.episodes,
+        seed: cfg.seed,
+    };
+    println!(
+        "eval {} variant={} encoding={} cl={} mode={} ({}x {}-way {}-shot)",
+        cfg.dataset,
+        cfg.variant,
+        cfg.encoding.name(),
+        cfg.cl,
+        cfg.mode.name(),
+        cfg.episodes,
+        cfg.n_way,
+        cfg.k_shot
+    );
+    let t0 = Instant::now();
+    let result = experiments::run_mcam_eval(
+        &store,
+        &cfg.dataset,
+        &cfg.variant,
+        cfg.encoding,
+        cfg.cl,
+        cfg.mode,
+        cfg.variation,
+        settings,
+    )?;
+    println!(
+        "accuracy {}%  energy {:.2} nJ/search  iterations {}  device-throughput {:.1}/s  (wall {:.1}s)",
+        experiments::pct(&result.accuracy),
+        result.nj_per_search,
+        result.iterations_per_search,
+        result.throughput_per_s,
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let store = open_store(args)?;
+    let n_requests = args.opt_usize("requests")?.unwrap_or(200);
+
+    // Episode: program the support set once, then stream query requests.
+    let ds = store.embeddings(&cfg.dataset, &cfg.variant, "test")?;
+    let clip = store.clip(&cfg.dataset, &cfg.variant)?;
+    let mut rng = Rng::new(cfg.seed);
+    let episode = sample_episode(&ds, &mut rng, cfg.n_way, cfg.k_shot, cfg.n_query);
+    let support: Vec<&[f32]> =
+        episode.support.iter().map(|&(row, _)| ds.embedding(row)).collect();
+    let labels: Vec<u32> = episode.support.iter().map(|&(_, l)| l).collect();
+
+    let engine_cfg = EngineConfig::new(cfg.encoding, cfg.cl, cfg.mode, clip)
+        .with_variation(cfg.variation)
+        .with_seed(cfg.seed);
+    let coord_cfg = CoordinatorConfig {
+        workers: cfg.workers,
+        queue_capacity: cfg.queue_capacity,
+        batcher: mcamvss::coordinator::batcher::BatcherConfig {
+            max_batch: cfg.max_batch,
+            ..Default::default()
+        },
+    };
+    println!(
+        "serve {}: {} workers, {} requests, {}-way {}-shot support ({} vectors)",
+        cfg.dataset,
+        cfg.workers,
+        n_requests,
+        cfg.n_way,
+        cfg.k_shot,
+        support.len()
+    );
+    let coord = Coordinator::start(
+        coord_cfg,
+        engine_cfg,
+        ds.dims,
+        &support,
+        &labels,
+        mcamvss::coordinator::worker::identity_embed(),
+    )?;
+
+    // Query stream: cycle through the episode's queries.
+    let mut truth = Vec::with_capacity(n_requests);
+    let t0 = Instant::now();
+    for i in 0..n_requests {
+        let &(row, label) = &episode.queries[i % episode.queries.len()];
+        truth.push(label);
+        coord.submit(Payload::Embedding(ds.embedding(row).to_vec()));
+    }
+    let responses = coord.shutdown();
+    let wall = t0.elapsed();
+
+    let mut latency = LatencyHistogram::default();
+    let mut correct = 0usize;
+    let mut sorted = responses;
+    sorted.sort_by_key(|r| r.id);
+    for r in &sorted {
+        latency.record(r.wall_latency);
+        if r.label == truth[r.id as usize] {
+            correct += 1;
+        }
+    }
+    println!(
+        "served {} requests in {:.2}s  ({:.0} req/s wall)  accuracy {:.2}%",
+        sorted.len(),
+        wall.as_secs_f64(),
+        sorted.len() as f64 / wall.as_secs_f64(),
+        100.0 * correct as f64 / sorted.len().max(1) as f64,
+    );
+    println!(
+        "latency µs: mean {:.0}  p50 {:.0}  p99 {:.0}  max {:.0}",
+        latency.mean_us(),
+        latency.quantile_us(0.5),
+        latency.quantile_us(0.99),
+        latency.max_us()
+    );
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let filter = args.opt("filter").unwrap_or("all");
+    let store = open_store(args)?;
+    let smoke = args.flag("smoke");
+    let out_dir = args.opt("out").map(std::path::PathBuf::from);
+    if let Some(dir) = &out_dir {
+        std::fs::create_dir_all(dir)?;
+    }
+    let write_csv = |name: &str, table: &mcamvss::metrics::CsvTable| -> Result<()> {
+        if let Some(dir) = &out_dir {
+            let path = dir.join(format!("{name}.csv"));
+            std::fs::write(&path, table.render())?;
+            println!("[wrote {}]", path.display());
+        }
+        Ok(())
+    };
+    let settings_for = |ds: &str| {
+        let s = EpisodeSettings::for_dataset(ds);
+        if smoke {
+            s.smoke()
+        } else {
+            s
+        }
+    };
+    let want = |name: &str| filter == "all" || filter == name;
+
+    if want("table1") {
+        println!("{}", experiments::table1::render());
+    }
+    if want("headline") {
+        println!("{}", experiments::headline::render_iteration_claims());
+    }
+    if want("fig2") {
+        println!("{}", experiments::fig2::render());
+    }
+    if want("fig3") || want("fig5") {
+        for enc in [Encoding::B4e, Encoding::Mtmc] {
+            println!("{}", experiments::fig3_5::render_panel_b(enc));
+        }
+    }
+    if want("fig6") {
+        for ds in ["omniglot", "cub"] {
+            let stats = experiments::fig6::run(&store, ds, "std", 8, 2000, 6)?;
+            println!("{}", experiments::fig6::render(&stats));
+        }
+    }
+    if want("fig7") {
+        for ds in ["omniglot", "cub"] {
+            let bars = experiments::fig7::run(&store, ds, 8, settings_for(ds))?;
+            println!("{}", experiments::fig7::render(ds, &bars));
+        }
+    }
+    if want("fig9") {
+        for ds in ["omniglot", "cub"] {
+            let points = experiments::fig9::run(&store, ds, settings_for(ds))?;
+            println!("{}", experiments::fig9::render(ds, &points));
+            let mut csv = mcamvss::metrics::CsvTable::new(&[
+                "series",
+                "cl",
+                "nj_per_search",
+                "accuracy_pct",
+                "ci95_pct",
+            ]);
+            for p in &points {
+                csv.row(&[
+                    p.series.clone(),
+                    p.cl.to_string(),
+                    format!("{:.3}", p.nj_per_search),
+                    format!("{:.3}", p.accuracy_pct),
+                    format!("{:.3}", p.ci95_pct),
+                ]);
+            }
+            write_csv(&format!("fig9_{ds}"), &csv)?;
+        }
+    }
+    if want("table2") {
+        for ds in ["omniglot", "cub"] {
+            let cells = experiments::table2::run(&store, ds, settings_for(ds))?;
+            println!("{}", experiments::table2::render(&cells));
+            let mut csv = mcamvss::metrics::CsvTable::new(&[
+                "dataset",
+                "mode",
+                "accuracy_pct",
+                "iterations",
+                "throughput_per_s",
+            ]);
+            for c in &cells {
+                csv.row(&[
+                    c.dataset.clone(),
+                    c.mode.name().to_string(),
+                    format!("{:.3}", c.result.accuracy.accuracy_pct()),
+                    c.result.iterations_per_search.to_string(),
+                    format!("{:.1}", c.result.throughput_per_s),
+                ]);
+            }
+            write_csv(&format!("table2_{ds}"), &csv)?;
+        }
+    }
+    Ok(())
+}

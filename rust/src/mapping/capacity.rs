@@ -1,0 +1,135 @@
+//! Multi-block capacity planning.
+//!
+//! A single MCAM block holds 128K strings; the paper's Omniglot setting
+//! (2000 support vectors × 64 strings) fills one block exactly, and any
+//! larger support set (more ways, more shots, longer code words) must
+//! shard across blocks. The planner assigns whole support vectors to
+//! blocks (a vector's strings must share word lines, so vectors never
+//! straddle a block) and reports the search-iteration consequences:
+//! blocks search in parallel, so iterations stay per-block while energy
+//! scales with the total sensed strings.
+
+use super::VectorLayout;
+use crate::STRINGS_PER_BLOCK;
+
+/// A sharding plan for `n_vectors` support vectors.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CapacityPlan {
+    pub n_vectors: usize,
+    pub strings_per_vector: usize,
+    pub vectors_per_block: usize,
+    pub blocks: usize,
+    /// Vector index ranges per block (`[start, end)`).
+    pub shards: Vec<(usize, usize)>,
+}
+
+/// Plan the block sharding for a support set under `layout`.
+/// `block_strings` is the per-block capacity (the real device's 128K).
+pub fn plan(layout: &VectorLayout, n_vectors: usize, block_strings: usize) -> CapacityPlan {
+    let spv = layout.strings_per_vector();
+    assert!(
+        spv <= block_strings,
+        "one vector needs {spv} strings > block capacity {block_strings}"
+    );
+    let vectors_per_block = block_strings / spv;
+    let blocks = n_vectors.div_ceil(vectors_per_block).max(1);
+    let mut shards = Vec::with_capacity(blocks);
+    let mut start = 0;
+    while start < n_vectors {
+        let end = (start + vectors_per_block).min(n_vectors);
+        shards.push((start, end));
+        start = end;
+    }
+    if shards.is_empty() {
+        shards.push((0, 0));
+    }
+    CapacityPlan {
+        n_vectors,
+        strings_per_vector: spv,
+        vectors_per_block,
+        blocks: shards.len(),
+        shards,
+    }
+}
+
+/// Plan against the paper's 128K-string block.
+pub fn plan_default(layout: &VectorLayout, n_vectors: usize) -> CapacityPlan {
+    plan(layout, n_vectors, STRINGS_PER_BLOCK)
+}
+
+impl CapacityPlan {
+    /// Total strings occupied across all blocks.
+    pub fn total_strings(&self) -> usize {
+        self.n_vectors * self.strings_per_vector
+    }
+
+    /// Occupancy of the fullest block (0..=1).
+    pub fn peak_utilization(&self, block_strings: usize) -> f64 {
+        self.shards
+            .iter()
+            .map(|&(s, e)| (e - s) * self.strings_per_vector)
+            .fold(0, usize::max) as f64
+            / block_strings as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::encoding::Encoding;
+
+    #[test]
+    fn paper_omniglot_setting_fills_one_block() {
+        // §4.1: 200-way 10-shot at CL=32 needs "up to 128K NAND strings".
+        let layout = VectorLayout::new(48, Encoding::Mtmc, 32);
+        let plan = plan_default(&layout, 2000);
+        assert_eq!(plan.total_strings(), 128_000);
+        assert_eq!(plan.blocks, 1);
+        assert!(plan.peak_utilization(STRINGS_PER_BLOCK) > 0.97);
+    }
+
+    #[test]
+    fn paper_cub_setting_fits_one_block() {
+        // §4.1: 50-way 5-shot at CL=25 occupies "up to 125K strings".
+        let layout = VectorLayout::new(480, Encoding::Mtmc, 25);
+        let plan = plan_default(&layout, 250);
+        assert_eq!(plan.total_strings(), 125_000);
+        assert_eq!(plan.blocks, 1);
+    }
+
+    #[test]
+    fn overflow_shards_across_blocks() {
+        let layout = VectorLayout::new(48, Encoding::Mtmc, 32); // 64 spv
+        let plan = plan_default(&layout, 5000); // 320K strings
+        assert_eq!(plan.blocks, 3);
+        assert_eq!(plan.shards[0], (0, 2048));
+        assert_eq!(plan.shards[2].1, 5000);
+        // every vector assigned exactly once
+        let covered: usize = plan.shards.iter().map(|&(s, e)| e - s).sum();
+        assert_eq!(covered, 5000);
+    }
+
+    #[test]
+    fn small_blocks() {
+        let layout = VectorLayout::new(24, Encoding::Mtmc, 2); // 2 spv
+        let plan = plan(&layout, 7, 6); // 3 vectors/block
+        assert_eq!(plan.vectors_per_block, 3);
+        assert_eq!(plan.blocks, 3);
+        assert_eq!(plan.shards, vec![(0, 3), (3, 6), (6, 7)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "block capacity")]
+    fn vector_larger_than_block_panics() {
+        let layout = VectorLayout::new(480, Encoding::Mtmc, 25); // 500 spv
+        plan(&layout, 1, 100);
+    }
+
+    #[test]
+    fn empty_support() {
+        let layout = VectorLayout::new(48, Encoding::Mtmc, 2);
+        let plan = plan_default(&layout, 0);
+        assert_eq!(plan.blocks, 1);
+        assert_eq!(plan.total_strings(), 0);
+    }
+}

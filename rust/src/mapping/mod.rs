@@ -1,0 +1,243 @@
+//! Vector → NAND-string layout (§2.3 / Fig. 4 of the paper, generalised to
+//! the group-column layout shared with `python/compile/mcam_sim.py`).
+//!
+//! A support vector with `d` dimensions and physical word length `W`
+//! (= `encoding.word_length(cl)`) is padded to `G = ceil(d / 24)` groups
+//! of 24 dimensions and stored in `G × W` adjacent strings:
+//!
+//! ```text
+//! string (g, c), cell l   ←   code word c of dimension 24 g + l
+//! ```
+//!
+//! Because every string of column *c* in group *g* exposes the *same*
+//! dimensions at the same word lines, one word-line application can sense:
+//!
+//! * **SVSS** — column *c* of group *g* only (the query's word *c* drives
+//!   the lines): `G × W` iterations per search;
+//! * **AVSS** — *all W columns* of group *g* at once (the query's single
+//!   4-level word drives the lines): `G` iterations per search — the
+//!   paper's ⌈d/24⌉, a `W×` reduction.
+
+pub mod capacity;
+
+use crate::encoding::Encoding;
+use crate::CELLS_PER_STRING;
+
+/// Layout of one encoded vector across MCAM strings.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct VectorLayout {
+    /// Logical embedding dimensions.
+    pub dims: usize,
+    /// Code word length parameter (base digits for B4WE).
+    pub cl: usize,
+    /// Physical code words per dimension.
+    pub word_length: usize,
+    /// Dimension groups of 24.
+    pub groups: usize,
+}
+
+impl VectorLayout {
+    pub fn new(dims: usize, encoding: Encoding, cl: usize) -> VectorLayout {
+        assert!(dims >= 1, "need at least one dimension");
+        let word_length = encoding.word_length(cl);
+        let groups = dims.div_ceil(CELLS_PER_STRING);
+        VectorLayout { dims, cl, word_length, groups }
+    }
+
+    /// Strings occupied per support vector.
+    pub fn strings_per_vector(&self) -> usize {
+        self.groups * self.word_length
+    }
+
+    /// SVSS search iterations per query (⌈d/24⌉ × W ≈ ⌈CL·d/24⌉).
+    pub fn svss_iterations(&self) -> usize {
+        self.groups * self.word_length
+    }
+
+    /// AVSS search iterations per query (⌈d/24⌉).
+    pub fn avss_iterations(&self) -> usize {
+        self.groups
+    }
+
+    /// String index (within the vector's group of strings) of (g, c).
+    pub fn string_index(&self, group: usize, column: usize) -> usize {
+        debug_assert!(group < self.groups && column < self.word_length);
+        group * self.word_length + column
+    }
+
+    /// Scatter a dimension-major encoded vector (`dims × word_length`
+    /// words, as produced by [`Encoding::encode_vector`]) into per-string
+    /// cell arrays. Padding dimensions hold level 0.
+    pub fn strings_for(&self, words: &[u8]) -> Vec<[u8; CELLS_PER_STRING]> {
+        assert_eq!(
+            words.len(),
+            self.dims * self.word_length,
+            "encoded vector has wrong word count"
+        );
+        let mut strings =
+            vec![[0u8; CELLS_PER_STRING]; self.strings_per_vector()];
+        for dim in 0..self.dims {
+            let group = dim / CELLS_PER_STRING;
+            let lane = dim % CELLS_PER_STRING;
+            for column in 0..self.word_length {
+                strings[self.string_index(group, column)][lane] =
+                    words[dim * self.word_length + column];
+            }
+        }
+        strings
+    }
+
+    /// Build the word-line drive for SVSS iteration (g, c) from the
+    /// query's encoded words (dimension-major, same shape as support).
+    pub fn svss_wordline(
+        &self,
+        query_words: &[u8],
+        group: usize,
+        column: usize,
+    ) -> [u8; CELLS_PER_STRING] {
+        assert_eq!(query_words.len(), self.dims * self.word_length);
+        let mut wl = [0u8; CELLS_PER_STRING];
+        for lane in 0..CELLS_PER_STRING {
+            let dim = group * CELLS_PER_STRING + lane;
+            if dim < self.dims {
+                wl[lane] = query_words[dim * self.word_length + column];
+            }
+        }
+        wl
+    }
+
+    /// Build the word-line drive for AVSS iteration g from the query's
+    /// single 4-level word per dimension.
+    pub fn avss_wordline(&self, query_q4: &[u8], group: usize) -> [u8; CELLS_PER_STRING] {
+        assert_eq!(query_q4.len(), self.dims, "AVSS query needs one word per dim");
+        let mut wl = [0u8; CELLS_PER_STRING];
+        for lane in 0..CELLS_PER_STRING {
+            let dim = group * CELLS_PER_STRING + lane;
+            if dim < self.dims {
+                wl[lane] = query_q4[dim];
+            }
+        }
+        wl
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::forall;
+
+    #[test]
+    fn paper_iteration_counts() {
+        // Omniglot: d=48, MTMC CL=32 → SVSS 64, AVSS 2 (32× reduction).
+        let omni = VectorLayout::new(48, Encoding::Mtmc, 32);
+        assert_eq!(omni.svss_iterations(), 64);
+        assert_eq!(omni.avss_iterations(), 2);
+        // CUB: d=480, MTMC CL=25 → SVSS 500, AVSS 20 (25× reduction).
+        let cub = VectorLayout::new(480, Encoding::Mtmc, 25);
+        assert_eq!(cub.svss_iterations(), 500);
+        assert_eq!(cub.avss_iterations(), 20);
+    }
+
+    #[test]
+    fn strings_per_vector_matches_paper_formula() {
+        // ⌈d×CL/24⌉ for 24 | d — Fig. 4's k.
+        let l = VectorLayout::new(48, Encoding::Mtmc, 2);
+        assert_eq!(l.strings_per_vector(), 4); // 48*2/24
+    }
+
+    #[test]
+    fn scatter_places_words() {
+        let dims = 48;
+        let cl = 2;
+        let l = VectorLayout::new(dims, Encoding::Mtmc, cl);
+        // distinct values per dim so we can trace placement
+        let values: Vec<u32> = (0..dims as u32).map(|d| d % 7).collect();
+        let words = Encoding::Mtmc.encode_vector(&values, cl);
+        let strings = l.strings_for(&words);
+        assert_eq!(strings.len(), 4);
+        for dim in 0..dims {
+            let (g, lane) = (dim / 24, dim % 24);
+            for c in 0..cl {
+                assert_eq!(
+                    strings[l.string_index(g, c)][lane],
+                    words[dim * cl + c],
+                    "dim {dim} col {c}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn padding_lanes_are_zero() {
+        let l = VectorLayout::new(30, Encoding::Mtmc, 3); // 2 groups, 6 pad lanes
+        let values = vec![9u32; 30];
+        let strings = l.strings_for(&Encoding::Mtmc.encode_vector(&values, 3));
+        for c in 0..3 {
+            let s = strings[l.string_index(1, c)];
+            for lane in 6..24 {
+                assert_eq!(s[lane], 0, "pad lane {lane}");
+            }
+        }
+    }
+
+    #[test]
+    fn svss_wordline_selects_column() {
+        let l = VectorLayout::new(48, Encoding::B4e, 3);
+        let values: Vec<u32> = (0..48).map(|d| (d * 7 % 64) as u32).collect();
+        let words = Encoding::B4e.encode_vector(&values, 3);
+        for g in 0..2 {
+            for c in 0..3 {
+                let wl = l.svss_wordline(&words, g, c);
+                for lane in 0..24 {
+                    assert_eq!(wl[lane], words[(g * 24 + lane) * 3 + c]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn avss_wordline_uses_q4() {
+        let l = VectorLayout::new(30, Encoding::Mtmc, 4);
+        let q4: Vec<u8> = (0..30).map(|d| (d % 4) as u8).collect();
+        let wl = l.avss_wordline(&q4, 1);
+        for lane in 0..6 {
+            assert_eq!(wl[lane], q4[24 + lane]);
+        }
+        for lane in 6..24 {
+            assert_eq!(wl[lane], 0);
+        }
+    }
+
+    #[test]
+    fn match_consistency_svss() {
+        // Programming a vector then driving its own SVSS word lines must
+        // produce zero mismatch in every string — for any encoding.
+        forall(
+            "self-match has zero mismatch",
+            48,
+            |rng| {
+                let enc = crate::encoding::ALL_ENCODINGS[rng.below(4)];
+                let cl = 1 + rng.below(3);
+                let dims = 1 + rng.below(60);
+                let values: Vec<u32> =
+                    (0..dims).map(|_| rng.below(enc.levels(cl)) as u32).collect();
+                (enc, cl, dims, values)
+            },
+            |&(enc, cl, dims, ref values)| {
+                let l = VectorLayout::new(dims, enc, cl);
+                let words = enc.encode_vector(values, cl);
+                let strings = l.strings_for(&words);
+                for g in 0..l.groups {
+                    for c in 0..l.word_length {
+                        let wl = l.svss_wordline(&words, g, c);
+                        let s = strings[l.string_index(g, c)];
+                        if wl != s {
+                            return false;
+                        }
+                    }
+                }
+                true
+            },
+        );
+    }
+}

@@ -1,0 +1,260 @@
+//! Metrics: accuracy accumulators with confidence intervals, latency
+//! histograms, throughput meters, and CSV rendering for experiment
+//! output.
+
+use std::time::Duration;
+
+/// Streaming mean/variance (Welford).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    /// Standard error of the mean.
+    pub fn sem(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.std() / (self.n as f64).sqrt()
+        }
+    }
+}
+
+/// Classification accuracy over episodes, with a 95% CI on the episode
+/// means (how few-shot papers report accuracy).
+#[derive(Debug, Clone, Default)]
+pub struct AccuracyMeter {
+    episodes: Welford,
+    correct: u64,
+    total: u64,
+}
+
+impl AccuracyMeter {
+    pub fn push_episode(&mut self, correct: usize, total: usize) {
+        assert!(total > 0);
+        self.episodes.push(correct as f64 / total as f64);
+        self.correct += correct as u64;
+        self.total += total as u64;
+    }
+
+    pub fn episodes(&self) -> u64 {
+        self.episodes.count()
+    }
+
+    /// Mean episode accuracy in percent.
+    pub fn accuracy_pct(&self) -> f64 {
+        self.episodes.mean() * 100.0
+    }
+
+    /// 95% confidence half-width in percent.
+    pub fn ci95_pct(&self) -> f64 {
+        1.96 * self.episodes.sem() * 100.0
+    }
+
+    /// Pooled accuracy over all queries (percent).
+    pub fn pooled_pct(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.correct as f64 / self.total as f64 * 100.0
+        }
+    }
+}
+
+/// Log-bucketed latency histogram (microseconds, factor-of-2 buckets from
+/// 1 µs to ~17 s) with exact count/sum for the mean.
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    buckets: Vec<u64>,
+    count: u64,
+    sum_us: f64,
+    max_us: f64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram { buckets: vec![0; 25], count: 0, sum_us: 0.0, max_us: 0.0 }
+    }
+}
+
+impl LatencyHistogram {
+    pub fn record(&mut self, latency: Duration) {
+        self.record_us(latency.as_secs_f64() * 1e6);
+    }
+
+    pub fn record_us(&mut self, us: f64) {
+        let bucket = if us <= 1.0 {
+            0
+        } else {
+            (us.log2().ceil() as usize).min(self.buckets.len() - 1)
+        };
+        self.buckets[bucket] += 1;
+        self.count += 1;
+        self.sum_us += us;
+        if us > self.max_us {
+            self.max_us = us;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_us / self.count as f64
+        }
+    }
+
+    pub fn max_us(&self) -> f64 {
+        self.max_us
+    }
+
+    /// Approximate quantile from the bucket upper bounds.
+    pub fn quantile_us(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64;
+        let mut seen = 0;
+        for (b, &n) in self.buckets.iter().enumerate() {
+            seen += n;
+            if seen >= target.max(1) {
+                return (1u64 << b) as f64;
+            }
+        }
+        self.max_us
+    }
+}
+
+/// Simple CSV table builder for experiment outputs.
+#[derive(Debug, Clone, Default)]
+pub struct CsvTable {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl CsvTable {
+    pub fn new(header: &[&str]) -> CsvTable {
+        CsvTable { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = self.header.join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::assert_close;
+
+    #[test]
+    fn welford_matches_direct() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let mut w = Welford::default();
+        for &x in &xs {
+            w.push(x);
+        }
+        assert_close(w.mean(), 3.0, 1e-12);
+        assert_close(w.variance(), 2.5, 1e-12);
+        assert_eq!(w.count(), 5);
+    }
+
+    #[test]
+    fn accuracy_meter() {
+        let mut m = AccuracyMeter::default();
+        m.push_episode(8, 10);
+        m.push_episode(6, 10);
+        assert_close(m.accuracy_pct(), 70.0, 1e-12);
+        assert_close(m.pooled_pct(), 70.0, 1e-12);
+        assert!(m.ci95_pct() > 0.0);
+        assert_eq!(m.episodes(), 2);
+    }
+
+    #[test]
+    fn latency_histogram_quantiles() {
+        let mut h = LatencyHistogram::default();
+        for us in [1.0, 2.0, 4.0, 8.0, 1000.0] {
+            h.record_us(us);
+        }
+        assert_eq!(h.count(), 5);
+        assert_close(h.mean_us(), 203.0, 1e-12);
+        assert_eq!(h.max_us(), 1000.0);
+        assert!(h.quantile_us(0.5) <= 8.0);
+        assert!(h.quantile_us(1.0) >= 1000.0 / 2.0);
+    }
+
+    #[test]
+    fn latency_from_duration() {
+        let mut h = LatencyHistogram::default();
+        h.record(Duration::from_millis(2));
+        assert_close(h.mean_us(), 2000.0, 1e-9);
+    }
+
+    #[test]
+    fn csv_renders() {
+        let mut t = CsvTable::new(&["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        assert_eq!(t.render(), "a,b\n1,2\n");
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "width mismatch")]
+    fn csv_rejects_ragged() {
+        let mut t = CsvTable::new(&["a"]);
+        t.row(&["1".into(), "2".into()]);
+    }
+}

@@ -1,0 +1,174 @@
+//! Linear quantization of controller embeddings (mirror of
+//! `python/compile/quant.py`).
+//!
+//! Embeddings are post-ReLU floats; the quantizer covers `[0, clip]` with
+//! `levels` uniform states where `clip = mean + CLIP_SIGMA * std` is
+//! calibrated on the training split (the paper's §3.3 std-clipping) and
+//! shipped in `artifacts/manifest.txt`.
+//!
+//! [`QuantScheme`] captures the paper's two settings: **symmetric** (SVSS
+//! — query and support share the level count) and **asymmetric** (AVSS —
+//! query pinned to 4 levels).
+
+/// Clip-range multiplier (must match `python/compile/quant.py`).
+pub const CLIP_SIGMA: f64 = 2.5;
+
+/// A linear quantizer over `[0, clip]` with `levels` integer states.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QuantSpec {
+    pub levels: usize,
+    pub clip: f64,
+}
+
+impl QuantSpec {
+    pub fn new(levels: usize, clip: f64) -> QuantSpec {
+        assert!(levels >= 1, "levels must be >= 1");
+        assert!(clip > 0.0, "clip must be positive");
+        QuantSpec { levels, clip }
+    }
+
+    pub fn step(&self) -> f64 {
+        if self.levels > 1 {
+            self.clip / (self.levels - 1) as f64
+        } else {
+            self.clip
+        }
+    }
+
+    /// Quantize one float to an integer state in `[0, levels)`.
+    pub fn quantize(&self, x: f64) -> u32 {
+        if self.levels == 1 {
+            return 0;
+        }
+        let clamped = x.clamp(0.0, self.clip);
+        let q = (clamped / self.step()).round();
+        (q as u32).min(self.levels as u32 - 1)
+    }
+
+    /// Quantize a whole vector.
+    pub fn quantize_vec(&self, xs: &[f32]) -> Vec<u32> {
+        xs.iter().map(|&x| self.quantize(x as f64)).collect()
+    }
+
+    pub fn dequantize(&self, q: u32) -> f64 {
+        q as f64 * self.step()
+    }
+}
+
+/// Calibrate the clip point from raw embeddings (`mean + sigma * std`).
+pub fn calibrate_clip(xs: &[f32], sigma: f64) -> f64 {
+    if xs.is_empty() {
+        return 1e-6;
+    }
+    let n = xs.len() as f64;
+    let mean = xs.iter().map(|&x| x as f64).sum::<f64>() / n;
+    let var = xs.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / n;
+    let clip = mean + sigma * var.sqrt();
+    if clip <= 0.0 {
+        xs.iter().cloned().fold(f32::MIN, f32::max).max(1e-6) as f64
+    } else {
+        clip
+    }
+}
+
+/// Query/support quantization pairing (paper §3.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QuantScheme {
+    /// SVSS: query and support share the support's level count.
+    Symmetric,
+    /// AVSS: query pinned to 4 levels over the same clip range.
+    Asymmetric,
+}
+
+impl QuantScheme {
+    /// Level count for the query side, given the support level count.
+    pub fn query_levels(&self, support_levels: usize) -> usize {
+        match self {
+            QuantScheme::Symmetric => support_levels,
+            QuantScheme::Asymmetric => 4,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{assert_close, forall, Rng};
+
+    #[test]
+    fn quantize_bounds() {
+        forall(
+            "quantized state in range",
+            128,
+            |rng: &mut Rng| {
+                let levels = 2 + rng.below(96);
+                let clip = rng.range_f64(0.1, 10.0);
+                let x = rng.range_f64(-5.0, 15.0);
+                (levels, clip, x)
+            },
+            |&(levels, clip, x)| {
+                let q = QuantSpec::new(levels, clip).quantize(x);
+                (q as usize) < levels
+            },
+        );
+    }
+
+    #[test]
+    fn roundtrip_error_bounded() {
+        forall(
+            "roundtrip within half step",
+            128,
+            |rng: &mut Rng| {
+                let levels = 2 + rng.below(96);
+                let clip = rng.range_f64(0.5, 5.0);
+                let x = rng.range_f64(0.0, clip);
+                (levels, clip, x)
+            },
+            |&(levels, clip, x)| {
+                let spec = QuantSpec::new(levels, clip);
+                let err = (spec.dequantize(spec.quantize(x)) - x).abs();
+                err <= spec.step() / 2.0 + 1e-12
+            },
+        );
+    }
+
+    #[test]
+    fn clamps_out_of_range() {
+        let spec = QuantSpec::new(16, 3.0);
+        assert_eq!(spec.quantize(-1.0), 0);
+        assert_eq!(spec.quantize(100.0), 15);
+    }
+
+    #[test]
+    fn calibrate_matches_formula() {
+        let xs = [0.0f32, 1.0, 2.0, 3.0];
+        let mean = 1.5;
+        let std = (1.25f64).sqrt();
+        assert_close(calibrate_clip(&xs, CLIP_SIGMA), mean + CLIP_SIGMA * std, 1e-9);
+    }
+
+    #[test]
+    fn calibrate_degenerate() {
+        assert!(calibrate_clip(&[0.0; 8], CLIP_SIGMA) > 0.0);
+        assert!(calibrate_clip(&[], CLIP_SIGMA) > 0.0);
+    }
+
+    #[test]
+    fn scheme_query_levels() {
+        assert_eq!(QuantScheme::Symmetric.query_levels(97), 97);
+        assert_eq!(QuantScheme::Asymmetric.query_levels(97), 4);
+    }
+
+    #[test]
+    fn asymmetric_alignment() {
+        // Query state q aligns with support value q * (L-1) / 3.
+        let clip = 3.0;
+        let sup = QuantSpec::new(25, clip);
+        let qry = QuantSpec::new(4, clip);
+        for q in 0..4u32 {
+            let x = q as f64 * clip / 3.0;
+            assert_eq!(qry.quantize(x), q);
+            assert_eq!(sup.quantize(x), q * 8);
+        }
+    }
+}

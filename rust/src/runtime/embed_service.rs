@@ -1,0 +1,112 @@
+//! Embedding service: a dedicated thread that owns the PJRT controller
+//! executable (the `xla` crate's handles are `!Send`/`!Sync`) and serves
+//! batch-embed requests over channels. Worker threads hold a cheap,
+//! clonable [`EmbedHandle`] — this is the leader-owns-PJRT topology of
+//! the coordinator (DESIGN.md §3).
+
+use anyhow::{anyhow, Context, Result};
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Reply = Result<Vec<f32>>;
+
+struct EmbedRequest {
+    flat_images: Vec<f32>,
+    n: usize,
+    reply: mpsc::Sender<Reply>,
+}
+
+/// Handle to the embedding service; clonable and `Send + Sync`.
+#[derive(Clone)]
+pub struct EmbedHandle {
+    tx: Arc<Mutex<mpsc::Sender<EmbedRequest>>>,
+}
+
+impl EmbedHandle {
+    /// Embed `n` images (flattened `n*hw*hw` floats); blocks until the
+    /// service thread replies.
+    pub fn embed(&self, flat_images: &[f32], n: usize) -> Result<Vec<f32>> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send(EmbedRequest { flat_images: flat_images.to_vec(), n, reply: reply_tx })
+            .map_err(|_| anyhow!("embed service stopped"))?;
+        reply_rx.recv().map_err(|_| anyhow!("embed service dropped reply"))?
+    }
+
+    /// Adapt into the coordinator's [`crate::coordinator::worker::EmbedFn`].
+    pub fn as_embed_fn(&self) -> crate::coordinator::worker::EmbedFn {
+        let handle = self.clone();
+        Arc::new(move |flat: &[f32], n: usize| handle.embed(flat, n))
+    }
+}
+
+/// The service: owns the thread; dropping it stops the service once all
+/// handles are gone.
+pub struct EmbedService {
+    handle: EmbedHandle,
+    _thread: JoinHandle<()>,
+}
+
+impl EmbedService {
+    /// Spawn the service. The PJRT client + controller are constructed
+    /// *inside* the thread (they are `!Send`).
+    pub fn spawn(
+        hlo_path: PathBuf,
+        batch: usize,
+        image_hw: usize,
+        embed_dim: usize,
+    ) -> Result<EmbedService> {
+        let (tx, rx) = mpsc::channel::<EmbedRequest>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let thread = std::thread::Builder::new()
+            .name("mcamvss-embed".into())
+            .spawn(move || {
+                let controller = (|| -> Result<super::Controller> {
+                    let runtime = super::Runtime::cpu()?;
+                    runtime.load_controller(&hlo_path, batch, image_hw, embed_dim)
+                })();
+                match controller {
+                    Ok(controller) => {
+                        let _ = ready_tx.send(Ok(()));
+                        while let Ok(req) = rx.recv() {
+                            let result = controller.embed_padded(&req.flat_images, req.n);
+                            let _ = req.reply.send(result);
+                        }
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                    }
+                }
+            })
+            .context("spawn embed service")?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("embed service died during startup"))??;
+        Ok(EmbedService {
+            handle: EmbedHandle { tx: Arc::new(Mutex::new(tx)) },
+            _thread: thread,
+        })
+    }
+
+    pub fn handle(&self) -> EmbedHandle {
+        self.handle.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn startup_failure_is_reported() {
+        let err = EmbedService::spawn(PathBuf::from("/nonexistent.hlo.txt"), 1, 4, 4);
+        assert!(err.is_err());
+    }
+
+    // Success paths are exercised by rust/tests/test_e2e.rs and the
+    // e2e_fsl_pipeline example (artifact-dependent).
+}

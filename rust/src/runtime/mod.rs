@@ -1,0 +1,183 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts (controllers, the
+//! L1 Pallas kernel) and executes them on the request path.
+//!
+//! Interchange is HLO *text* (see `python/compile/aot.py`): jax ≥ 0.5
+//! serialized protos use 64-bit instruction ids that the crate's
+//! xla_extension 0.5.1 rejects; `HloModuleProto::from_text_file`
+//! reassigns ids and round-trips cleanly.
+
+pub mod embed_service;
+
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+use crate::util::binio::Tensor;
+
+/// Shared PJRT CPU client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Load + compile an HLO-text module.
+    pub fn compile_hlo(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .with_context(|| format!("compile {}", path.display()))
+    }
+
+    /// Load a controller executable with its batch geometry.
+    pub fn load_controller(
+        &self,
+        path: &Path,
+        batch: usize,
+        image_hw: usize,
+        embed_dim: usize,
+    ) -> Result<Controller> {
+        let exe = self.compile_hlo(path)?;
+        Ok(Controller { exe, batch, image_hw, embed_dim })
+    }
+
+    /// Load the AOT Pallas MCAM-search kernel (fixed string count).
+    pub fn load_mcam_kernel(&self, path: &Path, strings: usize) -> Result<McamKernel> {
+        let exe = self.compile_hlo(path)?;
+        Ok(McamKernel { exe, strings })
+    }
+}
+
+/// A compiled controller: images → embeddings at a fixed batch size.
+pub struct Controller {
+    exe: xla::PjRtLoadedExecutable,
+    pub batch: usize,
+    pub image_hw: usize,
+    pub embed_dim: usize,
+}
+
+impl Controller {
+    /// Embed exactly `batch` images (`batch * hw * hw` floats, NHWC with
+    /// C=1). Returns `batch * embed_dim` floats.
+    pub fn embed_batch(&self, images: &[f32]) -> Result<Vec<f32>> {
+        let expect = self.batch * self.image_hw * self.image_hw;
+        if images.len() != expect {
+            bail!("embed_batch: got {} floats, want {}", images.len(), expect);
+        }
+        let input = xla::Literal::vec1(images).reshape(&[
+            self.batch as i64,
+            self.image_hw as i64,
+            self.image_hw as i64,
+            1,
+        ])?;
+        let result = self.exe.execute::<xla::Literal>(&[input])?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True → 1-tuple.
+        let out = result.to_tuple1()?;
+        let values = out.to_vec::<f32>()?;
+        if values.len() != self.batch * self.embed_dim {
+            bail!(
+                "controller returned {} floats, want {}",
+                values.len(),
+                self.batch * self.embed_dim
+            );
+        }
+        Ok(values)
+    }
+
+    /// Embed `n <= batch` images by padding the batch with zeros.
+    pub fn embed_padded(&self, images: &[f32], n: usize) -> Result<Vec<f32>> {
+        let per = self.image_hw * self.image_hw;
+        if n * per != images.len() {
+            bail!("embed_padded: {} floats for {} images", images.len(), n);
+        }
+        if n > self.batch {
+            bail!("embed_padded: {} images exceed batch {}", n, self.batch);
+        }
+        let mut padded = vec![0f32; self.batch * per];
+        padded[..images.len()].copy_from_slice(images);
+        let mut out = self.embed_batch(&padded)?;
+        out.truncate(n * self.embed_dim);
+        Ok(out)
+    }
+}
+
+/// The AOT-lowered L1 Pallas kernel: one MCAM search iteration over a
+/// fixed-size string block. Used to cross-validate the native rust device
+/// simulator against the exact kernel the HAT training differentiated
+/// through.
+pub struct McamKernel {
+    exe: xla::PjRtLoadedExecutable,
+    pub strings: usize,
+}
+
+impl McamKernel {
+    /// `query`: 24 levels; `support`: `strings × 24` levels.
+    /// Returns (currents f32, total mismatch i32, max mismatch i32).
+    pub fn search(
+        &self,
+        query: &[i32],
+        support: &[i32],
+    ) -> Result<(Vec<f32>, Vec<i32>, Vec<i32>)> {
+        if query.len() != crate::CELLS_PER_STRING {
+            bail!("query must have {} cells", crate::CELLS_PER_STRING);
+        }
+        if support.len() != self.strings * crate::CELLS_PER_STRING {
+            bail!("support must be {} x {}", self.strings, crate::CELLS_PER_STRING);
+        }
+        let q = xla::Literal::vec1(query);
+        let s = xla::Literal::vec1(support)
+            .reshape(&[self.strings as i64, crate::CELLS_PER_STRING as i64])?;
+        let result = self.exe.execute::<xla::Literal>(&[q, s])?[0][0].to_literal_sync()?;
+        let (current, total, max) = result.to_tuple3()?;
+        Ok((
+            current.to_vec::<f32>()?,
+            total.to_vec::<i32>()?,
+            max.to_vec::<i32>()?,
+        ))
+    }
+}
+
+/// Convenience: flatten an image tensor `(n, hw, hw)` into per-image
+/// slices for the controller.
+pub fn image_slice(images: &Tensor, index: usize) -> Result<&[f32]> {
+    let dims = images.dims();
+    if dims.len() != 3 {
+        bail!("images tensor must be 3-D, got {:?}", dims);
+    }
+    let per = dims[1] * dims[2];
+    let data = images.as_f32()?;
+    Ok(&data[index * per..(index + 1) * per])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn image_slice_extracts() {
+        let t = Tensor::F32 { dims: vec![2, 2, 2], data: (0..8).map(|i| i as f32).collect() };
+        assert_eq!(image_slice(&t, 1).unwrap(), &[4.0, 5.0, 6.0, 7.0]);
+    }
+
+    #[test]
+    fn image_slice_rejects_2d() {
+        let t = Tensor::F32 { dims: vec![4, 2], data: vec![0.0; 8] };
+        assert!(image_slice(&t, 0).is_err());
+    }
+
+    // PJRT-dependent paths are exercised by rust/tests/test_runtime.rs
+    // (integration), which skips when artifacts are absent.
+}

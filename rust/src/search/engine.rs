@@ -1,0 +1,435 @@
+//! The VSS engine: programs a support set into an MCAM block and answers
+//! queries through SVSS or AVSS iteration schedules with SA voting.
+//!
+//! This is the L3 hot path. Support strings are laid out *column-major*
+//! (all vectors' string (g, c) adjacent — see `program_support`), so:
+//!
+//! * SVSS iteration (g, c) senses the contiguous range
+//!   `[(g·W + c)·n, (g·W + c + 1)·n)` — one string per support vector;
+//! * AVSS iteration g senses all `W` column ranges of the group under a
+//!   single word-line application.
+//!
+//! Votes accumulate per support vector with the Eq.-2 column weights; the
+//! predicted label is the winner's (winner-take-all voting, as in [14]).
+
+use crate::device::block::McamBlock;
+use crate::device::sense::SenseLadder;
+use crate::device::timing::SearchTiming;
+use crate::device::variation::VariationModel;
+use crate::device::McamParams;
+use crate::encoding::Encoding;
+use crate::energy::{EnergyAccount, EnergyModel};
+use crate::mapping::VectorLayout;
+use crate::quant::QuantSpec;
+use crate::search::SearchMode;
+
+/// Engine configuration (one per experiment point).
+#[derive(Debug, Clone, Copy)]
+pub struct EngineConfig {
+    pub encoding: Encoding,
+    pub cl: usize,
+    pub mode: SearchMode,
+    pub params: McamParams,
+    pub variation: VariationModel,
+    pub ladder_len: usize,
+    /// Quantizer clip point (from `artifacts/manifest.txt` calibration).
+    pub clip: f64,
+    pub seed: u64,
+}
+
+impl EngineConfig {
+    pub fn new(encoding: Encoding, cl: usize, mode: SearchMode, clip: f64) -> EngineConfig {
+        EngineConfig {
+            encoding,
+            cl,
+            mode,
+            params: McamParams::default(),
+            variation: VariationModel::nand_default(),
+            ladder_len: 16,
+            clip,
+            seed: 0x5EED,
+        }
+    }
+
+    pub fn ideal(mut self) -> EngineConfig {
+        self.variation = VariationModel::IDEAL;
+        self
+    }
+
+    pub fn with_variation(mut self, variation: VariationModel) -> EngineConfig {
+        self.variation = variation;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> EngineConfig {
+        self.seed = seed;
+        self
+    }
+}
+
+/// Result of one search.
+#[derive(Debug, Clone)]
+pub struct SearchResult {
+    /// Index of the winning support vector.
+    pub winner: usize,
+    /// Label of the winner (the MANN prediction).
+    pub label: u32,
+    /// Accumulated votes per support vector.
+    pub scores: Vec<f64>,
+    /// MCAM iterations consumed by this search.
+    pub iterations: u64,
+}
+
+/// A programmed MCAM search engine.
+pub struct SearchEngine {
+    cfg: EngineConfig,
+    layout: VectorLayout,
+    block: McamBlock,
+    ladder: SenseLadder,
+    weights: Vec<f64>,
+    labels: Vec<u32>,
+    support_spec: QuantSpec,
+    query_spec: QuantSpec,
+    energy_model: EnergyModel,
+    energy: EnergyAccount,
+    timing: SearchTiming,
+    // scratch buffers reused across searches (hot path: no allocation)
+    currents: Vec<f64>,
+    scores: Vec<f64>,
+}
+
+impl SearchEngine {
+    /// Create an engine for `dims`-dimensional embeddings with capacity
+    /// for `max_vectors` support vectors.
+    pub fn new(cfg: EngineConfig, dims: usize, max_vectors: usize) -> SearchEngine {
+        let layout = VectorLayout::new(dims, cfg.encoding, cfg.cl);
+        let capacity = max_vectors * layout.strings_per_vector();
+        let support_levels = cfg.encoding.levels(cfg.cl);
+        let query_levels = cfg.mode.quant_scheme().query_levels(support_levels);
+        SearchEngine {
+            layout,
+            block: McamBlock::new(capacity, cfg.params, cfg.variation, cfg.seed),
+            ladder: SenseLadder::new(&cfg.params, cfg.ladder_len),
+            weights: cfg.encoding.accumulation_weights(cfg.cl),
+            labels: Vec::new(),
+            support_spec: QuantSpec::new(support_levels, cfg.clip),
+            query_spec: QuantSpec::new(query_levels, cfg.clip),
+            energy_model: EnergyModel::default(),
+            energy: EnergyAccount::default(),
+            timing: SearchTiming::default(),
+            currents: Vec::new(),
+            scores: Vec::new(),
+            cfg,
+        }
+    }
+
+    pub fn layout(&self) -> &VectorLayout {
+        &self.layout
+    }
+
+    pub fn config(&self) -> &EngineConfig {
+        &self.cfg
+    }
+
+    pub fn n_vectors(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn energy(&self) -> &EnergyAccount {
+        &self.energy
+    }
+
+    pub fn timing(&self) -> &SearchTiming {
+        &self.timing
+    }
+
+    /// Configure fault injection for subsequently programmed support
+    /// (reliability ablations; call before [`Self::program_support`]).
+    pub fn set_faults(&mut self, faults: crate::device::faults::FaultModel) {
+        self.block.set_faults(faults);
+    }
+
+    /// Iterations one search will consume in the configured mode.
+    pub fn iterations_per_search(&self) -> usize {
+        match self.cfg.mode {
+            SearchMode::Svss => self.layout.svss_iterations(),
+            SearchMode::Avss => self.layout.avss_iterations(),
+        }
+    }
+
+    /// Erase the block and program a support set (embeddings are raw
+    /// controller outputs; quantization + encoding happen here).
+    ///
+    /// Strings are programmed **column-major** — all vectors' string
+    /// (g, c) are adjacent — so every search iteration senses one
+    /// contiguous block range instead of a `strings_per_vector`-strided
+    /// scatter. On the real device this is just a bit-line assignment
+    /// choice; in the simulator it turned a 24 KiB-stride walk into a
+    /// sequential scan (see EXPERIMENTS.md §Perf, ~3.9x).
+    pub fn program_support(&mut self, embeddings: &[&[f32]], labels: &[u32]) {
+        assert_eq!(embeddings.len(), labels.len(), "one label per vector");
+        self.block.erase();
+        self.labels.clear();
+        self.labels.extend_from_slice(labels);
+        let spv = self.layout.strings_per_vector();
+        let mut all_strings = Vec::with_capacity(embeddings.len() * spv);
+        for emb in embeddings {
+            assert_eq!(emb.len(), self.layout.dims, "embedding dim mismatch");
+            let values = self.support_spec.quantize_vec(emb);
+            let words = self.cfg.encoding.encode_vector(&values, self.cfg.cl);
+            all_strings.extend(self.layout.strings_for(&words));
+        }
+        // column-major: iteration (g, c) owns the contiguous range
+        // [(g*W + c) * n, (g*W + c + 1) * n)
+        let n = embeddings.len();
+        for column in 0..spv {
+            for v in 0..n {
+                self.block.program_string(&all_strings[v * spv + column]);
+            }
+        }
+    }
+
+    /// Execute one search; returns the winner and per-vector scores.
+    pub fn search(&mut self, query_emb: &[f32]) -> SearchResult {
+        assert_eq!(query_emb.len(), self.layout.dims, "query dim mismatch");
+        assert!(!self.labels.is_empty(), "no support programmed");
+        let n = self.labels.len();
+        let w = self.layout.word_length;
+
+        self.scores.clear();
+        self.scores.resize(n, 0.0);
+
+        let mut iterations = 0u64;
+        match self.cfg.mode {
+            SearchMode::Svss => {
+                // Query encoded exactly like the support.
+                let values = self.query_spec.quantize_vec(query_emb);
+                let words = self.cfg.encoding.encode_vector(&values, self.cfg.cl);
+                for g in 0..self.layout.groups {
+                    for c in 0..w {
+                        let wl = self.layout.svss_wordline(&words, g, c);
+                        self.currents.clear();
+                        self.block
+                            .search_range(&wl, (g * w + c) * n, n, &mut self.currents);
+                        let weight = self.weights[c];
+                        for (v, &current) in self.currents.iter().enumerate() {
+                            self.scores[v] += weight * self.ladder.votes(current) as f64;
+                        }
+                        iterations += 1;
+                        self.energy.add_sense(&self.energy_model, n as u64, self.ladder.len());
+                    }
+                }
+            }
+            SearchMode::Avss => {
+                // Query carries one 4-level word per dimension; all W
+                // columns of a group are sensed in a single iteration.
+                let q4: Vec<u8> = query_emb
+                    .iter()
+                    .map(|&x| self.query_spec.quantize(x as f64) as u8)
+                    .collect();
+                for g in 0..self.layout.groups {
+                    let wl = self.layout.avss_wordline(&q4, g);
+                    for c in 0..w {
+                        self.currents.clear();
+                        self.block
+                            .search_range(&wl, (g * w + c) * n, n, &mut self.currents);
+                        let weight = self.weights[c];
+                        for (v, &current) in self.currents.iter().enumerate() {
+                            self.scores[v] += weight * self.ladder.votes(current) as f64;
+                        }
+                    }
+                    iterations += 1; // one word-line application per group
+                    self.energy
+                        .add_sense(&self.energy_model, (n * w) as u64, self.ladder.len());
+                }
+            }
+        }
+
+        self.timing.add_iterations(iterations);
+        self.energy.finish_search();
+
+        let winner = self
+            .scores
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap();
+        SearchResult {
+            winner,
+            label: self.labels[winner],
+            scores: self.scores.clone(),
+            iterations,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::Rng;
+
+    fn cluster_embeddings(
+        rng: &mut Rng,
+        n_classes: usize,
+        per_class: usize,
+        dims: usize,
+        spread: f64,
+    ) -> (Vec<Vec<f32>>, Vec<u32>) {
+        let protos: Vec<Vec<f64>> = (0..n_classes)
+            .map(|_| (0..dims).map(|_| rng.range_f64(0.2, 2.8)).collect())
+            .collect();
+        let mut embs = Vec::new();
+        let mut labels = Vec::new();
+        for (c, proto) in protos.iter().enumerate() {
+            for _ in 0..per_class {
+                embs.push(
+                    proto
+                        .iter()
+                        .map(|&p| (p + spread * rng.gaussian()).max(0.0) as f32)
+                        .collect(),
+                );
+                labels.push(c as u32);
+            }
+        }
+        (embs, labels)
+    }
+
+    fn engine(enc: Encoding, cl: usize, mode: SearchMode) -> SearchEngine {
+        let cfg = EngineConfig::new(enc, cl, mode, 3.0).ideal();
+        SearchEngine::new(cfg, 48, 64)
+    }
+
+    #[test]
+    fn exact_match_wins_every_mode_and_encoding() {
+        for enc in crate::encoding::ALL_ENCODINGS {
+            for mode in [SearchMode::Svss, SearchMode::Avss] {
+                let mut rng = Rng::new(42);
+                let (embs, labels) = cluster_embeddings(&mut rng, 8, 2, 48, 0.0);
+                let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
+                let mut eng = engine(enc, 3, mode);
+                eng.program_support(&refs, &labels);
+                // query == support vector 5 exactly
+                let result = eng.search(&embs[5]);
+                assert_eq!(
+                    result.label, labels[5],
+                    "{enc:?} {mode:?}: exact match must win"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn clustered_classification_ideal_device() {
+        let mut rng = Rng::new(7);
+        let (embs, labels) = cluster_embeddings(&mut rng, 10, 5, 48, 0.05);
+        let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
+        let mut eng = engine(Encoding::Mtmc, 8, SearchMode::Avss);
+        eng.program_support(&refs, &labels);
+        let mut correct = 0;
+        for c in 0..10 {
+            let query: Vec<f32> = embs[c * 5]
+                .iter()
+                .map(|&x| (x as f64 + 0.02 * rng.gaussian()).max(0.0) as f32)
+                .collect();
+            if eng.search(&query).label == c as u32 {
+                correct += 1;
+            }
+        }
+        assert!(correct >= 9, "ideal AVSS should classify clusters: {correct}/10");
+    }
+
+    #[test]
+    fn iteration_counts_match_paper() {
+        let mut rng = Rng::new(1);
+        let (embs, labels) = cluster_embeddings(&mut rng, 2, 1, 48, 0.0);
+        let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
+
+        let cfg = EngineConfig::new(Encoding::Mtmc, 32, SearchMode::Svss, 3.0).ideal();
+        let mut svss = SearchEngine::new(cfg, 48, 4);
+        svss.program_support(&refs, &labels);
+        assert_eq!(svss.search(&embs[0]).iterations, 64);
+
+        let cfg = EngineConfig::new(Encoding::Mtmc, 32, SearchMode::Avss, 3.0).ideal();
+        let mut avss = SearchEngine::new(cfg, 48, 4);
+        avss.program_support(&refs, &labels);
+        assert_eq!(avss.search(&embs[0]).iterations, 2);
+    }
+
+    #[test]
+    fn energy_equal_between_modes_at_same_cl() {
+        let mut rng = Rng::new(2);
+        let (embs, labels) = cluster_embeddings(&mut rng, 4, 2, 48, 0.1);
+        let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
+        let mut energies = Vec::new();
+        for mode in [SearchMode::Svss, SearchMode::Avss] {
+            let cfg = EngineConfig::new(Encoding::Mtmc, 8, mode, 3.0).ideal();
+            let mut eng = SearchEngine::new(cfg, 48, 8);
+            eng.program_support(&refs, &labels);
+            eng.search(&embs[0]);
+            energies.push(eng.energy().nj_per_search());
+        }
+        assert!(
+            (energies[0] - energies[1]).abs() < 1e-9,
+            "SVSS and AVSS sense the same strings: {energies:?}"
+        );
+    }
+
+    #[test]
+    fn scores_len_matches_vectors() {
+        let mut rng = Rng::new(3);
+        let (embs, labels) = cluster_embeddings(&mut rng, 3, 4, 48, 0.1);
+        let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
+        let mut eng = engine(Encoding::Sre, 4, SearchMode::Avss);
+        eng.program_support(&refs, &labels);
+        let result = eng.search(&embs[1]);
+        assert_eq!(result.scores.len(), 12);
+        assert_eq!(result.winner, 1);
+    }
+
+    #[test]
+    fn reprogramming_replaces_support() {
+        let mut rng = Rng::new(4);
+        let (embs, labels) = cluster_embeddings(&mut rng, 4, 1, 48, 0.0);
+        let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
+        let mut eng = engine(Encoding::Mtmc, 4, SearchMode::Avss);
+        eng.program_support(&refs[..2], &labels[..2]);
+        assert_eq!(eng.n_vectors(), 2);
+        eng.program_support(&refs[2..], &labels[2..]);
+        assert_eq!(eng.n_vectors(), 2);
+        let result = eng.search(&embs[2]);
+        assert_eq!(result.label, labels[2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "dim mismatch")]
+    fn wrong_query_dims_panics() {
+        let mut eng = engine(Encoding::Mtmc, 4, SearchMode::Avss);
+        eng.program_support(&[&[0.5f32; 48] as &[f32]], &[0]);
+        eng.search(&[0.5f32; 24]);
+    }
+
+    #[test]
+    #[should_panic(expected = "no support")]
+    fn search_without_support_panics() {
+        let mut eng = engine(Encoding::Mtmc, 4, SearchMode::Avss);
+        eng.search(&[0.5f32; 48]);
+    }
+
+    #[test]
+    fn noisy_device_still_mostly_correct() {
+        let mut rng = Rng::new(5);
+        let (embs, labels) = cluster_embeddings(&mut rng, 8, 4, 48, 0.05);
+        let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
+        let cfg = EngineConfig::new(Encoding::Mtmc, 8, SearchMode::Avss, 3.0);
+        let mut eng = SearchEngine::new(cfg, 48, 64);
+        eng.program_support(&refs, &labels);
+        let mut correct = 0;
+        for c in 0..8 {
+            if eng.search(&embs[c * 4]).label == c as u32 {
+                correct += 1;
+            }
+        }
+        assert!(correct >= 6, "noisy AVSS accuracy too low: {correct}/8");
+    }
+}

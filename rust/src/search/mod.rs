@@ -1,0 +1,67 @@
+//! Vector similarity search over the MCAM device: the symmetric baseline
+//! (SVSS [11]) and the paper's asymmetric search (AVSS, §3.2).
+//!
+//! * [`SearchMode`] — SVSS vs AVSS (iteration plans + quantization
+//!   schemes).
+//! * [`engine::SearchEngine`] — programs a support set into an
+//!   [`crate::device::block::McamBlock`] and executes searches with SA
+//!   voting, energy and timing accounting.
+//! * [`distance`] — ideal (device-free) quantized distances behind the
+//!   Fig. 6 analysis.
+
+pub mod distance;
+pub mod engine;
+
+use crate::quant::QuantScheme;
+
+/// Search mode: word-by-word symmetric search or the paper's asymmetric
+/// single-query-word search.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SearchMode {
+    Svss,
+    Avss,
+}
+
+impl SearchMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SearchMode::Svss => "svss",
+            SearchMode::Avss => "avss",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<SearchMode> {
+        match name {
+            "svss" => Some(SearchMode::Svss),
+            "avss" => Some(SearchMode::Avss),
+            _ => None,
+        }
+    }
+
+    /// The quantization pairing each mode implies (§3.2).
+    pub fn quant_scheme(&self) -> QuantScheme {
+        match self {
+            SearchMode::Svss => QuantScheme::Symmetric,
+            SearchMode::Avss => QuantScheme::Asymmetric,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_roundtrip() {
+        for mode in [SearchMode::Svss, SearchMode::Avss] {
+            assert_eq!(SearchMode::from_name(mode.name()), Some(mode));
+        }
+        assert_eq!(SearchMode::from_name("x"), None);
+    }
+
+    #[test]
+    fn schemes() {
+        assert_eq!(SearchMode::Svss.quant_scheme(), QuantScheme::Symmetric);
+        assert_eq!(SearchMode::Avss.quant_scheme(), QuantScheme::Asymmetric);
+    }
+}

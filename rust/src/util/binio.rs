@@ -1,0 +1,179 @@
+//! MVT1 binary tensor format — mirror of `python/compile/binio.py`.
+//!
+//! ```text
+//! magic  : 4 bytes b"MVT1"
+//! dtype  : u32 LE (0 = f32, 1 = i32)
+//! ndim   : u32 LE
+//! dims   : ndim x u32 LE
+//! data   : row-major LE elements
+//! ```
+
+use anyhow::{bail, Context, Result};
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"MVT1";
+
+/// A dense tensor of `f32` or `i32` with explicit shape.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tensor {
+    F32 { dims: Vec<usize>, data: Vec<f32> },
+    I32 { dims: Vec<usize>, data: Vec<i32> },
+}
+
+impl Tensor {
+    pub fn dims(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { dims, .. } | Tensor::I32 { dims, .. } => dims,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Tensor::F32 { data, .. } => data.len(),
+            Tensor::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            Tensor::I32 { .. } => bail!("tensor is i32, expected f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32 { data, .. } => Ok(data),
+            Tensor::F32 { .. } => bail!("tensor is f32, expected i32"),
+        }
+    }
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut buf = [0u8; 4];
+    r.read_exact(&mut buf)?;
+    Ok(u32::from_le_bytes(buf))
+}
+
+/// Read an MVT1 tensor from `path`.
+pub fn read_tensor(path: &Path) -> Result<Tensor> {
+    let file = File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let mut r = BufReader::new(file);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{}: bad magic {:?}", path.display(), magic);
+    }
+    let dtype = read_u32(&mut r)?;
+    let ndim = read_u32(&mut r)? as usize;
+    if ndim > 8 {
+        bail!("{}: implausible ndim {}", path.display(), ndim);
+    }
+    let mut dims = Vec::with_capacity(ndim);
+    for _ in 0..ndim {
+        dims.push(read_u32(&mut r)? as usize);
+    }
+    let count: usize = dims.iter().product();
+    let mut bytes = vec![0u8; count * 4];
+    r.read_exact(&mut bytes)
+        .with_context(|| format!("{}: truncated data", path.display()))?;
+    match dtype {
+        0 => {
+            let data = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            Ok(Tensor::F32 { dims, data })
+        }
+        1 => {
+            let data = bytes
+                .chunks_exact(4)
+                .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            Ok(Tensor::I32 { dims, data })
+        }
+        other => bail!("{}: unknown dtype code {}", path.display(), other),
+    }
+}
+
+/// Write an MVT1 tensor to `path`.
+pub fn write_tensor(path: &Path, tensor: &Tensor) -> Result<()> {
+    let file = File::create(path).with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(file);
+    w.write_all(MAGIC)?;
+    let (code, dims) = match tensor {
+        Tensor::F32 { dims, .. } => (0u32, dims),
+        Tensor::I32 { dims, .. } => (1u32, dims),
+    };
+    w.write_all(&code.to_le_bytes())?;
+    w.write_all(&(dims.len() as u32).to_le_bytes())?;
+    for &d in dims {
+        w.write_all(&(d as u32).to_le_bytes())?;
+    }
+    match tensor {
+        Tensor::F32 { data, .. } => {
+            for v in data {
+                w.write_all(&v.to_le_bytes())?;
+            }
+        }
+        Tensor::I32 { data, .. } => {
+            for v in data {
+                w.write_all(&v.to_le_bytes())?;
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_f32() {
+        let dir = std::env::temp_dir().join("mcamvss_binio_f32");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.mvt");
+        let t = Tensor::F32 {
+            dims: vec![2, 3],
+            data: vec![1.0, -2.5, 3.0, 0.0, f32::MIN_POSITIVE, 1e9],
+        };
+        write_tensor(&path, &t).unwrap();
+        assert_eq!(read_tensor(&path).unwrap(), t);
+    }
+
+    #[test]
+    fn roundtrip_i32() {
+        let dir = std::env::temp_dir().join("mcamvss_binio_i32");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.mvt");
+        let t = Tensor::I32 {
+            dims: vec![4],
+            data: vec![i32::MIN, -1, 0, i32::MAX],
+        };
+        write_tensor(&path, &t).unwrap();
+        assert_eq!(read_tensor(&path).unwrap(), t);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("mcamvss_binio_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.mvt");
+        std::fs::write(&path, b"NOPE00000000").unwrap();
+        assert!(read_tensor(&path).is_err());
+    }
+
+    #[test]
+    fn dtype_mismatch_errors() {
+        let t = Tensor::F32 { dims: vec![1], data: vec![1.0] };
+        assert!(t.as_i32().is_err());
+        assert!(t.as_f32().is_ok());
+    }
+}

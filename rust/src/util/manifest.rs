@@ -1,0 +1,96 @@
+//! Parser for `artifacts/manifest.txt` — flat `key = value` lines written
+//! by `python/compile/aot.py` (clip calibrations, electrical constants,
+//! dataset dims).
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// Parsed manifest: string keys to string values, with typed accessors.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    entries: HashMap<String, String>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let mut entries = HashMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let Some((key, value)) = line.split_once('=') else {
+                bail!("manifest line {}: missing '=': {:?}", lineno + 1, line);
+            };
+            entries.insert(key.trim().to_string(), value.trim().to_string());
+        }
+        Ok(Manifest { entries })
+    }
+
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read manifest {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.entries.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_f64(&self, key: &str) -> Result<f64> {
+        let raw = self
+            .get(key)
+            .with_context(|| format!("manifest key {:?} missing", key))?;
+        raw.parse()
+            .with_context(|| format!("manifest key {:?}: bad float {:?}", key, raw))
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<usize> {
+        let raw = self
+            .get(key)
+            .with_context(|| format!("manifest key {:?} missing", key))?;
+        raw.parse()
+            .with_context(|| format!("manifest key {:?}: bad int {:?}", key, raw))
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_basic() {
+        let m = Manifest::parse("a = 1.5\n# comment\n\nb=2\nname = conv4\n").unwrap();
+        assert_eq!(m.get_f64("a").unwrap(), 1.5);
+        assert_eq!(m.get_usize("b").unwrap(), 2);
+        assert_eq!(m.get("name"), Some("conv4"));
+        assert_eq!(m.len(), 3);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("just a line").is_err());
+    }
+
+    #[test]
+    fn missing_key_errors() {
+        let m = Manifest::parse("").unwrap();
+        assert!(m.get_f64("nope").is_err());
+        assert!(m.is_empty());
+    }
+
+    #[test]
+    fn value_may_contain_equals() {
+        let m = Manifest::parse("expr = a=b").unwrap();
+        assert_eq!(m.get("expr"), Some("a=b"));
+    }
+}

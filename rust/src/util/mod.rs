@@ -1,0 +1,25 @@
+//! Small shared utilities: binary tensor I/O, JSON/CSV writers, and the
+//! artifact-manifest parser. All hand-rolled — the offline image vendors
+//! no serde/serialization crates.
+
+pub mod binio;
+pub mod json;
+pub mod manifest;
+
+use std::path::{Path, PathBuf};
+
+/// Locate the repository's `artifacts/` directory: `$MCAMVSS_ARTIFACTS` if
+/// set, else `artifacts/` relative to the crate root (works for `cargo
+/// test` / `cargo bench` / examples run from the workspace).
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("MCAMVSS_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    let manifest_dir = env!("CARGO_MANIFEST_DIR");
+    Path::new(manifest_dir).join("artifacts")
+}
+
+/// `true` when the artifact tree (with trained controllers) is present.
+pub fn artifacts_available() -> bool {
+    artifacts_dir().join("manifest.txt").exists()
+}

@@ -1,0 +1,212 @@
+//! Property tests on coordinator invariants: for randomized worker
+//! counts, batch limits, queue capacities and request streams —
+//!
+//! * **delivery**: every submitted request is answered exactly once
+//!   (ids form the exact submitted set, no duplicates, no losses);
+//! * **routing determinism**: predictions match a bare single-threaded
+//!   engine with the same ideal-device configuration, regardless of how
+//!   requests were batched or which replica served them;
+//! * **state isolation**: interleaved submissions from multiple producer
+//!   threads preserve per-request payload→response pairing;
+//! * **backpressure**: `try_submit` never blocks and never loses an
+//!   accepted request.
+
+use mcamvss::coordinator::batcher::BatcherConfig;
+use mcamvss::coordinator::{Coordinator, CoordinatorConfig, Payload};
+use mcamvss::coordinator::worker::identity_embed;
+use mcamvss::encoding::Encoding;
+use mcamvss::search::engine::{EngineConfig, SearchEngine};
+use mcamvss::search::SearchMode;
+use mcamvss::testutil::Rng;
+use std::sync::Arc;
+use std::time::Duration;
+
+const DIMS: usize = 48;
+
+fn support_set(rng: &mut Rng, n_classes: usize, per: usize) -> (Vec<Vec<f32>>, Vec<u32>) {
+    let mut embs = Vec::new();
+    let mut labels = Vec::new();
+    for c in 0..n_classes {
+        let proto: Vec<f64> = (0..DIMS).map(|_| rng.range_f64(0.2, 2.8)).collect();
+        for _ in 0..per {
+            embs.push(
+                proto
+                    .iter()
+                    .map(|&p| (p + 0.03 * rng.gaussian()).max(0.0) as f32)
+                    .collect(),
+            );
+            labels.push(c as u32);
+        }
+    }
+    (embs, labels)
+}
+
+fn engine_cfg() -> EngineConfig {
+    // ideal device + fixed seed → deterministic predictions
+    EngineConfig::new(Encoding::Mtmc, 4, SearchMode::Avss, 3.0).ideal()
+}
+
+#[test]
+fn prop_exactly_once_delivery_and_reference_agreement() {
+    for case in 0..8u64 {
+        let mut rng = Rng::new(0x10C0 + case);
+        let workers = 1 + rng.below(4);
+        let max_batch = 1 + rng.below(9);
+        let n_requests = 1 + rng.below(60);
+        let (embs, labels) = support_set(&mut rng, 5, 3);
+        let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
+
+        // reference: bare engine, same config
+        let mut reference = SearchEngine::new(engine_cfg(), DIMS, refs.len());
+        reference.program_support(&refs, &labels);
+
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                workers,
+                queue_capacity: 128,
+                batcher: BatcherConfig {
+                    max_batch,
+                    max_wait: Duration::from_millis(1),
+                },
+            },
+            engine_cfg(),
+            DIMS,
+            &refs,
+            &labels,
+            identity_embed(),
+        )
+        .unwrap();
+
+        let queries: Vec<Vec<f32>> = (0..n_requests)
+            .map(|_| {
+                let base = &embs[rng.below(embs.len())];
+                base.iter()
+                    .map(|&x| (x as f64 + 0.01 * rng.gaussian()).max(0.0) as f32)
+                    .collect()
+            })
+            .collect();
+        let mut ids = Vec::new();
+        for q in &queries {
+            ids.push(coord.submit(Payload::Embedding(q.clone())));
+        }
+        let mut responses = coord.shutdown();
+
+        // exactly-once: response ids == submitted ids as a set
+        let mut got: Vec<u64> = responses.iter().map(|r| r.id).collect();
+        got.sort_unstable();
+        let mut want = ids.clone();
+        want.sort_unstable();
+        assert_eq!(got, want, "case {case}: delivery not exactly-once");
+
+        // reference agreement (ideal device + per-replica seeds still
+        // share variation=IDEAL so physics is identical)
+        responses.sort_by_key(|r| r.id);
+        for (resp, q) in responses.iter().zip(&queries) {
+            let expect = reference.search(q);
+            assert_eq!(
+                resp.label, expect.label,
+                "case {case} req {}: coordinator diverged from bare engine",
+                resp.id
+            );
+            assert_eq!(resp.winner, expect.winner);
+            assert_eq!(resp.iterations, expect.iterations);
+        }
+    }
+}
+
+#[test]
+fn prop_concurrent_producers_preserve_pairing() {
+    for case in 0..4u64 {
+        let mut rng = Rng::new(0xCAFE + case);
+        let (embs, labels) = support_set(&mut rng, 6, 2);
+        let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
+        let coord = Arc::new(
+            Coordinator::start(
+                CoordinatorConfig {
+                    workers: 2,
+                    queue_capacity: 64,
+                    batcher: BatcherConfig {
+                        max_batch: 4,
+                        max_wait: Duration::from_millis(1),
+                    },
+                },
+                engine_cfg(),
+                DIMS,
+                &refs,
+                &labels,
+                identity_embed(),
+            )
+            .unwrap(),
+        );
+
+        // 3 producers each submit exact support vectors; the response for
+        // id i must carry the label of the vector submitted under id i.
+        let n_classes = 6usize;
+        let per = 2usize;
+        let mut handles = Vec::new();
+        let submitted = Arc::new(std::sync::Mutex::new(Vec::<(u64, u32)>::new()));
+        for p in 0..3usize {
+            let coord = Arc::clone(&coord);
+            let submitted = Arc::clone(&submitted);
+            let embs = embs.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(0xBEEF ^ p as u64);
+                for _ in 0..20 {
+                    let v = rng.below(n_classes * per);
+                    let id = coord.submit(Payload::Embedding(embs[v].clone()));
+                    submitted.lock().unwrap().push((id, (v / per) as u32));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let coord = Arc::try_unwrap(coord).ok().expect("sole owner");
+        let responses = coord.shutdown();
+        let truth: std::collections::HashMap<u64, u32> =
+            submitted.lock().unwrap().iter().copied().collect();
+        assert_eq!(responses.len(), truth.len());
+        for r in &responses {
+            assert_eq!(
+                r.label, truth[&r.id],
+                "case {case}: request/response pairing broken for id {}",
+                r.id
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_try_submit_accounts_every_accept() {
+    let mut rng = Rng::new(0x77);
+    let (embs, labels) = support_set(&mut rng, 3, 2);
+    let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            workers: 1,
+            queue_capacity: 4,
+            batcher: BatcherConfig { max_batch: 2, max_wait: Duration::from_millis(1) },
+        },
+        engine_cfg(),
+        DIMS,
+        &refs,
+        &labels,
+        identity_embed(),
+    )
+    .unwrap();
+    let mut accepted = 0usize;
+    for i in 0..200usize {
+        if coord
+            .try_submit(Payload::Embedding(embs[i % embs.len()].clone()))
+            .is_some()
+        {
+            accepted += 1;
+        }
+    }
+    let responses = coord.shutdown();
+    assert_eq!(
+        responses.len(),
+        accepted,
+        "accepted requests must all be answered"
+    );
+}

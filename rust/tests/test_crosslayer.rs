@@ -1,0 +1,145 @@
+//! Cross-layer integration tests: the rust substrate must agree
+//! bit-for-bit with the python reference through the shared test vectors
+//! under `artifacts/testvec/` (exported by `python/compile/aot.py`).
+//!
+//! All tests skip (with a notice) when artifacts are absent so plain
+//! `cargo test` works before `make artifacts`.
+
+use mcamvss::device::block::McamBlock;
+use mcamvss::device::variation::VariationModel;
+use mcamvss::device::McamParams;
+use mcamvss::encoding::Encoding;
+use mcamvss::fsl::store::ArtifactStore;
+use mcamvss::util::binio::read_tensor;
+use mcamvss::CELLS_PER_STRING;
+
+fn store() -> Option<ArtifactStore> {
+    match ArtifactStore::open_default() {
+        Ok(s) => Some(s),
+        Err(_) => {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+#[test]
+fn encodings_match_python() {
+    let Some(store) = store() else { return };
+    for (enc, cl) in [
+        (Encoding::Sre, 5),
+        (Encoding::B4e, 3),
+        (Encoding::B4we, 3),
+        (Encoding::Mtmc, 5),
+        (Encoding::Mtmc, 8),
+    ] {
+        let base = format!("enc_{}_cl{}", enc.name(), cl);
+        let values = read_tensor(&store.testvec(&format!("{base}_values"))).unwrap();
+        let words = read_tensor(&store.testvec(&format!("{base}_words"))).unwrap();
+        let values = values.as_i32().unwrap();
+        let expected = words.as_i32().unwrap();
+        let word_len = enc.word_length(cl);
+        assert_eq!(expected.len(), values.len() * word_len);
+        for (i, &v) in values.iter().enumerate() {
+            let got = enc.encode(v as u32, cl);
+            let want: Vec<u8> = expected[i * word_len..(i + 1) * word_len]
+                .iter()
+                .map(|&w| w as u8)
+                .collect();
+            assert_eq!(got, want, "{base} value {v}");
+        }
+    }
+}
+
+#[test]
+fn device_currents_match_python_ref() {
+    let Some(store) = store() else { return };
+    let query = read_tensor(&store.testvec("mcam_query")).unwrap();
+    let support = read_tensor(&store.testvec("mcam_support")).unwrap();
+    let current = read_tensor(&store.testvec("mcam_current")).unwrap();
+    let total = read_tensor(&store.testvec("mcam_total")).unwrap();
+    let query: Vec<u8> = query.as_i32().unwrap().iter().map(|&q| q as u8).collect();
+    let support_levels = support.as_i32().unwrap();
+    let expected_current = current.as_f32().unwrap();
+    let expected_total = total.as_i32().unwrap();
+    let n = support.dims()[0];
+
+    // manifest params must match the rust defaults the block uses
+    let params = McamParams {
+        r0: store.manifest().get_f64("r0").unwrap(),
+        alpha: store.manifest().get_f64("alpha").unwrap(),
+        v_bl: store.manifest().get_f64("v_bl").unwrap(),
+    };
+    assert_eq!(params, McamParams::default(), "manifest/default divergence");
+
+    let mut block = McamBlock::new(n, params, VariationModel::IDEAL, 0);
+    for s in 0..n {
+        let mut cells = [0u8; CELLS_PER_STRING];
+        for l in 0..CELLS_PER_STRING {
+            cells[l] = support_levels[s * CELLS_PER_STRING + l] as u8;
+        }
+        block.program_string(&cells);
+    }
+    let mut wordline = [0u8; CELLS_PER_STRING];
+    wordline.copy_from_slice(&query);
+    let mut currents = Vec::new();
+    block.search_range(&wordline, 0, n, &mut currents);
+    for s in 0..n {
+        let rel = (currents[s] - expected_current[s] as f64).abs()
+            / expected_current[s].abs().max(1e-12) as f64;
+        assert!(
+            rel < 1e-5,
+            "string {s}: rust {} vs python {}",
+            currents[s],
+            expected_current[s]
+        );
+        // cross-check the total mismatch through the programmed levels
+        let mut t = 0i32;
+        for l in 0..CELLS_PER_STRING {
+            t += (query[l] as i32 - support_levels[s * CELLS_PER_STRING + l]).abs();
+        }
+        assert_eq!(t, expected_total[s], "string {s} total mismatch");
+    }
+}
+
+#[test]
+fn clip_calibration_matches_embeddings() {
+    // The manifest clip for each (dataset, variant) must equal
+    // mean + 2.5 std of the exported train-split embeddings.
+    let Some(store) = store() else { return };
+    for dataset in ["omniglot", "cub"] {
+        for variant in ["std", "hat_avss"] {
+            let ds = store.embeddings(dataset, variant, "train").unwrap();
+            let mut all = Vec::new();
+            for row in 0..ds.len() {
+                all.extend_from_slice(ds.embedding(row));
+            }
+            let expected = mcamvss::quant::calibrate_clip(&all, mcamvss::quant::CLIP_SIGMA);
+            let manifest = store.clip(dataset, variant).unwrap();
+            let rel = (expected - manifest).abs() / manifest;
+            assert!(
+                rel < 1e-3,
+                "{dataset}/{variant}: recomputed clip {expected} vs manifest {manifest}"
+            );
+        }
+    }
+}
+
+#[test]
+fn embeddings_have_expected_geometry() {
+    let Some(store) = store() else { return };
+    for (dataset, dims, min_classes) in [("omniglot", 48, 200), ("cub", 480, 50)] {
+        let ds = store.embeddings(dataset, "std", "test").unwrap();
+        assert_eq!(ds.dims, dims);
+        assert!(
+            ds.n_classes() >= min_classes,
+            "{dataset}: {} test classes",
+            ds.n_classes()
+        );
+        assert_eq!(store.embed_dim(dataset).unwrap(), dims);
+        // embeddings are post-ReLU
+        for row in 0..ds.len().min(50) {
+            assert!(ds.embedding(row).iter().all(|&x| x >= 0.0));
+        }
+    }
+}

@@ -1,0 +1,154 @@
+//! End-to-end integration: artifact embeddings → episodes → MCAM engine /
+//! coordinator, and the full image → PJRT controller → MCAM pipeline.
+//! Skips when artifacts are absent.
+
+use mcamvss::coordinator::{Coordinator, CoordinatorConfig, Payload};
+use mcamvss::device::variation::VariationModel;
+use mcamvss::encoding::Encoding;
+use mcamvss::experiments::{run_mcam_eval, run_software_baseline, EpisodeSettings};
+use mcamvss::fsl::sample_episode;
+use mcamvss::fsl::store::ArtifactStore;
+use mcamvss::runtime::{image_slice, Runtime};
+use mcamvss::search::engine::{EngineConfig, SearchEngine};
+use mcamvss::search::SearchMode;
+use mcamvss::testutil::Rng;
+use std::sync::Arc;
+
+fn store() -> Option<ArtifactStore> {
+    match ArtifactStore::open_default() {
+        Ok(s) => Some(s),
+        Err(_) => {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+#[test]
+fn omniglot_episode_accuracy_is_sane() {
+    let Some(store) = store() else { return };
+    let settings = EpisodeSettings {
+        n_way: 50,
+        k_shot: 5,
+        n_query: 2,
+        episodes: 2,
+        seed: 7,
+    };
+    let r = run_mcam_eval(
+        &store,
+        "omniglot",
+        "hat_avss",
+        Encoding::Mtmc,
+        8,
+        SearchMode::Avss,
+        VariationModel::nand_default(),
+        settings,
+    )
+    .unwrap();
+    let acc = r.accuracy.accuracy_pct();
+    assert!(acc > 50.0, "50-way MCAM accuracy implausibly low: {acc:.1}%");
+    assert!(r.nj_per_search > 0.0);
+}
+
+#[test]
+fn software_baseline_beats_chance() {
+    let Some(store) = store() else { return };
+    let settings = EpisodeSettings { n_way: 50, k_shot: 5, n_query: 2, episodes: 2, seed: 7 };
+    let acc = run_software_baseline(&store, "omniglot", "std", settings).unwrap();
+    assert!(acc.accuracy_pct() > 50.0, "float baseline too weak: {:.1}%", acc.accuracy_pct());
+}
+
+#[test]
+fn coordinator_serves_episode_with_correct_labels() {
+    let Some(store) = store() else { return };
+    let ds = store.embeddings("omniglot", "hat_avss", "test").unwrap();
+    let clip = store.clip("omniglot", "hat_avss").unwrap();
+    let mut rng = Rng::new(3);
+    let ep = sample_episode(&ds, &mut rng, 20, 5, 2);
+    let support: Vec<&[f32]> = ep.support.iter().map(|&(r, _)| ds.embedding(r)).collect();
+    let labels: Vec<u32> = ep.support.iter().map(|&(_, l)| l).collect();
+
+    let coord = Coordinator::start(
+        CoordinatorConfig { workers: 2, ..Default::default() },
+        EngineConfig::new(Encoding::Mtmc, 8, SearchMode::Avss, clip),
+        ds.dims,
+        &support,
+        &labels,
+        mcamvss::coordinator::worker::identity_embed(),
+    )
+    .unwrap();
+    let mut truth = Vec::new();
+    for &(row, label) in &ep.queries {
+        truth.push(label);
+        coord.submit(Payload::Embedding(ds.embedding(row).to_vec()));
+    }
+    let mut responses = coord.shutdown();
+    assert_eq!(responses.len(), ep.queries.len());
+    responses.sort_by_key(|r| r.id);
+    let correct = responses
+        .iter()
+        .zip(&truth)
+        .filter(|(r, &t)| r.label == t)
+        .count();
+    let acc = correct as f64 / truth.len() as f64;
+    assert!(acc > 0.5, "coordinator episode accuracy {acc:.2}");
+}
+
+#[test]
+fn image_to_prediction_full_stack() {
+    // The complete request path: raw image → PJRT controller (L2 HLO) →
+    // quantize/encode → MCAM search (L3 device) → label.
+    let Some(store) = store() else { return };
+    let runtime = Runtime::cpu().unwrap();
+    let hw = store.image_hw("omniglot").unwrap();
+    let dim = store.embed_dim("omniglot").unwrap();
+    let controller = Arc::new(
+        runtime
+            .load_controller(&store.controller_hlo("omniglot", "hat_avss", 8), 8, hw, dim)
+            .unwrap(),
+    );
+    let images = store.test_images("omniglot").unwrap();
+    let labels = store.test_labels("omniglot").unwrap();
+    let clip = store.clip("omniglot", "hat_avss").unwrap();
+
+    // support: first 8 images of 8 distinct classes, embedded via PJRT
+    let mut class_first: Vec<(u32, usize)> = Vec::new();
+    for (i, &label) in labels.iter().enumerate() {
+        if !class_first.iter().any(|&(l, _)| l == label) {
+            class_first.push((label, i));
+        }
+        if class_first.len() == 8 {
+            break;
+        }
+    }
+    let mut flat = Vec::new();
+    for &(_, idx) in &class_first {
+        flat.extend_from_slice(image_slice(&images, idx).unwrap());
+    }
+    let support_emb = controller.embed_batch(&flat).unwrap();
+    let support: Vec<&[f32]> = (0..8).map(|i| &support_emb[i * dim..(i + 1) * dim]).collect();
+    let local_labels: Vec<u32> = (0..8).collect();
+
+    let cfg = EngineConfig::new(Encoding::Mtmc, 8, SearchMode::Avss, clip).ideal();
+    let mut engine = SearchEngine::new(cfg, dim, 8);
+    engine.program_support(&support, &local_labels);
+
+    // queries: second sample of each chosen class
+    let mut correct = 0;
+    for (local, &(label, _)) in class_first.iter().enumerate() {
+        let qidx = labels
+            .iter()
+            .enumerate()
+            .filter(|&(_, &l)| l == label)
+            .map(|(i, _)| i)
+            .nth(1)
+            .unwrap();
+        let q_emb = controller
+            .embed_padded(image_slice(&images, qidx).unwrap(), 1)
+            .unwrap();
+        if engine.search(&q_emb).label == local as u32 {
+            correct += 1;
+        }
+    }
+    assert!(correct >= 6, "full-stack 8-way accuracy {correct}/8");
+}

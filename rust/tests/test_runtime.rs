@@ -1,0 +1,161 @@
+//! PJRT runtime integration: the three layers must agree end-to-end.
+//!
+//! * controller HLO (L2, trained in jax) executed from rust reproduces
+//!   the embeddings python exported;
+//! * the AOT Pallas kernel (L1) executed from rust matches the native
+//!   rust device simulator (L3 substrate) current-for-current.
+//!
+//! Skips when artifacts are absent.
+
+use mcamvss::device::block::McamBlock;
+use mcamvss::device::variation::VariationModel;
+use mcamvss::device::McamParams;
+use mcamvss::fsl::store::ArtifactStore;
+use mcamvss::runtime::{image_slice, Runtime};
+use mcamvss::testutil::Rng;
+use mcamvss::util::binio::read_tensor;
+use mcamvss::CELLS_PER_STRING;
+
+fn store() -> Option<ArtifactStore> {
+    match ArtifactStore::open_default() {
+        Ok(s) => Some(s),
+        Err(_) => {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+#[test]
+fn controller_hlo_reproduces_exported_embeddings() {
+    let Some(store) = store() else { return };
+    let runtime = Runtime::cpu().unwrap();
+    for (dataset, variant) in [("omniglot", "hat_avss"), ("cub", "std")] {
+        let hw = store.image_hw(dataset).unwrap();
+        let dim = store.embed_dim(dataset).unwrap();
+        let controller = runtime
+            .load_controller(&store.controller_hlo(dataset, variant, 8), 8, hw, dim)
+            .unwrap();
+        let images = store.test_images(dataset).unwrap();
+        let expected = store.embeddings(dataset, variant, "test").unwrap();
+
+        // embed the first 8 test images through PJRT
+        let mut flat = Vec::new();
+        for i in 0..8 {
+            flat.extend_from_slice(image_slice(&images, i).unwrap());
+        }
+        let got = controller.embed_batch(&flat).unwrap();
+        for i in 0..8 {
+            let want = expected.embedding(i);
+            let have = &got[i * dim..(i + 1) * dim];
+            for (d, (&w, &h)) in want.iter().zip(have).enumerate() {
+                assert!(
+                    (w - h).abs() <= 1e-3 * w.abs().max(1.0),
+                    "{dataset}/{variant} image {i} dim {d}: jax {w} vs rust-PJRT {h}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn controller_padded_batch_matches_full() {
+    let Some(store) = store() else { return };
+    let runtime = Runtime::cpu().unwrap();
+    let hw = store.image_hw("omniglot").unwrap();
+    let dim = store.embed_dim("omniglot").unwrap();
+    let controller = runtime
+        .load_controller(&store.controller_hlo("omniglot", "std", 8), 8, hw, dim)
+        .unwrap();
+    let images = store.test_images("omniglot").unwrap();
+    let mut flat = Vec::new();
+    for i in 0..3 {
+        flat.extend_from_slice(image_slice(&images, i).unwrap());
+    }
+    let padded = controller.embed_padded(&flat, 3).unwrap();
+    assert_eq!(padded.len(), 3 * dim);
+    let expected = store.embeddings("omniglot", "std", "test").unwrap();
+    for i in 0..3 {
+        let want = expected.embedding(i);
+        let have = &padded[i * dim..(i + 1) * dim];
+        for (&w, &h) in want.iter().zip(have) {
+            assert!((w - h).abs() <= 1e-3 * w.abs().max(1.0));
+        }
+    }
+}
+
+#[test]
+fn pallas_kernel_matches_native_device() {
+    let Some(store) = store() else { return };
+    let strings = store.manifest().get_usize("kernel_strings").unwrap();
+    let runtime = Runtime::cpu().unwrap();
+    let kernel = runtime.load_mcam_kernel(&store.kernel_hlo(strings), strings).unwrap();
+
+    let mut rng = Rng::new(0xABCD);
+    let query: Vec<i32> = (0..CELLS_PER_STRING).map(|_| rng.below(4) as i32).collect();
+    let support: Vec<i32> =
+        (0..strings * CELLS_PER_STRING).map(|_| rng.below(4) as i32).collect();
+
+    let (kc, kt, km) = kernel.search(&query, &support).unwrap();
+    assert_eq!(kc.len(), strings);
+
+    // native rust device, ideal mode
+    let mut block = McamBlock::new(strings, McamParams::default(), VariationModel::IDEAL, 0);
+    for s in 0..strings {
+        let mut cells = [0u8; CELLS_PER_STRING];
+        for l in 0..CELLS_PER_STRING {
+            cells[l] = support[s * CELLS_PER_STRING + l] as u8;
+        }
+        block.program_string(&cells);
+    }
+    let mut wordline = [0u8; CELLS_PER_STRING];
+    for l in 0..CELLS_PER_STRING {
+        wordline[l] = query[l] as u8;
+    }
+    let mut currents = Vec::new();
+    block.search_range(&wordline, 0, strings, &mut currents);
+
+    for s in 0..strings {
+        let rel = (currents[s] - kc[s] as f64).abs() / (kc[s].abs().max(1e-9)) as f64;
+        assert!(rel < 1e-4, "string {s}: native {} vs pallas {}", currents[s], kc[s]);
+        let mut total = 0i32;
+        let mut mx = 0i32;
+        for l in 0..CELLS_PER_STRING {
+            let m = (query[l] - support[s * CELLS_PER_STRING + l]).abs();
+            total += m;
+            mx = mx.max(m);
+        }
+        assert_eq!(total, kt[s], "string {s} total");
+        assert_eq!(mx, km[s], "string {s} max");
+    }
+}
+
+#[test]
+fn pallas_kernel_matches_python_testvec() {
+    let Some(store) = store() else { return };
+    let strings = store.manifest().get_usize("kernel_strings").unwrap();
+    let runtime = Runtime::cpu().unwrap();
+    let kernel = runtime.load_mcam_kernel(&store.kernel_hlo(strings), strings).unwrap();
+
+    let query = read_tensor(&store.testvec("mcam_query")).unwrap();
+    let support = read_tensor(&store.testvec("mcam_support")).unwrap();
+    let expected = read_tensor(&store.testvec("mcam_current")).unwrap();
+    let n = support.dims()[0];
+    // tile the 256-string testvec into the kernel's 4096-string block
+    let mut tiled = Vec::with_capacity(strings * CELLS_PER_STRING);
+    let sv = support.as_i32().unwrap();
+    while tiled.len() < strings * CELLS_PER_STRING {
+        tiled.extend_from_slice(sv);
+    }
+    tiled.truncate(strings * CELLS_PER_STRING);
+    let (kc, _, _) = kernel.search(query.as_i32().unwrap(), &tiled).unwrap();
+    let want = expected.as_f32().unwrap();
+    for s in 0..n {
+        assert!(
+            (kc[s] - want[s]).abs() <= 1e-4 * want[s].abs(),
+            "string {s}: pallas {} vs python ref {}",
+            kc[s],
+            want[s]
+        );
+    }
+}
