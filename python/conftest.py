@@ -1,4 +1,87 @@
 import os
+import random
 import sys
+import types
+import zlib
 
 sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+# ---------------------------------------------------------------------------
+# hypothesis fallback: the offline image does not ship `hypothesis`, so we
+# register a minimal seeded stand-in (mirroring the rust side's hand-rolled
+# `testutil::forall`). Only the API surface our tests use is provided:
+# @given(kw=strategy), @settings(max_examples=, deadline=), st.integers,
+# st.floats, st.data() with data.draw(strategy). When the real hypothesis
+# is installed it is used untouched.
+# ---------------------------------------------------------------------------
+try:  # pragma: no cover - trivially environment-dependent
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:  # pragma: no cover
+    class _Strategy:
+        def __init__(self, sample):
+            self._sample = sample
+
+        def sample(self, rng):
+            return self._sample(rng)
+
+    def _integers(lo, hi):
+        return _Strategy(lambda rng: rng.randint(lo, hi))
+
+    def _floats(lo, hi):
+        return _Strategy(lambda rng: rng.uniform(lo, hi))
+
+    class _Data:
+        def __init__(self, rng):
+            self._rng = rng
+
+        def draw(self, strategy, label=None):
+            return strategy.sample(self._rng)
+
+    def _data():
+        return _Strategy(lambda rng: _Data(rng))
+
+    def _settings(max_examples=20, **_kwargs):
+        def deco(fn):
+            fn._fallback_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def _given(**strategies):
+        def deco(fn):
+            def wrapper(*args, **kwargs):
+                n = getattr(fn, "_fallback_max_examples", None) or getattr(
+                    wrapper, "_fallback_max_examples", 20
+                )
+                for case in range(n):
+                    # crc32, not hash(): built-in hash is randomized per
+                    # process, which would make the printed repro seed
+                    # unreproducible across runs
+                    seed = zlib.crc32(fn.__qualname__.encode()) * 1_000_003 + case
+                    rng = random.Random(seed)
+                    drawn = {k: s.sample(rng) for k, s in strategies.items()}
+                    try:
+                        fn(*args, **kwargs, **drawn)
+                    except Exception as e:  # noqa: BLE001 - re-raise with repro info
+                        raise AssertionError(
+                            f"fallback-hypothesis case {case} (seed {seed}) "
+                            f"falsified {fn.__qualname__} with {drawn!r}"
+                        ) from e
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__qualname__ = fn.__qualname__
+            return wrapper
+
+        return deco
+
+    _hyp = types.ModuleType("hypothesis")
+    _hyp.given = _given
+    _hyp.settings = _settings
+    _st = types.ModuleType("hypothesis.strategies")
+    _st.integers = _integers
+    _st.floats = _floats
+    _st.data = _data
+    _hyp.strategies = _st
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st

@@ -1,0 +1,76 @@
+"""The committed golden-parity fixtures must stay consistent with the
+generator's reference functions (guards against hand-editing the JSON or
+drifting the encoders/quantizer without regenerating)."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import encodings as enc
+from compile.dump_fixtures import _weighted_word_distance
+from compile.kernels.ref import ref_search_np
+from compile.quant import QuantSpec, quantize_np
+
+FIXTURE = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__)))),
+    "rust",
+    "tests",
+    "fixtures",
+    "golden_parity.json",
+)
+
+
+@pytest.fixture(scope="module")
+def doc():
+    assert os.path.exists(FIXTURE), (
+        f"{FIXTURE} missing — run python/compile/dump_fixtures.py"
+    )
+    with open(FIXTURE) as fh:
+        return json.load(fh)
+
+
+def test_all_four_encodings_covered(doc):
+    names = {c["encoding"] for c in doc["cases"]}
+    assert names == {"mtmc", "b4e", "b4we", "sre"}
+
+
+def test_quantized_values_match_committed_floats(doc):
+    for case in doc["cases"]:
+        sspec = QuantSpec(levels=case["levels"], clip=case["clip"])
+        query = np.array(case["query"], dtype=np.float64)
+        support = np.array(case["support"], dtype=np.float64)
+        assert list(quantize_np(query, sspec)) == case["query_values_sym"]
+        assert list(quantize_np(query, QuantSpec(4, case["clip"]))) == case["query_values_q4"]
+        got = quantize_np(support, sspec)
+        assert [list(map(int, row)) for row in got] == case["support_values"]
+
+
+def test_words_and_distances_match_committed_values(doc):
+    for case in doc["cases"]:
+        name, cl = case["encoding"], case["cl"]
+        s_values = np.array(case["support_values"])
+        s_words = enc.encode(s_values, name, cl)
+        weights = enc.accumulation_weights(name, cl)
+        for v, want in enumerate(case["support_words"]):
+            assert list(map(int, s_words[v].reshape(-1))) == want, f"{name} cl={cl} row {v}"
+        q_words = enc.encode(np.array(case["query_values_sym"]), name, cl)
+        q4 = np.array(case["query_values_q4"])
+        for v in range(s_values.shape[0]):
+            svss = _weighted_word_distance(q_words, s_words[v], weights)
+            assert svss == case["svss_distance"][v], f"{name} cl={cl} row {v}"
+            avss = float(
+                (np.abs(q4[:, None].astype(np.int64) - s_words[v].astype(np.int64)) * weights).sum()
+            )
+            assert avss == case["avss_distance"][v], f"{name} cl={cl} row {v}"
+
+
+def test_device_block_matches_ref_kernel(doc):
+    device = doc["device"]
+    query = np.array(device["query"])
+    support = np.array(device["support"])
+    current, total, mx = ref_search_np(query, support)
+    np.testing.assert_allclose(current, np.array(device["current"]), rtol=1e-12)
+    assert list(map(int, total)) == device["total_mismatch"]
+    assert list(map(int, mx)) == device["max_mismatch"]

@@ -7,10 +7,10 @@
 //! * **paper targets** — regenerate every table/figure of the paper's
 //!   evaluation (table1, fig2, fig3, fig5, fig6, fig7, fig9_omniglot,
 //!   fig9_cub, table2, headline); these print the same rows/series the
-//!   paper reports and are recorded in EXPERIMENTS.md;
+//!   paper reports and are recorded in DESIGN.md §Perf;
 //! * **perf targets** (`perf_`) — microbenchmarks of the L3 hot path
-//!   (block search, engine end-to-end, coordinator overhead) with
-//!   throughput numbers for EXPERIMENTS.md §Perf.
+//!   (block search, engine end-to-end, batched/sharded search,
+//!   coordinator overhead) with throughput numbers for DESIGN.md §Perf.
 
 use mcamvss::coordinator::{Coordinator, CoordinatorConfig, Payload};
 use mcamvss::device::block::McamBlock;
@@ -178,6 +178,10 @@ fn main() {
         section("perf_engine");
         perf_engine();
     }
+    if want("perf_batch_shards") {
+        section("perf_batch_shards");
+        perf_batch_shards();
+    }
     if want("perf_coordinator") {
         section("perf_coordinator");
         perf_coordinator();
@@ -259,6 +263,60 @@ fn perf_engine() {
             n_vectors * engine.layout().strings_per_vector(),
             dt / reps as f64 * 1e3,
             reps as f64 / dt
+        );
+    }
+    println!();
+}
+
+/// Batched vs scalar search across 1/2/4/8 MCAM shards at the paper's
+/// Omniglot operating point (2000 support vectors). Scalar issues one
+/// `search` per query; batched drains the same queries through a single
+/// `search_batch` call (amortized encoding + one shard fan-out per batch).
+fn perf_batch_shards() {
+    let mut rng = Rng::new(5);
+    let dims = 48;
+    let n_vectors = 2000; // 200-way 10-shot
+    let batch_size = 8;
+    let embs: Vec<Vec<f32>> = (0..n_vectors)
+        .map(|_| (0..dims).map(|_| rng.range_f64(0.0, 3.0) as f32).collect())
+        .collect();
+    let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
+    let labels: Vec<u32> = (0..n_vectors as u32).map(|i| i / 10).collect();
+    let queries: Vec<&[f32]> = refs.iter().take(batch_size).copied().collect();
+    let reps = 6;
+    println!("{n_vectors} vectors, MTMC cl=8 AVSS, batch size {batch_size}, {reps} reps");
+    let mut baseline_batched = 0.0f64;
+    for shards in [1usize, 2, 4, 8] {
+        let cfg = EngineConfig::new(Encoding::Mtmc, 8, SearchMode::Avss, 3.0)
+            .with_variation(VariationModel::nand_default())
+            .with_seed(7)
+            .with_shards(shards);
+        let mut engine = SearchEngine::new(cfg, dims, n_vectors);
+        engine.program_support(&refs, &labels);
+        engine.search_batch(&queries); // warmup
+
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            for q in &queries {
+                engine.search(q);
+            }
+        }
+        let scalar = (reps * batch_size) as f64 / t0.elapsed().as_secs_f64();
+
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            engine.search_batch(&queries);
+        }
+        let batched = (reps * batch_size) as f64 / t0.elapsed().as_secs_f64();
+
+        if shards == 1 {
+            baseline_batched = batched;
+        }
+        println!(
+            "shards={shards}: scalar {scalar:.0}/s, batched {batched:.0}/s \
+             (batched/scalar {:.2}x, vs 1-shard batched {:.2}x)",
+            batched / scalar,
+            batched / baseline_batched.max(1e-9),
         );
     }
     println!();

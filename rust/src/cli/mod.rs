@@ -16,8 +16,8 @@ pub struct Args {
 /// Option keys that take a value (everything else after `--` is a flag).
 const VALUE_KEYS: &[&str] = &[
     "config", "dataset", "variant", "encoding", "cl", "mode", "n-way", "k-shot",
-    "n-query", "episodes", "workers", "requests", "seed", "out", "artifacts",
-    "filter", "batch",
+    "n-query", "episodes", "workers", "shards", "requests", "seed", "out",
+    "artifacts", "filter", "batch",
 ];
 
 impl Args {

@@ -27,6 +27,8 @@ pub struct Config {
     pub workers: usize,
     pub queue_capacity: usize,
     pub max_batch: usize,
+    /// MCAM blocks the support set is sharded across (per engine replica).
+    pub shards: usize,
     pub ladder_len: usize,
     pub variation: VariationModel,
     pub seed: u64,
@@ -48,6 +50,7 @@ impl Config {
             workers: 2,
             queue_capacity: 256,
             max_batch: 8,
+            shards: 1,
             ladder_len: 16,
             variation: VariationModel::nand_default(),
             seed: 0x5EED,
@@ -69,6 +72,7 @@ impl Config {
             workers: 2,
             queue_capacity: 256,
             max_batch: 8,
+            shards: 1,
             ladder_len: 16,
             variation: VariationModel::nand_default(),
             seed: 0x5EED,
@@ -125,6 +129,9 @@ impl Config {
         if let Some(b) = doc.get_int("server", "max_batch") {
             cfg.max_batch = b as usize;
         }
+        if let Some(s) = doc.get_int("server", "shards") {
+            cfg.shards = s as usize;
+        }
         if let Some(l) = doc.get_int("device", "ladder_len") {
             cfg.ladder_len = l as usize;
         }
@@ -156,6 +163,9 @@ impl Config {
         }
         if self.workers == 0 {
             bail!("need at least one worker");
+        }
+        if self.shards == 0 {
+            bail!("need at least one MCAM shard");
         }
         if self.encoding == Encoding::B4e && self.cl > 9 {
             bail!("B4E beyond CL=9 overflows 4^CL levels (paper sweeps 1..9)");
@@ -190,6 +200,7 @@ mode = "svss"
 n_way = 10
 [server]
 workers = 4
+shards = 2
 [device]
 program_sigma = 0.3
 "#,
@@ -203,6 +214,7 @@ program_sigma = 0.3
         assert_eq!(cfg.mode, SearchMode::Svss);
         assert_eq!(cfg.n_way, 10);
         assert_eq!(cfg.workers, 4);
+        assert_eq!(cfg.shards, 2);
         assert_eq!(cfg.variation.program_sigma, 0.3);
         // untouched fields keep the preset
         assert_eq!(cfg.k_shot, 5);

@@ -2,8 +2,10 @@
 //! of up to `max_batch`, flushing early after `max_wait`, and round-robins
 //! batches across worker queues.
 //!
-//! Batching matters for the PJRT controller (fixed-batch executables
-//! amortize dispatch) and keeps MCAM search cache-warm per worker.
+//! Batching matters twice: the PJRT controller's fixed-batch executables
+//! amortize dispatch, and each batch drains into one
+//! `SearchEngine::search_batch` call on its worker, amortizing query
+//! encoding and per-shard fan-out across the whole batch.
 
 use super::queue::BoundedQueue;
 use super::{Request, ServerStats};

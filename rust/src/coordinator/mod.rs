@@ -131,8 +131,11 @@ impl Coordinator {
         for w in 0..cfg.workers {
             // Each replica gets a distinct variation seed: distinct
             // physical blocks, like plane-level replication on a die.
+            // Derivation goes through the same seeded-stream helper the
+            // engine uses for its shards, so a fixed engine seed replays
+            // the whole coordinator deterministically.
             let mut ecfg = engine_cfg;
-            ecfg.seed = engine_cfg.seed ^ (w as u64).wrapping_mul(0x9E37_79B9);
+            ecfg.seed = crate::testutil::derive_seed(engine_cfg.seed, 0x1000 + w as u64);
             let mut engine = SearchEngine::new(ecfg, dims, support.len());
             engine.program_support(support, labels);
             engines.push(engine);

@@ -1,7 +1,9 @@
 //! Worker pool: each worker owns a replicated MCAM [`SearchEngine`] and an
 //! embedding function (PJRT controller in production, identity for
 //! pre-embedded requests/tests), consumes request batches, and appends
-//! responses.
+//! responses. A batch is answered with a single
+//! [`SearchEngine::search_batch`] call, so the batcher's grouping directly
+//! amortizes query encoding and shard fan-out on the device path.
 
 use super::queue::BoundedQueue;
 use super::{Payload, Request, Response, ServerStats};
@@ -102,22 +104,36 @@ fn process_batch(
         }
     }
 
-    let mut out = Vec::with_capacity(batch.len());
+    // The whole batch drains into one `search_batch` call: query encoding
+    // and shard fan-out are amortized across every request of the batch
+    // instead of paid per search.
+    let mut pending: Vec<&Request> = Vec::with_capacity(batch.len());
+    let mut queries: Vec<&[f32]> = Vec::with_capacity(batch.len());
     let mut img_cursor = 0usize;
     for req in &batch {
-        let emb: &[f32] = match &req.payload {
-            Payload::Embedding(e) => e,
+        match &req.payload {
+            Payload::Embedding(e) => {
+                pending.push(req);
+                queries.push(e);
+            }
             Payload::Image(_) => {
                 if img_cursor >= image_embeddings.len() {
                     continue; // dropped by controller failure
                 }
-                let e = &image_embeddings[img_cursor];
+                pending.push(req);
+                queries.push(&image_embeddings[img_cursor]);
                 img_cursor += 1;
-                e
             }
-        };
-        let result = engine.search(emb);
-        out.push(Response {
+        }
+    }
+    if queries.is_empty() {
+        return Vec::new();
+    }
+    let results = engine.search_batch(&queries);
+    pending
+        .iter()
+        .zip(results)
+        .map(|(req, result)| Response {
             id: req.id,
             label: result.label,
             winner: result.winner,
@@ -125,9 +141,8 @@ fn process_batch(
             device_latency_us: result.iterations as f64
                 * crate::device::timing::SEARCH_ITERATION_US,
             iterations: result.iterations,
-        });
-    }
-    out
+        })
+        .collect()
 }
 
 #[cfg(test)]

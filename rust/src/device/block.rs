@@ -9,7 +9,7 @@
 //!
 //! The search hot path is the crate's performance-critical kernel (3M
 //! cell evaluations per iteration at full block occupancy); see
-//! EXPERIMENTS.md §Perf for the optimization log.
+//! DESIGN.md §Perf for the optimization log.
 
 use super::faults::FaultModel;
 use super::variation::VariationModel;
@@ -28,7 +28,7 @@ pub struct McamBlock {
     /// Program-time per-cell resistance variation factor, `capacity * 24`.
     /// (Kept separate from the levels instead of expanding per-drive
     /// resistances: 120 B/string of traffic instead of 384 B — see
-    /// EXPERIMENTS.md §Perf.)
+    /// DESIGN.md §Perf.)
     var: Vec<f32>,
     /// 4x4 match-resistance lookup `lut[q][s]` (L1-resident).
     lut: [[f32; 4]; 4],

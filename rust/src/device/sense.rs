@@ -49,7 +49,7 @@ impl SenseLadder {
     pub fn votes(&self, current: f64) -> u32 {
         // The ladder is sorted ascending → binary search would work, but
         // with <= 32 thresholds a linear scan is faster and branch-
-        // predictable; see EXPERIMENTS.md §Perf.
+        // predictable; see DESIGN.md §Perf.
         let mut votes = 0;
         for &t in &self.thresholds {
             if current > t {

@@ -2,6 +2,13 @@
 //! spread from fabrication + program operations, modeled as a lognormal
 //! multiplicative factor on each cell's resistance (fixed at program
 //! time), plus optional per-read current noise (sensing noise).
+//!
+//! Determinism contract: this model holds no RNG of its own — every
+//! sample is drawn from the caller-provided [`Rng`], which each
+//! [`crate::device::block::McamBlock`] seeds from `EngineConfig::with_seed`
+//! via [`crate::testutil::derive_seed`] (one decorrelated stream per
+//! shard/replica). A fixed seed therefore replays program variation and
+//! read noise bit-for-bit; `rust/tests/test_determinism.rs` pins this.
 
 use crate::testutil::Rng;
 

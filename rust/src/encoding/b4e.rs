@@ -62,4 +62,30 @@ mod tests {
     fn rejects_overflow() {
         encode_b4e(16, 2, &mut Vec::new());
     }
+
+    #[test]
+    fn vector_roundtrip_through_encode_vector() {
+        // Whole-vector round-trip: dimension-major encode_vector output
+        // decodes per-dimension chunk back to the original values.
+        use crate::encoding::Encoding;
+        forall(
+            "b4e encode_vector roundtrip",
+            64,
+            |rng| {
+                let cl = 1 + rng.below(6);
+                let dims = 1 + rng.below(24);
+                let values: Vec<u32> = (0..dims)
+                    .map(|_| rng.below(4usize.pow(cl as u32)) as u32)
+                    .collect();
+                (cl, values)
+            },
+            |&(cl, ref values)| {
+                let words = Encoding::B4e.encode_vector(values, cl);
+                words
+                    .chunks(cl)
+                    .zip(values)
+                    .all(|(chunk, &v)| decode_b4e(chunk) == v)
+            },
+        );
+    }
 }

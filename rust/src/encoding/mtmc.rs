@@ -125,6 +125,57 @@ mod tests {
     }
 
     #[test]
+    fn thermometer_monotone_superset() {
+        // Cumulative/thermometer invariant: the code for level k dominates
+        // the code for level k−1 elementwise (enc(k)_j >= enc(k−1)_j for
+        // every word j) and raises exactly one word by one level — the
+        // "superset" structure that makes word sums decode the value.
+        forall(
+            "mtmc level k is a superset of level k-1",
+            256,
+            |rng| {
+                let cl = 1 + rng.below(32);
+                let k = 1 + rng.below(3 * cl) as u32;
+                (cl, k)
+            },
+            |&(cl, k)| {
+                let (mut prev, mut curr) = (Vec::new(), Vec::new());
+                encode_mtmc(k - 1, cl, &mut prev);
+                encode_mtmc(k, cl, &mut curr);
+                let dominated = prev.iter().zip(&curr).all(|(&a, &b)| b >= a);
+                // signed arithmetic: on a regression (b < a) this must
+                // report the counterexample, not overflow-panic
+                let raised: i32 = curr
+                    .iter()
+                    .zip(&prev)
+                    .map(|(&b, &a)| b as i32 - a as i32)
+                    .sum();
+                dominated && raised == 1
+            },
+        );
+    }
+
+    #[test]
+    fn words_are_monotone_in_value() {
+        // Every word position is non-decreasing as the value grows (the
+        // panel-wide consequence of the superset property).
+        for cl in [2usize, 5, 8, 32] {
+            let mut prev: Option<Vec<u8>> = None;
+            for value in 0..=(3 * cl) as u32 {
+                let mut curr = Vec::new();
+                encode_mtmc(value, cl, &mut curr);
+                if let Some(prev) = prev {
+                    assert!(
+                        prev.iter().zip(&curr).all(|(&a, &b)| b >= a),
+                        "cl={cl} value={value}"
+                    );
+                }
+                prev = Some(curr);
+            }
+        }
+    }
+
+    #[test]
     #[should_panic(expected = "out of range")]
     fn rejects_overflow() {
         encode_mtmc(16, 5, &mut Vec::new());

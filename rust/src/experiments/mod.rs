@@ -1,7 +1,7 @@
 //! Experiment harnesses: one module per table/figure of the paper
 //! (DESIGN.md §5 maps each to its bench target). Every harness returns
 //! typed rows plus a rendered text table so `cargo bench` regenerates the
-//! paper's artifacts and EXPERIMENTS.md records paper-vs-measured.
+//! paper's artifacts with paper-vs-measured annotations inline.
 
 pub mod ablation;
 pub mod fig2;

@@ -16,8 +16,9 @@
 //!   HLO text under `artifacts/` and executed from rust through the PJRT
 //!   C API ([`runtime`]). Python never runs on the request path.
 //!
-//! See `DESIGN.md` for the system inventory and the paper→module map, and
-//! `EXPERIMENTS.md` for measured-vs-paper results.
+//! See `DESIGN.md` (repository root) for the system inventory, the
+//! paper→module map, the shard/batch search layer, and the perf log;
+//! `cargo bench` regenerates the measured-vs-paper tables.
 
 pub mod baselines;
 pub mod cli;

@@ -73,6 +73,9 @@ fn load_config(args: &Args) -> Result<Config> {
     if let Some(w) = args.opt_usize("workers")? {
         cfg.workers = w;
     }
+    if let Some(s) = args.opt_usize("shards")? {
+        cfg.shards = s;
+    }
     if args.flag("ideal") {
         cfg.variation = VariationModel::IDEAL;
     }
@@ -168,7 +171,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
     let engine_cfg = EngineConfig::new(cfg.encoding, cfg.cl, cfg.mode, clip)
         .with_variation(cfg.variation)
-        .with_seed(cfg.seed);
+        .with_seed(cfg.seed)
+        .with_shards(cfg.shards);
     let coord_cfg = CoordinatorConfig {
         workers: cfg.workers,
         queue_capacity: cfg.queue_capacity,
@@ -178,9 +182,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         },
     };
     println!(
-        "serve {}: {} workers, {} requests, {}-way {}-shot support ({} vectors)",
+        "serve {}: {} workers x {} shard(s), {} requests, {}-way {}-shot support ({} vectors)",
         cfg.dataset,
         cfg.workers,
+        cfg.shards,
         n_requests,
         cfg.n_way,
         cfg.k_shot,

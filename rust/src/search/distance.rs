@@ -155,4 +155,75 @@ mod tests {
     fn mismatched_lengths_panic() {
         l1_float(&[1.0], &[1.0, 2.0]);
     }
+
+    fn random_triple(rng: &mut Rng) -> (Encoding, usize, f64, Vec<f32>, Vec<f32>, Vec<f32>) {
+        let enc = crate::encoding::ALL_ENCODINGS[rng.below(4)];
+        let cl = 1 + rng.below(4);
+        let clip = 3.0;
+        let d = 1 + rng.below(24);
+        let vec = |rng: &mut Rng| -> Vec<f32> {
+            (0..d).map(|_| rng.range_f64(0.0, clip * 1.1) as f32).collect()
+        };
+        let a = vec(rng);
+        let b = vec(rng);
+        let c = vec(rng);
+        (enc, cl, clip, a, b, c)
+    }
+
+    #[test]
+    fn distances_are_symmetric() {
+        // SVSS encodes both sides identically, so d(q, s) == d(s, q) for
+        // every encoding; l1_float likewise.
+        forall(
+            "distance symmetry",
+            128,
+            |rng: &mut Rng| random_triple(rng),
+            |&(enc, cl, clip, ref a, ref b, _)| {
+                let fwd = svss_distance(a, b, enc, cl, clip);
+                let bwd = svss_distance(b, a, enc, cl, clip);
+                (fwd - bwd).abs() < 1e-9 && (l1_float(a, b) - l1_float(b, a)).abs() < 1e-12
+            },
+        );
+    }
+
+    #[test]
+    fn distances_satisfy_triangle_inequality() {
+        // d(x, z) = Σ w_i |enc(x)_i − enc(z)_i| is a weighted-L1 metric on
+        // code words; composing a metric with the (quantize ∘ encode) map
+        // preserves the triangle inequality for every encoding.
+        forall(
+            "triangle inequality",
+            128,
+            |rng: &mut Rng| random_triple(rng),
+            |&(enc, cl, clip, ref a, ref b, ref c)| {
+                let ac = svss_distance(a, c, enc, cl, clip);
+                let ab = svss_distance(a, b, enc, cl, clip);
+                let bc = svss_distance(b, c, enc, cl, clip);
+                ac <= ab + bc + 1e-9
+                    && l1_float(a, c) <= l1_float(a, b) + l1_float(b, c) + 1e-9
+            },
+        );
+    }
+
+    #[test]
+    fn identity_of_indiscernibles_on_grid_points() {
+        // Self-distance is zero in every mode; AVSS measures zero at the
+        // 4 aligned query levels (asymmetric pairing, paper §3.2).
+        forall(
+            "self distance is zero",
+            64,
+            |rng: &mut Rng| random_triple(rng),
+            |&(enc, cl, clip, ref a, _, _)| {
+                svss_distance(a, a, enc, cl, clip).abs() < 1e-12
+            },
+        );
+        let clip = 3.0;
+        let aligned = vec![0.0f32, 1.0, 2.0, 3.0];
+        for enc in crate::encoding::ALL_ENCODINGS {
+            assert!(
+                avss_distance(&aligned, &aligned, enc, 2, clip).abs() < 1e-12,
+                "{enc:?}: AVSS self-distance at aligned levels"
+            );
+        }
+    }
 }

@@ -1,13 +1,27 @@
-//! The VSS engine: programs a support set into an MCAM block and answers
-//! queries through SVSS or AVSS iteration schedules with SA voting.
+//! The VSS engine: programs a support set into block-sharded MCAM storage
+//! and answers queries — singly or in batches — through SVSS or AVSS
+//! iteration schedules with SA voting.
 //!
-//! This is the L3 hot path. Support strings are laid out *column-major*
-//! (all vectors' string (g, c) adjacent — see `program_support`), so:
+//! This is the L3 hot path. The support set is partitioned contiguously
+//! across [`EngineConfig::shards`] independent [`McamBlock`]s (plane-level
+//! replication on a real die searches blocks in parallel under the same
+//! word-line drive, so capacity scales without adding search iterations).
+//! Within each shard, support strings are laid out *column-major* (all
+//! vectors' string (g, c) adjacent — see `program_support`), so:
 //!
-//! * SVSS iteration (g, c) senses the contiguous range
-//!   `[(g·W + c)·n, (g·W + c + 1)·n)` — one string per support vector;
+//! * SVSS iteration (g, c) senses the contiguous per-shard range
+//!   `[(g·W + c)·m, (g·W + c + 1)·m)` — one string per support vector;
 //! * AVSS iteration g senses all `W` column ranges of the group under a
 //!   single word-line application.
+//!
+//! [`SearchEngine::search_batch`] is the primary entry point: it encodes
+//! each query exactly once, precomputes every word-line drive, and fans
+//! the batch out across shards with scoped threads
+//! ([`crate::util::par::par_map_mut`]); [`SearchEngine::search`] is the
+//! single-query wrapper. Because each shard owns its RNG stream (seeded
+//! via [`crate::testutil::derive_seed`]) and processes queries in
+//! submission order, batched and scalar execution are bit-identical —
+//! `rust/tests/test_determinism.rs` locks this in.
 //!
 //! Votes accumulate per support vector with the Eq.-2 column weights; the
 //! predicted label is the winner's (winner-take-all voting, as in [14]).
@@ -22,6 +36,9 @@ use crate::energy::{EnergyAccount, EnergyModel};
 use crate::mapping::VectorLayout;
 use crate::quant::QuantSpec;
 use crate::search::SearchMode;
+use crate::testutil::derive_seed;
+use crate::util::par::par_map_mut;
+use crate::CELLS_PER_STRING;
 
 /// Engine configuration (one per experiment point).
 #[derive(Debug, Clone, Copy)]
@@ -35,6 +52,10 @@ pub struct EngineConfig {
     /// Quantizer clip point (from `artifacts/manifest.txt` calibration).
     pub clip: f64,
     pub seed: u64,
+    /// Number of MCAM blocks the support set is sharded across. Blocks
+    /// search in parallel: iterations per search stay per-block, capacity
+    /// and energy scale with the shard count.
+    pub shards: usize,
 }
 
 impl EngineConfig {
@@ -48,6 +69,7 @@ impl EngineConfig {
             ladder_len: 16,
             clip,
             seed: 0x5EED,
+            shards: 1,
         }
     }
 
@@ -65,6 +87,12 @@ impl EngineConfig {
         self.seed = seed;
         self
     }
+
+    pub fn with_shards(mut self, shards: usize) -> EngineConfig {
+        assert!(shards >= 1, "engine needs at least one shard");
+        self.shards = shards;
+        self
+    }
 }
 
 /// Result of one search.
@@ -76,15 +104,69 @@ pub struct SearchResult {
     pub label: u32,
     /// Accumulated votes per support vector.
     pub scores: Vec<f64>,
-    /// MCAM iterations consumed by this search.
+    /// MCAM iterations consumed by this search (per block; shards search
+    /// in parallel).
     pub iterations: u64,
 }
 
-/// A programmed MCAM search engine.
+/// One MCAM block holding a contiguous slice of the support set.
+struct Shard {
+    block: McamBlock,
+    /// Global index of this shard's first support vector.
+    base: usize,
+    /// Support vectors programmed into this shard.
+    n: usize,
+    /// Per-shard scratch currents (hot path: reused across searches).
+    currents: Vec<f64>,
+}
+
+impl Shard {
+    /// Score every query of the batch against this shard's support
+    /// vectors. `wordlines[q]` is iteration-major: `g·W + c` for SVSS,
+    /// `g` for AVSS. Returns `wordlines.len() × n` partial scores
+    /// (query-major) — accumulation order per vector matches the legacy
+    /// single-block engine exactly, so results are bit-identical.
+    fn score_batch(
+        &mut self,
+        wordlines: &[Vec<[u8; CELLS_PER_STRING]>],
+        mode: SearchMode,
+        groups: usize,
+        word_length: usize,
+        weights: &[f64],
+        ladder: &SenseLadder,
+    ) -> Vec<f64> {
+        let m = self.n;
+        let mut partial = vec![0f64; wordlines.len() * m];
+        if m == 0 {
+            return partial;
+        }
+        for (qi, wls) in wordlines.iter().enumerate() {
+            let scores = &mut partial[qi * m..(qi + 1) * m];
+            for g in 0..groups {
+                for c in 0..word_length {
+                    let wl = match mode {
+                        SearchMode::Svss => &wls[g * word_length + c],
+                        SearchMode::Avss => &wls[g],
+                    };
+                    self.currents.clear();
+                    self.block
+                        .search_range(wl, (g * word_length + c) * m, m, &mut self.currents);
+                    let weight = weights[c];
+                    for (v, &current) in self.currents.iter().enumerate() {
+                        scores[v] += weight * ladder.votes(current) as f64;
+                    }
+                }
+            }
+        }
+        partial
+    }
+}
+
+/// A programmed, block-sharded MCAM search engine.
 pub struct SearchEngine {
     cfg: EngineConfig,
     layout: VectorLayout,
-    block: McamBlock,
+    shards: Vec<Shard>,
     ladder: SenseLadder,
     weights: Vec<f64>,
     labels: Vec<u32>,
@@ -93,22 +175,38 @@ pub struct SearchEngine {
     energy_model: EnergyModel,
     energy: EnergyAccount,
     timing: SearchTiming,
-    // scratch buffers reused across searches (hot path: no allocation)
-    currents: Vec<f64>,
-    scores: Vec<f64>,
 }
 
 impl SearchEngine {
     /// Create an engine for `dims`-dimensional embeddings with capacity
-    /// for `max_vectors` support vectors.
+    /// for `max_vectors` support vectors, split evenly across
+    /// `cfg.shards` blocks.
     pub fn new(cfg: EngineConfig, dims: usize, max_vectors: usize) -> SearchEngine {
+        assert!(cfg.shards >= 1, "engine needs at least one shard");
         let layout = VectorLayout::new(dims, cfg.encoding, cfg.cl);
-        let capacity = max_vectors * layout.strings_per_vector();
+        let per_shard = max_vectors.div_ceil(cfg.shards).max(1);
+        let capacity = per_shard * layout.strings_per_vector();
         let support_levels = cfg.encoding.levels(cfg.cl);
         let query_levels = cfg.mode.quant_scheme().query_levels(support_levels);
+        let shards = (0..cfg.shards)
+            .map(|s| Shard {
+                // Each shard is a distinct physical block: decorrelated
+                // variation stream, deterministically derived from the
+                // engine seed so seeded runs replay exactly.
+                block: McamBlock::new(
+                    capacity,
+                    cfg.params,
+                    cfg.variation,
+                    derive_seed(cfg.seed, s as u64),
+                ),
+                base: 0,
+                n: 0,
+                currents: Vec::new(),
+            })
+            .collect();
         SearchEngine {
             layout,
-            block: McamBlock::new(capacity, cfg.params, cfg.variation, cfg.seed),
+            shards,
             ladder: SenseLadder::new(&cfg.params, cfg.ladder_len),
             weights: cfg.encoding.accumulation_weights(cfg.cl),
             labels: Vec::new(),
@@ -117,8 +215,6 @@ impl SearchEngine {
             energy_model: EnergyModel::default(),
             energy: EnergyAccount::default(),
             timing: SearchTiming::default(),
-            currents: Vec::new(),
-            scores: Vec::new(),
             cfg,
         }
     }
@@ -135,6 +231,15 @@ impl SearchEngine {
         self.labels.len()
     }
 
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Support vectors held by shard `s` (test/introspection).
+    pub fn shard_sizes(&self) -> Vec<usize> {
+        self.shards.iter().map(|s| s.n).collect()
+    }
+
     pub fn energy(&self) -> &EnergyAccount {
         &self.energy
     }
@@ -145,11 +250,15 @@ impl SearchEngine {
 
     /// Configure fault injection for subsequently programmed support
     /// (reliability ablations; call before [`Self::program_support`]).
+    /// Applies to every shard.
     pub fn set_faults(&mut self, faults: crate::device::faults::FaultModel) {
-        self.block.set_faults(faults);
+        for shard in &mut self.shards {
+            shard.block.set_faults(faults);
+        }
     }
 
-    /// Iterations one search will consume in the configured mode.
+    /// Iterations one search will consume in the configured mode (per
+    /// block — shards search in parallel under the same word-line drive).
     pub fn iterations_per_search(&self) -> usize {
         match self.cfg.mode {
             SearchMode::Svss => self.layout.svss_iterations(),
@@ -157,110 +266,175 @@ impl SearchEngine {
         }
     }
 
-    /// Erase the block and program a support set (embeddings are raw
+    /// Erase all shards and program a support set (embeddings are raw
     /// controller outputs; quantization + encoding happen here).
     ///
-    /// Strings are programmed **column-major** — all vectors' string
-    /// (g, c) are adjacent — so every search iteration senses one
-    /// contiguous block range instead of a `strings_per_vector`-strided
-    /// scatter. On the real device this is just a bit-line assignment
-    /// choice; in the simulator it turned a 24 KiB-stride walk into a
-    /// sequential scan (see EXPERIMENTS.md §Perf, ~3.9x).
+    /// Vectors are partitioned contiguously: shard *s* holds the global
+    /// range `[s·⌈n/S⌉, min((s+1)·⌈n/S⌉, n))`. Within a shard, strings
+    /// are programmed **column-major** — all vectors' string (g, c) are
+    /// adjacent — so every search iteration senses one contiguous block
+    /// range instead of a `strings_per_vector`-strided scatter. On the
+    /// real device this is just a bit-line assignment choice; in the
+    /// simulator it turned a 24 KiB-stride walk into a sequential scan
+    /// (see DESIGN.md §Perf, ~3.9x).
     pub fn program_support(&mut self, embeddings: &[&[f32]], labels: &[u32]) {
         assert_eq!(embeddings.len(), labels.len(), "one label per vector");
-        self.block.erase();
         self.labels.clear();
         self.labels.extend_from_slice(labels);
-        let spv = self.layout.strings_per_vector();
-        let mut all_strings = Vec::with_capacity(embeddings.len() * spv);
-        for emb in embeddings {
-            assert_eq!(emb.len(), self.layout.dims, "embedding dim mismatch");
-            let values = self.support_spec.quantize_vec(emb);
-            let words = self.cfg.encoding.encode_vector(&values, self.cfg.cl);
-            all_strings.extend(self.layout.strings_for(&words));
-        }
-        // column-major: iteration (g, c) owns the contiguous range
-        // [(g*W + c) * n, (g*W + c + 1) * n)
         let n = embeddings.len();
-        for column in 0..spv {
-            for v in 0..n {
-                self.block.program_string(&all_strings[v * spv + column]);
+        let spv = self.layout.strings_per_vector();
+        let per = n.div_ceil(self.shards.len()).max(1);
+        let mut start = 0usize;
+        for shard in &mut self.shards {
+            let end = (start + per).min(n);
+            let count = end.saturating_sub(start);
+            shard.base = start;
+            shard.n = count;
+            shard.block.erase();
+            if count > 0 {
+                let mut all_strings = Vec::with_capacity(count * spv);
+                for emb in &embeddings[start..end] {
+                    assert_eq!(emb.len(), self.layout.dims, "embedding dim mismatch");
+                    let values = self.support_spec.quantize_vec(emb);
+                    let words = self.cfg.encoding.encode_vector(&values, self.cfg.cl);
+                    all_strings.extend(self.layout.strings_for(&words));
+                }
+                // column-major: iteration (g, c) owns the contiguous
+                // per-shard range [(g*W + c) * m, (g*W + c + 1) * m)
+                for column in 0..spv {
+                    for v in 0..count {
+                        shard.block.program_string(&all_strings[v * spv + column]);
+                    }
+                }
+            }
+            start = end;
+        }
+    }
+
+    /// Encode one query into its per-iteration word-line drives
+    /// (iteration-major: `g·W + c` for SVSS, `g` for AVSS). This is the
+    /// per-query work that batching amortizes across shards.
+    fn query_wordlines(&self, query_emb: &[f32]) -> Vec<[u8; CELLS_PER_STRING]> {
+        assert_eq!(query_emb.len(), self.layout.dims, "query dim mismatch");
+        let w = self.layout.word_length;
+        match self.cfg.mode {
+            SearchMode::Svss => {
+                // Query encoded exactly like the support.
+                let values = self.query_spec.quantize_vec(query_emb);
+                let words = self.cfg.encoding.encode_vector(&values, self.cfg.cl);
+                let mut wls = Vec::with_capacity(self.layout.groups * w);
+                for g in 0..self.layout.groups {
+                    for c in 0..w {
+                        wls.push(self.layout.svss_wordline(&words, g, c));
+                    }
+                }
+                wls
+            }
+            SearchMode::Avss => {
+                // Query carries one 4-level word per dimension; all W
+                // columns of a group are sensed under one application.
+                let q4: Vec<u8> = query_emb
+                    .iter()
+                    .map(|&x| self.query_spec.quantize(x as f64) as u8)
+                    .collect();
+                let mut wls = Vec::with_capacity(self.layout.groups);
+                for g in 0..self.layout.groups {
+                    wls.push(self.layout.avss_wordline(&q4, g));
+                }
+                wls
             }
         }
     }
 
     /// Execute one search; returns the winner and per-vector scores.
     pub fn search(&mut self, query_emb: &[f32]) -> SearchResult {
-        assert_eq!(query_emb.len(), self.layout.dims, "query dim mismatch");
         assert!(!self.labels.is_empty(), "no support programmed");
+        self.search_batch(&[query_emb])
+            .pop()
+            .expect("one result per query")
+    }
+
+    /// Execute a batch of searches, amortizing query encoding and
+    /// word-line setup across the batch and fanning shards out in
+    /// parallel. Returns one [`SearchResult`] per query, in order;
+    /// bit-identical to repeated [`Self::search`] calls on the same
+    /// seeded engine.
+    pub fn search_batch(&mut self, queries: &[&[f32]]) -> Vec<SearchResult> {
+        assert!(!self.labels.is_empty(), "no support programmed");
+        if queries.is_empty() {
+            return Vec::new();
+        }
         let n = self.labels.len();
+        let groups = self.layout.groups;
         let w = self.layout.word_length;
 
-        self.scores.clear();
-        self.scores.resize(n, 0.0);
+        // Phase 1 (amortized): encode every query exactly once.
+        let wordlines: Vec<Vec<[u8; CELLS_PER_STRING]>> =
+            queries.iter().map(|q| self.query_wordlines(q)).collect();
 
-        let mut iterations = 0u64;
-        match self.cfg.mode {
-            SearchMode::Svss => {
-                // Query encoded exactly like the support.
-                let values = self.query_spec.quantize_vec(query_emb);
-                let words = self.cfg.encoding.encode_vector(&values, self.cfg.cl);
-                for g in 0..self.layout.groups {
-                    for c in 0..w {
-                        let wl = self.layout.svss_wordline(&words, g, c);
-                        self.currents.clear();
-                        self.block
-                            .search_range(&wl, (g * w + c) * n, n, &mut self.currents);
-                        let weight = self.weights[c];
-                        for (v, &current) in self.currents.iter().enumerate() {
-                            self.scores[v] += weight * self.ladder.votes(current) as f64;
-                        }
-                        iterations += 1;
-                        self.energy.add_sense(&self.energy_model, n as u64, self.ladder.len());
-                    }
+        // Phase 2 (parallel): every shard scores the whole batch against
+        // its slice of the support set on its own thread. Shard-private
+        // RNG streams keep this deterministic regardless of scheduling —
+        // inline and threaded dispatch produce identical results, so tiny
+        // workloads (e.g. a scalar search over a small support set) skip
+        // the per-call thread spawn entirely.
+        let mode = self.cfg.mode;
+        let weights = &self.weights;
+        let ladder = &self.ladder;
+        let wl_ref = &wordlines;
+        let max_shard_vectors = self.shards.iter().map(|s| s.n).max().unwrap_or(0);
+        let sense_events_per_shard = max_shard_vectors * groups * w * queries.len();
+        // ~4K string senses (≈100K cell evaluations) comfortably dwarfs a
+        // thread spawn/join; below that, fan-out overhead dominates.
+        const PARALLEL_SENSE_FLOOR: usize = 4096;
+        let partials: Vec<Vec<f64>> =
+            if self.shards.len() > 1 && sense_events_per_shard >= PARALLEL_SENSE_FLOOR {
+                par_map_mut(&mut self.shards, |_, shard| {
+                    shard.score_batch(wl_ref, mode, groups, w, weights, ladder)
+                })
+            } else {
+                self.shards
+                    .iter_mut()
+                    .map(|shard| shard.score_batch(wl_ref, mode, groups, w, weights, ladder))
+                    .collect()
+            };
+
+        // Phase 3 (reduce): stitch per-shard partial scores into global
+        // score vectors and pick winners.
+        let iterations = match mode {
+            SearchMode::Svss => (groups * w) as u64,
+            SearchMode::Avss => groups as u64,
+        };
+        let mut results = Vec::with_capacity(queries.len());
+        for qi in 0..queries.len() {
+            let mut scores = vec![0f64; n];
+            for (shard, partial) in self.shards.iter().zip(&partials) {
+                if shard.n > 0 {
+                    scores[shard.base..shard.base + shard.n]
+                        .copy_from_slice(&partial[qi * shard.n..(qi + 1) * shard.n]);
                 }
             }
-            SearchMode::Avss => {
-                // Query carries one 4-level word per dimension; all W
-                // columns of a group are sensed in a single iteration.
-                let q4: Vec<u8> = query_emb
-                    .iter()
-                    .map(|&x| self.query_spec.quantize(x as f64) as u8)
-                    .collect();
-                for g in 0..self.layout.groups {
-                    let wl = self.layout.avss_wordline(&q4, g);
-                    for c in 0..w {
-                        self.currents.clear();
-                        self.block
-                            .search_range(&wl, (g * w + c) * n, n, &mut self.currents);
-                        let weight = self.weights[c];
-                        for (v, &current) in self.currents.iter().enumerate() {
-                            self.scores[v] += weight * self.ladder.votes(current) as f64;
-                        }
-                    }
-                    iterations += 1; // one word-line application per group
-                    self.energy
-                        .add_sense(&self.energy_model, (n * w) as u64, self.ladder.len());
-                }
-            }
+            // Accounting matches the legacy per-iteration bookkeeping:
+            // every programmed string is sensed once per search in both
+            // modes (n·G·W strings through the full ladder).
+            self.timing.add_iterations(iterations);
+            self.energy
+                .add_sense(&self.energy_model, (n * groups * w) as u64, self.ladder.len());
+            self.energy.finish_search();
+            let winner = scores
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap();
+            results.push(SearchResult {
+                winner,
+                label: self.labels[winner],
+                scores,
+                iterations,
+            });
         }
-
-        self.timing.add_iterations(iterations);
-        self.energy.finish_search();
-
-        let winner = self
-            .scores
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .map(|(i, _)| i)
-            .unwrap();
-        SearchResult {
-            winner,
-            label: self.labels[winner],
-            scores: self.scores.clone(),
-            iterations,
-        }
+        results
     }
 }
 
@@ -320,6 +494,67 @@ mod tests {
     }
 
     #[test]
+    fn exact_match_wins_when_sharded() {
+        for shards in [2, 3, 5] {
+            let mut rng = Rng::new(42);
+            let (embs, labels) = cluster_embeddings(&mut rng, 8, 2, 48, 0.0);
+            let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
+            let cfg = EngineConfig::new(Encoding::Mtmc, 3, SearchMode::Avss, 3.0)
+                .ideal()
+                .with_shards(shards);
+            let mut eng = SearchEngine::new(cfg, 48, 64);
+            eng.program_support(&refs, &labels);
+            assert_eq!(eng.n_shards(), shards);
+            assert_eq!(eng.shard_sizes().iter().sum::<usize>(), embs.len());
+            for probe in [0usize, 7, 15] {
+                let result = eng.search(&embs[probe]);
+                assert_eq!(result.label, labels[probe], "{shards} shards, probe {probe}");
+                assert_eq!(result.winner, probe);
+            }
+        }
+    }
+
+    #[test]
+    fn batch_matches_scalar_bitwise() {
+        // Two identically seeded engines (noisy device): one served the
+        // queries one by one, the other as a single batch.
+        for shards in [1, 2, 4] {
+            let mut rng = Rng::new(0xBA7C);
+            let (embs, labels) = cluster_embeddings(&mut rng, 6, 3, 48, 0.05);
+            let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
+            let cfg = EngineConfig::new(Encoding::Mtmc, 8, SearchMode::Avss, 3.0)
+                .with_seed(0xD15E)
+                .with_shards(shards);
+            let mut scalar = SearchEngine::new(cfg, 48, embs.len());
+            let mut batched = SearchEngine::new(cfg, 48, embs.len());
+            scalar.program_support(&refs, &labels);
+            batched.program_support(&refs, &labels);
+            let queries: Vec<&[f32]> = refs.iter().take(8).copied().collect();
+            let scalar_results: Vec<SearchResult> =
+                queries.iter().map(|q| scalar.search(q)).collect();
+            let batch_results = batched.search_batch(&queries);
+            assert_eq!(scalar_results.len(), batch_results.len());
+            for (s, b) in scalar_results.iter().zip(&batch_results) {
+                assert_eq!(s.winner, b.winner, "{shards} shards");
+                assert_eq!(s.label, b.label);
+                assert_eq!(s.iterations, b.iterations);
+                assert_eq!(s.scores, b.scores, "{shards} shards: scores must be bit-identical");
+            }
+            assert_eq!(
+                scalar.energy().nj_per_search(),
+                batched.energy().nj_per_search()
+            );
+        }
+    }
+
+    #[test]
+    fn empty_batch_returns_empty() {
+        let mut eng = engine(Encoding::Mtmc, 4, SearchMode::Avss);
+        eng.program_support(&[&[0.5f32; 48] as &[f32]], &[0]);
+        assert!(eng.search_batch(&[]).is_empty());
+    }
+
+    #[test]
     fn clustered_classification_ideal_device() {
         let mut rng = Rng::new(7);
         let (embs, labels) = cluster_embeddings(&mut rng, 10, 5, 48, 0.05);
@@ -354,6 +589,20 @@ mod tests {
         let mut avss = SearchEngine::new(cfg, 48, 4);
         avss.program_support(&refs, &labels);
         assert_eq!(avss.search(&embs[0]).iterations, 2);
+    }
+
+    #[test]
+    fn sharding_preserves_iteration_count() {
+        // Blocks search in parallel: iterations per search are per-block.
+        let mut rng = Rng::new(1);
+        let (embs, labels) = cluster_embeddings(&mut rng, 4, 1, 48, 0.0);
+        let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
+        let cfg = EngineConfig::new(Encoding::Mtmc, 32, SearchMode::Avss, 3.0)
+            .ideal()
+            .with_shards(4);
+        let mut eng = SearchEngine::new(cfg, 48, 4);
+        eng.program_support(&refs, &labels);
+        assert_eq!(eng.search(&embs[0]).iterations, 2);
     }
 
     #[test]
@@ -431,5 +680,24 @@ mod tests {
             }
         }
         assert!(correct >= 6, "noisy AVSS accuracy too low: {correct}/8");
+    }
+
+    #[test]
+    fn shard_partition_covers_all_vectors() {
+        // More shards than vectors: trailing shards stay empty, every
+        // vector remains searchable.
+        let mut rng = Rng::new(6);
+        let (embs, labels) = cluster_embeddings(&mut rng, 3, 1, 48, 0.0);
+        let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
+        let cfg = EngineConfig::new(Encoding::Mtmc, 4, SearchMode::Avss, 3.0)
+            .ideal()
+            .with_shards(8);
+        let mut eng = SearchEngine::new(cfg, 48, 8);
+        eng.program_support(&refs, &labels);
+        let sizes = eng.shard_sizes();
+        assert_eq!(sizes.iter().sum::<usize>(), 3);
+        for (i, r) in refs.iter().enumerate() {
+            assert_eq!(eng.search(r).winner, i);
+        }
     }
 }

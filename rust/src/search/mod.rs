@@ -3,9 +3,9 @@
 //!
 //! * [`SearchMode`] — SVSS vs AVSS (iteration plans + quantization
 //!   schemes).
-//! * [`engine::SearchEngine`] — programs a support set into an
-//!   [`crate::device::block::McamBlock`] and executes searches with SA
-//!   voting, energy and timing accounting.
+//! * [`engine::SearchEngine`] — programs a support set across one or more
+//!   sharded [`crate::device::block::McamBlock`]s and executes searches
+//!   (singly or batched) with SA voting, energy and timing accounting.
 //! * [`distance`] — ideal (device-free) quantized distances behind the
 //!   Fig. 6 analysis.
 

@@ -10,7 +10,7 @@ pub struct Rng {
     state: [u64; 4],
     /// Cached second output of the last Box–Muller draw — the read-noise
     /// hot path consumes one Gaussian per sensed string, so discarding
-    /// the sine pair costs a full ln/sqrt per string (EXPERIMENTS.md §Perf).
+    /// the sine pair costs a full ln/sqrt per string (DESIGN.md §Perf).
     gauss_spare: Option<f64>,
 }
 
@@ -103,6 +103,20 @@ impl Rng {
     }
 }
 
+/// Derive a decorrelated child seed for a parallel stream (SplitMix64
+/// finalizer over `seed ⊕ stream·φ`). Every component that owns an RNG —
+/// each engine shard's [`crate::device::block::McamBlock`], each
+/// coordinator replica — derives its stream from the single
+/// `EngineConfig::with_seed` value through this function, which is what
+/// makes seeded runs replay bit-for-bit (`rust/tests/test_determinism.rs`).
+pub fn derive_seed(seed: u64, stream: u64) -> u64 {
+    let mut z = seed ^ stream.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
 /// Mini property-testing: run `prop` over `cases` seeded inputs produced
 /// by `gen`; on failure, panic with the seed for reproduction.
 pub fn forall<T, G, P>(name: &str, cases: usize, mut gen: G, mut prop: P)
@@ -149,6 +163,20 @@ mod tests {
     #[test]
     fn different_seeds_differ() {
         assert_ne!(Rng::new(1).next_u64(), Rng::new(2).next_u64());
+    }
+
+    #[test]
+    fn derived_seeds_are_deterministic_and_decorrelated() {
+        assert_eq!(derive_seed(7, 3), derive_seed(7, 3));
+        // distinct streams from one seed, distinct seeds per stream
+        let mut seen = std::collections::HashSet::new();
+        for seed in [0u64, 1, 0x5EED] {
+            for stream in 0..16u64 {
+                assert!(seen.insert(derive_seed(seed, stream)), "collision at {seed}/{stream}");
+            }
+        }
+        // stream 0 must not be the identity (shards never share the raw seed)
+        assert_ne!(derive_seed(0x5EED, 0), 0x5EED);
     }
 
     #[test]

@@ -1,5 +1,6 @@
-//! Minimal JSON *writer* (no parsing) for metrics / experiment output.
-//! Hand-rolled because no serde is vendored in the offline image.
+//! Minimal JSON writer *and* parser for metrics / experiment output and
+//! the golden-parity fixtures (`rust/tests/fixtures/`). Hand-rolled
+//! because no serde is vendored in the offline image.
 
 use std::fmt::Write as _;
 
@@ -23,6 +24,255 @@ impl Json {
         Json::Str(v.into())
     }
 
+    /// Parse a JSON document (strict enough for our own writer's output
+    /// and the python-generated fixtures: objects, arrays, strings with
+    /// standard escapes incl. `\uXXXX`, f64 numbers, bools, null).
+    pub fn parse(text: &str) -> anyhow::Result<Json> {
+        let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+        p.skip_ws();
+        let value = p.value()?;
+        p.skip_ws();
+        if p.pos != p.bytes.len() {
+            anyhow::bail!("trailing garbage at byte {}", p.pos);
+        }
+        Ok(value)
+    }
+
+    /// Object field lookup (first match; `None` for non-objects).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            Json::Num(n) if n.fract() == 0.0 && *n >= 0.0 => Some(*n as usize),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(items) => Some(items),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn skip_ws(&mut self) {
+        while let Some(&b) = self.bytes.get(self.pos) {
+            if b == b' ' || b == b'\t' || b == b'\n' || b == b'\r' {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn expect(&mut self, b: u8) -> anyhow::Result<()> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            anyhow::bail!("expected {:?} at byte {}", b as char, self.pos)
+        }
+    }
+
+    fn eat_keyword(&mut self, word: &str) -> bool {
+        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            true
+        } else {
+            false
+        }
+    }
+
+    fn value(&mut self) -> anyhow::Result<Json> {
+        self.skip_ws();
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') | Some(b'f') => {
+                if self.eat_keyword("true") {
+                    Ok(Json::Bool(true))
+                } else if self.eat_keyword("false") {
+                    Ok(Json::Bool(false))
+                } else {
+                    anyhow::bail!("bad literal at byte {}", self.pos)
+                }
+            }
+            Some(b'n') => {
+                if self.eat_keyword("null") {
+                    Ok(Json::Null)
+                } else {
+                    anyhow::bail!("bad literal at byte {}", self.pos)
+                }
+            }
+            Some(b) if b == b'-' || b.is_ascii_digit() => self.number(),
+            other => anyhow::bail!("unexpected {:?} at byte {}", other.map(|b| b as char), self.pos),
+        }
+    }
+
+    fn object(&mut self) -> anyhow::Result<Json> {
+        self.expect(b'{')?;
+        let mut fields = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(fields));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            let value = self.value()?;
+            fields.push((key, value));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(fields));
+                }
+                _ => anyhow::bail!("expected ',' or '}}' at byte {}", self.pos),
+            }
+        }
+    }
+
+    fn array(&mut self) -> anyhow::Result<Json> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                _ => anyhow::bail!("expected ',' or ']' at byte {}", self.pos),
+            }
+        }
+    }
+
+    fn string(&mut self) -> anyhow::Result<String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            let Some(b) = self.peek() else {
+                anyhow::bail!("unterminated string at byte {}", self.pos);
+            };
+            self.pos += 1;
+            match b {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let Some(esc) = self.peek() else {
+                        anyhow::bail!("dangling escape at byte {}", self.pos);
+                    };
+                    self.pos += 1;
+                    match esc {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'u' => {
+                            let hex = self
+                                .bytes
+                                .get(self.pos..self.pos + 4)
+                                .and_then(|h| std::str::from_utf8(h).ok())
+                                .and_then(|h| u32::from_str_radix(h, 16).ok());
+                            let Some(code) = hex else {
+                                anyhow::bail!("bad \\u escape at byte {}", self.pos);
+                            };
+                            self.pos += 4;
+                            // surrogate pairs are not needed by our fixtures
+                            let Some(c) = char::from_u32(code) else {
+                                anyhow::bail!("non-scalar \\u escape at byte {}", self.pos);
+                            };
+                            out.push(c);
+                        }
+                        other => anyhow::bail!("unknown escape {:?} at byte {}", other as char, self.pos),
+                    }
+                }
+                _ => {
+                    // consume the full UTF-8 sequence starting at b
+                    let start = self.pos - 1;
+                    let mut end = self.pos;
+                    while end < self.bytes.len() && self.bytes[end] & 0b1100_0000 == 0b1000_0000 {
+                        end += 1;
+                    }
+                    let chunk = std::str::from_utf8(&self.bytes[start..end])
+                        .map_err(|_| anyhow::anyhow!("invalid UTF-8 at byte {}", start))?;
+                    out.push_str(chunk);
+                    self.pos = end;
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> anyhow::Result<Json> {
+        let start = self.pos;
+        while let Some(b) = self.peek() {
+            if b.is_ascii_digit() || matches!(b, b'-' | b'+' | b'.' | b'e' | b'E') {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+        let raw = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+        let n: f64 = raw
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad number {:?} at byte {}", raw, start))?;
+        Ok(Json::Num(n))
+    }
+}
+
+impl Json {
     /// Render with no whitespace.
     pub fn render(&self) -> String {
         let mut out = String::new();
@@ -136,5 +386,53 @@ mod tests {
             .field("name", Json::str("mcam"))
             .build();
         assert_eq!(j.render(), r#"{"xs":[1,2],"name":"mcam"}"#);
+    }
+
+    #[test]
+    fn parse_round_trips_writer_output() {
+        let j = ObjBuilder::new()
+            .field("xs", Json::Arr(vec![Json::num(1), Json::num(-2.5), Json::Null]))
+            .field("name", Json::str("mcam \"quoted\"\n"))
+            .field("ok", Json::Bool(true))
+            .build();
+        let parsed = Json::parse(&j.render()).unwrap();
+        assert_eq!(parsed, j);
+    }
+
+    #[test]
+    fn parse_handles_whitespace_and_nesting() {
+        let parsed = Json::parse(
+            " {\n  \"a\": [ 1 , 2.5e2 , {\"b\": false} ],\n  \"c\": null }\n",
+        )
+        .unwrap();
+        let a = parsed.get("a").unwrap().as_array().unwrap();
+        assert_eq!(a[0].as_f64(), Some(1.0));
+        assert_eq!(a[1].as_f64(), Some(250.0));
+        assert_eq!(a[2].get("b").unwrap().as_bool(), Some(false));
+        assert_eq!(parsed.get("c"), Some(&Json::Null));
+        assert_eq!(parsed.get("missing"), None);
+    }
+
+    #[test]
+    fn parse_unicode_escapes() {
+        let parsed = Json::parse(r#"{"s": "café ✓"}"#).unwrap();
+        assert_eq!(parsed.get("s").unwrap().as_str(), Some("café ✓"));
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1, 2").is_err());
+        assert!(Json::parse("{\"a\" 1}").is_err());
+        assert!(Json::parse("12 34").is_err());
+        assert!(Json::parse("\"unterminated").is_err());
+        assert!(Json::parse("nul").is_err());
+    }
+
+    #[test]
+    fn as_usize_rejects_fractions_and_negatives() {
+        assert_eq!(Json::num(8).as_usize(), Some(8));
+        assert_eq!(Json::num(8.5).as_usize(), None);
+        assert_eq!(Json::num(-1).as_usize(), None);
     }
 }

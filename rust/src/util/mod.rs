@@ -5,6 +5,7 @@
 pub mod binio;
 pub mod json;
 pub mod manifest;
+pub mod par;
 
 use std::path::{Path, PathBuf};
 

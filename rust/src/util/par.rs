@@ -1,0 +1,83 @@
+//! Scoped-thread parallel map — the crate's rayon substitute (the offline
+//! image vendors no crates, so shard fan-out runs on `std::thread::scope`;
+//! see DESIGN.md §Dependencies).
+//!
+//! The engine's shard fan-out is coarse-grained (one task per MCAM block,
+//! each worth hundreds of microseconds to milliseconds), so plain scoped
+//! threads — one per item, joined in order — capture all the available
+//! parallelism without a work-stealing pool.
+
+/// Apply `f` to every item of `items` (potentially in parallel), returning
+/// the results in item order. `f` receives `(index, &mut item)`.
+///
+/// Single-item (and empty) inputs run inline with no thread spawn; a
+/// panicking task propagates the panic to the caller at join time.
+pub fn par_map_mut<T, R, F>(items: &mut [T], f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, &mut T) -> R + Sync,
+{
+    if items.len() <= 1 {
+        return items.iter_mut().enumerate().map(|(i, item)| f(i, item)).collect();
+    }
+    std::thread::scope(|scope| {
+        let f = &f;
+        let handles: Vec<_> = items
+            .iter_mut()
+            .enumerate()
+            .map(|(i, item)| scope.spawn(move || f(i, item)))
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("parallel worker panicked"))
+            .collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_item_order() {
+        let mut items: Vec<u64> = (0..16).collect();
+        let out = par_map_mut(&mut items, |i, item| {
+            *item += 1;
+            (i as u64) * 100 + *item
+        });
+        for (i, &r) in out.iter().enumerate() {
+            assert_eq!(r, (i as u64) * 100 + i as u64 + 1);
+        }
+        assert_eq!(items, (1..=16).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn empty_and_single_run_inline() {
+        let mut empty: Vec<u32> = Vec::new();
+        assert!(par_map_mut(&mut empty, |_, _| 0).is_empty());
+        let mut one = vec![41u32];
+        assert_eq!(par_map_mut(&mut one, |_, x| *x + 1), vec![42]);
+    }
+
+    #[test]
+    fn mutations_are_visible_after_return() {
+        let mut items = vec![vec![0u8; 4]; 8];
+        par_map_mut(&mut items, |i, v| v[0] = i as u8);
+        for (i, v) in items.iter().enumerate() {
+            assert_eq!(v[0], i as u8);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "parallel worker panicked")]
+    fn worker_panic_propagates() {
+        let mut items = vec![0u8; 4];
+        par_map_mut(&mut items, |i, _| {
+            if i == 2 {
+                panic!("boom");
+            }
+            i
+        });
+    }
+}

@@ -1,0 +1,133 @@
+//! Determinism regression: a fixed `EngineConfig::with_seed` must replay
+//! the whole engine — program-time variation, read noise, shard RNG
+//! streams — bit-for-bit, and batched/sharded execution must agree with
+//! scalar execution exactly (the PR's acceptance criterion).
+
+use mcamvss::encoding::Encoding;
+use mcamvss::search::engine::{EngineConfig, SearchEngine, SearchResult};
+use mcamvss::search::SearchMode;
+use mcamvss::testutil::Rng;
+
+const DIMS: usize = 48;
+
+fn clustered(seed: u64, n_classes: usize, per: usize) -> (Vec<Vec<f32>>, Vec<u32>) {
+    let mut rng = Rng::new(seed);
+    let mut embs = Vec::new();
+    let mut labels = Vec::new();
+    for c in 0..n_classes {
+        let proto: Vec<f64> = (0..DIMS).map(|_| rng.range_f64(0.2, 2.8)).collect();
+        for _ in 0..per {
+            embs.push(
+                proto
+                    .iter()
+                    .map(|&p| (p + 0.05 * rng.gaussian()).max(0.0) as f32)
+                    .collect(),
+            );
+            labels.push(c as u32);
+        }
+    }
+    (embs, labels)
+}
+
+/// Run one freshly built engine over the queries (scalar path).
+fn run_scalar(cfg: EngineConfig, refs: &[&[f32]], labels: &[u32], queries: &[&[f32]]) -> Vec<SearchResult> {
+    let mut engine = SearchEngine::new(cfg, DIMS, refs.len());
+    engine.program_support(refs, labels);
+    queries.iter().map(|q| engine.search(q)).collect()
+}
+
+#[test]
+fn same_seed_replays_bitwise() {
+    for shards in [1usize, 3] {
+        let (embs, labels) = clustered(11, 6, 4);
+        let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
+        let queries: Vec<&[f32]> = refs.iter().take(10).copied().collect();
+        // noisy device: program-time + read noise both flow from the seed
+        let cfg = EngineConfig::new(Encoding::Mtmc, 8, SearchMode::Avss, 3.0)
+            .with_seed(0xDECAF)
+            .with_shards(shards);
+        let a = run_scalar(cfg, &refs, &labels, &queries);
+        let b = run_scalar(cfg, &refs, &labels, &queries);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.winner, y.winner, "{shards} shards");
+            assert_eq!(x.label, y.label);
+            assert_eq!(x.iterations, y.iterations);
+            assert_eq!(x.scores, y.scores, "{shards} shards: seeded replay must be bitwise");
+        }
+    }
+}
+
+#[test]
+fn different_seeds_diverge() {
+    let (embs, labels) = clustered(12, 6, 4);
+    let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
+    let queries: Vec<&[f32]> = refs.iter().take(6).copied().collect();
+    let base = EngineConfig::new(Encoding::Mtmc, 8, SearchMode::Avss, 3.0);
+    let a = run_scalar(base.with_seed(1), &refs, &labels, &queries);
+    let b = run_scalar(base.with_seed(2), &refs, &labels, &queries);
+    let any_difference = a
+        .iter()
+        .zip(&b)
+        .any(|(x, y)| x.scores != y.scores);
+    assert!(any_difference, "distinct seeds must sample distinct device noise");
+}
+
+#[test]
+fn search_batch_matches_scalar_on_seeded_engine() {
+    // Acceptance criterion: `search_batch` with ≥2 shards returns
+    // identical top-1 labels to repeated scalar `search` calls on the
+    // same seeded engine (and, stronger, bit-identical score vectors).
+    for shards in [2usize, 4] {
+        let (embs, labels) = clustered(13, 8, 3);
+        let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
+        let queries: Vec<&[f32]> = refs.iter().take(8).copied().collect();
+        let cfg = EngineConfig::new(Encoding::Mtmc, 8, SearchMode::Avss, 3.0)
+            .with_seed(0xBEEF)
+            .with_shards(shards);
+        let scalar = run_scalar(cfg, &refs, &labels, &queries);
+        let mut engine = SearchEngine::new(cfg, DIMS, refs.len());
+        engine.program_support(&refs, &labels);
+        let batched = engine.search_batch(&queries);
+        assert_eq!(scalar.len(), batched.len());
+        for (s, b) in scalar.iter().zip(&batched) {
+            assert_eq!(s.label, b.label, "{shards} shards: top-1 label");
+            assert_eq!(s.winner, b.winner);
+            assert_eq!(s.scores, b.scores, "{shards} shards: bit-identical scores");
+        }
+    }
+}
+
+#[test]
+fn sharded_matches_unsharded_on_ideal_device() {
+    // With no device noise the physics depends only on programmed levels,
+    // so any shard partition must yield the same scores as one block.
+    let (embs, labels) = clustered(14, 6, 4);
+    let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
+    let queries: Vec<&[f32]> = refs.iter().take(6).copied().collect();
+    let base = EngineConfig::new(Encoding::Mtmc, 8, SearchMode::Avss, 3.0).ideal();
+    let reference = run_scalar(base.with_shards(1), &refs, &labels, &queries);
+    for shards in [2usize, 4, 8] {
+        let got = run_scalar(base.with_shards(shards), &refs, &labels, &queries);
+        for (r, g) in reference.iter().zip(&got) {
+            assert_eq!(r.scores, g.scores, "{shards} shards vs 1 shard (ideal)");
+            assert_eq!(r.winner, g.winner);
+        }
+    }
+}
+
+#[test]
+fn svss_mode_is_deterministic_too() {
+    let (embs, labels) = clustered(15, 4, 3);
+    let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
+    let queries: Vec<&[f32]> = refs.iter().take(4).copied().collect();
+    let cfg = EngineConfig::new(Encoding::B4e, 3, SearchMode::Svss, 3.0)
+        .with_seed(0x51D5)
+        .with_shards(2);
+    let a = run_scalar(cfg, &refs, &labels, &queries);
+    let mut engine = SearchEngine::new(cfg, DIMS, refs.len());
+    engine.program_support(&refs, &labels);
+    let b = engine.search_batch(&queries);
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.scores, y.scores, "SVSS batched vs scalar");
+    }
+}

@@ -1,0 +1,255 @@
+//! Golden-parity: the rust quantizer, encoders, distance functions, and
+//! device simulator must agree with the python reference
+//! (`python/compile/{quant,encodings}.py`, `kernels/ref.py`) on the
+//! committed fixtures under `tests/fixtures/golden_parity.json`.
+//!
+//! Regenerate with `python python/compile/dump_fixtures.py` — these
+//! fixtures are committed (no artifact build required), so this test
+//! always runs.
+
+use mcamvss::device::block::McamBlock;
+use mcamvss::device::variation::VariationModel;
+use mcamvss::device::McamParams;
+use mcamvss::encoding::Encoding;
+use mcamvss::quant::QuantSpec;
+use mcamvss::search::distance::{avss_distance, svss_distance};
+use mcamvss::util::json::Json;
+use mcamvss::CELLS_PER_STRING;
+use std::path::Path;
+
+fn fixtures() -> Json {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/golden_parity.json");
+    let text = std::fs::read_to_string(&path).unwrap_or_else(|e| {
+        panic!(
+            "missing golden fixtures {} ({e}); regenerate with \
+             `python python/compile/dump_fixtures.py`",
+            path.display()
+        )
+    });
+    Json::parse(&text).expect("fixture JSON parses")
+}
+
+fn f64s(j: &Json) -> Vec<f64> {
+    j.as_array().unwrap().iter().map(|v| v.as_f64().unwrap()).collect()
+}
+
+fn f32s(j: &Json) -> Vec<f32> {
+    f64s(j).into_iter().map(|v| v as f32).collect()
+}
+
+fn u32s(j: &Json) -> Vec<u32> {
+    j.as_array().unwrap().iter().map(|v| v.as_f64().unwrap() as u32).collect()
+}
+
+fn u8s(j: &Json) -> Vec<u8> {
+    u32s(j).into_iter().map(|v| v as u8).collect()
+}
+
+#[test]
+fn quantizer_matches_python() {
+    let doc = fixtures();
+    for case in doc.get("cases").unwrap().as_array().unwrap() {
+        let name = case.get("encoding").unwrap().as_str().unwrap();
+        let cl = case.get("cl").unwrap().as_usize().unwrap();
+        let clip = case.get("clip").unwrap().as_f64().unwrap();
+        let levels = case.get("levels").unwrap().as_usize().unwrap();
+        let enc = Encoding::from_name(name).unwrap();
+        assert_eq!(enc.levels(cl), levels, "{name} cl={cl}: level arithmetic");
+
+        let sspec = QuantSpec::new(levels, clip);
+        let qspec = QuantSpec::new(4, clip);
+        let query = f32s(case.get("query").unwrap());
+        assert_eq!(
+            sspec.quantize_vec(&query),
+            u32s(case.get("query_values_sym").unwrap()),
+            "{name} cl={cl}: symmetric query quantization"
+        );
+        assert_eq!(
+            qspec.quantize_vec(&query),
+            u32s(case.get("query_values_q4").unwrap()),
+            "{name} cl={cl}: 4-level query quantization"
+        );
+        let support = case.get("support").unwrap().as_array().unwrap();
+        let expected = case.get("support_values").unwrap().as_array().unwrap();
+        for (row, want) in support.iter().zip(expected) {
+            assert_eq!(
+                sspec.quantize_vec(&f32s(row)),
+                u32s(want),
+                "{name} cl={cl}: support quantization"
+            );
+        }
+    }
+}
+
+#[test]
+fn encoders_match_python() {
+    let doc = fixtures();
+    for case in doc.get("cases").unwrap().as_array().unwrap() {
+        let name = case.get("encoding").unwrap().as_str().unwrap();
+        let cl = case.get("cl").unwrap().as_usize().unwrap();
+        let enc = Encoding::from_name(name).unwrap();
+        let values = case.get("support_values").unwrap().as_array().unwrap();
+        let words = case.get("support_words").unwrap().as_array().unwrap();
+        for (vals, want) in values.iter().zip(words) {
+            assert_eq!(
+                enc.encode_vector(&u32s(vals), cl),
+                u8s(want),
+                "{name} cl={cl}: dimension-major encoding"
+            );
+        }
+    }
+}
+
+#[test]
+fn distances_match_python() {
+    let doc = fixtures();
+    for case in doc.get("cases").unwrap().as_array().unwrap() {
+        let name = case.get("encoding").unwrap().as_str().unwrap();
+        let cl = case.get("cl").unwrap().as_usize().unwrap();
+        let clip = case.get("clip").unwrap().as_f64().unwrap();
+        let enc = Encoding::from_name(name).unwrap();
+        let query = f32s(case.get("query").unwrap());
+        let support = case.get("support").unwrap().as_array().unwrap();
+        let want_svss = f64s(case.get("svss_distance").unwrap());
+        let want_avss = f64s(case.get("avss_distance").unwrap());
+        for (v, row) in support.iter().enumerate() {
+            let s = f32s(row);
+            // distances are integer-weighted sums of integers: exact in f64
+            let got = svss_distance(&query, &s, enc, cl, clip);
+            assert!(
+                (got - want_svss[v]).abs() < 1e-9,
+                "{name} cl={cl} support {v}: SVSS rust {got} vs python {}",
+                want_svss[v]
+            );
+            let got = avss_distance(&query, &s, enc, cl, clip);
+            assert!(
+                (got - want_avss[v]).abs() < 1e-9,
+                "{name} cl={cl} support {v}: AVSS rust {got} vs python {}",
+                want_avss[v]
+            );
+        }
+        // the match-count sanity the paper's voting relies on: identical
+        // vectors measure distance 0 under both schemes at aligned levels
+        assert!(svss_distance(&query, &query, enc, cl, clip).abs() < 1e-12);
+    }
+}
+
+#[test]
+fn device_currents_match_python_ref() {
+    let doc = fixtures();
+    let device = doc.get("device").unwrap();
+    let params = device.get("params").unwrap();
+    let params = McamParams {
+        r0: params.get("r0").unwrap().as_f64().unwrap(),
+        alpha: params.get("alpha").unwrap().as_f64().unwrap(),
+        v_bl: params.get("v_bl").unwrap().as_f64().unwrap(),
+    };
+    assert_eq!(params, McamParams::default(), "fixture/default divergence");
+
+    let query = u8s(device.get("query").unwrap());
+    let support: Vec<Vec<u8>> = device
+        .get("support")
+        .unwrap()
+        .as_array()
+        .unwrap()
+        .iter()
+        .map(u8s)
+        .collect();
+    let want_current = f64s(device.get("current").unwrap());
+    let want_total = u32s(device.get("total_mismatch").unwrap());
+    let want_max = u32s(device.get("max_mismatch").unwrap());
+
+    let mut block = McamBlock::new(support.len(), params, VariationModel::IDEAL, 0);
+    for cells in &support {
+        let mut arr = [0u8; CELLS_PER_STRING];
+        arr.copy_from_slice(cells);
+        block.program_string(&arr);
+    }
+    let mut wordline = [0u8; CELLS_PER_STRING];
+    wordline.copy_from_slice(&query);
+    let mut currents = Vec::new();
+    block.search_range(&wordline, 0, support.len(), &mut currents);
+
+    for (s, &want) in want_current.iter().enumerate() {
+        let rel = (currents[s] - want).abs() / want.abs().max(1e-12);
+        // rust accumulates the series resistance in f32; python in f64
+        assert!(
+            rel < 1e-4,
+            "string {s}: rust {} vs python {want}",
+            currents[s]
+        );
+        let (mut total, mut mx) = (0u32, 0u32);
+        for l in 0..CELLS_PER_STRING {
+            let m = (query[l] as i32 - support[s][l] as i32).unsigned_abs();
+            total += m;
+            mx = mx.max(m);
+        }
+        assert_eq!(total, want_total[s], "string {s}: total mismatch count");
+        assert_eq!(mx, want_max[s], "string {s}: max mismatch level");
+    }
+}
+
+#[test]
+fn engine_scores_match_python_pipeline() {
+    // End-to-end coupling: a 2-shard ideal engine must reproduce the
+    // python mirror of the whole quantize → encode → layout → sense →
+    // vote pipeline (`_engine_scores_avss_mtmc` in dump_fixtures.py,
+    // which replays the f32 series accumulation of the rust hot path).
+    // Scores are integer vote counts; ±1 absorbs any last-ulp libm
+    // difference between numpy and rust at a threshold comparison.
+    use mcamvss::search::engine::{EngineConfig, SearchEngine};
+    use mcamvss::search::SearchMode;
+
+    let doc = fixtures();
+    let mut checked = 0;
+    for case in doc.get("cases").unwrap().as_array().unwrap() {
+        let name = case.get("encoding").unwrap().as_str().unwrap();
+        let Some(expected) = case.get("engine_scores_avss").filter(|j| **j != Json::Null) else {
+            continue;
+        };
+        assert_eq!(name, "mtmc", "engine scores exported for MTMC cases only");
+        let expected = f64s(expected);
+        let cl = case.get("cl").unwrap().as_usize().unwrap();
+        let clip = case.get("clip").unwrap().as_f64().unwrap();
+        let dims = case.get("dims").unwrap().as_usize().unwrap();
+        let query = f32s(case.get("query").unwrap());
+        let support: Vec<Vec<f32>> = case
+            .get("support")
+            .unwrap()
+            .as_array()
+            .unwrap()
+            .iter()
+            .map(f32s)
+            .collect();
+        let refs: Vec<&[f32]> = support.iter().map(|s| s.as_slice()).collect();
+        let labels: Vec<u32> = (0..refs.len() as u32).collect();
+
+        let cfg = EngineConfig::new(Encoding::Mtmc, cl, SearchMode::Avss, clip)
+            .ideal()
+            .with_shards(2);
+        let mut engine = SearchEngine::new(cfg, dims, refs.len());
+        engine.program_support(&refs, &labels);
+        let result = engine.search(&query);
+        assert_eq!(result.scores.len(), expected.len());
+        for (v, (&got, &want)) in result.scores.iter().zip(&expected).enumerate() {
+            assert!(
+                (got - want).abs() <= 1.0,
+                "mtmc cl={cl} support {v}: rust votes {got} vs python {want}"
+            );
+        }
+        // the python-side winner must stay vote-maximal on the rust side
+        let py_winner = expected
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap();
+        assert!(
+            expected[result.winner] >= expected[py_winner] - 1.0,
+            "mtmc cl={cl}: rust winner {} not vote-maximal in python scores",
+            result.winner
+        );
+        checked += 1;
+    }
+    assert!(checked >= 2, "expected engine-score fixtures for both MTMC cases");
+}

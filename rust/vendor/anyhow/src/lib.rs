@@ -1,0 +1,213 @@
+//! Minimal, dependency-free subset of the `anyhow` API, vendored so the
+//! workspace builds fully offline (the image ships no crates.io registry;
+//! see DESIGN.md §Dependencies).
+//!
+//! Implemented surface — exactly what the `mcamvss` crate uses:
+//!
+//! * [`Error`]: a context-stack error type (`Display` prints the outermost
+//!   message, `{:#}` prints the whole `outer: ...: root` chain, `Debug`
+//!   prints a `Caused by:` list);
+//! * [`Result<T>`] alias with the `E = Error` default;
+//! * blanket `From<E: std::error::Error>` so `?` converts foreign errors;
+//! * [`Context`] with `context` / `with_context` on both `Result` and
+//!   `Option`;
+//! * the [`anyhow!`] and [`bail!`] macros (format-string forms).
+
+use std::convert::Infallible;
+use std::fmt;
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A dynamic error carrying a stack of context messages.
+///
+/// `stack[0]` is the outermost (most recently attached) message and the
+/// last element is the root cause — the same ordering `anyhow` prints.
+pub struct Error {
+    stack: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a single message (what `anyhow!` expands to).
+    pub fn msg(message: impl fmt::Display) -> Error {
+        Error { stack: vec![message.to_string()] }
+    }
+
+    /// Attach an outer context message.
+    pub fn wrap(mut self, context: impl fmt::Display) -> Error {
+        self.stack.insert(0, context.to_string());
+        self
+    }
+
+    /// The messages from outermost context to root cause.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.stack.iter().map(|s| s.as_str())
+    }
+
+    /// The root cause message (innermost).
+    pub fn root_cause(&self) -> &str {
+        self.stack.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` — the whole chain, colon-separated, like anyhow.
+            write!(f, "{}", self.stack.join(": "))
+        } else {
+            write!(f, "{}", self.stack.first().map(|s| s.as_str()).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.stack.first().map(|s| s.as_str()).unwrap_or(""))?;
+        if self.stack.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for (i, cause) in self.stack[1..].iter().enumerate() {
+                if self.stack.len() > 2 {
+                    write!(f, "\n    {i}: {cause}")?;
+                } else {
+                    write!(f, "\n    {cause}")?;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+// NOTE: `Error` deliberately does NOT implement `std::error::Error`; that
+// is what makes the blanket `From` below coherent (same trick as anyhow).
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(err: E) -> Error {
+        let mut stack = vec![err.to_string()];
+        let mut source = err.source();
+        while let Some(cause) = source {
+            stack.push(cause.to_string());
+            source = cause.source();
+        }
+        Error { stack }
+    }
+}
+
+/// Attach context to errors, on both `Result` and `Option` receivers.
+pub trait Context<T, E> {
+    /// Wrap the error value with additional context.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+
+    /// Wrap the error value with lazily-evaluated context.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T, E> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().wrap(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into().wrap(f()))
+    }
+}
+
+impl<T> Context<T, Infallible> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($msg:expr $(,)?) => {
+        $crate::Error::msg($msg)
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "file missing")
+    }
+
+    #[test]
+    fn question_mark_converts_foreign_errors() {
+        fn inner() -> Result<()> {
+            Err::<(), _>(io_err())?;
+            Ok(())
+        }
+        let err = inner().unwrap_err();
+        assert_eq!(format!("{err}"), "file missing");
+    }
+
+    #[test]
+    fn context_stacks_outermost_first() {
+        let err: Result<(), std::io::Error> = Err(io_err());
+        let err = err
+            .context("reading manifest")
+            .context("loading artifacts")
+            .unwrap_err();
+        assert_eq!(format!("{err}"), "loading artifacts");
+        assert_eq!(
+            format!("{err:#}"),
+            "loading artifacts: reading manifest: file missing"
+        );
+        assert_eq!(err.root_cause(), "file missing");
+        let debug = format!("{err:?}");
+        assert!(debug.contains("Caused by:"), "{debug}");
+    }
+
+    #[test]
+    fn option_context() {
+        let none: Option<u32> = None;
+        let err = none.with_context(|| format!("key {:?} missing", "x")).unwrap_err();
+        assert_eq!(format!("{err}"), "key \"x\" missing");
+        let some: Option<u32> = Some(7);
+        assert_eq!(some.context("unused").unwrap(), 7);
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = anyhow!("plain");
+        assert_eq!(format!("{e}"), "plain");
+        let n = 3;
+        let e = anyhow!("count {}: {n}", "x");
+        assert_eq!(format!("{e}"), "count x: 3");
+        fn bails() -> Result<()> {
+            bail!("bad value {:?}", 7);
+        }
+        assert_eq!(format!("{}", bails().unwrap_err()), "bad value 7");
+    }
+
+    #[test]
+    fn error_context_on_anyhow_result() {
+        // `.context` must also apply to Result<_, Error> (reflexive Into).
+        let err: Result<()> = Err(anyhow!("root"));
+        let err = err.context("outer").unwrap_err();
+        assert_eq!(format!("{err:#}"), "outer: root");
+    }
+}
