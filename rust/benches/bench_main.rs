@@ -9,8 +9,15 @@
 //!   fig9_cub, table2, headline); these print the same rows/series the
 //!   paper reports and are recorded in DESIGN.md §Perf;
 //! * **perf targets** (`perf_`) — microbenchmarks of the L3 hot path
-//!   (block search, engine end-to-end, batched/sharded search,
-//!   coordinator overhead) with throughput numbers for DESIGN.md §Perf.
+//!   (fused sense kernel, block search, engine end-to-end,
+//!   batched/sharded search, coordinator overhead) with throughput
+//!   numbers for DESIGN.md §Perf.
+//!
+//! The tracked perf targets (`perf_kernel`, `perf_engine`,
+//! `perf_batch_shards`) additionally write their measurements into
+//! `BENCH_engine.json` at the repository root (merged key-by-key, so
+//! partial runs keep the other sections), tracking the perf trajectory
+//! across PRs.
 
 use mcamvss::coordinator::{Coordinator, CoordinatorConfig, Payload};
 use mcamvss::device::block::McamBlock;
@@ -23,7 +30,9 @@ use mcamvss::fsl::store::ArtifactStore;
 use mcamvss::search::engine::{EngineConfig, SearchEngine};
 use mcamvss::search::SearchMode;
 use mcamvss::testutil::Rng;
+use mcamvss::util::json::{Json, ObjBuilder};
 use mcamvss::CELLS_PER_STRING;
+use std::path::Path;
 use std::time::Instant;
 
 fn main() {
@@ -170,17 +179,22 @@ fn main() {
     }
 
     // ---------------- perf targets ----------------
+    let mut report: Vec<(String, Json)> = Vec::new();
+    if want("perf_kernel") {
+        section("perf_kernel");
+        perf_kernel(&mut report);
+    }
     if want("perf_block_search") {
         section("perf_block_search");
         perf_block_search();
     }
     if want("perf_engine") {
         section("perf_engine");
-        perf_engine();
+        perf_engine(&mut report);
     }
     if want("perf_batch_shards") {
         section("perf_batch_shards");
-        perf_batch_shards();
+        perf_batch_shards(&mut report);
     }
     if want("perf_coordinator") {
         section("perf_coordinator");
@@ -190,13 +204,160 @@ fn main() {
         section("perf_sense");
         perf_sense();
     }
+    write_report(report);
+}
+
+/// Merge the measured perf entries into `BENCH_engine.json` at the repo
+/// root: existing keys from earlier (or partial) runs are preserved,
+/// re-measured keys are replaced.
+fn write_report(entries: Vec<(String, Json)>) {
+    if entries.is_empty() {
+        return;
+    }
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).parent().expect("crate has a parent dir");
+    let path = root.join("BENCH_engine.json");
+    let mut fields: Vec<(String, Json)> = match std::fs::read_to_string(&path) {
+        Ok(text) => match Json::parse(&text) {
+            Ok(Json::Obj(fields)) => fields,
+            _ => Vec::new(),
+        },
+        Err(_) => Vec::new(),
+    };
+    for (key, value) in entries {
+        if let Some(slot) = fields.iter_mut().find(|(k, _)| *k == key) {
+            slot.1 = value;
+        } else {
+            fields.push((key, value));
+        }
+    }
+    match std::fs::write(&path, Json::Obj(fields).render()) {
+        Ok(()) => println!("[bench report → {}]", path.display()),
+        Err(e) => eprintln!("WARNING: could not write {}: {e}", path.display()),
+    }
 }
 
 fn section(name: &str) {
     println!("==================== {name} ====================");
 }
 
-/// Hot path: word-line search over a fully programmed 128K-string block.
+/// Acceptance microbench (ISSUE 2): fused tiled sense→vote→accumulate
+/// kernel vs the retained scalar reference on a fully occupied ideal
+/// block, plus a bench-local replica of the pre-tiling **string-major**
+/// storage for the honest before/after number. All three paths must
+/// produce bit-identical scores; the fused/naive ratio targets ≥2x.
+fn perf_kernel(report: &mut Vec<(String, Json)>) {
+    let n = mcamvss::STRINGS_PER_BLOCK;
+    let params = McamParams::default();
+    let mut rng = Rng::new(11);
+    let mut block = McamBlock::new(n, params, VariationModel::IDEAL, 1);
+    // replica of the legacy string-major storage, built from the same cells
+    let mut legacy_levels: Vec<u8> = Vec::with_capacity(n * CELLS_PER_STRING);
+    let mut cells = [0u8; CELLS_PER_STRING];
+    for _ in 0..n {
+        for c in cells.iter_mut() {
+            *c = rng.below(4) as u8;
+        }
+        legacy_levels.extend_from_slice(&cells);
+        block.program_string(&cells);
+    }
+    let legacy_var = vec![1.0f32; n * CELLS_PER_STRING];
+    let mut wordline = [0u8; CELLS_PER_STRING];
+    for c in wordline.iter_mut() {
+        *c = rng.below(4) as u8;
+    }
+    let ladder = SenseLadder::new(&params, 16);
+    let lut = params.resistance_lut();
+
+    // The PR-1 sense loop verbatim: string-major walk, double-indexed
+    // LUT, currents-Vec round-trip, current-domain ladder votes.
+    let mut currents: Vec<f64> = Vec::with_capacity(n);
+    let mut legacy_pass = |scores: &mut [f64]| {
+        currents.clear();
+        for idx in 0..n {
+            let base = idx * CELLS_PER_STRING;
+            let mut series = 0f32;
+            for l in 0..CELLS_PER_STRING {
+                let q = wordline[l] as usize;
+                series += lut[q][legacy_levels[base + l] as usize] * legacy_var[base + l];
+            }
+            currents.push(params.v_bl / series as f64);
+        }
+        for (score, &current) in scores.iter_mut().zip(&currents) {
+            *score += ladder.votes(current) as f64;
+        }
+    };
+
+    let reps = 10;
+    let mut legacy_scores = vec![0f64; n];
+    legacy_pass(&mut legacy_scores); // warmup
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        legacy_pass(&mut legacy_scores);
+    }
+    let legacy_dt = t0.elapsed().as_secs_f64() / reps as f64;
+
+    let mut naive_scores = vec![0f64; n];
+    block.sense_votes_range_naive(&wordline, 0, n, &ladder, 1.0, &mut naive_scores);
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        block.sense_votes_range_naive(&wordline, 0, n, &ladder, 1.0, &mut naive_scores);
+    }
+    let naive_dt = t0.elapsed().as_secs_f64() / reps as f64;
+
+    let mut fused_scores = vec![0f64; n];
+    block.sense_votes_range(&wordline, 0, n, &ladder, 1.0, &mut fused_scores);
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        block.sense_votes_range(&wordline, 0, n, &ladder, 1.0, &mut fused_scores);
+    }
+    let fused_dt = t0.elapsed().as_secs_f64() / reps as f64;
+
+    // Every path accumulated reps + 1 identical passes: bit-identity is
+    // checked end to end on the full block, every run.
+    assert_eq!(fused_scores, naive_scores, "fused kernel != scalar reference");
+    assert_eq!(fused_scores, legacy_scores, "fused kernel != string-major replica");
+
+    let cell_evals = (n * CELLS_PER_STRING) as f64;
+    let speedup_naive = naive_dt / fused_dt;
+    let speedup_legacy = legacy_dt / fused_dt;
+    println!("kernel: {n} strings x {CELLS_PER_STRING} cells, ladder 16, {reps} reps");
+    println!(
+        "  naive reference:     {:.2} ms/pass ({:.0} M cells/s)",
+        naive_dt * 1e3,
+        cell_evals / naive_dt / 1e6
+    );
+    println!(
+        "  string-major (PR 1): {:.2} ms/pass ({:.0} M cells/s)",
+        legacy_dt * 1e3,
+        cell_evals / legacy_dt / 1e6
+    );
+    println!(
+        "  fused tiled kernel:  {:.2} ms/pass ({:.0} M cells/s)",
+        fused_dt * 1e3,
+        cell_evals / fused_dt / 1e6
+    );
+    println!(
+        "  SPEEDUP: {speedup_naive:.2}x vs naive reference (target >= 2x), \
+         {speedup_legacy:.2}x vs PR-1 string-major layout\n"
+    );
+    report.push((
+        "perf_kernel".to_string(),
+        ObjBuilder::new()
+            .field("strings", Json::num(n as f64))
+            .field("ladder", Json::num(16))
+            .field("reps", Json::num(reps))
+            .field("naive_ms_per_pass", Json::num(naive_dt * 1e3))
+            .field("legacy_ms_per_pass", Json::num(legacy_dt * 1e3))
+            .field("fused_ms_per_pass", Json::num(fused_dt * 1e3))
+            .field("fused_mcells_per_s", Json::num(cell_evals / fused_dt / 1e6))
+            .field("speedup_vs_naive", Json::num(speedup_naive))
+            .field("speedup_vs_pr1_layout", Json::num(speedup_legacy))
+            .build(),
+    ));
+}
+
+/// Currents path: word-line search over a fully programmed 128K-string
+/// block (`search_range`, riding the same tiled cell-major core).
 fn perf_block_search() {
     let mut rng = Rng::new(1);
     let n = mcamvss::STRINGS_PER_BLOCK;
@@ -233,7 +394,7 @@ fn perf_block_search() {
 }
 
 /// End-to-end engine search at the paper's Omniglot operating point.
-fn perf_engine() {
+fn perf_engine(report: &mut Vec<(String, Json)>) {
     let mut rng = Rng::new(2);
     let dims = 48;
     let n_vectors = 2000; // 200-way 10-shot
@@ -242,6 +403,7 @@ fn perf_engine() {
         .collect();
     let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
     let labels: Vec<u32> = (0..n_vectors as u32).map(|i| i / 10).collect();
+    let mut modes = ObjBuilder::new();
     for (mode, cl) in [(SearchMode::Avss, 32), (SearchMode::Svss, 32)] {
         let cfg = EngineConfig::new(Encoding::Mtmc, cl, mode, 3.0)
             .with_variation(VariationModel::nand_default());
@@ -264,7 +426,17 @@ fn perf_engine() {
             dt / reps as f64 * 1e3,
             reps as f64 / dt
         );
+        modes = modes.field(
+            mode.name(),
+            ObjBuilder::new()
+                .field("cl", Json::num(cl as f64))
+                .field("n_vectors", Json::num(n_vectors as f64))
+                .field("ns_per_search", Json::num(dt / reps as f64 * 1e9))
+                .field("searches_per_s", Json::num(reps as f64 / dt))
+                .build(),
+        );
     }
+    report.push(("perf_engine".to_string(), modes.build()));
     println!();
 }
 
@@ -272,7 +444,7 @@ fn perf_engine() {
 /// Omniglot operating point (2000 support vectors). Scalar issues one
 /// `search` per query; batched drains the same queries through a single
 /// `search_batch` call (amortized encoding + one shard fan-out per batch).
-fn perf_batch_shards() {
+fn perf_batch_shards(report: &mut Vec<(String, Json)>) {
     let mut rng = Rng::new(5);
     let dims = 48;
     let n_vectors = 2000; // 200-way 10-shot
@@ -286,6 +458,7 @@ fn perf_batch_shards() {
     let reps = 6;
     println!("{n_vectors} vectors, MTMC cl=8 AVSS, batch size {batch_size}, {reps} reps");
     let mut baseline_batched = 0.0f64;
+    let mut rows: Vec<Json> = Vec::new();
     for shards in [1usize, 2, 4, 8] {
         let cfg = EngineConfig::new(Encoding::Mtmc, 8, SearchMode::Avss, 3.0)
             .with_variation(VariationModel::nand_default())
@@ -318,7 +491,22 @@ fn perf_batch_shards() {
             batched / scalar,
             batched / baseline_batched.max(1e-9),
         );
+        rows.push(
+            ObjBuilder::new()
+                .field("shards", Json::num(shards as f64))
+                .field("scalar_searches_per_s", Json::num(scalar))
+                .field("batched_searches_per_s", Json::num(batched))
+                .build(),
+        );
     }
+    report.push((
+        "perf_batch_shards".to_string(),
+        ObjBuilder::new()
+            .field("n_vectors", Json::num(n_vectors as f64))
+            .field("batch_size", Json::num(batch_size as f64))
+            .field("shards", Json::Arr(rows))
+            .build(),
+    ));
     println!();
 }
 

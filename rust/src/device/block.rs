@@ -7,15 +7,29 @@
 //! * **search** — drive 24 word-line levels and read the resulting
 //!   series-conductance current of selected strings.
 //!
-//! The search hot path is the crate's performance-critical kernel (3M
-//! cell evaluations per iteration at full block occupancy); see
-//! DESIGN.md §Perf for the optimization log.
+//! The sense path is the crate's performance-critical kernel (~3M cell
+//! evaluations per engine iteration at full block occupancy). Cells are
+//! stored **cell-major** (structure-of-arrays: one plane per word line,
+//! strings contiguous within a plane) and sensed by the fused, tiled
+//! sense→vote→accumulate kernel [`McamBlock::sense_votes_range`]; the
+//! scalar walk is retained as [`McamBlock::sense_votes_range_naive`],
+//! the reference oracle for the kernel-equivalence tests and the
+//! `perf_kernel` microbench. See DESIGN.md §Perf for the optimization
+//! log.
 
 use super::faults::FaultModel;
+use super::sense::{SenseLadder, SeriesRungs};
 use super::variation::VariationModel;
 use super::McamParams;
 use crate::testutil::Rng;
 use crate::CELLS_PER_STRING;
+
+/// Strings per tile of the fused sense kernel: the f32 accumulator tile
+/// (256 B) stays register/L1-resident while the 24 cell planes stream
+/// through it, and 64 independent per-string sums give the pipeline
+/// enough ILP to hide the dependent-add latency the scalar walk
+/// serializes on.
+const SENSE_TILE: usize = 64;
 
 /// One MCAM block.
 pub struct McamBlock {
@@ -23,15 +37,28 @@ pub struct McamBlock {
     variation: VariationModel,
     faults: FaultModel,
     capacity: usize,
-    /// Programmed cell levels, `capacity * 24`, string-major.
+    /// Programmed cell levels, cell-major (structure-of-arrays): plane
+    /// `l` stores cell `l` of every string contiguously, at
+    /// `levels[l * capacity + idx]`, so the sense kernel's string loop
+    /// streams sequential memory (see DESIGN.md §Perf).
     levels: Vec<u8>,
-    /// Program-time per-cell resistance variation factor, `capacity * 24`.
-    /// (Kept separate from the levels instead of expanding per-drive
-    /// resistances: 120 B/string of traffic instead of 384 B — see
-    /// DESIGN.md §Perf.)
+    /// Program-time per-cell resistance variation factor, same cell-major
+    /// plane layout. (Kept separate from the levels instead of expanding
+    /// per-drive resistances: 120 B/string of traffic instead of 384 B —
+    /// see DESIGN.md §Perf.)
     var: Vec<f32>,
     /// 4x4 match-resistance lookup `lut[q][s]` (L1-resident).
     lut: [[f32; 4]; 4],
+    /// Thresholds the cached series-domain `rungs` were computed for.
+    /// The ideal fused path votes in the series-resistance domain;
+    /// rebuilding the exact rungs costs ~31 f64 divisions per threshold,
+    /// so they are cached across calls and invalidated by exact
+    /// threshold comparison.
+    rung_thresholds: Vec<f64>,
+    rungs: SeriesRungs,
+    /// Per-tile vote scratch for the noisy fused path (reused across
+    /// calls so the hot path never allocates).
+    votes_scratch: Vec<u32>,
     programmed: usize,
     rng: Rng,
 }
@@ -51,6 +78,9 @@ impl McamBlock {
             capacity,
             levels: vec![0; capacity * CELLS_PER_STRING],
             var: vec![1.0; capacity * CELLS_PER_STRING],
+            rung_thresholds: Vec::new(),
+            rungs: SeriesRungs::default(),
+            votes_scratch: Vec::new(),
             programmed: 0,
             rng: Rng::new(seed),
         }
@@ -97,40 +127,198 @@ impl McamBlock {
             self.faults.corrupt_string(&mut cells, &mut self.rng);
         }
         let idx = self.programmed;
-        let base = idx * CELLS_PER_STRING;
+        // Scatter across the cell planes; the per-cell RNG draw order
+        // (l = 0..23) matches the string-major layout this replaced, so
+        // seeded replays stay bit-identical.
         for (l, &s) in cells.iter().enumerate() {
             assert!(s <= 3, "cell level {s} out of range");
-            self.levels[base + l] = s;
-            self.var[base + l] = self.variation.cell_factor(&mut self.rng);
+            let cell = l * self.capacity + idx;
+            self.levels[cell] = s;
+            self.var[cell] = self.variation.cell_factor(&mut self.rng);
         }
         self.programmed += 1;
         idx
     }
 
-    /// Programmed levels of string `idx` (test/debug).
-    pub fn string_levels(&self, idx: usize) -> &[u8] {
-        let base = idx * CELLS_PER_STRING;
-        &self.levels[base..base + CELLS_PER_STRING]
+    /// Programmed levels of string `idx`, gathered across the cell
+    /// planes (test/debug).
+    pub fn string_levels(&self, idx: usize) -> [u8; CELLS_PER_STRING] {
+        let mut cells = [0u8; CELLS_PER_STRING];
+        for (l, cell) in cells.iter_mut().enumerate() {
+            *cell = self.levels[l * self.capacity + idx];
+        }
+        cells
     }
 
-    /// Ideal (noise-free) current of string `idx` under `wordline`.
+    /// Ideal (noise-free) current of string `idx` under `wordline` — the
+    /// scalar reference path (per-string plane gather, double-indexed
+    /// LUT). The fused kernel reproduces its f32 cell-sum order
+    /// (l = 0..23) bit-for-bit.
     #[inline]
     pub fn string_current_ideal(&self, idx: usize, wordline: &[u8; CELLS_PER_STRING]) -> f64 {
-        let base = idx * CELLS_PER_STRING;
-        let levels = &self.levels[base..base + CELLS_PER_STRING];
-        let var = &self.var[base..base + CELLS_PER_STRING];
         let mut series = 0f32;
-        for l in 0..CELLS_PER_STRING {
-            let q = wordline[l];
+        for (l, &q) in wordline.iter().enumerate() {
             debug_assert!(q <= 3);
-            series += self.lut[q as usize][levels[l] as usize] * var[l];
+            let cell = l * self.capacity + idx;
+            series += self.lut[q as usize][self.levels[cell] as usize] * self.var[cell];
         }
         self.params.v_bl / series as f64
     }
 
+    /// Hoist the word-line gather: for a fixed drive, cell `l` always
+    /// selects LUT row `lut[wordline[l]]`, so the 24×4 row table is
+    /// built once per sense call instead of double-indexing the LUT per
+    /// cell per string.
+    #[inline]
+    fn wordline_rows(&self, wordline: &[u8; CELLS_PER_STRING]) -> [[f32; 4]; CELLS_PER_STRING] {
+        let mut rows = [[0f32; 4]; CELLS_PER_STRING];
+        for (row, &q) in rows.iter_mut().zip(wordline) {
+            debug_assert!(q <= 3);
+            *row = self.lut[q as usize];
+        }
+        rows
+    }
+
+    /// Series-resistance sums of `tile` strings starting at `base`,
+    /// streamed plane by plane with the hoisted word-line rows. The
+    /// per-string accumulation order is l = 0..23 exactly as in
+    /// [`Self::string_current_ideal`], so the f32 sums are bit-identical
+    /// to the scalar reference.
+    #[inline]
+    fn tile_series(
+        &self,
+        rows: &[[f32; 4]; CELLS_PER_STRING],
+        base: usize,
+        tile: usize,
+        acc: &mut [f32; SENSE_TILE],
+    ) {
+        acc[..tile].fill(0.0);
+        for (l, row) in rows.iter().enumerate() {
+            let plane = l * self.capacity + base;
+            let lv = &self.levels[plane..plane + tile];
+            let vr = &self.var[plane..plane + tile];
+            for ((a, &s), &v) in acc[..tile].iter_mut().zip(lv).zip(vr) {
+                // levels are <= 3 (asserted at program time); the mask
+                // only elides the 4-entry bounds check.
+                *a += row[(s & 3) as usize] * v;
+            }
+        }
+    }
+
+    /// Sensed (noise-applied) currents of `tile` strings starting at
+    /// `base`, via the tiled core — shared by [`Self::search_range`] and
+    /// the noisy fused path, so the bit-identity contract (series order,
+    /// division, in-order noise draws) lives in exactly one place.
+    #[inline]
+    fn tile_currents(
+        &mut self,
+        rows: &[[f32; 4]; CELLS_PER_STRING],
+        base: usize,
+        tile: usize,
+        acc: &mut [f32; SENSE_TILE],
+        currents: &mut [f64; SENSE_TILE],
+    ) {
+        self.tile_series(rows, base, tile, acc);
+        for (current, &series) in currents[..tile].iter_mut().zip(acc[..tile].iter()) {
+            *current = self.params.v_bl / series as f64;
+        }
+        if self.variation.read_sigma != 0.0 {
+            self.variation.read_currents(&mut currents[..tile], &mut self.rng);
+        }
+    }
+
+    /// Fused sense→vote→accumulate over the strings in
+    /// `[first, first + count)`: drive `wordline`, sense every string,
+    /// convert each sensed current into ladder votes, and add
+    /// `weight * votes` into the matching `scores` slot — the L3 hot
+    /// path, replacing the currents-`Vec` round-trip of the scalar
+    /// reference ([`Self::sense_votes_range_naive`]).
+    ///
+    /// On the ideal path (no read noise) the ladder compare runs in the
+    /// **series-resistance domain** ([`SeriesRungs`]): the per-string
+    /// `v_bl / series` division disappears, and the exact-boundary rungs
+    /// keep the votes bit-identical to the current-domain compare. The
+    /// noisy path computes real currents (read noise consumes the block
+    /// RNG in string order, exactly like the reference) and routes each
+    /// tile through [`SenseLadder::votes_batch`].
+    pub fn sense_votes_range(
+        &mut self,
+        wordline: &[u8; CELLS_PER_STRING],
+        first: usize,
+        count: usize,
+        ladder: &SenseLadder,
+        weight: f64,
+        scores: &mut [f64],
+    ) {
+        assert!(first + count <= self.programmed, "search beyond programmed region");
+        assert_eq!(scores.len(), count, "one score slot per sensed string");
+        let rows = self.wordline_rows(wordline);
+        let mut acc = [0f32; SENSE_TILE];
+        if self.variation.read_sigma == 0.0 {
+            if self.rung_thresholds.as_slice() != ladder.thresholds() {
+                self.rung_thresholds.clear();
+                self.rung_thresholds.extend_from_slice(ladder.thresholds());
+                self.rungs = ladder.series_rungs(self.params.v_bl);
+            }
+            let mut done = 0;
+            while done < count {
+                let tile = (count - done).min(SENSE_TILE);
+                self.tile_series(&rows, first + done, tile, &mut acc);
+                for (score, &series) in scores[done..done + tile].iter_mut().zip(&acc) {
+                    *score += weight * self.rungs.votes_for_series(series) as f64;
+                }
+                done += tile;
+            }
+        } else {
+            let mut currents = [0f64; SENSE_TILE];
+            let mut done = 0;
+            while done < count {
+                let tile = (count - done).min(SENSE_TILE);
+                self.tile_currents(&rows, first + done, tile, &mut acc, &mut currents);
+                self.votes_scratch.clear();
+                ladder.votes_batch(&currents[..tile], &mut self.votes_scratch);
+                let votes = &self.votes_scratch;
+                for (score, &v) in scores[done..done + tile].iter_mut().zip(votes) {
+                    *score += weight * v as f64;
+                }
+                done += tile;
+            }
+        }
+    }
+
+    /// The scalar reference sense path — the pre-tiling kernel retained
+    /// verbatim as the correctness oracle for the kernel-equivalence
+    /// property tests (`rust/tests/test_kernel_equivalence.rs`) and as
+    /// the baseline of the `perf_kernel` microbench. Bit-identical to
+    /// [`Self::sense_votes_range`] (same per-string cell-sum order, same
+    /// RNG draw order); not on any hot path.
+    pub fn sense_votes_range_naive(
+        &mut self,
+        wordline: &[u8; CELLS_PER_STRING],
+        first: usize,
+        count: usize,
+        ladder: &SenseLadder,
+        weight: f64,
+        scores: &mut [f64],
+    ) {
+        assert!(first + count <= self.programmed, "search beyond programmed region");
+        assert_eq!(scores.len(), count, "one score slot per sensed string");
+        for (score, idx) in scores.iter_mut().zip(first..first + count) {
+            let current = self.string_current_ideal(idx, wordline);
+            let current = if self.variation.read_sigma == 0.0 {
+                current
+            } else {
+                self.variation.read_current(current, &mut self.rng)
+            };
+            *score += weight * ladder.votes(current) as f64;
+        }
+    }
+
     /// Search: drive `wordline` and sense the strings in
     /// `[first, first + count)`, appending currents (with read noise) to
-    /// `out`.
+    /// `out`. Runs on the tiled cell-major core, so the currents are
+    /// bit-identical to per-string [`Self::string_current_ideal`] plus
+    /// in-order read noise, at fused-kernel memory throughput.
     pub fn search_range(
         &mut self,
         wordline: &[u8; CELLS_PER_STRING],
@@ -140,40 +328,15 @@ impl McamBlock {
     ) {
         assert!(first + count <= self.programmed, "search beyond programmed region");
         out.reserve(count);
-        let read_sigma = self.variation.read_sigma;
-        for idx in first..first + count {
-            let current = self.string_current_ideal(idx, wordline);
-            let current = if read_sigma == 0.0 {
-                current
-            } else {
-                self.variation.read_current(current, &mut self.rng)
-            };
-            out.push(current);
-        }
-    }
-
-    /// Search a strided set of strings: indices `first + k * stride` for
-    /// `k in [0, count)` — the SVSS access pattern (one column of every
-    /// support vector's string group).
-    pub fn search_strided(
-        &mut self,
-        wordline: &[u8; CELLS_PER_STRING],
-        first: usize,
-        stride: usize,
-        count: usize,
-        out: &mut Vec<f64>,
-    ) {
-        out.reserve(count);
-        for k in 0..count {
-            let idx = first + k * stride;
-            assert!(idx < self.programmed, "strided search beyond programmed region");
-            let current = self.string_current_ideal(idx, wordline);
-            let current = if self.variation.read_sigma == 0.0 {
-                current
-            } else {
-                self.variation.read_current(current, &mut self.rng)
-            };
-            out.push(current);
+        let rows = self.wordline_rows(wordline);
+        let mut acc = [0f32; SENSE_TILE];
+        let mut currents = [0f64; SENSE_TILE];
+        let mut done = 0;
+        while done < count {
+            let tile = (count - done).min(SENSE_TILE);
+            self.tile_currents(&rows, first + done, tile, &mut acc, &mut currents);
+            out.extend_from_slice(&currents[..tile]);
+            done += tile;
         }
     }
 }
@@ -181,10 +344,33 @@ impl McamBlock {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::testutil::assert_close;
+    use crate::testutil::{assert_close, Rng};
 
     fn ideal_block(capacity: usize) -> McamBlock {
         McamBlock::new(capacity, McamParams::default(), VariationModel::IDEAL, 7)
+    }
+
+    /// Program `n` pseudo-random strings; calling twice with the same
+    /// arguments yields bit-identical twins (same block RNG stream).
+    fn random_block(n: usize, variation: VariationModel, seed: u64) -> McamBlock {
+        let mut block = McamBlock::new(n, McamParams::default(), variation, seed);
+        let mut rng = Rng::new(seed ^ 0xA5A5);
+        let mut cells = [0u8; CELLS_PER_STRING];
+        for _ in 0..n {
+            for c in cells.iter_mut() {
+                *c = rng.below(4) as u8;
+            }
+            block.program_string(&cells);
+        }
+        block
+    }
+
+    fn random_wordline(rng: &mut Rng) -> [u8; CELLS_PER_STRING] {
+        let mut wl = [0u8; CELLS_PER_STRING];
+        for c in wl.iter_mut() {
+            *c = rng.below(4) as u8;
+        }
+        wl
     }
 
     #[test]
@@ -245,17 +431,14 @@ mod tests {
     }
 
     #[test]
-    fn search_strided_picks_columns() {
-        let mut block = ideal_block(8);
-        for v in 0..8u8 {
-            block.program_string(&[v % 4; CELLS_PER_STRING]);
+    fn string_levels_roundtrip() {
+        let mut block = ideal_block(4);
+        let mut cells = [0u8; CELLS_PER_STRING];
+        for (l, c) in cells.iter_mut().enumerate() {
+            *c = (l % 4) as u8;
         }
-        let mut strided = Vec::new();
-        block.search_strided(&[0; CELLS_PER_STRING], 1, 4, 2, &mut strided);
-        let mut direct = Vec::new();
-        block.search_range(&[0; CELLS_PER_STRING], 1, 1, &mut direct);
-        block.search_range(&[0; CELLS_PER_STRING], 5, 1, &mut direct);
-        assert_eq!(strided, direct);
+        let idx = block.program_string(&cells);
+        assert_eq!(block.string_levels(idx), cells);
     }
 
     #[test]
@@ -272,6 +455,16 @@ mod tests {
         let mut block = ideal_block(4);
         let mut out = Vec::new();
         block.search_range(&[0; CELLS_PER_STRING], 0, 1, &mut out);
+    }
+
+    #[test]
+    #[should_panic(expected = "beyond programmed")]
+    fn sense_votes_beyond_programmed_panics() {
+        let mut block = ideal_block(4);
+        block.program_string(&[0; CELLS_PER_STRING]);
+        let ladder = SenseLadder::new(&McamParams::default(), 4);
+        let mut scores = vec![0f64; 2];
+        block.sense_votes_range(&[0; CELLS_PER_STRING], 0, 2, &ladder, 1.0, &mut scores);
     }
 
     #[test]
@@ -301,5 +494,95 @@ mod tests {
         block.search_range(&[1; CELLS_PER_STRING], 0, 16, &mut out);
         let mean = out.iter().sum::<f64>() / out.len() as f64;
         assert!(out.iter().any(|&c| (c - mean).abs() > 1e-6), "no spread");
+    }
+
+    #[test]
+    fn fused_matches_naive_ideal_bitwise() {
+        // No read noise: neither path consumes RNG at sense time, so
+        // both can run on the same block. Scores must agree to the last
+        // bit, including across tile boundaries and odd offsets.
+        let variation = VariationModel { program_sigma: 0.2, read_sigma: 0.0 };
+        let mut block = random_block(150, variation, 21);
+        let ladder = SenseLadder::new(&McamParams::default(), 16);
+        let mut rng = Rng::new(77);
+        for (first, count) in [(0, 150), (0, 1), (3, 64), (5, 129), (64, 64), (149, 1)] {
+            let wl = random_wordline(&mut rng);
+            let mut fused = vec![0.125f64; count];
+            let mut naive = vec![0.125f64; count];
+            block.sense_votes_range(&wl, first, count, &ladder, 0.375, &mut fused);
+            block.sense_votes_range_naive(&wl, first, count, &ladder, 0.375, &mut naive);
+            assert_eq!(fused, naive, "range ({first}, {count})");
+        }
+    }
+
+    #[test]
+    fn fused_matches_naive_noisy_bitwise() {
+        // Read noise consumes the block RNG per sensed string, so the
+        // oracle runs on an identically seeded twin; repeated calls keep
+        // the two RNG streams aligned draw for draw.
+        let variation = VariationModel { program_sigma: 0.15, read_sigma: 0.05 };
+        let mut a = random_block(130, variation, 33);
+        let mut b = random_block(130, variation, 33);
+        let ladder = SenseLadder::new(&McamParams::default(), 12);
+        let mut rng = Rng::new(99);
+        for (first, count) in [(0, 130), (7, 65), (0, 64), (129, 1), (40, 13)] {
+            let wl = random_wordline(&mut rng);
+            let mut fused = vec![0f64; count];
+            let mut naive = vec![0f64; count];
+            a.sense_votes_range(&wl, first, count, &ladder, 1.5, &mut fused);
+            b.sense_votes_range_naive(&wl, first, count, &ladder, 1.5, &mut naive);
+            assert_eq!(fused, naive, "range ({first}, {count})");
+        }
+    }
+
+    #[test]
+    fn search_range_matches_scalar_reference_noisy() {
+        // search_range runs on the tiled core; currents must stay
+        // bit-identical to the per-string scalar walk with in-order
+        // read-noise draws (a twin block supplies the aligned stream).
+        let variation = VariationModel { program_sigma: 0.1, read_sigma: 0.08 };
+        let mut a = random_block(100, variation, 5);
+        let mut b = random_block(100, variation, 5);
+        let mut rng = Rng::new(13);
+        for (first, count) in [(0, 100), (3, 70), (99, 1)] {
+            let wl = random_wordline(&mut rng);
+            let mut tiled = Vec::new();
+            a.search_range(&wl, first, count, &mut tiled);
+            let variation = b.variation;
+            let scalar: Vec<f64> = (first..first + count)
+                .map(|idx| {
+                    let current = b.string_current_ideal(idx, &wl);
+                    variation.read_current(current, &mut b.rng)
+                })
+                .collect();
+            assert_eq!(tiled, scalar, "range ({first}, {count})");
+        }
+    }
+
+    #[test]
+    fn fused_perfect_match_takes_full_ladder() {
+        let mut block = ideal_block(4);
+        let cells = [2u8; CELLS_PER_STRING];
+        block.program_string(&cells);
+        let ladder = SenseLadder::new(&McamParams::default(), 16);
+        let mut scores = vec![0f64; 1];
+        block.sense_votes_range(&cells, 0, 1, &ladder, 1.0, &mut scores);
+        // i_max clears every threshold (they sit strictly inside the range)
+        assert_close(scores[0], 16.0, 1e-12);
+    }
+
+    #[test]
+    fn rung_cache_tracks_ladder_changes() {
+        let mut block = random_block(40, VariationModel::IDEAL, 3);
+        let mut rng = Rng::new(8);
+        let wl = random_wordline(&mut rng);
+        for len in [4usize, 16, 8] {
+            let ladder = SenseLadder::new(&McamParams::default(), len);
+            let mut fused = vec![0f64; 40];
+            let mut naive = vec![0f64; 40];
+            block.sense_votes_range(&wl, 0, 40, &ladder, 1.0, &mut fused);
+            block.sense_votes_range_naive(&wl, 0, 40, &ladder, 1.0, &mut naive);
+            assert_eq!(fused, naive, "ladder depth {len}");
+        }
     }
 }

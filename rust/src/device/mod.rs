@@ -10,10 +10,15 @@
 //! * [`McamParams`] — electrical constants of the series-conductance
 //!   string model (shared with the L1 Pallas kernel).
 //! * [`block::McamBlock`] — a 128K-string block: program / word-line
-//!   search operations over the flat cell array.
+//!   search over cell-major plane storage, sensed by the fused tiled
+//!   sense→vote→accumulate kernel (`sense_votes_range`, the L3 hot
+//!   path; the scalar reference is retained as the equivalence oracle).
 //! * [`variation::VariationModel`] — program-time lognormal cell
-//!   variation + per-read current noise.
-//! * [`sense::SenseLadder`] — multi-threshold SA sensing and voting.
+//!   variation + per-read current noise (tile-batched on the hot path,
+//!   same RNG draw order as scalar reads).
+//! * [`sense::SenseLadder`] — multi-threshold SA sensing and voting,
+//!   plus [`sense::SeriesRungs`] — the ladder translated into exact
+//!   series-resistance rungs for the division-free ideal sense path.
 //! * [`timing::SearchTiming`] — per-iteration latency (Table 2's
 //!   throughput arithmetic).
 

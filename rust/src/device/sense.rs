@@ -9,6 +9,12 @@
 //! The ladder is log-spaced across the feasible current range
 //! `[i_min, i_max]` with midpoints `(t + 0.5) / T` — identical to
 //! `sa_thresholds` in `python/compile/mcam_sim.py`.
+//!
+//! For the fused sense kernel's ideal (noise-free) path the ladder can be
+//! translated into the **series-resistance domain** ([`SeriesRungs`]):
+//! comparing the f32 series sum against precomputed rungs decides exactly
+//! the same votes as comparing the ideal current `v_bl / series` against
+//! the thresholds, while eliminating the per-string division.
 
 use super::McamParams;
 
@@ -61,13 +67,101 @@ impl SenseLadder {
         votes
     }
 
-    /// Votes for a batch of currents (hot-path helper).
+    /// Votes for a batch of currents. The noisy path of the fused sense
+    /// kernel ([`crate::device::block::McamBlock::sense_votes_range`])
+    /// routes every sensed tile through this helper; the ideal path
+    /// votes in the series domain via [`SeriesRungs`] instead (decision
+    /// recorded in DESIGN.md §Perf).
     pub fn votes_batch(&self, currents: &[f64], out: &mut Vec<u32>) {
         out.reserve(currents.len());
         for &c in currents {
             out.push(self.votes(c));
         }
     }
+
+    /// Translate the ladder into exact series-resistance rungs for
+    /// bit-line voltage `v_bl` — the fused kernel's division-free ideal
+    /// path. Rebuilding costs ~31 f64 divisions per threshold, so
+    /// callers on the hot path cache the result (the block invalidates
+    /// its cache by exact threshold comparison).
+    pub fn series_rungs(&self, v_bl: f64) -> SeriesRungs {
+        let rungs = self.thresholds.iter().map(|&thr| exact_series_rung(v_bl, thr)).collect();
+        SeriesRungs { rungs }
+    }
+}
+
+/// The SA threshold ladder translated into the series-resistance domain
+/// for the ideal (noise-free) fused sense kernel: a string with f32
+/// series sum `s` draws ideal current `v_bl / s`, and
+///
+/// ```text
+/// v_bl / (s as f64) > thresholds[t]   ⟺   s <= rungs[t]
+/// ```
+///
+/// where `rungs[t]` is the **largest** f32 series sum that still clears
+/// threshold `t`. The rungs are found by exact bit-space bisection, so
+/// the equivalence holds for every representable series sum — votes stay
+/// bit-identical to the current-domain compare while the per-string
+/// division disappears. Ascending current thresholds give descending
+/// rungs.
+#[derive(Debug, Clone, Default)]
+pub struct SeriesRungs {
+    rungs: Vec<f32>,
+}
+
+impl SeriesRungs {
+    pub fn len(&self) -> usize {
+        self.rungs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rungs.is_empty()
+    }
+
+    pub fn rungs(&self) -> &[f32] {
+        &self.rungs
+    }
+
+    /// Vote count of a string with f32 series-resistance sum `series`:
+    /// rungs at or above it. Mirrors [`SenseLadder::votes`] — the rungs
+    /// descend, so the linear scan breaks at the first miss.
+    #[inline]
+    pub fn votes_for_series(&self, series: f32) -> u32 {
+        let mut votes = 0;
+        for &r in &self.rungs {
+            if series <= r {
+                votes += 1;
+            } else {
+                break;
+            }
+        }
+        votes
+    }
+}
+
+/// Largest non-negative f32 `s` for which the ideal current `v_bl / s`
+/// still clears `thr` under the exact hot-path predicate
+/// `v_bl / (s as f64) > thr`. Non-negative f32 values are ordered by
+/// their bit patterns and the predicate is monotone non-increasing in
+/// `s` (f32→f64 widening and IEEE f64 division are both monotone), so
+/// the boundary is found by bisection over bit space.
+fn exact_series_rung(v_bl: f64, thr: f64) -> f32 {
+    let clears = |bits: u32| v_bl / f32::from_bits(bits) as f64 > thr;
+    if !clears(0) {
+        // +0.0 draws infinite ideal current; if even that misses the
+        // threshold (thr = +inf), no series sum can clear it.
+        return 0.0;
+    }
+    let (mut lo, mut hi) = (0u32, f32::MAX.to_bits());
+    while lo < hi {
+        let mid = lo + (hi - lo).div_ceil(2);
+        if clears(mid) {
+            lo = mid;
+        } else {
+            hi = mid - 1;
+        }
+    }
+    f32::from_bits(lo)
 }
 
 #[cfg(test)]
@@ -148,5 +242,73 @@ mod tests {
         l.votes_batch(&currents, &mut out);
         let scalar: Vec<u32> = currents.iter().map(|&c| l.votes(c)).collect();
         assert_eq!(out, scalar);
+    }
+
+    #[test]
+    fn series_rungs_are_exact_boundaries() {
+        let p = McamParams::default();
+        let l = ladder(16);
+        let rungs = l.series_rungs(p.v_bl);
+        assert_eq!(rungs.len(), 16);
+        assert!(!rungs.is_empty());
+        for (&thr, &rung) in l.thresholds().iter().zip(rungs.rungs()) {
+            assert!(p.v_bl / rung as f64 > thr, "rung must clear its threshold");
+            let above = f32::from_bits(rung.to_bits() + 1);
+            assert!(p.v_bl / above as f64 <= thr, "rung + 1 ulp must miss");
+        }
+        for w in rungs.rungs().windows(2) {
+            assert!(w[0] >= w[1], "rungs must descend");
+        }
+    }
+
+    #[test]
+    fn exact_series_rung_boundary_forall() {
+        forall(
+            "rung is the largest clearing f32",
+            256,
+            |rng| (rng.range_f64(0.5, 100.0), rng.range_f64(1e-6, 50.0)),
+            |&(v_bl, thr)| {
+                let rung = exact_series_rung(v_bl, thr);
+                let clears = |s: f32| v_bl / s as f64 > thr;
+                let above = f32::from_bits(rung.to_bits() + 1);
+                clears(rung) && !clears(above)
+            },
+        );
+    }
+
+    #[test]
+    fn series_votes_match_current_votes() {
+        // The fused kernel's correctness hinge, probed adversarially:
+        // random series sums plus values within a few ULPs of every rung.
+        let p = McamParams::default();
+        let l = ladder(16);
+        let rungs = l.series_rungs(p.v_bl);
+        forall(
+            "series-domain votes == current-domain votes",
+            512,
+            |rng| {
+                if rng.below(2) == 0 {
+                    rng.range_f64(20.0, 6000.0) as f32
+                } else {
+                    let r = rungs.rungs()[rng.below(16)];
+                    let offset = rng.below(7) as i64 - 3;
+                    f32::from_bits((r.to_bits() as i64 + offset) as u32)
+                }
+            },
+            |&s| {
+                let current = p.v_bl / s as f64;
+                rungs.votes_for_series(s) == l.votes(current)
+            },
+        );
+    }
+
+    #[test]
+    fn degenerate_rungs() {
+        // thr = +inf: nothing clears, so the rung pins to 0 and a
+        // positive series sum never votes.
+        assert_eq!(exact_series_rung(24.0, f64::INFINITY), 0.0);
+        // thr <= 0: every finite series sum clears.
+        let rung = exact_series_rung(24.0, 0.0);
+        assert_eq!(rung, f32::MAX);
     }
 }

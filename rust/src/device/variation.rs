@@ -52,6 +52,22 @@ impl VariationModel {
             current * (self.read_sigma * rng.gaussian()).exp()
         }
     }
+
+    /// Apply read noise to a slice of sensed currents in place, drawing
+    /// one Gaussian per current in slice order — the tile-granular fast
+    /// path of the fused sense kernel
+    /// ([`crate::device::block::McamBlock::sense_votes_range`]).
+    /// Consumes the RNG in exactly the same order as per-string
+    /// [`Self::read_current`] calls, so tiled and scalar sensing replay
+    /// bit-for-bit (the determinism contract above).
+    pub fn read_currents(&self, currents: &mut [f64], rng: &mut Rng) {
+        if self.read_sigma == 0.0 {
+            return;
+        }
+        for current in currents.iter_mut() {
+            *current *= (self.read_sigma * rng.gaussian()).exp();
+        }
+    }
 }
 
 #[cfg(test)]
@@ -86,5 +102,31 @@ mod tests {
         let b = v.read_current(0.5, &mut rng);
         assert_ne!(a, b);
         assert!(a > 0.0 && b > 0.0);
+    }
+
+    #[test]
+    fn batched_read_noise_matches_scalar_draws() {
+        // Same seed, same draw order: the tile fast path must replay the
+        // per-string scalar path bit-for-bit.
+        let v = VariationModel { program_sigma: 0.0, read_sigma: 0.07 };
+        let base: Vec<f64> = (1..=9).map(|i| i as f64 / 10.0).collect();
+        let mut batched = base.clone();
+        let mut r1 = Rng::new(42);
+        v.read_currents(&mut batched, &mut r1);
+        let mut r2 = Rng::new(42);
+        let scalar: Vec<f64> = base.iter().map(|&c| v.read_current(c, &mut r2)).collect();
+        assert_eq!(batched, scalar);
+        // both consumed identical RNG state
+        assert_eq!(r1.next_u64(), r2.next_u64());
+    }
+
+    #[test]
+    fn ideal_batched_noise_is_noop_and_draws_nothing() {
+        let mut currents = vec![0.25, 0.5];
+        let mut rng = Rng::new(1);
+        let mut snapshot = rng.clone();
+        VariationModel::IDEAL.read_currents(&mut currents, &mut rng);
+        assert_eq!(currents, vec![0.25, 0.5]);
+        assert_eq!(rng.next_u64(), snapshot.next_u64());
     }
 }

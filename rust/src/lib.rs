@@ -5,9 +5,10 @@
 //! (cs.AR 2024) as a three-layer rust + JAX + Pallas system:
 //!
 //! * **L3 (this crate)** — the serving coordinator and every hardware
-//!   substrate: a cycle-level NAND-flash MCAM device simulator
-//!   ([`device`]), the four code-word encodings ([`encoding`]), the
-//!   SVSS/AVSS search engines ([`search`]), a request router / batcher /
+//!   substrate: a cycle-level NAND-flash MCAM device simulator with a
+//!   fused, tiled cell-major sense kernel ([`device`]), the four
+//!   code-word encodings ([`encoding`]), the SVSS/AVSS search engines
+//!   ([`search`]), a request router / batcher /
 //!   worker pool ([`coordinator`]), energy + timing accounting
 //!   ([`energy`], [`device::timing`]) and the experiment harnesses that
 //!   regenerate every table and figure of the paper ([`experiments`]).

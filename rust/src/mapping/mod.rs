@@ -17,6 +17,13 @@
 //! * **AVSS** — *all W columns* of group *g* at once (the query's single
 //!   4-level word drives the lines): `G` iterations per search — the
 //!   paper's ⌈d/24⌉, a `W×` reduction.
+//!
+//! The engine programs support strings **column-major** within a shard
+//! (all vectors' string (g, c) adjacent), and the block stores cells
+//! **cell-major** (one plane per word line, strings contiguous within a
+//! plane — [`crate::device::block::McamBlock`]): together, every search
+//! iteration streams contiguous plane segments through the fused sense
+//! kernel instead of gathering string-major rows (DESIGN.md §Perf).
 
 pub mod capacity;
 

@@ -14,6 +14,11 @@
 //! * AVSS iteration g senses all `W` column ranges of the group under a
 //!   single word-line application.
 //!
+//! Every iteration hands its contiguous range to the fused, tiled
+//! cell-major sense kernel ([`McamBlock::sense_votes_range`]), which
+//! streams the block's cell planes and accumulates weighted ladder
+//! votes directly into the per-query score slice (DESIGN.md §Perf).
+//!
 //! [`SearchEngine::search_batch`] is the primary entry point: it encodes
 //! each query exactly once, precomputes every word-line drive, and fans
 //! the batch out across shards with scoped threads
@@ -116,16 +121,18 @@ struct Shard {
     base: usize,
     /// Support vectors programmed into this shard.
     n: usize,
-    /// Per-shard scratch currents (hot path: reused across searches).
-    currents: Vec<f64>,
 }
 
 impl Shard {
     /// Score every query of the batch against this shard's support
     /// vectors. `wordlines[q]` is iteration-major: `g·W + c` for SVSS,
     /// `g` for AVSS. Returns `wordlines.len() × n` partial scores
-    /// (query-major) — accumulation order per vector matches the legacy
-    /// single-block engine exactly, so results are bit-identical.
+    /// (query-major). Each iteration hands its contiguous string range
+    /// straight to the fused sense→vote→accumulate kernel
+    /// ([`McamBlock::sense_votes_range`]) — no intermediate currents
+    /// buffer — and the kernel preserves the scalar reference's
+    /// per-string cell-sum and RNG draw order, so results stay
+    /// bit-identical to the legacy single-block engine.
     fn score_batch(
         &mut self,
         wordlines: &[Vec<[u8; CELLS_PER_STRING]>],
@@ -148,13 +155,14 @@ impl Shard {
                         SearchMode::Svss => &wls[g * word_length + c],
                         SearchMode::Avss => &wls[g],
                     };
-                    self.currents.clear();
-                    self.block
-                        .search_range(wl, (g * word_length + c) * m, m, &mut self.currents);
-                    let weight = weights[c];
-                    for (v, &current) in self.currents.iter().enumerate() {
-                        scores[v] += weight * ladder.votes(current) as f64;
-                    }
+                    self.block.sense_votes_range(
+                        wl,
+                        (g * word_length + c) * m,
+                        m,
+                        ladder,
+                        weights[c],
+                        scores,
+                    );
                 }
             }
         }
@@ -201,7 +209,6 @@ impl SearchEngine {
                 ),
                 base: 0,
                 n: 0,
-                currents: Vec::new(),
             })
             .collect();
         SearchEngine {

@@ -1,0 +1,172 @@
+//! forall kernel-equivalence: the fused, tiled, cell-major sense kernel
+//! (`McamBlock::sense_votes_range`) must be **bit-identical** to the
+//! retained scalar reference (`sense_votes_range_naive`) across random
+//! encodings, code-word lengths, ladder depths, shard counts, and
+//! noisy/ideal variation models — same per-string f32 cell-sum order,
+//! same per-shard RNG draw order, so accumulated scores match to the
+//! last bit (the PR's acceptance criterion).
+
+use mcamvss::device::block::McamBlock;
+use mcamvss::device::sense::SenseLadder;
+use mcamvss::device::variation::VariationModel;
+use mcamvss::device::McamParams;
+use mcamvss::encoding::{Encoding, ALL_ENCODINGS};
+use mcamvss::mapping::VectorLayout;
+use mcamvss::testutil::{derive_seed, forall, Rng};
+use mcamvss::CELLS_PER_STRING;
+
+const VARIATIONS: [VariationModel; 4] = [
+    VariationModel::IDEAL,
+    VariationModel { program_sigma: 0.15, read_sigma: 0.0 },
+    VariationModel { program_sigma: 0.0, read_sigma: 0.05 },
+    VariationModel { program_sigma: 0.15, read_sigma: 0.05 },
+];
+
+#[derive(Debug)]
+struct Case {
+    encoding: Encoding,
+    cl: usize,
+    dims: usize,
+    n_vectors: usize,
+    shards: usize,
+    ladder_len: usize,
+    variation: VariationModel,
+    seed: u64,
+    weight: f64,
+}
+
+#[test]
+fn fused_kernel_matches_naive_reference_bitwise() {
+    forall(
+        "fused tiled kernel == scalar reference (bitwise)",
+        48,
+        |rng| Case {
+            encoding: ALL_ENCODINGS[rng.below(ALL_ENCODINGS.len())],
+            cl: 1 + rng.below(4),
+            dims: 1 + rng.below(52),
+            n_vectors: 1 + rng.below(40),
+            shards: 1 + rng.below(4),
+            ladder_len: 1 + rng.below(24),
+            variation: VARIATIONS[rng.below(VARIATIONS.len())],
+            seed: rng.next_u64(),
+            weight: rng.range_f64(0.25, 4.0),
+        },
+        |case| {
+            let params = McamParams::default();
+            let ladder = SenseLadder::new(&params, case.ladder_len);
+            let layout = VectorLayout::new(case.dims, case.encoding, case.cl);
+            let spv = layout.strings_per_vector();
+            let levels = case.encoding.levels(case.cl);
+            let mut data_rng = Rng::new(case.seed ^ 0xDA7A);
+
+            // A realistic support set: quantized values → code words →
+            // per-string cell arrays (includes padding lanes).
+            let mut strings: Vec<[u8; CELLS_PER_STRING]> = Vec::new();
+            for _ in 0..case.n_vectors {
+                let values: Vec<u32> =
+                    (0..case.dims).map(|_| data_rng.below(levels) as u32).collect();
+                let words = case.encoding.encode_vector(&values, case.cl);
+                strings.extend(layout.strings_for(&words));
+            }
+
+            // Word lines driven from a random 4-level query word per dim.
+            let q4: Vec<u8> = (0..case.dims).map(|_| data_rng.below(4) as u8).collect();
+            let wordlines: Vec<[u8; CELLS_PER_STRING]> =
+                (0..layout.groups).map(|g| layout.avss_wordline(&q4, g)).collect();
+
+            // Partition vector-contiguously across shards like the engine
+            // and compare the kernels shard by shard on seeded twins.
+            let per = case.n_vectors.div_ceil(case.shards);
+            for shard in 0..case.shards {
+                let lo = (shard * per).min(case.n_vectors);
+                let hi = ((shard + 1) * per).min(case.n_vectors);
+                if lo == hi {
+                    continue;
+                }
+                let shard_strings = &strings[lo * spv..hi * spv];
+                let seed = derive_seed(case.seed, shard as u64);
+                let mut fused_block =
+                    McamBlock::new(shard_strings.len(), params, case.variation, seed);
+                let mut naive_block =
+                    McamBlock::new(shard_strings.len(), params, case.variation, seed);
+                for cells in shard_strings {
+                    fused_block.program_string(cells);
+                    naive_block.program_string(cells);
+                }
+                let total = shard_strings.len();
+                let mut fused = vec![0f64; total];
+                let mut naive = vec![0f64; total];
+                for wl in &wordlines {
+                    fused_block.sense_votes_range(wl, 0, total, &ladder, case.weight, &mut fused);
+                    naive_block.sense_votes_range_naive(
+                        wl,
+                        0,
+                        total,
+                        &ladder,
+                        case.weight,
+                        &mut naive,
+                    );
+                }
+                // An unaligned subrange exercises the tile boundaries.
+                let first = total / 3;
+                let count = total - first;
+                let mut fused_sub = vec![0f64; count];
+                let mut naive_sub = vec![0f64; count];
+                fused_block.sense_votes_range(
+                    &wordlines[0],
+                    first,
+                    count,
+                    &ladder,
+                    case.weight,
+                    &mut fused_sub,
+                );
+                naive_block.sense_votes_range_naive(
+                    &wordlines[0],
+                    first,
+                    count,
+                    &ladder,
+                    case.weight,
+                    &mut naive_sub,
+                );
+                if fused != naive || fused_sub != naive_sub {
+                    return false;
+                }
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn tiled_search_range_matches_scalar_currents() {
+    // The currents path (`search_range`) rides the same tiled core; its
+    // ideal output must equal the per-string scalar walk exactly.
+    forall(
+        "tiled search_range == per-string currents (ideal, bitwise)",
+        32,
+        |rng| (1 + rng.below(200), rng.next_u64()),
+        |&(n, seed)| {
+            let variation = VariationModel { program_sigma: 0.2, read_sigma: 0.0 };
+            let mut block = McamBlock::new(n, McamParams::default(), variation, seed);
+            let mut rng = Rng::new(seed ^ 0x5EED);
+            let mut cells = [0u8; CELLS_PER_STRING];
+            for _ in 0..n {
+                for c in cells.iter_mut() {
+                    *c = rng.below(4) as u8;
+                }
+                block.program_string(&cells);
+            }
+            let mut wl = [0u8; CELLS_PER_STRING];
+            for c in wl.iter_mut() {
+                *c = rng.below(4) as u8;
+            }
+            let mut tiled = Vec::new();
+            block.search_range(&wl, 0, n, &mut tiled);
+            let mut scalar = Vec::new();
+            for idx in 0..n {
+                scalar.push(block.string_current_ideal(idx, &wl));
+            }
+            tiled == scalar
+        },
+    );
+}
