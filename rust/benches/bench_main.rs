@@ -10,16 +10,16 @@
 //!   paper reports and are recorded in DESIGN.md §Perf;
 //! * **perf targets** (`perf_`) — microbenchmarks of the L3 hot path
 //!   (fused sense kernel, block search, engine end-to-end,
-//!   batched/sharded search, coordinator overhead) with throughput
-//!   numbers for DESIGN.md §Perf.
+//!   batched/sharded search, top-k selection, coordinator overhead) with
+//!   throughput numbers for DESIGN.md §Perf.
 //!
 //! The tracked perf targets (`perf_kernel`, `perf_engine`,
-//! `perf_batch_shards`) additionally write their measurements into
+//! `perf_batch_shards`, `perf_topk`) additionally write their measurements into
 //! `BENCH_engine.json` at the repository root (merged key-by-key, so
 //! partial runs keep the other sections), tracking the perf trajectory
 //! across PRs.
 
-use mcamvss::coordinator::{Coordinator, CoordinatorConfig, Payload};
+use mcamvss::coordinator::{CoordinatorConfig, Payload, Server};
 use mcamvss::device::block::McamBlock;
 use mcamvss::device::sense::SenseLadder;
 use mcamvss::device::variation::VariationModel;
@@ -28,7 +28,7 @@ use mcamvss::encoding::Encoding;
 use mcamvss::experiments::{self, EpisodeSettings};
 use mcamvss::fsl::store::ArtifactStore;
 use mcamvss::search::engine::{EngineConfig, SearchEngine};
-use mcamvss::search::SearchMode;
+use mcamvss::search::{SearchMode, SearchRequest};
 use mcamvss::testutil::Rng;
 use mcamvss::util::json::{Json, ObjBuilder};
 use mcamvss::CELLS_PER_STRING;
@@ -195,6 +195,10 @@ fn main() {
     if want("perf_batch_shards") {
         section("perf_batch_shards");
         perf_batch_shards(&mut report);
+    }
+    if want("perf_topk") {
+        section("perf_topk");
+        perf_topk(&mut report);
     }
     if want("perf_coordinator") {
         section("perf_coordinator");
@@ -407,14 +411,14 @@ fn perf_engine(report: &mut Vec<(String, Json)>) {
     for (mode, cl) in [(SearchMode::Avss, 32), (SearchMode::Svss, 32)] {
         let cfg = EngineConfig::new(Encoding::Mtmc, cl, mode, 3.0)
             .with_variation(VariationModel::nand_default());
-        let mut engine = SearchEngine::new(cfg, dims, n_vectors);
-        engine.program_support(&refs, &labels);
-        let query = &embs[0];
-        engine.search(query); // warmup
+        let mut engine = SearchEngine::new(cfg, dims, n_vectors).unwrap();
+        engine.program_support(&refs, &labels).unwrap();
+        let query = SearchRequest::new(&embs[0]);
+        engine.search(&query).unwrap(); // warmup
         let reps = 20;
         let t0 = Instant::now();
         for _ in 0..reps {
-            engine.search(query);
+            engine.search(&query).unwrap();
         }
         let dt = t0.elapsed().as_secs_f64();
         println!(
@@ -454,7 +458,8 @@ fn perf_batch_shards(report: &mut Vec<(String, Json)>) {
         .collect();
     let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
     let labels: Vec<u32> = (0..n_vectors as u32).map(|i| i / 10).collect();
-    let queries: Vec<&[f32]> = refs.iter().take(batch_size).copied().collect();
+    let queries: Vec<SearchRequest> =
+        refs.iter().take(batch_size).map(|&q| SearchRequest::new(q)).collect();
     let reps = 6;
     println!("{n_vectors} vectors, MTMC cl=8 AVSS, batch size {batch_size}, {reps} reps");
     let mut baseline_batched = 0.0f64;
@@ -464,21 +469,21 @@ fn perf_batch_shards(report: &mut Vec<(String, Json)>) {
             .with_variation(VariationModel::nand_default())
             .with_seed(7)
             .with_shards(shards);
-        let mut engine = SearchEngine::new(cfg, dims, n_vectors);
-        engine.program_support(&refs, &labels);
-        engine.search_batch(&queries); // warmup
+        let mut engine = SearchEngine::new(cfg, dims, n_vectors).unwrap();
+        engine.program_support(&refs, &labels).unwrap();
+        engine.search_batch(&queries).unwrap(); // warmup
 
         let t0 = Instant::now();
         for _ in 0..reps {
             for q in &queries {
-                engine.search(q);
+                engine.search(q).unwrap();
             }
         }
         let scalar = (reps * batch_size) as f64 / t0.elapsed().as_secs_f64();
 
         let t0 = Instant::now();
         for _ in 0..reps {
-            engine.search_batch(&queries);
+            engine.search_batch(&queries).unwrap();
         }
         let batched = (reps * batch_size) as f64 / t0.elapsed().as_secs_f64();
 
@@ -523,17 +528,17 @@ fn perf_coordinator() {
     let ecfg = EngineConfig::new(Encoding::Mtmc, 8, SearchMode::Avss, 3.0).ideal();
 
     // bare engine
-    let mut engine = SearchEngine::new(ecfg, dims, n_vectors);
-    engine.program_support(&refs, &labels);
+    let mut engine = SearchEngine::new(ecfg, dims, n_vectors).unwrap();
+    engine.program_support(&refs, &labels).unwrap();
     let reps = 200;
     let t0 = Instant::now();
     for i in 0..reps {
-        engine.search(&embs[i % embs.len()]);
+        engine.search(&SearchRequest::new(&embs[i % embs.len()])).unwrap();
     }
     let bare = reps as f64 / t0.elapsed().as_secs_f64();
 
     for workers in [1, 2, 4] {
-        let coord = Coordinator::start(
+        let server = Server::start(
             CoordinatorConfig { workers, queue_capacity: 512, ..Default::default() },
             ecfg,
             dims,
@@ -544,15 +549,84 @@ fn perf_coordinator() {
         .unwrap();
         let t0 = Instant::now();
         for i in 0..reps {
-            coord.submit(Payload::Embedding(embs[i % embs.len()].clone()));
+            server.submit(Payload::Embedding(embs[i % embs.len()].clone()));
         }
-        let responses = coord.shutdown();
+        let responses = server.shutdown();
         let served = responses.len() as f64 / t0.elapsed().as_secs_f64();
         println!(
             "coordinator {workers} worker(s): {served:.0} req/s (bare engine {bare:.0}/s, {:.2}x)",
             served / bare
         );
     }
+    println!();
+}
+
+/// Top-k selection cost on the serving path: top-1 vs top-5 vs the
+/// dense `full_scores` dump at 1/4/8 shards (ISSUE 3 acceptance point).
+/// The bounded heap keeps ranked retrieval within noise of winner-only
+/// search; materializing dense scores pays the O(N) copy per query.
+fn perf_topk(report: &mut Vec<(String, Json)>) {
+    let mut rng = Rng::new(9);
+    let dims = 48;
+    let n_vectors = 2000; // 200-way 10-shot
+    let batch_size = 8;
+    let embs: Vec<Vec<f32>> = (0..n_vectors)
+        .map(|_| (0..dims).map(|_| rng.range_f64(0.0, 3.0) as f32).collect())
+        .collect();
+    let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
+    let labels: Vec<u32> = (0..n_vectors as u32).map(|i| i / 10).collect();
+    let reps = 6;
+    println!("{n_vectors} vectors, MTMC cl=8 AVSS, batch size {batch_size}, {reps} reps");
+    let mut rows: Vec<Json> = Vec::new();
+    for shards in [1usize, 4, 8] {
+        let cfg = EngineConfig::new(Encoding::Mtmc, 8, SearchMode::Avss, 3.0)
+            .with_variation(VariationModel::nand_default())
+            .with_seed(7)
+            .with_shards(shards);
+        let mut engine = SearchEngine::new(cfg, dims, n_vectors).unwrap();
+        engine.program_support(&refs, &labels).unwrap();
+        let mut measured = Vec::new();
+        for (name, top_k, dense) in
+            [("top1", 1usize, false), ("top5", 5, false), ("full_scores", 5, true)]
+        {
+            let requests: Vec<SearchRequest> = refs
+                .iter()
+                .take(batch_size)
+                .map(|&q| {
+                    let request = SearchRequest::new(q).with_top_k(top_k);
+                    if dense {
+                        request.with_full_scores()
+                    } else {
+                        request
+                    }
+                })
+                .collect();
+            engine.search_batch(&requests).unwrap(); // warmup
+            let t0 = Instant::now();
+            for _ in 0..reps {
+                engine.search_batch(&requests).unwrap();
+            }
+            let per_s = (reps * batch_size) as f64 / t0.elapsed().as_secs_f64();
+            measured.push((name, per_s));
+        }
+        println!(
+            "shards={shards}: top1 {:.0}/s, top5 {:.0}/s, full_scores {:.0}/s",
+            measured[0].1, measured[1].1, measured[2].1
+        );
+        let mut row = ObjBuilder::new().field("shards", Json::num(shards as f64));
+        for (name, per_s) in measured {
+            row = row.field(&format!("{name}_searches_per_s"), Json::num(per_s));
+        }
+        rows.push(row.build());
+    }
+    report.push((
+        "perf_topk".to_string(),
+        ObjBuilder::new()
+            .field("n_vectors", Json::num(n_vectors as f64))
+            .field("batch_size", Json::num(batch_size as f64))
+            .field("shards", Json::Arr(rows))
+            .build(),
+    ));
     println!();
 }
 

@@ -12,7 +12,7 @@
 //! ```
 
 use anyhow::{Context, Result};
-use mcamvss::coordinator::{Coordinator, CoordinatorConfig, Payload};
+use mcamvss::coordinator::{CoordinatorConfig, Payload, Server};
 use mcamvss::encoding::Encoding;
 use mcamvss::fsl::store::ArtifactStore;
 use mcamvss::metrics::LatencyHistogram;
@@ -100,7 +100,7 @@ fn main() -> Result<()> {
     let clip = store.clip("omniglot", "hat_avss")?;
     let engine_cfg = EngineConfig::new(Encoding::Mtmc, CL, SearchMode::Avss, clip);
     let embed_fn = embedder.as_embed_fn();
-    let coord = Coordinator::start(
+    let server = Server::start(
         CoordinatorConfig { workers: 2, queue_capacity: 512, ..Default::default() },
         engine_cfg,
         dim,
@@ -119,9 +119,9 @@ fn main() -> Result<()> {
     // ---- serve raw-image queries ----
     let t0 = Instant::now();
     for &qi in &query_idx {
-        coord.submit(Payload::Image(image_slice(&images, qi)?.to_vec()));
+        server.submit(Payload::Image(image_slice(&images, qi)?.to_vec()));
     }
-    let mut responses = coord.shutdown();
+    let mut responses = server.shutdown();
     let wall = t0.elapsed();
     responses.sort_by_key(|r| r.id);
 
@@ -130,8 +130,8 @@ fn main() -> Result<()> {
     let mut device_us = 0f64;
     for r in &responses {
         latency.record(r.wall_latency);
-        device_us += r.device_latency_us;
-        if r.label == query_truth[r.id as usize] {
+        device_us += r.device_latency_us();
+        if r.label() == Some(query_truth[r.id as usize]) {
             correct += 1;
         }
     }

@@ -7,7 +7,7 @@
 //! ```
 
 use anyhow::{Context, Result};
-use mcamvss::coordinator::{Coordinator, CoordinatorConfig, Payload};
+use mcamvss::coordinator::{CoordinatorConfig, Payload, Server};
 use mcamvss::coordinator::batcher::BatcherConfig;
 use mcamvss::encoding::Encoding;
 use mcamvss::fsl::sample_episode;
@@ -42,8 +42,8 @@ fn main() -> Result<()> {
             batcher: BatcherConfig { max_batch: 16, max_wait: Duration::from_millis(1) },
         };
         let engine_cfg = EngineConfig::new(Encoding::Mtmc, 8, SearchMode::Avss, clip);
-        let coord =
-            Coordinator::start(cfg, engine_cfg, ds.dims, &support, &labels,
+        let server =
+            Server::start(cfg, engine_cfg, ds.dims, &support, &labels,
                 mcamvss::coordinator::worker::identity_embed())?;
 
         let t0 = Instant::now();
@@ -52,9 +52,9 @@ fn main() -> Result<()> {
             let &(row, label) = &ep.queries[i % ep.queries.len()];
             truth.push(label);
             // blocking submit: the bounded queue provides backpressure
-            coord.submit(Payload::Embedding(ds.embedding(row).to_vec()));
+            server.submit(Payload::Embedding(ds.embedding(row).to_vec()));
         }
-        let mut responses = coord.shutdown();
+        let mut responses = server.shutdown();
         let wall = t0.elapsed();
         responses.sort_by_key(|r| r.id);
 
@@ -62,7 +62,7 @@ fn main() -> Result<()> {
         let mut correct = 0;
         for r in &responses {
             latency.record(r.wall_latency);
-            if r.label == truth[r.id as usize] {
+            if r.label() == Some(truth[r.id as usize]) {
                 correct += 1;
             }
         }

@@ -2,18 +2,19 @@
 //! needed.
 //!
 //! Build an MCAM search engine, program a small support set, and run a
-//! few queries under AVSS with the paper's MTMC encoding:
+//! few ranked top-k queries under AVSS with the paper's MTMC encoding:
 //!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
 
+use anyhow::Result;
 use mcamvss::encoding::Encoding;
 use mcamvss::search::engine::{EngineConfig, SearchEngine};
-use mcamvss::search::SearchMode;
+use mcamvss::search::{SearchMode, SearchRequest};
 use mcamvss::testutil::Rng;
 
-fn main() {
+fn main() -> Result<()> {
     // 1. Make a toy support set: 10 classes x 5 shots of 48-d embeddings.
     let mut rng = Rng::new(42);
     let dims = 48;
@@ -34,30 +35,36 @@ fn main() {
     // 2. Configure the engine: MTMC code word length 8, asymmetric search
     //    (AVSS), NAND device noise on, clip point 3.0.
     let cfg = EngineConfig::new(Encoding::Mtmc, 8, SearchMode::Avss, 3.0);
-    let mut engine = SearchEngine::new(cfg, dims, support.len());
+    let mut engine = SearchEngine::new(cfg, dims, support.len() + 1)?;
 
     // 3. Program the support set into the (simulated) MCAM block.
     let refs: Vec<&[f32]> = support.iter().map(|v| v.as_slice()).collect();
-    engine.program_support(&refs, &labels);
+    engine.program_support(&refs, &labels)?;
     println!(
         "programmed {} support vectors into {} NAND strings",
         engine.n_vectors(),
         engine.n_vectors() * engine.layout().strings_per_vector()
     );
 
-    // 4. Search: noisy queries near each prototype.
+    // 4. Search: noisy queries near each prototype, ranked top-3.
     let mut correct = 0;
     for (class, proto) in prototypes.iter().enumerate() {
         let query: Vec<f32> =
             proto.iter().map(|&p| (p + 0.05 * rng.gaussian()).max(0.0) as f32).collect();
-        let result = engine.search(&query);
+        let response = engine.search(&SearchRequest::new(&query).with_top_k(3))?;
+        let best = response.top().expect("top_k >= 1 on non-empty support");
+        let runners: Vec<String> = response.hits[1..]
+            .iter()
+            .map(|h| format!("{}@{:.0}", h.label, h.score))
+            .collect();
         println!(
-            "query class {class} -> predicted {} ({} MCAM iterations, winner score {:.0})",
-            result.label,
-            result.iterations,
-            result.scores[result.winner]
+            "query class {class} -> predicted {} (score {:.0}, {} MCAM iterations; then {})",
+            best.label,
+            best.score,
+            response.iterations,
+            runners.join(" "),
         );
-        if result.label == class as u32 {
+        if best.label == class as u32 {
             correct += 1;
         }
     }
@@ -67,4 +74,14 @@ fn main() {
         engine.energy().nj_per_search(),
         engine.timing().latency_us()
     );
+
+    // 5. Classes accrue online: append an 11th class without touching the
+    //    other shards' strings, then tombstone it again.
+    let new_proto: Vec<f32> = (0..dims).map(|_| rng.range_f64(0.2, 2.8) as f32).collect();
+    let slot = engine.append(&new_proto, 10)?;
+    let hit = *engine.search(&SearchRequest::new(&new_proto))?.top().expect("non-empty");
+    println!("appended class 10 at slot {slot}; exact query resolves to label {}", hit.label);
+    engine.remove(slot)?;
+    println!("tombstoned slot {slot} again ({} live vectors)", engine.n_vectors());
+    Ok(())
 }

@@ -1,7 +1,18 @@
 //! Software baselines: exact float vector similarity search in the style
 //! of prototypical networks [34] — the "software baseline" series of
 //! Fig. 9 — plus a nearest-support variant matching the MANN
-//! winner-take-all decision rule.
+//! winner-take-all decision rule, and [`FloatBaseline`], the exact-float
+//! [`VectorSearchBackend`] that runs through the same serving coordinator
+//! as the MCAM engine (DESIGN.md §API).
+//!
+//! All winner selection uses `f64::total_cmp`: a NaN distance (hostile or
+//! degenerate input) can never panic a comparison, and NaN scores never
+//! outrank real ones.
+
+use crate::search::api::{
+    rank_top_k, BackendStats, EngineError, Hit, SearchRequest, SearchResponse, SupportSet,
+    VectorSearchBackend,
+};
 
 /// Distance/similarity metric for the float baselines.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -12,6 +23,24 @@ pub enum Metric {
 }
 
 impl Metric {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Metric::L1 => "l1",
+            Metric::L2 => "l2",
+            Metric::Cosine => "cosine",
+        }
+    }
+
+    /// Parse a metric name, case-insensitively.
+    pub fn from_name(name: &str) -> Option<Metric> {
+        match name.to_ascii_lowercase().as_str() {
+            "l1" => Some(Metric::L1),
+            "l2" => Some(Metric::L2),
+            "cosine" => Some(Metric::Cosine),
+            _ => None,
+        }
+    }
+
     /// Distance (lower = more similar) between two vectors.
     pub fn distance(&self, a: &[f32], b: &[f32]) -> f64 {
         assert_eq!(a.len(), b.len());
@@ -42,6 +71,11 @@ impl Metric {
     }
 }
 
+/// `a` is strictly closer than `b` (NaN-safe: a NaN distance never wins).
+fn closer(a: f64, b: f64) -> bool {
+    a.total_cmp(&b) == std::cmp::Ordering::Less
+}
+
 /// Prototypical-network prediction: class prototypes are the mean of each
 /// class's support embeddings; the query is assigned to the nearest
 /// prototype under `metric`.
@@ -54,7 +88,7 @@ pub fn protonet_predict(
     assert_eq!(support.len(), labels.len());
     assert!(!support.is_empty(), "empty support set");
     let dims = query.len();
-    let max_label = *labels.iter().max().unwrap() as usize;
+    let max_label = labels.iter().copied().max().unwrap_or(0) as usize;
     let mut sums = vec![0f64; (max_label + 1) * dims];
     let mut counts = vec![0usize; max_label + 1];
     for (vec, &label) in support.iter().zip(labels) {
@@ -75,7 +109,7 @@ pub fn protonet_predict(
             proto[d] = (sums[label * dims + d] / counts[label] as f64) as f32;
         }
         let dist = metric.distance(&proto, query);
-        if dist < best.1 {
+        if closer(dist, best.1) {
             best = (label as u32, dist);
         }
     }
@@ -94,11 +128,180 @@ pub fn nearest_support_predict(
     let mut best = (0usize, f64::INFINITY);
     for (i, vec) in support.iter().enumerate() {
         let dist = metric.distance(vec, query);
-        if dist < best.1 {
+        if closer(dist, best.1) {
             best = (i, dist);
         }
     }
     labels[best.0]
+}
+
+/// One support slot of the float backend.
+#[derive(Debug, Clone)]
+struct FloatEntry {
+    embedding: Vec<f32>,
+    label: u32,
+    alive: bool,
+}
+
+/// Exact float nearest-support search behind the same
+/// [`VectorSearchBackend`] seam as the MCAM engine: the reference
+/// backend for accuracy comparisons and a drop-in software fallback for
+/// the serving coordinator. Hit scores are **negated distances** so that
+/// "higher is better" holds uniformly across backends.
+///
+/// `remove` tombstones immediately (there is no physical layout to
+/// rebalance), so — unlike the MCAM engine — slot numbering is stable
+/// until the next [`FloatBaseline::program`].
+#[derive(Debug, Clone)]
+pub struct FloatBaseline {
+    metric: Metric,
+    dims: usize,
+    entries: Vec<FloatEntry>,
+    dead: usize,
+}
+
+impl FloatBaseline {
+    pub fn new(dims: usize, metric: Metric) -> Result<FloatBaseline, EngineError> {
+        if dims == 0 {
+            return Err(EngineError::InvalidConfig(
+                "embeddings need at least one dimension".into(),
+            ));
+        }
+        Ok(FloatBaseline { metric, dims, entries: Vec::new(), dead: 0 })
+    }
+
+    pub fn metric(&self) -> Metric {
+        self.metric
+    }
+
+    /// Convenience wrapper over [`VectorSearchBackend::program`] for
+    /// borrowed support.
+    pub fn program_support(
+        &mut self,
+        embeddings: &[&[f32]],
+        labels: &[u32],
+    ) -> Result<(), EngineError> {
+        let set = SupportSet::from_refs(self.dims, embeddings, labels)?;
+        self.program(&set)
+    }
+}
+
+impl VectorSearchBackend for FloatBaseline {
+    fn program(&mut self, support: &SupportSet) -> Result<(), EngineError> {
+        if support.is_empty() {
+            return Err(EngineError::EmptySupport);
+        }
+        if support.dims() != self.dims {
+            return Err(EngineError::DimMismatch { expected: self.dims, got: support.dims() });
+        }
+        self.entries = (0..support.len())
+            .map(|i| FloatEntry {
+                embedding: support.embedding(i).to_vec(),
+                label: support.label(i),
+                alive: true,
+            })
+            .collect();
+        self.dead = 0;
+        Ok(())
+    }
+
+    fn append(&mut self, embedding: &[f32], label: u32) -> Result<usize, EngineError> {
+        if embedding.len() != self.dims {
+            return Err(EngineError::DimMismatch { expected: self.dims, got: embedding.len() });
+        }
+        self.entries.push(FloatEntry { embedding: embedding.to_vec(), label, alive: true });
+        Ok(self.entries.len() - 1)
+    }
+
+    fn remove(&mut self, index: usize) -> Result<(), EngineError> {
+        match self.entries.get_mut(index) {
+            None => Err(EngineError::IndexOutOfRange { index, len: self.entries.len() }),
+            Some(entry) if !entry.alive => Err(EngineError::AlreadyRemoved { index }),
+            Some(entry) => {
+                entry.alive = false;
+                self.dead += 1;
+                Ok(())
+            }
+        }
+    }
+
+    fn search_batch(
+        &mut self,
+        requests: &[SearchRequest<'_>],
+    ) -> Result<Vec<SearchResponse>, EngineError> {
+        if requests.is_empty() {
+            return Ok(Vec::new());
+        }
+        if self.len() == 0 {
+            return Err(EngineError::EmptySupport);
+        }
+        for request in requests {
+            if request.options.top_k == 0 {
+                return Err(EngineError::InvalidTopK);
+            }
+            if request.query.len() != self.dims {
+                return Err(EngineError::DimMismatch {
+                    expected: self.dims,
+                    got: request.query.len(),
+                });
+            }
+        }
+        let mut responses = Vec::with_capacity(requests.len());
+        for request in requests {
+            let top_k = request.options.top_k.min(self.len());
+            // Dense scores are materialized only on opt-in; the default
+            // path streams negated distances of the live entries straight
+            // into the bounded heap — O(k) memory per response, and
+            // tombstoned entries are never even measured.
+            let full_scores: Option<Vec<f64>> = if request.options.full_scores {
+                Some(
+                    self.entries
+                        .iter()
+                        .map(|e| -self.metric.distance(&e.embedding, request.query))
+                        .collect(),
+                )
+            } else {
+                None
+            };
+            let live = self.entries.iter().enumerate().filter(|(_, e)| e.alive);
+            let hits = match &full_scores {
+                Some(scores) => rank_top_k(
+                    top_k,
+                    live.map(|(i, e)| Hit { index: i, label: e.label, score: scores[i] }),
+                ),
+                None => rank_top_k(
+                    top_k,
+                    live.map(|(i, e)| Hit {
+                        index: i,
+                        label: e.label,
+                        score: -self.metric.distance(&e.embedding, request.query),
+                    }),
+                ),
+            };
+            responses.push(SearchResponse {
+                hits,
+                iterations: 0,
+                device_latency_us: 0.0,
+                full_scores,
+            });
+        }
+        Ok(responses)
+    }
+
+    fn len(&self) -> usize {
+        self.entries.len() - self.dead
+    }
+
+    fn stats(&self) -> BackendStats {
+        BackendStats {
+            backend: format!("float-{}", self.metric.name()),
+            vectors: self.len(),
+            tombstones: self.dead,
+            shards: 1,
+            iterations_per_search: 0,
+            nj_per_search: 0.0,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -114,6 +317,15 @@ mod tests {
         assert_close(Metric::L2.distance(&a, &b), 5.0, 1e-12);
         assert!(Metric::Cosine.distance(&a, &a).abs() < 1e-9);
         assert!(Metric::Cosine.distance(&[1.0, 0.0], &[0.0, 1.0]) > 0.99);
+    }
+
+    #[test]
+    fn metric_names_roundtrip() {
+        for metric in [Metric::L1, Metric::L2, Metric::Cosine] {
+            assert_eq!(Metric::from_name(metric.name()), Some(metric));
+        }
+        assert_eq!(Metric::from_name("COSINE"), Some(Metric::Cosine));
+        assert_eq!(Metric::from_name("manhattan"), None);
     }
 
     #[test]
@@ -145,6 +357,22 @@ mod tests {
     }
 
     #[test]
+    fn nan_embeddings_never_win() {
+        // A NaN-poisoned support vector has NaN distance to everything;
+        // total_cmp ordering keeps it from ever being selected.
+        let good = [1.0f32, 1.0];
+        let poison = [f32::NAN, 1.0];
+        let support: Vec<&[f32]> = vec![&poison, &good];
+        let labels = [7, 3];
+        assert_eq!(nearest_support_predict(&support, &labels, &[1.1, 1.0], Metric::L1), 3);
+        assert_eq!(protonet_predict(&support, &labels, &[1.1, 1.0], Metric::L2), 3);
+        let mut backend = FloatBaseline::new(2, Metric::L1).unwrap();
+        backend.program_support(&support, &labels).unwrap();
+        let response = backend.search(&SearchRequest::new(&[1.1, 1.0])).unwrap();
+        assert_eq!(response.top().unwrap().label, 3);
+    }
+
+    #[test]
     fn clustered_accuracy() {
         let mut rng = Rng::new(9);
         let dims = 16;
@@ -166,6 +394,60 @@ mod tests {
             assert_eq!(protonet_predict(&refs, &labels, p, Metric::L1), c as u32);
             assert_eq!(nearest_support_predict(&refs, &labels, p, Metric::Cosine), c as u32);
         }
+    }
+
+    #[test]
+    fn float_backend_matches_nearest_support_rule() {
+        let mut rng = Rng::new(17);
+        let dims = 12;
+        let support_vecs: Vec<Vec<f32>> = (0..20)
+            .map(|_| (0..dims).map(|_| rng.range_f64(0.0, 3.0) as f32).collect())
+            .collect();
+        let labels: Vec<u32> = (0..20).map(|i| i / 4).collect();
+        let refs: Vec<&[f32]> = support_vecs.iter().map(|v| v.as_slice()).collect();
+        for metric in [Metric::L1, Metric::L2, Metric::Cosine] {
+            let mut backend = FloatBaseline::new(dims, metric).unwrap();
+            backend.program_support(&refs, &labels).unwrap();
+            for _ in 0..10 {
+                let query: Vec<f32> =
+                    (0..dims).map(|_| rng.range_f64(0.0, 3.0) as f32).collect();
+                let response = backend
+                    .search(&SearchRequest::new(&query).with_top_k(3))
+                    .unwrap();
+                assert_eq!(response.hits.len(), 3);
+                assert_eq!(
+                    response.top().unwrap().label,
+                    nearest_support_predict(&refs, &labels, &query, metric),
+                    "{metric:?}"
+                );
+                assert_eq!(response.iterations, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn float_backend_error_paths() {
+        let mut backend = FloatBaseline::new(4, Metric::L2).unwrap();
+        assert_eq!(
+            backend.search(&SearchRequest::new(&[0.0; 4])).unwrap_err(),
+            EngineError::EmptySupport
+        );
+        backend.program_support(&[&[0.5f32; 4] as &[f32]], &[0]).unwrap();
+        assert_eq!(
+            backend.search(&SearchRequest::new(&[0.0; 3])).unwrap_err(),
+            EngineError::DimMismatch { expected: 4, got: 3 }
+        );
+        assert_eq!(
+            backend
+                .search(&SearchRequest::new(&[0.0; 4]).with_top_k(0))
+                .unwrap_err(),
+            EngineError::InvalidTopK
+        );
+        backend.remove(0).unwrap();
+        assert_eq!(
+            backend.search(&SearchRequest::new(&[0.0; 4])).unwrap_err(),
+            EngineError::EmptySupport
+        );
     }
 
     #[test]

@@ -17,7 +17,7 @@ pub struct Args {
 const VALUE_KEYS: &[&str] = &[
     "config", "dataset", "variant", "encoding", "cl", "mode", "n-way", "k-shot",
     "n-query", "episodes", "workers", "shards", "requests", "seed", "out",
-    "artifacts", "filter", "batch",
+    "artifacts", "filter", "batch", "top-k", "backend", "metric",
 ];
 
 impl Args {
@@ -100,5 +100,13 @@ mod tests {
     fn bad_int_errors() {
         let args = parse(&["eval", "--cl", "abc"]);
         assert!(args.opt_usize("cl").is_err());
+    }
+
+    #[test]
+    fn serving_keys_take_values() {
+        let args = parse(&["serve", "--top-k", "5", "--backend", "float", "--metric", "l2"]);
+        assert_eq!(args.opt_usize("top-k").unwrap(), Some(5));
+        assert_eq!(args.opt("backend"), Some("float"));
+        assert_eq!(args.opt("metric"), Some("l2"));
     }
 }

@@ -4,8 +4,9 @@
 //!
 //! Batching matters twice: the PJRT controller's fixed-batch executables
 //! amortize dispatch, and each batch drains into one
-//! `SearchEngine::search_batch` call on its worker, amortizing query
-//! encoding and per-shard fan-out across the whole batch.
+//! [`crate::search::api::VectorSearchBackend::search_batch`] call on its
+//! worker, amortizing query encoding and per-shard fan-out across the
+//! whole batch.
 
 use super::queue::BoundedQueue;
 use super::{Request, ServerStats};
@@ -99,9 +100,15 @@ fn flush(
 mod tests {
     use super::*;
     use crate::coordinator::Payload;
+    use crate::search::SearchOptions;
 
     fn req(id: u64) -> Request {
-        Request { id, payload: Payload::Embedding(vec![]), submitted_at: Instant::now() }
+        Request {
+            id,
+            payload: Payload::Embedding(vec![]),
+            options: SearchOptions::default(),
+            submitted_at: Instant::now(),
+        }
     }
 
     #[test]

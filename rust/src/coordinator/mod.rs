@@ -7,21 +7,33 @@
 //! ```text
 //!  clients → BoundedQueue (backpressure) → batcher (leader thread)
 //!          → per-worker queues → workers: [PJRT controller embed]
-//!          → MCAM SearchEngine (replicated per worker) → responses
+//!          → VectorSearchBackend (replicated per worker) → responses
 //! ```
 //!
-//! Each worker owns a full replica of the programmed MCAM block (real
-//! deployments replicate support sets across planes for exactly this
-//! parallelism) plus its own PJRT controller executable, so workers never
-//! contend on device state. The offline image vendors no tokio; the pool
-//! is std::thread + hand-rolled channels (`queue::BoundedQueue`), which a
-//! search-bound workload saturates just as well.
+//! The [`Server`] is **generic over the search substrate**: each worker
+//! owns any pre-programmed
+//! [`crate::search::api::VectorSearchBackend`] replica — the MCAM
+//! [`crate::search::engine::SearchEngine`] in production
+//! ([`Server::start`] builds seed-derived engine replicas, like
+//! plane-level replication on a die), the exact-float
+//! [`crate::baselines::FloatBaseline`] for software serving or accuracy
+//! shadowing ([`Server::start_with_backends`]). Requests carry per-query
+//! [`crate::search::SearchOptions`] (top-k, mode override), and every
+//! malformed input comes back as a typed
+//! [`crate::search::EngineError`] inside the [`Response`] — the request
+//! path never panics.
+//!
+//! The offline image vendors no tokio; the pool is std::thread +
+//! hand-rolled channels (`queue::BoundedQueue`), which a search-bound
+//! workload saturates just as well.
 
 pub mod batcher;
 pub mod queue;
 pub mod worker;
 
+use crate::search::api::{EngineError, Hit, SearchResponse, VectorSearchBackend};
 use crate::search::engine::{EngineConfig, SearchEngine};
+use crate::search::SearchOptions;
 use crate::util::json::{Json, ObjBuilder};
 use anyhow::Result;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -44,22 +56,55 @@ pub enum Payload {
 pub struct Request {
     pub id: u64,
     pub payload: Payload,
+    /// Per-request search knobs (top-k, mode override, dense scores).
+    pub options: SearchOptions,
     pub submitted_at: Instant,
 }
 
+/// The served answer to one request: ranked hits on success, a typed
+/// error on malformed input or upstream failure — never a panic.
 #[derive(Debug, Clone)]
 pub struct Response {
     pub id: u64,
-    /// Predicted label (episode-local class).
-    pub label: u32,
-    /// Winning support-vector index.
-    pub winner: usize,
+    pub outcome: std::result::Result<SearchResponse, EngineError>,
     /// Wall-clock latency through the coordinator.
     pub wall_latency: Duration,
-    /// Simulated MCAM latency (iterations × 50 µs).
-    pub device_latency_us: f64,
-    /// MCAM iterations consumed.
-    pub iterations: u64,
+}
+
+impl Response {
+    pub fn is_ok(&self) -> bool {
+        self.outcome.is_ok()
+    }
+
+    /// Ranked hits (empty on error).
+    pub fn hits(&self) -> &[Hit] {
+        self.outcome.as_ref().map(|r| r.hits.as_slice()).unwrap_or(&[])
+    }
+
+    /// The best hit, if the request succeeded.
+    pub fn top(&self) -> Option<&Hit> {
+        self.hits().first()
+    }
+
+    /// Predicted label (episode-local class), if the request succeeded.
+    pub fn label(&self) -> Option<u32> {
+        self.top().map(|h| h.label)
+    }
+
+    /// Winning support-slot index, if the request succeeded.
+    pub fn winner(&self) -> Option<usize> {
+        self.top().map(|h| h.index)
+    }
+
+    /// Device iterations consumed (0 on error or software backends).
+    pub fn iterations(&self) -> u64 {
+        self.outcome.as_ref().map(|r| r.iterations).unwrap_or(0)
+    }
+
+    /// Simulated device latency in microseconds (0 on error).
+    pub fn device_latency_us(&self) -> f64 {
+        self.outcome.as_ref().map(|r| r.device_latency_us).unwrap_or(0.0)
+    }
 }
 
 /// Aggregate serving statistics.
@@ -68,6 +113,9 @@ pub struct ServerStats {
     pub submitted: AtomicU64,
     pub completed: AtomicU64,
     pub rejected: AtomicU64,
+    /// Requests answered with a typed error. Every accepted request lands
+    /// in exactly one of `completed` / `errored`.
+    pub errored: AtomicU64,
     pub batches: AtomicU64,
 }
 
@@ -77,6 +125,7 @@ impl ServerStats {
             .field("submitted", Json::num(self.submitted.load(Ordering::Relaxed) as f64))
             .field("completed", Json::num(self.completed.load(Ordering::Relaxed) as f64))
             .field("rejected", Json::num(self.rejected.load(Ordering::Relaxed) as f64))
+            .field("errored", Json::num(self.errored.load(Ordering::Relaxed) as f64))
             .field("batches", Json::num(self.batches.load(Ordering::Relaxed) as f64))
             .build()
     }
@@ -100,9 +149,10 @@ impl Default for CoordinatorConfig {
     }
 }
 
-/// The serving coordinator. Generic over how embeddings are produced so
-/// tests can run without PJRT, while the binary plugs in the controller.
-pub struct Coordinator {
+/// The serving coordinator. Generic over how embeddings are produced
+/// (identity for pre-embedded payloads, PJRT controller otherwise) *and*
+/// over the search substrate behind each worker.
+pub struct Server {
     ingress: Arc<BoundedQueue<Request>>,
     responses: Arc<Mutex<Vec<Response>>>,
     stats: Arc<ServerStats>,
@@ -111,45 +161,43 @@ pub struct Coordinator {
     next_id: AtomicU64,
 }
 
-impl Coordinator {
-    /// Build a coordinator whose workers each own a [`SearchEngine`]
-    /// programmed with the given support set, plus an embedding function
-    /// (identity for pre-embedded payloads, PJRT controller otherwise).
-    pub fn start(
+impl Server {
+    /// Start a server whose workers each own one of the given
+    /// **pre-programmed** backend replicas — one worker per backend, so
+    /// `cfg.workers` must equal `backends.len()` (a mismatch would
+    /// silently mis-size the pool; it is rejected instead).
+    pub fn start_with_backends<B>(
         cfg: CoordinatorConfig,
-        engine_cfg: EngineConfig,
-        dims: usize,
-        support: &[&[f32]],
-        labels: &[u32],
+        backends: Vec<B>,
         embed: EmbedFn,
-    ) -> Result<Coordinator> {
+    ) -> std::result::Result<Server, EngineError>
+    where
+        B: VectorSearchBackend + Send + 'static,
+    {
+        if backends.is_empty() {
+            return Err(EngineError::InvalidConfig(
+                "server needs at least one backend replica".into(),
+            ));
+        }
+        if cfg.workers != backends.len() {
+            return Err(EngineError::InvalidConfig(format!(
+                "CoordinatorConfig.workers ({}) != backend replicas ({}); \
+                 the pool runs one worker per backend",
+                cfg.workers,
+                backends.len()
+            )));
+        }
         let ingress = Arc::new(BoundedQueue::new(cfg.queue_capacity));
         let responses = Arc::new(Mutex::new(Vec::new()));
         let stats = Arc::new(ServerStats::default());
-
-        let mut engines = Vec::with_capacity(cfg.workers);
-        for w in 0..cfg.workers {
-            // Each replica gets a distinct variation seed: distinct
-            // physical blocks, like plane-level replication on a die.
-            // Derivation goes through the same seeded-stream helper the
-            // engine uses for its shards, so a fixed engine seed replays
-            // the whole coordinator deterministically.
-            let mut ecfg = engine_cfg;
-            ecfg.seed = crate::testutil::derive_seed(engine_cfg.seed, 0x1000 + w as u64);
-            let mut engine = SearchEngine::new(ecfg, dims, support.len());
-            engine.program_support(support, labels);
-            engines.push(engine);
-        }
-
-        let pool = WorkerPool::start(engines, embed, Arc::clone(&responses), Arc::clone(&stats));
+        let pool = WorkerPool::start(backends, embed, Arc::clone(&responses), Arc::clone(&stats));
         let batcher_handle = batcher::spawn(
             cfg.batcher,
             Arc::clone(&ingress),
             pool.senders(),
             Arc::clone(&stats),
         );
-
-        Ok(Coordinator {
+        Ok(Server {
             ingress,
             responses,
             stats,
@@ -159,18 +207,56 @@ impl Coordinator {
         })
     }
 
-    /// Submit a request; blocks when the queue is full (backpressure).
+    /// Convenience constructor for the production substrate: build
+    /// `cfg.workers` MCAM [`SearchEngine`] replicas programmed with the
+    /// given support set. Each replica gets a distinct variation seed —
+    /// distinct physical blocks, like plane-level replication on a die —
+    /// derived through the same seeded-stream helper the engine uses for
+    /// its shards, so a fixed engine seed replays the whole coordinator
+    /// deterministically.
+    pub fn start(
+        cfg: CoordinatorConfig,
+        engine_cfg: EngineConfig,
+        dims: usize,
+        support: &[&[f32]],
+        labels: &[u32],
+        embed: EmbedFn,
+    ) -> Result<Server> {
+        let support_set = crate::search::api::SupportSet::from_refs(dims, support, labels)?;
+        let mut engines = Vec::with_capacity(cfg.workers);
+        for w in 0..cfg.workers {
+            let mut ecfg = engine_cfg;
+            ecfg.seed = crate::testutil::derive_seed(engine_cfg.seed, 0x1000 + w as u64);
+            let mut engine = SearchEngine::new(ecfg, dims, support_set.len().max(1))?;
+            engine.program(&support_set)?;
+            engines.push(engine);
+        }
+        Ok(Self::start_with_backends(cfg, engines, embed)?)
+    }
+
+    /// Submit a top-1 request; blocks when the queue is full
+    /// (backpressure).
     pub fn submit(&self, payload: Payload) -> u64 {
+        self.submit_with(payload, SearchOptions::default())
+    }
+
+    /// Submit with per-request options (top-k, mode override).
+    pub fn submit_with(&self, payload: Payload, options: SearchOptions) -> u64 {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         self.stats.submitted.fetch_add(1, Ordering::Relaxed);
-        self.ingress.push(Request { id, payload, submitted_at: Instant::now() });
+        self.ingress.push(Request { id, payload, options, submitted_at: Instant::now() });
         id
     }
 
     /// Try to submit without blocking; returns `None` when saturated.
     pub fn try_submit(&self, payload: Payload) -> Option<u64> {
+        self.try_submit_with(payload, SearchOptions::default())
+    }
+
+    /// Non-blocking submit with per-request options.
+    pub fn try_submit_with(&self, payload: Payload, options: SearchOptions) -> Option<u64> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let req = Request { id, payload, submitted_at: Instant::now() };
+        let req = Request { id, payload, options, submitted_at: Instant::now() };
         if self.ingress.try_push(req) {
             self.stats.submitted.fetch_add(1, Ordering::Relaxed);
             Some(id)
@@ -219,7 +305,7 @@ mod tests {
         (embs, labels)
     }
 
-    fn start_test_coordinator(workers: usize) -> (Coordinator, Vec<Vec<f32>>, Vec<u32>) {
+    fn start_test_server(workers: usize) -> (Server, Vec<Vec<f32>>, Vec<u32>) {
         let (embs, labels) = clustered(6, 3, 48);
         let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
         let cfg = CoordinatorConfig {
@@ -228,72 +314,161 @@ mod tests {
             batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(2) },
         };
         let ecfg = EngineConfig::new(Encoding::Mtmc, 8, SearchMode::Avss, 3.0).ideal();
-        let coord =
-            Coordinator::start(cfg, ecfg, 48, &refs, &labels, worker::identity_embed()).unwrap();
-        (coord, embs, labels)
+        let server =
+            Server::start(cfg, ecfg, 48, &refs, &labels, worker::identity_embed()).unwrap();
+        (server, embs, labels)
     }
 
     #[test]
     fn serves_embedding_requests() {
-        let (coord, embs, labels) = start_test_coordinator(2);
+        let (server, embs, labels) = start_test_server(2);
         for emb in &embs {
-            coord.submit(Payload::Embedding(emb.clone()));
+            server.submit(Payload::Embedding(emb.clone()));
         }
-        let mut responses = coord.shutdown();
+        let mut responses = server.shutdown();
         assert_eq!(responses.len(), embs.len());
         responses.sort_by_key(|r| r.id);
         let correct = responses
             .iter()
             .enumerate()
-            .filter(|(i, r)| r.label == labels[*i])
+            .filter(|(i, r)| r.label() == Some(labels[*i]))
             .count();
         assert!(correct >= embs.len() - 1, "correct {correct}/{}", embs.len());
         for r in &responses {
-            assert!(r.iterations > 0);
-            assert!(r.device_latency_us > 0.0);
+            assert!(r.is_ok());
+            assert!(r.iterations() > 0);
+            assert!(r.device_latency_us() > 0.0);
         }
     }
 
     #[test]
-    fn stats_track_flow() {
-        let (coord, embs, _) = start_test_coordinator(1);
-        for emb in embs.iter().take(5) {
-            coord.submit(Payload::Embedding(emb.clone()));
+    fn per_request_top_k_flows_through() {
+        let (server, embs, _) = start_test_server(2);
+        for emb in embs.iter().take(4) {
+            server.submit_with(
+                Payload::Embedding(emb.clone()),
+                SearchOptions { top_k: 3, ..Default::default() },
+            );
         }
-        let responses = coord.shutdown();
-        assert_eq!(responses.len(), 5);
+        let responses = server.shutdown();
+        assert_eq!(responses.len(), 4);
+        for r in &responses {
+            assert_eq!(r.hits().len(), 3, "top-3 request must return 3 ranked hits");
+            assert!(r.hits().windows(2).all(|p| p[0].score >= p[1].score));
+        }
+    }
+
+    #[test]
+    fn malformed_requests_get_typed_errors_not_panics() {
+        let (server, embs, _) = start_test_server(2);
+        let ok_id = server.submit(Payload::Embedding(embs[0].clone()));
+        let wrong_dim_id = server.submit(Payload::Embedding(vec![0.5; 7]));
+        let empty_id = server.submit(Payload::Embedding(Vec::new()));
+        let zero_k_id = server.submit_with(
+            Payload::Embedding(embs[1].clone()),
+            SearchOptions { top_k: 0, ..Default::default() },
+        );
+        let mut responses = server.shutdown();
+        responses.sort_by_key(|r| r.id);
+        assert_eq!(responses.len(), 4, "every request is answered exactly once");
+        let by_id = |id: u64| responses.iter().find(|r| r.id == id).unwrap();
+        assert!(by_id(ok_id).is_ok(), "well-formed request in a poisoned batch still served");
+        assert_eq!(
+            by_id(wrong_dim_id).outcome.as_ref().unwrap_err(),
+            &EngineError::DimMismatch { expected: 48, got: 7 }
+        );
+        assert_eq!(
+            by_id(empty_id).outcome.as_ref().unwrap_err(),
+            &EngineError::DimMismatch { expected: 48, got: 0 }
+        );
+        assert_eq!(
+            by_id(zero_k_id).outcome.as_ref().unwrap_err(),
+            &EngineError::InvalidTopK
+        );
+    }
+
+    #[test]
+    fn stats_track_flow() {
+        let (server, embs, _) = start_test_server(1);
+        for emb in embs.iter().take(5) {
+            server.submit(Payload::Embedding(emb.clone()));
+        }
+        server.submit(Payload::Embedding(vec![0.0; 3]));
+        let stats_arc = Arc::clone(&server.stats);
+        let responses = server.shutdown();
+        assert_eq!(responses.len(), 6);
+        assert_eq!(stats_arc.submitted.load(Ordering::Relaxed), 6);
+        assert_eq!(stats_arc.completed.load(Ordering::Relaxed), 5);
+        assert_eq!(stats_arc.errored.load(Ordering::Relaxed), 1);
     }
 
     #[test]
     fn try_submit_rejects_when_closed_pipeline_saturates() {
         // queue_capacity 64 >> 10 requests: all accepted
-        let (coord, embs, _) = start_test_coordinator(2);
+        let (server, embs, _) = start_test_server(2);
         let mut accepted = 0;
         for emb in embs.iter().take(10) {
-            if coord.try_submit(Payload::Embedding(emb.clone())).is_some() {
+            if server.try_submit(Payload::Embedding(emb.clone())).is_some() {
                 accepted += 1;
             }
         }
-        let responses = coord.shutdown();
+        let responses = server.shutdown();
         assert_eq!(accepted, 10);
         assert_eq!(responses.len(), 10);
     }
 
     #[test]
     fn multiple_workers_partition_work() {
-        let (coord, embs, _) = start_test_coordinator(4);
+        let (server, embs, _) = start_test_server(4);
         for _ in 0..4 {
             for emb in &embs {
-                coord.submit(Payload::Embedding(emb.clone()));
+                server.submit(Payload::Embedding(emb.clone()));
             }
         }
-        let responses = coord.shutdown();
+        let stats_arc = Arc::clone(&server.stats);
+        let responses = server.shutdown();
         assert_eq!(responses.len(), embs.len() * 4);
-        let batches = coord_batches(&responses);
-        assert!(batches > 0);
+        assert!(stats_arc.batches.load(Ordering::Relaxed) > 0);
     }
 
-    fn coord_batches(responses: &[Response]) -> usize {
-        responses.len() // placeholder: each response implies batched work
+    #[test]
+    fn worker_count_must_match_backend_replicas() {
+        let (embs, labels) = clustered(3, 2, 16);
+        let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
+        let mut backend =
+            crate::baselines::FloatBaseline::new(16, crate::baselines::Metric::L1).unwrap();
+        backend.program_support(&refs, &labels).unwrap();
+        let cfg = CoordinatorConfig { workers: 4, ..Default::default() };
+        let result = Server::start_with_backends(cfg, vec![backend], worker::identity_embed());
+        assert!(matches!(result, Err(EngineError::InvalidConfig(_))));
+    }
+
+    #[test]
+    fn float_backend_replicas_serve_through_the_same_path() {
+        let (embs, labels) = clustered(5, 2, 16);
+        let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
+        let mut backends = Vec::new();
+        for _ in 0..2 {
+            let mut b =
+                crate::baselines::FloatBaseline::new(16, crate::baselines::Metric::L2).unwrap();
+            b.program_support(&refs, &labels).unwrap();
+            backends.push(b);
+        }
+        let server = Server::start_with_backends(
+            CoordinatorConfig::default(),
+            backends,
+            worker::identity_embed(),
+        )
+        .unwrap();
+        for emb in &embs {
+            server.submit(Payload::Embedding(emb.clone()));
+        }
+        let mut responses = server.shutdown();
+        responses.sort_by_key(|r| r.id);
+        assert_eq!(responses.len(), embs.len());
+        for (i, r) in responses.iter().enumerate() {
+            assert_eq!(r.label(), Some(labels[i]), "exact float search must be exact");
+            assert_eq!(r.iterations(), 0, "software backend consumes no device iterations");
+        }
     }
 }

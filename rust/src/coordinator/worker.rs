@@ -1,13 +1,19 @@
-//! Worker pool: each worker owns a replicated MCAM [`SearchEngine`] and an
+//! Worker pool: each worker owns a replicated
+//! [`VectorSearchBackend`] (MCAM engine or software baseline) and an
 //! embedding function (PJRT controller in production, identity for
 //! pre-embedded requests/tests), consumes request batches, and appends
 //! responses. A batch is answered with a single
-//! [`SearchEngine::search_batch`] call, so the batcher's grouping directly
-//! amortizes query encoding and shard fan-out on the device path.
+//! [`VectorSearchBackend::search_batch`] call, so the batcher's grouping
+//! directly amortizes query encoding and shard fan-out on the device
+//! path; if the batch is rejected (one malformed request fails batch
+//! validation atomically), the worker degrades to per-request serving so
+//! every well-formed request is still answered and every malformed one
+//! gets its own typed error — the request path never panics and never
+//! drops a request.
 
 use super::queue::BoundedQueue;
 use super::{Payload, Request, Response, ServerStats};
-use crate::search::engine::SearchEngine;
+use crate::search::api::{EngineError, SearchRequest, VectorSearchBackend};
 use std::sync::atomic::Ordering;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -29,15 +35,18 @@ pub struct WorkerPool {
 }
 
 impl WorkerPool {
-    pub fn start(
-        engines: Vec<SearchEngine>,
+    pub fn start<B>(
+        backends: Vec<B>,
         embed: EmbedFn,
         responses: Arc<Mutex<Vec<Response>>>,
         stats: Arc<ServerStats>,
-    ) -> WorkerPool {
+    ) -> WorkerPool
+    where
+        B: VectorSearchBackend + Send + 'static,
+    {
         let mut senders = Vec::new();
         let mut handles = Vec::new();
-        for (w, mut engine) in engines.into_iter().enumerate() {
+        for (w, mut backend) in backends.into_iter().enumerate() {
             let queue: Arc<BoundedQueue<Vec<Request>>> = Arc::new(BoundedQueue::new(64));
             senders.push(Arc::clone(&queue));
             let responses = Arc::clone(&responses);
@@ -48,8 +57,12 @@ impl WorkerPool {
                     .name(format!("mcamvss-worker-{w}"))
                     .spawn(move || {
                         while let Some(batch) = queue.pop() {
-                            let out = process_batch(&mut engine, &embed, batch);
-                            stats.completed.fetch_add(out.len() as u64, Ordering::Relaxed);
+                            let out = process_batch(&mut backend, &embed, batch);
+                            let ok = out.iter().filter(|r| r.is_ok()).count() as u64;
+                            stats.completed.fetch_add(ok, Ordering::Relaxed);
+                            stats
+                                .errored
+                                .fetch_add(out.len() as u64 - ok, Ordering::Relaxed);
                             responses.lock().unwrap().extend(out);
                         }
                     })
@@ -73,84 +86,114 @@ impl WorkerPool {
     }
 }
 
-fn process_batch(
-    engine: &mut SearchEngine,
+/// Answer one batch: every request of `batch` yields exactly one
+/// [`Response`], success or typed error.
+fn process_batch<B: VectorSearchBackend>(
+    backend: &mut B,
     embed: &EmbedFn,
     batch: Vec<Request>,
 ) -> Vec<Response> {
     // Split the batch: image payloads go through the controller together
     // (amortized PJRT dispatch), embeddings search directly.
-    let mut image_reqs: Vec<(usize, &Request)> = Vec::new();
+    let mut n_images = 0usize;
     let mut flat_images: Vec<f32> = Vec::new();
-    for (i, req) in batch.iter().enumerate() {
+    for req in &batch {
         if let Payload::Image(img) = &req.payload {
-            image_reqs.push((i, req));
+            n_images += 1;
             flat_images.extend_from_slice(img);
         }
     }
     let mut image_embeddings: Vec<Vec<f32>> = Vec::new();
-    if !image_reqs.is_empty() {
-        match embed(&flat_images, image_reqs.len()) {
-            Ok(flat) => {
-                let d = flat.len() / image_reqs.len();
-                image_embeddings =
-                    flat.chunks(d).map(|c| c.to_vec()).collect();
+    let mut embed_error: Option<EngineError> = None;
+    if n_images > 0 {
+        match embed(&flat_images, n_images) {
+            Ok(flat) if !flat.is_empty() && flat.len() % n_images == 0 => {
+                let d = flat.len() / n_images;
+                image_embeddings = flat.chunks(d).map(<[f32]>::to_vec).collect();
             }
-            Err(_) => {
-                // Controller failure: drop the image requests (the caller
-                // observes missing responses + stats mismatch).
-                image_reqs.clear();
+            Ok(flat) => {
+                embed_error = Some(EngineError::Backend(format!(
+                    "controller returned {} floats for {n_images} images",
+                    flat.len()
+                )));
+            }
+            Err(e) => {
+                embed_error = Some(EngineError::Backend(format!("controller embed failed: {e:#}")));
             }
         }
     }
 
-    // The whole batch drains into one `search_batch` call: query encoding
-    // and shard fan-out are amortized across every request of the batch
-    // instead of paid per search.
-    let mut pending: Vec<&Request> = Vec::with_capacity(batch.len());
-    let mut queries: Vec<&[f32]> = Vec::with_capacity(batch.len());
+    // Resolve every payload to a query slice (or an immediate error
+    // response for image requests whose controller call failed).
+    let mut out: Vec<Response> = Vec::with_capacity(batch.len());
+    let mut pending: Vec<(&Request, &[f32])> = Vec::with_capacity(batch.len());
     let mut img_cursor = 0usize;
     for req in &batch {
         match &req.payload {
-            Payload::Embedding(e) => {
-                pending.push(req);
-                queries.push(e);
-            }
-            Payload::Image(_) => {
-                if img_cursor >= image_embeddings.len() {
-                    continue; // dropped by controller failure
+            Payload::Embedding(e) => pending.push((req, e.as_slice())),
+            Payload::Image(_) => match (&embed_error, image_embeddings.get(img_cursor)) {
+                (Some(err), _) => out.push(Response {
+                    id: req.id,
+                    outcome: Err(err.clone()),
+                    wall_latency: req.submitted_at.elapsed(),
+                }),
+                (None, Some(emb)) => {
+                    pending.push((req, emb.as_slice()));
+                    img_cursor += 1;
                 }
-                pending.push(req);
-                queries.push(&image_embeddings[img_cursor]);
-                img_cursor += 1;
+                (None, None) => out.push(Response {
+                    id: req.id,
+                    outcome: Err(EngineError::Internal(
+                        "controller produced fewer embeddings than images".into(),
+                    )),
+                    wall_latency: req.submitted_at.elapsed(),
+                }),
+            },
+        }
+    }
+    if pending.is_empty() {
+        return out;
+    }
+
+    // Fast path: the whole batch drains into one `search_batch` call, so
+    // query encoding and shard fan-out are amortized across every request
+    // of the batch instead of paid per search. Batch validation is
+    // atomic, so one malformed request rejects the call — fall back to
+    // per-request serving to give each request its own Ok/Err.
+    let requests: Vec<SearchRequest<'_>> = pending
+        .iter()
+        .map(|&(req, query)| SearchRequest { query, options: req.options })
+        .collect();
+    match backend.search_batch(&requests) {
+        Ok(results) => {
+            for (&(req, _), result) in pending.iter().zip(results) {
+                out.push(Response {
+                    id: req.id,
+                    outcome: Ok(result),
+                    wall_latency: req.submitted_at.elapsed(),
+                });
+            }
+        }
+        Err(_) => {
+            for &(req, query) in &pending {
+                let outcome = backend.search(&SearchRequest { query, options: req.options });
+                out.push(Response {
+                    id: req.id,
+                    outcome,
+                    wall_latency: req.submitted_at.elapsed(),
+                });
             }
         }
     }
-    if queries.is_empty() {
-        return Vec::new();
-    }
-    let results = engine.search_batch(&queries);
-    pending
-        .iter()
-        .zip(results)
-        .map(|(req, result)| Response {
-            id: req.id,
-            label: result.label,
-            winner: result.winner,
-            wall_latency: req.submitted_at.elapsed(),
-            device_latency_us: result.iterations as f64
-                * crate::device::timing::SEARCH_ITERATION_US,
-            iterations: result.iterations,
-        })
-        .collect()
+    out
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::encoding::Encoding;
-    use crate::search::engine::EngineConfig;
-    use crate::search::SearchMode;
+    use crate::search::engine::{EngineConfig, SearchEngine};
+    use crate::search::{SearchMode, SearchOptions};
     use std::time::Instant;
 
     fn engine_with_support() -> (SearchEngine, Vec<Vec<f32>>) {
@@ -160,9 +203,13 @@ mod tests {
         let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
         let labels: Vec<u32> = (0..4).collect();
         let cfg = EngineConfig::new(Encoding::Mtmc, 8, SearchMode::Avss, 3.0).ideal();
-        let mut engine = SearchEngine::new(cfg, 48, 4);
-        engine.program_support(&refs, &labels);
+        let mut engine = SearchEngine::new(cfg, 48, 4).unwrap();
+        engine.program_support(&refs, &labels).unwrap();
         (engine, embs)
+    }
+
+    fn req(id: u64, payload: Payload) -> Request {
+        Request { id, payload, options: SearchOptions::default(), submitted_at: Instant::now() }
     }
 
     #[test]
@@ -171,16 +218,12 @@ mod tests {
         let batch: Vec<Request> = embs
             .iter()
             .enumerate()
-            .map(|(i, e)| Request {
-                id: i as u64,
-                payload: Payload::Embedding(e.clone()),
-                submitted_at: Instant::now(),
-            })
+            .map(|(i, e)| req(i as u64, Payload::Embedding(e.clone())))
             .collect();
         let out = process_batch(&mut engine, &identity_embed(), batch);
         assert_eq!(out.len(), 4);
         for (i, r) in out.iter().enumerate() {
-            assert_eq!(r.label, i as u32);
+            assert_eq!(r.label(), Some(i as u32));
         }
     }
 
@@ -199,36 +242,48 @@ mod tests {
             Ok(out)
         });
         let batch: Vec<Request> = (0..4)
-            .map(|i| Request {
-                id: i as u64,
-                payload: Payload::Image(vec![i as f32; 4]),
-                submitted_at: Instant::now(),
-            })
+            .map(|i| req(i as u64, Payload::Image(vec![i as f32; 4])))
             .collect();
         let out = process_batch(&mut engine, &embed, batch);
         assert_eq!(out.len(), 4);
         for (i, r) in out.iter().enumerate() {
-            assert_eq!(r.label, i as u32, "request {i}");
+            assert_eq!(r.label(), Some(i as u32), "request {i}");
         }
     }
 
     #[test]
-    fn controller_failure_drops_only_images() {
+    fn controller_failure_errors_only_images() {
         let (mut engine, embs) = engine_with_support();
         let batch = vec![
-            Request {
-                id: 0,
-                payload: Payload::Image(vec![0.0; 4]),
-                submitted_at: Instant::now(),
-            },
-            Request {
-                id: 1,
-                payload: Payload::Embedding(embs[1].clone()),
-                submitted_at: Instant::now(),
-            },
+            req(0, Payload::Image(vec![0.0; 4])),
+            req(1, Payload::Embedding(embs[1].clone())),
         ];
         let out = process_batch(&mut engine, &identity_embed(), batch);
-        assert_eq!(out.len(), 1);
-        assert_eq!(out[0].id, 1);
+        assert_eq!(out.len(), 2, "image requests are answered, not dropped");
+        let image_resp = out.iter().find(|r| r.id == 0).unwrap();
+        assert!(matches!(
+            image_resp.outcome,
+            Err(EngineError::Backend(_))
+        ));
+        let emb_resp = out.iter().find(|r| r.id == 1).unwrap();
+        assert_eq!(emb_resp.label(), Some(1));
+    }
+
+    #[test]
+    fn poisoned_batch_degrades_to_per_request() {
+        let (mut engine, embs) = engine_with_support();
+        let batch = vec![
+            req(0, Payload::Embedding(embs[0].clone())),
+            req(1, Payload::Embedding(vec![0.25; 5])),
+            req(2, Payload::Embedding(embs[2].clone())),
+        ];
+        let out = process_batch(&mut engine, &identity_embed(), batch);
+        assert_eq!(out.len(), 3);
+        assert_eq!(out.iter().find(|r| r.id == 0).unwrap().label(), Some(0));
+        assert_eq!(
+            out.iter().find(|r| r.id == 1).unwrap().outcome.as_ref().unwrap_err(),
+            &EngineError::DimMismatch { expected: 48, got: 5 }
+        );
+        assert_eq!(out.iter().find(|r| r.id == 2).unwrap().label(), Some(2));
     }
 }

@@ -38,12 +38,12 @@ pub fn ladder_depth(
         let mut cfg = EngineConfig::new(Encoding::Mtmc, 8, SearchMode::Avss, clip)
             .with_seed(settings.seed);
         cfg.ladder_len = depth;
-        let mut engine = SearchEngine::new(cfg, ds.dims, settings.n_way * settings.k_shot);
+        let mut engine = SearchEngine::new(cfg, ds.dims, settings.n_way * settings.k_shot)?;
         let mut rng = Rng::new(settings.seed);
         let mut acc = AccuracyMeter::default();
         for _ in 0..settings.episodes {
             let ep = sample_episode(&ds, &mut rng, settings.n_way, settings.k_shot, settings.n_query);
-            let (c, t) = evaluate_episode(&mut engine, &ds, &ep);
+            let (c, t) = evaluate_episode(&mut engine, &ds, &ep)?;
             acc.push_episode(c, t);
         }
         rows.push(AblationRow {
@@ -110,13 +110,13 @@ pub fn fault_injection(
     ] {
         let cfg = EngineConfig::new(Encoding::Mtmc, 8, SearchMode::Avss, clip)
             .with_seed(settings.seed);
-        let mut engine = SearchEngine::new(cfg, ds.dims, settings.n_way * settings.k_shot);
+        let mut engine = SearchEngine::new(cfg, ds.dims, settings.n_way * settings.k_shot)?;
         engine.set_faults(faults);
         let mut rng = Rng::new(settings.seed);
         let mut acc = AccuracyMeter::default();
         for _ in 0..settings.episodes {
             let ep = sample_episode(&ds, &mut rng, settings.n_way, settings.k_shot, settings.n_query);
-            let (c, t) = evaluate_episode(&mut engine, &ds, &ep);
+            let (c, t) = evaluate_episode(&mut engine, &ds, &ep)?;
             acc.push_episode(c, t);
         }
         rows.push(AblationRow {

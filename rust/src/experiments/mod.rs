@@ -89,12 +89,12 @@ pub fn run_mcam_eval(
         .with_variation(variation)
         .with_seed(settings.seed);
     let mut engine =
-        SearchEngine::new(cfg, ds.dims, settings.n_way * settings.k_shot);
+        SearchEngine::new(cfg, ds.dims, settings.n_way * settings.k_shot)?;
     let mut rng = Rng::new(settings.seed);
     let mut accuracy = AccuracyMeter::default();
     for _ in 0..settings.episodes {
         let ep = sample_episode(&ds, &mut rng, settings.n_way, settings.k_shot, settings.n_query);
-        let (correct, total) = evaluate_episode(&mut engine, &ds, &ep);
+        let (correct, total) = evaluate_episode(&mut engine, &ds, &ep)?;
         accuracy.push_episode(correct, total);
     }
     let iterations = engine.iterations_per_search();

@@ -1,10 +1,12 @@
 //! Few-shot-learning harness: embedding datasets exported by the AOT
 //! pipeline, N-way K-shot episode sampling, and episode evaluation
-//! against a [`crate::search::engine::SearchEngine`].
+//! against any [`VectorSearchBackend`] (the MCAM
+//! [`crate::search::engine::SearchEngine`], the float
+//! [`crate::baselines::FloatBaseline`], ...).
 
 pub mod store;
 
-use crate::search::engine::SearchEngine;
+use crate::search::api::{EngineError, SearchRequest, SupportSet, VectorSearchBackend};
 use crate::testutil::Rng;
 use std::collections::BTreeMap;
 
@@ -107,30 +109,32 @@ pub fn sample_episode(
     Episode { n_way, k_shot, support, queries }
 }
 
-/// Program an episode's support set and classify its queries.
-/// Returns `(correct, total)`.
-pub fn evaluate_episode(
-    engine: &mut SearchEngine,
+/// Program an episode's support set into any backend and classify its
+/// queries. Returns `(correct, total)`.
+pub fn evaluate_episode<B: VectorSearchBackend>(
+    backend: &mut B,
     ds: &EmbeddingDataset,
     episode: &Episode,
-) -> (usize, usize) {
+) -> Result<(usize, usize), EngineError> {
     let embs: Vec<&[f32]> = episode.support.iter().map(|&(row, _)| ds.embedding(row)).collect();
     let labels: Vec<u32> = episode.support.iter().map(|&(_, l)| l).collect();
-    engine.program_support(&embs, &labels);
+    let support = SupportSet::from_refs(ds.dims, &embs, &labels)?;
+    backend.program(&support)?;
     let mut correct = 0;
     for &(row, truth) in &episode.queries {
-        if engine.search(ds.embedding(row)).label == truth {
+        let response = backend.search(&SearchRequest::new(ds.embedding(row)))?;
+        if response.top().map(|h| h.label) == Some(truth) {
             correct += 1;
         }
     }
-    (correct, episode.queries.len())
+    Ok((correct, episode.queries.len()))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::encoding::Encoding;
-    use crate::search::engine::EngineConfig;
+    use crate::search::engine::{EngineConfig, SearchEngine};
     use crate::search::SearchMode;
 
     fn toy_dataset(n_classes: usize, per_class: usize, dims: usize) -> EmbeddingDataset {
@@ -196,9 +200,22 @@ mod tests {
         let mut rng = Rng::new(3);
         let ep = sample_episode(&ds, &mut rng, 10, 3, 4);
         let cfg = EngineConfig::new(Encoding::Mtmc, 8, SearchMode::Avss, 3.0).ideal();
-        let mut engine = SearchEngine::new(cfg, 48, ep.support.len());
-        let (correct, total) = evaluate_episode(&mut engine, &ds, &ep);
+        let mut engine = SearchEngine::new(cfg, 48, ep.support.len()).unwrap();
+        let (correct, total) = evaluate_episode(&mut engine, &ds, &ep).unwrap();
         assert_eq!(total, 40);
+        assert!(correct as f64 / total as f64 > 0.9, "{correct}/{total}");
+    }
+
+    #[test]
+    fn evaluate_episode_is_backend_generic() {
+        // The same episode harness drives the exact-float backend.
+        let ds = toy_dataset(6, 6, 16);
+        let mut rng = Rng::new(5);
+        let ep = sample_episode(&ds, &mut rng, 5, 2, 3);
+        let mut backend =
+            crate::baselines::FloatBaseline::new(16, crate::baselines::Metric::L1).unwrap();
+        let (correct, total) = evaluate_episode(&mut backend, &ds, &ep).unwrap();
+        assert_eq!(total, 15);
         assert!(correct as f64 / total as f64 > 0.9, "{correct}/{total}");
     }
 

@@ -8,18 +8,36 @@
 //!   substrate: a cycle-level NAND-flash MCAM device simulator with a
 //!   fused, tiled cell-major sense kernel ([`device`]), the four
 //!   code-word encodings ([`encoding`]), the SVSS/AVSS search engines
-//!   ([`search`]), a request router / batcher /
-//!   worker pool ([`coordinator`]), energy + timing accounting
-//!   ([`energy`], [`device::timing`]) and the experiment harnesses that
-//!   regenerate every table and figure of the paper ([`experiments`]).
+//!   behind the typed request/response API ([`search`], [`search::api`] —
+//!   ranked top-k hits, the [`search::VectorSearchBackend`] trait, online
+//!   support append/remove, panic-free [`search::EngineError`]s), a
+//!   request router / batcher / backend-generic worker pool
+//!   ([`coordinator`]), software baselines behind the same seam
+//!   ([`baselines`]), energy + timing accounting ([`energy`],
+//!   [`device::timing`]) and the experiment harnesses that regenerate
+//!   every table and figure of the paper ([`experiments`]).
 //! * **L2/L1 (python, build time only)** — JAX controllers trained with
 //!   Hardware-Aware Training and the Pallas MCAM kernel, AOT-lowered to
 //!   HLO text under `artifacts/` and executed from rust through the PJRT
 //!   C API ([`runtime`]). Python never runs on the request path.
 //!
 //! See `DESIGN.md` (repository root) for the system inventory, the
-//! paper→module map, the shard/batch search layer, and the perf log;
-//! `cargo bench` regenerates the measured-vs-paper tables.
+//! paper→module map, the shard/batch search layer, the serving API
+//! (§API), and the perf log; `cargo bench` regenerates the
+//! measured-vs-paper tables.
+
+// Style allowances for the `cargo clippy --all-targets -- -D warnings`
+// CI gate: kernel/physics code indexes plane ranges explicitly and the
+// experiment harnesses take paper-shaped argument lists; rewriting them
+// to satisfy these style lints would obscure the reference structure.
+#![allow(
+    clippy::too_many_arguments,
+    clippy::needless_range_loop,
+    clippy::new_without_default,
+    clippy::len_without_is_empty,
+    clippy::result_large_err,
+    clippy::manual_range_contains
+)]
 
 pub mod baselines;
 pub mod cli;

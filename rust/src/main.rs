@@ -5,13 +5,15 @@
 //! mcamvss eval   --dataset omniglot --variant hat_avss --encoding mtmc
 //!                --cl 32 --mode avss --episodes 3 [--ideal]
 //! mcamvss serve  --dataset omniglot --requests 200 --workers 4
+//!                [--top-k 5] [--backend mcam|float] [--metric l1|l2|cosine]
 //! mcamvss experiment --filter table2
 //! ```
 
 use anyhow::{bail, Context, Result};
+use mcamvss::baselines::{FloatBaseline, Metric};
 use mcamvss::cli::Args;
 use mcamvss::config::Config;
-use mcamvss::coordinator::{Coordinator, CoordinatorConfig, Payload};
+use mcamvss::coordinator::{CoordinatorConfig, Payload, Response, Server};
 use mcamvss::device::variation::VariationModel;
 use mcamvss::encoding::Encoding;
 use mcamvss::experiments::{self, EpisodeSettings};
@@ -19,7 +21,7 @@ use mcamvss::fsl::sample_episode;
 use mcamvss::fsl::store::ArtifactStore;
 use mcamvss::metrics::LatencyHistogram;
 use mcamvss::search::engine::EngineConfig;
-use mcamvss::search::SearchMode;
+use mcamvss::search::{SearchMode, SearchOptions};
 use mcamvss::testutil::Rng;
 use std::time::Instant;
 
@@ -159,6 +161,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
     let store = open_store(args)?;
     let n_requests = args.opt_usize("requests")?.unwrap_or(200);
+    let top_k = args.opt_usize("top-k")?.unwrap_or(1);
+    if top_k == 0 {
+        bail!("--top-k must be >= 1");
+    }
+    let backend_kind = args.opt("backend").unwrap_or("mcam");
 
     // Episode: program the support set once, then stream query requests.
     let ds = store.embeddings(&cfg.dataset, &cfg.variant, "test")?;
@@ -169,10 +176,6 @@ fn cmd_serve(args: &Args) -> Result<()> {
         episode.support.iter().map(|&(row, _)| ds.embedding(row)).collect();
     let labels: Vec<u32> = episode.support.iter().map(|&(_, l)| l).collect();
 
-    let engine_cfg = EngineConfig::new(cfg.encoding, cfg.cl, cfg.mode, clip)
-        .with_variation(cfg.variation)
-        .with_seed(cfg.seed)
-        .with_shards(cfg.shards);
     let coord_cfg = CoordinatorConfig {
         workers: cfg.workers,
         queue_capacity: cfg.queue_capacity,
@@ -182,7 +185,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         },
     };
     println!(
-        "serve {}: {} workers x {} shard(s), {} requests, {}-way {}-shot support ({} vectors)",
+        "serve {} [{backend_kind}]: {} workers x {} shard(s), {} requests (top-{top_k}), \
+         {}-way {}-shot support ({} vectors)",
         cfg.dataset,
         cfg.workers,
         cfg.shards,
@@ -191,43 +195,93 @@ fn cmd_serve(args: &Args) -> Result<()> {
         cfg.k_shot,
         support.len()
     );
-    let coord = Coordinator::start(
-        coord_cfg,
-        engine_cfg,
-        ds.dims,
-        &support,
-        &labels,
-        mcamvss::coordinator::worker::identity_embed(),
-    )?;
+    // Both substrates run through the same generic Server path — the
+    // VectorSearchBackend seam in action.
+    let server = match backend_kind {
+        "mcam" => {
+            let engine_cfg = EngineConfig::new(cfg.encoding, cfg.cl, cfg.mode, clip)
+                .with_variation(cfg.variation)
+                .with_seed(cfg.seed)
+                .with_shards(cfg.shards);
+            Server::start(
+                coord_cfg,
+                engine_cfg,
+                ds.dims,
+                &support,
+                &labels,
+                mcamvss::coordinator::worker::identity_embed(),
+            )?
+        }
+        "float" => {
+            let metric = match args.opt("metric") {
+                Some(name) => Metric::from_name(name)
+                    .with_context(|| format!("bad --metric {name:?} (l1 | l2 | cosine)"))?,
+                None => Metric::L1,
+            };
+            let mut backends = Vec::with_capacity(cfg.workers);
+            for _ in 0..cfg.workers {
+                let mut backend = FloatBaseline::new(ds.dims, metric)?;
+                backend.program_support(&support, &labels)?;
+                backends.push(backend);
+            }
+            Server::start_with_backends(
+                coord_cfg,
+                backends,
+                mcamvss::coordinator::worker::identity_embed(),
+            )?
+        }
+        other => bail!("unknown --backend {other:?} (mcam | float)"),
+    };
 
     // Query stream: cycle through the episode's queries.
+    let options = SearchOptions { top_k, ..Default::default() };
     let mut truth = Vec::with_capacity(n_requests);
     let t0 = Instant::now();
     for i in 0..n_requests {
         let &(row, label) = &episode.queries[i % episode.queries.len()];
         truth.push(label);
-        coord.submit(Payload::Embedding(ds.embedding(row).to_vec()));
+        server.submit_with(Payload::Embedding(ds.embedding(row).to_vec()), options);
     }
-    let responses = coord.shutdown();
+    let responses = server.shutdown();
     let wall = t0.elapsed();
+    report_serve(&responses, &truth, wall, top_k);
+    Ok(())
+}
 
+/// Render the serve summary: throughput, top-1 accuracy, error count,
+/// and wall-latency quantiles.
+fn report_serve(responses: &[Response], truth: &[u32], wall: std::time::Duration, top_k: usize) {
     let mut latency = LatencyHistogram::default();
     let mut correct = 0usize;
-    let mut sorted = responses;
+    let mut errored = 0usize;
+    let mut sorted: Vec<&Response> = responses.iter().collect();
     sorted.sort_by_key(|r| r.id);
     for r in &sorted {
         latency.record(r.wall_latency);
-        if r.label == truth[r.id as usize] {
+        if !r.is_ok() {
+            errored += 1;
+        } else if r.label() == Some(truth[r.id as usize]) {
             correct += 1;
         }
     }
     println!(
-        "served {} requests in {:.2}s  ({:.0} req/s wall)  accuracy {:.2}%",
+        "served {} requests in {:.2}s  ({:.0} req/s wall)  top-1 accuracy {:.2}%  errors {}",
         sorted.len(),
         wall.as_secs_f64(),
         sorted.len() as f64 / wall.as_secs_f64(),
         100.0 * correct as f64 / sorted.len().max(1) as f64,
+        errored,
     );
+    if top_k > 1 {
+        if let Some(r) = sorted.iter().find(|r| r.is_ok()) {
+            println!(
+                "per-response ranking: {} hits (best label {:?}, score {:.1})",
+                r.hits().len(),
+                r.label(),
+                r.top().map(|h| h.score).unwrap_or(0.0)
+            );
+        }
+    }
     println!(
         "latency µs: mean {:.0}  p50 {:.0}  p99 {:.0}  max {:.0}",
         latency.mean_us(),
@@ -235,7 +289,6 @@ fn cmd_serve(args: &Args) -> Result<()> {
         latency.quantile_us(0.99),
         latency.max_us()
     );
-    Ok(())
 }
 
 fn cmd_experiment(args: &Args) -> Result<()> {

@@ -1,0 +1,543 @@
+//! The typed serving API: request/response types, the backend trait every
+//! search substrate implements, dynamic support-set construction, and the
+//! panic-free error taxonomy of the request path.
+//!
+//! This is the seam the rest of the system plugs into (DESIGN.md §API):
+//!
+//! * [`SearchRequest`] / [`SearchResponse`] — a query embedding with
+//!   per-request `top_k`, optional [`SearchMode`] override and an opt-in
+//!   dense-score dump, answered with ranked [`Hit`]s plus device
+//!   iteration/latency accounting;
+//! * [`VectorSearchBackend`] — the trait implemented by the MCAM
+//!   [`crate::search::engine::SearchEngine`] and the float
+//!   [`crate::baselines::FloatBaseline`], so the serving coordinator
+//!   ([`crate::coordinator::Server`]) is generic over the substrate;
+//! * [`SupportSet`] / [`SupportSetBuilder`] — support programming split
+//!   from engine configuration, with incremental staging for the
+//!   many-class online-accrual workloads the paper targets;
+//! * [`EngineError`] — every malformed input on the request path comes
+//!   back as a typed `Err`, never a panic.
+
+use crate::search::SearchMode;
+use std::fmt;
+
+/// Everything that can go wrong on the serving/request path. Variants are
+/// data-carrying so callers can react programmatically (and error strings
+/// stay greppable).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum EngineError {
+    /// A query or support embedding has the wrong dimensionality.
+    DimMismatch { expected: usize, got: usize },
+    /// A search was issued against a backend with no live support vectors
+    /// (never programmed, or everything tombstoned).
+    EmptySupport,
+    /// Programming/appending would exceed the backend's slot capacity.
+    CapacityExceeded { capacity: usize, requested: usize },
+    /// `top_k == 0` makes no sense: every search needs at least one hit.
+    InvalidTopK,
+    /// Support embeddings and labels differ in count.
+    LabelCountMismatch { vectors: usize, labels: usize },
+    /// A support index is past the end of the slot table.
+    IndexOutOfRange { index: usize, len: usize },
+    /// The addressed support slot was already tombstoned.
+    AlreadyRemoved { index: usize },
+    /// A construction-time parameter is unusable (zero shards, zero
+    /// dimensions, non-finite clip, ...).
+    InvalidConfig(String),
+    /// A search-mode name didn't parse (CLI flags, manifest keys).
+    UnknownMode(String),
+    /// An upstream component (e.g. the PJRT embedding controller) failed
+    /// while serving the request.
+    Backend(String),
+    /// A broken internal invariant surfaced as an error instead of a
+    /// panic (should never be observed).
+    Internal(String),
+}
+
+impl fmt::Display for EngineError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            EngineError::DimMismatch { expected, got } => {
+                write!(f, "embedding dimension mismatch: expected {expected}, got {got}")
+            }
+            EngineError::EmptySupport => {
+                write!(f, "no live support vectors programmed")
+            }
+            EngineError::CapacityExceeded { capacity, requested } => {
+                write!(f, "support capacity exceeded: {requested} vectors > {capacity} slots")
+            }
+            EngineError::InvalidTopK => write!(f, "top_k must be >= 1"),
+            EngineError::LabelCountMismatch { vectors, labels } => {
+                write!(f, "support has {vectors} vectors but {labels} labels")
+            }
+            EngineError::IndexOutOfRange { index, len } => {
+                write!(f, "support index {index} out of range (len {len})")
+            }
+            EngineError::AlreadyRemoved { index } => {
+                write!(f, "support index {index} was already removed")
+            }
+            EngineError::InvalidConfig(msg) => write!(f, "invalid configuration: {msg}"),
+            EngineError::UnknownMode(name) => {
+                write!(f, "unknown search mode {name:?} (svss | avss | symmetric | asymmetric)")
+            }
+            EngineError::Backend(msg) => write!(f, "backend failure: {msg}"),
+            EngineError::Internal(msg) => write!(f, "internal invariant violated: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for EngineError {}
+
+/// Per-request knobs, carried alongside the query from the serving edge
+/// down to the backend.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SearchOptions {
+    /// Number of ranked hits to return (bounded-heap selection on the hot
+    /// path; capped by the live support count).
+    pub top_k: usize,
+    /// Per-request override of the backend's configured [`SearchMode`]
+    /// (e.g. an SVSS sanity probe against an AVSS-configured engine).
+    pub mode: Option<SearchMode>,
+    /// Opt-in dense per-slot score dump (experiment harnesses and the
+    /// top-k oracle tests; O(N) per response, so off by default).
+    pub full_scores: bool,
+}
+
+impl Default for SearchOptions {
+    fn default() -> Self {
+        SearchOptions { top_k: 1, mode: None, full_scores: false }
+    }
+}
+
+/// One query of a search batch: a borrowed embedding plus its options.
+#[derive(Debug, Clone, Copy)]
+pub struct SearchRequest<'a> {
+    pub query: &'a [f32],
+    pub options: SearchOptions,
+}
+
+impl<'a> SearchRequest<'a> {
+    /// Top-1 request with default options.
+    pub fn new(query: &'a [f32]) -> SearchRequest<'a> {
+        SearchRequest { query, options: SearchOptions::default() }
+    }
+
+    pub fn with_top_k(mut self, top_k: usize) -> SearchRequest<'a> {
+        self.options.top_k = top_k;
+        self
+    }
+
+    pub fn with_mode(mut self, mode: SearchMode) -> SearchRequest<'a> {
+        self.options.mode = Some(mode);
+        self
+    }
+
+    pub fn with_full_scores(mut self) -> SearchRequest<'a> {
+        self.options.full_scores = true;
+        self
+    }
+}
+
+/// One ranked result: a support slot, its label, and its score
+/// (**higher is better** — accumulated ladder votes for the MCAM engine,
+/// negated distance for the float baseline).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Hit {
+    /// Support slot index (current numbering; compaction after tombstone
+    /// removals renumbers slots — see [`VectorSearchBackend::remove`]).
+    pub index: usize,
+    /// Label of the support vector (the MANN prediction for rank 0).
+    pub label: u32,
+    pub score: f64,
+}
+
+/// Response to one [`SearchRequest`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct SearchResponse {
+    /// Ranked hits, best first: descending score, ties broken by lowest
+    /// slot index (`f64::total_cmp` — NaN-safe). Length is
+    /// `min(top_k, live support)`.
+    pub hits: Vec<Hit>,
+    /// Device iterations consumed by this search (per block; shards and
+    /// replicas search in parallel). Zero for software backends.
+    pub iterations: u64,
+    /// Simulated device latency of this search, in microseconds.
+    pub device_latency_us: f64,
+    /// Dense per-slot scores, present iff the request opted in. Includes
+    /// tombstoned slots (their strings are still physically sensed until
+    /// the next rebalance) — rank only via `hits`.
+    pub full_scores: Option<Vec<f64>>,
+}
+
+impl SearchResponse {
+    /// The best hit, if any.
+    pub fn top(&self) -> Option<&Hit> {
+        self.hits.first()
+    }
+}
+
+/// Aggregate backend statistics, uniform across substrates.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BackendStats {
+    /// Substrate name (`"mcam"`, `"float-l1"`, ...).
+    pub backend: String,
+    /// Live (non-tombstoned) support vectors.
+    pub vectors: usize,
+    /// Tombstoned slots awaiting rebalance.
+    pub tombstones: usize,
+    /// Parallel storage shards (1 for software backends).
+    pub shards: usize,
+    /// Device iterations per search in the configured mode (0 for
+    /// software backends).
+    pub iterations_per_search: u64,
+    /// Average search energy so far, in nanojoules (0 for software
+    /// backends).
+    pub nj_per_search: f64,
+}
+
+/// An owned, validated support set: `n × dims` embeddings with one label
+/// per vector. Built directly ([`SupportSet::from_refs`]) or accumulated
+/// through a [`SupportSetBuilder`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct SupportSet {
+    dims: usize,
+    /// Row-major `n × dims`.
+    embeddings: Vec<f32>,
+    labels: Vec<u32>,
+}
+
+impl SupportSet {
+    /// Validate and gather borrowed embeddings into an owned set.
+    pub fn from_refs(
+        dims: usize,
+        embeddings: &[&[f32]],
+        labels: &[u32],
+    ) -> Result<SupportSet, EngineError> {
+        if dims == 0 {
+            return Err(EngineError::InvalidConfig(
+                "support set needs at least one dimension".into(),
+            ));
+        }
+        if embeddings.len() != labels.len() {
+            return Err(EngineError::LabelCountMismatch {
+                vectors: embeddings.len(),
+                labels: labels.len(),
+            });
+        }
+        let mut flat = Vec::with_capacity(embeddings.len() * dims);
+        for emb in embeddings {
+            if emb.len() != dims {
+                return Err(EngineError::DimMismatch { expected: dims, got: emb.len() });
+            }
+            flat.extend_from_slice(emb);
+        }
+        Ok(SupportSet { dims, embeddings: flat, labels: labels.to_vec() })
+    }
+
+    pub fn dims(&self) -> usize {
+        self.dims
+    }
+
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    pub fn embedding(&self, index: usize) -> &[f32] {
+        &self.embeddings[index * self.dims..(index + 1) * self.dims]
+    }
+
+    pub fn label(&self, index: usize) -> u32 {
+        self.labels[index]
+    }
+
+    pub fn labels(&self) -> &[u32] {
+        &self.labels
+    }
+}
+
+/// Incremental staging for a [`SupportSet`]: classes accrue online in
+/// many-class FSL, so support construction is decoupled from engine
+/// configuration. `append`/`remove` here edit the *staged* set; once
+/// programmed, use the backend's own [`VectorSearchBackend::append`] /
+/// [`VectorSearchBackend::remove`] (tombstone + rebalance) instead.
+#[derive(Debug, Clone)]
+pub struct SupportSetBuilder {
+    set: SupportSet,
+}
+
+impl SupportSetBuilder {
+    pub fn new(dims: usize) -> Result<SupportSetBuilder, EngineError> {
+        if dims == 0 {
+            return Err(EngineError::InvalidConfig(
+                "support set needs at least one dimension".into(),
+            ));
+        }
+        Ok(SupportSetBuilder {
+            set: SupportSet { dims, embeddings: Vec::new(), labels: Vec::new() },
+        })
+    }
+
+    /// Stage one support vector; returns its index in the staged set.
+    pub fn append(&mut self, embedding: &[f32], label: u32) -> Result<usize, EngineError> {
+        if embedding.len() != self.set.dims {
+            return Err(EngineError::DimMismatch {
+                expected: self.set.dims,
+                got: embedding.len(),
+            });
+        }
+        self.set.embeddings.extend_from_slice(embedding);
+        self.set.labels.push(label);
+        Ok(self.set.labels.len() - 1)
+    }
+
+    /// Stage a batch of support vectors.
+    pub fn extend(&mut self, embeddings: &[&[f32]], labels: &[u32]) -> Result<(), EngineError> {
+        if embeddings.len() != labels.len() {
+            return Err(EngineError::LabelCountMismatch {
+                vectors: embeddings.len(),
+                labels: labels.len(),
+            });
+        }
+        for (emb, &label) in embeddings.iter().zip(labels) {
+            self.append(emb, label)?;
+        }
+        Ok(())
+    }
+
+    /// Drop a staged vector (pre-program edit: later slots shift down).
+    pub fn remove(&mut self, index: usize) -> Result<(), EngineError> {
+        if index >= self.set.labels.len() {
+            return Err(EngineError::IndexOutOfRange { index, len: self.set.labels.len() });
+        }
+        let dims = self.set.dims;
+        self.set.embeddings.drain(index * dims..(index + 1) * dims);
+        self.set.labels.remove(index);
+        Ok(())
+    }
+
+    pub fn len(&self) -> usize {
+        self.set.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.set.is_empty()
+    }
+
+    /// A view of the staged set (no copy).
+    pub fn as_set(&self) -> &SupportSet {
+        &self.set
+    }
+
+    /// Finish staging.
+    pub fn build(self) -> SupportSet {
+        self.set
+    }
+
+    /// Program the staged set into any backend.
+    pub fn program_into<B: VectorSearchBackend>(
+        &self,
+        backend: &mut B,
+    ) -> Result<(), EngineError> {
+        backend.program(&self.set)
+    }
+}
+
+/// A programmable vector-similarity-search substrate behind the serving
+/// coordinator. Implemented by the MCAM
+/// [`crate::search::engine::SearchEngine`] and the exact float
+/// [`crate::baselines::FloatBaseline`]; future backends (replicated,
+/// cached, multi-device routed) plug in here.
+pub trait VectorSearchBackend {
+    /// Replace the programmed support set.
+    fn program(&mut self, support: &SupportSet) -> Result<(), EngineError>;
+
+    /// Append one support vector online; returns its slot index.
+    fn append(&mut self, embedding: &[f32], label: u32) -> Result<usize, EngineError>;
+
+    /// Tombstone one support vector. Backends may defer physical removal
+    /// and rebalance (compact + renumber slots) once enough slots are
+    /// dead — see the implementation's documentation.
+    fn remove(&mut self, index: usize) -> Result<(), EngineError>;
+
+    /// Answer a batch of requests, one response per request in order.
+    /// Validation is atomic: any malformed request fails the whole batch
+    /// with a typed error *before* any device state advances.
+    fn search_batch(
+        &mut self,
+        requests: &[SearchRequest<'_>],
+    ) -> Result<Vec<SearchResponse>, EngineError>;
+
+    /// Live (non-tombstoned) support vectors.
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Aggregate statistics for monitoring.
+    fn stats(&self) -> BackendStats;
+
+    /// Single-request convenience over [`Self::search_batch`].
+    fn search(&mut self, request: &SearchRequest<'_>) -> Result<SearchResponse, EngineError> {
+        let mut responses = self.search_batch(std::slice::from_ref(request))?;
+        match responses.pop() {
+            Some(response) if responses.is_empty() => Ok(response),
+            _ => Err(EngineError::Internal(
+                "search_batch must return exactly one response per request".into(),
+            )),
+        }
+    }
+}
+
+/// Heap entry ordering hits by quality: higher score wins, ties go to the
+/// **lowest** slot index, and comparisons use `f64::total_cmp` so a NaN
+/// score can never panic the request path (NaNs order below every real
+/// score for the purpose of winning: `-NaN` loses to `-inf`, `+NaN` would
+/// beat `+inf`, but backend scores are finite by construction).
+#[derive(Debug, Clone, Copy)]
+struct RankedHit(Hit);
+
+impl PartialEq for RankedHit {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+
+impl Eq for RankedHit {}
+
+impl PartialOrd for RankedHit {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for RankedHit {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0
+            .score
+            .total_cmp(&other.0.score)
+            .then_with(|| other.0.index.cmp(&self.0.index))
+    }
+}
+
+/// Bounded-heap top-k selection over a candidate stream: O(N log k) time,
+/// O(k) space — the replacement for materializing and sorting the dense
+/// score vector on the hot path. Returns hits best-first (descending
+/// score, ties by lowest index).
+pub fn rank_top_k(top_k: usize, candidates: impl Iterator<Item = Hit>) -> Vec<Hit> {
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+    if top_k == 0 {
+        return Vec::new();
+    }
+    // Min-heap of the k best seen so far: the root is the worst keeper.
+    // The preallocation is capped so a client-controlled `top_k` (backends
+    // clamp it to their live slot count, but this function is public)
+    // can never request an absurd upfront allocation — the heap grows
+    // organically past the cap, and its length is always bounded by the
+    // candidate count anyway.
+    const PREALLOC_CAP: usize = 4096;
+    let mut heap: BinaryHeap<Reverse<RankedHit>> =
+        BinaryHeap::with_capacity(top_k.saturating_add(1).min(PREALLOC_CAP));
+    for hit in candidates {
+        let entry = RankedHit(hit);
+        if heap.len() < top_k {
+            heap.push(Reverse(entry));
+        } else if let Some(Reverse(worst)) = heap.peek() {
+            if entry > *worst {
+                heap.pop();
+                heap.push(Reverse(entry));
+            }
+        }
+    }
+    // Ascending `Reverse<RankedHit>` is descending hit quality.
+    heap.into_sorted_vec().into_iter().map(|Reverse(RankedHit(hit))| hit).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hit(index: usize, score: f64) -> Hit {
+        Hit { index, label: index as u32, score }
+    }
+
+    #[test]
+    fn rank_top_k_orders_descending() {
+        let hits = rank_top_k(3, [hit(0, 1.0), hit(1, 5.0), hit(2, 3.0), hit(3, 4.0)].into_iter());
+        let idx: Vec<usize> = hits.iter().map(|h| h.index).collect();
+        assert_eq!(idx, vec![1, 3, 2]);
+    }
+
+    #[test]
+    fn rank_top_k_ties_break_by_lowest_index() {
+        let hits = rank_top_k(2, [hit(2, 7.0), hit(0, 7.0), hit(1, 7.0)].into_iter());
+        let idx: Vec<usize> = hits.iter().map(|h| h.index).collect();
+        assert_eq!(idx, vec![0, 1]);
+    }
+
+    #[test]
+    fn rank_top_k_truncates_and_handles_small_input() {
+        assert_eq!(rank_top_k(5, [hit(0, 1.0)].into_iter()).len(), 1);
+        assert_eq!(rank_top_k(0, [hit(0, 1.0)].into_iter()).len(), 0);
+        assert!(rank_top_k(3, std::iter::empty()).is_empty());
+    }
+
+    #[test]
+    fn rank_top_k_is_nan_safe() {
+        // A NaN score must neither panic nor outrank real scores.
+        let hits = rank_top_k(2, [hit(0, f64::NAN), hit(1, 2.0), hit(2, 1.0)].into_iter());
+        let idx: Vec<usize> = hits.iter().map(|h| h.index).collect();
+        assert_eq!(idx, vec![1, 2]);
+    }
+
+    #[test]
+    fn support_set_validates() {
+        let a = [1.0f32, 2.0];
+        let b = [3.0f32];
+        assert!(matches!(
+            SupportSet::from_refs(2, &[&a, &b], &[0, 1]),
+            Err(EngineError::DimMismatch { expected: 2, got: 1 })
+        ));
+        assert!(matches!(
+            SupportSet::from_refs(2, &[&a], &[0, 1]),
+            Err(EngineError::LabelCountMismatch { vectors: 1, labels: 2 })
+        ));
+        let set = SupportSet::from_refs(2, &[&a], &[7]).unwrap();
+        assert_eq!(set.len(), 1);
+        assert_eq!(set.embedding(0), &a);
+        assert_eq!(set.label(0), 7);
+    }
+
+    #[test]
+    fn builder_appends_and_removes() {
+        let mut builder = SupportSetBuilder::new(2).unwrap();
+        assert_eq!(builder.append(&[1.0, 2.0], 0).unwrap(), 0);
+        assert_eq!(builder.append(&[3.0, 4.0], 1).unwrap(), 1);
+        assert_eq!(builder.append(&[5.0, 6.0], 2).unwrap(), 2);
+        assert!(matches!(
+            builder.append(&[1.0], 3),
+            Err(EngineError::DimMismatch { .. })
+        ));
+        builder.remove(1).unwrap();
+        assert!(matches!(
+            builder.remove(5),
+            Err(EngineError::IndexOutOfRange { index: 5, len: 2 })
+        ));
+        let set = builder.build();
+        assert_eq!(set.len(), 2);
+        assert_eq!(set.embedding(1), &[5.0, 6.0]);
+        assert_eq!(set.labels(), &[0, 2]);
+    }
+
+    #[test]
+    fn errors_display() {
+        let msg = EngineError::DimMismatch { expected: 48, got: 24 }.to_string();
+        assert!(msg.contains("48") && msg.contains("24"));
+        assert!(EngineError::EmptySupport.to_string().contains("support"));
+    }
+}

@@ -1,13 +1,14 @@
 //! The VSS engine: programs a support set into block-sharded MCAM storage
-//! and answers queries — singly or in batches — through SVSS or AVSS
-//! iteration schedules with SA voting.
+//! and answers typed [`SearchRequest`] batches — through SVSS or AVSS
+//! iteration schedules with SA voting — as ranked top-k
+//! [`SearchResponse`]s.
 //!
-//! This is the L3 hot path. The support set is partitioned contiguously
-//! across [`EngineConfig::shards`] independent [`McamBlock`]s (plane-level
-//! replication on a real die searches blocks in parallel under the same
-//! word-line drive, so capacity scales without adding search iterations).
-//! Within each shard, support strings are laid out *column-major* (all
-//! vectors' string (g, c) adjacent — see `program_support`), so:
+//! This is the L3 hot path. Support vectors occupy fixed *slots*
+//! partitioned contiguously across [`EngineConfig::shards`] independent
+//! [`McamBlock`]s (plane-level replication on a real die searches blocks
+//! in parallel under the same word-line drive, so capacity scales without
+//! adding search iterations). Within each shard, support strings are laid
+//! out *column-major* (all vectors' string (g, c) adjacent), so:
 //!
 //! * SVSS iteration (g, c) senses the contiguous per-shard range
 //!   `[(g·W + c)·m, (g·W + c + 1)·m)` — one string per support vector;
@@ -19,31 +20,50 @@
 //! streams the block's cell planes and accumulates weighted ladder
 //! votes directly into the per-query score slice (DESIGN.md §Perf).
 //!
-//! [`SearchEngine::search_batch`] is the primary entry point: it encodes
-//! each query exactly once, precomputes every word-line drive, and fans
-//! the batch out across shards with scoped threads
-//! ([`crate::util::par::par_map_mut`]); [`SearchEngine::search`] is the
-//! single-query wrapper. Because each shard owns its RNG stream (seeded
-//! via [`crate::testutil::derive_seed`]) and processes queries in
-//! submission order, batched and scalar execution are bit-identical —
-//! `rust/tests/test_determinism.rs` locks this in.
+//! **Dynamic support** (classes accrue online in many-class FSL): the
+//! engine keeps every vector's encoded strings, so [`SearchEngine::append`]
+//! reprograms only the affected shard (a fresh block reseeded from the
+//! same derived stream — bit-identical to having programmed everything at
+//! once), and [`SearchEngine::remove`] tombstones a slot (its strings stay
+//! physically sensed but never ranked) until the dead fraction crosses
+//! [`REBALANCE_DEAD_FRACTION`], when the engine compacts and renumbers.
 //!
-//! Votes accumulate per support vector with the Eq.-2 column weights; the
-//! predicted label is the winner's (winner-take-all voting, as in [14]).
+//! **Top-k** selection runs through the bounded heap of
+//! [`crate::search::api::rank_top_k`] — O(k) memory per response instead
+//! of the dense O(N) score vector (opt-in via
+//! [`crate::search::SearchOptions::full_scores`] for the experiment
+//! harnesses and oracle tests).
+//!
+//! Every malformed input on the request path returns a typed
+//! [`EngineError`]; batch validation is atomic (no device state advances
+//! on a rejected batch), so batched, scalar and sharded execution stay
+//! bit-identical — `rust/tests/test_determinism.rs` locks this in.
 
 use crate::device::block::McamBlock;
+use crate::device::faults::FaultModel;
 use crate::device::sense::SenseLadder;
-use crate::device::timing::SearchTiming;
+use crate::device::timing::{SearchTiming, SEARCH_ITERATION_US};
 use crate::device::variation::VariationModel;
 use crate::device::McamParams;
 use crate::encoding::Encoding;
 use crate::energy::{EnergyAccount, EnergyModel};
 use crate::mapping::VectorLayout;
-use crate::quant::QuantSpec;
+use crate::quant::{QuantScheme, QuantSpec};
+use crate::search::api::{
+    rank_top_k, BackendStats, EngineError, Hit, SearchRequest, SearchResponse, SupportSet,
+    VectorSearchBackend,
+};
 use crate::search::SearchMode;
 use crate::testutil::derive_seed;
 use crate::util::par::par_map_mut;
 use crate::CELLS_PER_STRING;
+
+/// Tombstoned fraction of the slot table that triggers a compaction:
+/// dead slots are dropped, survivors renumbered, and every shard
+/// reprogrammed from its seed-derived stream. Until then tombstoned
+/// strings keep drawing sense energy (they are physically programmed),
+/// exactly like dead rows on a real die awaiting garbage collection.
+pub const REBALANCE_DEAD_FRACTION: f64 = 0.25;
 
 /// Engine configuration (one per experiment point).
 #[derive(Debug, Clone, Copy)]
@@ -93,50 +113,44 @@ impl EngineConfig {
         self
     }
 
+    /// Shard count; validated by [`SearchEngine::new`] (zero shards is a
+    /// typed [`EngineError::InvalidConfig`], not a panic).
     pub fn with_shards(mut self, shards: usize) -> EngineConfig {
-        assert!(shards >= 1, "engine needs at least one shard");
         self.shards = shards;
         self
     }
 }
 
-/// Result of one search.
-#[derive(Debug, Clone)]
-pub struct SearchResult {
-    /// Index of the winning support vector.
-    pub winner: usize,
-    /// Label of the winner (the MANN prediction).
-    pub label: u32,
-    /// Accumulated votes per support vector.
-    pub scores: Vec<f64>,
-    /// MCAM iterations consumed by this search (per block; shards search
-    /// in parallel).
-    pub iterations: u64,
+/// One support slot: the vector's encoded NAND strings (kept so shards
+/// can be reprogrammed on append/rebalance), its label, and liveness.
+struct SupportEntry {
+    strings: Vec<[u8; CELLS_PER_STRING]>,
+    label: u32,
+    alive: bool,
 }
 
-/// One MCAM block holding a contiguous slice of the support set.
+/// One MCAM block holding a contiguous slice of the slot table.
 struct Shard {
     block: McamBlock,
-    /// Global index of this shard's first support vector.
+    /// Global slot index of this shard's first support vector.
     base: usize,
-    /// Support vectors programmed into this shard.
+    /// Slots programmed into this shard (live + tombstoned).
     n: usize,
 }
 
 impl Shard {
-    /// Score every query of the batch against this shard's support
-    /// vectors. `wordlines[q]` is iteration-major: `g·W + c` for SVSS,
-    /// `g` for AVSS. Returns `wordlines.len() × n` partial scores
-    /// (query-major). Each iteration hands its contiguous string range
-    /// straight to the fused sense→vote→accumulate kernel
-    /// ([`McamBlock::sense_votes_range`]) — no intermediate currents
-    /// buffer — and the kernel preserves the scalar reference's
-    /// per-string cell-sum and RNG draw order, so results stay
-    /// bit-identical to the legacy single-block engine.
+    /// Score every query of the batch against this shard's slots.
+    /// `wordlines[q]` carries the query's (possibly overridden) mode and
+    /// its iteration-major drives: `g·W + c` for SVSS, `g` for AVSS.
+    /// Returns `wordlines.len() × n` partial scores (query-major). Each
+    /// iteration hands its contiguous string range straight to the fused
+    /// sense→vote→accumulate kernel ([`McamBlock::sense_votes_range`]) —
+    /// no intermediate currents buffer — and the kernel preserves the
+    /// scalar reference's per-string cell-sum and RNG draw order, so
+    /// results stay bit-identical to the legacy single-block engine.
     fn score_batch(
         &mut self,
-        wordlines: &[Vec<[u8; CELLS_PER_STRING]>],
-        mode: SearchMode,
+        wordlines: &[(SearchMode, Vec<[u8; CELLS_PER_STRING]>)],
         groups: usize,
         word_length: usize,
         weights: &[f64],
@@ -147,7 +161,7 @@ impl Shard {
         if m == 0 {
             return partial;
         }
-        for (qi, wls) in wordlines.iter().enumerate() {
+        for (qi, (mode, wls)) in wordlines.iter().enumerate() {
             let scores = &mut partial[qi * m..(qi + 1) * m];
             for g in 0..groups {
                 for c in 0..word_length {
@@ -174,12 +188,19 @@ impl Shard {
 pub struct SearchEngine {
     cfg: EngineConfig,
     layout: VectorLayout,
+    /// Slot capacity per shard (fixed at construction): slot `i` lives in
+    /// shard `i / per_shard`, so appends touch exactly one shard.
+    per_shard: usize,
     shards: Vec<Shard>,
     ladder: SenseLadder,
     weights: Vec<f64>,
-    labels: Vec<u32>,
+    entries: Vec<SupportEntry>,
+    /// Tombstoned slots awaiting rebalance.
+    dead: usize,
+    faults: FaultModel,
     support_spec: QuantSpec,
-    query_spec: QuantSpec,
+    svss_query_spec: QuantSpec,
+    avss_query_spec: QuantSpec,
     energy_model: EnergyModel,
     energy: EnergyAccount,
     timing: SearchTiming,
@@ -187,22 +208,54 @@ pub struct SearchEngine {
 
 impl SearchEngine {
     /// Create an engine for `dims`-dimensional embeddings with capacity
-    /// for `max_vectors` support vectors, split evenly across
-    /// `cfg.shards` blocks.
-    pub fn new(cfg: EngineConfig, dims: usize, max_vectors: usize) -> SearchEngine {
-        assert!(cfg.shards >= 1, "engine needs at least one shard");
+    /// for `max_vectors` support slots, split evenly across `cfg.shards`
+    /// blocks. Configuration problems come back as
+    /// [`EngineError::InvalidConfig`].
+    pub fn new(
+        cfg: EngineConfig,
+        dims: usize,
+        max_vectors: usize,
+    ) -> Result<SearchEngine, EngineError> {
+        if cfg.shards == 0 {
+            return Err(EngineError::InvalidConfig("engine needs at least one shard".into()));
+        }
+        if dims == 0 {
+            return Err(EngineError::InvalidConfig(
+                "embeddings need at least one dimension".into(),
+            ));
+        }
+        if max_vectors == 0 {
+            return Err(EngineError::InvalidConfig(
+                "capacity must be at least one support vector".into(),
+            ));
+        }
+        if cfg.cl == 0 {
+            return Err(EngineError::InvalidConfig("code word length cl must be >= 1".into()));
+        }
+        if cfg.ladder_len == 0 {
+            return Err(EngineError::InvalidConfig(
+                "sense ladder needs at least one threshold".into(),
+            ));
+        }
+        if !cfg.clip.is_finite() || cfg.clip <= 0.0 {
+            return Err(EngineError::InvalidConfig(
+                "quantizer clip must be positive and finite".into(),
+            ));
+        }
         let layout = VectorLayout::new(dims, cfg.encoding, cfg.cl);
         let per_shard = max_vectors.div_ceil(cfg.shards).max(1);
-        let capacity = per_shard * layout.strings_per_vector();
         let support_levels = cfg.encoding.levels(cfg.cl);
-        let query_levels = cfg.mode.quant_scheme().query_levels(support_levels);
+        // Zero-capacity placeholder blocks: nothing can be sensed before
+        // the first `program`/`append` (EmptySupport), and every
+        // (re)programming builds the real block via `rebuild_shard` — so
+        // the construct-then-program cycle pays the plane allocation once,
+        // not twice. Each real block is a distinct physical block with a
+        // decorrelated variation stream, deterministically derived from
+        // the engine seed so seeded runs replay exactly.
         let shards = (0..cfg.shards)
             .map(|s| Shard {
-                // Each shard is a distinct physical block: decorrelated
-                // variation stream, deterministically derived from the
-                // engine seed so seeded runs replay exactly.
                 block: McamBlock::new(
-                    capacity,
+                    0,
                     cfg.params,
                     cfg.variation,
                     derive_seed(cfg.seed, s as u64),
@@ -211,19 +264,29 @@ impl SearchEngine {
                 n: 0,
             })
             .collect();
-        SearchEngine {
+        Ok(SearchEngine {
             layout,
+            per_shard,
             shards,
             ladder: SenseLadder::new(&cfg.params, cfg.ladder_len),
             weights: cfg.encoding.accumulation_weights(cfg.cl),
-            labels: Vec::new(),
+            entries: Vec::new(),
+            dead: 0,
+            faults: FaultModel::NONE,
             support_spec: QuantSpec::new(support_levels, cfg.clip),
-            query_spec: QuantSpec::new(query_levels, cfg.clip),
+            svss_query_spec: QuantSpec::new(
+                QuantScheme::Symmetric.query_levels(support_levels),
+                cfg.clip,
+            ),
+            avss_query_spec: QuantSpec::new(
+                QuantScheme::Asymmetric.query_levels(support_levels),
+                cfg.clip,
+            ),
             energy_model: EnergyModel::default(),
             energy: EnergyAccount::default(),
             timing: SearchTiming::default(),
             cfg,
-        }
+        })
     }
 
     pub fn layout(&self) -> &VectorLayout {
@@ -234,15 +297,27 @@ impl SearchEngine {
         &self.cfg
     }
 
+    /// Live (non-tombstoned) support vectors.
     pub fn n_vectors(&self) -> usize {
-        self.labels.len()
+        self.entries.len() - self.dead
+    }
+
+    /// Occupied slots, live + tombstoned (the length of a
+    /// `full_scores` dump).
+    pub fn slots(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Total slot capacity across all shards.
+    pub fn capacity(&self) -> usize {
+        self.per_shard * self.shards.len()
     }
 
     pub fn n_shards(&self) -> usize {
         self.shards.len()
     }
 
-    /// Support vectors held by shard `s` (test/introspection).
+    /// Slots held by each shard (test/introspection).
     pub fn shard_sizes(&self) -> Vec<usize> {
         self.shards.iter().map(|s| s.n).collect()
     }
@@ -256,9 +331,10 @@ impl SearchEngine {
     }
 
     /// Configure fault injection for subsequently programmed support
-    /// (reliability ablations; call before [`Self::program_support`]).
-    /// Applies to every shard.
-    pub fn set_faults(&mut self, faults: crate::device::faults::FaultModel) {
+    /// (reliability ablations; call before [`Self::program`]). Applies to
+    /// every shard at its next (re)programming.
+    pub fn set_faults(&mut self, faults: FaultModel) {
+        self.faults = faults;
         for shard in &mut self.shards {
             shard.block.set_faults(faults);
         }
@@ -267,67 +343,157 @@ impl SearchEngine {
     /// Iterations one search will consume in the configured mode (per
     /// block — shards search in parallel under the same word-line drive).
     pub fn iterations_per_search(&self) -> usize {
-        match self.cfg.mode {
-            SearchMode::Svss => self.layout.svss_iterations(),
-            SearchMode::Avss => self.layout.avss_iterations(),
+        Self::mode_iterations(&self.layout, self.cfg.mode) as usize
+    }
+
+    fn mode_iterations(layout: &VectorLayout, mode: SearchMode) -> u64 {
+        match mode {
+            SearchMode::Svss => layout.svss_iterations() as u64,
+            SearchMode::Avss => layout.avss_iterations() as u64,
+        }
+    }
+
+    /// Quantize + encode one support embedding into its NAND strings.
+    fn encode_entry(&self, embedding: &[f32], label: u32) -> SupportEntry {
+        let values = self.support_spec.quantize_vec(embedding);
+        let words = self.cfg.encoding.encode_vector(&values, self.cfg.cl);
+        SupportEntry { strings: self.layout.strings_for(&words), label, alive: true }
+    }
+
+    /// Reprogram shard `s` from the slot table: a **fresh** block seeded
+    /// from the engine's derived stream (program/erase cycle on a real
+    /// die), programmed column-major — iteration (g, c) owns the
+    /// contiguous per-shard range `[(g·W + c)·m, (g·W + c + 1)·m)`.
+    /// Because the block RNG restarts from the same derived seed every
+    /// rebuild, incremental appends land bit-identical to programming the
+    /// whole slot table at once (`rust/tests/test_api.rs`).
+    fn rebuild_shard(&mut self, s: usize) {
+        let lo = (s * self.per_shard).min(self.entries.len());
+        let hi = ((s + 1) * self.per_shard).min(self.entries.len());
+        let count = hi - lo;
+        let spv = self.layout.strings_per_vector();
+        let mut block = McamBlock::new(
+            self.per_shard * spv,
+            self.cfg.params,
+            self.cfg.variation,
+            derive_seed(self.cfg.seed, s as u64),
+        );
+        block.set_faults(self.faults);
+        for column in 0..spv {
+            for entry in &self.entries[lo..hi] {
+                block.program_string(&entry.strings[column]);
+            }
+        }
+        self.shards[s] = Shard { block, base: lo, n: count };
+    }
+
+    /// Drop tombstoned slots, renumber survivors, and reprogram every
+    /// shard (the rebalance step behind [`REBALANCE_DEAD_FRACTION`]).
+    fn compact(&mut self) {
+        self.entries.retain(|e| e.alive);
+        self.dead = 0;
+        for s in 0..self.shards.len() {
+            self.rebuild_shard(s);
         }
     }
 
     /// Erase all shards and program a support set (embeddings are raw
-    /// controller outputs; quantization + encoding happen here).
-    ///
-    /// Vectors are partitioned contiguously: shard *s* holds the global
-    /// range `[s·⌈n/S⌉, min((s+1)·⌈n/S⌉, n))`. Within a shard, strings
-    /// are programmed **column-major** — all vectors' string (g, c) are
-    /// adjacent — so every search iteration senses one contiguous block
-    /// range instead of a `strings_per_vector`-strided scatter. On the
-    /// real device this is just a bit-line assignment choice; in the
-    /// simulator it turned a 24 KiB-stride walk into a sequential scan
-    /// (see DESIGN.md §Perf, ~3.9x).
-    pub fn program_support(&mut self, embeddings: &[&[f32]], labels: &[u32]) {
-        assert_eq!(embeddings.len(), labels.len(), "one label per vector");
-        self.labels.clear();
-        self.labels.extend_from_slice(labels);
-        let n = embeddings.len();
-        let spv = self.layout.strings_per_vector();
-        let per = n.div_ceil(self.shards.len()).max(1);
-        let mut start = 0usize;
-        for shard in &mut self.shards {
-            let end = (start + per).min(n);
-            let count = end.saturating_sub(start);
-            shard.base = start;
-            shard.n = count;
-            shard.block.erase();
-            if count > 0 {
-                let mut all_strings = Vec::with_capacity(count * spv);
-                for emb in &embeddings[start..end] {
-                    assert_eq!(emb.len(), self.layout.dims, "embedding dim mismatch");
-                    let values = self.support_spec.quantize_vec(emb);
-                    let words = self.cfg.encoding.encode_vector(&values, self.cfg.cl);
-                    all_strings.extend(self.layout.strings_for(&words));
-                }
-                // column-major: iteration (g, c) owns the contiguous
-                // per-shard range [(g*W + c) * m, (g*W + c + 1) * m)
-                for column in 0..spv {
-                    for v in 0..count {
-                        shard.block.program_string(&all_strings[v * spv + column]);
-                    }
-                }
+    /// controller outputs; quantization + encoding happen here). Slots
+    /// are assigned in order: slot `i` lives in shard `i / per_shard`.
+    pub fn program(&mut self, support: &SupportSet) -> Result<(), EngineError> {
+        if support.is_empty() {
+            return Err(EngineError::EmptySupport);
+        }
+        if support.dims() != self.layout.dims {
+            return Err(EngineError::DimMismatch {
+                expected: self.layout.dims,
+                got: support.dims(),
+            });
+        }
+        if support.len() > self.capacity() {
+            return Err(EngineError::CapacityExceeded {
+                capacity: self.capacity(),
+                requested: support.len(),
+            });
+        }
+        let entries: Vec<SupportEntry> = (0..support.len())
+            .map(|i| self.encode_entry(support.embedding(i), support.label(i)))
+            .collect();
+        self.entries = entries;
+        self.dead = 0;
+        for s in 0..self.shards.len() {
+            self.rebuild_shard(s);
+        }
+        Ok(())
+    }
+
+    /// Convenience wrapper over [`Self::program`] for borrowed support.
+    pub fn program_support(
+        &mut self,
+        embeddings: &[&[f32]],
+        labels: &[u32],
+    ) -> Result<(), EngineError> {
+        let set = SupportSet::from_refs(self.layout.dims, embeddings, labels)?;
+        self.program(&set)
+    }
+
+    /// Append one support vector online; returns its slot index. Only the
+    /// shard owning the new slot is reprogrammed. A full slot table with
+    /// tombstones rebalances first; a full table without tombstones is
+    /// [`EngineError::CapacityExceeded`].
+    pub fn append(&mut self, embedding: &[f32], label: u32) -> Result<usize, EngineError> {
+        if embedding.len() != self.layout.dims {
+            return Err(EngineError::DimMismatch {
+                expected: self.layout.dims,
+                got: embedding.len(),
+            });
+        }
+        if self.entries.len() == self.capacity() {
+            if self.dead > 0 {
+                self.compact();
+            } else {
+                return Err(EngineError::CapacityExceeded {
+                    capacity: self.capacity(),
+                    requested: self.entries.len() + 1,
+                });
             }
-            start = end;
+        }
+        let entry = self.encode_entry(embedding, label);
+        self.entries.push(entry);
+        let index = self.entries.len() - 1;
+        self.rebuild_shard(index / self.per_shard);
+        Ok(index)
+    }
+
+    /// Tombstone slot `index`: its strings stay programmed (and sensed)
+    /// but it can never be ranked. Once the dead fraction reaches
+    /// [`REBALANCE_DEAD_FRACTION`] the slot table compacts — survivors
+    /// are **renumbered** and every shard reprograms.
+    pub fn remove(&mut self, index: usize) -> Result<(), EngineError> {
+        match self.entries.get_mut(index) {
+            None => Err(EngineError::IndexOutOfRange { index, len: self.entries.len() }),
+            Some(entry) if !entry.alive => Err(EngineError::AlreadyRemoved { index }),
+            Some(entry) => {
+                entry.alive = false;
+                self.dead += 1;
+                if self.dead as f64 >= REBALANCE_DEAD_FRACTION * self.entries.len() as f64 {
+                    self.compact();
+                }
+                Ok(())
+            }
         }
     }
 
-    /// Encode one query into its per-iteration word-line drives
-    /// (iteration-major: `g·W + c` for SVSS, `g` for AVSS). This is the
-    /// per-query work that batching amortizes across shards.
-    fn query_wordlines(&self, query_emb: &[f32]) -> Vec<[u8; CELLS_PER_STRING]> {
-        assert_eq!(query_emb.len(), self.layout.dims, "query dim mismatch");
+    /// Encode one query into its per-iteration word-line drives under
+    /// `mode` (iteration-major: `g·W + c` for SVSS, `g` for AVSS). This
+    /// is the per-query work that batching amortizes across shards.
+    /// Dimensions are validated by the caller.
+    fn query_wordlines(&self, query_emb: &[f32], mode: SearchMode) -> Vec<[u8; CELLS_PER_STRING]> {
         let w = self.layout.word_length;
-        match self.cfg.mode {
+        match mode {
             SearchMode::Svss => {
                 // Query encoded exactly like the support.
-                let values = self.query_spec.quantize_vec(query_emb);
+                let values = self.svss_query_spec.quantize_vec(query_emb);
                 let words = self.cfg.encoding.encode_vector(&values, self.cfg.cl);
                 let mut wls = Vec::with_capacity(self.layout.groups * w);
                 for g in 0..self.layout.groups {
@@ -342,7 +508,7 @@ impl SearchEngine {
                 // columns of a group are sensed under one application.
                 let q4: Vec<u8> = query_emb
                     .iter()
-                    .map(|&x| self.query_spec.quantize(x as f64) as u8)
+                    .map(|&x| self.avss_query_spec.quantize(x as f64) as u8)
                     .collect();
                 let mut wls = Vec::with_capacity(self.layout.groups);
                 for g in 0..self.layout.groups {
@@ -353,68 +519,87 @@ impl SearchEngine {
         }
     }
 
-    /// Execute one search; returns the winner and per-vector scores.
-    pub fn search(&mut self, query_emb: &[f32]) -> SearchResult {
-        assert!(!self.labels.is_empty(), "no support programmed");
-        self.search_batch(&[query_emb])
+    /// Execute one search; returns ranked hits.
+    pub fn search(&mut self, request: &SearchRequest<'_>) -> Result<SearchResponse, EngineError> {
+        let mut responses = self.search_batch(std::slice::from_ref(request))?;
+        responses
             .pop()
-            .expect("one result per query")
+            .ok_or_else(|| EngineError::Internal("one response per query".into()))
     }
 
     /// Execute a batch of searches, amortizing query encoding and
     /// word-line setup across the batch and fanning shards out in
-    /// parallel. Returns one [`SearchResult`] per query, in order;
+    /// parallel. Returns one [`SearchResponse`] per request, in order;
     /// bit-identical to repeated [`Self::search`] calls on the same
-    /// seeded engine.
-    pub fn search_batch(&mut self, queries: &[&[f32]]) -> Vec<SearchResult> {
-        assert!(!self.labels.is_empty(), "no support programmed");
-        if queries.is_empty() {
-            return Vec::new();
+    /// seeded engine. Validation is atomic: a malformed request fails the
+    /// whole batch *before* any sensing, so a rejected batch leaves the
+    /// device (and its RNG streams) untouched.
+    pub fn search_batch(
+        &mut self,
+        requests: &[SearchRequest<'_>],
+    ) -> Result<Vec<SearchResponse>, EngineError> {
+        if requests.is_empty() {
+            return Ok(Vec::new());
         }
-        let n = self.labels.len();
+        if self.n_vectors() == 0 {
+            return Err(EngineError::EmptySupport);
+        }
+        for request in requests {
+            if request.options.top_k == 0 {
+                return Err(EngineError::InvalidTopK);
+            }
+            if request.query.len() != self.layout.dims {
+                return Err(EngineError::DimMismatch {
+                    expected: self.layout.dims,
+                    got: request.query.len(),
+                });
+            }
+        }
+        let slots = self.entries.len();
         let groups = self.layout.groups;
         let w = self.layout.word_length;
 
-        // Phase 1 (amortized): encode every query exactly once.
-        let wordlines: Vec<Vec<[u8; CELLS_PER_STRING]>> =
-            queries.iter().map(|q| self.query_wordlines(q)).collect();
+        // Phase 1 (amortized): encode every query exactly once, under its
+        // (possibly overridden) mode.
+        let wordlines: Vec<(SearchMode, Vec<[u8; CELLS_PER_STRING]>)> = requests
+            .iter()
+            .map(|request| {
+                let mode = request.options.mode.unwrap_or(self.cfg.mode);
+                (mode, self.query_wordlines(request.query, mode))
+            })
+            .collect();
 
         // Phase 2 (parallel): every shard scores the whole batch against
-        // its slice of the support set on its own thread. Shard-private
+        // its slice of the slot table on its own thread. Shard-private
         // RNG streams keep this deterministic regardless of scheduling —
         // inline and threaded dispatch produce identical results, so tiny
         // workloads (e.g. a scalar search over a small support set) skip
         // the per-call thread spawn entirely.
-        let mode = self.cfg.mode;
         let weights = &self.weights;
         let ladder = &self.ladder;
         let wl_ref = &wordlines;
         let max_shard_vectors = self.shards.iter().map(|s| s.n).max().unwrap_or(0);
-        let sense_events_per_shard = max_shard_vectors * groups * w * queries.len();
+        let sense_events_per_shard = max_shard_vectors * groups * w * requests.len();
         // ~4K string senses (≈100K cell evaluations) comfortably dwarfs a
         // thread spawn/join; below that, fan-out overhead dominates.
         const PARALLEL_SENSE_FLOOR: usize = 4096;
         let partials: Vec<Vec<f64>> =
             if self.shards.len() > 1 && sense_events_per_shard >= PARALLEL_SENSE_FLOOR {
                 par_map_mut(&mut self.shards, |_, shard| {
-                    shard.score_batch(wl_ref, mode, groups, w, weights, ladder)
+                    shard.score_batch(wl_ref, groups, w, weights, ladder)
                 })
             } else {
                 self.shards
                     .iter_mut()
-                    .map(|shard| shard.score_batch(wl_ref, mode, groups, w, weights, ladder))
+                    .map(|shard| shard.score_batch(wl_ref, groups, w, weights, ladder))
                     .collect()
             };
 
         // Phase 3 (reduce): stitch per-shard partial scores into global
-        // score vectors and pick winners.
-        let iterations = match mode {
-            SearchMode::Svss => (groups * w) as u64,
-            SearchMode::Avss => groups as u64,
-        };
-        let mut results = Vec::with_capacity(queries.len());
-        for qi in 0..queries.len() {
-            let mut scores = vec![0f64; n];
+        // score vectors and rank the live slots.
+        let mut responses = Vec::with_capacity(requests.len());
+        for (qi, request) in requests.iter().enumerate() {
+            let mut scores = vec![0f64; slots];
             for (shard, partial) in self.shards.iter().zip(&partials) {
                 if shard.n > 0 {
                     scores[shard.base..shard.base + shard.n]
@@ -423,25 +608,71 @@ impl SearchEngine {
             }
             // Accounting matches the legacy per-iteration bookkeeping:
             // every programmed string is sensed once per search in both
-            // modes (n·G·W strings through the full ladder).
+            // modes (slots·G·W strings through the full ladder).
+            let iterations = Self::mode_iterations(&self.layout, wordlines[qi].0);
             self.timing.add_iterations(iterations);
-            self.energy
-                .add_sense(&self.energy_model, (n * groups * w) as u64, self.ladder.len());
+            self.energy.add_sense(
+                &self.energy_model,
+                (slots * groups * w) as u64,
+                self.ladder.len(),
+            );
             self.energy.finish_search();
-            let winner = scores
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .map(|(i, _)| i)
-                .unwrap();
-            results.push(SearchResult {
-                winner,
-                label: self.labels[winner],
-                scores,
+            // Clamp to the live slot count: `hits` can never exceed it, and
+            // the clamp keeps a huge client-supplied top_k from asking the
+            // heap for an absurd allocation.
+            let top_k = request.options.top_k.min(self.n_vectors());
+            let hits = rank_top_k(
+                top_k,
+                self.entries.iter().enumerate().filter(|(_, e)| e.alive).map(|(i, e)| Hit {
+                    index: i,
+                    label: e.label,
+                    score: scores[i],
+                }),
+            );
+            responses.push(SearchResponse {
+                hits,
                 iterations,
+                device_latency_us: iterations as f64 * SEARCH_ITERATION_US,
+                full_scores: if request.options.full_scores { Some(scores) } else { None },
             });
         }
-        results
+        Ok(responses)
+    }
+}
+
+impl VectorSearchBackend for SearchEngine {
+    fn program(&mut self, support: &SupportSet) -> Result<(), EngineError> {
+        SearchEngine::program(self, support)
+    }
+
+    fn append(&mut self, embedding: &[f32], label: u32) -> Result<usize, EngineError> {
+        SearchEngine::append(self, embedding, label)
+    }
+
+    fn remove(&mut self, index: usize) -> Result<(), EngineError> {
+        SearchEngine::remove(self, index)
+    }
+
+    fn search_batch(
+        &mut self,
+        requests: &[SearchRequest<'_>],
+    ) -> Result<Vec<SearchResponse>, EngineError> {
+        SearchEngine::search_batch(self, requests)
+    }
+
+    fn len(&self) -> usize {
+        self.n_vectors()
+    }
+
+    fn stats(&self) -> BackendStats {
+        BackendStats {
+            backend: "mcam".into(),
+            vectors: self.n_vectors(),
+            tombstones: self.dead,
+            shards: self.shards.len(),
+            iterations_per_search: self.iterations_per_search() as u64,
+            nj_per_search: self.energy.nj_per_search(),
+        }
     }
 }
 
@@ -478,7 +709,11 @@ mod tests {
 
     fn engine(enc: Encoding, cl: usize, mode: SearchMode) -> SearchEngine {
         let cfg = EngineConfig::new(enc, cl, mode, 3.0).ideal();
-        SearchEngine::new(cfg, 48, 64)
+        SearchEngine::new(cfg, 48, 64).unwrap()
+    }
+
+    fn top1(eng: &mut SearchEngine, query: &[f32]) -> Hit {
+        *eng.search(&SearchRequest::new(query)).unwrap().top().unwrap()
     }
 
     #[test]
@@ -489,13 +724,10 @@ mod tests {
                 let (embs, labels) = cluster_embeddings(&mut rng, 8, 2, 48, 0.0);
                 let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
                 let mut eng = engine(enc, 3, mode);
-                eng.program_support(&refs, &labels);
+                eng.program_support(&refs, &labels).unwrap();
                 // query == support vector 5 exactly
-                let result = eng.search(&embs[5]);
-                assert_eq!(
-                    result.label, labels[5],
-                    "{enc:?} {mode:?}: exact match must win"
-                );
+                let hit = top1(&mut eng, &embs[5]);
+                assert_eq!(hit.label, labels[5], "{enc:?} {mode:?}: exact match must win");
             }
         }
     }
@@ -509,14 +741,25 @@ mod tests {
             let cfg = EngineConfig::new(Encoding::Mtmc, 3, SearchMode::Avss, 3.0)
                 .ideal()
                 .with_shards(shards);
-            let mut eng = SearchEngine::new(cfg, 48, 64);
-            eng.program_support(&refs, &labels);
+            let mut eng = SearchEngine::new(cfg, 48, 64).unwrap();
+            eng.program_support(&refs, &labels).unwrap();
             assert_eq!(eng.n_shards(), shards);
             assert_eq!(eng.shard_sizes().iter().sum::<usize>(), embs.len());
             for probe in [0usize, 7, 15] {
-                let result = eng.search(&embs[probe]);
-                assert_eq!(result.label, labels[probe], "{shards} shards, probe {probe}");
-                assert_eq!(result.winner, probe);
+                let response = eng
+                    .search(&SearchRequest::new(&embs[probe]).with_full_scores())
+                    .unwrap();
+                let hit = response.top().unwrap();
+                assert_eq!(hit.label, labels[probe], "{shards} shards, probe {probe}");
+                // The two vectors of each class are identical at spread 0,
+                // so the winner must at least tie the probed slot's score
+                // (ties rank the lowest slot index first).
+                let scores = response.full_scores.as_ref().unwrap();
+                assert_eq!(
+                    scores[hit.index], scores[probe],
+                    "{shards} shards, probe {probe}: winner must tie the exact match"
+                );
+                assert!(hit.index <= probe);
             }
         }
     }
@@ -532,20 +775,26 @@ mod tests {
             let cfg = EngineConfig::new(Encoding::Mtmc, 8, SearchMode::Avss, 3.0)
                 .with_seed(0xD15E)
                 .with_shards(shards);
-            let mut scalar = SearchEngine::new(cfg, 48, embs.len());
-            let mut batched = SearchEngine::new(cfg, 48, embs.len());
-            scalar.program_support(&refs, &labels);
-            batched.program_support(&refs, &labels);
-            let queries: Vec<&[f32]> = refs.iter().take(8).copied().collect();
-            let scalar_results: Vec<SearchResult> =
-                queries.iter().map(|q| scalar.search(q)).collect();
-            let batch_results = batched.search_batch(&queries);
+            let mut scalar = SearchEngine::new(cfg, 48, embs.len()).unwrap();
+            let mut batched = SearchEngine::new(cfg, 48, embs.len()).unwrap();
+            scalar.program_support(&refs, &labels).unwrap();
+            batched.program_support(&refs, &labels).unwrap();
+            let requests: Vec<SearchRequest> = refs
+                .iter()
+                .take(8)
+                .map(|&q| SearchRequest::new(q).with_full_scores())
+                .collect();
+            let scalar_results: Vec<SearchResponse> =
+                requests.iter().map(|r| scalar.search(r).unwrap()).collect();
+            let batch_results = batched.search_batch(&requests).unwrap();
             assert_eq!(scalar_results.len(), batch_results.len());
             for (s, b) in scalar_results.iter().zip(&batch_results) {
-                assert_eq!(s.winner, b.winner, "{shards} shards");
-                assert_eq!(s.label, b.label);
+                assert_eq!(s.hits, b.hits, "{shards} shards");
                 assert_eq!(s.iterations, b.iterations);
-                assert_eq!(s.scores, b.scores, "{shards} shards: scores must be bit-identical");
+                assert_eq!(
+                    s.full_scores, b.full_scores,
+                    "{shards} shards: scores must be bit-identical"
+                );
             }
             assert_eq!(
                 scalar.energy().nj_per_search(),
@@ -557,8 +806,8 @@ mod tests {
     #[test]
     fn empty_batch_returns_empty() {
         let mut eng = engine(Encoding::Mtmc, 4, SearchMode::Avss);
-        eng.program_support(&[&[0.5f32; 48] as &[f32]], &[0]);
-        assert!(eng.search_batch(&[]).is_empty());
+        eng.program_support(&[&[0.5f32; 48] as &[f32]], &[0]).unwrap();
+        assert!(eng.search_batch(&[]).unwrap().is_empty());
     }
 
     #[test]
@@ -567,14 +816,14 @@ mod tests {
         let (embs, labels) = cluster_embeddings(&mut rng, 10, 5, 48, 0.05);
         let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
         let mut eng = engine(Encoding::Mtmc, 8, SearchMode::Avss);
-        eng.program_support(&refs, &labels);
+        eng.program_support(&refs, &labels).unwrap();
         let mut correct = 0;
         for c in 0..10 {
             let query: Vec<f32> = embs[c * 5]
                 .iter()
                 .map(|&x| (x as f64 + 0.02 * rng.gaussian()).max(0.0) as f32)
                 .collect();
-            if eng.search(&query).label == c as u32 {
+            if top1(&mut eng, &query).label == c as u32 {
                 correct += 1;
             }
         }
@@ -588,14 +837,31 @@ mod tests {
         let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
 
         let cfg = EngineConfig::new(Encoding::Mtmc, 32, SearchMode::Svss, 3.0).ideal();
-        let mut svss = SearchEngine::new(cfg, 48, 4);
-        svss.program_support(&refs, &labels);
-        assert_eq!(svss.search(&embs[0]).iterations, 64);
+        let mut svss = SearchEngine::new(cfg, 48, 4).unwrap();
+        svss.program_support(&refs, &labels).unwrap();
+        assert_eq!(svss.search(&SearchRequest::new(&embs[0])).unwrap().iterations, 64);
 
         let cfg = EngineConfig::new(Encoding::Mtmc, 32, SearchMode::Avss, 3.0).ideal();
-        let mut avss = SearchEngine::new(cfg, 48, 4);
-        avss.program_support(&refs, &labels);
-        assert_eq!(avss.search(&embs[0]).iterations, 2);
+        let mut avss = SearchEngine::new(cfg, 48, 4).unwrap();
+        avss.program_support(&refs, &labels).unwrap();
+        assert_eq!(avss.search(&SearchRequest::new(&embs[0])).unwrap().iterations, 2);
+    }
+
+    #[test]
+    fn per_request_mode_override_changes_iterations() {
+        let mut rng = Rng::new(1);
+        let (embs, labels) = cluster_embeddings(&mut rng, 2, 1, 48, 0.0);
+        let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
+        let cfg = EngineConfig::new(Encoding::Mtmc, 32, SearchMode::Avss, 3.0).ideal();
+        let mut eng = SearchEngine::new(cfg, 48, 4).unwrap();
+        eng.program_support(&refs, &labels).unwrap();
+        let avss = eng.search(&SearchRequest::new(&embs[0])).unwrap();
+        assert_eq!(avss.iterations, 2);
+        let svss = eng
+            .search(&SearchRequest::new(&embs[0]).with_mode(SearchMode::Svss))
+            .unwrap();
+        assert_eq!(svss.iterations, 64);
+        assert_eq!(svss.top().unwrap().label, labels[0]);
     }
 
     #[test]
@@ -607,9 +873,9 @@ mod tests {
         let cfg = EngineConfig::new(Encoding::Mtmc, 32, SearchMode::Avss, 3.0)
             .ideal()
             .with_shards(4);
-        let mut eng = SearchEngine::new(cfg, 48, 4);
-        eng.program_support(&refs, &labels);
-        assert_eq!(eng.search(&embs[0]).iterations, 2);
+        let mut eng = SearchEngine::new(cfg, 48, 4).unwrap();
+        eng.program_support(&refs, &labels).unwrap();
+        assert_eq!(eng.search(&SearchRequest::new(&embs[0])).unwrap().iterations, 2);
     }
 
     #[test]
@@ -620,9 +886,9 @@ mod tests {
         let mut energies = Vec::new();
         for mode in [SearchMode::Svss, SearchMode::Avss] {
             let cfg = EngineConfig::new(Encoding::Mtmc, 8, mode, 3.0).ideal();
-            let mut eng = SearchEngine::new(cfg, 48, 8);
-            eng.program_support(&refs, &labels);
-            eng.search(&embs[0]);
+            let mut eng = SearchEngine::new(cfg, 48, 8).unwrap();
+            eng.program_support(&refs, &labels).unwrap();
+            eng.search(&SearchRequest::new(&embs[0])).unwrap();
             energies.push(eng.energy().nj_per_search());
         }
         assert!(
@@ -632,15 +898,33 @@ mod tests {
     }
 
     #[test]
-    fn scores_len_matches_vectors() {
+    fn full_scores_len_matches_slots_and_top_k_truncates() {
         let mut rng = Rng::new(3);
         let (embs, labels) = cluster_embeddings(&mut rng, 3, 4, 48, 0.1);
         let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
         let mut eng = engine(Encoding::Sre, 4, SearchMode::Avss);
-        eng.program_support(&refs, &labels);
-        let result = eng.search(&embs[1]);
-        assert_eq!(result.scores.len(), 12);
-        assert_eq!(result.winner, 1);
+        eng.program_support(&refs, &labels).unwrap();
+        let response = eng
+            .search(&SearchRequest::new(&embs[1]).with_top_k(5).with_full_scores())
+            .unwrap();
+        let scores = response.full_scores.as_ref().unwrap();
+        assert_eq!(scores.len(), 12);
+        assert_eq!(response.hits.len(), 5);
+        // the probed slot's score must be maximal (it is the exact match)
+        let top = response.top().unwrap();
+        assert_eq!(scores[top.index], scores[1], "winner must tie the exact match");
+        // hits are ranked: scores non-increasing, ties by lowest index
+        for pair in response.hits.windows(2) {
+            assert!(
+                pair[0].score > pair[1].score
+                    || (pair[0].score == pair[1].score && pair[0].index < pair[1].index),
+                "hits must be ranked: {pair:?}"
+            );
+        }
+        // default request returns exactly one hit, no dense scores
+        let top1_only = eng.search(&SearchRequest::new(&embs[1])).unwrap();
+        assert_eq!(top1_only.hits.len(), 1);
+        assert!(top1_only.full_scores.is_none());
     }
 
     #[test]
@@ -649,27 +933,50 @@ mod tests {
         let (embs, labels) = cluster_embeddings(&mut rng, 4, 1, 48, 0.0);
         let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
         let mut eng = engine(Encoding::Mtmc, 4, SearchMode::Avss);
-        eng.program_support(&refs[..2], &labels[..2]);
+        eng.program_support(&refs[..2], &labels[..2]).unwrap();
         assert_eq!(eng.n_vectors(), 2);
-        eng.program_support(&refs[2..], &labels[2..]);
+        eng.program_support(&refs[2..], &labels[2..]).unwrap();
         assert_eq!(eng.n_vectors(), 2);
-        let result = eng.search(&embs[2]);
-        assert_eq!(result.label, labels[2]);
+        assert_eq!(top1(&mut eng, &embs[2]).label, labels[2]);
     }
 
     #[test]
-    #[should_panic(expected = "dim mismatch")]
-    fn wrong_query_dims_panics() {
+    fn wrong_query_dims_is_typed_error() {
         let mut eng = engine(Encoding::Mtmc, 4, SearchMode::Avss);
-        eng.program_support(&[&[0.5f32; 48] as &[f32]], &[0]);
-        eng.search(&[0.5f32; 24]);
+        eng.program_support(&[&[0.5f32; 48] as &[f32]], &[0]).unwrap();
+        let err = eng.search(&SearchRequest::new(&[0.5f32; 24])).unwrap_err();
+        assert_eq!(err, EngineError::DimMismatch { expected: 48, got: 24 });
     }
 
     #[test]
-    #[should_panic(expected = "no support")]
-    fn search_without_support_panics() {
+    fn search_without_support_is_typed_error() {
         let mut eng = engine(Encoding::Mtmc, 4, SearchMode::Avss);
-        eng.search(&[0.5f32; 48]);
+        let err = eng.search(&SearchRequest::new(&[0.5f32; 48])).unwrap_err();
+        assert_eq!(err, EngineError::EmptySupport);
+    }
+
+    #[test]
+    fn zero_top_k_is_typed_error() {
+        let mut eng = engine(Encoding::Mtmc, 4, SearchMode::Avss);
+        eng.program_support(&[&[0.5f32; 48] as &[f32]], &[0]).unwrap();
+        let err = eng
+            .search(&SearchRequest::new(&[0.5f32; 48]).with_top_k(0))
+            .unwrap_err();
+        assert_eq!(err, EngineError::InvalidTopK);
+    }
+
+    #[test]
+    fn invalid_config_is_typed_error() {
+        let cfg = EngineConfig::new(Encoding::Mtmc, 4, SearchMode::Avss, 3.0).with_shards(0);
+        assert!(matches!(
+            SearchEngine::new(cfg, 48, 8),
+            Err(EngineError::InvalidConfig(_))
+        ));
+        let cfg = EngineConfig::new(Encoding::Mtmc, 4, SearchMode::Avss, f64::NAN);
+        assert!(matches!(
+            SearchEngine::new(cfg, 48, 8),
+            Err(EngineError::InvalidConfig(_))
+        ));
     }
 
     #[test]
@@ -678,11 +985,11 @@ mod tests {
         let (embs, labels) = cluster_embeddings(&mut rng, 8, 4, 48, 0.05);
         let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
         let cfg = EngineConfig::new(Encoding::Mtmc, 8, SearchMode::Avss, 3.0);
-        let mut eng = SearchEngine::new(cfg, 48, 64);
-        eng.program_support(&refs, &labels);
+        let mut eng = SearchEngine::new(cfg, 48, 64).unwrap();
+        eng.program_support(&refs, &labels).unwrap();
         let mut correct = 0;
         for c in 0..8 {
-            if eng.search(&embs[c * 4]).label == c as u32 {
+            if top1(&mut eng, &embs[c * 4]).label == c as u32 {
                 correct += 1;
             }
         }
@@ -699,12 +1006,46 @@ mod tests {
         let cfg = EngineConfig::new(Encoding::Mtmc, 4, SearchMode::Avss, 3.0)
             .ideal()
             .with_shards(8);
-        let mut eng = SearchEngine::new(cfg, 48, 8);
-        eng.program_support(&refs, &labels);
+        let mut eng = SearchEngine::new(cfg, 48, 8).unwrap();
+        eng.program_support(&refs, &labels).unwrap();
         let sizes = eng.shard_sizes();
         assert_eq!(sizes.iter().sum::<usize>(), 3);
         for (i, r) in refs.iter().enumerate() {
-            assert_eq!(eng.search(r).winner, i);
+            assert_eq!(top1(&mut eng, r).index, i);
         }
+    }
+
+    #[test]
+    fn append_and_remove_roundtrip() {
+        let mut rng = Rng::new(8);
+        let (embs, labels) = cluster_embeddings(&mut rng, 8, 1, 48, 0.0);
+        let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
+        let cfg = EngineConfig::new(Encoding::Mtmc, 4, SearchMode::Avss, 3.0)
+            .ideal()
+            .with_shards(2);
+        let mut eng = SearchEngine::new(cfg, 48, 8).unwrap();
+        for (i, (&emb, &label)) in refs.iter().zip(&labels).enumerate() {
+            assert_eq!(eng.append(emb, label).unwrap(), i);
+        }
+        assert_eq!(eng.n_vectors(), 8);
+        assert_eq!(top1(&mut eng, refs[3]).index, 3);
+        // tombstone slot 3: its exact-match query now resolves elsewhere
+        eng.remove(3).unwrap();
+        assert_eq!(eng.n_vectors(), 7);
+        assert_ne!(top1(&mut eng, refs[3]).index, 3);
+        assert_eq!(eng.remove(3).unwrap_err(), EngineError::AlreadyRemoved { index: 3 });
+        assert_eq!(
+            eng.remove(99).unwrap_err(),
+            EngineError::IndexOutOfRange { index: 99, len: 8 }
+        );
+        // capacity: the table is full and slot 3 is dead, so the next
+        // append rebalances (compacts) instead of failing
+        let extra: Vec<f32> = embs[0].iter().map(|&x| (x + 0.1).min(3.0)).collect();
+        let slot = eng.append(&extra, 42).unwrap();
+        assert_eq!(slot, 7, "compaction freed exactly one slot");
+        assert_eq!(eng.n_vectors(), 8);
+        assert_eq!(eng.slots(), 8);
+        let err = eng.append(&extra, 43).unwrap_err();
+        assert_eq!(err, EngineError::CapacityExceeded { capacity: 8, requested: 9 });
     }
 }

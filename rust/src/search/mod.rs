@@ -1,16 +1,29 @@
 //! Vector similarity search over the MCAM device: the symmetric baseline
-//! (SVSS [11]) and the paper's asymmetric search (AVSS, §3.2).
+//! (SVSS [11]) and the paper's asymmetric search (AVSS, §3.2), behind the
+//! typed serving API of [`api`].
 //!
 //! * [`SearchMode`] — SVSS vs AVSS (iteration plans + quantization
 //!   schemes).
+//! * [`api`] — [`api::SearchRequest`]/[`api::SearchResponse`] with ranked
+//!   top-k [`api::Hit`]s, the [`api::VectorSearchBackend`] trait, dynamic
+//!   [`api::SupportSetBuilder`] support construction, and the
+//!   [`api::EngineError`] taxonomy (panic-free request path).
 //! * [`engine::SearchEngine`] — programs a support set across one or more
 //!   sharded [`crate::device::block::McamBlock`]s and executes searches
-//!   (singly or batched) with SA voting, energy and timing accounting.
+//!   (singly or batched) with SA voting, energy and timing accounting;
+//!   supports online append and tombstone remove with
+//!   rebalance-on-threshold.
 //! * [`distance`] — ideal (device-free) quantized distances behind the
 //!   Fig. 6 analysis.
 
+pub mod api;
 pub mod distance;
 pub mod engine;
+
+pub use api::{
+    BackendStats, EngineError, Hit, SearchOptions, SearchRequest, SearchResponse, SupportSet,
+    SupportSetBuilder, VectorSearchBackend,
+};
 
 use crate::quant::QuantScheme;
 
@@ -30,12 +43,20 @@ impl SearchMode {
         }
     }
 
+    /// Parse a mode name, case-insensitively, accepting the
+    /// `symmetric`/`asymmetric` aliases — CLI flags and manifest keys
+    /// must not silently mismatch on casing or vocabulary.
     pub fn from_name(name: &str) -> Option<SearchMode> {
-        match name {
-            "svss" => Some(SearchMode::Svss),
-            "avss" => Some(SearchMode::Avss),
+        match name.to_ascii_lowercase().as_str() {
+            "svss" | "symmetric" => Some(SearchMode::Svss),
+            "avss" | "asymmetric" => Some(SearchMode::Avss),
             _ => None,
         }
+    }
+
+    /// [`Self::from_name`] with a typed error for `?`-style call sites.
+    pub fn parse(name: &str) -> Result<SearchMode, EngineError> {
+        Self::from_name(name).ok_or_else(|| EngineError::UnknownMode(name.to_string()))
     }
 
     /// The quantization pairing each mode implies (§3.2).
@@ -57,6 +78,21 @@ mod tests {
             assert_eq!(SearchMode::from_name(mode.name()), Some(mode));
         }
         assert_eq!(SearchMode::from_name("x"), None);
+    }
+
+    #[test]
+    fn parsing_is_case_insensitive_with_aliases() {
+        for name in ["SVSS", "Svss", "symmetric", "SYMMETRIC", "Symmetric"] {
+            assert_eq!(SearchMode::from_name(name), Some(SearchMode::Svss), "{name}");
+        }
+        for name in ["AVSS", "Avss", "asymmetric", "ASYMMETRIC", "Asymmetric"] {
+            assert_eq!(SearchMode::from_name(name), Some(SearchMode::Avss), "{name}");
+        }
+        assert!(matches!(
+            SearchMode::parse("huffman"),
+            Err(EngineError::UnknownMode(name)) if name == "huffman"
+        ));
+        assert_eq!(SearchMode::parse("Asymmetric").unwrap(), SearchMode::Avss);
     }
 
     #[test]

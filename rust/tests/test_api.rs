@@ -1,0 +1,333 @@
+//! Acceptance suite for the typed request/response serving API (ISSUE 3):
+//!
+//! * **top-k oracle**: bounded-heap ranked hits must equal a dense
+//!   argsort of the opt-in `full_scores` (descending score, ties broken
+//!   by lowest slot index) for every top_k, shard count and device noise
+//!   setting probed;
+//! * **error paths**: malformed input yields typed `EngineError`s, never
+//!   panics — engine and float baseline alike;
+//! * **dynamic support**: `append`-then-search is bitwise identical to
+//!   program-all-at-once-then-search on a noisy seeded device; tombstone
+//!   `remove` excludes slots from ranking and rebalances on threshold;
+//! * **backend genericity**: the MCAM engine and the float baseline run
+//!   through the same `VectorSearchBackend`-generic coordinator path.
+
+use mcamvss::baselines::{FloatBaseline, Metric};
+use mcamvss::coordinator::{CoordinatorConfig, Payload, Server};
+use mcamvss::encoding::Encoding;
+use mcamvss::search::engine::{EngineConfig, SearchEngine};
+use mcamvss::search::{
+    EngineError, SearchMode, SearchRequest, SupportSetBuilder, VectorSearchBackend,
+};
+use mcamvss::testutil::Rng;
+
+const DIMS: usize = 48;
+
+fn clustered(seed: u64, n_classes: usize, per: usize, spread: f64) -> (Vec<Vec<f32>>, Vec<u32>) {
+    let mut rng = Rng::new(seed);
+    let mut embs = Vec::new();
+    let mut labels = Vec::new();
+    for c in 0..n_classes {
+        let proto: Vec<f64> = (0..DIMS).map(|_| rng.range_f64(0.2, 2.8)).collect();
+        for _ in 0..per {
+            embs.push(
+                proto
+                    .iter()
+                    .map(|&p| (p + spread * rng.gaussian()).max(0.0) as f32)
+                    .collect(),
+            );
+            labels.push(c as u32);
+        }
+    }
+    (embs, labels)
+}
+
+/// Dense oracle: argsort of the full score vector over live slots,
+/// descending, ties broken by lowest index, truncated to `top_k`.
+fn oracle_top_k(scores: &[f64], top_k: usize) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..scores.len()).collect();
+    order.sort_by(|&a, &b| scores[b].total_cmp(&scores[a]).then_with(|| a.cmp(&b)));
+    order.truncate(top_k);
+    order
+}
+
+#[test]
+fn top_k_matches_dense_argsort_oracle() {
+    for shards in [1usize, 3] {
+        for ideal in [true, false] {
+            let (embs, labels) = clustered(0x70C0, 6, 4, 0.05);
+            let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
+            let mut cfg = EngineConfig::new(Encoding::Mtmc, 8, SearchMode::Avss, 3.0)
+                .with_seed(0x0A11)
+                .with_shards(shards);
+            if ideal {
+                cfg = cfg.ideal();
+            }
+            let mut engine = SearchEngine::new(cfg, DIMS, refs.len()).unwrap();
+            engine.program_support(&refs, &labels).unwrap();
+            for top_k in [1usize, 3, 8, 24, 100] {
+                for q in refs.iter().take(4) {
+                    let response = engine
+                        .search(&SearchRequest::new(q).with_top_k(top_k).with_full_scores())
+                        .unwrap();
+                    let scores = response.full_scores.as_ref().unwrap();
+                    let want = oracle_top_k(scores, top_k);
+                    let got: Vec<usize> = response.hits.iter().map(|h| h.index).collect();
+                    assert_eq!(
+                        got, want,
+                        "shards={shards} ideal={ideal} top_k={top_k}: heap vs argsort"
+                    );
+                    for hit in &response.hits {
+                        assert_eq!(hit.score, scores[hit.index], "hit carries its slot score");
+                        assert_eq!(hit.label, labels[hit.index]);
+                    }
+                    assert_eq!(response.hits.len(), top_k.min(refs.len()));
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn huge_top_k_is_clamped_not_fatal() {
+    // A client-controlled top_k must never drive an absurd allocation or
+    // overflow on the panic-free request path — it clamps to the live
+    // support count.
+    let (embs, labels) = clustered(0xB16C, 3, 2, 0.02);
+    let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
+    let cfg = EngineConfig::new(Encoding::Mtmc, 8, SearchMode::Avss, 3.0).ideal();
+    let mut engine = SearchEngine::new(cfg, DIMS, refs.len()).unwrap();
+    engine.program_support(&refs, &labels).unwrap();
+    let response = engine
+        .search(&SearchRequest::new(refs[0]).with_top_k(usize::MAX))
+        .unwrap();
+    assert_eq!(response.hits.len(), refs.len());
+    let mut float = FloatBaseline::new(DIMS, Metric::L2).unwrap();
+    float.program_support(&refs, &labels).unwrap();
+    let response = float
+        .search(&SearchRequest::new(refs[0]).with_top_k(1 << 40))
+        .unwrap();
+    assert_eq!(response.hits.len(), refs.len());
+}
+
+#[test]
+fn top_k_ties_break_by_lowest_index() {
+    // Duplicate support vectors on an ideal device score identically, so
+    // the ranking must surface the lowest slot index first.
+    let emb: Vec<f32> = (0..DIMS).map(|d| 0.3 + 0.05 * (d as f32)).collect();
+    let far: Vec<f32> = (0..DIMS).map(|d| 2.8 - 0.05 * (d as f32)).collect();
+    let refs: Vec<&[f32]> = vec![&far, &emb, &emb, &emb];
+    let labels = [9u32, 1, 2, 3];
+    let cfg = EngineConfig::new(Encoding::Mtmc, 8, SearchMode::Avss, 3.0).ideal();
+    let mut engine = SearchEngine::new(cfg, DIMS, refs.len()).unwrap();
+    engine.program_support(&refs, &labels).unwrap();
+    let response = engine
+        .search(&SearchRequest::new(&emb).with_top_k(3).with_full_scores())
+        .unwrap();
+    let idx: Vec<usize> = response.hits.iter().map(|h| h.index).collect();
+    assert_eq!(idx, vec![1, 2, 3], "identical scores must rank by slot index");
+    let scores = response.full_scores.as_ref().unwrap();
+    assert_eq!(scores[1], scores[2]);
+    assert_eq!(scores[2], scores[3]);
+}
+
+#[test]
+fn append_then_search_is_bitwise_program_all_at_once() {
+    // Acceptance criterion: incremental appends land bit-identical to a
+    // single bulk program — noisy device, multiple shards, seeded.
+    for shards in [1usize, 2, 3] {
+        let (embs, labels) = clustered(0xA99E, 5, 4, 0.05);
+        let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
+        let cfg = EngineConfig::new(Encoding::Mtmc, 8, SearchMode::Avss, 3.0)
+            .with_seed(0x5EED5)
+            .with_shards(shards);
+
+        let mut bulk = SearchEngine::new(cfg, DIMS, refs.len()).unwrap();
+        bulk.program_support(&refs, &labels).unwrap();
+
+        let mut incremental = SearchEngine::new(cfg, DIMS, refs.len()).unwrap();
+        for (i, (&emb, &label)) in refs.iter().zip(&labels).enumerate() {
+            assert_eq!(incremental.append(emb, label).unwrap(), i);
+        }
+
+        assert_eq!(bulk.shard_sizes(), incremental.shard_sizes(), "{shards} shards");
+        for q in refs.iter().take(6) {
+            let request = SearchRequest::new(q).with_top_k(5).with_full_scores();
+            let a = bulk.search(&request).unwrap();
+            let b = incremental.search(&request).unwrap();
+            assert_eq!(a.hits, b.hits, "{shards} shards: ranked hits");
+            assert_eq!(
+                a.full_scores, b.full_scores,
+                "{shards} shards: append-then-search must be bitwise"
+            );
+        }
+    }
+}
+
+#[test]
+fn support_set_builder_programs_any_backend() {
+    let (embs, labels) = clustered(0xB11D, 4, 2, 0.02);
+    let mut builder = SupportSetBuilder::new(DIMS).unwrap();
+    for (emb, &label) in embs.iter().zip(&labels) {
+        builder.append(emb, label).unwrap();
+    }
+    assert_eq!(builder.len(), 8);
+
+    let cfg = EngineConfig::new(Encoding::Mtmc, 8, SearchMode::Avss, 3.0).ideal();
+    let mut engine = SearchEngine::new(cfg, DIMS, builder.len()).unwrap();
+    builder.program_into(&mut engine).unwrap();
+    let mut float = FloatBaseline::new(DIMS, Metric::L2).unwrap();
+    builder.program_into(&mut float).unwrap();
+    for (q, &label) in embs.iter().zip(&labels) {
+        let e = engine.search(&SearchRequest::new(q)).unwrap();
+        let f = float.search(&SearchRequest::new(q)).unwrap();
+        assert_eq!(e.top().map(|h| h.label), Some(label));
+        assert_eq!(f.top().map(|h| h.label), Some(label));
+    }
+}
+
+#[test]
+fn tombstone_remove_excludes_and_rebalances_on_threshold() {
+    let (embs, labels) = clustered(0x7057, 8, 1, 0.0);
+    let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
+    let cfg = EngineConfig::new(Encoding::Mtmc, 8, SearchMode::Avss, 3.0)
+        .ideal()
+        .with_shards(2);
+    let mut engine = SearchEngine::new(cfg, DIMS, refs.len()).unwrap();
+    engine.program_support(&refs, &labels).unwrap();
+
+    // 1st remove: below the 25% threshold — tombstone only.
+    engine.remove(2).unwrap();
+    assert_eq!(engine.n_vectors(), 7);
+    assert_eq!(engine.slots(), 8, "tombstoned slot still occupies the table");
+    let response = engine
+        .search(&SearchRequest::new(refs[2]).with_top_k(8).with_full_scores())
+        .unwrap();
+    assert_eq!(response.hits.len(), 7, "dead slot never ranked");
+    assert!(response.hits.iter().all(|h| h.index != 2));
+    assert_eq!(
+        response.full_scores.as_ref().unwrap().len(),
+        8,
+        "dense dump still covers every physical slot"
+    );
+    assert_eq!(engine.stats().tombstones, 1);
+
+    // 2nd remove: 2/8 = 25% dead — the table compacts and renumbers.
+    engine.remove(5).unwrap();
+    assert_eq!(engine.n_vectors(), 6);
+    assert_eq!(engine.slots(), 6, "rebalance dropped the tombstones");
+    assert_eq!(engine.stats().tombstones, 0);
+    // survivors keep their labels; exact-match queries still resolve
+    for (i, &label) in labels.iter().enumerate() {
+        if i == 2 || i == 5 {
+            continue;
+        }
+        let hit = *engine
+            .search(&SearchRequest::new(refs[i]))
+            .unwrap()
+            .top()
+            .unwrap();
+        assert_eq!(hit.label, label, "survivor {i} must keep its label after renumbering");
+    }
+}
+
+#[test]
+fn error_paths_are_typed_not_panics() {
+    let cfg = EngineConfig::new(Encoding::Mtmc, 8, SearchMode::Avss, 3.0).ideal();
+    let mut engine = SearchEngine::new(cfg, DIMS, 4).unwrap();
+
+    assert_eq!(
+        engine.search(&SearchRequest::new(&[0.5; DIMS])).unwrap_err(),
+        EngineError::EmptySupport
+    );
+    let (embs, labels) = clustered(0xE220, 2, 2, 0.0);
+    let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
+    engine.program_support(&refs, &labels).unwrap();
+
+    assert_eq!(
+        engine.search(&SearchRequest::new(&[0.5; 24])).unwrap_err(),
+        EngineError::DimMismatch { expected: DIMS, got: 24 }
+    );
+    assert_eq!(
+        engine
+            .search(&SearchRequest::new(&[0.5; DIMS]).with_top_k(0))
+            .unwrap_err(),
+        EngineError::InvalidTopK
+    );
+    // atomic batch validation: one malformed request rejects the batch
+    let good = [0.5f32; DIMS];
+    let bad = [0.5f32; 3];
+    let batch = [SearchRequest::new(&good), SearchRequest::new(&bad)];
+    assert_eq!(
+        engine.search_batch(&batch).unwrap_err(),
+        EngineError::DimMismatch { expected: DIMS, got: 3 }
+    );
+    // over-capacity program
+    let (big, big_labels) = clustered(0xB16, 5, 1, 0.0);
+    let big_refs: Vec<&[f32]> = big.iter().map(|e| e.as_slice()).collect();
+    assert_eq!(
+        engine.program_support(&big_refs, &big_labels).unwrap_err(),
+        EngineError::CapacityExceeded { capacity: 4, requested: 5 }
+    );
+    // mismatched labels
+    assert_eq!(
+        engine.program_support(&refs, &labels[..3]).unwrap_err(),
+        EngineError::LabelCountMismatch { vectors: 4, labels: 3 }
+    );
+}
+
+/// Drive any backend through the generic server path and return
+/// (responses sorted by id, truth labels).
+fn serve_roundtrip<B>(backends: Vec<B>, queries: &[Vec<f32>]) -> Vec<mcamvss::coordinator::Response>
+where
+    B: VectorSearchBackend + Send + 'static,
+{
+    let server = Server::start_with_backends(
+        CoordinatorConfig::default(),
+        backends,
+        mcamvss::coordinator::worker::identity_embed(),
+    )
+    .unwrap();
+    for q in queries {
+        server.submit(Payload::Embedding(q.clone()));
+    }
+    let mut responses = server.shutdown();
+    responses.sort_by_key(|r| r.id);
+    responses
+}
+
+#[test]
+fn engine_and_float_baseline_share_the_generic_server_path() {
+    // Acceptance criterion: both substrates behind the same
+    // VectorSearchBackend-generic coordinator, one integration test.
+    let (embs, labels) = clustered(0x6E4E, 6, 3, 0.02);
+    let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
+
+    let mut engines = Vec::new();
+    for seed in [1u64, 2] {
+        let cfg = EngineConfig::new(Encoding::Mtmc, 8, SearchMode::Avss, 3.0)
+            .ideal()
+            .with_seed(seed)
+            .with_shards(2);
+        let mut engine = SearchEngine::new(cfg, DIMS, refs.len()).unwrap();
+        engine.program_support(&refs, &labels).unwrap();
+        engines.push(engine);
+    }
+    let mut floats = Vec::new();
+    for _ in 0..2 {
+        let mut backend = FloatBaseline::new(DIMS, Metric::L1).unwrap();
+        backend.program_support(&refs, &labels).unwrap();
+        floats.push(backend);
+    }
+
+    let mcam_responses = serve_roundtrip(engines, &embs);
+    let float_responses = serve_roundtrip(floats, &embs);
+    assert_eq!(mcam_responses.len(), embs.len());
+    assert_eq!(float_responses.len(), embs.len());
+    for (i, (m, f)) in mcam_responses.iter().zip(&float_responses).enumerate() {
+        assert_eq!(m.label(), Some(labels[i]), "mcam replica prediction, query {i}");
+        assert_eq!(f.label(), Some(labels[i]), "float replica prediction, query {i}");
+        assert!(m.iterations() > 0, "device backend consumes iterations");
+        assert_eq!(f.iterations(), 0, "software backend consumes none");
+    }
+}

@@ -2,7 +2,8 @@
 //! counts, batch limits, queue capacities and request streams —
 //!
 //! * **delivery**: every submitted request is answered exactly once
-//!   (ids form the exact submitted set, no duplicates, no losses);
+//!   (ids form the exact submitted set, no duplicates, no losses) —
+//!   including malformed requests, which get typed errors;
 //! * **routing determinism**: predictions match a bare single-threaded
 //!   engine with the same ideal-device configuration, regardless of how
 //!   requests were batched or which replica served them;
@@ -12,11 +13,11 @@
 //!   accepted request.
 
 use mcamvss::coordinator::batcher::BatcherConfig;
-use mcamvss::coordinator::{Coordinator, CoordinatorConfig, Payload};
 use mcamvss::coordinator::worker::identity_embed;
+use mcamvss::coordinator::{CoordinatorConfig, Payload, Server};
 use mcamvss::encoding::Encoding;
 use mcamvss::search::engine::{EngineConfig, SearchEngine};
-use mcamvss::search::SearchMode;
+use mcamvss::search::{EngineError, SearchMode, SearchRequest};
 use mcamvss::testutil::Rng;
 use std::sync::Arc;
 use std::time::Duration;
@@ -57,10 +58,10 @@ fn prop_exactly_once_delivery_and_reference_agreement() {
         let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
 
         // reference: bare engine, same config
-        let mut reference = SearchEngine::new(engine_cfg(), DIMS, refs.len());
-        reference.program_support(&refs, &labels);
+        let mut reference = SearchEngine::new(engine_cfg(), DIMS, refs.len()).unwrap();
+        reference.program_support(&refs, &labels).unwrap();
 
-        let coord = Coordinator::start(
+        let server = Server::start(
             CoordinatorConfig {
                 workers,
                 queue_capacity: 128,
@@ -87,9 +88,9 @@ fn prop_exactly_once_delivery_and_reference_agreement() {
             .collect();
         let mut ids = Vec::new();
         for q in &queries {
-            ids.push(coord.submit(Payload::Embedding(q.clone())));
+            ids.push(server.submit(Payload::Embedding(q.clone())));
         }
-        let mut responses = coord.shutdown();
+        let mut responses = server.shutdown();
 
         // exactly-once: response ids == submitted ids as a set
         let mut got: Vec<u64> = responses.iter().map(|r| r.id).collect();
@@ -102,14 +103,94 @@ fn prop_exactly_once_delivery_and_reference_agreement() {
         // share variation=IDEAL so physics is identical)
         responses.sort_by_key(|r| r.id);
         for (resp, q) in responses.iter().zip(&queries) {
-            let expect = reference.search(q);
+            let expect = reference.search(&SearchRequest::new(q)).unwrap();
+            let expect_hit = expect.top().unwrap();
             assert_eq!(
-                resp.label, expect.label,
+                resp.label(),
+                Some(expect_hit.label),
                 "case {case} req {}: coordinator diverged from bare engine",
                 resp.id
             );
-            assert_eq!(resp.winner, expect.winner);
-            assert_eq!(resp.iterations, expect.iterations);
+            assert_eq!(resp.winner(), Some(expect_hit.index));
+            assert_eq!(resp.iterations(), expect.iterations);
+        }
+    }
+}
+
+#[test]
+fn prop_malformed_requests_are_answered_with_typed_errors() {
+    // Fuzz-ish: random interleavings of well-formed and malformed
+    // requests (wrong dims, empty embedding, top_k = 0) — exactly-once
+    // delivery holds, malformed requests get typed errors, well-formed
+    // ones are still answered correctly, nothing panics.
+    for case in 0..4u64 {
+        let mut rng = Rng::new(0xF022 + case);
+        let (embs, labels) = support_set(&mut rng, 4, 2);
+        let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
+        let server = Server::start(
+            CoordinatorConfig {
+                workers: 1 + rng.below(3),
+                queue_capacity: 64,
+                batcher: BatcherConfig {
+                    max_batch: 1 + rng.below(6),
+                    max_wait: Duration::from_millis(1),
+                },
+            },
+            engine_cfg(),
+            DIMS,
+            &refs,
+            &labels,
+            identity_embed(),
+        )
+        .unwrap();
+
+        // (id, expectation): None = well-formed, Some(err) = typed error
+        let mut expectations: Vec<(u64, Option<EngineError>)> = Vec::new();
+        for i in 0..40 {
+            match rng.below(4) {
+                0 => {
+                    let bad_dims = 1 + rng.below(DIMS - 1);
+                    let id = server.submit(Payload::Embedding(vec![0.5; bad_dims]));
+                    expectations.push((
+                        id,
+                        Some(EngineError::DimMismatch { expected: DIMS, got: bad_dims }),
+                    ));
+                }
+                1 => {
+                    let id = server.submit(Payload::Embedding(Vec::new()));
+                    expectations.push((
+                        id,
+                        Some(EngineError::DimMismatch { expected: DIMS, got: 0 }),
+                    ));
+                }
+                2 => {
+                    let id = server.submit_with(
+                        Payload::Embedding(embs[i % embs.len()].clone()),
+                        mcamvss::search::SearchOptions { top_k: 0, ..Default::default() },
+                    );
+                    expectations.push((id, Some(EngineError::InvalidTopK)));
+                }
+                _ => {
+                    let id = server.submit(Payload::Embedding(embs[i % embs.len()].clone()));
+                    expectations.push((id, None));
+                }
+            }
+        }
+        let responses = server.shutdown();
+        assert_eq!(responses.len(), expectations.len(), "case {case}: exactly-once");
+        for (id, expected_err) in expectations {
+            let resp = responses.iter().find(|r| r.id == id).unwrap();
+            match expected_err {
+                None => assert!(
+                    resp.is_ok() && resp.label().is_some(),
+                    "case {case} req {id}: well-formed request must succeed"
+                ),
+                Some(err) => assert_eq!(
+                    resp.outcome.as_ref().unwrap_err(),
+                    &err,
+                    "case {case} req {id}: wrong typed error"
+                ),
+            }
         }
     }
 }
@@ -120,8 +201,8 @@ fn prop_concurrent_producers_preserve_pairing() {
         let mut rng = Rng::new(0xCAFE + case);
         let (embs, labels) = support_set(&mut rng, 6, 2);
         let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
-        let coord = Arc::new(
-            Coordinator::start(
+        let server = Arc::new(
+            Server::start(
                 CoordinatorConfig {
                     workers: 2,
                     queue_capacity: 64,
@@ -146,14 +227,14 @@ fn prop_concurrent_producers_preserve_pairing() {
         let mut handles = Vec::new();
         let submitted = Arc::new(std::sync::Mutex::new(Vec::<(u64, u32)>::new()));
         for p in 0..3usize {
-            let coord = Arc::clone(&coord);
+            let server = Arc::clone(&server);
             let submitted = Arc::clone(&submitted);
             let embs = embs.clone();
             handles.push(std::thread::spawn(move || {
                 let mut rng = Rng::new(0xBEEF ^ p as u64);
                 for _ in 0..20 {
                     let v = rng.below(n_classes * per);
-                    let id = coord.submit(Payload::Embedding(embs[v].clone()));
+                    let id = server.submit(Payload::Embedding(embs[v].clone()));
                     submitted.lock().unwrap().push((id, (v / per) as u32));
                 }
             }));
@@ -161,14 +242,15 @@ fn prop_concurrent_producers_preserve_pairing() {
         for h in handles {
             h.join().unwrap();
         }
-        let coord = Arc::try_unwrap(coord).ok().expect("sole owner");
-        let responses = coord.shutdown();
+        let server = Arc::try_unwrap(server).ok().expect("sole owner");
+        let responses = server.shutdown();
         let truth: std::collections::HashMap<u64, u32> =
             submitted.lock().unwrap().iter().copied().collect();
         assert_eq!(responses.len(), truth.len());
         for r in &responses {
             assert_eq!(
-                r.label, truth[&r.id],
+                r.label(),
+                Some(truth[&r.id]),
                 "case {case}: request/response pairing broken for id {}",
                 r.id
             );
@@ -181,7 +263,7 @@ fn prop_try_submit_accounts_every_accept() {
     let mut rng = Rng::new(0x77);
     let (embs, labels) = support_set(&mut rng, 3, 2);
     let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
-    let coord = Coordinator::start(
+    let server = Server::start(
         CoordinatorConfig {
             workers: 1,
             queue_capacity: 4,
@@ -196,14 +278,14 @@ fn prop_try_submit_accounts_every_accept() {
     .unwrap();
     let mut accepted = 0usize;
     for i in 0..200usize {
-        if coord
+        if server
             .try_submit(Payload::Embedding(embs[i % embs.len()].clone()))
             .is_some()
         {
             accepted += 1;
         }
     }
-    let responses = coord.shutdown();
+    let responses = server.shutdown();
     assert_eq!(
         responses.len(),
         accepted,

@@ -1,11 +1,12 @@
 //! Determinism regression: a fixed `EngineConfig::with_seed` must replay
 //! the whole engine — program-time variation, read noise, shard RNG
 //! streams — bit-for-bit, and batched/sharded execution must agree with
-//! scalar execution exactly (the PR's acceptance criterion).
+//! scalar execution exactly, under the typed request/response API
+//! (`SearchResponse.hits` + opt-in `full_scores`).
 
 use mcamvss::encoding::Encoding;
-use mcamvss::search::engine::{EngineConfig, SearchEngine, SearchResult};
-use mcamvss::search::SearchMode;
+use mcamvss::search::engine::{EngineConfig, SearchEngine};
+use mcamvss::search::{SearchMode, SearchRequest, SearchResponse};
 use mcamvss::testutil::Rng;
 
 const DIMS: usize = 48;
@@ -29,11 +30,20 @@ fn clustered(seed: u64, n_classes: usize, per: usize) -> (Vec<Vec<f32>>, Vec<u32
     (embs, labels)
 }
 
-/// Run one freshly built engine over the queries (scalar path).
-fn run_scalar(cfg: EngineConfig, refs: &[&[f32]], labels: &[u32], queries: &[&[f32]]) -> Vec<SearchResult> {
-    let mut engine = SearchEngine::new(cfg, DIMS, refs.len());
-    engine.program_support(refs, labels);
-    queries.iter().map(|q| engine.search(q)).collect()
+/// Run one freshly built engine over the queries (scalar path), dense
+/// scores on so replays can be compared bitwise.
+fn run_scalar(
+    cfg: EngineConfig,
+    refs: &[&[f32]],
+    labels: &[u32],
+    queries: &[&[f32]],
+) -> Vec<SearchResponse> {
+    let mut engine = SearchEngine::new(cfg, DIMS, refs.len()).unwrap();
+    engine.program_support(refs, labels).unwrap();
+    queries
+        .iter()
+        .map(|&q| engine.search(&SearchRequest::new(q).with_full_scores()).unwrap())
+        .collect()
 }
 
 #[test]
@@ -49,10 +59,12 @@ fn same_seed_replays_bitwise() {
         let a = run_scalar(cfg, &refs, &labels, &queries);
         let b = run_scalar(cfg, &refs, &labels, &queries);
         for (x, y) in a.iter().zip(&b) {
-            assert_eq!(x.winner, y.winner, "{shards} shards");
-            assert_eq!(x.label, y.label);
+            assert_eq!(x.hits, y.hits, "{shards} shards");
             assert_eq!(x.iterations, y.iterations);
-            assert_eq!(x.scores, y.scores, "{shards} shards: seeded replay must be bitwise");
+            assert_eq!(
+                x.full_scores, y.full_scores,
+                "{shards} shards: seeded replay must be bitwise"
+            );
         }
     }
 }
@@ -68,14 +80,14 @@ fn different_seeds_diverge() {
     let any_difference = a
         .iter()
         .zip(&b)
-        .any(|(x, y)| x.scores != y.scores);
+        .any(|(x, y)| x.full_scores != y.full_scores);
     assert!(any_difference, "distinct seeds must sample distinct device noise");
 }
 
 #[test]
 fn search_batch_matches_scalar_on_seeded_engine() {
     // Acceptance criterion: `search_batch` with ≥2 shards returns
-    // identical top-1 labels to repeated scalar `search` calls on the
+    // identical top-1 hits to repeated scalar `search` calls on the
     // same seeded engine (and, stronger, bit-identical score vectors).
     for shards in [2usize, 4] {
         let (embs, labels) = clustered(13, 8, 3);
@@ -85,14 +97,17 @@ fn search_batch_matches_scalar_on_seeded_engine() {
             .with_seed(0xBEEF)
             .with_shards(shards);
         let scalar = run_scalar(cfg, &refs, &labels, &queries);
-        let mut engine = SearchEngine::new(cfg, DIMS, refs.len());
-        engine.program_support(&refs, &labels);
-        let batched = engine.search_batch(&queries);
+        let mut engine = SearchEngine::new(cfg, DIMS, refs.len()).unwrap();
+        engine.program_support(&refs, &labels).unwrap();
+        let requests: Vec<SearchRequest> = queries
+            .iter()
+            .map(|&q| SearchRequest::new(q).with_full_scores())
+            .collect();
+        let batched = engine.search_batch(&requests).unwrap();
         assert_eq!(scalar.len(), batched.len());
         for (s, b) in scalar.iter().zip(&batched) {
-            assert_eq!(s.label, b.label, "{shards} shards: top-1 label");
-            assert_eq!(s.winner, b.winner);
-            assert_eq!(s.scores, b.scores, "{shards} shards: bit-identical scores");
+            assert_eq!(s.hits, b.hits, "{shards} shards: top-1 hit");
+            assert_eq!(s.full_scores, b.full_scores, "{shards} shards: bit-identical scores");
         }
     }
 }
@@ -109,8 +124,8 @@ fn sharded_matches_unsharded_on_ideal_device() {
     for shards in [2usize, 4, 8] {
         let got = run_scalar(base.with_shards(shards), &refs, &labels, &queries);
         for (r, g) in reference.iter().zip(&got) {
-            assert_eq!(r.scores, g.scores, "{shards} shards vs 1 shard (ideal)");
-            assert_eq!(r.winner, g.winner);
+            assert_eq!(r.full_scores, g.full_scores, "{shards} shards vs 1 shard (ideal)");
+            assert_eq!(r.hits, g.hits);
         }
     }
 }
@@ -124,10 +139,46 @@ fn svss_mode_is_deterministic_too() {
         .with_seed(0x51D5)
         .with_shards(2);
     let a = run_scalar(cfg, &refs, &labels, &queries);
-    let mut engine = SearchEngine::new(cfg, DIMS, refs.len());
-    engine.program_support(&refs, &labels);
-    let b = engine.search_batch(&queries);
+    let mut engine = SearchEngine::new(cfg, DIMS, refs.len()).unwrap();
+    engine.program_support(&refs, &labels).unwrap();
+    let requests: Vec<SearchRequest> = queries
+        .iter()
+        .map(|&q| SearchRequest::new(q).with_full_scores())
+        .collect();
+    let b = engine.search_batch(&requests).unwrap();
     for (x, y) in a.iter().zip(&b) {
-        assert_eq!(x.scores, y.scores, "SVSS batched vs scalar");
+        assert_eq!(x.full_scores, y.full_scores, "SVSS batched vs scalar");
+    }
+}
+
+#[test]
+fn mode_override_matches_natively_configured_engine() {
+    // A per-request SVSS override on an AVSS-configured engine must be
+    // bit-identical to the same seeded engine configured for SVSS:
+    // support programming is mode-independent, so only the query path
+    // (and iteration count) may differ.
+    let (embs, labels) = clustered(16, 5, 3);
+    let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
+    let queries: Vec<&[f32]> = refs.iter().take(5).copied().collect();
+    let avss_cfg = EngineConfig::new(Encoding::Mtmc, 8, SearchMode::Avss, 3.0)
+        .with_seed(0x0DE5)
+        .with_shards(2);
+    let mut svss_cfg = avss_cfg;
+    svss_cfg.mode = SearchMode::Svss;
+
+    let native = run_scalar(svss_cfg, &refs, &labels, &queries);
+    let mut overridden = SearchEngine::new(avss_cfg, DIMS, refs.len()).unwrap();
+    overridden.program_support(&refs, &labels).unwrap();
+    for (q, want) in queries.iter().zip(&native) {
+        let got = overridden
+            .search(
+                &SearchRequest::new(q)
+                    .with_mode(SearchMode::Svss)
+                    .with_full_scores(),
+            )
+            .unwrap();
+        assert_eq!(got.full_scores, want.full_scores, "override vs native SVSS");
+        assert_eq!(got.hits, want.hits);
+        assert_eq!(got.iterations, want.iterations);
     }
 }

@@ -2,7 +2,7 @@
 //! coordinator, and the full image → PJRT controller → MCAM pipeline.
 //! Skips when artifacts are absent.
 
-use mcamvss::coordinator::{Coordinator, CoordinatorConfig, Payload};
+use mcamvss::coordinator::{CoordinatorConfig, Payload, Server};
 use mcamvss::device::variation::VariationModel;
 use mcamvss::encoding::Encoding;
 use mcamvss::experiments::{run_mcam_eval, run_software_baseline, EpisodeSettings};
@@ -10,7 +10,7 @@ use mcamvss::fsl::sample_episode;
 use mcamvss::fsl::store::ArtifactStore;
 use mcamvss::runtime::{image_slice, Runtime};
 use mcamvss::search::engine::{EngineConfig, SearchEngine};
-use mcamvss::search::SearchMode;
+use mcamvss::search::{SearchMode, SearchRequest};
 use mcamvss::testutil::Rng;
 use std::sync::Arc;
 
@@ -68,7 +68,7 @@ fn coordinator_serves_episode_with_correct_labels() {
     let support: Vec<&[f32]> = ep.support.iter().map(|&(r, _)| ds.embedding(r)).collect();
     let labels: Vec<u32> = ep.support.iter().map(|&(_, l)| l).collect();
 
-    let coord = Coordinator::start(
+    let server = Server::start(
         CoordinatorConfig { workers: 2, ..Default::default() },
         EngineConfig::new(Encoding::Mtmc, 8, SearchMode::Avss, clip),
         ds.dims,
@@ -80,15 +80,15 @@ fn coordinator_serves_episode_with_correct_labels() {
     let mut truth = Vec::new();
     for &(row, label) in &ep.queries {
         truth.push(label);
-        coord.submit(Payload::Embedding(ds.embedding(row).to_vec()));
+        server.submit(Payload::Embedding(ds.embedding(row).to_vec()));
     }
-    let mut responses = coord.shutdown();
+    let mut responses = server.shutdown();
     assert_eq!(responses.len(), ep.queries.len());
     responses.sort_by_key(|r| r.id);
     let correct = responses
         .iter()
         .zip(&truth)
-        .filter(|(r, &t)| r.label == t)
+        .filter(|(r, &t)| r.label() == Some(t))
         .count();
     let acc = correct as f64 / truth.len() as f64;
     assert!(acc > 0.5, "coordinator episode accuracy {acc:.2}");
@@ -130,8 +130,8 @@ fn image_to_prediction_full_stack() {
     let local_labels: Vec<u32> = (0..8).collect();
 
     let cfg = EngineConfig::new(Encoding::Mtmc, 8, SearchMode::Avss, clip).ideal();
-    let mut engine = SearchEngine::new(cfg, dim, 8);
-    engine.program_support(&support, &local_labels);
+    let mut engine = SearchEngine::new(cfg, dim, 8).unwrap();
+    engine.program_support(&support, &local_labels).unwrap();
 
     // queries: second sample of each chosen class
     let mut correct = 0;
@@ -146,7 +146,8 @@ fn image_to_prediction_full_stack() {
         let q_emb = controller
             .embed_padded(image_slice(&images, qidx).unwrap(), 1)
             .unwrap();
-        if engine.search(&q_emb).label == local as u32 {
+        let response = engine.search(&SearchRequest::new(&q_emb)).unwrap();
+        if response.top().map(|h| h.label) == Some(local as u32) {
             correct += 1;
         }
     }

@@ -197,8 +197,11 @@ fn engine_scores_match_python_pipeline() {
     // which replays the f32 series accumulation of the rust hot path).
     // Scores are integer vote counts; ±1 absorbs any last-ulp libm
     // difference between numpy and rust at a threshold comparison.
+    //
+    // The dense scores ride the API's opt-in `full_scores`, and
+    // `hits[0]` must carry the winner the legacy `SearchResult` exposed.
     use mcamvss::search::engine::{EngineConfig, SearchEngine};
-    use mcamvss::search::SearchMode;
+    use mcamvss::search::{SearchMode, SearchRequest};
 
     let doc = fixtures();
     let mut checked = 0;
@@ -227,27 +230,38 @@ fn engine_scores_match_python_pipeline() {
         let cfg = EngineConfig::new(Encoding::Mtmc, cl, SearchMode::Avss, clip)
             .ideal()
             .with_shards(2);
-        let mut engine = SearchEngine::new(cfg, dims, refs.len());
-        engine.program_support(&refs, &labels);
-        let result = engine.search(&query);
-        assert_eq!(result.scores.len(), expected.len());
-        for (v, (&got, &want)) in result.scores.iter().zip(&expected).enumerate() {
+        let mut engine = SearchEngine::new(cfg, dims, refs.len()).unwrap();
+        engine.program_support(&refs, &labels).unwrap();
+        let response = engine
+            .search(&SearchRequest::new(&query).with_full_scores())
+            .unwrap();
+        let scores = response.full_scores.as_ref().unwrap();
+        assert_eq!(scores.len(), expected.len());
+        for (v, (&got, &want)) in scores.iter().zip(&expected).enumerate() {
             assert!(
                 (got - want).abs() <= 1.0,
                 "mtmc cl={cl} support {v}: rust votes {got} vs python {want}"
             );
         }
-        // the python-side winner must stay vote-maximal on the rust side
+        // hits[0] is the winner: label matches, score is maximal, and the
+        // python-side winner stays vote-maximal on the rust side
+        let winner = response.top().unwrap();
+        assert_eq!(winner.label, labels[winner.index]);
+        assert_eq!(winner.score, scores[winner.index], "hit carries its slot's score");
+        assert!(
+            scores.iter().all(|&s| s <= winner.score),
+            "mtmc cl={cl}: hits[0] must be score-maximal"
+        );
         let py_winner = expected
             .iter()
             .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .max_by(|a, b| a.1.total_cmp(b.1))
             .map(|(i, _)| i)
             .unwrap();
         assert!(
-            expected[result.winner] >= expected[py_winner] - 1.0,
+            expected[winner.index] >= expected[py_winner] - 1.0,
             "mtmc cl={cl}: rust winner {} not vote-maximal in python scores",
-            result.winner
+            winner.index
         );
         checked += 1;
     }
