@@ -19,9 +19,27 @@ every sampled value is far from a half-step boundary, so both rounding
 modes agree on the committed fixture; regeneration with a different seed
 is safe as long as this assertion keeps passing.
 
+Additionally exports the **HAT parity fixture**
+(``rust/tests/fixtures/hat_parity.json``) consumed by
+``rust/tests/test_hat_parity.rs``: a tiny deterministic image dataset,
+jax-initialised controller/classifier parameters, a pretrain loss trace
+with full step-0 gradients, one meta-training step per variant
+(``std`` / ``hat_svss`` / ``hat_avss``, noise-free) with full gradients
+and post-step parameters, an ``embed_all`` output block, and an Adam
+trajectory on synthetic gradients.
+
+HAT determinism note: the rust port recomputes every f32 forward with a
+different accumulation order, so any *discrete* decision (relu sign,
+max-pool argmax, quantizer rounding, SA threshold compare, winner shot
+of a class) could flip near its boundary. The generator therefore
+re-runs each fixture forward with instrumentation and retries over a
+``salt`` until every decision clears a documented margin
+(``_HAT_*_MARGIN`` below, mirrored in DESIGN.md §HAT); the committed
+fixture is then comparable under smooth f32 tolerances only.
+
 Usage::
 
-    python python/compile/dump_fixtures.py [out.json]
+    python python/compile/dump_fixtures.py [out.json] [hat_out.json]
 """
 
 from __future__ import annotations
@@ -195,15 +213,406 @@ def device_case(rng: np.random.Generator) -> dict:
     }
 
 
+# ---------------------------------------------------------------------------
+# HAT parity fixture (rust/src/hat — ISSUE 4)
+# ---------------------------------------------------------------------------
+
+# Tiny-but-real shapes: 2-block Conv4 on 8x8 images, 6 classes (first 4
+# are the pretrain split), MTMC CL=4 (13 support levels). 24-d
+# embeddings fill one NAND string exactly — with narrower embeddings the
+# match-state padding cells saturate every vote total and the AVSS
+# gradients collapse into f32 noise (meaningless to compare). One shot
+# per class keeps the max-over-shots routing tie-free (distinct-encoding
+# vote ties are unguardable: python breaks them by sub-vote f32 noise,
+# rust by exact integers); the even-split tie convention is pinned by a
+# dedicated rust unit test instead.
+HAT_HW = 8
+HAT_CHANNELS = 4
+HAT_BLOCKS = 2
+HAT_EMBED = 24
+HAT_CLASSES = 6
+HAT_TRAIN_CLASSES = 4
+HAT_PER_CLASS = 5
+HAT_PRETRAIN_STEPS = 6
+HAT_PRETRAIN_BS = 8
+HAT_LR = 1e-3
+HAT_META_LR = 2e-4
+HAT_CL = 4
+HAT_N_WAY = 3
+HAT_K_SHOT = 1
+HAT_N_QUERY = 2
+HAT_VARIANTS = ("std", "hat_svss", "hat_avss")
+
+# Boundary margins (documented in DESIGN.md §HAT). Cross-implementation
+# f32 drift from accumulation-order differences is ~1e-7 absolute on the
+# O(1) values involved, so these margins guarantee identical discrete
+# decisions in the rust replay.
+_HAT_RELU_MARGIN = 3e-6  # |pre-relu| of every conv/head output
+_HAT_POOL_MARGIN = 3e-6  # top-two separation inside each 2x2 pool window
+_HAT_QUANT_MARGIN = 1e-3  # distance of value/step from a half-integer
+_HAT_CLIP_MARGIN = 3e-6  # |x - clip|: the fake-quant STE multiplier flips at clip
+_HAT_SA_LN_MARGIN = 1e-5  # |ln(current) - ln(threshold)|
+_HAT_NORM_MARGIN = 1e-3  # l2 norms fed into l2_normalize (std variant)
+_HAT_STD_MARGIN = 1e-2  # per-query logit std-dev (hat standardization)
+
+
+class GuardViolation(AssertionError):
+    """A fixture forward came too close to a discrete decision boundary."""
+
+
+def _hat_dataset(salt: int):
+    """Deterministic smooth-texture classes, pixel values in [0.05, 1]."""
+    rng = np.random.default_rng(7000 + salt)
+    n = HAT_CLASSES * HAT_PER_CLASS
+    yy, xx = np.meshgrid(np.arange(HAT_HW), np.arange(HAT_HW), indexing="ij")
+    imgs = np.empty((n, HAT_HW, HAT_HW, 1), np.float32)
+    labels = np.repeat(np.arange(HAT_CLASSES, dtype=np.int32), HAT_PER_CLASS)
+    for c in range(HAT_CLASSES):
+        freq = rng.uniform(0.5, 2.5, size=(3, 2))
+        phase = rng.uniform(0.0, 2 * np.pi, 3)
+        amp = rng.uniform(0.5, 1.0, 3)
+        base = np.zeros((HAT_HW, HAT_HW))
+        for m in range(3):
+            base += amp[m] * np.sin(
+                2 * np.pi * (freq[m, 0] * xx + freq[m, 1] * yy) / HAT_HW + phase[m]
+            )
+        base = (base - base.min()) / (base.max() - base.min() + 1e-9)
+        for s in range(HAT_PER_CLASS):
+            img = np.clip(0.8 * base + rng.normal(0.0, 0.08, (HAT_HW, HAT_HW)), 0.0, 1.0)
+            imgs[c * HAT_PER_CLASS + s, :, :, 0] = (0.05 + 0.95 * img).astype(np.float32)
+    return imgs, labels
+
+
+def _guard_relu(x: np.ndarray, where: str) -> None:
+    closest = float(np.abs(x).min())
+    if closest <= _HAT_RELU_MARGIN:
+        raise GuardViolation(f"{where}: pre-relu value {closest:.2e} within margin")
+
+
+def _guard_pool(x: np.ndarray, where: str) -> None:
+    b, h, w, c = x.shape
+    win = x[:, : h - h % 2, : w - w % 2, :].reshape(b, h // 2, 2, w // 2, 2, c)
+    win = win.transpose(0, 1, 3, 5, 2, 4).reshape(-1, 4)
+    top2 = np.sort(win, axis=1)[:, -2:]
+    sep = top2[:, 1] - top2[:, 0]
+    risky = (top2[:, 1] > 0.0) & (sep <= _HAT_POOL_MARGIN)
+    if bool(risky.any()):
+        raise GuardViolation(f"{where}: pool window tie within margin")
+
+
+def _hat_forward_guarded(params, x, cfg, where: str):
+    """Eager controller forward with boundary guards; returns embeddings."""
+    import jax
+
+    from compile import model
+
+    for b in range(cfg.n_blocks):
+        x = model._conv2d_same(x, params[f"conv{b}_w"], params[f"conv{b}_b"])
+        _guard_relu(np.asarray(x), f"{where}/conv{b}")
+        x = jax.nn.relu(x)
+        _guard_pool(np.asarray(x), f"{where}/conv{b}")
+        x = model._maxpool2(x)
+    x = x.reshape((x.shape[0], -1))
+    x = x @ params["head_w"] + params["head_b"]
+    _guard_relu(np.asarray(x), f"{where}/head")
+    return np.asarray(jax.nn.relu(x))
+
+
+def _guard_quant(values: np.ndarray, levels: int, clip: float, where: str) -> None:
+    """Distance of clipped/step from every rounding boundary (x.5 steps),
+    and of every raw value from the clip point itself (the fake-quant STE
+    multiplier is 1 below, 0.5 at, and 0 above the clip — a value within
+    f32 noise of it would resolve differently across implementations;
+    the x == 0 side is already covered by the head pre-relu margin)."""
+    step = clip / (levels - 1)
+    t = np.clip(values.astype(np.float64), 0.0, clip) / step
+    frac = np.abs((t % 1.0) - 0.5)
+    if float(frac.min()) <= _HAT_QUANT_MARGIN:
+        raise GuardViolation(f"{where}: quantizer half-step margin {frac.min():.2e}")
+    clip_dist = float(np.abs(values.astype(np.float64) - clip).min())
+    if clip_dist <= _HAT_CLIP_MARGIN:
+        raise GuardViolation(f"{where}: clip-boundary margin {clip_dist:.2e}")
+
+
+def _hat_vote_guard(q_emb: np.ndarray, s_emb: np.ndarray, asymmetric: bool, where: str):
+    """f64 mirror of the hard (noise-free) HAT forward.
+
+    Checks quantizer margins, SA ladder ln-margins, and that the winning
+    shot of every (query, class) pair is separated by >= 1 whole vote, so
+    the rust max-over-shots routes gradients identically.
+    """
+    from compile.kernels.mcam_search import DEFAULT_PARAMS
+    from compile.quant import CLIP_SIGMA
+
+    all_emb = np.concatenate([q_emb, s_emb], axis=0).astype(np.float64)
+    clip = float(all_emb.mean() + CLIP_SIGMA * all_emb.std() + 1e-6)
+    levels = 3 * HAT_CL + 1
+    step = clip / (levels - 1)
+    _guard_quant(s_emb, levels, clip, f"{where}/support")
+    s_q = np.rint(np.clip(s_emb.astype(np.float64), 0, clip) / step).astype(np.int64)
+    if asymmetric:
+        _guard_quant(q_emb, 4, clip, f"{where}/query")
+        q_q = np.rint(np.clip(q_emb.astype(np.float64), 0, clip) / (clip / 3.0)).astype(np.int64)
+        q_words = q_q[:, :, None]  # (Q, d, 1) broadcasts over CL columns
+    else:
+        _guard_quant(q_emb, levels, clip, f"{where}/query")
+        q_sym = np.rint(np.clip(q_emb.astype(np.float64), 0, clip) / step).astype(np.int64)
+        q_words = enc.encode(q_sym, "mtmc", HAT_CL)
+    s_words = enc.encode(s_q, "mtmc", HAT_CL)  # (S, d, CL)
+
+    d = s_words.shape[1]
+    pad = (-d) % CELLS_PER_STRING
+    q_pad = np.pad(q_words, ((0, 0), (0, pad), (0, 0)))
+    s_pad = np.pad(s_words, ((0, 0), (0, pad), (0, 0)))
+    groups = (d + pad) // CELLS_PER_STRING
+    qg = q_pad.reshape(q_pad.shape[0], groups, CELLS_PER_STRING, q_pad.shape[-1])
+    sg = s_pad.reshape(s_pad.shape[0], groups, CELLS_PER_STRING, HAT_CL)
+    mismatch = np.abs(qg[:, None] - sg[None])  # (Q, S, G, 24, CL)
+    p = DEFAULT_PARAMS
+    series = (p.r0 * np.power(float(p.alpha), mismatch)).sum(axis=-2)
+    current = p.v_bl / series  # (Q, S, G, CL)
+
+    i_max = p.v_bl / (CELLS_PER_STRING * p.r0)
+    i_min = p.v_bl / (CELLS_PER_STRING * p.r0 * p.alpha**3)
+    lo, hi = np.log(i_min), np.log(i_max)
+    thr = np.exp(lo + (hi - lo) * (np.arange(16) + 0.5) / 16.0)
+    ln_margin = np.abs(np.log(current)[..., None] - np.log(thr)[None, None, None, None, :])
+    if float(ln_margin.min()) <= _HAT_SA_LN_MARGIN:
+        raise GuardViolation(f"{where}: SA ladder ln-margin {ln_margin.min():.2e}")
+    votes = (current[..., None] > thr).sum(axis=(-3, -2, -1))  # (Q, S) ints
+
+    # Max-over-shots routing: the winning shot(s) of every (query, class)
+    # pair must either beat the runner-up by a whole vote, or be encoded
+    # *identically* (bit-identical forward values on both sides, so jax
+    # and rust both split the max gradient evenly across the tie).
+    onehot = np.eye(HAT_N_WAY, dtype=bool)[
+        np.repeat(np.arange(HAT_N_WAY), HAT_K_SHOT)
+    ]  # (S, n_way)
+    for q in range(votes.shape[0]):
+        for c in range(HAT_N_WAY):
+            rows = np.flatnonzero(onehot[:, c])
+            top = votes[q, rows].max()
+            winners = [r for r in rows if votes[q, r] == top]
+            for r in winners[1:]:
+                if not np.array_equal(s_words[winners[0]], s_words[r]):
+                    raise GuardViolation(
+                        f"{where}: query {q} class {c} shot-vote tie across "
+                        "distinct encodings"
+                    )
+
+
+def _f32(x) -> float:
+    """Exact f32 transport: shortest repr of the f64 equal to the f32."""
+    return float(np.float32(x))
+
+
+def _f32_list(arr) -> list:
+    return [_f32(v) for v in np.asarray(arr, dtype=np.float32).reshape(-1)]
+
+
+def _tensor(arr) -> dict:
+    arr = np.asarray(arr, dtype=np.float32)
+    return {"dims": list(arr.shape), "data": _f32_list(arr)}
+
+
+def _params_doc(params) -> dict:
+    return {k: _tensor(params[k]) for k in sorted(params)}
+
+
+def _hat_attempt(salt: int) -> dict:
+    import jax
+    import jax.numpy as jnp
+
+    from compile import model
+    from compile.mcam_sim import SimConfig, episode_logits
+    from compile.model import ControllerConfig
+
+    cfg = ControllerConfig("hatfix", HAT_HW, HAT_CHANNELS, HAT_BLOCKS, HAT_EMBED)
+    images, labels = _hat_dataset(salt)
+    k_ctrl, k_head = jax.random.split(jax.random.PRNGKey(1234 + salt))
+    ctrl0 = model.init_controller(cfg, k_ctrl)
+    head0 = model.init_classifier_head(cfg, HAT_TRAIN_CLASSES, k_head)
+
+    doc: dict = {
+        "salt": salt,
+        "settings": {
+            "image_hw": HAT_HW,
+            "channels": HAT_CHANNELS,
+            "n_blocks": HAT_BLOCKS,
+            "embed_dim": HAT_EMBED,
+            "n_classes": HAT_CLASSES,
+            "train_classes": HAT_TRAIN_CLASSES,
+            "per_class": HAT_PER_CLASS,
+            "pretrain_steps": HAT_PRETRAIN_STEPS,
+            "pretrain_bs": HAT_PRETRAIN_BS,
+            "lr": HAT_LR,
+            "meta_lr": HAT_META_LR,
+            "cl": HAT_CL,
+            "n_way": HAT_N_WAY,
+            "k_shot": HAT_K_SHOT,
+            "n_query": HAT_N_QUERY,
+            "n_thresholds": 16,
+            "sa_beta": 40.0,
+        },
+        "images": _tensor(images[..., 0]),
+        "labels": [int(v) for v in labels],
+        "init_ctrl": _params_doc(ctrl0),
+        "init_head": _params_doc(head0),
+    }
+
+    # --- stage 1: pretrain with a deterministic round-robin batch schedule
+    n_train = HAT_TRAIN_CLASSES * HAT_PER_CLASS
+    train_x, train_y = images[:n_train], labels[:n_train]
+
+    def pre_loss(p, x, y):
+        emb = model.apply_controller(p, x, cfg)
+        logits = emb @ p["cls_w"] + p["cls_b"]
+        logp = jax.nn.log_softmax(logits)
+        return -logp[jnp.arange(y.shape[0]), y].mean()
+
+    bundle = dict(ctrl0)
+    bundle.update(head0)
+    state = model.adam_init(bundle)
+    losses = []
+    for step in range(HAT_PRETRAIN_STEPS):
+        idx = [(step * HAT_PRETRAIN_BS + j) % n_train for j in range(HAT_PRETRAIN_BS)]
+        bx, by = jnp.asarray(train_x[idx]), jnp.asarray(train_y[idx])
+        _hat_forward_guarded(bundle, bx, cfg, f"pretrain step {step}")
+        loss, grads = jax.value_and_grad(pre_loss)(bundle, bx, by)
+        if step == 0:
+            doc["pretrain_grads0"] = _params_doc(grads)
+        bundle, state = model.adam_update(bundle, grads, state, lr=HAT_LR)
+        if step == 0:
+            doc["pretrain_params1"] = _params_doc(bundle)
+        losses.append(_f32(loss))
+    doc["pretrain_losses"] = losses
+    doc["pretrain_params_final"] = _params_doc(bundle)
+
+    # --- stage 2: one meta step per variant from the *initial* controller
+    sup_rows = [c * HAT_PER_CLASS + s for c in range(HAT_N_WAY) for s in range(HAT_K_SHOT)]
+    qry_rows = [
+        c * HAT_PER_CLASS + HAT_K_SHOT + s
+        for c in range(HAT_N_WAY)
+        for s in range(HAT_N_QUERY)
+    ]
+    sx, qx = jnp.asarray(images[sup_rows]), jnp.asarray(images[qry_rows])
+    sy = np.repeat(np.arange(HAT_N_WAY), HAT_K_SHOT)
+    qy = jnp.asarray(np.repeat(np.arange(HAT_N_WAY), HAT_N_QUERY).astype(np.int32))
+    onehot = jnp.asarray(np.eye(HAT_N_WAY, dtype=np.float32)[sy])
+
+    def loss_std(p):
+        s_emb = model.l2_normalize(model.apply_controller(p, sx, cfg))
+        q_emb = model.l2_normalize(model.apply_controller(p, qx, cfg))
+        proto = (onehot.T @ s_emb) / onehot.sum(axis=0)[:, None]
+        logits = 10.0 * q_emb @ model.l2_normalize(proto).T
+        logp = jax.nn.log_softmax(logits)
+        return -logp[jnp.arange(qy.shape[0]), qy].mean()
+
+    def make_loss_hat(asymmetric):
+        sim_cfg = SimConfig(cl=HAT_CL, asymmetric=asymmetric, noise_sigma=0.0)
+
+        def loss_hat(p):
+            s_emb = model.apply_controller(p, sx, cfg)
+            q_emb = model.apply_controller(p, qx, cfg)
+            logits = episode_logits(q_emb, s_emb, onehot, sim_cfg, None)
+            mu = logits.mean(axis=1, keepdims=True)
+            sd = logits.std(axis=1, keepdims=True) + 1e-6
+            logits = 3.0 * (logits - mu) / sd
+            logp = jax.nn.log_softmax(logits)
+            return -logp[jnp.arange(qy.shape[0]), qy].mean()
+
+        return loss_hat
+
+    doc["meta"] = {}
+    for variant in HAT_VARIANTS:
+        s_emb = _hat_forward_guarded(ctrl0, sx, cfg, f"meta {variant}/support")
+        q_emb = _hat_forward_guarded(ctrl0, qx, cfg, f"meta {variant}/query")
+        if variant == "std":
+            loss_fn = loss_std
+            norms = np.linalg.norm(np.concatenate([s_emb, q_emb]), axis=1)
+            s_n = s_emb / (np.linalg.norm(s_emb, axis=1, keepdims=True) + 1e-8)
+            oh = np.asarray(onehot)
+            proto = (oh.T @ s_n) / oh.sum(0)[:, None]
+            pnorms = np.linalg.norm(proto, axis=1)
+            if float(min(norms.min(), pnorms.min())) <= _HAT_NORM_MARGIN:
+                raise GuardViolation(f"meta {variant}: embedding/proto norm margin")
+        else:
+            asymmetric = variant == "hat_avss"
+            loss_fn = make_loss_hat(asymmetric)
+            _hat_vote_guard(q_emb, s_emb, asymmetric, f"meta {variant}")
+        loss, grads = jax.value_and_grad(loss_fn)(ctrl0)
+        if variant != "std":
+            # standardization stays responsive: per-query logit std-dev
+            raw = episode_logits(
+                jnp.asarray(q_emb),
+                jnp.asarray(s_emb),
+                onehot,
+                SimConfig(cl=HAT_CL, asymmetric=variant == "hat_avss", noise_sigma=0.0),
+                None,
+            )
+            if float(np.asarray(raw).std(axis=1).min()) <= _HAT_STD_MARGIN:
+                raise GuardViolation(f"meta {variant}: logit std-dev margin")
+        stepped, _ = model.adam_update(dict(ctrl0), grads, model.adam_init(dict(ctrl0)), lr=HAT_META_LR)
+        # The f32 clip jax computes inside episode_logits: the rust replay
+        # injects it (SimConfig clip override) so every quantizer rounding
+        # and |q-s| sign decision happens on identical f32 bits.
+        from compile.quant import CLIP_SIGMA
+
+        all_emb = jnp.concatenate(
+            [model.apply_controller(ctrl0, qx, cfg), model.apply_controller(ctrl0, sx, cfg)],
+            axis=0,
+        )
+        clip_f32 = _f32(jnp.mean(all_emb) + CLIP_SIGMA * jnp.std(all_emb) + 1e-6)
+        doc["meta"][variant] = {
+            "loss": _f32(loss),
+            "clip": clip_f32,
+            "grads": _params_doc(grads),
+            "params1": _params_doc(stepped),
+        }
+
+    # --- embed_all block under the initial controller
+    emb_all = _hat_forward_guarded(ctrl0, jnp.asarray(images), cfg, "embed_all")
+    doc["embed_all"] = _tensor(emb_all)
+
+    # --- Adam trajectory on synthetic gradients (pins bias correction/eps)
+    p = {"w": jnp.asarray(np.float32([0.5, -1.25, 2.0, 1e-4, -3.0]))}
+    st = model.adam_init(p)
+    trace = []
+    for t in range(3):
+        g = {"w": jnp.asarray(np.float32([np.sin(1.0 + t + i) * 0.3 for i in range(5)]))}
+        p, st = model.adam_update(p, g, st, lr=1e-3)
+        trace.append(
+            {
+                "grad": _f32_list(g["w"]),
+                "params": _f32_list(p["w"]),
+                "m": _f32_list(st["m"]["w"]),
+                "v": _f32_list(st["v"]["w"]),
+            }
+        )
+    doc["adam_trace"] = trace
+    return doc
+
+
+def hat_fixture(max_attempts: int = 200) -> dict:
+    """First salt whose fixture clears every decision-boundary guard."""
+    last = None
+    for salt in range(max_attempts):
+        try:
+            return _hat_attempt(salt)
+        except GuardViolation as exc:
+            last = exc
+    raise AssertionError(f"no HAT fixture salt passed the guards: {last}")
+
+
 def main() -> None:
-    default_out = os.path.join(
+    fixtures_dir = os.path.join(
         os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__)))),
         "rust",
         "tests",
         "fixtures",
-        "golden_parity.json",
     )
-    out_path = sys.argv[1] if len(sys.argv) > 1 else default_out
+    out_path = sys.argv[1] if len(sys.argv) > 1 else os.path.join(fixtures_dir, "golden_parity.json")
+    hat_path = sys.argv[2] if len(sys.argv) > 2 else os.path.join(fixtures_dir, "hat_parity.json")
     rng = np.random.default_rng(SEED)
     doc = {
         "seed": SEED,
@@ -215,6 +624,13 @@ def main() -> None:
         json.dump(doc, fh, indent=1)
         fh.write("\n")
     print(f"wrote {out_path} ({len(doc['cases'])} encoding cases)")
+
+    hat_doc = hat_fixture()
+    os.makedirs(os.path.dirname(hat_path), exist_ok=True)
+    with open(hat_path, "w") as fh:
+        json.dump(hat_doc, fh, indent=1)
+        fh.write("\n")
+    print(f"wrote {hat_path} (salt {hat_doc['salt']})")
 
 
 if __name__ == "__main__":

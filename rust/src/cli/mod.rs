@@ -17,7 +17,8 @@ pub struct Args {
 const VALUE_KEYS: &[&str] = &[
     "config", "dataset", "variant", "encoding", "cl", "mode", "n-way", "k-shot",
     "n-query", "episodes", "workers", "shards", "requests", "seed", "out",
-    "artifacts", "filter", "batch", "top-k", "backend", "metric",
+    "artifacts", "filter", "batch", "top-k", "backend", "metric", "steps",
+    "meta-episodes",
 ];
 
 impl Args {
@@ -108,5 +109,14 @@ mod tests {
         assert_eq!(args.opt_usize("top-k").unwrap(), Some(5));
         assert_eq!(args.opt("backend"), Some("float"));
         assert_eq!(args.opt("metric"), Some("l2"));
+    }
+
+    #[test]
+    fn training_keys_take_values() {
+        let args = parse(&["train", "--steps", "12", "--meta-episodes", "3", "--smoke"]);
+        assert_eq!(args.command.as_deref(), Some("train"));
+        assert_eq!(args.opt_usize("steps").unwrap(), Some(12));
+        assert_eq!(args.opt_usize("meta-episodes").unwrap(), Some(3));
+        assert!(args.flag("smoke"));
     }
 }

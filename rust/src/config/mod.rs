@@ -12,6 +12,103 @@ use crate::search::SearchMode;
 use anyhow::{bail, Context, Result};
 use std::path::Path;
 
+/// Budgeted hyper-parameters for one HAT training run (mirror of the
+/// python `TrainSettings` in `compile/hat.py`), consumed by
+/// [`crate::hat`]. Presets follow the python module; `synth` targets
+/// the rust-native dataset of `hat::data`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainSettings {
+    pub pretrain_steps: usize,
+    pub pretrain_bs: usize,
+    pub meta_episodes: usize,
+    pub n_way: usize,
+    pub k_shot: usize,
+    pub n_query: usize,
+    /// Support code word length trained against (support levels 3cl+1).
+    pub hat_cl: usize,
+    pub lr: f64,
+    pub meta_lr: f64,
+    /// Lognormal device-noise sigma injected by the simulated MCAM.
+    pub noise_sigma: f64,
+}
+
+impl TrainSettings {
+    /// Omniglot budget (python `OMNIGLOT_TRAIN`).
+    pub fn omniglot() -> TrainSettings {
+        TrainSettings {
+            pretrain_steps: 600,
+            pretrain_bs: 64,
+            meta_episodes: 120,
+            n_way: 20,
+            k_shot: 5,
+            n_query: 5,
+            hat_cl: 8,
+            lr: 1e-3,
+            meta_lr: 2e-4,
+            noise_sigma: 0.15,
+        }
+    }
+
+    /// CUB budget (python `CUB_TRAIN`).
+    pub fn cub() -> TrainSettings {
+        TrainSettings {
+            pretrain_steps: 400,
+            pretrain_bs: 64,
+            meta_episodes: 80,
+            n_way: 10,
+            k_shot: 5,
+            n_query: 4,
+            hat_cl: 8,
+            lr: 1e-3,
+            meta_lr: 2e-4,
+            noise_sigma: 0.15,
+        }
+    }
+
+    /// Rust-native synthetic dataset budget (the `train` CLI default).
+    pub fn synth() -> TrainSettings {
+        TrainSettings {
+            pretrain_steps: 80,
+            pretrain_bs: 16,
+            meta_episodes: 24,
+            n_way: 4,
+            k_shot: 2,
+            n_query: 2,
+            hat_cl: 4,
+            lr: 1e-3,
+            meta_lr: 2e-4,
+            noise_sigma: 0.15,
+        }
+    }
+
+    /// Shrink to CI-smoke scale (keeps every stage >= 2 steps so loss
+    /// traces remain meaningful).
+    pub fn smoke(mut self) -> TrainSettings {
+        self.pretrain_steps = self.pretrain_steps.min(40);
+        self.meta_episodes = self.meta_episodes.min(2);
+        self.n_way = self.n_way.min(4);
+        self.k_shot = self.k_shot.min(2);
+        self.n_query = self.n_query.min(2);
+        self
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.pretrain_steps == 0 || self.pretrain_bs == 0 || self.meta_episodes == 0 {
+            bail!("training budget must be positive");
+        }
+        if self.n_way == 0 || self.k_shot == 0 || self.n_query == 0 {
+            bail!("training episode shape must be positive");
+        }
+        if self.hat_cl == 0 {
+            bail!("hat_cl must be >= 1");
+        }
+        if self.noise_sigma < 0.0 {
+            bail!("noise_sigma must be >= 0");
+        }
+        Ok(())
+    }
+}
+
 /// Full system configuration for the `mcamvss` binary.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Config {
@@ -32,6 +129,8 @@ pub struct Config {
     pub ladder_len: usize,
     pub variation: VariationModel,
     pub seed: u64,
+    /// HAT training budget for the `train` subcommand.
+    pub train: TrainSettings,
 }
 
 impl Config {
@@ -54,6 +153,7 @@ impl Config {
             ladder_len: 16,
             variation: VariationModel::nand_default(),
             seed: 0x5EED,
+            train: TrainSettings::omniglot(),
         }
     }
 
@@ -76,6 +176,31 @@ impl Config {
             ladder_len: 16,
             variation: VariationModel::nand_default(),
             seed: 0x5EED,
+            train: TrainSettings::cub(),
+        }
+    }
+
+    /// Rust-native synthetic dataset (trained and exported by the
+    /// `train` subcommand — no python sidecar in the loop).
+    pub fn synth_preset() -> Config {
+        Config {
+            dataset: "synth".into(),
+            variant: "hat_avss".into(),
+            encoding: Encoding::Mtmc,
+            cl: 4,
+            mode: SearchMode::Avss,
+            n_way: 4,
+            k_shot: 2,
+            n_query: 2,
+            episodes: 10,
+            workers: 2,
+            queue_capacity: 256,
+            max_batch: 8,
+            shards: 1,
+            ladder_len: 16,
+            variation: VariationModel::nand_default(),
+            seed: 0x5EED,
+            train: TrainSettings::synth(),
         }
     }
 
@@ -83,7 +208,8 @@ impl Config {
         match name {
             "omniglot" => Ok(Self::omniglot_preset()),
             "cub" => Ok(Self::cub_preset()),
-            other => bail!("unknown preset {other:?} (omniglot | cub)"),
+            "synth" => Ok(Self::synth_preset()),
+            other => bail!("unknown preset {other:?} (omniglot | cub | synth)"),
         }
     }
 
@@ -144,6 +270,36 @@ impl Config {
         if let Some(s) = doc.get_int("system", "seed") {
             cfg.seed = s as u64;
         }
+        if let Some(v) = doc.get_int("train", "pretrain_steps") {
+            cfg.train.pretrain_steps = v as usize;
+        }
+        if let Some(v) = doc.get_int("train", "pretrain_bs") {
+            cfg.train.pretrain_bs = v as usize;
+        }
+        if let Some(v) = doc.get_int("train", "meta_episodes") {
+            cfg.train.meta_episodes = v as usize;
+        }
+        if let Some(v) = doc.get_int("train", "n_way") {
+            cfg.train.n_way = v as usize;
+        }
+        if let Some(v) = doc.get_int("train", "k_shot") {
+            cfg.train.k_shot = v as usize;
+        }
+        if let Some(v) = doc.get_int("train", "n_query") {
+            cfg.train.n_query = v as usize;
+        }
+        if let Some(v) = doc.get_int("train", "hat_cl") {
+            cfg.train.hat_cl = v as usize;
+        }
+        if let Some(v) = doc.get_float("train", "lr") {
+            cfg.train.lr = v;
+        }
+        if let Some(v) = doc.get_float("train", "meta_lr") {
+            cfg.train.meta_lr = v;
+        }
+        if let Some(v) = doc.get_float("train", "noise_sigma") {
+            cfg.train.noise_sigma = v;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -170,6 +326,7 @@ impl Config {
         if self.encoding == Encoding::B4e && self.cl > 9 {
             bail!("B4E beyond CL=9 overflows 4^CL levels (paper sweeps 1..9)");
         }
+        self.train.validate()?;
         Ok(())
     }
 }
@@ -226,5 +383,31 @@ program_sigma = 0.3
         assert!(Config::from_toml(&doc).is_err());
         let doc = TomlDoc::parse("[search]\nencoding = \"b4e\"\ncl = 20\n").unwrap();
         assert!(Config::from_toml(&doc).is_err());
+        let doc = TomlDoc::parse("[train]\nhat_cl = 0\n").unwrap();
+        assert!(Config::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn train_presets_validate_and_override() {
+        TrainSettings::omniglot().validate().unwrap();
+        TrainSettings::cub().validate().unwrap();
+        TrainSettings::synth().validate().unwrap();
+        let smoke = TrainSettings::omniglot().smoke();
+        assert!(smoke.meta_episodes <= 2 && smoke.pretrain_steps <= 40);
+        smoke.validate().unwrap();
+
+        let doc = TomlDoc::parse(
+            "[train]\npretrain_steps = 7\nmeta_episodes = 3\nhat_cl = 2\nnoise_sigma = 0.05\n\
+             n_way = 8\nk_shot = 1\nn_query = 3\n",
+        )
+        .unwrap();
+        let cfg = Config::from_toml(&doc).unwrap();
+        assert_eq!(cfg.train.pretrain_steps, 7);
+        assert_eq!(cfg.train.meta_episodes, 3);
+        assert_eq!(cfg.train.hat_cl, 2);
+        assert_eq!(cfg.train.noise_sigma, 0.05);
+        assert_eq!((cfg.train.n_way, cfg.train.k_shot, cfg.train.n_query), (8, 1, 3));
+        // untouched training fields keep the preset
+        assert_eq!(cfg.train.pretrain_bs, TrainSettings::omniglot().pretrain_bs);
     }
 }

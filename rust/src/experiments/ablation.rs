@@ -11,11 +11,10 @@ use crate::device::faults::FaultModel;
 use crate::device::variation::VariationModel;
 use crate::encoding::Encoding;
 use crate::fsl::store::ArtifactStore;
-use crate::fsl::{evaluate_episode, sample_episode};
+use crate::fsl::{episode_rng, evaluate_episode, sample_episode};
 use crate::metrics::AccuracyMeter;
 use crate::search::engine::{EngineConfig, SearchEngine};
 use crate::search::SearchMode;
-use crate::testutil::Rng;
 use anyhow::Result;
 
 #[derive(Debug, Clone)]
@@ -39,10 +38,11 @@ pub fn ladder_depth(
             .with_seed(settings.seed);
         cfg.ladder_len = depth;
         let mut engine = SearchEngine::new(cfg, ds.dims, settings.n_way * settings.k_shot)?;
-        let mut rng = Rng::new(settings.seed);
         let mut acc = AccuracyMeter::default();
-        for _ in 0..settings.episodes {
-            let ep = sample_episode(&ds, &mut rng, settings.n_way, settings.k_shot, settings.n_query);
+        for ep_idx in 0..settings.episodes {
+            let mut rng = episode_rng(settings.seed, ep_idx as u64);
+            let ep =
+                sample_episode(&ds, &mut rng, settings.n_way, settings.k_shot, settings.n_query);
             let (c, t) = evaluate_episode(&mut engine, &ds, &ep)?;
             acc.push_episode(c, t);
         }
@@ -112,10 +112,11 @@ pub fn fault_injection(
             .with_seed(settings.seed);
         let mut engine = SearchEngine::new(cfg, ds.dims, settings.n_way * settings.k_shot)?;
         engine.set_faults(faults);
-        let mut rng = Rng::new(settings.seed);
         let mut acc = AccuracyMeter::default();
-        for _ in 0..settings.episodes {
-            let ep = sample_episode(&ds, &mut rng, settings.n_way, settings.k_shot, settings.n_query);
+        for ep_idx in 0..settings.episodes {
+            let mut rng = episode_rng(settings.seed, ep_idx as u64);
+            let ep =
+                sample_episode(&ds, &mut rng, settings.n_way, settings.k_shot, settings.n_query);
             let (c, t) = evaluate_episode(&mut engine, &ds, &ep)?;
             acc.push_episode(c, t);
         }

@@ -16,11 +16,10 @@ pub mod table2;
 use crate::device::variation::VariationModel;
 use crate::encoding::Encoding;
 use crate::fsl::store::ArtifactStore;
-use crate::fsl::{evaluate_episode, sample_episode};
+use crate::fsl::{episode_rng, evaluate_episode, sample_episode};
 use crate::metrics::AccuracyMeter;
 use crate::search::engine::{EngineConfig, SearchEngine};
 use crate::search::SearchMode;
-use crate::testutil::Rng;
 use anyhow::Result;
 
 /// Episode settings for an experiment run (paper way/shot settings with a
@@ -90,9 +89,9 @@ pub fn run_mcam_eval(
         .with_seed(settings.seed);
     let mut engine =
         SearchEngine::new(cfg, ds.dims, settings.n_way * settings.k_shot)?;
-    let mut rng = Rng::new(settings.seed);
     let mut accuracy = AccuracyMeter::default();
-    for _ in 0..settings.episodes {
+    for ep_idx in 0..settings.episodes {
+        let mut rng = episode_rng(settings.seed, ep_idx as u64);
         let ep = sample_episode(&ds, &mut rng, settings.n_way, settings.k_shot, settings.n_query);
         let (correct, total) = evaluate_episode(&mut engine, &ds, &ep)?;
         accuracy.push_episode(correct, total);
@@ -117,9 +116,9 @@ pub fn run_software_baseline(
     settings: EpisodeSettings,
 ) -> Result<AccuracyMeter> {
     let ds = store.embeddings(dataset, variant, "test")?;
-    let mut rng = Rng::new(settings.seed);
     let mut accuracy = AccuracyMeter::default();
-    for _ in 0..settings.episodes {
+    for ep_idx in 0..settings.episodes {
+        let mut rng = episode_rng(settings.seed, ep_idx as u64);
         let ep = sample_episode(&ds, &mut rng, settings.n_way, settings.k_shot, settings.n_query);
         let support: Vec<&[f32]> =
             ep.support.iter().map(|&(row, _)| ds.embedding(row)).collect();

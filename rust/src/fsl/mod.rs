@@ -7,8 +7,25 @@
 pub mod store;
 
 use crate::search::api::{EngineError, SearchRequest, SupportSet, VectorSearchBackend};
-use crate::testutil::Rng;
+use crate::testutil::{derive_seed, Rng};
 use std::collections::BTreeMap;
+
+/// Stream salt separating the episode sampler from every other consumer
+/// of a run's seed (engine shards, coordinator replicas, HAT noise).
+pub const EPISODE_STREAM: u64 = 0xE915_0DE5;
+
+/// The one seed-derivation scheme for episode sampling, shared by
+/// training ([`crate::hat`]) and evaluation ([`crate::experiments`],
+/// the `serve` CLI): episode `t` of run seed `s` draws from
+/// `derive_seed(derive_seed(s, EPISODE_STREAM), t)`.
+///
+/// Two properties follow (pinned by `rust/tests/test_determinism.rs`):
+/// the stream is independent of engine/backend RNG consumption (shard
+/// counts, backend choice, device noise never shift it), and episode `t`
+/// can be regenerated without replaying episodes `0..t`.
+pub fn episode_rng(seed: u64, episode: u64) -> Rng {
+    Rng::new(derive_seed(derive_seed(seed, EPISODE_STREAM), episode))
+}
 
 /// A set of embeddings with global class labels, class-indexed.
 #[derive(Debug, Clone)]

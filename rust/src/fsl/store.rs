@@ -99,6 +99,60 @@ impl ArtifactStore {
     }
 }
 
+/// Incremental writer for an [`ArtifactStore`]-compatible tree: tensors
+/// under the root, `key = value` manifest entries merged with any
+/// manifest already present (so per-variant exports accumulate —
+/// [`crate::hat::export_artifacts`] calls this once per trained
+/// variant).
+#[derive(Debug)]
+pub struct ArtifactWriter {
+    root: PathBuf,
+    entries: std::collections::BTreeMap<String, String>,
+}
+
+impl ArtifactWriter {
+    /// Open `root` for writing, loading existing manifest entries if
+    /// the tree already exists.
+    pub fn open(root: &Path) -> Result<ArtifactWriter> {
+        std::fs::create_dir_all(root.join("data"))
+            .with_context(|| format!("create artifact tree at {}", root.display()))?;
+        let mut entries = std::collections::BTreeMap::new();
+        let manifest_path = root.join("manifest.txt");
+        if manifest_path.exists() {
+            let manifest = Manifest::load(&manifest_path)?;
+            for (k, v) in manifest.iter() {
+                entries.insert(k.to_string(), v.to_string());
+            }
+        }
+        Ok(ArtifactWriter { root: root.to_path_buf(), entries })
+    }
+
+    /// Stage a manifest entry (written by [`Self::finish`]).
+    pub fn set(&mut self, key: &str, value: &str) {
+        self.entries.insert(key.to_string(), value.to_string());
+    }
+
+    /// Write a tensor at a root-relative path (parents created).
+    pub fn write_tensor(&self, rel_path: &str, tensor: &Tensor) -> Result<()> {
+        let path = self.root.join(rel_path);
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        crate::util::binio::write_tensor(&path, tensor)
+    }
+
+    /// Write the merged manifest and reopen the tree as a store.
+    pub fn finish(self) -> Result<ArtifactStore> {
+        let mut text = String::new();
+        for (k, v) in &self.entries {
+            text.push_str(&format!("{k} = {v}\n"));
+        }
+        std::fs::write(self.root.join("manifest.txt"), text)
+            .with_context(|| format!("write manifest at {}", self.root.display()))?;
+        ArtifactStore::open(&self.root)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -106,6 +160,37 @@ mod tests {
     #[test]
     fn open_missing_fails() {
         assert!(ArtifactStore::open(Path::new("/nonexistent/path")).is_err());
+    }
+
+    #[test]
+    fn writer_roundtrips_and_merges() {
+        let root = std::env::temp_dir().join(format!("mvt_store_{}", std::process::id()));
+        std::fs::remove_dir_all(&root).ok();
+        let mut w = ArtifactWriter::open(&root).unwrap();
+        w.set("clip_synth_std", "2.5");
+        w.set("embed_dim_synth", "16");
+        w.write_tensor(
+            "data/emb_synth_std_test.mvt",
+            &Tensor::F32 { dims: vec![2, 16], data: vec![0.25; 32] },
+        )
+        .unwrap();
+        w.write_tensor(
+            "data/labels_synth_test.mvt",
+            &Tensor::I32 { dims: vec![2], data: vec![0, 1] },
+        )
+        .unwrap();
+        let store = w.finish().unwrap();
+        assert_eq!(store.clip("synth", "std").unwrap(), 2.5);
+        let ds = store.embeddings("synth", "std", "test").unwrap();
+        assert_eq!((ds.len(), ds.dims), (2, 16));
+
+        // reopening merges instead of clobbering
+        let mut w2 = ArtifactWriter::open(&root).unwrap();
+        w2.set("clip_synth_hat_avss", "3.5");
+        let store = w2.finish().unwrap();
+        assert_eq!(store.clip("synth", "std").unwrap(), 2.5);
+        assert_eq!(store.clip("synth", "hat_avss").unwrap(), 3.5);
+        std::fs::remove_dir_all(&root).ok();
     }
 
     // Artifact-dependent behaviour is covered by the integration tests in

@@ -1,0 +1,104 @@
+//! Hand-rolled Adam, a faithful port of `adam_init` / `adam_update` in
+//! `python/compile/model.py` (no optax in either image).
+//!
+//! Semantics pinned by the `adam_trace` block of
+//! `rust/tests/fixtures/hat_parity.json`: f32 elementwise moments, the
+//! python-side bias corrections `1 / (1 - b^t)` computed in f64 and then
+//! applied in f32, and the `eps` added *outside* the square root —
+//! exactly like the python reference.
+
+use super::tensor::{zeros_like, Params};
+
+pub const ADAM_B1: f64 = 0.9;
+pub const ADAM_B2: f64 = 0.999;
+pub const ADAM_EPS: f32 = 1e-8;
+
+/// First/second moment estimates plus the step counter.
+#[derive(Debug, Clone)]
+pub struct AdamState {
+    pub m: Params,
+    pub v: Params,
+    pub t: u32,
+}
+
+/// Fresh all-zero optimizer state for a parameter tree.
+pub fn adam_init(params: &Params) -> AdamState {
+    AdamState { m: zeros_like(params), v: zeros_like(params), t: 0 }
+}
+
+/// One Adam step in place. `grads` must cover every parameter tensor.
+pub fn adam_update(params: &mut Params, grads: &Params, state: &mut AdamState, lr: f64) {
+    state.t += 1;
+    let b1 = ADAM_B1 as f32;
+    let b2 = ADAM_B2 as f32;
+    let mhat_scale = (1.0 / (1.0 - ADAM_B1.powi(state.t as i32))) as f32;
+    let vhat_scale = (1.0 / (1.0 - ADAM_B2.powi(state.t as i32))) as f32;
+    let lr = lr as f32;
+    for (name, p) in params.iter_mut() {
+        let g = grads.get(name).unwrap_or_else(|| panic!("adam: missing grad for {name:?}"));
+        assert_eq!(g.dims, p.dims, "adam: grad shape mismatch for {name:?}");
+        let m = state.m.get_mut(name).expect("adam state out of sync");
+        let v = state.v.get_mut(name).expect("adam state out of sync");
+        for i in 0..p.data.len() {
+            m.data[i] = b1 * m.data[i] + (1.0 - b1) * g.data[i];
+            v.data[i] = b2 * v.data[i] + (1.0 - b2) * g.data[i] * g.data[i];
+            p.data[i] -=
+                lr * (m.data[i] * mhat_scale) / ((v.data[i] * vhat_scale).sqrt() + ADAM_EPS);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hat::tensor::Tensor;
+
+    fn one_param(values: &[f32]) -> Params {
+        [("w".to_string(), Tensor::new(vec![values.len()], values.to_vec()))].into()
+    }
+
+    #[test]
+    fn first_step_moves_by_about_lr() {
+        // With zero state, m-hat/sqrt(v-hat) == g/|g|: the first step is
+        // (almost exactly) +-lr per element, the property the parity
+        // tolerances in test_hat_parity.rs are designed around.
+        let mut p = one_param(&[1.0, -2.0]);
+        let g = one_param(&[0.5, -0.25]);
+        let mut st = adam_init(&p);
+        adam_update(&mut p, &g, &mut st, 1e-3);
+        assert!((p["w"].data[0] - (1.0 - 1e-3)).abs() < 1e-6);
+        assert!((p["w"].data[1] - (-2.0 + 1e-3)).abs() < 1e-6);
+        assert_eq!(st.t, 1);
+    }
+
+    #[test]
+    fn zero_grad_is_a_noop() {
+        let mut p = one_param(&[0.75]);
+        let g = one_param(&[0.0]);
+        let mut st = adam_init(&p);
+        adam_update(&mut p, &g, &mut st, 1e-2);
+        assert_eq!(p["w"].data[0], 0.75);
+    }
+
+    #[test]
+    fn deterministic_replay() {
+        let run = || {
+            let mut p = one_param(&[0.1, 0.2, 0.3]);
+            let mut st = adam_init(&p);
+            for t in 0..5 {
+                let g = one_param(&[0.1 * t as f32, -0.05, 0.02 * t as f32]);
+                adam_update(&mut p, &g, &mut st, 1e-3);
+            }
+            p["w"].data.clone()
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    #[should_panic(expected = "missing grad")]
+    fn missing_grad_panics() {
+        let mut p = one_param(&[1.0]);
+        let mut st = adam_init(&p);
+        adam_update(&mut p, &Params::new(), &mut st, 1e-3);
+    }
+}

@@ -1,0 +1,153 @@
+//! Rust-native synthetic few-shot image data for the `train` CLI path.
+//!
+//! The python build pipeline renders SynthOmniglot/SynthCUB; this module
+//! is the dependency-free stand-in that lets the rust stack train,
+//! calibrate, and refresh support sets without a python sidecar
+//! (ROADMAP north star). Classes are smooth sinusoidal textures with a
+//! per-class signature and per-sample jitter — the same recipe as the
+//! fixture dataset in `python/compile/dump_fixtures.py`.
+//!
+//! Images are flattened into an [`EmbeddingDataset`] with
+//! `dims == hw * hw`, so [`crate::fsl::sample_episode`] draws train
+//! episodes through exactly the sampler the eval harnesses use (one
+//! seed-derivation scheme for train and eval — DESIGN.md §HAT).
+
+use crate::fsl::EmbeddingDataset;
+use crate::testutil::{derive_seed, Rng};
+
+/// Shape of a synthetic dataset split.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SynthSpec {
+    pub hw: usize,
+    pub train_classes: usize,
+    pub test_classes: usize,
+    pub per_class: usize,
+}
+
+impl SynthSpec {
+    /// Budgeted default: enough classes for 4-way episodes per split.
+    pub fn default_spec() -> SynthSpec {
+        SynthSpec { hw: 12, train_classes: 10, test_classes: 6, per_class: 8 }
+    }
+
+    /// Tiny shape for smoke tests and CI.
+    pub fn smoke() -> SynthSpec {
+        SynthSpec { hw: 12, train_classes: 5, test_classes: 4, per_class: 6 }
+    }
+}
+
+/// Train/test splits of flattened images (`dims = hw * hw`, pixel
+/// values in `[0.05, 1]`), with class-local labels per split.
+#[derive(Debug, Clone)]
+pub struct SynthData {
+    pub spec: SynthSpec,
+    pub train: EmbeddingDataset,
+    pub test: EmbeddingDataset,
+}
+
+fn render_class(spec: &SynthSpec, rng: &mut Rng, out: &mut Vec<f32>) {
+    let hw = spec.hw;
+    // Per-class signature: three sinusoidal modes.
+    let modes: Vec<(f64, f64, f64, f64)> = (0..3)
+        .map(|_| {
+            (
+                rng.range_f64(0.5, 2.5),
+                rng.range_f64(0.5, 2.5),
+                rng.range_f64(0.0, std::f64::consts::TAU),
+                rng.range_f64(0.5, 1.0),
+            )
+        })
+        .collect();
+    let mut base = vec![0.0f64; hw * hw];
+    let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+    for y in 0..hw {
+        for x in 0..hw {
+            let mut v = 0.0;
+            for &(fx, fy, phase, amp) in &modes {
+                let arg = std::f64::consts::TAU * (fx * x as f64 + fy * y as f64) / hw as f64;
+                v += amp * (arg + phase).sin();
+            }
+            base[y * hw + x] = v;
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+    }
+    let span = (hi - lo).max(1e-9);
+    for _ in 0..spec.per_class {
+        for &b in &base {
+            let norm = (b - lo) / span;
+            let jittered = (0.8 * norm + 0.08 * rng.gaussian()).clamp(0.0, 1.0);
+            out.push((0.05 + 0.95 * jittered) as f32);
+        }
+    }
+}
+
+/// Stream salt separating the data generator from every other consumer
+/// of a run's seed (engine shards derive `derive_seed(seed, shard)`, so
+/// unsalted class streams would be bitwise identical to device noise in
+/// a train-then-eval run sharing one seed).
+const DATA_STREAM: u64 = 0x11A7_0003;
+
+/// Deterministically generate both splits; every class derives its own
+/// RNG stream via [`derive_seed`], so splits are stable regardless of
+/// generation order.
+pub fn generate(spec: SynthSpec, seed: u64) -> SynthData {
+    let dims = spec.hw * spec.hw;
+    let data_seed = derive_seed(seed, DATA_STREAM);
+    let mut build = |first_class: usize, n_classes: usize| {
+        let mut data = Vec::with_capacity(n_classes * spec.per_class * dims);
+        let mut labels = Vec::with_capacity(n_classes * spec.per_class);
+        for local in 0..n_classes {
+            let mut rng = Rng::new(derive_seed(data_seed, (first_class + local) as u64));
+            render_class(&spec, &mut rng, &mut data);
+            labels.extend((0..spec.per_class).map(|_| local as u32));
+        }
+        EmbeddingDataset::new(dims, data, labels)
+    };
+    let train = build(0, spec.train_classes);
+    let test = build(spec.train_classes, spec.test_classes);
+    SynthData { spec, train, test }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_ranges() {
+        let spec = SynthSpec::smoke();
+        let data = generate(spec, 7);
+        assert_eq!(data.train.len(), spec.train_classes * spec.per_class);
+        assert_eq!(data.test.len(), spec.test_classes * spec.per_class);
+        assert_eq!(data.train.dims, spec.hw * spec.hw);
+        for row in 0..data.train.len() {
+            for &v in data.train.embedding(row) {
+                assert!((0.05..=1.0).contains(&(v as f64)), "pixel {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_and_seed_sensitive() {
+        let a = generate(SynthSpec::smoke(), 1);
+        let b = generate(SynthSpec::smoke(), 1);
+        let c = generate(SynthSpec::smoke(), 2);
+        assert_eq!(a.train.embedding(0), b.train.embedding(0));
+        assert_ne!(a.train.embedding(0), c.train.embedding(0));
+    }
+
+    #[test]
+    fn classes_are_distinguishable() {
+        // Same-class samples must be closer (on average) than
+        // cross-class samples, otherwise training has no signal.
+        let data = generate(SynthSpec::smoke(), 3);
+        let ds = &data.train;
+        let dist = |a: &[f32], b: &[f32]| -> f64 {
+            a.iter().zip(b).map(|(&x, &y)| (x as f64 - y as f64).abs()).sum()
+        };
+        let per = data.spec.per_class;
+        let within = dist(ds.embedding(0), ds.embedding(1));
+        let across = dist(ds.embedding(0), ds.embedding(per));
+        assert!(within < across, "within {within} across {across}");
+    }
+}

@@ -1,0 +1,673 @@
+//! Hardware-Aware Training (HAT) — the paper's §3.3 two-stage controller
+//! training, ported to pure rust (mirror of `python/compile/hat.py`).
+//!
+//! **Stage 1 — pretrain**: controller + linear classifier minimise
+//! cross-entropy over all training classes (Adam, hand-derived
+//! backprop — [`model`], [`adam`]).
+//!
+//! **Stage 2 — meta-train**, three variants sharing the stage-1 weights:
+//!
+//! | variant    | quantization        | device model                        |
+//! |------------|---------------------|-------------------------------------|
+//! | `std`      | none                | none (cosine prototypical logits)   |
+//! | `hat_svss` | symmetric fake-quant| noisy MCAM sim, sigmoid-backward SA |
+//! | `hat_avss` | asymmetric (query 4)| noisy MCAM sim, sigmoid-backward SA |
+//!
+//! The simulated device ([`sim`]) reuses the L3 constants end-to-end:
+//! [`crate::device::McamParams`], the MTMC encoder, the SA ladder, and
+//! [`crate::device::variation::VariationModel`]'s lognormal noise with
+//! seed-derived streams — so controllers are trained against the same
+//! physics the serving engine executes.
+//!
+//! Episodes are drawn through [`crate::fsl::sample_episode`] with the
+//! shared [`crate::fsl::episode_rng`] seed-derivation scheme (one scheme
+//! for train and eval; `rust/tests/test_determinism.rs` pins it), and
+//! trained weights flow into [`crate::fsl::store`] artifacts via
+//! [`export_artifacts`], where `experiments::{fig7, fig9, table2}`
+//! accuracy rows consume them.
+//!
+//! Python↔rust parity is pinned by `rust/tests/test_hat_parity.rs`
+//! against `rust/tests/fixtures/hat_parity.json` within the f32
+//! tolerances documented in DESIGN.md §HAT; gradient correctness by the
+//! finite-difference checks in `rust/tests/test_hat_props.rs`.
+
+pub mod adam;
+pub mod data;
+pub mod model;
+pub mod sim;
+pub mod tensor;
+
+pub use adam::{adam_init, adam_update, AdamState};
+pub use model::{ControllerConfig, CUB_CONTROLLER, OMNIGLOT_CONTROLLER, SYNTH_CONTROLLER};
+pub use sim::SimConfig;
+pub use tensor::{Params, Tensor};
+
+use crate::config::TrainSettings;
+use crate::fsl::{episode_rng, sample_episode, EmbeddingDataset};
+use crate::testutil::{derive_seed, Rng};
+use anyhow::{Context, Result};
+use std::fmt;
+use std::path::Path;
+
+/// The three meta-training variants (order matches the python module).
+pub const VARIANTS: [&str; 3] = ["std", "hat_svss", "hat_avss"];
+
+/// Stream salts for [`derive_seed`]: pretrain batch sampling and
+/// per-episode device-noise draws own decorrelated RNG streams, so the
+/// episode stream itself ([`episode_rng`]) is consumption-independent.
+const PRETRAIN_STREAM: u64 = 0x11A7_0001;
+const NOISE_STREAM: u64 = 0x11A7_0002;
+
+/// Typed meta-training variant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Variant {
+    /// Episodic meta-baseline: cosine prototypical logits, no hardware.
+    Std,
+    /// HAT with symmetric quantization (SVSS column of Table 2 / Fig 7).
+    HatSvss,
+    /// The paper's HAT: asymmetric quantization + MTMC + noisy MCAM.
+    HatAvss,
+}
+
+impl Variant {
+    pub fn from_name(name: &str) -> std::result::Result<Variant, HatError> {
+        match name {
+            "std" => Ok(Variant::Std),
+            "hat_svss" => Ok(Variant::HatSvss),
+            "hat_avss" => Ok(Variant::HatAvss),
+            other => Err(HatError::UnknownVariant(other.to_string())),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Variant::Std => "std",
+            Variant::HatSvss => "hat_svss",
+            Variant::HatAvss => "hat_avss",
+        }
+    }
+
+    /// Does this variant train against the simulated device?
+    pub fn hardware_aware(self) -> bool {
+        self != Variant::Std
+    }
+}
+
+/// Typed training errors (mirrors the `ValueError`s of `test_hat.py`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum HatError {
+    UnknownVariant(String),
+    Data(String),
+}
+
+impl fmt::Display for HatError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            HatError::UnknownVariant(name) => {
+                write!(f, "unknown meta-training variant {name:?} (std | hat_svss | hat_avss)")
+            }
+            HatError::Data(msg) => write!(f, "training data error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for HatError {}
+
+// ---------------------------------------------------------------------------
+// stage 1: pre-training
+// ---------------------------------------------------------------------------
+
+fn gather_rows(ds: &EmbeddingDataset, rows: &[usize]) -> Vec<f32> {
+    let mut out = Vec::with_capacity(rows.len() * ds.dims);
+    for &row in rows {
+        out.extend_from_slice(ds.embedding(row));
+    }
+    out
+}
+
+/// Loss + gradients of one pretrain batch (cross-entropy over all
+/// classes) without applying the update — the seam the golden-parity
+/// harness compares against the fixture's jax gradients.
+pub fn pretrain_grads(
+    bundle: &Params,
+    cfg: &ControllerConfig,
+    images: &[f32],
+    labels: &[u32],
+) -> (f32, Params) {
+    let n_classes = bundle["cls_b"].data.len();
+    let batch = labels.len();
+    let cache = model::forward(bundle, cfg, images);
+    let logits = model::apply_classifier(bundle, &cache.emb, cfg.embed_dim);
+    let (loss, d_logits) = model::cross_entropy(&logits, labels, n_classes);
+
+    // Classifier backward: logits = emb @ cls_w + cls_b.
+    let cls_w = &bundle["cls_w"];
+    let mut d_cls_w = Tensor::zeros(&[cfg.embed_dim, n_classes]);
+    let mut d_cls_b = Tensor::zeros(&[n_classes]);
+    let mut d_emb = vec![0.0f32; batch * cfg.embed_dim];
+    for n in 0..batch {
+        for c in 0..n_classes {
+            let g = d_logits[n * n_classes + c];
+            if g == 0.0 {
+                continue;
+            }
+            d_cls_b.data[c] += g;
+            for e in 0..cfg.embed_dim {
+                d_cls_w.data[e * n_classes + c] += cache.emb[n * cfg.embed_dim + e] * g;
+                d_emb[n * cfg.embed_dim + e] += cls_w.data[e * n_classes + c] * g;
+            }
+        }
+    }
+
+    let mut grads = model::backward(bundle, cfg, &cache, &d_emb);
+    grads.insert("cls_w".to_string(), d_cls_w);
+    grads.insert("cls_b".to_string(), d_cls_b);
+    (loss, grads)
+}
+
+/// One pretrain step (gradients + Adam) on an explicit image batch;
+/// exposed so the parity harness can replay the fixture's deterministic
+/// batch schedule.
+pub fn pretrain_step(
+    bundle: &mut Params,
+    state: &mut AdamState,
+    cfg: &ControllerConfig,
+    images: &[f32],
+    labels: &[u32],
+    lr: f64,
+) -> f32 {
+    let (loss, grads) = pretrain_grads(bundle, cfg, images, labels);
+    adam_update(bundle, &grads, state, lr);
+    loss
+}
+
+/// Stage-1 pretraining over a whole (image) dataset. Returns the trained
+/// controller parameters (classifier head stripped, as in python) plus
+/// the per-step loss trace.
+pub fn pretrain(
+    ds: &EmbeddingDataset,
+    cfg: &ControllerConfig,
+    settings: &TrainSettings,
+    seed: u64,
+    log: &mut dyn FnMut(String),
+) -> (Params, Vec<f32>) {
+    assert_eq!(ds.dims, cfg.image_hw * cfg.image_hw, "dataset/controller image size mismatch");
+    let n_classes = ds.n_classes();
+    let mut rng = Rng::new(derive_seed(seed, PRETRAIN_STREAM));
+    let mut bundle = model::init_controller(cfg, &mut rng);
+    bundle.extend(model::init_classifier_head(cfg, n_classes, &mut rng));
+    let mut state = adam_init(&bundle);
+    let mut losses = Vec::with_capacity(settings.pretrain_steps);
+    for step in 0..settings.pretrain_steps {
+        let idx: Vec<usize> = (0..settings.pretrain_bs).map(|_| rng.below(ds.len())).collect();
+        let images = gather_rows(ds, &idx);
+        let labels: Vec<u32> = idx.iter().map(|&row| ds.label(row)).collect();
+        let loss = pretrain_step(&mut bundle, &mut state, cfg, &images, &labels, settings.lr);
+        losses.push(loss);
+        if step % 100 == 0 || step + 1 == settings.pretrain_steps {
+            log(format!("[pretrain {}] step {step:4} loss {loss:.4}", cfg.name));
+        }
+    }
+    bundle.retain(|k, _| !k.starts_with("cls_"));
+    (bundle, losses)
+}
+
+// ---------------------------------------------------------------------------
+// stage 2: meta-training
+// ---------------------------------------------------------------------------
+
+/// Loss + gradients of one meta episode without applying the update.
+/// `noise` supplies the per-episode device-noise stream for the
+/// hardware-aware variants (ignored by `std`).
+pub fn meta_grads(
+    params: &Params,
+    cfg: &ControllerConfig,
+    sim_cfg: &SimConfig,
+    variant: Variant,
+    sx: &[f32],
+    sy: &[u32],
+    qx: &[f32],
+    qy: &[u32],
+    n_way: usize,
+    noise: Option<&mut Rng>,
+) -> (f32, Params) {
+    sim::assert_controller_params(params);
+    let s_cache = model::forward(params, cfg, sx);
+    let q_cache = model::forward(params, cfg, qx);
+    let dim = cfg.embed_dim;
+
+    let (loss, d_q_emb, d_s_emb) = match variant {
+        Variant::Std => std_episode_loss(&q_cache.emb, &s_cache.emb, dim, sy, qy, n_way),
+        Variant::HatSvss | Variant::HatAvss => {
+            let sim =
+                sim::episode_logits(&q_cache.emb, &s_cache.emb, dim, sy, n_way, sim_cfg, noise);
+            let (loss, d_raw) = sim::standardized_cross_entropy(&sim.logits, qy, n_way);
+            let (dq, dsup) = sim::episode_backward(&sim, sim_cfg, &d_raw);
+            (loss, dq, dsup)
+        }
+    };
+
+    let mut grads = model::backward(params, cfg, &q_cache, &d_q_emb);
+    tensor::accumulate(&mut grads, &model::backward(params, cfg, &s_cache, &d_s_emb));
+    (loss, grads)
+}
+
+/// One meta step (episode gradients + Adam) on explicit support/query
+/// image batches.
+pub fn meta_step(
+    params: &mut Params,
+    state: &mut AdamState,
+    cfg: &ControllerConfig,
+    sim_cfg: &SimConfig,
+    variant: Variant,
+    sx: &[f32],
+    sy: &[u32],
+    qx: &[f32],
+    qy: &[u32],
+    n_way: usize,
+    meta_lr: f64,
+    noise: Option<&mut Rng>,
+) -> f32 {
+    let (loss, grads) = meta_grads(params, cfg, sim_cfg, variant, sx, sy, qx, qy, n_way, noise);
+    adam_update(params, &grads, state, meta_lr);
+    loss
+}
+
+/// The `std` meta-baseline loss: cosine-similarity prototypical logits
+/// at temperature 10 (hand-derived backward through both
+/// `l2_normalize`s and the shot-mean prototypes). Returns
+/// `(loss, d_query_emb, d_support_emb)`; public for the
+/// finite-difference harness in `rust/tests/test_hat_props.rs` (this
+/// loss is smooth, so end-to-end FD is valid — the hardware-aware
+/// variants are checked per-STE-op instead).
+pub fn std_episode_loss(
+    q_emb: &[f32],
+    s_emb: &[f32],
+    dim: usize,
+    sy: &[u32],
+    qy: &[u32],
+    n_way: usize,
+) -> (f32, Vec<f32>, Vec<f32>) {
+    let ns = sy.len();
+    let nq = qy.len();
+    let s_n = model::l2_normalize(s_emb, dim);
+    let q_n = model::l2_normalize(q_emb, dim);
+
+    let mut counts = vec![0.0f32; n_way];
+    for &l in sy {
+        counts[l as usize] += 1.0;
+    }
+    assert!(counts.iter().all(|&c| c > 0.0), "every class needs support shots");
+    let mut proto = vec![0.0f32; n_way * dim];
+    for (si, &l) in sy.iter().enumerate() {
+        for i in 0..dim {
+            proto[l as usize * dim + i] += s_n[si * dim + i];
+        }
+    }
+    for c in 0..n_way {
+        for i in 0..dim {
+            proto[c * dim + i] /= counts[c];
+        }
+    }
+    let proto_n = model::l2_normalize(&proto, dim);
+
+    let mut logits = vec![0.0f32; nq * n_way];
+    for q in 0..nq {
+        for c in 0..n_way {
+            let mut dot = 0.0f32;
+            for i in 0..dim {
+                dot += q_n[q * dim + i] * proto_n[c * dim + i];
+            }
+            logits[q * n_way + c] = 10.0 * dot;
+        }
+    }
+    let (loss, d_logits) = model::cross_entropy(&logits, qy, n_way);
+
+    let mut d_q_n = vec![0.0f32; nq * dim];
+    let mut d_proto_n = vec![0.0f32; n_way * dim];
+    for q in 0..nq {
+        for c in 0..n_way {
+            let g = 10.0 * d_logits[q * n_way + c];
+            if g == 0.0 {
+                continue;
+            }
+            for i in 0..dim {
+                d_q_n[q * dim + i] += g * proto_n[c * dim + i];
+                d_proto_n[c * dim + i] += g * q_n[q * dim + i];
+            }
+        }
+    }
+    let d_proto = model::l2_normalize_backward(&proto, &d_proto_n, dim);
+    let mut d_s_n = vec![0.0f32; ns * dim];
+    for (si, &l) in sy.iter().enumerate() {
+        for i in 0..dim {
+            d_s_n[si * dim + i] = d_proto[l as usize * dim + i] / counts[l as usize];
+        }
+    }
+    let d_q_emb = model::l2_normalize_backward(q_emb, &d_q_n, dim);
+    let d_s_emb = model::l2_normalize_backward(s_emb, &d_s_n, dim);
+    (loss, d_q_emb, d_s_emb)
+}
+
+/// Stage-2 meta-training: episodes drawn with the shared
+/// [`episode_rng`] scheme, one decorrelated noise stream per episode.
+/// `ds` holds flattened training images (`dims == image_hw^2`).
+pub fn meta_train(
+    params: &Params,
+    ds: &EmbeddingDataset,
+    cfg: &ControllerConfig,
+    settings: &TrainSettings,
+    variant: &str,
+    seed: u64,
+    log: &mut dyn FnMut(String),
+) -> std::result::Result<Params, HatError> {
+    let variant = Variant::from_name(variant)?;
+    if ds.dims != cfg.image_hw * cfg.image_hw {
+        return Err(HatError::Data(format!(
+            "dataset rows are {} floats, controller expects {}x{} images",
+            ds.dims, cfg.image_hw, cfg.image_hw
+        )));
+    }
+    if settings.n_way > ds.n_classes() {
+        return Err(HatError::Data(format!(
+            "{}-way episodes but dataset has {} classes",
+            settings.n_way,
+            ds.n_classes()
+        )));
+    }
+    for class in ds.classes() {
+        if ds.class_rows(class).len() < settings.k_shot + settings.n_query {
+            return Err(HatError::Data(format!(
+                "class {class} has {} samples, episodes need {}",
+                ds.class_rows(class).len(),
+                settings.k_shot + settings.n_query
+            )));
+        }
+    }
+
+    let mut params = params.clone();
+    let mut state = adam_init(&params);
+    let mut sim_cfg = SimConfig::new(settings.hat_cl, variant == Variant::HatAvss);
+    sim_cfg.noise_sigma = settings.noise_sigma;
+    let noise_seed = derive_seed(seed, NOISE_STREAM);
+    for ep in 0..settings.meta_episodes {
+        let mut erng = episode_rng(seed, ep as u64);
+        let episode =
+            sample_episode(ds, &mut erng, settings.n_way, settings.k_shot, settings.n_query);
+        let sup_rows: Vec<usize> = episode.support.iter().map(|&(row, _)| row).collect();
+        let qry_rows: Vec<usize> = episode.queries.iter().map(|&(row, _)| row).collect();
+        let sx = gather_rows(ds, &sup_rows);
+        let qx = gather_rows(ds, &qry_rows);
+        let sy: Vec<u32> = episode.support.iter().map(|&(_, l)| l).collect();
+        let qy: Vec<u32> = episode.queries.iter().map(|&(_, l)| l).collect();
+        let mut noise_rng = Rng::new(derive_seed(noise_seed, ep as u64));
+        let noise = if variant.hardware_aware() && sim_cfg.noise_sigma > 0.0 {
+            Some(&mut noise_rng)
+        } else {
+            None
+        };
+        let loss = meta_step(
+            &mut params,
+            &mut state,
+            cfg,
+            &sim_cfg,
+            variant,
+            &sx,
+            &sy,
+            &qx,
+            &qy,
+            settings.n_way,
+            settings.meta_lr,
+            noise,
+        );
+        if ep % 40 == 0 || ep + 1 == settings.meta_episodes {
+            log(format!("[meta {}] episode {ep:4} loss {loss:.4}", variant.name()));
+        }
+    }
+    Ok(params)
+}
+
+// ---------------------------------------------------------------------------
+// embedding export + persistence
+// ---------------------------------------------------------------------------
+
+/// Embed a full flattened-image set in batches (build-time only).
+pub fn embed_all(params: &Params, cfg: &ControllerConfig, ds: &EmbeddingDataset) -> Vec<f32> {
+    assert_eq!(ds.dims, cfg.image_hw * cfg.image_hw);
+    let mut out = Vec::with_capacity(ds.len() * cfg.embed_dim);
+    let batch = 256;
+    let mut row = 0;
+    while row < ds.len() {
+        let hi = (row + batch).min(ds.len());
+        let rows: Vec<usize> = (row..hi).collect();
+        let images = gather_rows(ds, &rows);
+        let cache = model::forward(params, cfg, &images);
+        out.extend_from_slice(&cache.emb);
+        row = hi;
+    }
+    out
+}
+
+/// Save a parameter tree as one `.mvt` tensor per entry plus an index
+/// file; round-trips bitwise (`rust/tests/test_hat_props.rs`).
+pub fn save_params(dir: &Path, params: &Params) -> Result<()> {
+    use crate::util::binio::{write_tensor, Tensor as IoTensor};
+    std::fs::create_dir_all(dir).with_context(|| format!("create {}", dir.display()))?;
+    let mut index = String::new();
+    for (name, tensor) in params {
+        let io = IoTensor::F32 { dims: tensor.dims.clone(), data: tensor.data.clone() };
+        write_tensor(&dir.join(format!("{name}.mvt")), &io)?;
+        index.push_str(name);
+        index.push('\n');
+    }
+    std::fs::write(dir.join("params.txt"), index).context("write params index")?;
+    Ok(())
+}
+
+/// Inverse of [`save_params`].
+pub fn load_params(dir: &Path) -> Result<Params> {
+    use crate::util::binio::read_tensor;
+    let index = std::fs::read_to_string(dir.join("params.txt"))
+        .with_context(|| format!("read params index in {}", dir.display()))?;
+    let mut params = Params::new();
+    for name in index.lines().filter(|l| !l.trim().is_empty()) {
+        let tensor = read_tensor(&dir.join(format!("{name}.mvt")))?;
+        let dims = tensor.dims().to_vec();
+        let data = tensor.as_f32()?.to_vec();
+        params.insert(name.to_string(), Tensor::new(dims, data));
+    }
+    Ok(params)
+}
+
+/// Export a trained controller's embeddings as a
+/// [`crate::fsl::store::ArtifactStore`]-compatible tree: test-split
+/// embeddings + labels, the train-split clip calibration, and the
+/// manifest keys the experiment harnesses read. Returns the clip.
+pub fn export_artifacts(
+    root: &Path,
+    dataset: &str,
+    variant: &str,
+    cfg: &ControllerConfig,
+    params: &Params,
+    synth: &data::SynthData,
+) -> Result<f64> {
+    use crate::fsl::store::ArtifactWriter;
+    use crate::util::binio::Tensor as IoTensor;
+
+    let train_emb = embed_all(params, cfg, &synth.train);
+    let clip = crate::quant::calibrate_clip(&train_emb, crate::quant::CLIP_SIGMA);
+    let test_emb = embed_all(params, cfg, &synth.test);
+
+    let mut writer = ArtifactWriter::open(root)?;
+    writer.write_tensor(
+        &format!("data/emb_{dataset}_{variant}_test.mvt"),
+        &IoTensor::F32 { dims: vec![synth.test.len(), cfg.embed_dim], data: test_emb },
+    )?;
+    let labels: Vec<i32> = (0..synth.test.len()).map(|r| synth.test.label(r) as i32).collect();
+    writer.write_tensor(
+        &format!("data/labels_{dataset}_test.mvt"),
+        &IoTensor::I32 { dims: vec![labels.len()], data: labels },
+    )?;
+    writer.set(&format!("clip_{dataset}_{variant}"), &format!("{clip}"));
+    writer.set(&format!("embed_dim_{dataset}"), &format!("{}", cfg.embed_dim));
+    writer.set(&format!("image_hw_{dataset}"), &format!("{}", cfg.image_hw));
+    writer.finish()?;
+    Ok(clip)
+}
+
+// ---------------------------------------------------------------------------
+// smoke harness (CI: `mcamvss train --smoke`)
+// ---------------------------------------------------------------------------
+
+/// Fast end-to-end check: pretrain on the synthetic set (loss must
+/// decrease), then two meta steps per variant on one fixed episode
+/// (ideal device so the repeat is deterministic). Every loss must be
+/// finite and decreasing: strictly for the smooth `std` variant, and
+/// non-exploding for the hardware-aware variants — their hard
+/// (vote-quantized) forward is piecewise constant, so a single
+/// 2e-4-sized step only decreases the *soft surrogate* the STE
+/// gradients descend, not necessarily the integer-vote loss (DESIGN.md
+/// §HAT). Returns a human-readable report.
+pub fn smoke(seed: u64) -> Result<String> {
+    let synth = data::generate(data::SynthSpec::smoke(), seed);
+    let cfg = SYNTH_CONTROLLER;
+    let settings = TrainSettings::synth().smoke();
+    let mut report = String::new();
+
+    let (pre, pre_losses) = pretrain(&synth.train, &cfg, &settings, seed, &mut |_| {});
+    let (first, last) = (pre_losses[0], *pre_losses.last().unwrap());
+    if !pre_losses.iter().all(|l| l.is_finite()) {
+        anyhow::bail!("pretrain produced a non-finite loss");
+    }
+    if last >= first {
+        anyhow::bail!("pretrain loss did not decrease: {first} -> {last}");
+    }
+    report.push_str(&format!("pretrain: loss {first:.4} -> {last:.4} ok\n"));
+
+    let mut erng = episode_rng(seed, 0);
+    let episode =
+        sample_episode(&synth.train, &mut erng, settings.n_way, settings.k_shot, settings.n_query);
+    let sup_rows: Vec<usize> = episode.support.iter().map(|&(row, _)| row).collect();
+    let qry_rows: Vec<usize> = episode.queries.iter().map(|&(row, _)| row).collect();
+    let sx = gather_rows(&synth.train, &sup_rows);
+    let qx = gather_rows(&synth.train, &qry_rows);
+    let sy: Vec<u32> = episode.support.iter().map(|&(_, l)| l).collect();
+    let qy: Vec<u32> = episode.queries.iter().map(|&(_, l)| l).collect();
+
+    for name in VARIANTS {
+        let variant = Variant::from_name(name).expect("builtin variant");
+        let mut params = pre.clone();
+        let mut state = adam_init(&params);
+        let sim_cfg = SimConfig::new(settings.hat_cl, variant == Variant::HatAvss).ideal();
+        let mut losses = [0.0f32; 2];
+        for slot in &mut losses {
+            *slot = meta_step(
+                &mut params,
+                &mut state,
+                &cfg,
+                &sim_cfg,
+                variant,
+                &sx,
+                &sy,
+                &qx,
+                &qy,
+                settings.n_way,
+                settings.meta_lr,
+                None,
+            );
+        }
+        if !losses.iter().all(|l| l.is_finite()) {
+            anyhow::bail!("{name}: meta loss went non-finite: {losses:?}");
+        }
+        if variant == Variant::Std && losses[1] >= losses[0] {
+            anyhow::bail!("{name}: meta loss did not decrease: {} -> {}", losses[0], losses[1]);
+        }
+        if variant != Variant::Std && losses[1] > losses[0] + 0.5 {
+            anyhow::bail!("{name}: meta loss exploded: {} -> {}", losses[0], losses[1]);
+        }
+        if !tensor::params_differ(&params, &pre) {
+            anyhow::bail!("{name}: meta step did not move the parameters");
+        }
+        report.push_str(&format!("meta {name}: loss {:.4} -> {:.4} ok\n", losses[0], losses[1]));
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn variant_parsing() {
+        assert_eq!(Variant::from_name("std").unwrap(), Variant::Std);
+        assert_eq!(Variant::from_name("hat_avss").unwrap(), Variant::HatAvss);
+        let err = Variant::from_name("bogus").unwrap_err();
+        assert_eq!(err, HatError::UnknownVariant("bogus".to_string()));
+        assert!(err.to_string().contains("bogus"));
+        assert!(Variant::HatSvss.hardware_aware() && !Variant::Std.hardware_aware());
+    }
+
+    #[test]
+    fn meta_train_rejects_unknown_variant() {
+        let synth = data::generate(data::SynthSpec::smoke(), 1);
+        let mut rng = Rng::new(1);
+        let params = model::init_controller(&SYNTH_CONTROLLER, &mut rng);
+        let settings = TrainSettings::synth().smoke();
+        let err = meta_train(
+            &params,
+            &synth.train,
+            &SYNTH_CONTROLLER,
+            &settings,
+            "bogus",
+            1,
+            &mut |_| {},
+        )
+        .unwrap_err();
+        assert!(matches!(err, HatError::UnknownVariant(_)));
+    }
+
+    #[test]
+    fn meta_train_rejects_bad_shapes() {
+        let synth = data::generate(data::SynthSpec::smoke(), 1);
+        let mut rng = Rng::new(1);
+        let params = model::init_controller(&SYNTH_CONTROLLER, &mut rng);
+        let mut settings = TrainSettings::synth().smoke();
+        settings.n_way = 1000;
+        let err = meta_train(
+            &params,
+            &synth.train,
+            &SYNTH_CONTROLLER,
+            &settings,
+            "std",
+            1,
+            &mut |_| {},
+        )
+        .unwrap_err();
+        assert!(matches!(err, HatError::Data(_)));
+    }
+
+    #[test]
+    fn pretrain_learns_on_tiny_budget() {
+        let synth = data::generate(data::SynthSpec::smoke(), 5);
+        let settings = TrainSettings::synth().smoke();
+        let (params, losses) = pretrain(&synth.train, &SYNTH_CONTROLLER, &settings, 5, &mut |_| {});
+        assert!(!params.contains_key("cls_w"), "classifier must be stripped");
+        assert!(losses.iter().all(|l| l.is_finite()));
+        assert!(
+            losses.last().unwrap() < &losses[0],
+            "pretrain loss did not decrease: {:?}",
+            (losses[0], losses.last().unwrap())
+        );
+    }
+
+    #[test]
+    fn params_roundtrip_bitwise() {
+        let mut rng = Rng::new(9);
+        let params = model::init_controller(&SYNTH_CONTROLLER, &mut rng);
+        let dir = std::env::temp_dir().join(format!("hat_params_{}", std::process::id()));
+        save_params(&dir, &params).unwrap();
+        let loaded = load_params(&dir).unwrap();
+        assert_eq!(params, loaded);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,523 @@
+//! Conv4-family controllers: pure-rust forward **and** hand-derived
+//! reverse-mode backward, mirroring `python/compile/model.py`.
+//!
+//! Layer stack per block: 3x3 SAME conv → ReLU → 2x2 max-pool (VALID),
+//! then flatten → dense head → ReLU (embeddings are non-negative so the
+//! MCAM quantizer covers `[0, clip]`).
+//!
+//! Gradient conventions follow jax exactly (pinned by the golden-parity
+//! fixtures and the finite-difference checks in
+//! `rust/tests/test_hat_props.rs`):
+//!
+//! * `relu'(0) == 0` (`jax.nn.relu`'s custom JVP);
+//! * max-pool routes the incoming gradient to the **first** maximal
+//!   element of the window in row-major order (`lax.reduce_window`'s
+//!   select-and-scatter semantics);
+//! * `l2_normalize` backward is `g/s - x (x·g)/(n s^2)` with
+//!   `s = n + 1e-8` (an all-zero row falls back to `g/s` instead of the
+//!   python `NaN` — the only documented divergence, unreachable under
+//!   the fixture guards).
+//!
+//! All arithmetic is f32 (what XLA executes); accumulation order differs
+//! from XLA, which is why parity is tolerance-based (DESIGN.md §HAT).
+
+use super::tensor::{Params, Tensor};
+use crate::testutil::Rng;
+
+/// Static architecture description (mirror of the python
+/// `ControllerConfig`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ControllerConfig {
+    pub name: &'static str,
+    pub image_hw: usize,
+    pub channels: usize,
+    pub n_blocks: usize,
+    pub embed_dim: usize,
+}
+
+/// Conv4 with 48-d embeddings (the paper's Omniglot controller).
+pub const OMNIGLOT_CONTROLLER: ControllerConfig = ControllerConfig {
+    name: "conv4_omniglot",
+    image_hw: 28,
+    channels: 32,
+    n_blocks: 4,
+    embed_dim: 48,
+};
+
+/// Wider Conv4 with 480-d embeddings (ResNet12 stand-in, DESIGN.md §2).
+pub const CUB_CONTROLLER: ControllerConfig = ControllerConfig {
+    name: "conv4w_cub",
+    image_hw: 32,
+    channels: 64,
+    n_blocks: 4,
+    embed_dim: 480,
+};
+
+/// Budget controller for the rust-native synthetic training set
+/// (`hat::data`) driven by the `train` CLI subcommand.
+pub const SYNTH_CONTROLLER: ControllerConfig =
+    ControllerConfig { name: "conv2_synth", image_hw: 12, channels: 8, n_blocks: 2, embed_dim: 16 };
+
+impl ControllerConfig {
+    /// Flattened feature size after `n_blocks` halvings.
+    pub fn flat_dim(&self) -> usize {
+        let mut hw = self.image_hw;
+        for _ in 0..self.n_blocks {
+            hw /= 2;
+        }
+        hw.max(1) * hw.max(1) * self.channels
+    }
+
+}
+
+/// He-normal init (zero biases), drawing from the deterministic crate
+/// [`Rng`]. Not draw-compatible with the jax init — python↔rust parity
+/// runs start from fixture-supplied parameters instead.
+pub fn init_controller(cfg: &ControllerConfig, rng: &mut Rng) -> Params {
+    let mut params = Params::new();
+    let mut cin = 1usize;
+    for b in 0..cfg.n_blocks {
+        let fan_in = 3 * 3 * cin;
+        let std = (2.0 / fan_in as f64).sqrt();
+        let n = 3 * 3 * cin * cfg.channels;
+        let data: Vec<f32> = (0..n).map(|_| (std * rng.gaussian()) as f32).collect();
+        params.insert(format!("conv{b}_w"), Tensor::new(vec![3, 3, cin, cfg.channels], data));
+        params.insert(format!("conv{b}_b"), Tensor::zeros(&[cfg.channels]));
+        cin = cfg.channels;
+    }
+    let flat = cfg.flat_dim();
+    let std = (2.0 / flat as f64).sqrt();
+    let data: Vec<f32> = (0..flat * cfg.embed_dim).map(|_| (std * rng.gaussian()) as f32).collect();
+    params.insert("head_w".to_string(), Tensor::new(vec![flat, cfg.embed_dim], data));
+    params.insert("head_b".to_string(), Tensor::zeros(&[cfg.embed_dim]));
+    params
+}
+
+/// Linear classifier head over the embeddings (pretrain stage only).
+pub fn init_classifier_head(cfg: &ControllerConfig, n_classes: usize, rng: &mut Rng) -> Params {
+    let std = (2.0 / cfg.embed_dim as f64).sqrt();
+    let data: Vec<f32> =
+        (0..cfg.embed_dim * n_classes).map(|_| (std * rng.gaussian()) as f32).collect();
+    let mut params = Params::new();
+    params.insert("cls_w".to_string(), Tensor::new(vec![cfg.embed_dim, n_classes], data));
+    params.insert("cls_b".to_string(), Tensor::zeros(&[n_classes]));
+    params
+}
+
+// ---------------------------------------------------------------------------
+// forward (with caches) + backward
+// ---------------------------------------------------------------------------
+
+struct BlockCache {
+    in_h: usize,
+    in_w: usize,
+    in_c: usize,
+    /// Input activations of the block's conv, `(B, in_h, in_w, in_c)`.
+    conv_in: Vec<f32>,
+    /// Post-ReLU pre-pool activations, `(B, in_h, in_w, channels)`.
+    relu_out: Vec<f32>,
+    /// Flat index into `relu_out` of each pooled element's argmax.
+    argmax: Vec<usize>,
+    out_h: usize,
+    out_w: usize,
+}
+
+/// Activations retained by [`forward`] for the backward pass.
+pub struct ForwardCache {
+    batch: usize,
+    blocks: Vec<BlockCache>,
+    flat: Vec<f32>,
+    /// Final embeddings (post-ReLU), `(B, embed_dim)`.
+    pub emb: Vec<f32>,
+}
+
+/// 3x3 SAME convolution, NHWC x HWIO (f32 accumulation like XLA).
+fn conv2d_same(
+    x: &[f32],
+    batch: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    weight: &Tensor,
+    bias: &Tensor,
+) -> Vec<f32> {
+    let cout = weight.dims[3];
+    debug_assert_eq!(weight.dims, vec![3, 3, cin, cout]);
+    let mut out = vec![0.0f32; batch * h * w * cout];
+    for n in 0..batch {
+        for y in 0..h {
+            for xx in 0..w {
+                let out_base = ((n * h + y) * w + xx) * cout;
+                for co in 0..cout {
+                    let mut acc = bias.data[co];
+                    for ky in 0..3 {
+                        let iy = y as isize + ky as isize - 1;
+                        if iy < 0 || iy >= h as isize {
+                            continue;
+                        }
+                        for kx in 0..3 {
+                            let ix = xx as isize + kx as isize - 1;
+                            if ix < 0 || ix >= w as isize {
+                                continue;
+                            }
+                            let in_base = ((n * h + iy as usize) * w + ix as usize) * cin;
+                            let w_base = ((ky * 3 + kx) * cin) * cout + co;
+                            for ci in 0..cin {
+                                acc += x[in_base + ci] * weight.data[w_base + ci * cout];
+                            }
+                        }
+                    }
+                    out[out_base + co] = acc;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// 2x2/2 VALID max-pool; returns pooled values plus per-element argmax
+/// (first maximum in row-major window order — the jax routing rule).
+fn maxpool2(
+    x: &[f32],
+    batch: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+) -> (Vec<f32>, Vec<usize>, usize, usize) {
+    let oh = h / 2;
+    let ow = w / 2;
+    let mut out = vec![0.0f32; batch * oh * ow * c];
+    let mut argmax = vec![0usize; batch * oh * ow * c];
+    for n in 0..batch {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for ch in 0..c {
+                    let mut best = f32::NEG_INFINITY;
+                    let mut arg = 0usize;
+                    for dy in 0..2 {
+                        for dx in 0..2 {
+                            let idx = ((n * h + 2 * oy + dy) * w + 2 * ox + dx) * c + ch;
+                            if x[idx] > best {
+                                best = x[idx];
+                                arg = idx;
+                            }
+                        }
+                    }
+                    let o = ((n * oh + oy) * ow + ox) * c + ch;
+                    out[o] = best;
+                    argmax[o] = arg;
+                }
+            }
+        }
+    }
+    (out, argmax, oh, ow)
+}
+
+/// Controller forward: `images` is `(B, hw, hw, 1)` row-major. Returns
+/// the cache whose `emb` field holds the `(B, embed_dim)` embeddings.
+pub fn forward(params: &Params, cfg: &ControllerConfig, images: &[f32]) -> ForwardCache {
+    let hw = cfg.image_hw;
+    assert_eq!(images.len() % (hw * hw), 0, "image batch size mismatch");
+    let batch = images.len() / (hw * hw);
+    let mut x = images.to_vec();
+    let (mut h, mut w, mut cin) = (hw, hw, 1usize);
+    let mut blocks = Vec::with_capacity(cfg.n_blocks);
+    for b in 0..cfg.n_blocks {
+        let weight = &params[&format!("conv{b}_w")];
+        let bias = &params[&format!("conv{b}_b")];
+        let mut conv = conv2d_same(&x, batch, h, w, cin, weight, bias);
+        for v in conv.iter_mut() {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+        let (pooled, argmax, oh, ow) = maxpool2(&conv, batch, h, w, cfg.channels);
+        assert!(
+            oh >= 1 && ow >= 1,
+            "controller {}: spatial size collapsed to zero at block {b} — \
+             image_hw {} supports at most {} halvings",
+            cfg.name,
+            cfg.image_hw,
+            cfg.image_hw.ilog2()
+        );
+        blocks.push(BlockCache {
+            in_h: h,
+            in_w: w,
+            in_c: cin,
+            conv_in: x,
+            relu_out: conv,
+            argmax,
+            out_h: oh,
+            out_w: ow,
+        });
+        x = pooled;
+        h = oh;
+        w = ow;
+        cin = cfg.channels;
+    }
+    let flat = x;
+    let head_w = &params["head_w"];
+    let head_b = &params["head_b"];
+    let fdim = cfg.flat_dim();
+    assert_eq!(flat.len(), batch * fdim, "flatten size mismatch");
+    let mut emb = vec![0.0f32; batch * cfg.embed_dim];
+    for n in 0..batch {
+        for e in 0..cfg.embed_dim {
+            let mut acc = head_b.data[e];
+            for f in 0..fdim {
+                acc += flat[n * fdim + f] * head_w.data[f * cfg.embed_dim + e];
+            }
+            emb[n * cfg.embed_dim + e] = if acc > 0.0 { acc } else { 0.0 };
+        }
+    }
+    ForwardCache { batch, blocks, flat, emb }
+}
+
+/// Controller backward: gradients w.r.t. every parameter given
+/// `d_emb = dL/d embeddings` (post-ReLU seam).
+pub fn backward(
+    params: &Params,
+    cfg: &ControllerConfig,
+    cache: &ForwardCache,
+    d_emb: &[f32],
+) -> Params {
+    let batch = cache.batch;
+    let fdim = cfg.flat_dim();
+    assert_eq!(d_emb.len(), batch * cfg.embed_dim);
+    let mut grads = Params::new();
+
+    // head dense (+ its ReLU: emb > 0 iff pre-activation > 0)
+    let head_w = &params["head_w"];
+    let mut d_head_w = Tensor::zeros(&[fdim, cfg.embed_dim]);
+    let mut d_head_b = Tensor::zeros(&[cfg.embed_dim]);
+    let mut d_flat = vec![0.0f32; batch * fdim];
+    for n in 0..batch {
+        for e in 0..cfg.embed_dim {
+            let alive = cache.emb[n * cfg.embed_dim + e] > 0.0;
+            let g = if alive { d_emb[n * cfg.embed_dim + e] } else { 0.0 };
+            if g == 0.0 {
+                continue;
+            }
+            d_head_b.data[e] += g;
+            for f in 0..fdim {
+                d_head_w.data[f * cfg.embed_dim + e] += cache.flat[n * fdim + f] * g;
+                d_flat[n * fdim + f] += head_w.data[f * cfg.embed_dim + e] * g;
+            }
+        }
+    }
+    grads.insert("head_w".to_string(), d_head_w);
+    grads.insert("head_b".to_string(), d_head_b);
+
+    // blocks in reverse: unpool -> relu mask -> conv backward
+    let mut d_out = d_flat;
+    for b in (0..cfg.n_blocks).rev() {
+        let blk = &cache.blocks[b];
+        let (h, w, cin) = (blk.in_h, blk.in_w, blk.in_c);
+        let cout = cfg.channels;
+        let mut d_relu = vec![0.0f32; batch * h * w * cout];
+        for (o, &arg) in blk.argmax.iter().enumerate() {
+            d_relu[arg] += d_out[o];
+        }
+        for (i, g) in d_relu.iter_mut().enumerate() {
+            if blk.relu_out[i] <= 0.0 {
+                *g = 0.0;
+            }
+        }
+        let weight = &params[&format!("conv{b}_w")];
+        let mut d_w = Tensor::zeros(&[3, 3, cin, cout]);
+        let mut d_b = Tensor::zeros(&[cout]);
+        let mut d_in = vec![0.0f32; batch * h * w * cin];
+        for n in 0..batch {
+            for y in 0..h {
+                for xx in 0..w {
+                    let out_base = ((n * h + y) * w + xx) * cout;
+                    for co in 0..cout {
+                        let g = d_relu[out_base + co];
+                        if g == 0.0 {
+                            continue;
+                        }
+                        d_b.data[co] += g;
+                        for ky in 0..3 {
+                            let iy = y as isize + ky as isize - 1;
+                            if iy < 0 || iy >= h as isize {
+                                continue;
+                            }
+                            for kx in 0..3 {
+                                let ix = xx as isize + kx as isize - 1;
+                                if ix < 0 || ix >= w as isize {
+                                    continue;
+                                }
+                                let in_base = ((n * h + iy as usize) * w + ix as usize) * cin;
+                                let w_base = ((ky * 3 + kx) * cin) * cout + co;
+                                for ci in 0..cin {
+                                    d_w.data[w_base + ci * cout] += blk.conv_in[in_base + ci] * g;
+                                    d_in[in_base + ci] += weight.data[w_base + ci * cout] * g;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        grads.insert(format!("conv{b}_w"), d_w);
+        grads.insert(format!("conv{b}_b"), d_b);
+        d_out = d_in;
+    }
+    grads
+}
+
+// ---------------------------------------------------------------------------
+// classifier head, losses, normalization
+// ---------------------------------------------------------------------------
+
+/// `logits = emb @ cls_w + cls_b` for the pretrain classifier.
+pub fn apply_classifier(head: &Params, emb: &[f32], embed_dim: usize) -> Vec<f32> {
+    let cls_w = &head["cls_w"];
+    let cls_b = &head["cls_b"];
+    let n_classes = cls_b.data.len();
+    let batch = emb.len() / embed_dim;
+    let mut logits = vec![0.0f32; batch * n_classes];
+    for n in 0..batch {
+        for c in 0..n_classes {
+            let mut acc = cls_b.data[c];
+            for e in 0..embed_dim {
+                acc += emb[n * embed_dim + e] * cls_w.data[e * n_classes + c];
+            }
+            logits[n * n_classes + c] = acc;
+        }
+    }
+    logits
+}
+
+/// Mean cross-entropy over rows plus `dL/dlogits` (`(softmax - 1y)/B`,
+/// the log-softmax backward jax emits). Stable via per-row max shift.
+pub fn cross_entropy(logits: &[f32], labels: &[u32], n_classes: usize) -> (f32, Vec<f32>) {
+    let batch = labels.len();
+    assert_eq!(logits.len(), batch * n_classes);
+    let mut d = vec![0.0f32; logits.len()];
+    let mut loss = 0.0f32;
+    for n in 0..batch {
+        let row = &logits[n * n_classes..(n + 1) * n_classes];
+        let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for &l in row {
+            sum += (l - max).exp();
+        }
+        let lse = max + sum.ln();
+        loss += -(row[labels[n] as usize] - lse);
+        for c in 0..n_classes {
+            let softmax = (row[c] - max).exp() / sum;
+            d[n * n_classes + c] =
+                (softmax - if c as u32 == labels[n] { 1.0 } else { 0.0 }) / batch as f32;
+        }
+    }
+    (loss / batch as f32, d)
+}
+
+/// Row-wise `x / (||x|| + 1e-8)`.
+pub fn l2_normalize(x: &[f32], dim: usize) -> Vec<f32> {
+    let mut out = x.to_vec();
+    for row in out.chunks_mut(dim) {
+        let n = row.iter().map(|&v| v * v).sum::<f32>().sqrt();
+        let s = n + 1e-8;
+        for v in row.iter_mut() {
+            *v /= s;
+        }
+    }
+    out
+}
+
+/// Backward of [`l2_normalize`]: `dx = g/s - x (x·g)/(n s^2)`.
+pub fn l2_normalize_backward(x: &[f32], g: &[f32], dim: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; x.len()];
+    for r in 0..x.len() / dim {
+        let xs = &x[r * dim..(r + 1) * dim];
+        let gs = &g[r * dim..(r + 1) * dim];
+        let n = xs.iter().map(|&v| v * v).sum::<f32>().sqrt();
+        let s = n + 1e-8;
+        if n == 0.0 {
+            for i in 0..dim {
+                out[r * dim + i] = gs[i] / s;
+            }
+            continue;
+        }
+        let dot: f32 = xs.iter().zip(gs).map(|(&a, &b)| a * b).sum();
+        for i in 0..dim {
+            out[r * dim + i] = gs[i] / s - xs[i] * dot / (n * s * s);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> ControllerConfig {
+        ControllerConfig { name: "tiny", image_hw: 8, channels: 3, n_blocks: 2, embed_dim: 4 }
+    }
+
+    #[test]
+    fn flat_dims() {
+        assert_eq!(OMNIGLOT_CONTROLLER.flat_dim(), 32); // 28 -> 14 -> 7 -> 3 -> 1
+        assert_eq!(CUB_CONTROLLER.flat_dim(), 2 * 2 * 64);
+        assert_eq!(tiny_cfg().flat_dim(), 2 * 2 * 3);
+    }
+
+    #[test]
+    fn forward_shapes_and_nonnegative() {
+        let cfg = tiny_cfg();
+        let mut rng = Rng::new(1);
+        let params = init_controller(&cfg, &mut rng);
+        let images: Vec<f32> = (0..2 * 64).map(|_| rng.next_f64() as f32).collect();
+        let cache = forward(&params, &cfg, &images);
+        assert_eq!(cache.emb.len(), 2 * cfg.embed_dim);
+        assert!(cache.emb.iter().all(|&v| v >= 0.0 && v.is_finite()));
+    }
+
+    #[test]
+    fn pool_routes_to_first_max() {
+        // window [[1, 1], [1, 0.5]] must route to element (0, 0).
+        let x = vec![1.0, 1.0, 1.0, 0.5];
+        let (out, argmax, oh, ow) = maxpool2(&x, 1, 2, 2, 1);
+        assert_eq!((oh, ow), (1, 1));
+        assert_eq!(out, vec![1.0]);
+        assert_eq!(argmax, vec![0]);
+    }
+
+    #[test]
+    fn odd_dims_drop_last_row_col() {
+        // 3x3 -> 1x1 (VALID pooling ignores the trailing row/column).
+        let x: Vec<f32> = (0..9).map(|i| i as f32).collect();
+        let (out, _, oh, ow) = maxpool2(&x, 1, 3, 3, 1);
+        assert_eq!((oh, ow), (1, 1));
+        assert_eq!(out, vec![4.0]); // max of [[0,1],[3,4]]
+    }
+
+    #[test]
+    fn cross_entropy_uniform_logits() {
+        let (loss, d) = cross_entropy(&[0.0, 0.0, 0.0, 0.0], &[2], 4);
+        assert!((loss - (4.0f32).ln()).abs() < 1e-6);
+        assert!((d[2] - (0.25 - 1.0)).abs() < 1e-6);
+        assert!((d[0] - 0.25).abs() < 1e-6);
+    }
+
+    #[test]
+    fn l2_normalize_unit_norm() {
+        let x = vec![3.0, 4.0];
+        let y = l2_normalize(&x, 2);
+        let n = (y[0] * y[0] + y[1] * y[1]).sqrt();
+        assert!((n - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn l2_backward_orthogonal_to_x() {
+        // d||x||-invariant direction: gradient of y wrt x is orthogonal
+        // to x when contracted with x (up to the eps regulariser).
+        let x = vec![0.6, -1.2, 0.3];
+        let g = vec![0.5, 0.25, -1.0];
+        let dx = l2_normalize_backward(&x, &g, 3);
+        let dot: f32 = dx.iter().zip(&x).map(|(&a, &b)| a * b).sum();
+        assert!(dot.abs() < 1e-5, "x·dx = {dot}");
+    }
+}

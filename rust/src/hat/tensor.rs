@@ -1,0 +1,102 @@
+//! Dense f32 tensors and named parameter trees for the HAT trainer.
+//!
+//! The training subsystem works on flat maps `name → Tensor` (the rust
+//! mirror of the python parameter dicts in `python/compile/model.py`).
+//! A [`std::collections::BTreeMap`] keeps iteration order deterministic,
+//! which makes seeded training runs and the Adam update replay
+//! bit-for-bit (`rust/tests/test_hat_props.rs`).
+
+use std::collections::BTreeMap;
+
+/// A dense row-major f32 tensor with an explicit shape.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(dims: Vec<usize>, data: Vec<f32>) -> Tensor {
+        assert_eq!(
+            dims.iter().product::<usize>(),
+            data.len(),
+            "tensor shape {dims:?} does not match {} elements",
+            data.len()
+        );
+        Tensor { dims, data }
+    }
+
+    pub fn zeros(dims: &[usize]) -> Tensor {
+        Tensor { dims: dims.to_vec(), data: vec![0.0; dims.iter().product()] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}
+
+/// A named parameter (or gradient) tree.
+pub type Params = BTreeMap<String, Tensor>;
+
+/// Zero tensors with the same names and shapes as `params`.
+pub fn zeros_like(params: &Params) -> Params {
+    params.iter().map(|(k, t)| (k.clone(), Tensor::zeros(&t.dims))).collect()
+}
+
+/// Elementwise `into += from` over matching trees (gradient accumulation
+/// across the support and query backward passes of a meta step).
+pub fn accumulate(into: &mut Params, from: &Params) {
+    for (name, src) in from {
+        let dst = into.get_mut(name).unwrap_or_else(|| panic!("missing grad tensor {name:?}"));
+        assert_eq!(dst.dims, src.dims, "grad shape mismatch for {name:?}");
+        for (d, s) in dst.data.iter_mut().zip(&src.data) {
+            *d += s;
+        }
+    }
+}
+
+/// True when any pair of same-named tensors differs (used by the
+/// training smoke checks: a meta step must move the parameters).
+pub fn params_differ(a: &Params, b: &Params) -> bool {
+    a.iter().any(|(k, t)| b.get(k).map(|u| u.data != t.data).unwrap_or(true))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_checks_shape() {
+        let t = Tensor::new(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.len(), 6);
+        assert!(!t.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "does not match")]
+    fn bad_shape_panics() {
+        Tensor::new(vec![2, 3], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn accumulate_adds() {
+        let mut a: Params = [("w".to_string(), Tensor::new(vec![2], vec![1.0, 2.0]))].into();
+        let b: Params = [("w".to_string(), Tensor::new(vec![2], vec![0.5, -1.0]))].into();
+        accumulate(&mut a, &b);
+        assert_eq!(a["w"].data, vec![1.5, 1.0]);
+        assert!(params_differ(&a, &b));
+        assert!(!params_differ(&a, &a.clone()));
+    }
+
+    #[test]
+    fn zeros_like_matches_shapes() {
+        let a: Params = [("w".to_string(), Tensor::new(vec![2, 2], vec![1.0; 4]))].into();
+        let z = zeros_like(&a);
+        assert_eq!(z["w"].dims, vec![2, 2]);
+        assert!(z["w"].data.iter().all(|&x| x == 0.0));
+    }
+}

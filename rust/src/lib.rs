@@ -48,6 +48,7 @@ pub mod encoding;
 pub mod energy;
 pub mod experiments;
 pub mod fsl;
+pub mod hat;
 pub mod mapping;
 pub mod metrics;
 pub mod quant;

@@ -6,8 +6,15 @@
 //!                --cl 32 --mode avss --episodes 3 [--ideal]
 //! mcamvss serve  --dataset omniglot --requests 200 --workers 4
 //!                [--top-k 5] [--backend mcam|float] [--metric l1|l2|cosine]
+//! mcamvss train  [--smoke] [--variant std|hat_svss|hat_avss]
+//!                [--steps N] [--meta-episodes N] [--cl N] [--out dir]
 //! mcamvss experiment --filter table2
 //! ```
+//!
+//! `train` runs the pure-rust HAT pipeline (pretrain + meta-train) on
+//! the built-in synthetic dataset and, with `--out`, exports an
+//! artifact tree that `eval --artifacts <dir> --dataset synth` serves —
+//! the train-in-rust path of DESIGN.md §HAT.
 
 use anyhow::{bail, Context, Result};
 use mcamvss::baselines::{FloatBaseline, Metric};
@@ -17,12 +24,13 @@ use mcamvss::coordinator::{CoordinatorConfig, Payload, Response, Server};
 use mcamvss::device::variation::VariationModel;
 use mcamvss::encoding::Encoding;
 use mcamvss::experiments::{self, EpisodeSettings};
-use mcamvss::fsl::sample_episode;
+use mcamvss::config::TrainSettings;
 use mcamvss::fsl::store::ArtifactStore;
+use mcamvss::fsl::{episode_rng, sample_episode};
+use mcamvss::hat;
 use mcamvss::metrics::LatencyHistogram;
 use mcamvss::search::engine::EngineConfig;
 use mcamvss::search::{SearchMode, SearchOptions};
-use mcamvss::testutil::Rng;
 use std::time::Instant;
 
 fn main() {
@@ -38,8 +46,11 @@ fn run() -> Result<()> {
         Some("info") | None => cmd_info(),
         Some("eval") => cmd_eval(&args),
         Some("serve") => cmd_serve(&args),
+        Some("train") => cmd_train(&args),
         Some("experiment") => cmd_experiment(&args),
-        Some(other) => bail!("unknown command {other:?} (info | eval | serve | experiment)"),
+        Some(other) => {
+            bail!("unknown command {other:?} (info | eval | serve | train | experiment)")
+        }
     }
 }
 
@@ -170,7 +181,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // Episode: program the support set once, then stream query requests.
     let ds = store.embeddings(&cfg.dataset, &cfg.variant, "test")?;
     let clip = store.clip(&cfg.dataset, &cfg.variant)?;
-    let mut rng = Rng::new(cfg.seed);
+    // Episode 0 of the shared train/eval seed-derivation scheme.
+    let mut rng = episode_rng(cfg.seed, 0);
     let episode = sample_episode(&ds, &mut rng, cfg.n_way, cfg.k_shot, cfg.n_query);
     let support: Vec<&[f32]> =
         episode.support.iter().map(|&(row, _)| ds.embedding(row)).collect();
@@ -289,6 +301,102 @@ fn report_serve(responses: &[Response], truth: &[u32], wall: std::time::Duration
         latency.quantile_us(0.99),
         latency.max_us()
     );
+}
+
+/// Pure-rust HAT training on the built-in synthetic dataset: pretrain,
+/// then the three meta-training variants; `--out` exports an
+/// [`ArtifactStore`]-compatible tree plus the trained weights.
+fn cmd_train(args: &Args) -> Result<()> {
+    // Training budget: the [train] section of --config if given, else
+    // the synth preset. The data is always the rust-native synthetic
+    // set (hat::data) — the python datasets never cross the FFI.
+    let (mut settings, config_seed) = match args.opt("config") {
+        Some(path) => {
+            let cfg = Config::load(std::path::Path::new(path))?;
+            (cfg.train, Some(cfg.seed))
+        }
+        None => (TrainSettings::synth(), None),
+    };
+    let seed = args
+        .opt_usize("seed")?
+        .map(|s| s as u64)
+        .or(config_seed)
+        .unwrap_or(0x5EED);
+    if args.flag("smoke") {
+        // The smoke harness runs a fixed tiny budget; refuse flags it
+        // would silently drop rather than pretend they took effect
+        // (--config included: only --seed reaches the smoke run).
+        for key in ["steps", "meta-episodes", "cl", "variant", "out", "config"] {
+            if args.opt(key).is_some() {
+                bail!("--{key} is not supported with --smoke (fixed smoke budget)");
+            }
+        }
+        println!("train --smoke: pretrain + 2 meta steps per variant (ideal device, seed {seed})");
+        print!("{}", hat::smoke(seed)?);
+        println!("train smoke ok");
+        return Ok(());
+    }
+
+    if let Some(steps) = args.opt_usize("steps")? {
+        settings.pretrain_steps = steps;
+    }
+    if let Some(episodes) = args.opt_usize("meta-episodes")? {
+        settings.meta_episodes = episodes;
+    }
+    if let Some(cl) = args.opt_usize("cl")? {
+        settings.hat_cl = cl;
+    }
+    settings.validate()?;
+    let variants: Vec<&str> = match args.opt("variant") {
+        Some(v) => {
+            hat::Variant::from_name(v)?; // typed UnknownVariant error
+            vec![v]
+        }
+        None => hat::VARIANTS.to_vec(),
+    };
+
+    let cfg = hat::SYNTH_CONTROLLER;
+    let data = hat::data::generate(hat::data::SynthSpec::default_spec(), seed);
+    println!(
+        "train synth: {} train / {} test images ({}x{}), controller {} ({}-d)",
+        data.train.len(),
+        data.test.len(),
+        data.spec.hw,
+        data.spec.hw,
+        cfg.name,
+        cfg.embed_dim
+    );
+    let t0 = Instant::now();
+    let mut log = |line: String| println!("  {line}");
+    let (pretrained, losses) = hat::pretrain(&data.train, &cfg, &settings, seed, &mut log);
+    if !losses.iter().all(|l| l.is_finite()) {
+        bail!("pretrain produced a non-finite loss");
+    }
+
+    let out_dir = args.opt("out").map(std::path::PathBuf::from);
+    for &variant in &variants {
+        let trained =
+            hat::meta_train(&pretrained, &data.train, &cfg, &settings, variant, seed, &mut log)?;
+        if let Some(dir) = &out_dir {
+            let clip = hat::export_artifacts(dir, "synth", variant, &cfg, &trained, &data)?;
+            hat::save_params(&dir.join("weights").join(format!("synth_{variant}")), &trained)?;
+            println!("  [export {variant}] clip {clip:.4} -> {}", dir.display());
+        }
+    }
+    println!(
+        "pretrain + {} meta variant(s) in {:.1}s",
+        variants.len(),
+        t0.elapsed().as_secs_f64()
+    );
+    if let Some(dir) = &out_dir {
+        println!(
+            "evaluate with: mcamvss eval --artifacts {} --dataset synth --variant hat_avss \
+             --cl {} --episodes 5",
+            dir.display(),
+            settings.hat_cl
+        );
+    }
+    Ok(())
 }
 
 fn cmd_experiment(args: &Args) -> Result<()> {

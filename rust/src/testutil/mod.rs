@@ -138,6 +138,42 @@ where
     }
 }
 
+/// Central-difference gradient check for the HAT backward passes: for
+/// each probed coordinate `i`, `(f(x + eps e_i) - f(x - eps e_i)) / 2eps`
+/// must match `grad[i]` within `rtol` relative / `atol` absolute
+/// tolerance. Probe a subset of coordinates via `indices` (finite
+/// differences over every weight of a Conv4 would dominate test time);
+/// panics with the offending coordinate on mismatch.
+pub fn check_gradient(
+    name: &str,
+    f: &mut dyn FnMut(&[f64]) -> f64,
+    x: &[f64],
+    grad: &[f64],
+    indices: &[usize],
+    eps: f64,
+    rtol: f64,
+    atol: f64,
+) {
+    assert_eq!(x.len(), grad.len(), "{name}: grad length mismatch");
+    let mut probe = x.to_vec();
+    for &i in indices {
+        probe[i] = x[i] + eps;
+        let hi = f(&probe);
+        probe[i] = x[i] - eps;
+        let lo = f(&probe);
+        probe[i] = x[i];
+        let fd = (hi - lo) / (2.0 * eps);
+        let err = (fd - grad[i]).abs();
+        let tol = atol + rtol * fd.abs().max(grad[i].abs());
+        assert!(
+            err <= tol,
+            "gradient check {name:?} failed at index {i}: finite-diff {fd:.6e} vs \
+             analytic {:.6e} (err {err:.2e} > tol {tol:.2e})",
+            grad[i]
+        );
+    }
+}
+
 /// Assert two floats agree to relative tolerance.
 pub fn assert_close(a: f64, b: f64, rtol: f64) {
     let scale = a.abs().max(b.abs()).max(1e-12);
@@ -240,5 +276,30 @@ mod tests {
     #[should_panic(expected = "falsified")]
     fn forall_reports_failure() {
         forall("always-false", 4, |r| r.below(10), |_| false);
+    }
+
+    #[test]
+    fn gradient_check_accepts_true_gradient() {
+        // f(x) = x0^2 + 3 x1, grad = [2 x0, 3]
+        let x = [1.5, -0.5];
+        let grad = [3.0, 3.0];
+        check_gradient(
+            "quadratic",
+            &mut |v: &[f64]| v[0] * v[0] + 3.0 * v[1],
+            &x,
+            &grad,
+            &[0, 1],
+            1e-5,
+            1e-6,
+            1e-8,
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "gradient check")]
+    fn gradient_check_rejects_wrong_gradient() {
+        let x = [1.0];
+        let grad = [5.0]; // true gradient is 2.0
+        check_gradient("wrong", &mut |v: &[f64]| v[0] * v[0], &x, &grad, &[0], 1e-5, 1e-4, 1e-8);
     }
 }

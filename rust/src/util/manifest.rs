@@ -58,6 +58,13 @@ impl Manifest {
         self.entries.len()
     }
 
+    /// Iterate `(key, value)` pairs (used by
+    /// [`crate::fsl::store::ArtifactWriter`] to merge into an existing
+    /// manifest instead of clobbering it).
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &str)> {
+        self.entries.iter().map(|(k, v)| (k.as_str(), v.as_str()))
+    }
+
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
     }
