@@ -14,10 +14,12 @@
 //!   throughput numbers for DESIGN.md §Perf.
 //!
 //! The tracked perf targets (`perf_kernel`, `perf_engine`,
-//! `perf_batch_shards`, `perf_topk`) additionally write their measurements into
-//! `BENCH_engine.json` at the repository root (merged key-by-key, so
-//! partial runs keep the other sections), tracking the perf trajectory
-//! across PRs.
+//! `perf_batch_shards`, `perf_topk`, `perf_cascade`) additionally write
+//! their measurements into `BENCH_engine.json` at the repository root
+//! (merged key-by-key, so partial runs keep the other sections), tracking
+//! the perf trajectory across PRs. `perf_cascade` doubles as the cascade
+//! acceptance smoke: ≥2× sensed-string reduction at ≤0.5% synth accuracy
+//! drop is asserted on every run.
 
 use mcamvss::coordinator::{CoordinatorConfig, Payload, Server};
 use mcamvss::device::block::McamBlock;
@@ -154,6 +156,17 @@ fn main() {
         }
     }
 
+    // perf_cascade renders the same sweep; skip the figure section when
+    // both would run (an unfiltered `cargo bench`) so the sweep executes
+    // once.
+    if want("fig_cascade") && !want("perf_cascade") {
+        section("fig_cascade");
+        let t0 = Instant::now();
+        let sweep = experiments::fig_cascade::run(0xCA5CADE).unwrap();
+        println!("{}", experiments::fig_cascade::render(&sweep));
+        println!("[fig_cascade wall: {:.1}s]\n", t0.elapsed().as_secs_f64());
+    }
+
     if want("ablation") {
         if let Some(store) = &store {
             section("ablations");
@@ -199,6 +212,10 @@ fn main() {
     if want("perf_topk") {
         section("perf_topk");
         perf_topk(&mut report);
+    }
+    if want("perf_cascade") {
+        section("perf_cascade");
+        perf_cascade(&mut report);
     }
     if want("perf_coordinator") {
         section("perf_coordinator");
@@ -513,6 +530,99 @@ fn perf_batch_shards(report: &mut Vec<(String, Json)>) {
             .build(),
     ));
     println!();
+}
+
+/// Cascade acceptance smoke (ISSUE 5): the prune-and-refine schedule must
+/// cut sensed strings ≥2× on the 512-slot synth support set at ≤0.5%
+/// accuracy drop versus the full AVSS scan — asserted on every run so CI
+/// catches a frontier regression — plus host-side throughput of the
+/// accepted operating point.
+fn perf_cascade(report: &mut Vec<(String, Json)>) {
+    use mcamvss::search::cascade::{CascadeConfig, Shortlist};
+
+    let sweep = experiments::fig_cascade::run(0xCA5CADE).unwrap();
+    println!("{}", experiments::fig_cascade::render(&sweep));
+    let full_acc = sweep.full_scan_accuracy_pct();
+    let best = sweep.best_at_reduction(2.0).expect("sweep must include a >=2x point");
+    assert!(
+        best.reduction >= 2.0,
+        "sensed-string reduction {:.2}x below the 2x acceptance bar",
+        best.reduction
+    );
+    let drop = full_acc - best.accuracy_pct;
+    assert!(
+        drop <= 0.5 + 1e-9,
+        "accuracy drop {drop:.2}% > 0.5% at {} (full scan {full_acc:.2}%)",
+        best.label
+    );
+    println!(
+        "ACCEPTANCE: {} -> {:.2}x sensed-string reduction, accuracy {:.2}% \
+         (full scan {:.2}%, drop {:.2}%)",
+        best.label, best.reduction, best.accuracy_pct, full_acc, drop
+    );
+
+    // Host throughput at the canonical two-stage point vs the full scan
+    // (same 512-slot synth scale; ideal device so runs are deterministic).
+    let mut rng = Rng::new(0xCA5);
+    let dims = 48;
+    let n_vectors = 512;
+    let embs: Vec<Vec<f32>> = (0..n_vectors)
+        .map(|_| (0..dims).map(|_| rng.range_f64(0.0, 3.0) as f32).collect())
+        .collect();
+    let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
+    let labels: Vec<u32> = (0..n_vectors as u32).map(|i| i / 8).collect();
+    let cfg = EngineConfig::new(Encoding::Mtmc, 8, SearchMode::Avss, 3.0)
+        .ideal()
+        .with_seed(7);
+    let reps = 4;
+    let queries = 64;
+    let mut measured: Vec<(&str, f64, f64)> = Vec::new();
+    for (name, cascade) in [
+        ("full_scan", None),
+        (
+            "cascade_2of8_keep64",
+            Some(CascadeConfig::two_stage(2, Shortlist::Count(64))),
+        ),
+    ] {
+        let mut engine = SearchEngine::new(cfg, dims, n_vectors).unwrap();
+        engine.program_support(&refs, &labels).unwrap();
+        engine.set_cascade(cascade).unwrap();
+        engine.search(&SearchRequest::new(&embs[0])).unwrap(); // warmup
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            for q in embs.iter().take(queries) {
+                engine.search(&SearchRequest::new(q)).unwrap();
+            }
+        }
+        let per_s = (reps * queries) as f64 / t0.elapsed().as_secs_f64();
+        let sensed_per_search =
+            engine.energy().sensed_strings as f64 / engine.timing().searches as f64;
+        println!(
+            "{name}: {per_s:.0} searches/s (host), {sensed_per_search:.0} strings sensed/search"
+        );
+        measured.push((name, per_s, sensed_per_search));
+    }
+    println!(
+        "host speedup {:.2}x at {:.2}x sensed-string reduction\n",
+        measured[1].1 / measured[0].1,
+        measured[0].2 / measured[1].2
+    );
+
+    report.push((
+        "perf_cascade".to_string(),
+        ObjBuilder::new()
+            .field("full_scan_sensed_per_query", Json::num(sweep.full_scan_sensed))
+            .field("full_scan_accuracy_pct", Json::num(full_acc))
+            .field("best_label", Json::str(best.label.clone()))
+            .field("best_reduction", Json::num(best.reduction))
+            .field("best_sensed_per_query", Json::num(best.sensed_per_query))
+            .field("best_accuracy_pct", Json::num(best.accuracy_pct))
+            .field("best_avg_iterations", Json::num(best.avg_iterations))
+            .field("host_full_scan_searches_per_s", Json::num(measured[0].1))
+            .field("host_cascade_searches_per_s", Json::num(measured[1].1))
+            .field("host_speedup", Json::num(measured[1].1 / measured[0].1))
+            .build(),
+    ));
 }
 
 /// Coordinator overhead: served throughput vs bare engine throughput.

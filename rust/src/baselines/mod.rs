@@ -283,6 +283,7 @@ impl VectorSearchBackend for FloatBaseline {
                 iterations: 0,
                 device_latency_us: 0.0,
                 full_scores,
+                cascade: None,
             });
         }
         Ok(responses)
@@ -298,7 +299,11 @@ impl VectorSearchBackend for FloatBaseline {
             vectors: self.len(),
             tombstones: self.dead,
             shards: 1,
-            iterations_per_search: 0,
+            max_iterations_per_search: 0,
+            svss_iterations_per_search: 0,
+            avss_iterations_per_search: 0,
+            cascade_max_iterations_per_search: 0,
+            avg_iterations_per_search: 0.0,
             nj_per_search: 0.0,
         }
     }

@@ -18,7 +18,8 @@ const VALUE_KEYS: &[&str] = &[
     "config", "dataset", "variant", "encoding", "cl", "mode", "n-way", "k-shot",
     "n-query", "episodes", "workers", "shards", "requests", "seed", "out",
     "artifacts", "filter", "batch", "top-k", "backend", "metric", "steps",
-    "meta-episodes",
+    "meta-episodes", "cascade-columns", "cascade-ladder", "cascade-shortlist",
+    "cascade-margin", "cascade-budget",
 ];
 
 impl Args {
@@ -109,6 +110,19 @@ mod tests {
         assert_eq!(args.opt_usize("top-k").unwrap(), Some(5));
         assert_eq!(args.opt("backend"), Some("float"));
         assert_eq!(args.opt("metric"), Some("l2"));
+    }
+
+    #[test]
+    fn cascade_keys_take_values() {
+        let args = parse(&[
+            "serve", "--cascade", "--cascade-columns", "2", "--cascade-shortlist", "64",
+            "--cascade-margin", "6.5", "--cascade-budget", "40",
+        ]);
+        assert!(args.flag("cascade"));
+        assert_eq!(args.opt_usize("cascade-columns").unwrap(), Some(2));
+        assert_eq!(args.opt_usize("cascade-shortlist").unwrap(), Some(64));
+        assert_eq!(args.opt("cascade-margin"), Some("6.5"));
+        assert_eq!(args.opt_usize("cascade-budget").unwrap(), Some(40));
     }
 
     #[test]

@@ -8,9 +8,92 @@ pub use toml::{TomlDoc, TomlValue};
 
 use crate::device::variation::VariationModel;
 use crate::encoding::Encoding;
+use crate::search::cascade::{CascadeConfig, CascadeStage, Shortlist};
 use crate::search::SearchMode;
 use anyhow::{bail, Context, Result};
 use std::path::Path;
+
+/// The `[cascade]` TOML section: a progressive-precision prune-and-refine
+/// schedule in its canonical two-stage form — a coarse column-prefix pass
+/// over every slot, then a full-precision refine of the shortlist
+/// (DESIGN.md §Cascade). Resolved against the engine's word length by
+/// [`CascadeSettings::to_cascade`]; richer multi-stage schedules are
+/// available programmatically via [`CascadeConfig`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct CascadeSettings {
+    /// Coarse-stage column prefix; `None` = half the code word (≥ 1).
+    pub coarse_columns: Option<usize>,
+    /// Coarse-stage SA ladder depth; `None` = the engine's full ladder.
+    pub coarse_ladder: Option<usize>,
+    /// Shortlist carried into the refine stage, as a count
+    /// (ignored when [`Self::shortlist_fraction`] is set).
+    pub shortlist: usize,
+    /// Shortlist as a keep-fraction of the live slots, `0 < f <= 1`.
+    pub shortlist_fraction: Option<f64>,
+    /// Early-exit margin (stage vote units); infinite = never exit.
+    pub safety_margin: f64,
+    /// Per-request word-line iteration budget.
+    pub iteration_budget: Option<u64>,
+}
+
+impl Default for CascadeSettings {
+    fn default() -> Self {
+        CascadeSettings {
+            coarse_columns: None,
+            coarse_ladder: None,
+            shortlist: 64,
+            shortlist_fraction: None,
+            safety_margin: f64::INFINITY,
+            iteration_budget: None,
+        }
+    }
+}
+
+impl CascadeSettings {
+    /// Resolve into an engine schedule for a `word_length`-column code
+    /// word (the engine re-validates against its own layout).
+    pub fn to_cascade(&self, word_length: usize) -> CascadeConfig {
+        let columns = self.coarse_columns.unwrap_or_else(|| (word_length / 2).max(1));
+        let shortlist = match self.shortlist_fraction {
+            Some(f) => Shortlist::Fraction(f),
+            None => Shortlist::Count(self.shortlist),
+        };
+        let mut stage0 = CascadeStage::coarse(columns, shortlist);
+        if let Some(ladder) = self.coarse_ladder {
+            stage0 = stage0.with_ladder_len(ladder);
+        }
+        let mut cascade = CascadeConfig::new(vec![stage0, CascadeStage::full()])
+            .with_safety_margin(self.safety_margin);
+        if let Some(budget) = self.iteration_budget {
+            cascade = cascade.with_iteration_budget(budget);
+        }
+        cascade
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.shortlist == 0 {
+            bail!("cascade shortlist must be >= 1");
+        }
+        if let Some(f) = self.shortlist_fraction {
+            if !f.is_finite() || f <= 0.0 || f > 1.0 {
+                bail!("cascade shortlist_fraction must be in (0, 1]");
+            }
+        }
+        if self.coarse_columns == Some(0) {
+            bail!("cascade coarse_columns must be >= 1");
+        }
+        if self.coarse_ladder == Some(0) {
+            bail!("cascade coarse_ladder must be >= 1");
+        }
+        if self.safety_margin.is_nan() || self.safety_margin < 0.0 {
+            bail!("cascade safety_margin must be >= 0");
+        }
+        if self.iteration_budget == Some(0) {
+            bail!("cascade iteration_budget must be >= 1");
+        }
+        Ok(())
+    }
+}
 
 /// Budgeted hyper-parameters for one HAT training run (mirror of the
 /// python `TrainSettings` in `compile/hat.py`), consumed by
@@ -131,6 +214,9 @@ pub struct Config {
     pub seed: u64,
     /// HAT training budget for the `train` subcommand.
     pub train: TrainSettings,
+    /// Optional progressive-precision cascade (`[cascade]` section /
+    /// `--cascade` flags); `None` serves full scans.
+    pub cascade: Option<CascadeSettings>,
 }
 
 impl Config {
@@ -154,6 +240,7 @@ impl Config {
             variation: VariationModel::nand_default(),
             seed: 0x5EED,
             train: TrainSettings::omniglot(),
+            cascade: None,
         }
     }
 
@@ -177,6 +264,7 @@ impl Config {
             variation: VariationModel::nand_default(),
             seed: 0x5EED,
             train: TrainSettings::cub(),
+            cascade: None,
         }
     }
 
@@ -201,6 +289,7 @@ impl Config {
             variation: VariationModel::nand_default(),
             seed: 0x5EED,
             train: TrainSettings::synth(),
+            cascade: None,
         }
     }
 
@@ -300,6 +389,38 @@ impl Config {
         if let Some(v) = doc.get_float("train", "noise_sigma") {
             cfg.train.noise_sigma = v;
         }
+        if doc.get_bool("cascade", "enabled") == Some(true) {
+            // Sign-checked integer reads: a negative value must be a
+            // config error, not a silent `as usize` wrap into a huge
+            // (and then silently clamped) count.
+            let get_pos = |key: &str| -> Result<Option<usize>> {
+                match doc.get_int("cascade", key) {
+                    None => Ok(None),
+                    Some(v) if v >= 1 => Ok(Some(v as usize)),
+                    Some(v) => bail!("cascade {key} must be >= 1, got {v}"),
+                }
+            };
+            let mut cascade = CascadeSettings::default();
+            if let Some(v) = get_pos("coarse_columns")? {
+                cascade.coarse_columns = Some(v);
+            }
+            if let Some(v) = get_pos("coarse_ladder")? {
+                cascade.coarse_ladder = Some(v);
+            }
+            if let Some(v) = get_pos("shortlist")? {
+                cascade.shortlist = v;
+            }
+            if let Some(v) = doc.get_float("cascade", "shortlist_fraction") {
+                cascade.shortlist_fraction = Some(v);
+            }
+            if let Some(v) = doc.get_float("cascade", "safety_margin") {
+                cascade.safety_margin = v;
+            }
+            if let Some(v) = get_pos("iteration_budget")? {
+                cascade.iteration_budget = Some(v as u64);
+            }
+            cfg.cascade = Some(cascade);
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -327,6 +448,9 @@ impl Config {
             bail!("B4E beyond CL=9 overflows 4^CL levels (paper sweeps 1..9)");
         }
         self.train.validate()?;
+        if let Some(cascade) = &self.cascade {
+            cascade.validate()?;
+        }
         Ok(())
     }
 }
@@ -385,6 +509,64 @@ program_sigma = 0.3
         assert!(Config::from_toml(&doc).is_err());
         let doc = TomlDoc::parse("[train]\nhat_cl = 0\n").unwrap();
         assert!(Config::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn cascade_section_parses_and_validates() {
+        let doc = TomlDoc::parse(
+            "[cascade]\nenabled = true\ncoarse_columns = 2\ncoarse_ladder = 4\n\
+             shortlist = 32\nsafety_margin = 6.5\niteration_budget = 40\n",
+        )
+        .unwrap();
+        let cfg = Config::from_toml(&doc).unwrap();
+        let cascade = cfg.cascade.expect("enabled section");
+        assert_eq!(cascade.coarse_columns, Some(2));
+        assert_eq!(cascade.coarse_ladder, Some(4));
+        assert_eq!(cascade.shortlist, 32);
+        assert_eq!(cascade.safety_margin, 6.5);
+        assert_eq!(cascade.iteration_budget, Some(40));
+        let resolved = cascade.to_cascade(8);
+        assert_eq!(resolved.stages.len(), 2);
+        resolved.validate().unwrap();
+
+        // not enabled → no cascade
+        let doc = TomlDoc::parse("[cascade]\nshortlist = 32\n").unwrap();
+        assert!(Config::from_toml(&doc).unwrap().cascade.is_none());
+
+        // malformed values are rejected
+        let doc = TomlDoc::parse("[cascade]\nenabled = true\nshortlist = 0\n").unwrap();
+        assert!(Config::from_toml(&doc).is_err());
+        // negative integers must error, never wrap through `as usize`
+        let doc = TomlDoc::parse("[cascade]\nenabled = true\nshortlist = -4\n").unwrap();
+        assert!(Config::from_toml(&doc).is_err());
+        let doc = TomlDoc::parse("[cascade]\nenabled = true\ncoarse_columns = -1\n").unwrap();
+        assert!(Config::from_toml(&doc).is_err());
+        let doc =
+            TomlDoc::parse("[cascade]\nenabled = true\nshortlist_fraction = 1.5\n").unwrap();
+        assert!(Config::from_toml(&doc).is_err());
+        let doc = TomlDoc::parse("[cascade]\nenabled = true\niteration_budget = 0\n").unwrap();
+        assert!(Config::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn cascade_settings_resolve_defaults() {
+        let settings = CascadeSettings::default();
+        settings.validate().unwrap();
+        let cascade = settings.to_cascade(8);
+        assert_eq!(cascade.stages[0].columns, Some(4), "half the word by default");
+        assert_eq!(cascade.stages[0].ladder_len, None);
+        assert!(cascade.safety_margin.is_infinite());
+        // fraction takes precedence over the count
+        let settings = CascadeSettings {
+            shortlist_fraction: Some(0.25),
+            ..CascadeSettings::default()
+        };
+        let cascade = settings.to_cascade(1);
+        assert_eq!(cascade.stages[0].columns, Some(1), "floor of one column");
+        assert!(matches!(
+            cascade.stages[0].shortlist,
+            crate::search::cascade::Shortlist::Fraction(f) if f == 0.25
+        ));
     }
 
     #[test]

@@ -152,6 +152,20 @@ impl Default for CoordinatorConfig {
 /// The serving coordinator. Generic over how embeddings are produced
 /// (identity for pre-embedded payloads, PJRT controller otherwise) *and*
 /// over the search substrate behind each worker.
+///
+/// ```
+/// use mcamvss::baselines::{FloatBaseline, Metric};
+/// use mcamvss::coordinator::{worker, CoordinatorConfig, Payload, Server};
+///
+/// let mut backend = FloatBaseline::new(2, Metric::L2)?;
+/// backend.program_support(&[&[0.0f32, 0.0] as &[f32], &[1.0, 1.0]], &[10, 20])?;
+/// let cfg = CoordinatorConfig { workers: 1, ..Default::default() };
+/// let server = Server::start_with_backends(cfg, vec![backend], worker::identity_embed())?;
+/// server.submit(Payload::Embedding(vec![0.9, 1.1]));
+/// let responses = server.shutdown();
+/// assert_eq!(responses[0].label(), Some(20));
+/// # Ok::<(), mcamvss::search::EngineError>(())
+/// ```
 pub struct Server {
     ingress: Arc<BoundedQueue<Request>>,
     responses: Arc<Mutex<Vec<Response>>>,
@@ -222,6 +236,23 @@ impl Server {
         labels: &[u32],
         embed: EmbedFn,
     ) -> Result<Server> {
+        Self::start_cascade(cfg, engine_cfg, None, dims, support, labels, embed)
+    }
+
+    /// [`Self::start`] with a progressive-precision cascade schedule
+    /// installed on every engine replica
+    /// ([`SearchEngine::set_cascade`], DESIGN.md §Cascade): replicas
+    /// answer with prune-and-refine scans and per-response
+    /// [`crate::search::CascadeStats`] accounting.
+    pub fn start_cascade(
+        cfg: CoordinatorConfig,
+        engine_cfg: EngineConfig,
+        cascade: Option<crate::search::cascade::CascadeConfig>,
+        dims: usize,
+        support: &[&[f32]],
+        labels: &[u32],
+        embed: EmbedFn,
+    ) -> Result<Server> {
         let support_set = crate::search::api::SupportSet::from_refs(dims, support, labels)?;
         let mut engines = Vec::with_capacity(cfg.workers);
         for w in 0..cfg.workers {
@@ -229,6 +260,7 @@ impl Server {
             ecfg.seed = crate::testutil::derive_seed(engine_cfg.seed, 0x1000 + w as u64);
             let mut engine = SearchEngine::new(ecfg, dims, support_set.len().max(1))?;
             engine.program(&support_set)?;
+            engine.set_cascade(cascade.clone())?;
             engines.push(engine);
         }
         Ok(Self::start_with_backends(cfg, engines, embed)?)
@@ -355,6 +387,45 @@ mod tests {
         for r in &responses {
             assert_eq!(r.hits().len(), 3, "top-3 request must return 3 ranked hits");
             assert!(r.hits().windows(2).all(|p| p[0].score >= p[1].score));
+        }
+    }
+
+    #[test]
+    fn cascade_replicas_serve_with_stats() {
+        use crate::search::cascade::{CascadeConfig, Shortlist};
+        let (embs, labels) = clustered(6, 3, 48);
+        let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
+        let cfg = CoordinatorConfig { workers: 2, ..Default::default() };
+        let ecfg = EngineConfig::new(Encoding::Mtmc, 8, SearchMode::Avss, 3.0).ideal();
+        let cascade = CascadeConfig::two_stage(2, Shortlist::Count(4));
+        let server = Server::start_cascade(
+            cfg,
+            ecfg,
+            Some(cascade),
+            48,
+            &refs,
+            &labels,
+            worker::identity_embed(),
+        )
+        .unwrap();
+        for emb in &embs {
+            server.submit(Payload::Embedding(emb.clone()));
+        }
+        let mut responses = server.shutdown();
+        responses.sort_by_key(|r| r.id);
+        assert_eq!(responses.len(), embs.len());
+        for (i, r) in responses.iter().enumerate() {
+            assert_eq!(r.label(), Some(labels[i]), "query {i}");
+            let result = r.outcome.as_ref().unwrap();
+            let stats = result.cascade.as_ref().expect("cascade accounting attached");
+            assert_eq!(stats.stage_sensed.len(), 2, "both stages ran");
+            assert!(
+                stats.stage_sensed[1] < stats.stage_sensed[0],
+                "refine senses only the shortlist: {:?}",
+                stats.stage_sensed
+            );
+            // AVSS two-stage: one group-iteration pass per stage
+            assert_eq!(result.iterations, 4);
         }
     }
 

@@ -314,6 +314,147 @@ impl McamBlock {
         }
     }
 
+    /// Series-resistance sums of the strings `offset + idx` for the tile
+    /// of indices `idx` — the gather twin of [`Self::tile_series`]. The
+    /// per-string accumulation order is l = 0..23, so a string's f32 sum
+    /// is bit-identical whether it is sensed through a contiguous range
+    /// or an index list (the cascade parity tests hinge on this).
+    #[inline]
+    fn tile_series_select(
+        &self,
+        rows: &[[f32; 4]; CELLS_PER_STRING],
+        offset: usize,
+        idx: &[usize],
+        acc: &mut [f32; SENSE_TILE],
+    ) {
+        acc[..idx.len()].fill(0.0);
+        for (l, row) in rows.iter().enumerate() {
+            let plane = l * self.capacity + offset;
+            for (a, &i) in acc[..idx.len()].iter_mut().zip(idx) {
+                let cell = plane + i;
+                // levels are <= 3 (asserted at program time); the mask
+                // only elides the 4-entry bounds check.
+                *a += row[(self.levels[cell] & 3) as usize] * self.var[cell];
+            }
+        }
+    }
+
+    /// Sensed (noise-applied) currents of the tile of selected strings —
+    /// gather twin of [`Self::tile_currents`]. Read noise consumes one
+    /// RNG draw per sensed string, in index order, so selective sensing
+    /// replays deterministically under a fixed seed.
+    #[inline]
+    fn tile_currents_select(
+        &mut self,
+        rows: &[[f32; 4]; CELLS_PER_STRING],
+        offset: usize,
+        idx: &[usize],
+        acc: &mut [f32; SENSE_TILE],
+        currents: &mut [f64; SENSE_TILE],
+    ) {
+        self.tile_series_select(rows, offset, idx, acc);
+        for (current, &series) in currents[..idx.len()].iter_mut().zip(acc[..idx.len()].iter()) {
+            *current = self.params.v_bl / series as f64;
+        }
+        if self.variation.read_sigma != 0.0 {
+            self.variation.read_currents(&mut currents[..idx.len()], &mut self.rng);
+        }
+    }
+
+    /// Selective fused sense→vote→accumulate: drive `wordline` and sense
+    /// only the strings `offset + indices[j]`, adding `weight * votes`
+    /// into `scores[j]` — the cascade refine kernel (string-select on a
+    /// real die: the word-line application is shared, only the selected
+    /// bit lines are sensed). `indices` must ascend strictly; sensing in
+    /// index order keeps the noisy path's RNG draw order deterministic,
+    /// and sensing `offset + 0..count` is bit-identical to
+    /// [`Self::sense_votes_range`] over the same range (ideal *and*
+    /// noisy paths — same tile boundaries, same in-order draws).
+    pub fn sense_votes_select(
+        &mut self,
+        wordline: &[u8; CELLS_PER_STRING],
+        offset: usize,
+        indices: &[usize],
+        ladder: &SenseLadder,
+        weight: f64,
+        scores: &mut [f64],
+    ) {
+        assert_eq!(scores.len(), indices.len(), "one score slot per sensed string");
+        let Some(&last) = indices.last() else {
+            return;
+        };
+        debug_assert!(
+            indices.windows(2).all(|w| w[0] < w[1]),
+            "selected indices must ascend strictly"
+        );
+        assert!(offset + last < self.programmed, "search beyond programmed region");
+        let rows = self.wordline_rows(wordline);
+        let mut acc = [0f32; SENSE_TILE];
+        if self.variation.read_sigma == 0.0 {
+            if self.rung_thresholds.as_slice() != ladder.thresholds() {
+                self.rung_thresholds.clear();
+                self.rung_thresholds.extend_from_slice(ladder.thresholds());
+                self.rungs = ladder.series_rungs(self.params.v_bl);
+            }
+            let mut done = 0;
+            while done < indices.len() {
+                let tile = (indices.len() - done).min(SENSE_TILE);
+                self.tile_series_select(&rows, offset, &indices[done..done + tile], &mut acc);
+                for (score, &series) in scores[done..done + tile].iter_mut().zip(&acc) {
+                    *score += weight * self.rungs.votes_for_series(series) as f64;
+                }
+                done += tile;
+            }
+        } else {
+            let mut currents = [0f64; SENSE_TILE];
+            let mut done = 0;
+            while done < indices.len() {
+                let tile = (indices.len() - done).min(SENSE_TILE);
+                self.tile_currents_select(
+                    &rows,
+                    offset,
+                    &indices[done..done + tile],
+                    &mut acc,
+                    &mut currents,
+                );
+                self.votes_scratch.clear();
+                ladder.votes_batch(&currents[..tile], &mut self.votes_scratch);
+                let votes = &self.votes_scratch;
+                for (score, &v) in scores[done..done + tile].iter_mut().zip(votes) {
+                    *score += weight * v as f64;
+                }
+                done += tile;
+            }
+        }
+    }
+
+    /// Scalar reference for [`Self::sense_votes_select`] (per-string
+    /// gather, in-order RNG draws) — the oracle for the selective-kernel
+    /// equivalence tests; not on any hot path.
+    pub fn sense_votes_select_naive(
+        &mut self,
+        wordline: &[u8; CELLS_PER_STRING],
+        offset: usize,
+        indices: &[usize],
+        ladder: &SenseLadder,
+        weight: f64,
+        scores: &mut [f64],
+    ) {
+        assert_eq!(scores.len(), indices.len(), "one score slot per sensed string");
+        if let Some(&last) = indices.last() {
+            assert!(offset + last < self.programmed, "search beyond programmed region");
+        }
+        for (score, &idx) in scores.iter_mut().zip(indices) {
+            let current = self.string_current_ideal(offset + idx, wordline);
+            let current = if self.variation.read_sigma == 0.0 {
+                current
+            } else {
+                self.variation.read_current(current, &mut self.rng)
+            };
+            *score += weight * ladder.votes(current) as f64;
+        }
+    }
+
     /// Search: drive `wordline` and sense the strings in
     /// `[first, first + count)`, appending currents (with read noise) to
     /// `out`. Runs on the tiled cell-major core, so the currents are
@@ -569,6 +710,112 @@ mod tests {
         block.sense_votes_range(&cells, 0, 1, &ladder, 1.0, &mut scores);
         // i_max clears every threshold (they sit strictly inside the range)
         assert_close(scores[0], 16.0, 1e-12);
+    }
+
+    #[test]
+    fn select_full_range_matches_range_bitwise() {
+        // Sensing the index list 0..count must be indistinguishable from
+        // the contiguous range kernel — ideal AND noisy (same per-string
+        // f32 sums, same tile boundaries, same in-order RNG draws). This
+        // is the device-level hinge of the cascade parity tests.
+        for variation in [
+            VariationModel { program_sigma: 0.2, read_sigma: 0.0 },
+            VariationModel { program_sigma: 0.15, read_sigma: 0.05 },
+        ] {
+            let mut a = random_block(130, variation, 57);
+            let mut b = random_block(130, variation, 57);
+            let ladder = SenseLadder::new(&McamParams::default(), 16);
+            let mut rng = Rng::new(3);
+            for (first, count) in [(0usize, 130usize), (5, 65), (64, 64), (129, 1)] {
+                let wl = random_wordline(&mut rng);
+                let indices: Vec<usize> = (0..count).collect();
+                let mut selected = vec![0.25f64; count];
+                let mut ranged = vec![0.25f64; count];
+                a.sense_votes_select(&wl, first, &indices, &ladder, 1.5, &mut selected);
+                b.sense_votes_range(&wl, first, count, &ladder, 1.5, &mut ranged);
+                assert_eq!(
+                    selected, ranged,
+                    "sigma {:?}, range ({first}, {count})",
+                    variation.read_sigma
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn select_matches_naive_ideal_bitwise() {
+        let variation = VariationModel { program_sigma: 0.2, read_sigma: 0.0 };
+        let mut block = random_block(150, variation, 23);
+        let ladder = SenseLadder::new(&McamParams::default(), 12);
+        let mut rng = Rng::new(71);
+        for trial in 0..6 {
+            let wl = random_wordline(&mut rng);
+            // random strictly ascending subset (≈ half the strings)
+            let indices: Vec<usize> = (0..150).filter(|_| rng.below(2) == 0).collect();
+            let mut fused = vec![0.5f64; indices.len()];
+            let mut naive = vec![0.5f64; indices.len()];
+            block.sense_votes_select(&wl, 0, &indices, &ladder, 0.75, &mut fused);
+            block.sense_votes_select_naive(&wl, 0, &indices, &ladder, 0.75, &mut naive);
+            assert_eq!(fused, naive, "trial {trial}, {} indices", indices.len());
+        }
+    }
+
+    #[test]
+    fn select_matches_naive_noisy_bitwise() {
+        // Read noise consumes the block RNG per selected string, in index
+        // order — an identically seeded twin supplies the aligned stream.
+        let variation = VariationModel { program_sigma: 0.15, read_sigma: 0.05 };
+        let mut a = random_block(120, variation, 91);
+        let mut b = random_block(120, variation, 91);
+        let ladder = SenseLadder::new(&McamParams::default(), 16);
+        let mut rng = Rng::new(15);
+        for trial in 0..5 {
+            let wl = random_wordline(&mut rng);
+            let indices: Vec<usize> = (0..120).filter(|_| rng.below(3) == 0).collect();
+            let mut fused = vec![0f64; indices.len()];
+            let mut naive = vec![0f64; indices.len()];
+            a.sense_votes_select(&wl, 0, &indices, &ladder, 1.0, &mut fused);
+            b.sense_votes_select_naive(&wl, 0, &indices, &ladder, 1.0, &mut naive);
+            assert_eq!(fused, naive, "trial {trial}, {} indices", indices.len());
+        }
+    }
+
+    #[test]
+    fn select_respects_offset() {
+        // offset + index addressing must hit exactly the same strings as
+        // absolute indices.
+        let mut block = random_block(80, VariationModel { program_sigma: 0.3, read_sigma: 0.0 }, 6);
+        let ladder = SenseLadder::new(&McamParams::default(), 8);
+        let mut rng = Rng::new(44);
+        let wl = random_wordline(&mut rng);
+        let offset = 40;
+        let rel = [0usize, 3, 7, 39];
+        let abs: Vec<usize> = rel.iter().map(|&i| offset + i).collect();
+        let mut with_offset = vec![0f64; rel.len()];
+        let mut absolute = vec![0f64; abs.len()];
+        block.sense_votes_select(&wl, offset, &rel, &ladder, 1.0, &mut with_offset);
+        block.sense_votes_select(&wl, 0, &abs, &ladder, 1.0, &mut absolute);
+        assert_eq!(with_offset, absolute);
+    }
+
+    #[test]
+    fn select_empty_is_noop() {
+        let mut block = ideal_block(4);
+        block.program_string(&[1; CELLS_PER_STRING]);
+        let ladder = SenseLadder::new(&McamParams::default(), 4);
+        let mut scores: Vec<f64> = Vec::new();
+        block.sense_votes_select(&[0; CELLS_PER_STRING], 0, &[], &ladder, 1.0, &mut scores);
+        assert!(scores.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "beyond programmed")]
+    fn select_beyond_programmed_panics() {
+        let mut block = ideal_block(4);
+        block.program_string(&[0; CELLS_PER_STRING]);
+        let ladder = SenseLadder::new(&McamParams::default(), 4);
+        let mut scores = vec![0f64; 1];
+        block.sense_votes_select(&[0; CELLS_PER_STRING], 0, &[1], &ladder, 1.0, &mut scores);
     }
 
     #[test]

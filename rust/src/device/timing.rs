@@ -14,9 +14,18 @@
 pub const SEARCH_ITERATION_US: f64 = 50.0;
 
 /// Timing accounting for one or more searches.
+///
+/// Honest-accounting contract (DESIGN.md §Cascade): `iterations` counts
+/// only word-line applications **actually executed** — per-request mode
+/// overrides, cascade early exits and budget stops all shrink it. The
+/// configured-mode full-scan count is an upper bound, available as
+/// `BackendStats::max_iterations_per_search`.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct SearchTiming {
+    /// Word-line iterations executed so far.
     pub iterations: u64,
+    /// Searches completed so far.
+    pub searches: u64,
 }
 
 impl SearchTiming {
@@ -24,14 +33,40 @@ impl SearchTiming {
         self.iterations += n;
     }
 
+    /// Record one completed search (pairs with the iterations it added).
+    pub fn finish_search(&mut self) {
+        self.searches += 1;
+    }
+
     /// Simulated latency of the accumulated iterations, in microseconds.
     pub fn latency_us(&self) -> f64 {
         self.iterations as f64 * SEARCH_ITERATION_US
     }
 
+    /// Mean iterations actually executed per completed search (0.0
+    /// before the first search).
+    pub fn avg_iterations_per_search(&self) -> f64 {
+        if self.searches == 0 {
+            0.0
+        } else {
+            self.iterations as f64 / self.searches as f64
+        }
+    }
+
     /// Searches per second at `iterations_per_search`.
     pub fn throughput_per_s(iterations_per_search: u64) -> f64 {
         1e6 / (iterations_per_search as f64 * SEARCH_ITERATION_US)
+    }
+
+    /// Searches per second at a (possibly fractional) measured average
+    /// iteration count — the cascade-honest companion of
+    /// [`Self::throughput_per_s`]. Returns 0.0 for a zero average.
+    pub fn throughput_per_s_avg(avg_iterations: f64) -> f64 {
+        if avg_iterations <= 0.0 {
+            0.0
+        } else {
+            1e6 / (avg_iterations * SEARCH_ITERATION_US)
+        }
     }
 }
 
@@ -54,5 +89,24 @@ mod tests {
         t.add_iterations(2);
         t.add_iterations(3);
         assert_close(t.latency_us(), 250.0, 1e-12);
+    }
+
+    #[test]
+    fn avg_tracks_actual_iterations() {
+        let mut t = SearchTiming::default();
+        assert_eq!(t.avg_iterations_per_search(), 0.0);
+        // one AVSS search (2 iterations) + one SVSS override (64)
+        t.add_iterations(2);
+        t.finish_search();
+        t.add_iterations(64);
+        t.finish_search();
+        assert_eq!(t.searches, 2);
+        assert_close(t.avg_iterations_per_search(), 33.0, 1e-12);
+        assert_close(
+            SearchTiming::throughput_per_s_avg(33.0),
+            1e6 / (33.0 * 50.0),
+            1e-12,
+        );
+        assert_eq!(SearchTiming::throughput_per_s_avg(0.0), 0.0);
     }
 }

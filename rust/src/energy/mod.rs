@@ -10,11 +10,18 @@
 //!                         + sensed_strings × T × E_sa )
 //! ```
 //!
-//! where `T` is the SA ladder depth. Under both SVSS and AVSS a support
-//! vector's `groups × word_length` strings are each sensed exactly once
-//! per search, so at equal code word length the two modes cost the same
-//! energy — AVSS wins *iterations* (throughput), not energy, exactly as
-//! in the paper.
+//! where `T` is the SA ladder depth. Under a full SVSS or AVSS scan a
+//! support vector's `groups × word_length` strings are each sensed
+//! exactly once per search, so at equal code word length the two modes
+//! cost the same energy — AVSS wins *iterations* (throughput), not
+//! energy, exactly as in the paper.
+//!
+//! **Honest accounting** (DESIGN.md §Cascade): `sensed_strings` counts
+//! only strings *actually* sensed. `slots × groups × word_length` per
+//! search is the full-scan **upper bound**; a progressive-precision
+//! cascade ([`crate::search::cascade`]) senses a column prefix of every
+//! slot and then only its shortlist, and books each stage's true string
+//! count (at that stage's ladder depth) through [`EnergyAccount::add_sense`].
 
 use crate::CELLS_PER_STRING;
 

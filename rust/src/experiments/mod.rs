@@ -9,6 +9,7 @@ pub mod fig3_5;
 pub mod fig6;
 pub mod fig7;
 pub mod fig9;
+pub mod fig_cascade;
 pub mod headline;
 pub mod table1;
 pub mod table2;
@@ -18,6 +19,7 @@ use crate::encoding::Encoding;
 use crate::fsl::store::ArtifactStore;
 use crate::fsl::{episode_rng, evaluate_episode, sample_episode};
 use crate::metrics::AccuracyMeter;
+use crate::search::cascade::CascadeConfig;
 use crate::search::engine::{EngineConfig, SearchEngine};
 use crate::search::SearchMode;
 use anyhow::Result;
@@ -66,12 +68,21 @@ impl EpisodeSettings {
 pub struct RunResult {
     pub accuracy: AccuracyMeter,
     pub nj_per_search: f64,
+    /// Configured-mode full-scan iterations — the **upper bound**
+    /// (`SearchEngine::max_iterations_per_search`); cascade runs execute
+    /// fewer, see [`Self::avg_iterations_per_search`].
     pub iterations_per_search: usize,
+    /// Word-line iterations actually executed per search (== the bound
+    /// for plain scans; smaller under a cascade).
+    pub avg_iterations_per_search: f64,
+    /// Strings actually sensed per search (honest energy-ledger count).
+    pub sensed_strings_per_search: f64,
+    /// Device-bound throughput at the *measured* iteration count.
     pub throughput_per_s: f64,
 }
 
 /// Evaluate an engine configuration over episodes of (dataset, variant)
-/// test embeddings.
+/// test embeddings — [`run_mcam_eval_opts`] with no cascade.
 pub fn run_mcam_eval(
     store: &ArtifactStore,
     dataset: &str,
@@ -82,6 +93,23 @@ pub fn run_mcam_eval(
     variation: VariationModel,
     settings: EpisodeSettings,
 ) -> Result<RunResult> {
+    run_mcam_eval_opts(store, dataset, variant, encoding, cl, mode, variation, settings, None)
+}
+
+/// Evaluate an engine configuration over episodes of (dataset, variant)
+/// test embeddings, optionally through a progressive-precision cascade.
+#[allow(clippy::too_many_arguments)]
+pub fn run_mcam_eval_opts(
+    store: &ArtifactStore,
+    dataset: &str,
+    variant: &str,
+    encoding: Encoding,
+    cl: usize,
+    mode: SearchMode,
+    variation: VariationModel,
+    settings: EpisodeSettings,
+    cascade: Option<&CascadeConfig>,
+) -> Result<RunResult> {
     let ds = store.embeddings(dataset, variant, "test")?;
     let clip = store.clip(dataset, variant)?;
     let cfg = EngineConfig::new(encoding, cl, mode, clip)
@@ -89,6 +117,7 @@ pub fn run_mcam_eval(
         .with_seed(settings.seed);
     let mut engine =
         SearchEngine::new(cfg, ds.dims, settings.n_way * settings.k_shot)?;
+    engine.set_cascade(cascade.cloned())?;
     let mut accuracy = AccuracyMeter::default();
     for ep_idx in 0..settings.episodes {
         let mut rng = episode_rng(settings.seed, ep_idx as u64);
@@ -96,13 +125,17 @@ pub fn run_mcam_eval(
         let (correct, total) = evaluate_episode(&mut engine, &ds, &ep)?;
         accuracy.push_episode(correct, total);
     }
-    let iterations = engine.iterations_per_search();
+    let iterations = engine.max_iterations_per_search();
+    let avg_iterations = engine.timing().avg_iterations_per_search();
+    let searches = engine.timing().searches.max(1);
     Ok(RunResult {
         accuracy,
         nj_per_search: engine.energy().nj_per_search(),
         iterations_per_search: iterations,
-        throughput_per_s: crate::device::timing::SearchTiming::throughput_per_s(
-            iterations as u64,
+        avg_iterations_per_search: avg_iterations,
+        sensed_strings_per_search: engine.energy().sensed_strings as f64 / searches as f64,
+        throughput_per_s: crate::device::timing::SearchTiming::throughput_per_s_avg(
+            avg_iterations,
         ),
     })
 }

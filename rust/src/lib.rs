@@ -10,22 +10,29 @@
 //!   code-word encodings ([`encoding`]), the SVSS/AVSS search engines
 //!   behind the typed request/response API ([`search`], [`search::api`] —
 //!   ranked top-k hits, the [`search::VectorSearchBackend`] trait, online
-//!   support append/remove, panic-free [`search::EngineError`]s), a
-//!   request router / batcher / backend-generic worker pool
-//!   ([`coordinator`]), software baselines behind the same seam
+//!   support append/remove, panic-free [`search::EngineError`]s), the
+//!   progressive-precision cascade scheduler ([`search::cascade`] —
+//!   prune-and-refine scans with honest per-request iteration/energy
+//!   accounting), a request router / batcher / backend-generic worker
+//!   pool ([`coordinator`]), software baselines behind the same seam
 //!   ([`baselines`]), energy + timing accounting ([`energy`],
 //!   [`device::timing`]) and the experiment harnesses that regenerate
-//!   every table and figure of the paper ([`experiments`]).
+//!   every table and figure of the paper, plus the cascade tradeoff
+//!   frontier ([`experiments`], [`experiments::fig_cascade`]).
 //! * **L2/L1 (python, build time only)** — JAX controllers trained with
 //!   Hardware-Aware Training and the Pallas MCAM kernel, AOT-lowered to
 //!   HLO text under `artifacts/` and executed from rust through the PJRT
 //!   C API ([`runtime`]). Python never runs on the request path.
 //!
-//! See `DESIGN.md` (repository root) for the system inventory, the
-//! paper→module map, the shard/batch search layer, the serving API
-//! (§API), and the perf log; `cargo bench` regenerates the
-//! measured-vs-paper tables.
+//! Start with `README.md` (repository root) for the architecture tour,
+//! quickstart and experiment index; `DESIGN.md` holds the system
+//! inventory, the paper→module map, the shard/batch search layer, the
+//! serving API (§API), the cascade scheduler (§Cascade), and the perf
+//! log; `cargo bench` regenerates the measured-vs-paper tables.
 
+// Rustdoc is part of the public API surface: a broken intra-doc link is
+// a build error (CI runs `cargo doc --no-deps` and `cargo test --doc`).
+#![deny(rustdoc::broken_intra_doc_links)]
 // Style allowances for the `cargo clippy --all-targets -- -D warnings`
 // CI gate: kernel/physics code indexes plane ranges explicitly and the
 // experiment harnesses take paper-shaped argument lists; rewriting them

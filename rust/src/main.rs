@@ -6,9 +6,12 @@
 //!                --cl 32 --mode avss --episodes 3 [--ideal]
 //! mcamvss serve  --dataset omniglot --requests 200 --workers 4
 //!                [--top-k 5] [--backend mcam|float] [--metric l1|l2|cosine]
+//!                [--cascade] [--cascade-columns N] [--cascade-ladder N]
+//!                [--cascade-shortlist N] [--cascade-margin F]
+//!                [--cascade-budget N]
 //! mcamvss train  [--smoke] [--variant std|hat_svss|hat_avss]
 //!                [--steps N] [--meta-episodes N] [--cl N] [--out dir]
-//! mcamvss experiment --filter table2
+//! mcamvss experiment --filter table2   # or fig_cascade, fig9, ...
 //! ```
 //!
 //! `train` runs the pure-rust HAT pipeline (pretrain + meta-train) on
@@ -92,6 +95,34 @@ fn load_config(args: &Args) -> Result<Config> {
     if args.flag("ideal") {
         cfg.variation = VariationModel::IDEAL;
     }
+    let cascade_keys = [
+        "cascade-columns",
+        "cascade-ladder",
+        "cascade-shortlist",
+        "cascade-margin",
+        "cascade-budget",
+    ];
+    if args.flag("cascade") || cascade_keys.iter().any(|k| args.opt(k).is_some()) {
+        let mut cascade = cfg.cascade.take().unwrap_or_default();
+        if let Some(v) = args.opt_usize("cascade-columns")? {
+            cascade.coarse_columns = Some(v);
+        }
+        if let Some(v) = args.opt_usize("cascade-ladder")? {
+            cascade.coarse_ladder = Some(v);
+        }
+        if let Some(v) = args.opt_usize("cascade-shortlist")? {
+            cascade.shortlist = v;
+        }
+        if let Some(raw) = args.opt("cascade-margin") {
+            cascade.safety_margin = raw
+                .parse()
+                .with_context(|| format!("--cascade-margin: expected float, got {raw:?}"))?;
+        }
+        if let Some(v) = args.opt_usize("cascade-budget")? {
+            cascade.iteration_budget = Some(v as u64);
+        }
+        cfg.cascade = Some(cascade);
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -146,8 +177,12 @@ fn cmd_eval(args: &Args) -> Result<()> {
         cfg.n_way,
         cfg.k_shot
     );
+    let cascade = cfg
+        .cascade
+        .as_ref()
+        .map(|settings| settings.to_cascade(cfg.encoding.word_length(cfg.cl)));
     let t0 = Instant::now();
-    let result = experiments::run_mcam_eval(
+    let result = experiments::run_mcam_eval_opts(
         &store,
         &cfg.dataset,
         &cfg.variant,
@@ -156,6 +191,7 @@ fn cmd_eval(args: &Args) -> Result<()> {
         cfg.mode,
         cfg.variation,
         settings,
+        cascade.as_ref(),
     )?;
     println!(
         "accuracy {}%  energy {:.2} nJ/search  iterations {}  device-throughput {:.1}/s  (wall {:.1}s)",
@@ -165,6 +201,15 @@ fn cmd_eval(args: &Args) -> Result<()> {
         result.throughput_per_s,
         t0.elapsed().as_secs_f64()
     );
+    if cascade.is_some() {
+        println!(
+            "cascade: {:.2} iterations/search actually executed (full-scan bound {}), \
+             {:.0} strings sensed/search",
+            result.avg_iterations_per_search,
+            result.iterations_per_search,
+            result.sensed_strings_per_search
+        );
+    }
     Ok(())
 }
 
@@ -209,15 +254,28 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     // Both substrates run through the same generic Server path — the
     // VectorSearchBackend seam in action.
+    let cascade = cfg
+        .cascade
+        .as_ref()
+        .map(|settings| settings.to_cascade(cfg.encoding.word_length(cfg.cl)));
+    if let Some(cascade) = &cascade {
+        println!(
+            "cascade: {} stage(s), safety margin {}, budget {:?}",
+            cascade.stages.len(),
+            cascade.safety_margin,
+            cascade.iteration_budget
+        );
+    }
     let server = match backend_kind {
         "mcam" => {
             let engine_cfg = EngineConfig::new(cfg.encoding, cfg.cl, cfg.mode, clip)
                 .with_variation(cfg.variation)
                 .with_seed(cfg.seed)
                 .with_shards(cfg.shards);
-            Server::start(
+            Server::start_cascade(
                 coord_cfg,
                 engine_cfg,
+                cascade,
                 ds.dims,
                 &support,
                 &labels,
@@ -225,6 +283,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
             )?
         }
         "float" => {
+            if cascade.is_some() {
+                bail!("--cascade requires the mcam backend (the float baseline has no device)");
+            }
             let metric = match args.opt("metric") {
                 Some(name) => Metric::from_name(name)
                     .with_context(|| format!("bad --metric {name:?} (l1 | l2 | cosine)"))?,
@@ -301,6 +362,22 @@ fn report_serve(responses: &[Response], truth: &[u32], wall: std::time::Duration
         latency.quantile_us(0.99),
         latency.max_us()
     );
+    // Honest cascade accounting, aggregated over the served responses.
+    let cascaded: Vec<&mcamvss::search::CascadeStats> = sorted
+        .iter()
+        .filter_map(|r| r.outcome.as_ref().ok().and_then(|o| o.cascade.as_ref()))
+        .collect();
+    if !cascaded.is_empty() {
+        let sensed: usize = cascaded.iter().map(|c| c.total_sensed()).sum();
+        let saved: i64 = cascaded.iter().map(|c| c.iterations_saved).sum();
+        let exits = cascaded.iter().filter(|c| c.early_exited).count();
+        println!(
+            "cascade: {:.0} strings sensed/request ({} saved vs full scans), {} early exit(s)",
+            sensed as f64 / cascaded.len() as f64,
+            saved,
+            exits
+        );
+    }
 }
 
 /// Pure-rust HAT training on the built-in synthetic dataset: pretrain,
@@ -401,7 +478,6 @@ fn cmd_train(args: &Args) -> Result<()> {
 
 fn cmd_experiment(args: &Args) -> Result<()> {
     let filter = args.opt("filter").unwrap_or("all");
-    let store = open_store(args)?;
     let smoke = args.flag("smoke");
     let out_dir = args.opt("out").map(std::path::PathBuf::from);
     if let Some(dir) = &out_dir {
@@ -415,6 +491,20 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         }
         Ok(())
     };
+    let want = |name: &str| filter == "all" || filter == name;
+
+    // fig_cascade runs on a built-in synth episode — no artifacts needed,
+    // so it executes before the store is opened.
+    if want("fig_cascade") {
+        let sweep = experiments::fig_cascade::run(0xCA5CADE)?;
+        println!("{}", experiments::fig_cascade::render(&sweep));
+        write_csv("fig_cascade", &experiments::fig_cascade::csv(&sweep))?;
+        if filter == "fig_cascade" {
+            return Ok(());
+        }
+    }
+
+    let store = open_store(args)?;
     let settings_for = |ds: &str| {
         let s = EpisodeSettings::for_dataset(ds);
         if smoke {
@@ -423,7 +513,6 @@ fn cmd_experiment(args: &Args) -> Result<()> {
             s
         }
     };
-    let want = |name: &str| filter == "all" || filter == name;
 
     if want("table1") {
         println!("{}", experiments::table1::render());

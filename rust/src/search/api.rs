@@ -18,6 +18,7 @@
 //! * [`EngineError`] — every malformed input on the request path comes
 //!   back as a typed `Err`, never a panic.
 
+use crate::search::cascade::CascadeStats;
 use crate::search::SearchMode;
 use std::fmt;
 
@@ -97,6 +98,8 @@ pub struct SearchOptions {
     pub top_k: usize,
     /// Per-request override of the backend's configured [`SearchMode`]
     /// (e.g. an SVSS sanity probe against an AVSS-configured engine).
+    /// Rejected with a typed error while a cascade schedule is installed
+    /// — see [`crate::search::engine::SearchEngine::set_cascade`].
     pub mode: Option<SearchMode>,
     /// Opt-in dense per-slot score dump (experiment harnesses and the
     /// top-k oracle tests; O(N) per response, so off by default).
@@ -110,6 +113,19 @@ impl Default for SearchOptions {
 }
 
 /// One query of a search batch: a borrowed embedding plus its options.
+///
+/// ```
+/// use mcamvss::search::{SearchMode, SearchRequest};
+///
+/// let query = [0.5f32, 1.0, 1.5];
+/// let request = SearchRequest::new(&query)
+///     .with_top_k(5)
+///     .with_mode(SearchMode::Svss)
+///     .with_full_scores();
+/// assert_eq!(request.options.top_k, 5);
+/// assert_eq!(request.options.mode, Some(SearchMode::Svss));
+/// assert!(request.options.full_scores);
+/// ```
 #[derive(Debug, Clone, Copy)]
 pub struct SearchRequest<'a> {
     pub query: &'a [f32],
@@ -152,21 +168,45 @@ pub struct Hit {
 }
 
 /// Response to one [`SearchRequest`].
+///
+/// ```
+/// use mcamvss::search::{Hit, SearchResponse};
+///
+/// let response = SearchResponse {
+///     hits: vec![Hit { index: 3, label: 7, score: 41.0 }],
+///     iterations: 2,
+///     device_latency_us: 100.0,
+///     full_scores: None,
+///     cascade: None,
+/// };
+/// assert_eq!(response.top().unwrap().label, 7);
+/// ```
 #[derive(Debug, Clone, PartialEq)]
 pub struct SearchResponse {
     /// Ranked hits, best first: descending score, ties broken by lowest
     /// slot index (`f64::total_cmp` — NaN-safe). Length is
     /// `min(top_k, live support)`.
     pub hits: Vec<Hit>,
-    /// Device iterations consumed by this search (per block; shards and
-    /// replicas search in parallel). Zero for software backends.
+    /// Word-line iterations this search **actually executed** (per block;
+    /// shards and replicas search in parallel). Zero for software
+    /// backends. On the cascade path this counts only the stages run —
+    /// the configured-mode full-scan count
+    /// ([`BackendStats::max_iterations_per_search`]) is an upper bound,
+    /// not this value.
     pub iterations: u64,
-    /// Simulated device latency of this search, in microseconds.
+    /// Simulated device latency of this search, in microseconds
+    /// (`iterations × 50 µs` — only iterations actually executed).
     pub device_latency_us: f64,
     /// Dense per-slot scores, present iff the request opted in. Includes
     /// tombstoned slots (their strings are still physically sensed until
-    /// the next rebalance) — rank only via `hits`.
+    /// the next rebalance) — rank only via `hits`. On the cascade path
+    /// each slot reports its score from the **deepest stage that sensed
+    /// it**, so pruned slots carry coarse scores.
     pub full_scores: Option<Vec<f64>>,
+    /// Per-stage cascade accounting; present iff the backend answered
+    /// through a progressive-precision cascade
+    /// ([`crate::search::cascade::CascadeConfig`]).
+    pub cascade: Option<CascadeStats>,
 }
 
 impl SearchResponse {
@@ -177,6 +217,12 @@ impl SearchResponse {
 }
 
 /// Aggregate backend statistics, uniform across substrates.
+///
+/// The iteration fields are a per-mode/per-schedule breakdown: the old
+/// single `iterations_per_search` number silently disagreed with
+/// per-request mode overrides and cascade runs, so it is now named for
+/// what it is — an upper bound — and accompanied by the per-mode counts
+/// and the measured average.
 #[derive(Debug, Clone, PartialEq)]
 pub struct BackendStats {
     /// Substrate name (`"mcam"`, `"float-l1"`, ...).
@@ -187,9 +233,24 @@ pub struct BackendStats {
     pub tombstones: usize,
     /// Parallel storage shards (1 for software backends).
     pub shards: usize,
-    /// Device iterations per search in the configured mode (0 for
-    /// software backends).
-    pub iterations_per_search: u64,
+    /// **Upper bound**: word-line iterations of a full scan in the
+    /// backend's *configured* mode (0 for software backends). Requests
+    /// that override the mode, and cascade schedules, consume different
+    /// counts — see the breakdown fields and
+    /// [`Self::avg_iterations_per_search`].
+    pub max_iterations_per_search: u64,
+    /// Full-scan iterations under SVSS (`groups × word_length`).
+    pub svss_iterations_per_search: u64,
+    /// Full-scan iterations under AVSS (`groups`).
+    pub avss_iterations_per_search: u64,
+    /// Upper bound on cascade iterations — the sum over all configured
+    /// stages, as if no request ever exits early or hits its budget.
+    /// Zero when no cascade is installed.
+    pub cascade_max_iterations_per_search: u64,
+    /// Mean word-line iterations **actually executed** per search served
+    /// so far (honest accounting: mode overrides, early exits, and budget
+    /// stops all show up here). 0.0 before the first search.
+    pub avg_iterations_per_search: f64,
     /// Average search energy so far, in nanojoules (0 for software
     /// backends).
     pub nj_per_search: f64,
@@ -264,6 +325,20 @@ impl SupportSet {
 /// configuration. `append`/`remove` here edit the *staged* set; once
 /// programmed, use the backend's own [`VectorSearchBackend::append`] /
 /// [`VectorSearchBackend::remove`] (tombstone + rebalance) instead.
+///
+/// ```
+/// use mcamvss::baselines::{FloatBaseline, Metric};
+/// use mcamvss::search::{SearchRequest, SupportSetBuilder, VectorSearchBackend};
+///
+/// let mut builder = SupportSetBuilder::new(2)?;
+/// builder.append(&[0.1, 0.1], 0)?;
+/// builder.append(&[2.0, 2.0], 1)?;
+/// let mut backend = FloatBaseline::new(2, Metric::L2)?;
+/// builder.program_into(&mut backend)?;
+/// let response = backend.search(&SearchRequest::new(&[1.9, 2.1]))?;
+/// assert_eq!(response.top().unwrap().label, 1);
+/// # Ok::<(), mcamvss::search::EngineError>(())
+/// ```
 #[derive(Debug, Clone)]
 pub struct SupportSetBuilder {
     set: SupportSet,

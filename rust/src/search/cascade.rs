@@ -1,0 +1,307 @@
+//! Progressive-precision cascade search: prune-and-refine scheduling for
+//! the MCAM engine (DESIGN.md §Cascade).
+//!
+//! The paper's AVSS result cuts *iterations*; the cascade cuts *sensed
+//! strings*. A plain scan senses every programmed string of every slot at
+//! full word-line resolution on every request. A [`CascadeConfig`]
+//! instead runs a cheap stage 0 over all slots — fewer code-word columns
+//! per group, optionally a shallower SA ladder — shortlists the best
+//! candidates, and refines only the survivors at higher precision
+//! (full-depth ladder, all columns, optionally SVSS). Per-request
+//! accounting is **honest**: `iterations`, the energy ledger, and the
+//! timing model count only the word-line applications and strings a
+//! request actually sensed, and every cascade response carries a
+//! [`CascadeStats`] breakdown.
+//!
+//! Soundness lever: [`CascadeConfig::safety_margin`]. After a non-final
+//! stage, if the leader's score beats the runner-up by more than the
+//! margin (both in that stage's own vote units), refinement cannot change
+//! the top-1 — provided per-slot refinement error stays within half the
+//! margin — so the engine exits early and skips the remaining stages
+//! entirely. See DESIGN.md §Cascade for the bounded-error argument.
+//!
+//! ```
+//! use mcamvss::search::cascade::{CascadeConfig, CascadeStage, Shortlist};
+//!
+//! // Stage 0: sense 2 of the code word's columns, keep the best 32 slots.
+//! // Stage 1: full-precision refine of the survivors.
+//! let cascade = CascadeConfig::new(vec![
+//!     CascadeStage::coarse(2, Shortlist::Count(32)),
+//!     CascadeStage::full(),
+//! ]);
+//! assert!(cascade.validate().is_ok());
+//! assert_eq!(cascade.stages.len(), 2);
+//! ```
+
+use crate::search::api::EngineError;
+use crate::search::SearchMode;
+
+/// How many candidates a cascade stage carries into the next stage.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Shortlist {
+    /// Keep every sensed candidate — including tombstoned slots, so a
+    /// full-keep cascade refines exactly the strings a plain scan senses
+    /// (the bitwise-parity property of `rust/tests/test_cascade.rs`).
+    All,
+    /// Keep the best `n` live candidates (capped by the live count).
+    Count(usize),
+    /// Keep the best `ceil(fraction × live candidates)`, `0 < f <= 1`.
+    Fraction(f64),
+}
+
+impl Shortlist {
+    /// Candidates kept out of `live` survivors (always >= 1 when
+    /// `live >= 1`; validation rejects specs that could return 0).
+    pub fn keep_of(&self, live: usize) -> usize {
+        if live == 0 {
+            return 0;
+        }
+        match *self {
+            Shortlist::All => live,
+            Shortlist::Count(n) => n.min(live),
+            Shortlist::Fraction(f) => (((f * live as f64).ceil()) as usize).clamp(1, live),
+        }
+    }
+
+    fn validate(&self) -> Result<(), EngineError> {
+        match *self {
+            Shortlist::All => Ok(()),
+            Shortlist::Count(0) => Err(EngineError::InvalidConfig(
+                "cascade shortlist must keep at least one candidate".into(),
+            )),
+            Shortlist::Count(_) => Ok(()),
+            Shortlist::Fraction(f) if f.is_finite() && f > 0.0 && f <= 1.0 => Ok(()),
+            Shortlist::Fraction(f) => Err(EngineError::InvalidConfig(format!(
+                "cascade shortlist fraction must be in (0, 1], got {f}"
+            ))),
+        }
+    }
+}
+
+/// One stage of the prune-and-refine schedule. `None` knobs inherit the
+/// engine's configured value, so `CascadeStage::full()` reproduces the
+/// plain scan's sensing exactly (the parity tests rely on this).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CascadeStage {
+    /// Search mode for this stage; `None` inherits the engine's mode.
+    /// (Per-request mode overrides are rejected on the cascade path —
+    /// the schedule, not the request, owns the iteration plan.)
+    pub mode: Option<SearchMode>,
+    /// SA ladder depth for this stage; `None` uses the engine's ladder.
+    /// Shallower ladders sense the same strings at fewer SA comparisons.
+    pub ladder_len: Option<usize>,
+    /// Code-word columns sensed per group — a **prefix** of the word, so
+    /// a coarse stage senses `columns/W` of each slot's strings. `None`
+    /// senses the full word length.
+    pub columns: Option<usize>,
+    /// Candidates carried into the next stage (ignored on the final
+    /// stage, which always ranks everything it sensed).
+    pub shortlist: Shortlist,
+}
+
+impl CascadeStage {
+    /// A coarse screening stage: sense only the first `columns` code-word
+    /// columns of every group, keep `shortlist` survivors.
+    pub fn coarse(columns: usize, shortlist: Shortlist) -> CascadeStage {
+        CascadeStage { mode: None, ladder_len: None, columns: Some(columns), shortlist }
+    }
+
+    /// A full-precision stage with the engine's configured mode, ladder
+    /// and word length — bitwise identical sensing to the plain scan.
+    pub fn full() -> CascadeStage {
+        CascadeStage { mode: None, ladder_len: None, columns: None, shortlist: Shortlist::All }
+    }
+
+    pub fn with_mode(mut self, mode: SearchMode) -> CascadeStage {
+        self.mode = Some(mode);
+        self
+    }
+
+    pub fn with_ladder_len(mut self, ladder_len: usize) -> CascadeStage {
+        self.ladder_len = Some(ladder_len);
+        self
+    }
+
+    pub fn with_shortlist(mut self, shortlist: Shortlist) -> CascadeStage {
+        self.shortlist = shortlist;
+        self
+    }
+
+    fn validate(&self) -> Result<(), EngineError> {
+        if self.ladder_len == Some(0) {
+            return Err(EngineError::InvalidConfig(
+                "cascade stage ladder needs at least one threshold".into(),
+            ));
+        }
+        if self.columns == Some(0) {
+            return Err(EngineError::InvalidConfig(
+                "cascade stage must sense at least one code-word column".into(),
+            ));
+        }
+        self.shortlist.validate()
+    }
+}
+
+/// A progressive-precision search schedule, installed on the engine with
+/// [`crate::search::engine::SearchEngine::set_cascade`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct CascadeConfig {
+    /// Stages, coarse to fine. Stage 0 senses every programmed slot.
+    pub stages: Vec<CascadeStage>,
+    /// Early-exit margin, in the current stage's own vote units: after a
+    /// non-final stage, if the leader beats the runner-up by more than
+    /// this, the remaining stages are skipped. `f64::INFINITY` (the
+    /// default) never exits early.
+    pub safety_margin: f64,
+    /// Per-request word-line iteration budget. A refine stage that would
+    /// overrun the budget is skipped (stage 0 always runs; the engine
+    /// rejects budgets smaller than stage 0 at install time). `None` is
+    /// unlimited.
+    pub iteration_budget: Option<u64>,
+}
+
+impl CascadeConfig {
+    /// A schedule with the default soundness knobs (no early exit, no
+    /// budget). Call [`Self::validate`] — or let the engine do it — to
+    /// surface malformed stages as typed errors.
+    pub fn new(stages: Vec<CascadeStage>) -> CascadeConfig {
+        CascadeConfig { stages, safety_margin: f64::INFINITY, iteration_budget: None }
+    }
+
+    /// The canonical two-stage schedule: a coarse column-prefix pass over
+    /// everything, then a full-precision refine of the shortlist.
+    pub fn two_stage(coarse_columns: usize, shortlist: Shortlist) -> CascadeConfig {
+        CascadeConfig::new(vec![
+            CascadeStage::coarse(coarse_columns, shortlist),
+            CascadeStage::full(),
+        ])
+    }
+
+    pub fn with_safety_margin(mut self, margin: f64) -> CascadeConfig {
+        self.safety_margin = margin;
+        self
+    }
+
+    pub fn with_iteration_budget(mut self, budget: u64) -> CascadeConfig {
+        self.iteration_budget = Some(budget);
+        self
+    }
+
+    /// Layout-free validation (the engine additionally checks stage
+    /// columns against its word length and the budget against stage 0's
+    /// iteration cost).
+    pub fn validate(&self) -> Result<(), EngineError> {
+        if self.stages.is_empty() {
+            return Err(EngineError::InvalidConfig(
+                "cascade needs at least one stage".into(),
+            ));
+        }
+        for stage in &self.stages {
+            stage.validate()?;
+        }
+        if self.safety_margin.is_nan() || self.safety_margin < 0.0 {
+            return Err(EngineError::InvalidConfig(
+                "cascade safety_margin must be >= 0 (INFINITY disables early exit)".into(),
+            ));
+        }
+        if self.iteration_budget == Some(0) {
+            return Err(EngineError::InvalidConfig(
+                "cascade iteration_budget must cover at least one stage".into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Per-request cascade accounting, attached to every
+/// [`crate::search::SearchResponse`] answered through a cascade.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CascadeStats {
+    /// Strings actually sensed by each executed stage (length = stages
+    /// run; shorter than the configured schedule after an early exit or
+    /// a budget stop).
+    pub stage_sensed: Vec<usize>,
+    /// String-sense events saved versus a configured-mode full scan
+    /// (`slots × groups × W − Σ stage_sensed`) — the honest work metric
+    /// the energy ledger counts. Negative when the cascade sensed *more*
+    /// than a plain scan would have (e.g. a full-keep refine schedule).
+    pub iterations_saved: i64,
+    /// True when the safety margin retired the request before the final
+    /// stage.
+    pub early_exited: bool,
+}
+
+impl CascadeStats {
+    /// Total strings sensed across all executed stages.
+    pub fn total_sensed(&self) -> usize {
+        self.stage_sensed.iter().sum()
+    }
+
+    /// Stages actually executed.
+    pub fn stages_run(&self) -> usize {
+        self.stage_sensed.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shortlist_keep_of() {
+        assert_eq!(Shortlist::All.keep_of(10), 10);
+        assert_eq!(Shortlist::Count(3).keep_of(10), 3);
+        assert_eq!(Shortlist::Count(30).keep_of(10), 10);
+        assert_eq!(Shortlist::Fraction(0.25).keep_of(10), 3); // ceil(2.5)
+        assert_eq!(Shortlist::Fraction(1.0).keep_of(10), 10);
+        assert_eq!(Shortlist::Fraction(0.001).keep_of(10), 1); // never empty
+        assert_eq!(Shortlist::Fraction(0.5).keep_of(0), 0); // no candidates, no panic
+    }
+
+    #[test]
+    fn validate_accepts_sensible_schedules() {
+        CascadeConfig::two_stage(2, Shortlist::Count(32)).validate().unwrap();
+        CascadeConfig::new(vec![CascadeStage::full()]).validate().unwrap();
+        CascadeConfig::new(vec![
+            CascadeStage::coarse(1, Shortlist::Fraction(0.1)).with_ladder_len(4),
+            CascadeStage::full().with_mode(SearchMode::Svss),
+        ])
+        .with_safety_margin(3.0)
+        .with_iteration_budget(64)
+        .validate()
+        .unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_malformed_schedules() {
+        let bad = [
+            CascadeConfig::new(vec![]),
+            CascadeConfig::two_stage(0, Shortlist::Count(4)),
+            CascadeConfig::two_stage(2, Shortlist::Count(0)),
+            CascadeConfig::two_stage(2, Shortlist::Fraction(0.0)),
+            CascadeConfig::two_stage(2, Shortlist::Fraction(1.5)),
+            CascadeConfig::two_stage(2, Shortlist::Fraction(f64::NAN)),
+            CascadeConfig::new(vec![CascadeStage::full().with_ladder_len(0)]),
+            CascadeConfig::two_stage(2, Shortlist::Count(4)).with_safety_margin(f64::NAN),
+            CascadeConfig::two_stage(2, Shortlist::Count(4)).with_safety_margin(-1.0),
+            CascadeConfig::two_stage(2, Shortlist::Count(4)).with_iteration_budget(0),
+        ];
+        for cfg in bad {
+            assert!(
+                matches!(cfg.validate(), Err(EngineError::InvalidConfig(_))),
+                "{cfg:?} must be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn stats_helpers() {
+        let stats = CascadeStats {
+            stage_sensed: vec![1024, 256],
+            iterations_saved: 2816,
+            early_exited: false,
+        };
+        assert_eq!(stats.total_sensed(), 1280);
+        assert_eq!(stats.stages_run(), 2);
+    }
+}

@@ -53,6 +53,7 @@ use crate::search::api::{
     rank_top_k, BackendStats, EngineError, Hit, SearchRequest, SearchResponse, SupportSet,
     VectorSearchBackend,
 };
+use crate::search::cascade::{CascadeConfig, CascadeStats, Shortlist};
 use crate::search::SearchMode;
 use crate::testutil::derive_seed;
 use crate::util::par::par_map_mut;
@@ -64,6 +65,12 @@ use crate::CELLS_PER_STRING;
 /// strings keep drawing sense energy (they are physically programmed),
 /// exactly like dead rows on a real die awaiting garbage collection.
 pub const REBALANCE_DEAD_FRACTION: f64 = 0.25;
+
+/// Minimum string senses per shard before batched search pays for a
+/// per-call thread spawn: ~4K string senses (≈100K cell evaluations)
+/// comfortably dwarf a spawn/join; below that, fan-out overhead
+/// dominates. Shared by the plain and cascade paths.
+const PARALLEL_SENSE_FLOOR: usize = 4096;
 
 /// Engine configuration (one per experiment point).
 #[derive(Debug, Clone, Copy)]
@@ -129,6 +136,41 @@ struct SupportEntry {
     alive: bool,
 }
 
+/// One resolved stage of an installed cascade schedule: every `None`
+/// knob of the [`CascadeConfig`] stage replaced by the engine's
+/// configured value, the stage ladder built, and the word-line iteration
+/// cost precomputed.
+#[derive(Clone)]
+struct CascadePlanStage {
+    mode: SearchMode,
+    ladder: SenseLadder,
+    /// Code-word columns sensed per group (a prefix of the word).
+    columns: usize,
+    shortlist: Shortlist,
+    /// Word-line applications this stage costs: one per group under AVSS
+    /// (string-select senses any column subset of a group under a single
+    /// drive), one per sensed (group, column) under SVSS.
+    iterations: u64,
+}
+
+/// A validated, layout-resolved cascade schedule
+/// (see [`SearchEngine::set_cascade`]).
+#[derive(Clone)]
+struct CascadePlan {
+    stages: Vec<CascadePlanStage>,
+    safety_margin: f64,
+    iteration_budget: Option<u64>,
+    /// The source configuration, kept for introspection.
+    config: CascadeConfig,
+}
+
+impl CascadePlan {
+    /// Upper bound on cascade iterations per request (all stages run).
+    fn max_iterations(&self) -> u64 {
+        self.stages.iter().map(|s| s.iterations).sum()
+    }
+}
+
 /// One MCAM block holding a contiguous slice of the slot table.
 struct Shard {
     block: McamBlock,
@@ -182,9 +224,62 @@ impl Shard {
         }
         partial
     }
+
+    /// Selectively score this shard's candidate slots (local indices,
+    /// ascending) for one cascade stage: iteration (g, c) senses only
+    /// the strings `(g·W + c)·n + local[j]` through the stage's ladder
+    /// ([`McamBlock::sense_votes_select`]), accumulating weighted votes
+    /// per candidate. With `local == 0..n` and a full-precision stage
+    /// this is bit-identical to [`Self::score_batch`] for one query —
+    /// the cascade parity contract.
+    fn score_select(
+        &mut self,
+        local: &[usize],
+        wordlines: &[[u8; CELLS_PER_STRING]],
+        word_length: usize,
+        groups: usize,
+        stage: &CascadePlanStage,
+        weights: &[f64],
+    ) -> Vec<f64> {
+        let mut scores = vec![0f64; local.len()];
+        if local.is_empty() {
+            return scores;
+        }
+        let m = self.n;
+        for g in 0..groups {
+            for c in 0..stage.columns {
+                let wl = match stage.mode {
+                    SearchMode::Svss => &wordlines[g * word_length + c],
+                    SearchMode::Avss => &wordlines[g],
+                };
+                self.block.sense_votes_select(
+                    wl,
+                    (g * word_length + c) * m,
+                    local,
+                    &stage.ladder,
+                    weights[c],
+                    &mut scores,
+                );
+            }
+        }
+        scores
+    }
 }
 
 /// A programmed, block-sharded MCAM search engine.
+///
+/// ```
+/// use mcamvss::encoding::Encoding;
+/// use mcamvss::search::engine::{EngineConfig, SearchEngine};
+/// use mcamvss::search::{SearchMode, SearchRequest};
+///
+/// let cfg = EngineConfig::new(Encoding::Mtmc, 4, SearchMode::Avss, 3.0).ideal();
+/// let mut engine = SearchEngine::new(cfg, 8, 4)?;
+/// engine.program_support(&[&[0.2f32; 8] as &[f32], &[2.5f32; 8]], &[0, 1])?;
+/// let response = engine.search(&SearchRequest::new(&[2.4f32; 8]))?;
+/// assert_eq!(response.top().unwrap().label, 1);
+/// # Ok::<(), mcamvss::search::EngineError>(())
+/// ```
 pub struct SearchEngine {
     cfg: EngineConfig,
     layout: VectorLayout,
@@ -204,6 +299,8 @@ pub struct SearchEngine {
     energy_model: EnergyModel,
     energy: EnergyAccount,
     timing: SearchTiming,
+    /// Installed progressive-precision schedule (see [`Self::set_cascade`]).
+    cascade: Option<CascadePlan>,
 }
 
 impl SearchEngine {
@@ -285,8 +382,77 @@ impl SearchEngine {
             energy_model: EnergyModel::default(),
             energy: EnergyAccount::default(),
             timing: SearchTiming::default(),
+            cascade: None,
             cfg,
         })
+    }
+
+    /// Install (or clear, with `None`) a progressive-precision cascade
+    /// schedule. Subsequent searches run the prune-and-refine path of
+    /// DESIGN.md §Cascade instead of the full scan: stage 0 senses every
+    /// programmed slot at its (possibly reduced) precision, later stages
+    /// refine only the shortlist. Schedule problems — malformed stages,
+    /// a stage sensing more columns than the code word has, an
+    /// `iteration_budget` too small to cover stage 0 — come back as
+    /// [`EngineError::InvalidConfig`].
+    ///
+    /// Per-request [`crate::search::SearchOptions::mode`] overrides are
+    /// **rejected** (typed [`EngineError::InvalidConfig`]) while a
+    /// cascade is installed: the schedule owns the iteration plan
+    /// (stages with `mode: None` inherit the engine's configured mode at
+    /// install time), and silently running a different mode than the
+    /// request asked for would be worse than an error.
+    pub fn set_cascade(&mut self, cascade: Option<CascadeConfig>) -> Result<(), EngineError> {
+        let Some(config) = cascade else {
+            self.cascade = None;
+            return Ok(());
+        };
+        config.validate()?;
+        let w = self.layout.word_length;
+        let groups = self.layout.groups;
+        let mut stages = Vec::with_capacity(config.stages.len());
+        for (s, stage) in config.stages.iter().enumerate() {
+            let columns = stage.columns.unwrap_or(w);
+            if columns > w {
+                return Err(EngineError::InvalidConfig(format!(
+                    "cascade stage {s} senses {columns} columns but the code word has {w}"
+                )));
+            }
+            let mode = stage.mode.unwrap_or(self.cfg.mode);
+            let ladder_len = stage.ladder_len.unwrap_or(self.cfg.ladder_len);
+            let iterations = match mode {
+                SearchMode::Avss => groups as u64,
+                SearchMode::Svss => (groups * columns) as u64,
+            };
+            stages.push(CascadePlanStage {
+                mode,
+                ladder: SenseLadder::new(&self.cfg.params, ladder_len),
+                columns,
+                shortlist: stage.shortlist,
+                iterations,
+            });
+        }
+        if let Some(budget) = config.iteration_budget {
+            if budget < stages[0].iterations {
+                return Err(EngineError::InvalidConfig(format!(
+                    "cascade iteration_budget {budget} cannot cover stage 0 \
+                     ({} iterations)",
+                    stages[0].iterations
+                )));
+            }
+        }
+        self.cascade = Some(CascadePlan {
+            stages,
+            safety_margin: config.safety_margin,
+            iteration_budget: config.iteration_budget,
+            config,
+        });
+        Ok(())
+    }
+
+    /// The installed cascade schedule, if any.
+    pub fn cascade(&self) -> Option<&CascadeConfig> {
+        self.cascade.as_ref().map(|plan| &plan.config)
     }
 
     pub fn layout(&self) -> &VectorLayout {
@@ -340,9 +506,14 @@ impl SearchEngine {
         }
     }
 
-    /// Iterations one search will consume in the configured mode (per
-    /// block — shards search in parallel under the same word-line drive).
-    pub fn iterations_per_search(&self) -> usize {
+    /// Word-line iterations one **full scan** consumes in the configured
+    /// mode (per block — shards search in parallel under the same
+    /// word-line drive). This is an *upper bound*, not a per-request
+    /// actual: requests that override the mode and cascade schedules
+    /// execute different counts — [`SearchResponse::iterations`] and
+    /// [`Self::timing`] record what actually ran (the honest-accounting
+    /// contract of DESIGN.md §Cascade).
+    pub fn max_iterations_per_search(&self) -> usize {
         Self::mode_iterations(&self.layout, self.cfg.mode) as usize
     }
 
@@ -554,6 +725,25 @@ impl SearchEngine {
                     got: request.query.len(),
                 });
             }
+            if self.cascade.is_some() && request.options.mode.is_some() {
+                // Silently running the schedule's modes instead of the
+                // requested one would hand back Ok with different
+                // iterations/scores than asked for — reject instead.
+                return Err(EngineError::InvalidConfig(
+                    "per-request mode overrides are not supported on the cascade path \
+                     (the installed schedule owns the iteration plan)"
+                        .into(),
+                ));
+            }
+        }
+        if self.cascade.is_some() {
+            // Take the plan out for the duration of the call (no per-batch
+            // clone on the hot path) and restore it afterwards; there is
+            // no early return in between.
+            let plan = self.cascade.take().expect("checked just above");
+            let result = self.search_batch_cascade(&plan, requests);
+            self.cascade = Some(plan);
+            return result;
         }
         let slots = self.entries.len();
         let groups = self.layout.groups;
@@ -580,9 +770,6 @@ impl SearchEngine {
         let wl_ref = &wordlines;
         let max_shard_vectors = self.shards.iter().map(|s| s.n).max().unwrap_or(0);
         let sense_events_per_shard = max_shard_vectors * groups * w * requests.len();
-        // ~4K string senses (≈100K cell evaluations) comfortably dwarfs a
-        // thread spawn/join; below that, fan-out overhead dominates.
-        const PARALLEL_SENSE_FLOOR: usize = 4096;
         let partials: Vec<Vec<f64>> =
             if self.shards.len() > 1 && sense_events_per_shard >= PARALLEL_SENSE_FLOOR {
                 par_map_mut(&mut self.shards, |_, shard| {
@@ -606,11 +793,14 @@ impl SearchEngine {
                         .copy_from_slice(&partial[qi * shard.n..(qi + 1) * shard.n]);
                 }
             }
-            // Accounting matches the legacy per-iteration bookkeeping:
-            // every programmed string is sensed once per search in both
-            // modes (slots·G·W strings through the full ladder).
+            // Honest accounting for the full scan: every programmed
+            // string really is sensed once per search in both modes
+            // (slots·G·W strings through the full ladder), and all of the
+            // mode's word-line iterations execute. The cascade path
+            // counts its own (smaller) actuals per stage.
             let iterations = Self::mode_iterations(&self.layout, wordlines[qi].0);
             self.timing.add_iterations(iterations);
+            self.timing.finish_search();
             self.energy.add_sense(
                 &self.energy_model,
                 (slots * groups * w) as u64,
@@ -634,9 +824,212 @@ impl SearchEngine {
                 iterations,
                 device_latency_us: iterations as f64 * SEARCH_ITERATION_US,
                 full_scores: if request.options.full_scores { Some(scores) } else { None },
+                cascade: None,
             });
         }
         Ok(responses)
+    }
+
+    /// Execute a batch through the installed cascade (DESIGN.md
+    /// §Cascade). Queries run independently — shortlists are per-query —
+    /// so the plain path's batch-amortized shard fan-out is traded for
+    /// sensing only the strings each request actually needs. Accounting
+    /// is per stage actually executed: `iterations`, the energy ledger
+    /// and the timing model see exactly what ran, and every response
+    /// carries a [`CascadeStats`].
+    fn search_batch_cascade(
+        &mut self,
+        plan: &CascadePlan,
+        requests: &[SearchRequest<'_>],
+    ) -> Result<Vec<SearchResponse>, EngineError> {
+        let slots = self.entries.len();
+        let groups = self.layout.groups;
+        let w = self.layout.word_length;
+        let full_scan_sensed = (slots * groups * w) as i64;
+        let mut responses = Vec::with_capacity(requests.len());
+        for request in requests {
+            // Encode the query once per distinct stage mode.
+            let mut wl_cache: Vec<(SearchMode, Vec<[u8; CELLS_PER_STRING]>)> = Vec::new();
+            for stage in &plan.stages {
+                if !wl_cache.iter().any(|(m, _)| *m == stage.mode) {
+                    wl_cache.push((stage.mode, self.query_wordlines(request.query, stage.mode)));
+                }
+            }
+
+            // Per-slot state: the most refined score so far and the
+            // deepest stage that sensed the slot (stage 0 senses all).
+            let mut cand: Vec<usize> = (0..slots).collect();
+            let mut scores = vec![0f64; slots];
+            let mut stage_of = vec![0usize; slots];
+            let mut stage_sensed: Vec<usize> = Vec::with_capacity(plan.stages.len());
+            let mut iterations = 0u64;
+            let mut early_exited = false;
+
+            for (s, stage) in plan.stages.iter().enumerate() {
+                if s > 0 {
+                    if let Some(budget) = plan.iteration_budget {
+                        if iterations + stage.iterations > budget {
+                            // The refine stage doesn't fit the request's
+                            // budget: answer from what was sensed.
+                            break;
+                        }
+                    }
+                }
+                let wls = &wl_cache
+                    .iter()
+                    .find(|(m, _)| *m == stage.mode)
+                    .expect("stage mode encoded above")
+                    .1;
+                let stage_scores = self.sense_stage(stage, wls, w, groups, &cand);
+                iterations += stage.iterations;
+                stage_sensed.push(cand.len() * groups * stage.columns);
+                self.energy.add_sense(
+                    &self.energy_model,
+                    (cand.len() * groups * stage.columns) as u64,
+                    stage.ladder.len(),
+                );
+                for (k, &i) in cand.iter().enumerate() {
+                    scores[i] = stage_scores[k];
+                    stage_of[i] = s;
+                }
+                if s + 1 == plan.stages.len() {
+                    break;
+                }
+                // Early exit: in this stage's own vote units, a leader
+                // more than safety_margin ahead of the runner-up cannot
+                // be overtaken by refinement that moves any slot's score
+                // by at most safety_margin / 2 (DESIGN.md §Cascade).
+                if plan.safety_margin.is_finite() {
+                    let (mut leader, mut runner) = (f64::NEG_INFINITY, f64::NEG_INFINITY);
+                    for (k, &i) in cand.iter().enumerate() {
+                        if !self.entries[i].alive {
+                            continue;
+                        }
+                        let score = stage_scores[k];
+                        if score > leader {
+                            runner = leader;
+                            leader = score;
+                        } else if score > runner {
+                            runner = score;
+                        }
+                    }
+                    if leader - runner > plan.safety_margin {
+                        early_exited = true;
+                        break;
+                    }
+                }
+                // Prune: keep the best live candidates. `All` keeps every
+                // sensed slot — tombstones included — so a full-keep
+                // refine touches exactly the strings a plain scan senses
+                // (the bitwise-parity property).
+                if !matches!(stage.shortlist, Shortlist::All) {
+                    let mut live: Vec<usize> = (0..cand.len())
+                        .filter(|&k| self.entries[cand[k]].alive)
+                        .collect();
+                    let keep = stage.shortlist.keep_of(live.len());
+                    live.sort_by(|&a, &b| {
+                        stage_scores[b]
+                            .total_cmp(&stage_scores[a])
+                            .then_with(|| cand[a].cmp(&cand[b]))
+                    });
+                    live.truncate(keep);
+                    let mut next: Vec<usize> = live.into_iter().map(|k| cand[k]).collect();
+                    next.sort_unstable();
+                    cand = next;
+                }
+            }
+
+            self.timing.add_iterations(iterations);
+            self.timing.finish_search();
+            self.energy.finish_search();
+
+            // Rank deepest-refined slots first: scores from different
+            // stages live on different vote scales, so ranking never
+            // compares across stages — survivors of the final executed
+            // stage outrank pruned slots, which rank among themselves by
+            // their last (coarse) score.
+            let top_k = request.options.top_k.min(self.n_vectors());
+            let deepest = stage_sensed.len() - 1;
+            let mut hits = Vec::with_capacity(top_k);
+            for s in (0..=deepest).rev() {
+                if hits.len() == top_k {
+                    break;
+                }
+                let need = top_k - hits.len();
+                hits.extend(rank_top_k(
+                    need,
+                    self.entries
+                        .iter()
+                        .enumerate()
+                        .filter(|&(i, e)| e.alive && stage_of[i] == s)
+                        .map(|(i, e)| Hit { index: i, label: e.label, score: scores[i] }),
+                ));
+            }
+            let total_sensed: usize = stage_sensed.iter().sum();
+            responses.push(SearchResponse {
+                hits,
+                iterations,
+                device_latency_us: iterations as f64 * SEARCH_ITERATION_US,
+                full_scores: request.options.full_scores.then_some(scores),
+                cascade: Some(CascadeStats {
+                    stage_sensed,
+                    iterations_saved: full_scan_sensed - total_sensed as i64,
+                    early_exited,
+                }),
+            });
+        }
+        Ok(responses)
+    }
+
+    /// Sense one cascade stage: every candidate slot (global indices,
+    /// ascending) against the stage's word lines, column prefix and
+    /// ladder. Returns one accumulated vote score per candidate. Shards
+    /// own disjoint contiguous slot ranges, so each shard senses a
+    /// contiguous subrange of the candidate list — fanned out on scoped
+    /// threads when the stage's work clears the same floor as the plain
+    /// path.
+    fn sense_stage(
+        &mut self,
+        stage: &CascadePlanStage,
+        wordlines: &[[u8; CELLS_PER_STRING]],
+        word_length: usize,
+        groups: usize,
+        cand: &[usize],
+    ) -> Vec<f64> {
+        let mut stage_scores = vec![0f64; cand.len()];
+        // Per-shard contiguous candidate subranges, as shard-local
+        // string-table indices.
+        let mut spans: Vec<(usize, usize, Vec<usize>)> = Vec::with_capacity(self.shards.len());
+        let mut lo = 0usize;
+        for shard in &self.shards {
+            let hi = lo + cand[lo..].partition_point(|&i| i < shard.base + shard.n);
+            let local: Vec<usize> = cand[lo..hi].iter().map(|&i| i - shard.base).collect();
+            spans.push((lo, hi, local));
+            lo = hi;
+        }
+        let weights = &self.weights;
+        let sense_events = cand.len() * groups * stage.columns;
+        let spans_ref = &spans;
+        let partials: Vec<Vec<f64>> =
+            if self.shards.len() > 1 && sense_events >= PARALLEL_SENSE_FLOOR {
+                par_map_mut(&mut self.shards, |s, shard| {
+                    let local = &spans_ref[s].2;
+                    shard.score_select(local, wordlines, word_length, groups, stage, weights)
+                })
+            } else {
+                self.shards
+                    .iter_mut()
+                    .enumerate()
+                    .map(|(s, shard)| {
+                        let local = &spans[s].2;
+                        shard.score_select(local, wordlines, word_length, groups, stage, weights)
+                    })
+                    .collect()
+            };
+        for (&(span_lo, span_hi, _), partial) in spans.iter().zip(&partials) {
+            stage_scores[span_lo..span_hi].copy_from_slice(partial);
+        }
+        stage_scores
     }
 }
 
@@ -670,7 +1063,15 @@ impl VectorSearchBackend for SearchEngine {
             vectors: self.n_vectors(),
             tombstones: self.dead,
             shards: self.shards.len(),
-            iterations_per_search: self.iterations_per_search() as u64,
+            max_iterations_per_search: self.max_iterations_per_search() as u64,
+            svss_iterations_per_search: self.layout.svss_iterations() as u64,
+            avss_iterations_per_search: self.layout.avss_iterations() as u64,
+            cascade_max_iterations_per_search: self
+                .cascade
+                .as_ref()
+                .map(CascadePlan::max_iterations)
+                .unwrap_or(0),
+            avg_iterations_per_search: self.timing.avg_iterations_per_search(),
             nj_per_search: self.energy.nj_per_search(),
         }
     }
@@ -1013,6 +1414,62 @@ mod tests {
         for (i, r) in refs.iter().enumerate() {
             assert_eq!(top1(&mut eng, r).index, i);
         }
+    }
+
+    #[test]
+    fn cascade_layout_validation_is_typed() {
+        let cfg = EngineConfig::new(Encoding::Mtmc, 8, SearchMode::Avss, 3.0).ideal();
+        let mut eng = SearchEngine::new(cfg, 48, 8).unwrap();
+        // coarse prefix wider than the code word
+        let too_wide = CascadeConfig::two_stage(9, Shortlist::Count(4));
+        assert!(matches!(
+            eng.set_cascade(Some(too_wide)),
+            Err(EngineError::InvalidConfig(_))
+        ));
+        // AVSS stage 0 costs groups = 2 iterations; a budget of 1 cannot
+        // cover even the mandatory stage
+        let starved = CascadeConfig::two_stage(2, Shortlist::Count(4)).with_iteration_budget(1);
+        assert!(matches!(
+            eng.set_cascade(Some(starved)),
+            Err(EngineError::InvalidConfig(_))
+        ));
+        // a rejected install leaves no schedule behind
+        assert!(eng.cascade().is_none());
+        let ok = CascadeConfig::two_stage(2, Shortlist::Count(4));
+        eng.set_cascade(Some(ok.clone())).unwrap();
+        assert_eq!(eng.cascade(), Some(&ok));
+        eng.set_cascade(None).unwrap();
+        assert!(eng.cascade().is_none());
+    }
+
+    #[test]
+    fn cascade_search_reports_honest_accounting() {
+        let mut rng = Rng::new(0xCAFE);
+        let (embs, labels) = cluster_embeddings(&mut rng, 8, 4, 48, 0.02);
+        let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
+        let cfg = EngineConfig::new(Encoding::Mtmc, 8, SearchMode::Avss, 3.0).ideal();
+        let mut eng = SearchEngine::new(cfg, 48, refs.len()).unwrap();
+        eng.program_support(&refs, &labels).unwrap();
+        eng.set_cascade(Some(CascadeConfig::two_stage(2, Shortlist::Count(8)))).unwrap();
+        let response = eng.search(&SearchRequest::new(&embs[5])).unwrap();
+        assert_eq!(response.top().unwrap().label, labels[5]);
+        // AVSS both stages: groups = 2 word-line iterations each
+        assert_eq!(response.iterations, 4);
+        assert_eq!(response.device_latency_us, 4.0 * SEARCH_ITERATION_US);
+        let stats = response.cascade.as_ref().unwrap();
+        // stage 0: 32 slots × 2 groups × 2 columns; stage 1: 8 × 2 × 8
+        assert_eq!(stats.stage_sensed, vec![128, 128]);
+        // a full scan senses 32 × 2 × 8 = 512 strings per query
+        assert_eq!(stats.iterations_saved, 512 - 256);
+        assert!(!stats.early_exited);
+        // ledgers carry the same actuals
+        assert_eq!(eng.energy().sensed_strings, 256);
+        assert_eq!(eng.timing().iterations, 4);
+        assert_eq!(eng.timing().searches, 1);
+        let stats = eng.stats();
+        assert_eq!(stats.max_iterations_per_search, 2);
+        assert_eq!(stats.cascade_max_iterations_per_search, 4);
+        assert_eq!(stats.avg_iterations_per_search, 4.0);
     }
 
     #[test]

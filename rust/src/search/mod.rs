@@ -13,10 +13,15 @@
 //!   (singly or batched) with SA voting, energy and timing accounting;
 //!   supports online append and tombstone remove with
 //!   rebalance-on-threshold.
+//! * [`cascade`] — progressive-precision prune-and-refine scheduling
+//!   ([`cascade::CascadeConfig`]): a coarse pass over all slots, then
+//!   high-precision refinement of a shortlist, with honest per-request
+//!   iteration/energy accounting ([`cascade::CascadeStats`]).
 //! * [`distance`] — ideal (device-free) quantized distances behind the
 //!   Fig. 6 analysis.
 
 pub mod api;
+pub mod cascade;
 pub mod distance;
 pub mod engine;
 
@@ -24,6 +29,7 @@ pub use api::{
     BackendStats, EngineError, Hit, SearchOptions, SearchRequest, SearchResponse, SupportSet,
     SupportSetBuilder, VectorSearchBackend,
 };
+pub use cascade::{CascadeConfig, CascadeStage, CascadeStats, Shortlist};
 
 use crate::quant::QuantScheme;
 

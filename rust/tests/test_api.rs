@@ -17,7 +17,8 @@ use mcamvss::coordinator::{CoordinatorConfig, Payload, Server};
 use mcamvss::encoding::Encoding;
 use mcamvss::search::engine::{EngineConfig, SearchEngine};
 use mcamvss::search::{
-    EngineError, SearchMode, SearchRequest, SupportSetBuilder, VectorSearchBackend,
+    CascadeConfig, EngineError, SearchMode, SearchRequest, Shortlist, SupportSetBuilder,
+    VectorSearchBackend,
 };
 use mcamvss::testutil::Rng;
 
@@ -229,6 +230,54 @@ fn tombstone_remove_excludes_and_rebalances_on_threshold() {
             .unwrap();
         assert_eq!(hit.label, label, "survivor {i} must keep its label after renumbering");
     }
+}
+
+#[test]
+fn stats_iteration_breakdown_is_honest() {
+    // ISSUE 5 satellite: the old single `iterations_per_search` stat
+    // reported only the configured mode and silently disagreed with
+    // per-request mode overrides and cascade runs. The breakdown must
+    // expose the per-mode bounds, the cascade bound, and the measured
+    // actual.
+    let (embs, labels) = clustered(0x57A7, 4, 2, 0.02);
+    let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
+    let cfg = EngineConfig::new(Encoding::Mtmc, 32, SearchMode::Avss, 3.0).ideal();
+    let mut engine = SearchEngine::new(cfg, DIMS, refs.len()).unwrap();
+    engine.program_support(&refs, &labels).unwrap();
+    let stats = engine.stats();
+    assert_eq!(stats.max_iterations_per_search, 2, "AVSS bound: 2 groups");
+    assert_eq!(stats.avss_iterations_per_search, 2);
+    assert_eq!(stats.svss_iterations_per_search, 64, "2 groups × 32 columns");
+    assert_eq!(stats.cascade_max_iterations_per_search, 0, "no cascade installed");
+    assert_eq!(stats.avg_iterations_per_search, 0.0, "no search served yet");
+
+    // one configured-mode search + one SVSS override: the measured
+    // average reflects both, the bound stays the configured mode
+    engine.search(&SearchRequest::new(refs[0])).unwrap();
+    engine
+        .search(&SearchRequest::new(refs[0]).with_mode(SearchMode::Svss))
+        .unwrap();
+    let stats = engine.stats();
+    assert_eq!(stats.avg_iterations_per_search, (2.0 + 64.0) / 2.0);
+    assert_eq!(stats.max_iterations_per_search, 2);
+
+    // cascade installed: the schedule's own all-stages bound appears,
+    // and served requests keep feeding the honest average
+    engine
+        .set_cascade(Some(CascadeConfig::two_stage(8, Shortlist::Count(4))))
+        .unwrap();
+    assert_eq!(engine.stats().cascade_max_iterations_per_search, 4, "two AVSS stages");
+    let response = engine.search(&SearchRequest::new(refs[0])).unwrap();
+    assert_eq!(response.iterations, 4);
+    let stats = engine.stats();
+    assert_eq!(stats.avg_iterations_per_search, (2.0 + 64.0 + 4.0) / 3.0);
+
+    // software backend: every iteration stat is zero
+    let float = FloatBaseline::new(DIMS, Metric::L2).unwrap();
+    let fstats = float.stats();
+    assert_eq!(fstats.max_iterations_per_search, 0);
+    assert_eq!(fstats.cascade_max_iterations_per_search, 0);
+    assert_eq!(fstats.avg_iterations_per_search, 0.0);
 }
 
 #[test]

@@ -1,0 +1,354 @@
+//! Acceptance suite for the progressive-precision cascade (ISSUE 5):
+//!
+//! * **bitwise parity**: an unlimited-budget, full-keep cascade is
+//!   bitwise identical to the plain scan — single full-precision stage
+//!   on ideal *and* noisy devices (the selective kernel preserves the
+//!   RNG draw order), and a two-stage coarse+refine full-keep schedule
+//!   on the ideal path;
+//! * **safety margin**: whenever the margin is honored (per-slot
+//!   refinement error within half the margin, measured against the
+//!   fine scores), an early-exited ideal-path cascade returns the same
+//!   top-1 as the full scan;
+//! * **budget**: refinement stages that do not fit the per-request
+//!   iteration budget are skipped, and the response says so;
+//! * **typed errors**: malformed `CascadeConfig`s (zero shortlist,
+//!   budget below one stage, over-wide column prefix) are
+//!   `EngineError::InvalidConfig`, never panics;
+//! * **honest accounting**: the energy ledger and per-response stats
+//!   agree on exactly how many strings each request sensed.
+
+use mcamvss::encoding::Encoding;
+use mcamvss::search::cascade::{CascadeConfig, CascadeStage, Shortlist};
+use mcamvss::search::engine::{EngineConfig, SearchEngine};
+use mcamvss::search::{EngineError, SearchMode, SearchRequest};
+use mcamvss::testutil::Rng;
+
+const DIMS: usize = 48;
+
+fn clustered(seed: u64, n_classes: usize, per: usize, spread: f64) -> (Vec<Vec<f32>>, Vec<u32>) {
+    let mut rng = Rng::new(seed);
+    let mut embs = Vec::new();
+    let mut labels = Vec::new();
+    for c in 0..n_classes {
+        let proto: Vec<f64> = (0..DIMS).map(|_| rng.range_f64(0.2, 2.8)).collect();
+        for _ in 0..per {
+            embs.push(
+                proto
+                    .iter()
+                    .map(|&p| (p + spread * rng.gaussian()).max(0.0) as f32)
+                    .collect(),
+            );
+            labels.push(c as u32);
+        }
+    }
+    (embs, labels)
+}
+
+fn engine(cfg: EngineConfig, refs: &[&[f32]], labels: &[u32]) -> SearchEngine {
+    let mut engine = SearchEngine::new(cfg, DIMS, refs.len()).unwrap();
+    engine.program_support(refs, labels).unwrap();
+    engine
+}
+
+#[test]
+fn full_keep_single_stage_cascade_is_bitwise_plain_scan() {
+    // The parity hinge: a cascade whose only stage is the engine's own
+    // full-precision scan must be indistinguishable from the plain path
+    // — hits AND dense scores, ideal and noisy devices, across shard
+    // counts and modes. (Noisy parity holds because the selective kernel
+    // senses strings in the same order, drawing the same RNG stream.)
+    for shards in [1usize, 2, 3] {
+        for ideal in [true, false] {
+            for mode in [SearchMode::Avss, SearchMode::Svss] {
+                let (embs, labels) = clustered(0xB17, 6, 3, 0.05);
+                let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
+                let mut cfg = EngineConfig::new(Encoding::Mtmc, 8, mode, 3.0)
+                    .with_seed(0x5CA1E)
+                    .with_shards(shards);
+                if ideal {
+                    cfg = cfg.ideal();
+                }
+                let mut plain = engine(cfg, &refs, &labels);
+                let mut cascaded = engine(cfg, &refs, &labels);
+                cascaded
+                    .set_cascade(Some(CascadeConfig::new(vec![CascadeStage::full()])))
+                    .unwrap();
+                for q in refs.iter().take(5) {
+                    let request = SearchRequest::new(q).with_top_k(4).with_full_scores();
+                    let a = plain.search(&request).unwrap();
+                    let b = cascaded.search(&request).unwrap();
+                    assert_eq!(a.hits, b.hits, "shards={shards} ideal={ideal} {mode:?}");
+                    assert_eq!(
+                        a.full_scores, b.full_scores,
+                        "shards={shards} ideal={ideal} {mode:?}: scores must be bitwise"
+                    );
+                    assert_eq!(a.iterations, b.iterations, "one full-precision stage");
+                    let stats = b.cascade.expect("cascade accounting attached");
+                    assert_eq!(stats.stage_sensed, vec![refs.len() * 2 * 8]);
+                    assert_eq!(stats.iterations_saved, 0, "full keep saves nothing");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn full_keep_two_stage_cascade_matches_plain_scan_on_ideal_path() {
+    // Coarse pass + full-precision refine with Shortlist::All: the final
+    // stage re-senses every slot, so ideal-path hits and dense scores
+    // equal the plain scan bitwise (the coarse pass costs extra sensing
+    // — iterations_saved goes negative, honestly).
+    for shards in [1usize, 2] {
+        let (embs, labels) = clustered(0x2B17, 5, 4, 0.04);
+        let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
+        let cfg = EngineConfig::new(Encoding::Mtmc, 8, SearchMode::Avss, 3.0)
+            .ideal()
+            .with_seed(0x1D1)
+            .with_shards(shards);
+        let mut plain = engine(cfg, &refs, &labels);
+        let mut cascaded = engine(cfg, &refs, &labels);
+        cascaded
+            .set_cascade(Some(CascadeConfig::new(vec![
+                CascadeStage::coarse(2, Shortlist::All).with_ladder_len(4),
+                CascadeStage::full(),
+            ])))
+            .unwrap();
+        for q in refs.iter().take(6) {
+            let request = SearchRequest::new(q).with_top_k(3).with_full_scores();
+            let a = plain.search(&request).unwrap();
+            let b = cascaded.search(&request).unwrap();
+            assert_eq!(a.hits, b.hits, "{shards} shards");
+            assert_eq!(a.full_scores, b.full_scores, "{shards} shards");
+            let stats = b.cascade.expect("cascade accounting");
+            assert_eq!(stats.stage_sensed.len(), 2);
+            assert!(
+                stats.iterations_saved < 0,
+                "full-keep refine senses MORE than a plain scan: {}",
+                stats.iterations_saved
+            );
+        }
+    }
+}
+
+#[test]
+fn pruned_cascade_keeps_exact_match_top1_and_batch_equals_scalar() {
+    // A real pruning schedule on clustered data: exact-match queries must
+    // still win (their slot scores the maximum in every stage), and the
+    // batched cascade path must equal scalar calls bitwise.
+    let (embs, labels) = clustered(0x93A, 12, 4, 0.03);
+    let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
+    let cfg = EngineConfig::new(Encoding::Mtmc, 8, SearchMode::Avss, 3.0)
+        .ideal()
+        .with_shards(2)
+        .with_seed(9);
+    let mut scalar = engine(cfg, &refs, &labels);
+    let mut batched = engine(cfg, &refs, &labels);
+    let cascade = CascadeConfig::two_stage(2, Shortlist::Count(12));
+    scalar.set_cascade(Some(cascade.clone())).unwrap();
+    batched.set_cascade(Some(cascade)).unwrap();
+    let requests: Vec<SearchRequest> = refs
+        .iter()
+        .take(8)
+        .map(|&q| SearchRequest::new(q).with_top_k(3).with_full_scores())
+        .collect();
+    let scalar_results: Vec<_> = requests.iter().map(|r| scalar.search(r).unwrap()).collect();
+    let batch_results = batched.search_batch(&requests).unwrap();
+    for (i, (s, b)) in scalar_results.iter().zip(&batch_results).enumerate() {
+        assert_eq!(s, b, "query {i}: batched cascade must equal scalar bitwise");
+        assert_eq!(s.top().unwrap().label, labels[i], "exact match wins, query {i}");
+        let stats = s.cascade.as_ref().unwrap();
+        assert_eq!(stats.stage_sensed[0], refs.len() * 2 * 2, "coarse senses all slots");
+        assert_eq!(stats.stage_sensed[1], 12 * 2 * 8, "refine senses the shortlist");
+        assert!(stats.iterations_saved > 0, "pruning must save sensing");
+    }
+}
+
+#[test]
+fn early_exit_preserves_top1_when_margin_honored() {
+    // Ideal path, coarse stage = full columns at half ladder depth, so
+    // the coarse-to-fine relation is tight: fine ≈ 2 × coarse. Measure
+    // the actual per-slot deviation eps = max |fine − 2·coarse|, install
+    // a safety margin ABOVE eps (margin honored by construction), and
+    // verify every early-exited request returns the full scan's top-1.
+    let (embs, labels) = clustered(0xEA51, 16, 1, 0.0);
+    let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
+    let cfg = EngineConfig::new(Encoding::Mtmc, 8, SearchMode::Avss, 3.0)
+        .ideal()
+        .with_seed(0xE);
+
+    // fine and coarse dense scores from single-stage full-keep probes
+    let mut fine_engine = engine(cfg, &refs, &labels);
+    let mut coarse_engine = engine(cfg, &refs, &labels);
+    coarse_engine
+        .set_cascade(Some(CascadeConfig::new(vec![
+            CascadeStage::full().with_ladder_len(8),
+        ])))
+        .unwrap();
+    let mut eps = 0f64;
+    let mut fine_tops = Vec::new();
+    for q in &refs {
+        let fine = fine_engine
+            .search(&SearchRequest::new(q).with_full_scores())
+            .unwrap();
+        let coarse = coarse_engine
+            .search(&SearchRequest::new(q).with_full_scores())
+            .unwrap();
+        fine_tops.push(fine.top().unwrap().label);
+        for (f, c) in fine
+            .full_scores
+            .as_ref()
+            .unwrap()
+            .iter()
+            .zip(coarse.full_scores.as_ref().unwrap())
+        {
+            eps = eps.max((f - 2.0 * c).abs());
+        }
+    }
+
+    // margin honored: refinement moves a slot by at most eps in the
+    // fine scale = eps/2 per slot in coarse units; margin > 2·(eps/2).
+    let margin = eps + 1.0;
+    let mut cascaded = engine(cfg, &refs, &labels);
+    cascaded
+        .set_cascade(Some(
+            CascadeConfig::new(vec![
+                CascadeStage::full().with_ladder_len(8).with_shortlist(Shortlist::Count(4)),
+                CascadeStage::full(),
+            ])
+            .with_safety_margin(margin),
+        ))
+        .unwrap();
+    let mut exits = 0usize;
+    for (q, &want) in refs.iter().zip(&fine_tops) {
+        let response = cascaded.search(&SearchRequest::new(q)).unwrap();
+        let stats = response.cascade.as_ref().unwrap();
+        if stats.early_exited {
+            exits += 1;
+            assert_eq!(stats.stage_sensed.len(), 1, "early exit skips the refine stage");
+            assert_eq!(
+                response.top().unwrap().label,
+                want,
+                "honored margin must preserve the full-scan top-1"
+            );
+        }
+    }
+    // Exact-match queries put the leader at the ladder maximum, far
+    // beyond eps of every distinct-proto runner-up: exits must happen.
+    assert!(exits > 0, "no early exit triggered (margin {margin:.1}, eps {eps:.1})");
+}
+
+#[test]
+fn budget_skips_refinement_stages() {
+    let (embs, labels) = clustered(0xB06E7, 8, 2, 0.02);
+    let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
+    let cfg = EngineConfig::new(Encoding::Mtmc, 8, SearchMode::Avss, 3.0).ideal();
+
+    // 48 dims → 2 groups: AVSS stages cost 2 iterations, an SVSS refine
+    // over 8 columns costs 16.
+    let starved = CascadeConfig::two_stage(2, Shortlist::Count(4)).with_iteration_budget(2);
+    let mut eng = engine(cfg, &refs, &labels);
+    eng.set_cascade(Some(starved)).unwrap();
+    let response = eng.search(&SearchRequest::new(refs[3])).unwrap();
+    let stats = response.cascade.as_ref().unwrap();
+    assert_eq!(stats.stage_sensed.len(), 1, "refine does not fit the budget");
+    assert_eq!(response.iterations, 2);
+    assert!(!stats.early_exited, "a budget stop is not a margin exit");
+    // coarse-only answer still ranks and still finds the exact match
+    assert_eq!(response.top().unwrap().label, labels[3]);
+
+    // exactly enough budget → both stages run
+    let funded = CascadeConfig::two_stage(2, Shortlist::Count(4)).with_iteration_budget(4);
+    let mut eng = engine(cfg, &refs, &labels);
+    eng.set_cascade(Some(funded)).unwrap();
+    let response = eng.search(&SearchRequest::new(refs[3])).unwrap();
+    assert_eq!(response.cascade.as_ref().unwrap().stage_sensed.len(), 2);
+    assert_eq!(response.iterations, 4);
+
+    // an SVSS refine that overruns a mid-sized budget is skipped
+    let svss_refine = CascadeConfig::new(vec![
+        CascadeStage::coarse(2, Shortlist::Count(4)),
+        CascadeStage::full().with_mode(SearchMode::Svss),
+    ])
+    .with_iteration_budget(10);
+    let mut eng = engine(cfg, &refs, &labels);
+    eng.set_cascade(Some(svss_refine)).unwrap();
+    let response = eng.search(&SearchRequest::new(refs[3])).unwrap();
+    assert_eq!(response.cascade.as_ref().unwrap().stage_sensed.len(), 1);
+    assert_eq!(response.iterations, 2, "only the AVSS coarse pass ran");
+}
+
+#[test]
+fn invalid_cascade_configs_are_typed_errors() {
+    let (embs, labels) = clustered(0xE44, 4, 2, 0.02);
+    let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
+    let cfg = EngineConfig::new(Encoding::Mtmc, 8, SearchMode::Avss, 3.0).ideal();
+    let mut eng = engine(cfg, &refs, &labels);
+    let bad = [
+        CascadeConfig::new(vec![]),
+        CascadeConfig::two_stage(2, Shortlist::Count(0)),
+        CascadeConfig::two_stage(2, Shortlist::Fraction(0.0)),
+        CascadeConfig::two_stage(0, Shortlist::Count(4)),
+        CascadeConfig::two_stage(9, Shortlist::Count(4)), // word has 8 columns
+        CascadeConfig::new(vec![CascadeStage::full().with_ladder_len(0)]),
+        CascadeConfig::two_stage(2, Shortlist::Count(4)).with_iteration_budget(0),
+        // AVSS stage 0 costs 2 iterations (2 groups); budget 1 < one stage
+        CascadeConfig::two_stage(2, Shortlist::Count(4)).with_iteration_budget(1),
+    ];
+    for cascade in bad {
+        let err = eng.set_cascade(Some(cascade.clone())).unwrap_err();
+        assert!(
+            matches!(err, EngineError::InvalidConfig(_)),
+            "{cascade:?} -> {err:?}"
+        );
+        assert!(eng.cascade().is_none(), "rejected schedule must not install");
+    }
+    // searches still work after rejected installs
+    assert!(eng.search(&SearchRequest::new(refs[0])).is_ok());
+
+    // with a cascade installed, a per-request mode override is rejected
+    // (the schedule owns the iteration plan) — and clearing the cascade
+    // makes overrides work again
+    eng.set_cascade(Some(CascadeConfig::two_stage(2, Shortlist::Count(4)))).unwrap();
+    let err = eng
+        .search(&SearchRequest::new(refs[0]).with_mode(SearchMode::Svss))
+        .unwrap_err();
+    assert!(matches!(err, EngineError::InvalidConfig(_)), "{err:?}");
+    assert!(eng.search(&SearchRequest::new(refs[0])).is_ok());
+    eng.set_cascade(None).unwrap();
+    assert!(eng
+        .search(&SearchRequest::new(refs[0]).with_mode(SearchMode::Svss))
+        .is_ok());
+}
+
+#[test]
+fn cascade_respects_tombstones_and_ledgers_agree() {
+    let (embs, labels) = clustered(0x70B5, 8, 1, 0.0);
+    let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
+    let cfg = EngineConfig::new(Encoding::Mtmc, 8, SearchMode::Avss, 3.0)
+        .ideal()
+        .with_shards(2);
+    let mut eng = engine(cfg, &refs, &labels);
+    eng.set_cascade(Some(CascadeConfig::two_stage(2, Shortlist::Count(3)))).unwrap();
+    // one tombstone (below the 25% rebalance threshold)
+    eng.remove(2).unwrap();
+    let before = eng.energy().sensed_strings;
+    let response = eng
+        .search(&SearchRequest::new(refs[2]).with_top_k(8).with_full_scores())
+        .unwrap();
+    let stats = response.cascade.as_ref().unwrap();
+    // the dead slot is still physically sensed by the coarse pass...
+    assert_eq!(stats.stage_sensed[0], 8 * 2 * 2, "coarse senses live + dead slots");
+    // ...but never ranked, and never carried into the refine shortlist
+    assert_eq!(stats.stage_sensed[1], 3 * 2 * 8);
+    assert!(response.hits.iter().all(|h| h.index != 2));
+    assert_eq!(response.hits.len(), 7, "top_k clamps to live slots");
+    assert_eq!(
+        response.full_scores.as_ref().unwrap().len(),
+        8,
+        "dense dump still covers every physical slot"
+    );
+    // ledger delta == per-response accounting
+    let sensed: usize = stats.stage_sensed.iter().sum();
+    assert_eq!(eng.energy().sensed_strings - before, sensed as u64);
+    assert_eq!(stats.total_sensed(), sensed);
+}
