@@ -229,29 +229,16 @@ fn main() {
 }
 
 /// Merge the measured perf entries into `BENCH_engine.json` at the repo
-/// root: existing keys from earlier (or partial) runs are preserved,
-/// re-measured keys are replaced.
+/// root via [`mcamvss::util::json::merge_report`]: earlier (or partial)
+/// runs keep their keys, re-measured keys are replaced. The
+/// `bench-client` CLI subcommand merges into the same report.
 fn write_report(entries: Vec<(String, Json)>) {
     if entries.is_empty() {
         return;
     }
     let root = Path::new(env!("CARGO_MANIFEST_DIR")).parent().expect("crate has a parent dir");
     let path = root.join("BENCH_engine.json");
-    let mut fields: Vec<(String, Json)> = match std::fs::read_to_string(&path) {
-        Ok(text) => match Json::parse(&text) {
-            Ok(Json::Obj(fields)) => fields,
-            _ => Vec::new(),
-        },
-        Err(_) => Vec::new(),
-    };
-    for (key, value) in entries {
-        if let Some(slot) = fields.iter_mut().find(|(k, _)| *k == key) {
-            slot.1 = value;
-        } else {
-            fields.push((key, value));
-        }
-    }
-    match std::fs::write(&path, Json::Obj(fields).render()) {
+    match mcamvss::util::json::merge_report(&path, entries) {
         Ok(()) => println!("[bench report → {}]", path.display()),
         Err(e) => eprintln!("WARNING: could not write {}: {e}", path.display()),
     }

@@ -19,7 +19,9 @@ const VALUE_KEYS: &[&str] = &[
     "n-query", "episodes", "workers", "shards", "requests", "seed", "out",
     "artifacts", "filter", "batch", "top-k", "backend", "metric", "steps",
     "meta-episodes", "cascade-columns", "cascade-ladder", "cascade-shortlist",
-    "cascade-margin", "cascade-budget",
+    "cascade-margin", "cascade-budget", "listen", "connect", "clients",
+    "addr-file", "serve-seconds", "max-connections", "max-in-flight",
+    "idle-timeout-ms", "dims",
 ];
 
 impl Args {
@@ -123,6 +125,32 @@ mod tests {
         assert_eq!(args.opt_usize("cascade-shortlist").unwrap(), Some(64));
         assert_eq!(args.opt("cascade-margin"), Some("6.5"));
         assert_eq!(args.opt_usize("cascade-budget").unwrap(), Some(40));
+    }
+
+    #[test]
+    fn network_keys_take_values() {
+        let args = parse(&[
+            "serve", "--listen", "127.0.0.1:0", "--max-connections", "8",
+            "--max-in-flight", "4", "--idle-timeout-ms", "500", "--addr-file",
+            "/tmp/addr", "--serve-seconds", "30", "--synthetic",
+        ]);
+        assert_eq!(args.opt("listen"), Some("127.0.0.1:0"));
+        assert_eq!(args.opt_usize("max-connections").unwrap(), Some(8));
+        assert_eq!(args.opt_usize("max-in-flight").unwrap(), Some(4));
+        assert_eq!(args.opt_usize("idle-timeout-ms").unwrap(), Some(500));
+        assert_eq!(args.opt("addr-file"), Some("/tmp/addr"));
+        assert_eq!(args.opt_usize("serve-seconds").unwrap(), Some(30));
+        assert!(args.flag("synthetic"));
+
+        let args = parse(&[
+            "bench-client", "--connect", "127.0.0.1:7171", "--clients", "4",
+            "--requests", "100", "--dims", "48", "--shutdown-server",
+        ]);
+        assert_eq!(args.command.as_deref(), Some("bench-client"));
+        assert_eq!(args.opt("connect"), Some("127.0.0.1:7171"));
+        assert_eq!(args.opt_usize("clients").unwrap(), Some(4));
+        assert_eq!(args.opt_usize("dims").unwrap(), Some(48));
+        assert!(args.flag("shutdown-server"));
     }
 
     #[test]

@@ -95,6 +95,74 @@ impl CascadeSettings {
     }
 }
 
+/// The `[serve]` TOML section: network limits for `mcamvss serve
+/// --listen` (the TCP front end of
+/// [`crate::coordinator::network::NetServer`]). Distinct from `[server]`,
+/// which sizes the in-process coordinator (workers, queues, batching).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeSettings {
+    /// Address to listen on (e.g. `"127.0.0.1:7171"`); `None` keeps
+    /// `serve` in its in-process closed-loop mode unless `--listen` is
+    /// passed.
+    pub listen: Option<String>,
+    /// Maximum simultaneously-live client connections.
+    pub max_connections: usize,
+    /// Per-connection cap on unanswered requests.
+    pub max_in_flight: usize,
+    /// Close a quiet connection after this long (milliseconds).
+    pub idle_timeout_ms: u64,
+    /// Refuse wire frames whose declared body exceeds this many bytes.
+    pub max_frame_bytes: usize,
+    /// On shutdown, wait at most this long (milliseconds) per
+    /// connection for in-flight responses.
+    pub drain_timeout_ms: u64,
+}
+
+impl Default for ServeSettings {
+    fn default() -> Self {
+        ServeSettings {
+            listen: None,
+            max_connections: 64,
+            max_in_flight: 32,
+            idle_timeout_ms: 30_000,
+            max_frame_bytes: 4 << 20,
+            drain_timeout_ms: 5_000,
+        }
+    }
+}
+
+impl ServeSettings {
+    /// Resolve into the network layer's config struct.
+    pub fn to_net_config(&self) -> crate::coordinator::network::NetConfig {
+        crate::coordinator::network::NetConfig {
+            max_connections: self.max_connections,
+            max_in_flight: self.max_in_flight,
+            idle_timeout: std::time::Duration::from_millis(self.idle_timeout_ms),
+            max_frame_bytes: self.max_frame_bytes,
+            drain_timeout: std::time::Duration::from_millis(self.drain_timeout_ms),
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.max_connections == 0 {
+            bail!("serve max_connections must be >= 1");
+        }
+        if self.max_in_flight == 0 {
+            bail!("serve max_in_flight must be >= 1");
+        }
+        if self.idle_timeout_ms == 0 || self.idle_timeout_ms > 3_600_000 {
+            bail!("serve idle_timeout_ms must be in 1..=3600000");
+        }
+        if self.drain_timeout_ms > 3_600_000 {
+            bail!("serve drain_timeout_ms must be <= 3600000");
+        }
+        if self.max_frame_bytes < 64 {
+            bail!("serve max_frame_bytes must be >= 64 (one frame header + a tiny body)");
+        }
+        Ok(())
+    }
+}
+
 /// Budgeted hyper-parameters for one HAT training run (mirror of the
 /// python `TrainSettings` in `compile/hat.py`), consumed by
 /// [`crate::hat`]. Presets follow the python module; `synth` targets
@@ -214,6 +282,8 @@ pub struct Config {
     pub seed: u64,
     /// HAT training budget for the `train` subcommand.
     pub train: TrainSettings,
+    /// Network limits for `serve --listen` (`[serve]` section).
+    pub serve: ServeSettings,
     /// Optional progressive-precision cascade (`[cascade]` section /
     /// `--cascade` flags); `None` serves full scans.
     pub cascade: Option<CascadeSettings>,
@@ -240,6 +310,7 @@ impl Config {
             variation: VariationModel::nand_default(),
             seed: 0x5EED,
             train: TrainSettings::omniglot(),
+            serve: ServeSettings::default(),
             cascade: None,
         }
     }
@@ -264,6 +335,7 @@ impl Config {
             variation: VariationModel::nand_default(),
             seed: 0x5EED,
             train: TrainSettings::cub(),
+            serve: ServeSettings::default(),
             cascade: None,
         }
     }
@@ -289,6 +361,7 @@ impl Config {
             variation: VariationModel::nand_default(),
             seed: 0x5EED,
             train: TrainSettings::synth(),
+            serve: ServeSettings::default(),
             cascade: None,
         }
     }
@@ -389,6 +462,34 @@ impl Config {
         if let Some(v) = doc.get_float("train", "noise_sigma") {
             cfg.train.noise_sigma = v;
         }
+        if let Some(addr) = doc.get_str("serve", "listen") {
+            cfg.serve.listen = Some(addr.to_string());
+        }
+        {
+            // Sign-checked integer reads for the [serve] section.
+            let get_pos = |key: &str| -> Result<Option<usize>> {
+                match doc.get_int("serve", key) {
+                    None => Ok(None),
+                    Some(v) if v >= 1 => Ok(Some(v as usize)),
+                    Some(v) => bail!("serve {key} must be >= 1, got {v}"),
+                }
+            };
+            if let Some(v) = get_pos("max_connections")? {
+                cfg.serve.max_connections = v;
+            }
+            if let Some(v) = get_pos("max_in_flight")? {
+                cfg.serve.max_in_flight = v;
+            }
+            if let Some(v) = get_pos("idle_timeout_ms")? {
+                cfg.serve.idle_timeout_ms = v as u64;
+            }
+            if let Some(v) = get_pos("max_frame_bytes")? {
+                cfg.serve.max_frame_bytes = v;
+            }
+            if let Some(v) = get_pos("drain_timeout_ms")? {
+                cfg.serve.drain_timeout_ms = v as u64;
+            }
+        }
         if doc.get_bool("cascade", "enabled") == Some(true) {
             // Sign-checked integer reads: a negative value must be a
             // config error, not a silent `as usize` wrap into a huge
@@ -448,6 +549,7 @@ impl Config {
             bail!("B4E beyond CL=9 overflows 4^CL levels (paper sweeps 1..9)");
         }
         self.train.validate()?;
+        self.serve.validate()?;
         if let Some(cascade) = &self.cascade {
             cascade.validate()?;
         }
@@ -567,6 +669,42 @@ program_sigma = 0.3
             cascade.stages[0].shortlist,
             crate::search::cascade::Shortlist::Fraction(f) if f == 0.25
         ));
+    }
+
+    #[test]
+    fn serve_section_parses_and_validates() {
+        let doc = TomlDoc::parse(
+            "[serve]\nlisten = \"127.0.0.1:7171\"\nmax_connections = 8\n\
+             max_in_flight = 4\nidle_timeout_ms = 1000\nmax_frame_bytes = 65536\n\
+             drain_timeout_ms = 250\n",
+        )
+        .unwrap();
+        let cfg = Config::from_toml(&doc).unwrap();
+        assert_eq!(cfg.serve.listen.as_deref(), Some("127.0.0.1:7171"));
+        assert_eq!(cfg.serve.max_connections, 8);
+        assert_eq!(cfg.serve.max_in_flight, 4);
+        assert_eq!(cfg.serve.idle_timeout_ms, 1000);
+        assert_eq!(cfg.serve.max_frame_bytes, 65536);
+        assert_eq!(cfg.serve.drain_timeout_ms, 250);
+        let net = cfg.serve.to_net_config();
+        assert_eq!(net.max_connections, 8);
+        assert_eq!(net.idle_timeout, std::time::Duration::from_millis(1000));
+
+        // defaults apply without the section
+        let cfg = Config::from_toml(&TomlDoc::parse("").unwrap()).unwrap();
+        assert_eq!(cfg.serve, ServeSettings::default());
+        assert!(cfg.serve.listen.is_none());
+
+        // zero / negative / absurd values are typed config errors
+        for bad in [
+            "[serve]\nmax_connections = 0\n",
+            "[serve]\nmax_in_flight = -2\n",
+            "[serve]\nidle_timeout_ms = 9999999999\n",
+            "[serve]\nmax_frame_bytes = 8\n",
+        ] {
+            let doc = TomlDoc::parse(bad).unwrap();
+            assert!(Config::from_toml(&doc).is_err(), "accepted {bad:?}");
+        }
     }
 
     #[test]

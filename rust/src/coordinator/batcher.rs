@@ -9,9 +9,10 @@
 //! whole batch.
 
 use super::queue::BoundedQueue;
-use super::{Request, ServerStats};
+use super::{route_response, Request, Response, ServerStats};
+use crate::search::api::EngineError;
 use std::sync::atomic::Ordering;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -33,6 +34,7 @@ pub fn spawn(
     cfg: BatcherConfig,
     ingress: Arc<BoundedQueue<Request>>,
     workers: Vec<Arc<BoundedQueue<Vec<Request>>>>,
+    responses: Arc<Mutex<Vec<Response>>>,
     stats: Arc<ServerStats>,
 ) -> JoinHandle<()> {
     assert!(!workers.is_empty(), "batcher needs at least one worker");
@@ -56,19 +58,19 @@ pub fn spawn(
                         let expired =
                             deadline.map(|d| Instant::now() >= d).unwrap_or(false);
                         if batch.len() >= cfg.max_batch || expired {
-                            flush(&mut batch, &workers, &mut next_worker, &stats);
+                            flush(&mut batch, &workers, &mut next_worker, &responses, &stats);
                             deadline = None;
                         }
                     }
                     Ok(None) => {
                         // ingress closed + drained
-                        flush(&mut batch, &workers, &mut next_worker, &stats);
+                        flush(&mut batch, &workers, &mut next_worker, &responses, &stats);
                         break;
                     }
                     Err(()) => {
                         // timeout: flush a partial batch if its deadline hit
                         if !batch.is_empty() {
-                            flush(&mut batch, &workers, &mut next_worker, &stats);
+                            flush(&mut batch, &workers, &mut next_worker, &responses, &stats);
                             deadline = None;
                         }
                     }
@@ -85,6 +87,7 @@ fn flush(
     batch: &mut Vec<Request>,
     workers: &[Arc<BoundedQueue<Vec<Request>>>],
     next_worker: &mut usize,
+    responses: &Mutex<Vec<Response>>,
     stats: &ServerStats,
 ) {
     if batch.is_empty() {
@@ -92,8 +95,25 @@ fn flush(
     }
     let out = std::mem::take(batch);
     stats.batches.fetch_add(1, Ordering::Relaxed);
-    workers[*next_worker % workers.len()].push(out);
+    let target = &workers[*next_worker % workers.len()];
     *next_worker += 1;
+    if let Err(refused) = target.push(out) {
+        // The worker queue closed under us (shutdown race): answer every
+        // request in the batch with a typed shutdown error instead of
+        // losing it.
+        for req in refused.into_inner() {
+            stats.errored.fetch_add(1, Ordering::Relaxed);
+            route_response(
+                responses,
+                req.reply,
+                Response {
+                    id: req.id,
+                    outcome: Err(EngineError::ShuttingDown),
+                    wall_latency: req.submitted_at.elapsed(),
+                },
+            );
+        }
+    }
 }
 
 #[cfg(test)]
@@ -108,6 +128,7 @@ mod tests {
             payload: Payload::Embedding(vec![]),
             options: SearchOptions::default(),
             submitted_at: Instant::now(),
+            reply: None,
         }
     }
 
@@ -115,15 +136,17 @@ mod tests {
     fn batches_up_to_max() {
         let ingress = Arc::new(BoundedQueue::new(64));
         let worker: Arc<BoundedQueue<Vec<Request>>> = Arc::new(BoundedQueue::new(64));
+        let responses = Arc::new(Mutex::new(Vec::new()));
         let stats = Arc::new(ServerStats::default());
         let handle = spawn(
             BatcherConfig { max_batch: 3, max_wait: Duration::from_millis(100) },
             Arc::clone(&ingress),
             vec![Arc::clone(&worker)],
+            responses,
             Arc::clone(&stats),
         );
         for i in 0..7 {
-            ingress.push(req(i));
+            ingress.push(req(i)).unwrap();
         }
         ingress.close();
         handle.join().unwrap();
@@ -145,9 +168,10 @@ mod tests {
             BatcherConfig { max_batch: 100, max_wait: Duration::from_millis(5) },
             Arc::clone(&ingress),
             vec![Arc::clone(&worker)],
+            Arc::new(Mutex::new(Vec::new())),
             Arc::clone(&stats),
         );
-        ingress.push(req(0));
+        ingress.push(req(0)).unwrap();
         // partial batch must arrive without more input
         let batch = worker.pop().expect("timed flush");
         assert_eq!(batch.len(), 1);
@@ -165,10 +189,11 @@ mod tests {
             BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(1) },
             Arc::clone(&ingress),
             vec![Arc::clone(&w1), Arc::clone(&w2)],
+            Arc::new(Mutex::new(Vec::new())),
             Arc::clone(&stats),
         );
         for i in 0..6 {
-            ingress.push(req(i));
+            ingress.push(req(i)).unwrap();
         }
         ingress.close();
         handle.join().unwrap();
@@ -183,5 +208,37 @@ mod tests {
         assert_eq!(n1 + n2, 6);
         assert_eq!(n1, 3);
         assert_eq!(n2, 3);
+    }
+
+    /// A batch flushed into an already-closed worker queue (shutdown
+    /// race) must come back as typed `ShuttingDown` responses — one per
+    /// request — not vanish.
+    #[test]
+    fn closed_worker_queue_answers_batch_with_shutdown_errors() {
+        let ingress = Arc::new(BoundedQueue::new(64));
+        let worker: Arc<BoundedQueue<Vec<Request>>> = Arc::new(BoundedQueue::new(64));
+        let responses = Arc::new(Mutex::new(Vec::new()));
+        let stats = Arc::new(ServerStats::default());
+        worker.close(); // close before the batcher ever flushes
+        let handle = spawn(
+            BatcherConfig { max_batch: 2, max_wait: Duration::from_millis(1) },
+            Arc::clone(&ingress),
+            vec![Arc::clone(&worker)],
+            Arc::clone(&responses),
+            Arc::clone(&stats),
+        );
+        for i in 0..5 {
+            ingress.push(req(i)).unwrap();
+        }
+        ingress.close();
+        handle.join().unwrap();
+        let mut got = responses.lock().unwrap().clone();
+        got.sort_by_key(|r| r.id);
+        assert_eq!(got.len(), 5, "every request answered exactly once");
+        for (i, r) in got.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+            assert_eq!(r.outcome.as_ref().unwrap_err(), &EngineError::ShuttingDown);
+        }
+        assert_eq!(stats.errored.load(Ordering::Relaxed), 5);
     }
 }

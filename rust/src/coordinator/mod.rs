@@ -28,6 +28,7 @@
 //! workload saturates just as well.
 
 pub mod batcher;
+pub mod network;
 pub mod queue;
 pub mod worker;
 
@@ -52,6 +53,30 @@ pub enum Payload {
     Embedding(Vec<f32>),
 }
 
+/// Where a finished [`Response`] goes. In-process callers leave it
+/// unset and collect responses from [`Server::shutdown`]; the network
+/// layer attaches a sink that frames the response back onto the owning
+/// connection. The callback must be cheap and non-blocking — it runs on
+/// a worker (or batcher) thread.
+#[derive(Clone)]
+pub struct ReplySink(Arc<dyn Fn(Response) + Send + Sync>);
+
+impl ReplySink {
+    pub fn new(f: impl Fn(Response) + Send + Sync + 'static) -> ReplySink {
+        ReplySink(Arc::new(f))
+    }
+
+    pub fn deliver(&self, response: Response) {
+        (self.0)(response);
+    }
+}
+
+impl std::fmt::Debug for ReplySink {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("ReplySink")
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct Request {
     pub id: u64,
@@ -59,6 +84,22 @@ pub struct Request {
     /// Per-request search knobs (top-k, mode override, dense scores).
     pub options: SearchOptions,
     pub submitted_at: Instant,
+    /// Routed responses go to this sink; `None` collects in the server.
+    pub reply: Option<ReplySink>,
+}
+
+/// Hand a response to its sink if the request carried one, else append
+/// it to the server-collected vector. Shared by workers and the batcher
+/// failure path so every delivery honors routing.
+pub(crate) fn route_response(
+    responses: &Mutex<Vec<Response>>,
+    sink: Option<ReplySink>,
+    response: Response,
+) {
+    match sink {
+        Some(sink) => sink.deliver(response),
+        None => responses.lock().unwrap().push(response),
+    }
 }
 
 /// The served answer to one request: ranked hits on success, a typed
@@ -209,6 +250,7 @@ impl Server {
             cfg.batcher,
             Arc::clone(&ingress),
             pool.senders(),
+            Arc::clone(&responses),
             Arc::clone(&stats),
         );
         Ok(Server {
@@ -273,10 +315,27 @@ impl Server {
     }
 
     /// Submit with per-request options (top-k, mode override).
+    ///
+    /// If the server is shutting down (ingress closed), the request is
+    /// still answered — with a typed [`EngineError::ShuttingDown`]
+    /// response — never silently dropped.
     pub fn submit_with(&self, payload: Payload, options: SearchOptions) -> u64 {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         self.stats.submitted.fetch_add(1, Ordering::Relaxed);
-        self.ingress.push(Request { id, payload, options, submitted_at: Instant::now() });
+        let req = Request { id, payload, options, submitted_at: Instant::now(), reply: None };
+        if let Err(refused) = self.ingress.push(req) {
+            let req = refused.into_inner();
+            self.stats.errored.fetch_add(1, Ordering::Relaxed);
+            route_response(
+                &self.responses,
+                req.reply,
+                Response {
+                    id: req.id,
+                    outcome: Err(EngineError::ShuttingDown),
+                    wall_latency: req.submitted_at.elapsed(),
+                },
+            );
+        }
         id
     }
 
@@ -287,14 +346,35 @@ impl Server {
 
     /// Non-blocking submit with per-request options.
     pub fn try_submit_with(&self, payload: Payload, options: SearchOptions) -> Option<u64> {
+        self.try_submit_routed(payload, options, None).ok()
+    }
+
+    /// Non-blocking submit that routes the response to `reply` (when
+    /// set) instead of the server-collected vector. Refusals are typed:
+    /// a full queue sheds with [`EngineError::Overloaded`], a closed one
+    /// answers [`EngineError::ShuttingDown`] — the caller owns framing
+    /// the error back to its client.
+    pub fn try_submit_routed(
+        &self,
+        payload: Payload,
+        options: SearchOptions,
+        reply: Option<ReplySink>,
+    ) -> std::result::Result<u64, EngineError> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let req = Request { id, payload, options, submitted_at: Instant::now() };
-        if self.ingress.try_push(req) {
-            self.stats.submitted.fetch_add(1, Ordering::Relaxed);
-            Some(id)
-        } else {
-            self.stats.rejected.fetch_add(1, Ordering::Relaxed);
-            None
+        let req = Request { id, payload, options, submitted_at: Instant::now(), reply };
+        match self.ingress.try_push(req) {
+            Ok(()) => {
+                self.stats.submitted.fetch_add(1, Ordering::Relaxed);
+                Ok(id)
+            }
+            Err(refused) => {
+                self.stats.rejected.fetch_add(1, Ordering::Relaxed);
+                Err(if refused.is_closed() {
+                    EngineError::ShuttingDown
+                } else {
+                    EngineError::Overloaded
+                })
+            }
         }
     }
 

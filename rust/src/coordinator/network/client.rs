@@ -1,0 +1,100 @@
+//! [`WireClient`] — a small blocking client for the MVW1 protocol, used
+//! by the `bench-client` CLI subcommand and the loopback integration
+//! tests. One frame in flight per call with [`WireClient::search`];
+//! drive [`WireClient::send`]/[`WireClient::recv`] directly to pipeline.
+
+use super::wire::{self, Frame, ReadError, DEFAULT_MAX_FRAME_BYTES};
+use crate::search::api::{QueryKind, WireRequest};
+use crate::search::{SearchOptions, SearchResponse};
+use std::io::Write;
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+/// A blocking MVW1 client over one TCP connection.
+#[derive(Debug)]
+pub struct WireClient {
+    stream: TcpStream,
+    max_frame_bytes: usize,
+}
+
+impl WireClient {
+    /// Connect to a serving [`super::NetServer`].
+    pub fn connect(addr: impl ToSocketAddrs) -> std::io::Result<WireClient> {
+        let stream = TcpStream::connect(addr)?;
+        let _ = stream.set_nodelay(true);
+        Ok(WireClient { stream, max_frame_bytes: DEFAULT_MAX_FRAME_BYTES })
+    }
+
+    /// Largest frame body [`Self::recv`] will accept (defaults to
+    /// [`DEFAULT_MAX_FRAME_BYTES`]).
+    pub fn set_max_frame_bytes(&mut self, max: usize) {
+        self.max_frame_bytes = max;
+    }
+
+    /// Bound how long [`Self::recv`] blocks (`None` = forever). A
+    /// timeout surfaces as [`ReadError::Io`] with kind
+    /// `WouldBlock`/`TimedOut`.
+    pub fn set_read_timeout(&mut self, timeout: Option<Duration>) -> std::io::Result<()> {
+        self.stream.set_read_timeout(timeout)
+    }
+
+    /// Send one frame.
+    pub fn send(&mut self, frame: &Frame) -> std::io::Result<()> {
+        wire::write_frame(&mut self.stream, frame)
+    }
+
+    /// Send raw bytes verbatim — no framing, no validation. Exists so
+    /// the malformed-input tests can put arbitrary garbage on the wire.
+    pub fn send_raw(&mut self, bytes: &[u8]) -> std::io::Result<()> {
+        self.stream.write_all(bytes)
+    }
+
+    /// Receive one frame.
+    pub fn recv(&mut self) -> Result<Frame, ReadError> {
+        wire::read_frame(&mut self.stream, self.max_frame_bytes)
+    }
+
+    /// Submit one query and block for its answer. `id` is echoed by the
+    /// server; with nothing else in flight the next frame is the reply.
+    ///
+    /// Returns the decoded frame rather than unwrapping it: the server
+    /// may answer with `Frame::Error` (overload, bad query), which the
+    /// caller must handle as a value.
+    pub fn search(
+        &mut self,
+        id: u64,
+        kind: QueryKind,
+        data: Vec<f32>,
+        options: SearchOptions,
+    ) -> Result<Frame, ReadError> {
+        let frame = Frame::Request { id, request: WireRequest { kind, data, options } };
+        self.send(&frame).map_err(ReadError::Io)?;
+        self.recv()
+    }
+
+    /// Like [`Self::search`], but unwraps the success path: returns the
+    /// response if the server answered this `id` with `Frame::Response`.
+    pub fn search_expect(
+        &mut self,
+        id: u64,
+        kind: QueryKind,
+        data: Vec<f32>,
+        options: SearchOptions,
+    ) -> Result<SearchResponse, String> {
+        match self.search(id, kind, data, options) {
+            Ok(Frame::Response { id: got, response }) if got == id => Ok(response),
+            Ok(Frame::Response { id: got, .. }) => {
+                Err(format!("response for id {got}, expected {id}"))
+            }
+            Ok(Frame::Error { id: got, error }) => Err(format!("server error (id {got}): {error}")),
+            Ok(other) => Err(format!("unexpected frame: {other:?}")),
+            Err(e) => Err(format!("transport: {e}")),
+        }
+    }
+
+    /// Ask the server to drain and shut down (trusted-network control
+    /// frame; see the module docs in [`super`]).
+    pub fn request_shutdown(&mut self) -> std::io::Result<()> {
+        self.send(&Frame::Shutdown)
+    }
+}

@@ -1,0 +1,220 @@
+//! Thread-per-connection manager: one reader thread per client (the
+//! "conn thread") plus a writer thread draining an outbound byte queue.
+//!
+//! Invariants the conn thread upholds:
+//!
+//! * **exactly-once**: every decoded request frame gets exactly one
+//!   `Response`/`Error` frame (responses a dead client can no longer
+//!   read are dropped and counted, never re-sent);
+//! * **shedding, not collapse**: requests past the per-client in-flight
+//!   cap — or refused by the coordinator queue — are answered with a
+//!   typed [`EngineError::Overloaded`] frame while the connection (and
+//!   server) stay live;
+//! * **no trust in framing**: a protocol violation gets one best-effort
+//!   [`EngineError::BadFrame`] frame, then the connection is dropped —
+//!   after bad magic or a corrupt length there is no way to resync;
+//! * **drain before close**: on disconnect/shutdown the thread waits
+//!   (bounded by `drain_timeout`) for in-flight responses before
+//!   closing the outbound queue.
+
+use super::wire::{self, Frame, ReadError, NO_REQUEST_ID};
+use super::{NetConfig, NetStats};
+use crate::coordinator::queue::BoundedQueue;
+use crate::coordinator::{Payload, ReplySink, Server};
+use crate::search::api::{EngineError, QueryKind, WireRequest};
+use std::io::{Read, Write};
+use std::net::{Shutdown, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// How often the reader wakes to check the shutdown flag / idle clock
+/// while waiting for a frame.
+const POLL_TICK: Duration = Duration::from_millis(100);
+
+/// Once a frame's first byte arrived, allow this long for the rest — a
+/// stalled mid-frame sender holds a thread, so it is bounded.
+const FRAME_STALL_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Serve one client connection to completion. Runs on its own thread
+/// (spawned by the listener); returns when the client disconnects, goes
+/// idle, violates the protocol, or the server shuts down.
+pub(crate) fn handle_connection(
+    mut stream: TcpStream,
+    server: Arc<Server>,
+    cfg: NetConfig,
+    shutdown: Arc<AtomicBool>,
+    stats: Arc<NetStats>,
+) {
+    let _ = stream.set_nodelay(true);
+    // Outbound frames; sized so a well-behaved client (≤ max_in_flight
+    // outstanding) never drops a response, with slack for error frames.
+    let outbound: Arc<BoundedQueue<Vec<u8>>> =
+        Arc::new(BoundedQueue::new(cfg.max_in_flight + 4));
+    let in_flight = Arc::new(AtomicUsize::new(0));
+
+    let writer = {
+        let outbound = Arc::clone(&outbound);
+        let stats = Arc::clone(&stats);
+        let stream = match stream.try_clone() {
+            Ok(s) => s,
+            Err(_) => return,
+        };
+        std::thread::Builder::new()
+            .name("mcamvss-conn-writer".into())
+            .spawn(move || writer_loop(stream, outbound, stats))
+            .expect("spawn conn writer")
+    };
+
+    let mut idle_deadline = Instant::now() + cfg.idle_timeout;
+    loop {
+        if shutdown.load(Ordering::Relaxed) {
+            break;
+        }
+        let _ = stream.set_read_timeout(Some(POLL_TICK));
+        let mut first = [0u8; 1];
+        match stream.read(&mut first) {
+            Ok(0) => break, // client closed cleanly
+            Ok(_) => {
+                // Rest of the frame: generous but bounded stall timeout.
+                let _ = stream.set_read_timeout(Some(FRAME_STALL_TIMEOUT));
+                match wire::read_frame_rest(first[0], &mut stream, cfg.max_frame_bytes) {
+                    Ok(Frame::Request { id, request }) => {
+                        idle_deadline = Instant::now() + cfg.idle_timeout;
+                        handle_request(&server, &cfg, id, request, &outbound, &in_flight, &stats);
+                    }
+                    Ok(Frame::Shutdown) => {
+                        shutdown.store(true, Ordering::Relaxed);
+                        break;
+                    }
+                    Ok(Frame::Response { .. }) | Ok(Frame::Error { .. }) => {
+                        // clients don't send responses — protocol abuse
+                        stats.malformed.fetch_add(1, Ordering::Relaxed);
+                        send_best_effort(
+                            &outbound,
+                            NO_REQUEST_ID,
+                            EngineError::BadFrame("unexpected response-direction frame".into()),
+                        );
+                        break;
+                    }
+                    Err(ReadError::Protocol(e)) => {
+                        stats.malformed.fetch_add(1, Ordering::Relaxed);
+                        send_best_effort(
+                            &outbound,
+                            NO_REQUEST_ID,
+                            EngineError::BadFrame(e.to_string()),
+                        );
+                        break;
+                    }
+                    Err(_) => break, // disconnect / stall mid-frame
+                }
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                if in_flight.load(Ordering::Acquire) == 0 && Instant::now() >= idle_deadline {
+                    break; // idle timeout
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => break,
+        }
+    }
+
+    // Drain: give in-flight requests a bounded window to answer before
+    // the outbound queue closes. Responses arriving after the window
+    // (or after a dead client's writer failed) are counted as dropped
+    // by the reply sink / writer.
+    let drain_deadline = Instant::now() + cfg.drain_timeout;
+    while in_flight.load(Ordering::Acquire) > 0 && Instant::now() < drain_deadline {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    outbound.close();
+    let _ = writer.join();
+    let _ = stream.shutdown(Shutdown::Both);
+}
+
+/// Writer thread: drain outbound frames onto the socket. After a write
+/// failure (client gone) it keeps draining so reply sinks never block,
+/// counting every discarded frame.
+fn writer_loop(mut stream: TcpStream, outbound: Arc<BoundedQueue<Vec<u8>>>, stats: Arc<NetStats>) {
+    let mut dead = false;
+    while let Some(bytes) = outbound.pop() {
+        if dead {
+            stats.dropped_replies.fetch_add(1, Ordering::Relaxed);
+            continue;
+        }
+        if stream.write_all(&bytes).is_err() {
+            dead = true;
+            stats.dropped_replies.fetch_add(1, Ordering::Relaxed);
+            // wake the reader too — the connection is done
+            let _ = stream.shutdown(Shutdown::Both);
+        }
+    }
+}
+
+/// Route one decoded request into the coordinator, enforcing the
+/// per-client in-flight cap. Every path answers the client id exactly
+/// once.
+fn handle_request(
+    server: &Server,
+    cfg: &NetConfig,
+    id: u64,
+    request: WireRequest,
+    outbound: &Arc<BoundedQueue<Vec<u8>>>,
+    in_flight: &Arc<AtomicUsize>,
+    stats: &Arc<NetStats>,
+) {
+    stats.requests.fetch_add(1, Ordering::Relaxed);
+    if in_flight.load(Ordering::Acquire) >= cfg.max_in_flight {
+        stats.overloaded.fetch_add(1, Ordering::Relaxed);
+        send_best_effort(outbound, id, EngineError::Overloaded);
+        return;
+    }
+    in_flight.fetch_add(1, Ordering::AcqRel);
+    let sink = {
+        let outbound = Arc::clone(outbound);
+        let in_flight = Arc::clone(in_flight);
+        let stats = Arc::clone(stats);
+        ReplySink::new(move |resp| {
+            let frame = match resp.outcome {
+                Ok(response) => Frame::Response { id, response },
+                Err(error) => Frame::Error { id, error },
+            };
+            // Never block a worker thread on a slow client: if the
+            // outbound buffer is full (client stopped reading) or
+            // closed (connection gone), the response is dropped.
+            if outbound.try_push(wire::encode_frame(&frame)).is_err() {
+                stats.dropped_replies.fetch_add(1, Ordering::Relaxed);
+            }
+            in_flight.fetch_sub(1, Ordering::AcqRel);
+        })
+    };
+    let payload = match request.kind {
+        QueryKind::Embedding => Payload::Embedding(request.data),
+        QueryKind::Image => Payload::Image(request.data),
+    };
+    match server.try_submit_routed(payload, request.options, Some(sink)) {
+        Ok(_) => {}
+        Err(error) => {
+            // The refused request (and its sink) never entered the
+            // queue: undo the in-flight claim and answer typed.
+            in_flight.fetch_sub(1, Ordering::AcqRel);
+            if error == EngineError::Overloaded {
+                stats.overloaded.fetch_add(1, Ordering::Relaxed);
+            }
+            send_best_effort(outbound, id, error);
+        }
+    }
+}
+
+/// Enqueue an error frame without blocking the conn thread forever: a
+/// full/closed outbound queue drops it (the client already stopped
+/// reading).
+fn send_best_effort(outbound: &BoundedQueue<Vec<u8>>, id: u64, error: EngineError) {
+    let frame = wire::encode_frame(&Frame::Error { id, error });
+    let _ = outbound.try_push(frame);
+}

@@ -1,0 +1,193 @@
+//! The accept loop: [`NetServer`] binds a TCP listener, spawns one conn
+//! thread per client (capped), and owns the graceful-shutdown order —
+//! stop accepting → drain every live connection → drain the coordinator.
+
+use super::conn::handle_connection;
+use super::wire::{self, Frame, NO_REQUEST_ID};
+use super::{NetConfig, NetStats};
+use crate::coordinator::{Response, Server, ServerStats};
+use crate::search::api::EngineError;
+use anyhow::{Context, Result};
+use std::io::Write;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// How often the accept loop polls for new connections / the shutdown
+/// flag (the listener socket is non-blocking).
+const ACCEPT_TICK: Duration = Duration::from_millis(20);
+
+/// A [`Server`] listening on a TCP socket.
+///
+/// Shutdown drain order (`NetServer::shutdown`):
+///
+/// 1. the shutdown flag stops the accept loop (no new connections);
+/// 2. every conn thread stops reading new frames, waits (bounded) for
+///    its in-flight responses, flushes its outbound queue, and exits;
+/// 3. the coordinator's ingress closes, the batcher flushes, workers
+///    drain their batch queues and join;
+/// 4. responses that were never routed to a connection (in-process
+///    submissions) are returned to the caller.
+pub struct NetServer {
+    server: Arc<Server>,
+    addr: SocketAddr,
+    cfg: NetConfig,
+    shutdown: Arc<AtomicBool>,
+    stats: Arc<NetStats>,
+    accept_handle: Option<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl NetServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and
+    /// start accepting clients for `server`.
+    pub fn start(server: Server, addr: &str, cfg: NetConfig) -> Result<NetServer> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+        listener.set_nonblocking(true).context("set listener non-blocking")?;
+        let addr = listener.local_addr().context("local_addr")?;
+        let server = Arc::new(server);
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let stats = Arc::new(NetStats::default());
+        let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+
+        let accept_handle = {
+            let server = Arc::clone(&server);
+            let cfg = cfg.clone();
+            let shutdown = Arc::clone(&shutdown);
+            let stats = Arc::clone(&stats);
+            let conns = Arc::clone(&conns);
+            std::thread::Builder::new()
+                .name("mcamvss-accept".into())
+                .spawn(move || {
+                    accept_loop(listener, server, cfg, shutdown, stats, conns)
+                })
+                .expect("spawn accept thread")
+        };
+
+        Ok(NetServer {
+            server,
+            addr,
+            cfg,
+            shutdown,
+            stats,
+            accept_handle: Some(accept_handle),
+            conns,
+        })
+    }
+
+    /// The bound address (resolves the ephemeral port of `:0` binds).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The network limits this server enforces.
+    pub fn config(&self) -> &NetConfig {
+        &self.cfg
+    }
+
+    /// Network-layer counters.
+    pub fn net_stats(&self) -> &NetStats {
+        &self.stats
+    }
+
+    /// A shared handle to the counters that outlives [`Self::shutdown`]
+    /// (which consumes the server) — the CLI prints final stats with it.
+    pub fn net_stats_handle(&self) -> Arc<NetStats> {
+        Arc::clone(&self.stats)
+    }
+
+    /// Coordinator-side counters.
+    pub fn server_stats(&self) -> &ServerStats {
+        self.server.stats()
+    }
+
+    /// `true` once shutdown has been requested — by [`Self::shutdown`],
+    /// [`Self::request_shutdown`], or a client's
+    /// [`Frame::Shutdown`] control frame.
+    pub fn shutdown_requested(&self) -> bool {
+        self.shutdown.load(Ordering::Relaxed)
+    }
+
+    /// Ask the server to drain and stop without consuming it (the
+    /// accept loop and conn threads start winding down immediately).
+    pub fn request_shutdown(&self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+    }
+
+    /// Graceful shutdown: stop accepting, drain every connection's
+    /// in-flight work, then drain the coordinator. Returns responses
+    /// that were never routed to a connection (none, when all traffic
+    /// came over the wire).
+    pub fn shutdown(mut self) -> Vec<Response> {
+        self.shutdown.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+        // The accept thread has exited, so no new conn threads can
+        // appear; join the live ones (each drains its in-flight work).
+        let handles = std::mem::take(&mut *self.conns.lock().unwrap());
+        for h in handles {
+            let _ = h.join();
+        }
+        let server = Arc::try_unwrap(self.server)
+            .ok()
+            .expect("all connection threads joined, server has a sole owner");
+        server.shutdown()
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    server: Arc<Server>,
+    cfg: NetConfig,
+    shutdown: Arc<AtomicBool>,
+    stats: Arc<NetStats>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+) {
+    while !shutdown.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let mut conns_guard = conns.lock().unwrap();
+                // reap finished conn threads so the cap counts live ones
+                conns_guard.retain(|h| !h.is_finished());
+                if conns_guard.len() >= cfg.max_connections {
+                    drop(conns_guard);
+                    stats.connections_refused.fetch_add(1, Ordering::Relaxed);
+                    refuse(stream);
+                    continue;
+                }
+                stats.connections_accepted.fetch_add(1, Ordering::Relaxed);
+                let server = Arc::clone(&server);
+                let cfg = cfg.clone();
+                let shutdown = Arc::clone(&shutdown);
+                let stats = Arc::clone(&stats);
+                let handle = std::thread::Builder::new()
+                    .name("mcamvss-conn".into())
+                    .spawn(move || {
+                        // conn sockets are blocking (with read timeouts)
+                        let _ = stream.set_nonblocking(false);
+                        handle_connection(stream, server, cfg, shutdown, stats);
+                    })
+                    .expect("spawn conn thread");
+                conns_guard.push(handle);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(ACCEPT_TICK);
+            }
+            Err(_) => {
+                // transient accept failure (e.g. EMFILE): back off
+                std::thread::sleep(ACCEPT_TICK);
+            }
+        }
+    }
+}
+
+/// Refuse a connection over the cap: one typed overload frame,
+/// best-effort, then close.
+fn refuse(mut stream: TcpStream) {
+    let frame = Frame::Error { id: NO_REQUEST_ID, error: EngineError::Overloaded };
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.write_all(&wire::encode_frame(&frame));
+}

@@ -1,0 +1,119 @@
+//! TCP serving front end for the coordinator — the network layer that
+//! takes [`crate::coordinator::Server`] over the wire (ROADMAP item 1).
+//!
+//! ```text
+//!  client ──MVW1 frames──▶ listener (accept thread)
+//!         ──────────────▶ conn thread (decode, in-flight gate)
+//!         ◀── responses ── reply sink → outbound queue → writer thread
+//! ```
+//!
+//! * [`wire`] — the length-prefixed binary frame envelope (`MVW1` magic,
+//!   capped `len` prefix) around the request/response/error bodies
+//!   encoded in [`crate::search::api`];
+//! * [`conn`] — thread-per-connection manager: per-client in-flight
+//!   limits, idle timeouts, typed [`crate::search::EngineError::Overloaded`] shedding,
+//!   and an in-flight drain on close;
+//! * [`listener`] — [`NetServer`]: accept loop, connection cap, graceful
+//!   shutdown draining every live connection before the coordinator
+//!   itself drains;
+//! * [`client`] — [`WireClient`]: a blocking client used by the
+//!   `bench-client` CLI subcommand and the loopback integration tests.
+//!
+//! No tokio in the offline image: everything is `std::net` +
+//! `std::thread`, matching the rest of the coordinator. The protocol
+//! carries no authentication — `serve` binds loopback/trusted networks
+//! only (it is a research artifact, not an internet-facing service);
+//! notably, any client may send a [`wire::Frame::Shutdown`] control
+//! frame to drain the server (how CI tears down its loopback smoke run).
+
+pub mod client;
+pub mod conn;
+pub mod listener;
+pub mod wire;
+
+pub use client::WireClient;
+pub use listener::NetServer;
+pub use wire::Frame;
+
+use crate::util::json::{Json, ObjBuilder};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Network-layer limits and timeouts, distinct from the coordinator's
+/// own [`crate::coordinator::CoordinatorConfig`]. Defaults mirror the
+/// `[serve]` section of `mcamvss.toml`.
+#[derive(Debug, Clone)]
+pub struct NetConfig {
+    /// Maximum simultaneously-live client connections; excess accepts
+    /// are answered with one [`crate::search::EngineError::Overloaded`] frame and
+    /// closed.
+    pub max_connections: usize,
+    /// Per-connection cap on requests submitted but not yet answered;
+    /// excess requests are shed with typed overload frames while the
+    /// connection stays live.
+    pub max_in_flight: usize,
+    /// Close a connection with no in-flight work after this long
+    /// without receiving a frame.
+    pub idle_timeout: Duration,
+    /// Refuse any frame whose declared body length exceeds this.
+    pub max_frame_bytes: usize,
+    /// On close/shutdown, wait at most this long for a connection's
+    /// in-flight responses to come back before dropping them.
+    pub drain_timeout: Duration,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            max_connections: 64,
+            max_in_flight: 32,
+            idle_timeout: Duration::from_secs(30),
+            max_frame_bytes: wire::DEFAULT_MAX_FRAME_BYTES,
+            drain_timeout: Duration::from_secs(5),
+        }
+    }
+}
+
+/// Aggregate network-layer counters (the coordinator's
+/// [`crate::coordinator::ServerStats`] counts the queue side).
+#[derive(Debug, Default)]
+pub struct NetStats {
+    /// Connections accepted into a conn thread.
+    pub connections_accepted: AtomicU64,
+    /// Connections refused at the cap.
+    pub connections_refused: AtomicU64,
+    /// Request frames received.
+    pub requests: AtomicU64,
+    /// Requests shed with a typed [`crate::search::EngineError::Overloaded`] frame
+    /// (per-connection gate or coordinator queue).
+    pub overloaded: AtomicU64,
+    /// Protocol violations (bad magic, oversize frame, undecodable
+    /// body) — each drops its connection after a best-effort
+    /// [`crate::search::EngineError::BadFrame`] frame.
+    pub malformed: AtomicU64,
+    /// Responses dropped because their client stopped draining its
+    /// socket (or disconnected with work in flight).
+    pub dropped_replies: AtomicU64,
+}
+
+impl NetStats {
+    pub fn to_json(&self) -> Json {
+        ObjBuilder::new()
+            .field(
+                "connections_accepted",
+                Json::num(self.connections_accepted.load(Ordering::Relaxed) as f64),
+            )
+            .field(
+                "connections_refused",
+                Json::num(self.connections_refused.load(Ordering::Relaxed) as f64),
+            )
+            .field("requests", Json::num(self.requests.load(Ordering::Relaxed) as f64))
+            .field("overloaded", Json::num(self.overloaded.load(Ordering::Relaxed) as f64))
+            .field("malformed", Json::num(self.malformed.load(Ordering::Relaxed) as f64))
+            .field(
+                "dropped_replies",
+                Json::num(self.dropped_replies.load(Ordering::Relaxed) as f64),
+            )
+            .build()
+    }
+}

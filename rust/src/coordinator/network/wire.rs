@@ -1,0 +1,296 @@
+//! The MVW1 frame envelope: `magic | len | body`, with the body encoded
+//! by the codecs in [`crate::search::api`].
+//!
+//! ```text
+//! magic : 4 bytes b"MVW1"
+//! len   : u32 LE — body length in bytes, 1 ..= max_frame_bytes
+//! body  : tag u8, then per-tag payload:
+//!   1 Request  : id u64 | kind u8 | flags u8 | mode u8 | top_k u32
+//!                | query (count u32 + f32 LE)
+//!   2 Response : id u64 | iterations u64 | device_latency_us f64
+//!                | hits (count u32 + [index u64 | label u32 | score f64])
+//!                | full_scores (present u8 [+ count u32 + f64s])
+//!                | cascade (present u8 [+ stages])
+//!   3 Error    : id u64 | code u16 | a u64 | b u64 | msg (len u32 + utf-8)
+//!   4 Shutdown : (empty) — drain the server and exit
+//! ```
+//!
+//! The `len` prefix is validated against the connection's frame cap
+//! *before* the body is allocated, and the body decodes through the
+//! size-capped [`crate::util::binio::ByteReader`] — the dims-overflow
+//! class of attack on MVT1 headers cannot reach an allocation here.
+
+use crate::search::api::{
+    decode_error_body, decode_request_body, decode_response_body, encode_error_body,
+    encode_request_body, encode_response_body, EngineError, SearchResponse, WireRequest,
+};
+use crate::util::binio::{BinioError, ByteReader, ByteWriter};
+use std::fmt;
+use std::io::{Read, Write};
+
+/// Frame magic, version 1 ("MCAM Vector Wire").
+pub const WIRE_MAGIC: &[u8; 4] = b"MVW1";
+
+/// Default cap on a frame body (4 MiB ≈ a 1M-dim f32 query).
+pub const DEFAULT_MAX_FRAME_BYTES: usize = 4 << 20;
+
+/// The request id a server uses when answering a frame so malformed it
+/// carried no readable id.
+pub const NO_REQUEST_ID: u64 = u64::MAX;
+
+const TAG_REQUEST: u8 = 1;
+const TAG_RESPONSE: u8 = 2;
+const TAG_ERROR: u8 = 3;
+const TAG_SHUTDOWN: u8 = 4;
+
+/// One protocol frame. Request ids are chosen by the client and echoed
+/// verbatim in the matching `Response`/`Error` frame (responses to a
+/// pipelined connection may arrive out of submission order).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    Request { id: u64, request: WireRequest },
+    Response { id: u64, response: SearchResponse },
+    Error { id: u64, error: EngineError },
+    /// Control frame: drain in-flight work and shut the server down
+    /// (deterministic teardown for CI's loopback smoke run).
+    Shutdown,
+}
+
+/// Encode a frame: magic, length prefix, body.
+pub fn encode_frame(frame: &Frame) -> Vec<u8> {
+    let mut body = ByteWriter::new();
+    match frame {
+        Frame::Request { id, request } => {
+            body.u8(TAG_REQUEST);
+            body.u64(*id);
+            encode_request_body(request, &mut body);
+        }
+        Frame::Response { id, response } => {
+            body.u8(TAG_RESPONSE);
+            body.u64(*id);
+            encode_response_body(response, &mut body);
+        }
+        Frame::Error { id, error } => {
+            body.u8(TAG_ERROR);
+            body.u64(*id);
+            encode_error_body(error, &mut body);
+        }
+        Frame::Shutdown => body.u8(TAG_SHUTDOWN),
+    }
+    let body = body.into_bytes();
+    let mut out = Vec::with_capacity(8 + body.len());
+    out.extend_from_slice(WIRE_MAGIC);
+    out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    out.extend_from_slice(&body);
+    out
+}
+
+/// Decode a frame body (the bytes after the length prefix).
+pub fn decode_body(body: &[u8]) -> Result<Frame, BinioError> {
+    let mut r = ByteReader::new(body);
+    match r.u8()? {
+        TAG_REQUEST => {
+            let id = r.u64()?;
+            let request = decode_request_body(&mut r)?;
+            Ok(Frame::Request { id, request })
+        }
+        TAG_RESPONSE => {
+            let id = r.u64()?;
+            let response = decode_response_body(&mut r)?;
+            Ok(Frame::Response { id, response })
+        }
+        TAG_ERROR => {
+            let id = r.u64()?;
+            let error = decode_error_body(&mut r)?;
+            Ok(Frame::Error { id, error })
+        }
+        TAG_SHUTDOWN => {
+            r.expect_end()?;
+            Ok(Frame::Shutdown)
+        }
+        _ => Err(BinioError::Malformed("unknown frame tag")),
+    }
+}
+
+/// Why reading a frame off a stream failed.
+#[derive(Debug)]
+pub enum ReadError {
+    /// The peer closed the connection cleanly between frames.
+    Eof,
+    /// Transport failure — including a disconnect mid-frame
+    /// (`UnexpectedEof`) and read timeouts (`WouldBlock`/`TimedOut`).
+    Io(std::io::Error),
+    /// The bytes violate the protocol (bad magic, zero/oversize length,
+    /// undecodable body). Framing can no longer be trusted: the
+    /// connection should be dropped after a best-effort error frame.
+    Protocol(BinioError),
+}
+
+impl fmt::Display for ReadError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ReadError::Eof => write!(f, "connection closed"),
+            ReadError::Io(e) => write!(f, "transport error: {e}"),
+            ReadError::Protocol(e) => write!(f, "protocol violation: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ReadError {}
+
+/// Read one frame, blocking. Convenience for clients; connection threads
+/// poll the first byte themselves (to multiplex idle/shutdown checks)
+/// and call [`read_frame_rest`].
+pub fn read_frame(stream: &mut impl Read, max_frame_bytes: usize) -> Result<Frame, ReadError> {
+    let mut first = [0u8; 1];
+    loop {
+        match stream.read(&mut first) {
+            Ok(0) => return Err(ReadError::Eof),
+            Ok(_) => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(ReadError::Io(e)),
+        }
+    }
+    read_frame_rest(first[0], stream, max_frame_bytes)
+}
+
+/// Read the remainder of a frame whose first byte was already consumed.
+///
+/// The declared body length is validated against `max_frame_bytes`
+/// before any allocation, so a crafted length prefix cannot force an
+/// oversized buffer.
+pub fn read_frame_rest(
+    first: u8,
+    stream: &mut impl Read,
+    max_frame_bytes: usize,
+) -> Result<Frame, ReadError> {
+    let mut header = [0u8; 7]; // magic[1..4] + len
+    stream.read_exact(&mut header).map_err(ReadError::Io)?;
+    if first != WIRE_MAGIC[0] || header[..3] != WIRE_MAGIC[1..] {
+        return Err(ReadError::Protocol(BinioError::Malformed("bad frame magic")));
+    }
+    let len = u32::from_le_bytes([header[3], header[4], header[5], header[6]]) as usize;
+    if len == 0 {
+        return Err(ReadError::Protocol(BinioError::Malformed("empty frame body")));
+    }
+    if len > max_frame_bytes {
+        return Err(ReadError::Protocol(BinioError::TooLarge {
+            bytes: len,
+            max: max_frame_bytes,
+        }));
+    }
+    let mut body = vec![0u8; len];
+    stream.read_exact(&mut body).map_err(ReadError::Io)?;
+    decode_body(&body).map_err(ReadError::Protocol)
+}
+
+/// Write one frame, blocking until fully written.
+pub fn write_frame(stream: &mut impl Write, frame: &Frame) -> std::io::Result<()> {
+    stream.write_all(&encode_frame(frame))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::search::api::QueryKind;
+    use crate::search::{Hit, SearchOptions};
+
+    fn request_frame() -> Frame {
+        Frame::Request {
+            id: 42,
+            request: WireRequest {
+                kind: QueryKind::Embedding,
+                data: vec![1.0, 2.0, 3.0],
+                options: SearchOptions { top_k: 2, mode: None, full_scores: false },
+            },
+        }
+    }
+
+    #[test]
+    fn frame_roundtrips_through_a_stream() {
+        let frames = vec![
+            request_frame(),
+            Frame::Response {
+                id: 42,
+                response: SearchResponse {
+                    hits: vec![Hit { index: 1, label: 9, score: 3.5 }],
+                    iterations: 4,
+                    device_latency_us: 200.0,
+                    full_scores: None,
+                    cascade: None,
+                },
+            },
+            Frame::Error { id: 7, error: EngineError::Overloaded },
+            Frame::Shutdown,
+        ];
+        let mut buf = Vec::new();
+        for f in &frames {
+            write_frame(&mut buf, f).unwrap();
+        }
+        let mut cursor = std::io::Cursor::new(buf);
+        for f in &frames {
+            let got = read_frame(&mut cursor, DEFAULT_MAX_FRAME_BYTES).unwrap();
+            assert_eq!(&got, f);
+        }
+        assert!(matches!(
+            read_frame(&mut cursor, DEFAULT_MAX_FRAME_BYTES),
+            Err(ReadError::Eof)
+        ));
+    }
+
+    #[test]
+    fn bad_magic_is_protocol_error() {
+        let mut bytes = encode_frame(&request_frame());
+        bytes[0] = b'X';
+        let mut cursor = std::io::Cursor::new(bytes);
+        assert!(matches!(
+            read_frame(&mut cursor, DEFAULT_MAX_FRAME_BYTES),
+            Err(ReadError::Protocol(BinioError::Malformed("bad frame magic")))
+        ));
+    }
+
+    #[test]
+    fn oversize_length_prefix_is_refused_before_allocation() {
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(WIRE_MAGIC);
+        bytes.extend_from_slice(&u32::MAX.to_le_bytes());
+        bytes.extend_from_slice(&[0u8; 16]);
+        let mut cursor = std::io::Cursor::new(bytes);
+        assert!(matches!(
+            read_frame(&mut cursor, DEFAULT_MAX_FRAME_BYTES),
+            Err(ReadError::Protocol(BinioError::TooLarge { .. }))
+        ));
+    }
+
+    #[test]
+    fn truncated_frame_is_io_error() {
+        let bytes = encode_frame(&request_frame());
+        let mut cursor = std::io::Cursor::new(bytes[..bytes.len() - 2].to_vec());
+        assert!(matches!(
+            read_frame(&mut cursor, DEFAULT_MAX_FRAME_BYTES),
+            Err(ReadError::Io(_))
+        ));
+    }
+
+    #[test]
+    fn unknown_tag_and_zero_length_are_protocol_errors() {
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(WIRE_MAGIC);
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.push(99); // unknown tag
+        let mut cursor = std::io::Cursor::new(bytes);
+        assert!(matches!(
+            read_frame(&mut cursor, DEFAULT_MAX_FRAME_BYTES),
+            Err(ReadError::Protocol(BinioError::Malformed("unknown frame tag")))
+        ));
+
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(WIRE_MAGIC);
+        bytes.extend_from_slice(&0u32.to_le_bytes());
+        let mut cursor = std::io::Cursor::new(bytes);
+        assert!(matches!(
+            read_frame(&mut cursor, DEFAULT_MAX_FRAME_BYTES),
+            Err(ReadError::Protocol(BinioError::Malformed("empty frame body")))
+        ));
+    }
+}

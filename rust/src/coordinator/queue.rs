@@ -1,9 +1,38 @@
 //! Bounded MPMC queue with blocking push (backpressure) and blocking pop,
 //! built on Mutex + Condvar (no crossbeam/tokio in the offline image).
+//!
+//! Pushes never silently drop work: a blocking [`BoundedQueue::push`]
+//! returns the item when the queue has been closed, and
+//! [`BoundedQueue::try_push`] distinguishes a full queue (shed with a
+//! typed overload error upstream) from a closed one (typed shutdown
+//! error) via [`PushError`].
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
+
+/// Why a push was refused. The rejected item rides along so the caller
+/// can answer it with a typed error instead of losing it.
+#[derive(Debug, PartialEq, Eq)]
+pub enum PushError<T> {
+    /// Queue at capacity (only from `try_push`) — shed as overload.
+    Full(T),
+    /// Queue closed — surface as a shutdown error.
+    Closed(T),
+}
+
+impl<T> PushError<T> {
+    /// The item that was refused.
+    pub fn into_inner(self) -> T {
+        match self {
+            PushError::Full(item) | PushError::Closed(item) => item,
+        }
+    }
+
+    pub fn is_closed(&self) -> bool {
+        matches!(self, PushError::Closed(_))
+    }
+}
 
 struct Inner<T> {
     items: VecDeque<T>,
@@ -41,30 +70,38 @@ impl<T> BoundedQueue<T> {
         self.len() == 0
     }
 
-    /// Blocking push; silently drops the item if the queue is closed.
-    pub fn push(&self, item: T) {
+    /// Blocking push. Waits while the queue is full; returns
+    /// `Err(PushError::Closed(item))` — handing the item back — if the
+    /// queue is (or becomes) closed, so no request is ever silently
+    /// dropped.
+    pub fn push(&self, item: T) -> Result<(), PushError<T>> {
         let mut inner = self.inner.lock().unwrap();
         while inner.items.len() >= self.capacity && !inner.closed {
             inner = self.not_full.wait(inner).unwrap();
         }
         if inner.closed {
-            return;
+            return Err(PushError::Closed(item));
         }
         inner.items.push_back(item);
         drop(inner);
         self.not_empty.notify_one();
+        Ok(())
     }
 
-    /// Non-blocking push; `false` when full or closed.
-    pub fn try_push(&self, item: T) -> bool {
+    /// Non-blocking push; refuses with `Full` (shed it) or `Closed`
+    /// (shutting down), returning the item either way.
+    pub fn try_push(&self, item: T) -> Result<(), PushError<T>> {
         let mut inner = self.inner.lock().unwrap();
-        if inner.closed || inner.items.len() >= self.capacity {
-            return false;
+        if inner.closed {
+            return Err(PushError::Closed(item));
+        }
+        if inner.items.len() >= self.capacity {
+            return Err(PushError::Full(item));
         }
         inner.items.push_back(item);
         drop(inner);
         self.not_empty.notify_one();
-        true
+        Ok(())
     }
 
     /// Blocking pop; `None` once the queue is closed *and* drained.
@@ -85,7 +122,12 @@ impl<T> BoundedQueue<T> {
 
     /// Pop with a timeout; `Ok(None)` on closed+drained, `Err(())` on
     /// timeout with nothing available.
+    ///
+    /// The deadline is computed once up front and every wakeup waits
+    /// only on the *remaining* time, so spurious (or empty-handed)
+    /// wakeups cannot extend the total wait past `timeout`.
     pub fn pop_timeout(&self, timeout: Duration) -> Result<Option<T>, ()> {
+        let start = Instant::now();
         let mut inner = self.inner.lock().unwrap();
         loop {
             if let Some(item) = inner.items.pop_front() {
@@ -96,14 +138,12 @@ impl<T> BoundedQueue<T> {
             if inner.closed {
                 return Ok(None);
             }
-            let (guard, result) = self.not_empty.wait_timeout(inner, timeout).unwrap();
-            inner = guard;
-            if result.timed_out() && inner.items.is_empty() {
-                if inner.closed {
-                    return Ok(None);
-                }
+            let remaining = timeout.saturating_sub(start.elapsed());
+            if remaining.is_zero() {
                 return Err(());
             }
+            let (guard, _timed_out) = self.not_empty.wait_timeout(inner, remaining).unwrap();
+            inner = guard;
         }
     }
 
@@ -115,51 +155,82 @@ impl<T> BoundedQueue<T> {
         self.not_full.notify_all();
         self.not_empty.notify_all();
     }
+
+    /// Test hook: wake every waiter without delivering anything — a
+    /// synthetic spurious wakeup for the `pop_timeout` regression test.
+    #[cfg(test)]
+    fn spurious_wakeup(&self) {
+        let guard = self.inner.lock().unwrap();
+        drop(guard);
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::atomic::{AtomicBool, Ordering};
     use std::sync::Arc;
     use std::thread;
 
     #[test]
     fn fifo_order() {
         let q = BoundedQueue::new(4);
-        q.push(1);
-        q.push(2);
-        q.push(3);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        q.push(3).unwrap();
         assert_eq!(q.pop(), Some(1));
         assert_eq!(q.pop(), Some(2));
         assert_eq!(q.pop(), Some(3));
     }
 
     #[test]
-    fn try_push_respects_capacity() {
+    fn try_push_classifies_full_and_closed() {
         let q = BoundedQueue::new(2);
-        assert!(q.try_push(1));
-        assert!(q.try_push(2));
-        assert!(!q.try_push(3));
+        assert!(q.try_push(1).is_ok());
+        assert!(q.try_push(2).is_ok());
+        assert_eq!(q.try_push(3), Err(PushError::Full(3)));
         assert_eq!(q.len(), 2);
+        q.close();
+        let err = q.try_push(4).unwrap_err();
+        assert!(err.is_closed());
+        assert_eq!(err.into_inner(), 4);
     }
 
     #[test]
-    fn close_drains_then_none() {
+    fn close_drains_then_none_and_push_returns_item() {
         let q = BoundedQueue::new(4);
-        q.push(1);
+        q.push(1).unwrap();
         q.close();
+        // a closed queue hands the item back instead of dropping it
+        assert_eq!(q.push(2), Err(PushError::Closed(2)));
         assert_eq!(q.pop(), Some(1));
         assert_eq!(q.pop(), None);
-        assert!(!q.try_push(2));
+        assert!(q.try_push(3).is_err());
+    }
+
+    #[test]
+    fn blocked_push_unblocks_on_close_with_item_returned() {
+        let q = Arc::new(BoundedQueue::new(1));
+        q.push(1).unwrap();
+        let q2 = Arc::clone(&q);
+        let producer = thread::spawn(move || q2.push(2));
+        thread::sleep(Duration::from_millis(10));
+        q.close();
+        // the parked producer wakes and gets its item back
+        assert_eq!(producer.join().unwrap(), Err(PushError::Closed(2)));
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), None);
     }
 
     #[test]
     fn blocking_push_waits_for_space() {
         let q = Arc::new(BoundedQueue::new(1));
-        q.push(1);
+        q.push(1).unwrap();
         let q2 = Arc::clone(&q);
         let producer = thread::spawn(move || {
-            q2.push(2); // blocks until the consumer pops
+            q2.push(2).unwrap(); // blocks until the consumer pops
         });
         thread::sleep(Duration::from_millis(10));
         assert_eq!(q.pop(), Some(1));
@@ -175,7 +246,7 @@ mod tests {
             let q = Arc::clone(&q);
             handles.push(thread::spawn(move || {
                 for i in 0..50 {
-                    q.push(p * 100 + i);
+                    q.push(p * 100 + i).unwrap();
                 }
             }));
         }
@@ -208,7 +279,40 @@ mod tests {
     fn pop_timeout_times_out() {
         let q: BoundedQueue<i32> = BoundedQueue::new(1);
         assert_eq!(q.pop_timeout(Duration::from_millis(5)), Err(()));
-        q.push(7);
+        q.push(7).unwrap();
         assert_eq!(q.pop_timeout(Duration::from_millis(5)), Ok(Some(7)));
+    }
+
+    /// Regression: a storm of wakeups on an empty queue must not extend
+    /// `pop_timeout` past its deadline. The old implementation restarted
+    /// the *full* timeout after every wakeup, so notifies arriving
+    /// faster than the timeout kept the consumer waiting indefinitely;
+    /// with a once-computed deadline it returns on schedule.
+    #[test]
+    fn pop_timeout_survives_spurious_wakeup_storm() {
+        let q: Arc<BoundedQueue<i32>> = Arc::new(BoundedQueue::new(4));
+        let stop = Arc::new(AtomicBool::new(false));
+        let notifier = {
+            let q = Arc::clone(&q);
+            let stop = Arc::clone(&stop);
+            thread::spawn(move || {
+                while !stop.load(Ordering::Relaxed) {
+                    q.spurious_wakeup();
+                    thread::sleep(Duration::from_millis(5));
+                }
+            })
+        };
+        let timeout = Duration::from_millis(100);
+        let start = Instant::now();
+        let result = q.pop_timeout(timeout);
+        let elapsed = start.elapsed();
+        stop.store(true, Ordering::Relaxed);
+        notifier.join().unwrap();
+        assert_eq!(result, Err(()), "nothing was ever pushed");
+        assert!(elapsed >= timeout, "returned before the deadline: {elapsed:?}");
+        assert!(
+            elapsed < timeout * 5,
+            "wakeup storm extended the wait: {elapsed:?} for a {timeout:?} timeout"
+        );
     }
 }

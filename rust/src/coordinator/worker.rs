@@ -12,8 +12,9 @@
 //! drops a request.
 
 use super::queue::BoundedQueue;
-use super::{Payload, Request, Response, ServerStats};
+use super::{route_response, Payload, ReplySink, Request, Response, ServerStats};
 use crate::search::api::{EngineError, SearchRequest, VectorSearchBackend};
+use std::collections::HashMap;
 use std::sync::atomic::Ordering;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -56,14 +57,24 @@ impl WorkerPool {
                 std::thread::Builder::new()
                     .name(format!("mcamvss-worker-{w}"))
                     .spawn(move || {
-                        while let Some(batch) = queue.pop() {
+                        while let Some(mut batch) = queue.pop() {
+                            // Detach reply sinks first: `process_batch`
+                            // reorders output relative to input, so
+                            // responses are matched back to sinks by id.
+                            let mut sinks: HashMap<u64, ReplySink> = batch
+                                .iter_mut()
+                                .filter_map(|r| r.reply.take().map(|s| (r.id, s)))
+                                .collect();
                             let out = process_batch(&mut backend, &embed, batch);
                             let ok = out.iter().filter(|r| r.is_ok()).count() as u64;
                             stats.completed.fetch_add(ok, Ordering::Relaxed);
                             stats
                                 .errored
                                 .fetch_add(out.len() as u64 - ok, Ordering::Relaxed);
-                            responses.lock().unwrap().extend(out);
+                            for resp in out {
+                                let sink = sinks.remove(&resp.id);
+                                route_response(&responses, sink, resp);
+                            }
                         }
                     })
                     .expect("spawn worker"),
@@ -209,7 +220,13 @@ mod tests {
     }
 
     fn req(id: u64, payload: Payload) -> Request {
-        Request { id, payload, options: SearchOptions::default(), submitted_at: Instant::now() }
+        Request {
+            id,
+            payload,
+            options: SearchOptions::default(),
+            submitted_at: Instant::now(),
+            reply: None,
+        }
     }
 
     #[test]

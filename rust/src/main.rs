@@ -9,10 +9,24 @@
 //!                [--cascade] [--cascade-columns N] [--cascade-ladder N]
 //!                [--cascade-shortlist N] [--cascade-margin F]
 //!                [--cascade-budget N]
+//! mcamvss serve  --listen 127.0.0.1:7171 [--synthetic --dims 48]
+//!                [--max-connections N] [--max-in-flight N]
+//!                [--idle-timeout-ms MS] [--addr-file path]
+//!                [--serve-seconds S]
+//! mcamvss bench-client --connect HOST:PORT [--clients N] [--requests M]
+//!                [--dims D] [--top-k K] [--shutdown-server]
 //! mcamvss train  [--smoke] [--variant std|hat_svss|hat_avss]
 //!                [--steps N] [--meta-episodes N] [--cl N] [--out dir]
 //! mcamvss experiment --filter table2   # or fig_cascade, fig9, ...
 //! ```
+//!
+//! `serve` without `--listen` runs the in-process closed loop; with
+//! `--listen` it takes the same coordinator over TCP (the MVW1 wire
+//! protocol of DESIGN.md §Wire) until a client sends a shutdown frame,
+//! `--serve-seconds` expires, or the process is signalled.
+//! `bench-client` is the closed-loop load generator for that mode: it
+//! asserts every request is answered exactly once and merges latency
+//! percentiles into `BENCH_engine.json`.
 //!
 //! `train` runs the pure-rust HAT pipeline (pretrain + meta-train) on
 //! the built-in synthetic dataset and, with `--out`, exports an
@@ -23,18 +37,21 @@ use anyhow::{bail, Context, Result};
 use mcamvss::baselines::{FloatBaseline, Metric};
 use mcamvss::cli::Args;
 use mcamvss::config::Config;
+use mcamvss::config::TrainSettings;
+use mcamvss::coordinator::network::{Frame, NetServer, WireClient};
 use mcamvss::coordinator::{CoordinatorConfig, Payload, Response, Server};
 use mcamvss::device::variation::VariationModel;
 use mcamvss::encoding::Encoding;
 use mcamvss::experiments::{self, EpisodeSettings};
-use mcamvss::config::TrainSettings;
 use mcamvss::fsl::store::ArtifactStore;
 use mcamvss::fsl::{episode_rng, sample_episode};
 use mcamvss::hat;
 use mcamvss::metrics::LatencyHistogram;
+use mcamvss::search::api::QueryKind;
 use mcamvss::search::engine::EngineConfig;
 use mcamvss::search::{SearchMode, SearchOptions};
-use std::time::Instant;
+use mcamvss::util::json::{merge_report, Json, ObjBuilder};
+use std::time::{Duration, Instant};
 
 fn main() {
     if let Err(err) = run() {
@@ -49,10 +66,14 @@ fn run() -> Result<()> {
         Some("info") | None => cmd_info(),
         Some("eval") => cmd_eval(&args),
         Some("serve") => cmd_serve(&args),
+        Some("bench-client") => cmd_bench_client(&args),
         Some("train") => cmd_train(&args),
         Some("experiment") => cmd_experiment(&args),
         Some(other) => {
-            bail!("unknown command {other:?} (info | eval | serve | train | experiment)")
+            bail!(
+                "unknown command {other:?} (info | eval | serve | bench-client | train | \
+                 experiment)"
+            )
         }
     }
 }
@@ -213,26 +234,18 @@ fn cmd_eval(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_serve(args: &Args) -> Result<()> {
-    let cfg = load_config(args)?;
-    let store = open_store(args)?;
-    let n_requests = args.opt_usize("requests")?.unwrap_or(200);
-    let top_k = args.opt_usize("top-k")?.unwrap_or(1);
-    if top_k == 0 {
-        bail!("--top-k must be >= 1");
-    }
-    let backend_kind = args.opt("backend").unwrap_or("mcam");
-
-    // Episode: program the support set once, then stream query requests.
-    let ds = store.embeddings(&cfg.dataset, &cfg.variant, "test")?;
-    let clip = store.clip(&cfg.dataset, &cfg.variant)?;
-    // Episode 0 of the shared train/eval seed-derivation scheme.
-    let mut rng = episode_rng(cfg.seed, 0);
-    let episode = sample_episode(&ds, &mut rng, cfg.n_way, cfg.k_shot, cfg.n_query);
-    let support: Vec<&[f32]> =
-        episode.support.iter().map(|&(row, _)| ds.embedding(row)).collect();
-    let labels: Vec<u32> = episode.support.iter().map(|&(_, l)| l).collect();
-
+/// Build the coordinator [`Server`] for a programmed support set,
+/// honouring `--backend`, `--metric` and the cascade flags. Shared by
+/// the in-process and `--listen` serve modes — both substrates run
+/// through the same generic Server path (the VectorSearchBackend seam).
+fn build_server(
+    args: &Args,
+    cfg: &Config,
+    dims: usize,
+    support: &[&[f32]],
+    labels: &[u32],
+    clip: f64,
+) -> Result<Server> {
     let coord_cfg = CoordinatorConfig {
         workers: cfg.workers,
         queue_capacity: cfg.queue_capacity,
@@ -241,19 +254,6 @@ fn cmd_serve(args: &Args) -> Result<()> {
             ..Default::default()
         },
     };
-    println!(
-        "serve {} [{backend_kind}]: {} workers x {} shard(s), {} requests (top-{top_k}), \
-         {}-way {}-shot support ({} vectors)",
-        cfg.dataset,
-        cfg.workers,
-        cfg.shards,
-        n_requests,
-        cfg.n_way,
-        cfg.k_shot,
-        support.len()
-    );
-    // Both substrates run through the same generic Server path — the
-    // VectorSearchBackend seam in action.
     let cascade = cfg
         .cascade
         .as_ref()
@@ -266,7 +266,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             cascade.iteration_budget
         );
     }
-    let server = match backend_kind {
+    let server = match args.opt("backend").unwrap_or("mcam") {
         "mcam" => {
             let engine_cfg = EngineConfig::new(cfg.encoding, cfg.cl, cfg.mode, clip)
                 .with_variation(cfg.variation)
@@ -276,9 +276,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 coord_cfg,
                 engine_cfg,
                 cascade,
-                ds.dims,
-                &support,
-                &labels,
+                dims,
+                support,
+                labels,
                 mcamvss::coordinator::worker::identity_embed(),
             )?
         }
@@ -293,8 +293,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
             };
             let mut backends = Vec::with_capacity(cfg.workers);
             for _ in 0..cfg.workers {
-                let mut backend = FloatBaseline::new(ds.dims, metric)?;
-                backend.program_support(&support, &labels)?;
+                let mut backend = FloatBaseline::new(dims, metric)?;
+                backend.program_support(support, labels)?;
                 backends.push(backend);
             }
             Server::start_with_backends(
@@ -305,6 +305,50 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
         other => bail!("unknown --backend {other:?} (mcam | float)"),
     };
+    Ok(server)
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    // --listen (or a `[serve] listen` config entry) switches serve to
+    // the TCP front end; everything below is the in-process closed loop.
+    let listen = args
+        .opt("listen")
+        .map(str::to_string)
+        .or_else(|| cfg.serve.listen.clone());
+    if let Some(addr) = listen {
+        return cmd_serve_listen(args, &cfg, &addr);
+    }
+    let store = open_store(args)?;
+    let n_requests = args.opt_usize("requests")?.unwrap_or(200);
+    let top_k = args.opt_usize("top-k")?.unwrap_or(1);
+    if top_k == 0 {
+        bail!("--top-k must be >= 1");
+    }
+
+    // Episode: program the support set once, then stream query requests.
+    let ds = store.embeddings(&cfg.dataset, &cfg.variant, "test")?;
+    let clip = store.clip(&cfg.dataset, &cfg.variant)?;
+    // Episode 0 of the shared train/eval seed-derivation scheme.
+    let mut rng = episode_rng(cfg.seed, 0);
+    let episode = sample_episode(&ds, &mut rng, cfg.n_way, cfg.k_shot, cfg.n_query);
+    let support: Vec<&[f32]> =
+        episode.support.iter().map(|&(row, _)| ds.embedding(row)).collect();
+    let labels: Vec<u32> = episode.support.iter().map(|&(_, l)| l).collect();
+
+    println!(
+        "serve {} [{}]: {} workers x {} shard(s), {} requests (top-{top_k}), \
+         {}-way {}-shot support ({} vectors)",
+        cfg.dataset,
+        args.opt("backend").unwrap_or("mcam"),
+        cfg.workers,
+        cfg.shards,
+        n_requests,
+        cfg.n_way,
+        cfg.k_shot,
+        support.len()
+    );
+    let server = build_server(args, &cfg, ds.dims, &support, &labels, clip)?;
 
     // Query stream: cycle through the episode's queries.
     let options = SearchOptions { top_k, ..Default::default() };
@@ -378,6 +422,261 @@ fn report_serve(responses: &[Response], truth: &[u32], wall: std::time::Duration
             exits
         );
     }
+}
+
+/// `serve --listen`: take the coordinator over TCP. The support set
+/// comes from the artifact store (same episode programming as the
+/// in-process mode) or, with `--synthetic`, from a built-in clustered
+/// generator so CI's loopback smoke run needs no artifacts.
+fn cmd_serve_listen(args: &Args, cfg: &Config, addr: &str) -> Result<()> {
+    let (server, dims, n_support) = if args.flag("synthetic") {
+        let dims = args.opt_usize("dims")?.unwrap_or(48);
+        if dims == 0 {
+            bail!("--dims must be >= 1");
+        }
+        let (support, labels) = synthetic_support(dims, cfg.n_way, cfg.k_shot, cfg.seed);
+        let clip = support
+            .iter()
+            .flat_map(|v| v.iter())
+            .fold(0.0f32, |m, v| m.max(v.abs()))
+            .max(1e-6) as f64;
+        let refs: Vec<&[f32]> = support.iter().map(|v| v.as_slice()).collect();
+        let n = refs.len();
+        (build_server(args, cfg, dims, &refs, &labels, clip)?, dims, n)
+    } else {
+        let store = open_store(args)?;
+        let ds = store.embeddings(&cfg.dataset, &cfg.variant, "test")?;
+        let clip = store.clip(&cfg.dataset, &cfg.variant)?;
+        let mut rng = episode_rng(cfg.seed, 0);
+        let episode = sample_episode(&ds, &mut rng, cfg.n_way, cfg.k_shot, cfg.n_query);
+        let support: Vec<&[f32]> =
+            episode.support.iter().map(|&(row, _)| ds.embedding(row)).collect();
+        let labels: Vec<u32> = episode.support.iter().map(|&(_, l)| l).collect();
+        let n = support.len();
+        (build_server(args, cfg, ds.dims, &support, &labels, clip)?, ds.dims, n)
+    };
+
+    let mut net_cfg = cfg.serve.to_net_config();
+    if let Some(v) = args.opt_usize("max-connections")? {
+        net_cfg.max_connections = v.max(1);
+    }
+    if let Some(v) = args.opt_usize("max-in-flight")? {
+        net_cfg.max_in_flight = v.max(1);
+    }
+    if let Some(v) = args.opt_usize("idle-timeout-ms")? {
+        net_cfg.idle_timeout = Duration::from_millis((v as u64).clamp(1, 3_600_000));
+    }
+    let net = NetServer::start(server, addr, net_cfg)?;
+    println!(
+        "listening on {} ({} support vectors, dims {dims}, {} workers, \
+         {} conns x {} in-flight)",
+        net.local_addr(),
+        n_support,
+        cfg.workers,
+        net.config().max_connections,
+        net.config().max_in_flight
+    );
+    // The addr file lets scripts (CI's smoke job) discover an ephemeral
+    // `:0` port: written once the socket is bound and accepting.
+    if let Some(path) = args.opt("addr-file") {
+        std::fs::write(path, net.local_addr().to_string())
+            .with_context(|| format!("write --addr-file {path}"))?;
+    }
+
+    let deadline = args
+        .opt_usize("serve-seconds")?
+        .map(|s| Instant::now() + Duration::from_secs(s as u64));
+    while !net.shutdown_requested() {
+        if let Some(d) = deadline {
+            if Instant::now() >= d {
+                break;
+            }
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+
+    println!("shutting down: draining connections, then the coordinator");
+    let stats = net.net_stats_handle();
+    let leftover = net.shutdown();
+    println!("net stats: {}", stats.to_json().render());
+    if !leftover.is_empty() {
+        // only in-process submissions land here; wire responses were
+        // routed to their connections
+        println!("{} unrouted response(s) drained", leftover.len());
+    }
+    Ok(())
+}
+
+/// Deterministic clustered support set for artifact-free serving:
+/// `n_way` unit-norm class centres with small per-shot gaussian jitter.
+fn synthetic_support(
+    dims: usize,
+    n_way: usize,
+    k_shot: usize,
+    seed: u64,
+) -> (Vec<Vec<f32>>, Vec<u32>) {
+    let mut rng = mcamvss::testutil::Rng::new(seed ^ 0x53594E54);
+    let mut support = Vec::with_capacity(n_way * k_shot);
+    let mut labels = Vec::with_capacity(n_way * k_shot);
+    for class in 0..n_way {
+        let mut centre: Vec<f64> = (0..dims).map(|_| rng.gaussian()).collect();
+        let norm = centre.iter().map(|v| v * v).sum::<f64>().sqrt().max(1e-9);
+        centre.iter_mut().for_each(|v| *v /= norm);
+        for _ in 0..k_shot {
+            support.push(
+                centre.iter().map(|v| (*v + 0.05 * rng.gaussian()) as f32).collect::<Vec<f32>>(),
+            );
+            labels.push(class as u32);
+        }
+    }
+    (support, labels)
+}
+
+/// Closed-loop load generator against a `serve --listen` server: N
+/// client threads x M requests each, one in flight per client. Asserts
+/// exactly-once delivery (every request answered with its own id) and
+/// merges latency percentiles + throughput into `BENCH_engine.json`.
+fn cmd_bench_client(args: &Args) -> Result<()> {
+    let addr = args
+        .opt("connect")
+        .context("bench-client needs --connect HOST:PORT")?
+        .to_string();
+    let clients = args.opt_usize("clients")?.unwrap_or(4).max(1);
+    let requests = args.opt_usize("requests")?.unwrap_or(100).max(1);
+    let dims = args.opt_usize("dims")?.unwrap_or(48).max(1);
+    let top_k = args.opt_usize("top-k")?.unwrap_or(1).max(1);
+    println!(
+        "bench-client: {clients} client(s) x {requests} request(s), dims {dims}, \
+         top-{top_k} -> {addr}"
+    );
+
+    let t0 = Instant::now();
+    let mut handles = Vec::with_capacity(clients);
+    for c in 0..clients {
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(
+            move || -> std::result::Result<(Vec<f64>, usize, usize), String> {
+                let mut client = WireClient::connect(addr.as_str())
+                    .map_err(|e| format!("client {c}: connect {addr}: {e}"))?;
+                client
+                    .set_read_timeout(Some(Duration::from_secs(60)))
+                    .map_err(|e| format!("client {c}: {e}"))?;
+                let mut rng = mcamvss::testutil::Rng::new(0xBE7C + c as u64);
+                let mut latencies_us = Vec::with_capacity(requests);
+                let (mut ok, mut shed) = (0usize, 0usize);
+                for i in 0..requests {
+                    let id = (c * requests + i) as u64;
+                    let data: Vec<f32> = (0..dims).map(|_| rng.gaussian() as f32).collect();
+                    let options = SearchOptions { top_k, ..Default::default() };
+                    let sent = Instant::now();
+                    match client.search(id, QueryKind::Embedding, data, options) {
+                        Ok(Frame::Response { id: got, .. }) if got == id => {
+                            latencies_us.push(sent.elapsed().as_secs_f64() * 1e6);
+                            ok += 1;
+                        }
+                        Ok(Frame::Error { id: got, .. }) if got == id => {
+                            // typed shed (overload) — answered, not lost
+                            latencies_us.push(sent.elapsed().as_secs_f64() * 1e6);
+                            shed += 1;
+                        }
+                        Ok(Frame::Response { id: got, .. }) | Ok(Frame::Error { id: got, .. }) => {
+                            return Err(format!(
+                                "client {c}: response id {got} does not match in-flight id \
+                                 {id} (exactly-once violated)"
+                            ));
+                        }
+                        Ok(other) => {
+                            return Err(format!("client {c}: unexpected frame {other:?}"));
+                        }
+                        Err(e) => return Err(format!("client {c} request {id}: {e}")),
+                    }
+                }
+                Ok((latencies_us, ok, shed))
+            },
+        ));
+    }
+
+    let mut hist = LatencyHistogram::default();
+    let (mut ok_total, mut shed_total) = (0usize, 0usize);
+    let mut failures: Vec<String> = Vec::new();
+    for handle in handles {
+        match handle.join() {
+            Ok(Ok((latencies_us, ok, shed))) => {
+                for us in latencies_us {
+                    hist.record_us(us);
+                }
+                ok_total += ok;
+                shed_total += shed;
+            }
+            Ok(Err(msg)) => failures.push(msg),
+            Err(_) => failures.push("client thread panicked".into()),
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64().max(1e-9);
+
+    if args.flag("shutdown-server") {
+        WireClient::connect(addr.as_str())
+            .with_context(|| format!("connect {addr} for shutdown"))?
+            .request_shutdown()
+            .context("send shutdown frame")?;
+        println!("sent shutdown control frame");
+    }
+
+    for msg in &failures {
+        eprintln!("FAIL: {msg}");
+    }
+    let answered = ok_total + shed_total;
+    let expected = clients * requests;
+    let throughput = answered as f64 / wall;
+    println!(
+        "answered {answered}/{expected} ({ok_total} ok, {shed_total} shed) in {wall:.2}s  \
+         ({throughput:.0} req/s)"
+    );
+    println!(
+        "latency µs: mean {:.0}  p50 {:.0}  p90 {:.0}  p99 {:.0}  max {:.0}",
+        hist.mean_us(),
+        hist.quantile_us(0.5),
+        hist.quantile_us(0.9),
+        hist.quantile_us(0.99),
+        hist.max_us()
+    );
+
+    // Merge into the tracked perf report, alongside the bench harness.
+    let latency = ObjBuilder::new()
+        .field("mean", Json::num(hist.mean_us()))
+        .field("p50", Json::num(hist.quantile_us(0.5)))
+        .field("p90", Json::num(hist.quantile_us(0.9)))
+        .field("p99", Json::num(hist.quantile_us(0.99)))
+        .field("max", Json::num(hist.max_us()))
+        .build();
+    let entry = ObjBuilder::new()
+        .field("clients", Json::num(clients as f64))
+        .field("requests_per_client", Json::num(requests as f64))
+        .field("dims", Json::num(dims as f64))
+        .field("ok", Json::num(ok_total as f64))
+        .field("shed", Json::num(shed_total as f64))
+        .field("wall_s", Json::num(wall))
+        .field("throughput_req_per_s", Json::num(throughput))
+        .field("latency_us", latency)
+        .build();
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("crate has a parent dir");
+    let report = root.join("BENCH_engine.json");
+    match merge_report(&report, vec![("bench_client".to_string(), entry)]) {
+        Ok(()) => println!("[bench report -> {}]", report.display()),
+        Err(e) => eprintln!("WARNING: could not write {}: {e}", report.display()),
+    }
+
+    if !failures.is_empty() || answered != expected {
+        bail!(
+            "exactly-once violated: {} of {expected} request(s) unanswered, {} client \
+             failure(s)",
+            expected - answered,
+            failures.len()
+        );
+    }
+    Ok(())
 }
 
 /// Pure-rust HAT training on the built-in synthetic dataset: pretrain,

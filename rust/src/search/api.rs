@@ -53,6 +53,15 @@ pub enum EngineError {
     /// A broken internal invariant surfaced as an error instead of a
     /// panic (should never be observed).
     Internal(String),
+    /// The serving queue is full: the request was shed, not queued. The
+    /// client should back off and retry — the server stays live.
+    Overloaded,
+    /// The server is draining for shutdown and accepts no new requests.
+    ShuttingDown,
+    /// A client sent bytes that do not decode as a protocol frame. Sent
+    /// best-effort before the server drops the connection (framing can
+    /// no longer be trusted).
+    BadFrame(String),
 }
 
 impl fmt::Display for EngineError {
@@ -83,6 +92,11 @@ impl fmt::Display for EngineError {
             }
             EngineError::Backend(msg) => write!(f, "backend failure: {msg}"),
             EngineError::Internal(msg) => write!(f, "internal invariant violated: {msg}"),
+            EngineError::Overloaded => {
+                write!(f, "server overloaded: request shed, back off and retry")
+            }
+            EngineError::ShuttingDown => write!(f, "server is shutting down"),
+            EngineError::BadFrame(msg) => write!(f, "malformed wire frame: {msg}"),
         }
     }
 }
@@ -533,6 +547,246 @@ pub fn rank_top_k(top_k: usize, candidates: impl Iterator<Item = Hit>) -> Vec<Hi
     heap.into_sorted_vec().into_iter().map(|Reverse(RankedHit(hit))| hit).collect()
 }
 
+// ---------------------------------------------------------------------
+// Wire bodies — binary encode/decode for request / response / error,
+// shared by the TCP front end ([`crate::coordinator::network`]). Frame
+// envelope (magic + length prefix + tag) lives in `network::wire`; this
+// module owns the payload layout so the serving types and their wire
+// form evolve together. All integers are little-endian, mirroring the
+// MVT1 conventions in [`crate::util::binio`], and every decode goes
+// through the size-capped [`ByteReader`] — a crafted body can neither
+// panic nor allocate beyond the (already length-capped) frame it
+// arrived in.
+// ---------------------------------------------------------------------
+
+use crate::util::binio::{BinioError, ByteReader, ByteWriter};
+
+/// Cap on error-message strings crossing the wire.
+pub const MAX_WIRE_MSG_BYTES: usize = 4096;
+/// Cap on cascade stages crossing the wire (schedules are tiny).
+pub const MAX_WIRE_STAGES: usize = 64;
+
+/// What the floats of a [`WireRequest`] are: a pre-computed embedding
+/// (searched directly) or a raw image (embedded by the serving worker's
+/// controller first).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QueryKind {
+    Embedding,
+    Image,
+}
+
+/// Owned wire form of one search request. [`SearchRequest`] borrows its
+/// query from the caller; a request arriving off a socket owns its
+/// bytes, so the network path decodes into this and hands the data to
+/// the coordinator.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireRequest {
+    pub kind: QueryKind,
+    pub data: Vec<f32>,
+    pub options: SearchOptions,
+}
+
+/// Request body: `kind u8 | flags u8 | mode u8 | top_k u32 | data
+/// (count u32 + f32s)`.
+pub fn encode_request_body(req: &WireRequest, w: &mut ByteWriter) {
+    w.u8(match req.kind {
+        QueryKind::Embedding => 0,
+        QueryKind::Image => 1,
+    });
+    w.u8(req.options.full_scores as u8);
+    w.u8(match req.options.mode {
+        None => 0,
+        Some(SearchMode::Svss) => 1,
+        Some(SearchMode::Avss) => 2,
+    });
+    w.u32(req.options.top_k.min(u32::MAX as usize) as u32);
+    w.f32_vec(&req.data);
+}
+
+pub fn decode_request_body(r: &mut ByteReader<'_>) -> Result<WireRequest, BinioError> {
+    let kind = match r.u8()? {
+        0 => QueryKind::Embedding,
+        1 => QueryKind::Image,
+        _ => return Err(BinioError::Malformed("unknown query kind")),
+    };
+    let full_scores = match r.u8()? {
+        0 => false,
+        1 => true,
+        _ => return Err(BinioError::Malformed("bad full_scores flag")),
+    };
+    let mode = match r.u8()? {
+        0 => None,
+        1 => Some(SearchMode::Svss),
+        2 => Some(SearchMode::Avss),
+        _ => return Err(BinioError::Malformed("unknown search mode")),
+    };
+    let top_k = r.u32()? as usize;
+    let data = r.f32_vec()?;
+    r.expect_end()?;
+    Ok(WireRequest { kind, data, options: SearchOptions { top_k, mode, full_scores } })
+}
+
+/// Response body: `iterations u64 | device_latency_us f64 | hits (count
+/// u32 + [index u64 | label u32 | score f64]) | full_scores (present u8
+/// [+ f64 vec]) | cascade (present u8 [+ stages])`.
+pub fn encode_response_body(resp: &SearchResponse, w: &mut ByteWriter) {
+    w.u64(resp.iterations);
+    w.f64(resp.device_latency_us);
+    w.u32(resp.hits.len() as u32);
+    for hit in &resp.hits {
+        w.u64(hit.index as u64);
+        w.u32(hit.label);
+        w.f64(hit.score);
+    }
+    match &resp.full_scores {
+        None => w.u8(0),
+        Some(scores) => {
+            w.u8(1);
+            w.f64_vec(scores);
+        }
+    }
+    match &resp.cascade {
+        None => w.u8(0),
+        Some(stats) => {
+            w.u8(1);
+            w.u32(stats.stage_sensed.len() as u32);
+            for &sensed in &stats.stage_sensed {
+                w.u64(sensed as u64);
+            }
+            w.u64(stats.iterations_saved as u64);
+            w.u8(stats.early_exited as u8);
+        }
+    }
+}
+
+fn decode_usize(v: u64, what: &'static str) -> Result<usize, BinioError> {
+    usize::try_from(v).map_err(|_| BinioError::Malformed(what))
+}
+
+fn decode_flag(v: u8, what: &'static str) -> Result<bool, BinioError> {
+    match v {
+        0 => Ok(false),
+        1 => Ok(true),
+        _ => Err(BinioError::Malformed(what)),
+    }
+}
+
+pub fn decode_response_body(r: &mut ByteReader<'_>) -> Result<SearchResponse, BinioError> {
+    let iterations = r.u64()?;
+    let device_latency_us = r.f64()?;
+    // each hit is 20 bytes on the wire, so the declared count is
+    // validated against the bytes actually present before allocating
+    let n_hits = r.capped_count(20)?;
+    let mut hits = Vec::with_capacity(n_hits);
+    for _ in 0..n_hits {
+        let index = decode_usize(r.u64()?, "hit index overflows usize")?;
+        let label = r.u32()?;
+        let score = r.f64()?;
+        hits.push(Hit { index, label, score });
+    }
+    let full_scores = if decode_flag(r.u8()?, "bad full_scores presence flag")? {
+        Some(r.f64_vec()?)
+    } else {
+        None
+    };
+    let cascade = if decode_flag(r.u8()?, "bad cascade presence flag")? {
+        let n_stages = r.capped_count(8)?;
+        if n_stages > MAX_WIRE_STAGES {
+            return Err(BinioError::TooLarge { bytes: n_stages, max: MAX_WIRE_STAGES });
+        }
+        let mut stage_sensed = Vec::with_capacity(n_stages);
+        for _ in 0..n_stages {
+            stage_sensed.push(decode_usize(r.u64()?, "stage count overflows usize")?);
+        }
+        let iterations_saved = r.u64()? as i64;
+        let early_exited = decode_flag(r.u8()?, "bad early_exited flag")?;
+        Some(CascadeStats { stage_sensed, iterations_saved, early_exited })
+    } else {
+        None
+    };
+    r.expect_end()?;
+    Ok(SearchResponse { hits, iterations, device_latency_us, full_scores, cascade })
+}
+
+/// Error body: `code u16 | a u64 | b u64 | message (len u32 + utf-8)`.
+/// The aux words carry the variant's data fields (zero when unused), so
+/// typed errors survive the round trip exactly.
+pub fn encode_error_body(err: &EngineError, w: &mut ByteWriter) {
+    let (code, a, b, msg): (u16, u64, u64, &str) = match err {
+        EngineError::DimMismatch { expected, got } => (1, *expected as u64, *got as u64, ""),
+        EngineError::EmptySupport => (2, 0, 0, ""),
+        EngineError::CapacityExceeded { capacity, requested } => {
+            (3, *capacity as u64, *requested as u64, "")
+        }
+        EngineError::InvalidTopK => (4, 0, 0, ""),
+        EngineError::LabelCountMismatch { vectors, labels } => {
+            (5, *vectors as u64, *labels as u64, "")
+        }
+        EngineError::IndexOutOfRange { index, len } => (6, *index as u64, *len as u64, ""),
+        EngineError::AlreadyRemoved { index } => (7, *index as u64, 0, ""),
+        EngineError::InvalidConfig(msg) => (8, 0, 0, msg.as_str()),
+        EngineError::UnknownMode(msg) => (9, 0, 0, msg.as_str()),
+        EngineError::Backend(msg) => (10, 0, 0, msg.as_str()),
+        EngineError::Internal(msg) => (11, 0, 0, msg.as_str()),
+        EngineError::Overloaded => (12, 0, 0, ""),
+        EngineError::ShuttingDown => (13, 0, 0, ""),
+        EngineError::BadFrame(msg) => (14, 0, 0, msg.as_str()),
+    };
+    w.u16(code);
+    w.u64(a);
+    w.u64(b);
+    let mut msg = msg;
+    if msg.len() > MAX_WIRE_MSG_BYTES {
+        // truncate on a char boundary; error strings are diagnostics,
+        // not data
+        let mut cut = MAX_WIRE_MSG_BYTES;
+        while !msg.is_char_boundary(cut) {
+            cut -= 1;
+        }
+        msg = &msg[..cut];
+    }
+    w.str(msg);
+}
+
+pub fn decode_error_body(r: &mut ByteReader<'_>) -> Result<EngineError, BinioError> {
+    let code = r.u16()?;
+    let a = r.u64()?;
+    let b = r.u64()?;
+    let msg = r.str_capped(MAX_WIRE_MSG_BYTES)?;
+    r.expect_end()?;
+    let au = |what| decode_usize(a, what);
+    let bu = |what| decode_usize(b, what);
+    Ok(match code {
+        1 => EngineError::DimMismatch {
+            expected: au("expected dim overflows usize")?,
+            got: bu("got dim overflows usize")?,
+        },
+        2 => EngineError::EmptySupport,
+        3 => EngineError::CapacityExceeded {
+            capacity: au("capacity overflows usize")?,
+            requested: bu("requested overflows usize")?,
+        },
+        4 => EngineError::InvalidTopK,
+        5 => EngineError::LabelCountMismatch {
+            vectors: au("vector count overflows usize")?,
+            labels: bu("label count overflows usize")?,
+        },
+        6 => EngineError::IndexOutOfRange {
+            index: au("index overflows usize")?,
+            len: bu("len overflows usize")?,
+        },
+        7 => EngineError::AlreadyRemoved { index: au("index overflows usize")? },
+        8 => EngineError::InvalidConfig(msg),
+        9 => EngineError::UnknownMode(msg),
+        10 => EngineError::Backend(msg),
+        11 => EngineError::Internal(msg),
+        12 => EngineError::Overloaded,
+        13 => EngineError::ShuttingDown,
+        14 => EngineError::BadFrame(msg),
+        _ => return Err(BinioError::Malformed("unknown error code")),
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -614,5 +868,139 @@ mod tests {
         let msg = EngineError::DimMismatch { expected: 48, got: 24 }.to_string();
         assert!(msg.contains("48") && msg.contains("24"));
         assert!(EngineError::EmptySupport.to_string().contains("support"));
+        assert!(EngineError::Overloaded.to_string().contains("overloaded"));
+        assert!(EngineError::ShuttingDown.to_string().contains("shutting down"));
+    }
+
+    #[test]
+    fn request_body_roundtrip() {
+        let req = WireRequest {
+            kind: QueryKind::Embedding,
+            data: vec![0.5, -1.25, 3.0],
+            options: SearchOptions { top_k: 5, mode: Some(SearchMode::Svss), full_scores: true },
+        };
+        let mut w = ByteWriter::new();
+        encode_request_body(&req, &mut w);
+        let bytes = w.into_bytes();
+        let decoded = decode_request_body(&mut ByteReader::new(&bytes)).unwrap();
+        assert_eq!(decoded, req);
+        // byte-parity: re-encoding the decode reproduces the bytes
+        let mut w2 = ByteWriter::new();
+        encode_request_body(&decoded, &mut w2);
+        assert_eq!(w2.into_bytes(), bytes);
+    }
+
+    #[test]
+    fn response_body_roundtrip_with_all_options() {
+        let resp = SearchResponse {
+            hits: vec![hit(3, 41.0), hit(0, 12.5)],
+            iterations: 6,
+            device_latency_us: 300.0,
+            full_scores: Some(vec![41.0, -2.0, 0.0, 12.5]),
+            cascade: Some(CascadeStats {
+                stage_sensed: vec![16, 4],
+                iterations_saved: -3,
+                early_exited: true,
+            }),
+        };
+        let mut w = ByteWriter::new();
+        encode_response_body(&resp, &mut w);
+        let bytes = w.into_bytes();
+        let decoded = decode_response_body(&mut ByteReader::new(&bytes)).unwrap();
+        assert_eq!(decoded, resp);
+        let mut w2 = ByteWriter::new();
+        encode_response_body(&decoded, &mut w2);
+        assert_eq!(w2.into_bytes(), bytes, "byte-level round-trip parity");
+    }
+
+    #[test]
+    fn response_body_roundtrip_minimal() {
+        let resp = SearchResponse {
+            hits: vec![],
+            iterations: 0,
+            device_latency_us: 0.0,
+            full_scores: None,
+            cascade: None,
+        };
+        let mut w = ByteWriter::new();
+        encode_response_body(&resp, &mut w);
+        let bytes = w.into_bytes();
+        assert_eq!(decode_response_body(&mut ByteReader::new(&bytes)).unwrap(), resp);
+    }
+
+    #[test]
+    fn every_error_variant_roundtrips() {
+        let errors = vec![
+            EngineError::DimMismatch { expected: 48, got: 7 },
+            EngineError::EmptySupport,
+            EngineError::CapacityExceeded { capacity: 100, requested: 200 },
+            EngineError::InvalidTopK,
+            EngineError::LabelCountMismatch { vectors: 3, labels: 4 },
+            EngineError::IndexOutOfRange { index: 9, len: 5 },
+            EngineError::AlreadyRemoved { index: 2 },
+            EngineError::InvalidConfig("zero shards".into()),
+            EngineError::UnknownMode("sideways".into()),
+            EngineError::Backend("controller died".into()),
+            EngineError::Internal("invariant".into()),
+            EngineError::Overloaded,
+            EngineError::ShuttingDown,
+            EngineError::BadFrame("bad magic".into()),
+        ];
+        for err in errors {
+            let mut w = ByteWriter::new();
+            encode_error_body(&err, &mut w);
+            let bytes = w.into_bytes();
+            let decoded = decode_error_body(&mut ByteReader::new(&bytes)).unwrap();
+            assert_eq!(decoded, err);
+        }
+    }
+
+    #[test]
+    fn oversize_error_message_is_truncated_not_rejected() {
+        let err = EngineError::Backend("x".repeat(MAX_WIRE_MSG_BYTES + 100));
+        let mut w = ByteWriter::new();
+        encode_error_body(&err, &mut w);
+        let bytes = w.into_bytes();
+        match decode_error_body(&mut ByteReader::new(&bytes)).unwrap() {
+            EngineError::Backend(msg) => assert_eq!(msg.len(), MAX_WIRE_MSG_BYTES),
+            other => panic!("wrong variant: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn malformed_bodies_are_typed_errors() {
+        // truncated request body
+        assert!(decode_request_body(&mut ByteReader::new(&[0, 0])).is_err());
+        // unknown query kind
+        let mut w = ByteWriter::new();
+        w.u8(9);
+        w.u8(0);
+        w.u8(0);
+        w.u32(1);
+        w.f32_vec(&[]);
+        let bytes = w.into_bytes();
+        assert_eq!(
+            decode_request_body(&mut ByteReader::new(&bytes)),
+            Err(BinioError::Malformed("unknown query kind"))
+        );
+        // declared hit count far beyond the body
+        let mut w = ByteWriter::new();
+        w.u64(0);
+        w.f64(0.0);
+        w.u32(u32::MAX); // hits "count"
+        let bytes = w.into_bytes();
+        assert!(matches!(
+            decode_response_body(&mut ByteReader::new(&bytes)),
+            Err(BinioError::TooLarge { .. })
+        ));
+        // trailing garbage after a valid error body
+        let mut w = ByteWriter::new();
+        encode_error_body(&EngineError::InvalidTopK, &mut w);
+        w.u8(0xAA);
+        let bytes = w.into_bytes();
+        assert_eq!(
+            decode_error_body(&mut ByteReader::new(&bytes)),
+            Err(BinioError::Malformed("trailing bytes after frame body"))
+        );
     }
 }

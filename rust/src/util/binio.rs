@@ -1,4 +1,6 @@
-//! MVT1 binary tensor format — mirror of `python/compile/binio.py`.
+//! MVT1 binary tensor format — mirror of `python/compile/binio.py` —
+//! plus the shared size-validated byte cursor the wire protocol
+//! ([`crate::coordinator::network`]) decodes untrusted frames with.
 //!
 //! ```text
 //! magic  : 4 bytes b"MVT1"
@@ -7,13 +9,258 @@
 //! dims   : ndim x u32 LE
 //! data   : row-major LE elements
 //! ```
+//!
+//! Every size read from an untrusted header goes through
+//! [`checked_payload_bytes`]: element counts are multiplied with
+//! `checked_mul` and compared against an explicit byte cap *before* any
+//! allocation, so a crafted `dims` header can neither overflow the
+//! product nor force a multi-GB allocation.
 
 use anyhow::{bail, Context, Result};
+use std::fmt;
 use std::fs::File;
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 4] = b"MVT1";
+
+/// Default payload cap for on-disk tensors (1 GiB). Callers with
+/// stricter trust boundaries (the wire decoder) pass their own cap.
+pub const MAX_TENSOR_BYTES: usize = 1 << 30;
+
+/// Typed decode error for size-validated binary reads. Carried by both
+/// the MVT1 file reader and the wire-frame decoder so one validation
+/// path covers every untrusted byte.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum BinioError {
+    /// The input ended before `needed` more bytes could be read.
+    Truncated { needed: usize, remaining: usize },
+    /// A size computation (element product × element width) overflowed.
+    SizeOverflow,
+    /// A declared payload exceeds the caller's cap.
+    TooLarge { bytes: usize, max: usize },
+    /// Structurally invalid input (bad magic, unknown tag, …).
+    Malformed(&'static str),
+}
+
+impl fmt::Display for BinioError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            BinioError::Truncated { needed, remaining } => {
+                write!(f, "truncated input: needed {needed} bytes, {remaining} remaining")
+            }
+            BinioError::SizeOverflow => write!(f, "declared size overflows usize"),
+            BinioError::TooLarge { bytes, max } => {
+                write!(f, "declared payload of {bytes} bytes exceeds cap of {max}")
+            }
+            BinioError::Malformed(what) => write!(f, "malformed input: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for BinioError {}
+
+/// Validate an element-count/width product against `max_bytes` without
+/// ever overflowing: returns the total payload size in bytes.
+pub fn checked_payload_bytes(
+    dims: &[usize],
+    elem_bytes: usize,
+    max_bytes: usize,
+) -> Result<usize, BinioError> {
+    let mut total: usize = elem_bytes;
+    for &d in dims {
+        total = total.checked_mul(d).ok_or(BinioError::SizeOverflow)?;
+    }
+    if total > max_bytes {
+        return Err(BinioError::TooLarge { bytes: total, max: max_bytes });
+    }
+    Ok(total)
+}
+
+/// A bounds-checked little-endian cursor over an in-memory buffer. All
+/// reads return typed [`BinioError`]s instead of panicking, and the
+/// capped collection readers refuse declared lengths that exceed the
+/// bytes actually present — untrusted input can never trigger an
+/// allocation larger than the buffer it arrived in.
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        ByteReader { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8], BinioError> {
+        if n > self.remaining() {
+            return Err(BinioError::Truncated { needed: n, remaining: self.remaining() });
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    pub fn u8(&mut self) -> Result<u8, BinioError> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u16(&mut self) -> Result<u16, BinioError> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    pub fn u32(&mut self) -> Result<u32, BinioError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn u64(&mut self) -> Result<u64, BinioError> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    pub fn f32(&mut self) -> Result<f32, BinioError> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    pub fn f64(&mut self) -> Result<f64, BinioError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    /// Read a `u32` count, validate `count * elem_bytes` against the
+    /// bytes actually remaining (checked arithmetic), and return it.
+    pub fn capped_count(&mut self, elem_bytes: usize) -> Result<usize, BinioError> {
+        let count = self.u32()? as usize;
+        let bytes = checked_payload_bytes(&[count], elem_bytes, self.remaining())?;
+        debug_assert!(bytes <= self.remaining());
+        Ok(count)
+    }
+
+    /// Length-prefixed `f32` vector: count is validated against the
+    /// remaining buffer before any allocation.
+    pub fn f32_vec(&mut self) -> Result<Vec<f32>, BinioError> {
+        let count = self.capped_count(4)?;
+        let mut out = Vec::with_capacity(count);
+        for _ in 0..count {
+            out.push(self.f32()?);
+        }
+        Ok(out)
+    }
+
+    /// Length-prefixed `f64` vector with the same validation.
+    pub fn f64_vec(&mut self) -> Result<Vec<f64>, BinioError> {
+        let count = self.capped_count(8)?;
+        let mut out = Vec::with_capacity(count);
+        for _ in 0..count {
+            out.push(self.f64()?);
+        }
+        Ok(out)
+    }
+
+    /// Length-prefixed UTF-8 string, capped at `max_bytes`; invalid
+    /// UTF-8 is a typed error, never a panic.
+    pub fn str_capped(&mut self, max_bytes: usize) -> Result<String, BinioError> {
+        let len = self.u32()? as usize;
+        if len > max_bytes {
+            return Err(BinioError::TooLarge { bytes: len, max: max_bytes });
+        }
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| BinioError::Malformed("invalid utf-8"))
+    }
+
+    /// The decode is complete — any trailing bytes mean a malformed
+    /// (or version-skewed) frame.
+    pub fn expect_end(&self) -> Result<(), BinioError> {
+        if self.is_empty() {
+            Ok(())
+        } else {
+            Err(BinioError::Malformed("trailing bytes after frame body"))
+        }
+    }
+}
+
+/// Little-endian append-only writer mirroring [`ByteReader`].
+#[derive(Default)]
+pub struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    pub fn new() -> Self {
+        ByteWriter { buf: Vec::new() }
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f32(&mut self, v: f32) {
+        self.u32(v.to_bits());
+    }
+
+    pub fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+
+    pub fn bytes(&mut self, b: &[u8]) {
+        self.buf.extend_from_slice(b);
+    }
+
+    /// Length-prefixed `f32` vector (count as u32 LE).
+    pub fn f32_vec(&mut self, v: &[f32]) {
+        self.u32(v.len() as u32);
+        for &x in v {
+            self.f32(x);
+        }
+    }
+
+    /// Length-prefixed `f64` vector (count as u32 LE).
+    pub fn f64_vec(&mut self, v: &[f64]) {
+        self.u32(v.len() as u32);
+        for &x in v {
+            self.f64(x);
+        }
+    }
+
+    /// Length-prefixed UTF-8 string (byte length as u32 LE).
+    pub fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.bytes(s.as_bytes());
+    }
+}
 
 /// A dense tensor of `f32` or `i32` with explicit shape.
 #[derive(Debug, Clone, PartialEq)]
@@ -61,8 +308,17 @@ fn read_u32(r: &mut impl Read) -> Result<u32> {
     Ok(u32::from_le_bytes(buf))
 }
 
-/// Read an MVT1 tensor from `path`.
+/// Read an MVT1 tensor from `path` with the default
+/// [`MAX_TENSOR_BYTES`] payload cap.
 pub fn read_tensor(path: &Path) -> Result<Tensor> {
+    read_tensor_capped(path, MAX_TENSOR_BYTES)
+}
+
+/// Read an MVT1 tensor from `path`, refusing any payload whose declared
+/// size exceeds `max_bytes`. The dims product is computed with checked
+/// arithmetic, so a crafted header can neither panic on overflow nor
+/// drive an unbounded allocation.
+pub fn read_tensor_capped(path: &Path, max_bytes: usize) -> Result<Tensor> {
     let file = File::open(path).with_context(|| format!("open {}", path.display()))?;
     let mut r = BufReader::new(file);
     let mut magic = [0u8; 4];
@@ -79,8 +335,9 @@ pub fn read_tensor(path: &Path) -> Result<Tensor> {
     for _ in 0..ndim {
         dims.push(read_u32(&mut r)? as usize);
     }
-    let count: usize = dims.iter().product();
-    let mut bytes = vec![0u8; count * 4];
+    let payload = checked_payload_bytes(&dims, 4, max_bytes)
+        .with_context(|| format!("{}: bad dims header", path.display()))?;
+    let mut bytes = vec![0u8; payload];
     r.read_exact(&mut bytes)
         .with_context(|| format!("{}: truncated data", path.display()))?;
     match dtype {
@@ -175,5 +432,128 @@ mod tests {
         let t = Tensor::F32 { dims: vec![1], data: vec![1.0] };
         assert!(t.as_i32().is_err());
         assert!(t.as_f32().is_ok());
+    }
+
+    /// Craft a header whose dims product overflows usize: 4 dims of
+    /// u32::MAX. Before the checked-size fix this panicked in release
+    /// arithmetic (or attempted a huge allocation); now it is a typed
+    /// error.
+    #[test]
+    fn dims_overflow_header_is_typed_error() {
+        let dir = std::env::temp_dir().join("mcamvss_binio_overflow");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("evil.mvt");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"MVT1");
+        bytes.extend_from_slice(&0u32.to_le_bytes()); // dtype f32
+        bytes.extend_from_slice(&4u32.to_le_bytes()); // ndim 4
+        for _ in 0..4 {
+            bytes.extend_from_slice(&u32::MAX.to_le_bytes());
+        }
+        std::fs::write(&path, &bytes).unwrap();
+        let err = read_tensor(&path).unwrap_err();
+        assert!(err.to_string().contains("bad dims header"), "got: {err}");
+    }
+
+    /// A header that does not overflow but declares more payload than
+    /// the cap allows must be refused before any allocation.
+    #[test]
+    fn oversize_header_is_refused_by_cap() {
+        let dir = std::env::temp_dir().join("mcamvss_binio_oversize");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("big.mvt");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"MVT1");
+        bytes.extend_from_slice(&0u32.to_le_bytes());
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&1_000_000u32.to_le_bytes()); // 4 MB payload
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(read_tensor_capped(&path, 1024).is_err());
+        // and the same file passes under a generous cap (then fails on
+        // truncation, which is a different, honest error)
+        let err = read_tensor_capped(&path, 8 << 20).unwrap_err();
+        assert!(err.to_string().contains("truncated data"), "got: {err}");
+    }
+
+    #[test]
+    fn checked_payload_bytes_paths() {
+        assert_eq!(checked_payload_bytes(&[2, 3], 4, 1024), Ok(24));
+        assert_eq!(checked_payload_bytes(&[], 4, 1024), Ok(4));
+        assert_eq!(
+            checked_payload_bytes(&[usize::MAX, 2], 4, usize::MAX),
+            Err(BinioError::SizeOverflow)
+        );
+        assert_eq!(
+            checked_payload_bytes(&[100], 4, 100),
+            Err(BinioError::TooLarge { bytes: 400, max: 100 })
+        );
+    }
+
+    #[test]
+    fn byte_reader_truncation_and_caps() {
+        let mut w = ByteWriter::new();
+        w.u8(7);
+        w.u32(0xDEAD_BEEF);
+        w.f64(-2.5);
+        w.str("hi");
+        let bytes = w.into_bytes();
+
+        let mut r = ByteReader::new(&bytes);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.f64().unwrap(), -2.5);
+        assert_eq!(r.str_capped(16).unwrap(), "hi");
+        r.expect_end().unwrap();
+
+        // truncated: ask for more than remains
+        let mut r = ByteReader::new(&bytes[..3]);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(
+            r.u32(),
+            Err(BinioError::Truncated { needed: 4, remaining: 2 })
+        );
+
+        // a declared vector count larger than the buffer is refused
+        // before allocation
+        let mut w = ByteWriter::new();
+        w.u32(u32::MAX); // count: ~4 billion f32s
+        let evil = w.into_bytes();
+        let mut r = ByteReader::new(&evil);
+        assert!(matches!(r.f32_vec(), Err(BinioError::TooLarge { .. })));
+
+        // string cap
+        let mut w = ByteWriter::new();
+        w.str("hello world");
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        assert_eq!(
+            r.str_capped(4),
+            Err(BinioError::TooLarge { bytes: 11, max: 4 })
+        );
+
+        // invalid utf-8 is typed, not a panic
+        let mut w = ByteWriter::new();
+        w.u32(2);
+        w.bytes(&[0xFF, 0xFE]);
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        assert_eq!(r.str_capped(16), Err(BinioError::Malformed("invalid utf-8")));
+
+        // trailing bytes are flagged
+        let mut r = ByteReader::new(&[1, 2]);
+        r.u8().unwrap();
+        assert!(r.expect_end().is_err());
+    }
+
+    #[test]
+    fn roundtrip_vec_helpers() {
+        let mut w = ByteWriter::new();
+        w.f32_vec(&[1.0, -2.0, 0.5]);
+        w.f64_vec(&[3.25, -0.125]);
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        assert_eq!(r.f32_vec().unwrap(), vec![1.0, -2.0, 0.5]);
+        assert_eq!(r.f64_vec().unwrap(), vec![3.25, -0.125]);
+        r.expect_end().unwrap();
     }
 }

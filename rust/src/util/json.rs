@@ -339,6 +339,30 @@ impl Json {
     }
 }
 
+/// Merge `entries` into the JSON object stored at `path`, key by key:
+/// existing keys from earlier (or partial) runs are preserved,
+/// re-measured keys are replaced. Creates the file if missing; an
+/// unreadable/non-object file is replaced wholesale. Shared by the bench
+/// harness and the `bench-client` CLI subcommand, both of which track
+/// measurements in `BENCH_engine.json` at the repository root.
+pub fn merge_report(path: &std::path::Path, entries: Vec<(String, Json)>) -> std::io::Result<()> {
+    let mut fields: Vec<(String, Json)> = match std::fs::read_to_string(path) {
+        Ok(text) => match Json::parse(&text) {
+            Ok(Json::Obj(fields)) => fields,
+            _ => Vec::new(),
+        },
+        Err(_) => Vec::new(),
+    };
+    for (key, value) in entries {
+        if let Some(slot) = fields.iter_mut().find(|(k, _)| *k == key) {
+            slot.1 = value;
+        } else {
+            fields.push((key, value));
+        }
+    }
+    std::fs::write(path, Json::Obj(fields).render())
+}
+
 /// Convenience builder for JSON objects.
 #[derive(Debug, Default)]
 pub struct ObjBuilder {
@@ -427,6 +451,30 @@ mod tests {
         assert!(Json::parse("12 34").is_err());
         assert!(Json::parse("\"unterminated").is_err());
         assert!(Json::parse("nul").is_err());
+    }
+
+    #[test]
+    fn merge_report_preserves_and_replaces_keys() {
+        let dir = std::env::temp_dir().join("mcamvss_json_merge");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("report.json");
+        let _ = std::fs::remove_file(&path);
+
+        // creates the file
+        merge_report(&path, vec![("a".into(), Json::num(1)), ("b".into(), Json::num(2))])
+            .unwrap();
+        // replaces re-measured keys, keeps the rest
+        merge_report(&path, vec![("b".into(), Json::num(9))]).unwrap();
+        let parsed = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(parsed.get("a").unwrap().as_f64(), Some(1.0));
+        assert_eq!(parsed.get("b").unwrap().as_f64(), Some(9.0));
+
+        // a corrupt file is replaced wholesale, not a crash
+        std::fs::write(&path, "not json").unwrap();
+        merge_report(&path, vec![("c".into(), Json::num(3))]).unwrap();
+        let parsed = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(parsed.get("c").unwrap().as_f64(), Some(3.0));
+        assert_eq!(parsed.get("a"), None);
     }
 
     #[test]
