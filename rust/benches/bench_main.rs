@@ -167,6 +167,14 @@ fn main() {
         println!("[fig_cascade wall: {:.1}s]\n", t0.elapsed().as_secs_f64());
     }
 
+    if want("fig_faults") {
+        section("fig_faults");
+        let t0 = Instant::now();
+        let sweep = experiments::fig_faults::run(0xFA0175).unwrap();
+        println!("{}", experiments::fig_faults::render(&sweep));
+        println!("[fig_faults wall: {:.1}s]\n", t0.elapsed().as_secs_f64());
+    }
+
     if want("ablation") {
         if let Some(store) = &store {
             section("ablations");

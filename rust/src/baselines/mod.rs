@@ -282,6 +282,7 @@ impl VectorSearchBackend for FloatBaseline {
                 hits,
                 iterations: 0,
                 device_latency_us: 0.0,
+                coverage: 1.0,
                 full_scores,
                 cascade: None,
             });
@@ -305,6 +306,14 @@ impl VectorSearchBackend for FloatBaseline {
             cascade_max_iterations_per_search: 0,
             avg_iterations_per_search: 0.0,
             nj_per_search: 0.0,
+            // a float scan has no flash media to wear out or scrub
+            shard_health: Vec::new(),
+            scrub_passes: 0,
+            strings_scrubbed: 0,
+            slots_reprogrammed: 0,
+            slots_remapped: 0,
+            spares_remaining: 0,
+            canary_margin: 1.0,
         }
     }
 }

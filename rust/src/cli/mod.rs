@@ -21,7 +21,9 @@ const VALUE_KEYS: &[&str] = &[
     "meta-episodes", "cascade-columns", "cascade-ladder", "cascade-shortlist",
     "cascade-margin", "cascade-budget", "listen", "connect", "clients",
     "addr-file", "serve-seconds", "max-connections", "max-in-flight",
-    "idle-timeout-ms", "dims",
+    "idle-timeout-ms", "dims", "stuck-low", "stuck-high", "retention-drift",
+    "read-disturb", "scrub-canaries", "scrub-spares", "scrub-margin",
+    "scrub-every",
 ];
 
 impl Args {
@@ -151,6 +153,26 @@ mod tests {
         assert_eq!(args.opt_usize("clients").unwrap(), Some(4));
         assert_eq!(args.opt_usize("dims").unwrap(), Some(48));
         assert!(args.flag("shutdown-server"));
+    }
+
+    #[test]
+    fn fault_and_scrub_keys_take_values() {
+        let args = parse(&[
+            "serve", "--faults", "--stuck-low", "0.01", "--stuck-high", "0.002",
+            "--retention-drift", "0.02", "--read-disturb", "0.001", "--scrub",
+            "--scrub-canaries", "8", "--scrub-spares", "3", "--scrub-margin",
+            "0.85", "--scrub-every", "16",
+        ]);
+        assert!(args.flag("faults"));
+        assert!(args.flag("scrub"));
+        assert_eq!(args.opt("stuck-low"), Some("0.01"));
+        assert_eq!(args.opt("stuck-high"), Some("0.002"));
+        assert_eq!(args.opt("retention-drift"), Some("0.02"));
+        assert_eq!(args.opt("read-disturb"), Some("0.001"));
+        assert_eq!(args.opt_usize("scrub-canaries").unwrap(), Some(8));
+        assert_eq!(args.opt_usize("scrub-spares").unwrap(), Some(3));
+        assert_eq!(args.opt("scrub-margin"), Some("0.85"));
+        assert_eq!(args.opt_usize("scrub-every").unwrap(), Some(16));
     }
 
     #[test]

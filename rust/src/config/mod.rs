@@ -6,6 +6,7 @@ mod toml;
 
 pub use toml::{TomlDoc, TomlValue};
 
+use crate::device::faults::{FaultModel, ScrubConfig};
 use crate::device::variation::VariationModel;
 use crate::encoding::Encoding;
 use crate::search::cascade::{CascadeConfig, CascadeStage, Shortlist};
@@ -90,6 +91,98 @@ impl CascadeSettings {
         }
         if self.iteration_budget == Some(0) {
             bail!("cascade iteration_budget must be >= 1");
+        }
+        Ok(())
+    }
+}
+
+/// The `[faults]` TOML section: persistent device-fault statistics
+/// installed on every engine replica (DESIGN.md §Reliability). Enabled
+/// with `enabled = true`; the rates default to the worn-device profile
+/// ([`FaultModel::worn`]) so `[faults]\nenabled = true` alone simulates
+/// end-of-life flash.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultSettings {
+    /// Per-cell probability of being stuck at the lowest level.
+    pub stuck_low: f64,
+    /// Per-cell probability of being stuck at the highest level.
+    pub stuck_high: f64,
+    /// Per-cell per-age-tick retention drift probability.
+    pub retention_drift: f64,
+    /// Per-cell per-sense read-disturb probability.
+    pub read_disturb: f64,
+}
+
+impl Default for FaultSettings {
+    fn default() -> Self {
+        let worn = FaultModel::worn();
+        FaultSettings {
+            stuck_low: worn.stuck_low,
+            stuck_high: worn.stuck_high,
+            retention_drift: worn.retention_drift,
+            read_disturb: worn.read_disturb,
+        }
+    }
+}
+
+impl FaultSettings {
+    pub fn to_model(&self) -> FaultModel {
+        FaultModel {
+            stuck_low: self.stuck_low,
+            stuck_high: self.stuck_high,
+            retention_drift: self.retention_drift,
+            read_disturb: self.read_disturb,
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        self.to_model().validate()?;
+        Ok(())
+    }
+}
+
+/// The `[scrub]` TOML section: online scrub policy + cadence
+/// (DESIGN.md §Reliability). `enabled = true` installs a
+/// [`ScrubConfig`] on every replica and schedules a background pass on
+/// each worker every [`Self::every_batches`] served batches.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScrubSettings {
+    /// Known-pattern canary strings per shard.
+    pub canaries: usize,
+    /// Spare slots per shard for remapping persistently-stuck strings.
+    pub spares: usize,
+    /// Canary cell-match fraction below which a shard reports `Degraded`.
+    pub margin_threshold: f64,
+    /// Worker-side cadence: scrub after this many served batches.
+    pub every_batches: u64,
+}
+
+impl Default for ScrubSettings {
+    fn default() -> Self {
+        let scrub = ScrubConfig::default();
+        ScrubSettings {
+            canaries: scrub.canaries,
+            spares: scrub.spares,
+            margin_threshold: scrub.margin_threshold,
+            every_batches: 32,
+        }
+    }
+}
+
+impl ScrubSettings {
+    pub fn to_scrub(&self) -> ScrubConfig {
+        ScrubConfig {
+            canaries: self.canaries,
+            spares: self.spares,
+            margin_threshold: self.margin_threshold,
+            ..ScrubConfig::default()
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        self.to_scrub().validate()?;
+        if self.every_batches == 0 {
+            bail!("scrub every_batches must be >= 1");
         }
         Ok(())
     }
@@ -287,6 +380,12 @@ pub struct Config {
     /// Optional progressive-precision cascade (`[cascade]` section /
     /// `--cascade` flags); `None` serves full scans.
     pub cascade: Option<CascadeSettings>,
+    /// Optional persistent device faults (`[faults]` section /
+    /// `--faults` flag); `None` serves a pristine device.
+    pub faults: Option<FaultSettings>,
+    /// Optional online scrub policy + worker cadence (`[scrub]` section /
+    /// `--scrub` flag).
+    pub scrub: Option<ScrubSettings>,
 }
 
 impl Config {
@@ -312,6 +411,8 @@ impl Config {
             train: TrainSettings::omniglot(),
             serve: ServeSettings::default(),
             cascade: None,
+            faults: None,
+            scrub: None,
         }
     }
 
@@ -337,6 +438,8 @@ impl Config {
             train: TrainSettings::cub(),
             serve: ServeSettings::default(),
             cascade: None,
+            faults: None,
+            scrub: None,
         }
     }
 
@@ -363,6 +466,8 @@ impl Config {
             train: TrainSettings::synth(),
             serve: ServeSettings::default(),
             cascade: None,
+            faults: None,
+            scrub: None,
         }
     }
 
@@ -522,6 +627,48 @@ impl Config {
             }
             cfg.cascade = Some(cascade);
         }
+        if doc.get_bool("faults", "enabled") == Some(true) {
+            // Rates default to the worn-device profile; each key
+            // overrides one rate. Range checks live in
+            // FaultModel::validate (reached via cfg.validate()).
+            let mut faults = FaultSettings::default();
+            if let Some(v) = doc.get_float("faults", "stuck_low") {
+                faults.stuck_low = v;
+            }
+            if let Some(v) = doc.get_float("faults", "stuck_high") {
+                faults.stuck_high = v;
+            }
+            if let Some(v) = doc.get_float("faults", "retention_drift") {
+                faults.retention_drift = v;
+            }
+            if let Some(v) = doc.get_float("faults", "read_disturb") {
+                faults.read_disturb = v;
+            }
+            cfg.faults = Some(faults);
+        }
+        if doc.get_bool("scrub", "enabled") == Some(true) {
+            let get_pos = |key: &str| -> Result<Option<usize>> {
+                match doc.get_int("scrub", key) {
+                    None => Ok(None),
+                    Some(v) if v >= 1 => Ok(Some(v as usize)),
+                    Some(v) => bail!("scrub {key} must be >= 1, got {v}"),
+                }
+            };
+            let mut scrub = ScrubSettings::default();
+            if let Some(v) = get_pos("canaries")? {
+                scrub.canaries = v;
+            }
+            if let Some(v) = get_pos("spares")? {
+                scrub.spares = v;
+            }
+            if let Some(v) = doc.get_float("scrub", "margin_threshold") {
+                scrub.margin_threshold = v;
+            }
+            if let Some(v) = get_pos("every_batches")? {
+                scrub.every_batches = v as u64;
+            }
+            cfg.scrub = Some(scrub);
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -552,6 +699,12 @@ impl Config {
         self.serve.validate()?;
         if let Some(cascade) = &self.cascade {
             cascade.validate()?;
+        }
+        if let Some(faults) = &self.faults {
+            faults.validate()?;
+        }
+        if let Some(scrub) = &self.scrub {
+            scrub.validate()?;
         }
         Ok(())
     }
@@ -701,6 +854,55 @@ program_sigma = 0.3
             "[serve]\nmax_in_flight = -2\n",
             "[serve]\nidle_timeout_ms = 9999999999\n",
             "[serve]\nmax_frame_bytes = 8\n",
+        ] {
+            let doc = TomlDoc::parse(bad).unwrap();
+            assert!(Config::from_toml(&doc).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn faults_and_scrub_sections_parse_and_validate() {
+        let doc = TomlDoc::parse(
+            "[faults]\nenabled = true\nstuck_low = 0.01\nread_disturb = 0.001\n\
+             [scrub]\nenabled = true\ncanaries = 8\nspares = 3\n\
+             margin_threshold = 0.8\nevery_batches = 16\n",
+        )
+        .unwrap();
+        let cfg = Config::from_toml(&doc).unwrap();
+        let faults = cfg.faults.expect("enabled section");
+        assert_eq!(faults.stuck_low, 0.01);
+        assert_eq!(faults.read_disturb, 0.001);
+        // unset rates keep the worn-device profile
+        assert_eq!(faults.stuck_high, FaultModel::worn().stuck_high);
+        assert_eq!(faults.retention_drift, FaultModel::worn().retention_drift);
+        faults.to_model().validate().unwrap();
+        let scrub = cfg.scrub.expect("enabled section");
+        assert_eq!(scrub.canaries, 8);
+        assert_eq!(scrub.spares, 3);
+        assert_eq!(scrub.margin_threshold, 0.8);
+        assert_eq!(scrub.every_batches, 16);
+        scrub.to_scrub().validate().unwrap();
+
+        // not enabled → None; a bare enable is the worn-device default
+        let cfg = Config::from_toml(&TomlDoc::parse("[faults]\nstuck_low = 0.5\n").unwrap())
+            .unwrap();
+        assert!(cfg.faults.is_none() && cfg.scrub.is_none());
+        let cfg = Config::from_toml(
+            &TomlDoc::parse("[faults]\nenabled = true\n[scrub]\nenabled = true\n").unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.faults, Some(FaultSettings::default()));
+        assert_eq!(cfg.scrub, Some(ScrubSettings::default()));
+
+        // out-of-range rates and zero/negative counts are config errors
+        for bad in [
+            "[faults]\nenabled = true\nstuck_low = 1.5\n",
+            "[faults]\nenabled = true\nretention_drift = -0.1\n",
+            "[faults]\nenabled = true\nstuck_low = 0.6\nstuck_high = 0.6\n",
+            "[scrub]\nenabled = true\ncanaries = 0\n",
+            "[scrub]\nenabled = true\nspares = -1\n",
+            "[scrub]\nenabled = true\nmargin_threshold = 1.5\n",
+            "[scrub]\nenabled = true\nevery_batches = 0\n",
         ] {
             let doc = TomlDoc::parse(bad).unwrap();
             assert!(Config::from_toml(&doc).is_err(), "accepted {bad:?}");

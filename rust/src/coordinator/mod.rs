@@ -32,7 +32,8 @@ pub mod network;
 pub mod queue;
 pub mod worker;
 
-use crate::search::api::{EngineError, Hit, SearchResponse, VectorSearchBackend};
+use crate::device::faults::{FaultModel, ScrubConfig};
+use crate::search::api::{BackendStats, EngineError, Hit, ScrubReport, SearchResponse, VectorSearchBackend};
 use crate::search::engine::{EngineConfig, SearchEngine};
 use crate::search::SearchOptions;
 use crate::util::json::{Json, ObjBuilder};
@@ -149,7 +150,7 @@ impl Response {
 }
 
 /// Aggregate serving statistics.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct ServerStats {
     pub submitted: AtomicU64,
     pub completed: AtomicU64,
@@ -158,9 +159,65 @@ pub struct ServerStats {
     /// in exactly one of `completed` / `errored`.
     pub errored: AtomicU64,
     pub batches: AtomicU64,
+    /// Background scrub passes completed across all worker replicas
+    /// (DESIGN.md §Reliability). Counters accumulate; the gauges below
+    /// hold the most recent pass's fleet view.
+    pub scrub_passes: AtomicU64,
+    pub strings_scrubbed: AtomicU64,
+    pub slots_reprogrammed: AtomicU64,
+    pub slots_remapped: AtomicU64,
+    /// Gauge: spare string groups still unused on the last-scrubbed
+    /// replica.
+    pub spares_remaining: AtomicU64,
+    /// Gauges: shard-health census of the last-scrubbed replica.
+    pub failed_shards: AtomicU64,
+    pub degraded_shards: AtomicU64,
+    /// Gauge: worst canary sense margin seen on the last scrub pass,
+    /// stored as f64 bits (atomics hold integers).
+    canary_margin_bits: AtomicU64,
+}
+
+impl Default for ServerStats {
+    fn default() -> Self {
+        ServerStats {
+            submitted: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            errored: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            scrub_passes: AtomicU64::new(0),
+            strings_scrubbed: AtomicU64::new(0),
+            slots_reprogrammed: AtomicU64::new(0),
+            slots_remapped: AtomicU64::new(0),
+            spares_remaining: AtomicU64::new(0),
+            failed_shards: AtomicU64::new(0),
+            degraded_shards: AtomicU64::new(0),
+            // an unscrubbed fleet has full margin, not zero
+            canary_margin_bits: AtomicU64::new(1.0f64.to_bits()),
+        }
+    }
 }
 
 impl ServerStats {
+    /// Worst canary margin observed by the most recent scrub pass
+    /// (1.0 until a pass has run).
+    pub fn canary_margin(&self) -> f64 {
+        f64::from_bits(self.canary_margin_bits.load(Ordering::Relaxed))
+    }
+
+    /// Fold one scrub pass into the ledger: counters accumulate, gauges
+    /// snapshot the scrubbed replica's post-pass state.
+    pub(crate) fn record_scrub(&self, report: &ScrubReport, backend: &BackendStats) {
+        self.scrub_passes.fetch_add(1, Ordering::Relaxed);
+        self.strings_scrubbed.fetch_add(report.strings_scrubbed, Ordering::Relaxed);
+        self.slots_reprogrammed.fetch_add(report.slots_reprogrammed, Ordering::Relaxed);
+        self.slots_remapped.fetch_add(report.slots_remapped, Ordering::Relaxed);
+        self.spares_remaining.store(report.spares_remaining as u64, Ordering::Relaxed);
+        self.failed_shards.store(backend.failed_shards() as u64, Ordering::Relaxed);
+        self.degraded_shards.store(backend.degraded_shards() as u64, Ordering::Relaxed);
+        self.canary_margin_bits.store(report.canary_margin.to_bits(), Ordering::Relaxed);
+    }
+
     pub fn to_json(&self) -> Json {
         ObjBuilder::new()
             .field("submitted", Json::num(self.submitted.load(Ordering::Relaxed) as f64))
@@ -168,6 +225,32 @@ impl ServerStats {
             .field("rejected", Json::num(self.rejected.load(Ordering::Relaxed) as f64))
             .field("errored", Json::num(self.errored.load(Ordering::Relaxed) as f64))
             .field("batches", Json::num(self.batches.load(Ordering::Relaxed) as f64))
+            .field("scrub_passes", Json::num(self.scrub_passes.load(Ordering::Relaxed) as f64))
+            .field(
+                "strings_scrubbed",
+                Json::num(self.strings_scrubbed.load(Ordering::Relaxed) as f64),
+            )
+            .field(
+                "slots_reprogrammed",
+                Json::num(self.slots_reprogrammed.load(Ordering::Relaxed) as f64),
+            )
+            .field(
+                "slots_remapped",
+                Json::num(self.slots_remapped.load(Ordering::Relaxed) as f64),
+            )
+            .field(
+                "spares_remaining",
+                Json::num(self.spares_remaining.load(Ordering::Relaxed) as f64),
+            )
+            .field(
+                "failed_shards",
+                Json::num(self.failed_shards.load(Ordering::Relaxed) as f64),
+            )
+            .field(
+                "degraded_shards",
+                Json::num(self.degraded_shards.load(Ordering::Relaxed) as f64),
+            )
+            .field("canary_margin", Json::num(self.canary_margin()))
             .build()
     }
 }
@@ -178,6 +261,13 @@ pub struct CoordinatorConfig {
     pub workers: usize,
     pub queue_capacity: usize,
     pub batcher: BatcherConfig,
+    /// Opt-in background scrubbing: every worker scrubs its own replica
+    /// after serving this many batches (scrub runs on the worker thread
+    /// between batches, so it never races a search on the same engine).
+    /// `None` disables the cadence. This only *schedules* passes — the
+    /// policy itself ([`ScrubConfig`]) must be installed on the backend,
+    /// e.g. via [`EngineSetup::scrub`].
+    pub scrub_every_batches: Option<u64>,
 }
 
 impl Default for CoordinatorConfig {
@@ -186,8 +276,19 @@ impl Default for CoordinatorConfig {
             workers: 2,
             queue_capacity: 256,
             batcher: BatcherConfig::default(),
+            scrub_every_batches: None,
         }
     }
+}
+
+/// Per-replica engine setup applied by [`Server::start_configured`]:
+/// cascade schedule, fault model, and scrub policy — everything the
+/// serving CLI can install on top of a bare [`EngineConfig`].
+#[derive(Debug, Clone, Default)]
+pub struct EngineSetup {
+    pub cascade: Option<crate::search::cascade::CascadeConfig>,
+    pub faults: Option<FaultModel>,
+    pub scrub: Option<ScrubConfig>,
 }
 
 /// The serving coordinator. Generic over how embeddings are produced
@@ -245,7 +346,13 @@ impl Server {
         let ingress = Arc::new(BoundedQueue::new(cfg.queue_capacity));
         let responses = Arc::new(Mutex::new(Vec::new()));
         let stats = Arc::new(ServerStats::default());
-        let pool = WorkerPool::start(backends, embed, Arc::clone(&responses), Arc::clone(&stats));
+        let pool = WorkerPool::start(
+            backends,
+            embed,
+            Arc::clone(&responses),
+            Arc::clone(&stats),
+            cfg.scrub_every_batches,
+        );
         let batcher_handle = batcher::spawn(
             cfg.batcher,
             Arc::clone(&ingress),
@@ -295,6 +402,26 @@ impl Server {
         labels: &[u32],
         embed: EmbedFn,
     ) -> Result<Server> {
+        let setup = EngineSetup { cascade, ..Default::default() };
+        Self::start_configured(cfg, engine_cfg, setup, dims, support, labels, embed)
+    }
+
+    /// [`Self::start`] with the full per-replica setup: cascade schedule,
+    /// persistent fault model, and scrub policy (DESIGN.md §Reliability).
+    /// Combined with [`CoordinatorConfig::scrub_every_batches`] this is
+    /// the serving CLI's wear-and-repair path: every replica carries the
+    /// same fault statistics (its own seed stream) and scrubs itself
+    /// between batches.
+    #[allow(clippy::too_many_arguments)]
+    pub fn start_configured(
+        cfg: CoordinatorConfig,
+        engine_cfg: EngineConfig,
+        setup: EngineSetup,
+        dims: usize,
+        support: &[&[f32]],
+        labels: &[u32],
+        embed: EmbedFn,
+    ) -> Result<Server> {
         let support_set = crate::search::api::SupportSet::from_refs(dims, support, labels)?;
         let mut engines = Vec::with_capacity(cfg.workers);
         for w in 0..cfg.workers {
@@ -302,7 +429,11 @@ impl Server {
             ecfg.seed = crate::testutil::derive_seed(engine_cfg.seed, 0x1000 + w as u64);
             let mut engine = SearchEngine::new(ecfg, dims, support_set.len().max(1))?;
             engine.program(&support_set)?;
-            engine.set_cascade(cascade.clone())?;
+            engine.set_cascade(setup.cascade.clone())?;
+            if let Some(faults) = setup.faults {
+                engine.set_faults(faults)?;
+            }
+            engine.set_scrub(setup.scrub)?;
             engines.push(engine);
         }
         Ok(Self::start_with_backends(cfg, engines, embed)?)
@@ -382,6 +513,13 @@ impl Server {
         &self.stats
     }
 
+    /// A shared handle to the counters that outlives [`Self::shutdown`]
+    /// (which consumes the server) — CLIs print final serving + scrub
+    /// stats with it.
+    pub fn stats_handle(&self) -> Arc<ServerStats> {
+        Arc::clone(&self.stats)
+    }
+
     /// Drain: close ingress, join batcher + workers, return all responses.
     pub fn shutdown(mut self) -> Vec<Response> {
         self.ingress.close();
@@ -424,6 +562,7 @@ mod tests {
             workers,
             queue_capacity: 64,
             batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(2) },
+            scrub_every_batches: None,
         };
         let ecfg = EngineConfig::new(Encoding::Mtmc, 8, SearchMode::Avss, 3.0).ideal();
         let server =
@@ -580,6 +719,51 @@ mod tests {
         let responses = server.shutdown();
         assert_eq!(responses.len(), embs.len() * 4);
         assert!(stats_arc.batches.load(Ordering::Relaxed) > 0);
+    }
+
+    #[test]
+    fn background_scrub_runs_on_cadence_and_publishes_counters() {
+        use crate::device::faults::{FaultModel, ScrubConfig};
+        let (embs, labels) = clustered(6, 3, 48);
+        let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
+        let cfg = CoordinatorConfig {
+            workers: 1,
+            queue_capacity: 64,
+            batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(2) },
+            scrub_every_batches: Some(1),
+        };
+        let ecfg = EngineConfig::new(Encoding::Mtmc, 8, SearchMode::Avss, 3.0).ideal();
+        let setup = EngineSetup {
+            cascade: None,
+            faults: Some(FaultModel { retention_drift: 0.2, ..FaultModel::NONE }),
+            scrub: Some(ScrubConfig::default()),
+        };
+        let server = Server::start_configured(
+            cfg,
+            ecfg,
+            setup,
+            48,
+            &refs,
+            &labels,
+            worker::identity_embed(),
+        )
+        .unwrap();
+        for emb in &embs {
+            server.submit(Payload::Embedding(emb.clone()));
+        }
+        let stats_arc = Arc::clone(&server.stats);
+        let responses = server.shutdown();
+        assert_eq!(responses.len(), embs.len());
+        assert!(responses.iter().all(|r| r.is_ok()), "scrubbing never breaks serving");
+        // at least one batch was served, so at least one pass ran, and the
+        // fleet never aged (logical clock untouched) so canaries hold full
+        // margin
+        assert!(stats_arc.scrub_passes.load(Ordering::Relaxed) >= 1);
+        assert_eq!(stats_arc.canary_margin(), 1.0);
+        assert_eq!(stats_arc.failed_shards.load(Ordering::Relaxed), 0);
+        let json = stats_arc.to_json().render();
+        assert!(json.contains("\"scrub_passes\""), "{json}");
+        assert!(json.contains("\"canary_margin\""), "{json}");
     }
 
     #[test]

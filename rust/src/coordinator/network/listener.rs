@@ -103,6 +103,12 @@ impl NetServer {
         self.server.stats()
     }
 
+    /// A shared handle to the coordinator counters (serving + scrub
+    /// ledger) that outlives [`Self::shutdown`].
+    pub fn server_stats_handle(&self) -> Arc<ServerStats> {
+        self.server.stats_handle()
+    }
+
     /// `true` once shutdown has been requested — by [`Self::shutdown`],
     /// [`Self::request_shutdown`], or a client's
     /// [`Frame::Shutdown`] control frame.

@@ -216,6 +216,7 @@ mod tests {
                     hits: vec![Hit { index: 1, label: 9, score: 3.5 }],
                     iterations: 4,
                     device_latency_us: 200.0,
+                    coverage: 0.75,
                     full_scores: None,
                     cascade: None,
                 },

@@ -41,6 +41,7 @@ impl WorkerPool {
         embed: EmbedFn,
         responses: Arc<Mutex<Vec<Response>>>,
         stats: Arc<ServerStats>,
+        scrub_every_batches: Option<u64>,
     ) -> WorkerPool
     where
         B: VectorSearchBackend + Send + 'static,
@@ -57,6 +58,7 @@ impl WorkerPool {
                 std::thread::Builder::new()
                     .name(format!("mcamvss-worker-{w}"))
                     .spawn(move || {
+                        let mut batches_since_scrub = 0u64;
                         while let Some(mut batch) = queue.pop() {
                             // Detach reply sinks first: `process_batch`
                             // reorders output relative to input, so
@@ -74,6 +76,20 @@ impl WorkerPool {
                             for resp in out {
                                 let sink = sinks.remove(&resp.id);
                                 route_response(&responses, sink, resp);
+                            }
+                            // Background scrub: the worker owns its
+                            // replica exclusively, so scrubbing between
+                            // batches never races a search. A backend
+                            // without a scrub policy answers with a typed
+                            // error, which simply skips the pass.
+                            if let Some(every) = scrub_every_batches {
+                                batches_since_scrub += 1;
+                                if batches_since_scrub >= every.max(1) {
+                                    batches_since_scrub = 0;
+                                    if let Ok(report) = backend.scrub() {
+                                        stats.record_scrub(&report, &backend.stats());
+                                    }
+                                }
                             }
                         }
                     })

@@ -140,6 +140,22 @@ impl McamBlock {
         idx
     }
 
+    /// Overwrite the cell *levels* of an already-programmed string in
+    /// place, leaving its variation factors untouched and consuming **no**
+    /// RNG draws. This is the fault-overlay / scrub-rewrite hook
+    /// (DESIGN.md §Reliability): the engine computes the corrupted (or
+    /// healed) levels through the pure-hash
+    /// [`crate::device::faults::FaultState`] and materializes them here,
+    /// so applying or clearing faults never perturbs the seeded
+    /// program-variation or read-noise streams.
+    pub fn rewrite_cells(&mut self, idx: usize, cells: &[u8; CELLS_PER_STRING]) {
+        assert!(idx < self.programmed, "rewrite of unprogrammed string {idx}");
+        for (l, &s) in cells.iter().enumerate() {
+            assert!(s <= 3, "cell level {s} out of range");
+            self.levels[l * self.capacity + idx] = s;
+        }
+    }
+
     /// Programmed levels of string `idx`, gathered across the cell
     /// planes (test/debug).
     pub fn string_levels(&self, idx: usize) -> [u8; CELLS_PER_STRING] {

@@ -1,9 +1,34 @@
 //! Failure injection: NAND reliability effects beyond Gaussian variation
 //! (§2.3's "non-ideal effects", extended per [16, 17] — retention loss,
-//! stuck cells, read disturb). Used by the ablation experiments to probe
-//! how far each encoding's reliability margin stretches.
+//! stuck cells, read disturb).
+//!
+//! Two layers live here (DESIGN.md §Reliability):
+//!
+//! * [`FaultModel`] — the rate parameters (validated at the API edge:
+//!   every probability in `[0, 1]`, the read-time trio summing to ≤ 1).
+//!   The legacy [`FaultModel::corrupt_string`] draw-per-cell path is kept
+//!   for the block-level unit tests.
+//! * [`FaultState`] — *persistent, progressive* fault state. Every
+//!   corruption decision is a **pure hash** of
+//!   `(fault seed, physical string key, cell, program epoch)` through
+//!   [`crate::testutil::derive_seed`], never a sequential RNG draw, so
+//!
+//!   - stuck cells are durable across reprogramming (keyed without the
+//!     epoch — rewriting a string lands on the same defective cells),
+//!   - retention drift ages monotonically on a logical clock (a cell
+//!     drifts once `1 − (1−p)^age` passes its per-cell threshold) and is
+//!     healed by reprogramming (the epoch bump redraws thresholds with
+//!     zero age),
+//!   - read disturb accumulates with the *actual sense count* booked by
+//!     the honest iteration accounting, and likewise resets on reprogram,
+//!   - the no-fault path consumes **zero** RNG draws, so seeded clean
+//!     runs stay bitwise identical to a build without this module.
+//!
+//! [`ScrubConfig`] parameterizes the online scrubbing / spare-remap pass
+//! ([`crate::search::engine::SearchEngine::scrub`]).
 
-use crate::testutil::Rng;
+use crate::search::api::EngineError;
+use crate::testutil::{derive_seed, Rng};
 use crate::CELLS_PER_STRING;
 
 /// A fault model applied to programmed cell levels at read time.
@@ -13,24 +38,68 @@ pub struct FaultModel {
     pub stuck_low: f64,
     /// Probability a cell is stuck at level 3 (program-state defect).
     pub stuck_high: f64,
-    /// Probability a cell drifts one level toward 0 (retention loss).
+    /// Probability a cell drifts one level toward 0 (retention loss) —
+    /// under [`FaultState`] this is the per-logical-tick rate, compounded
+    /// as `1 − (1−p)^age` since the string was last programmed.
     pub retention_drift: f64,
+    /// Per-sense probability a cell is soft-programmed one level *up*
+    /// (read disturb), compounded as `1 − (1−p)^senses` over the senses
+    /// the string actually absorbed since its last program.
+    pub read_disturb: f64,
 }
 
 impl FaultModel {
-    pub const NONE: FaultModel =
-        FaultModel { stuck_low: 0.0, stuck_high: 0.0, retention_drift: 0.0 };
+    pub const NONE: FaultModel = FaultModel {
+        stuck_low: 0.0,
+        stuck_high: 0.0,
+        retention_drift: 0.0,
+        read_disturb: 0.0,
+    };
 
     /// Mild end-of-life profile.
     pub fn worn() -> FaultModel {
-        FaultModel { stuck_low: 0.002, stuck_high: 0.002, retention_drift: 0.02 }
+        FaultModel {
+            stuck_low: 0.002,
+            stuck_high: 0.002,
+            retention_drift: 0.02,
+            read_disturb: 0.0,
+        }
     }
 
     pub fn is_none(&self) -> bool {
         *self == Self::NONE
     }
 
-    /// Apply the model to a string's programmed levels (in place).
+    /// Validate the rate parameters: each probability must be a finite
+    /// value in `[0, 1]`, and the mutually exclusive read-time draws
+    /// (`stuck_low + stuck_high + retention_drift`) must sum to ≤ 1.
+    /// `stuck_low = 1.1` used to silently stick *every* cell and negative
+    /// rates never fired — both are now typed [`EngineError::InvalidConfig`].
+    pub fn validate(&self) -> Result<(), EngineError> {
+        for (name, p) in [
+            ("stuck_low", self.stuck_low),
+            ("stuck_high", self.stuck_high),
+            ("retention_drift", self.retention_drift),
+            ("read_disturb", self.read_disturb),
+        ] {
+            if !p.is_finite() || !(0.0..=1.0).contains(&p) {
+                return Err(EngineError::InvalidConfig(format!(
+                    "fault probability {name} = {p} must be in [0, 1]"
+                )));
+            }
+        }
+        let sum = self.stuck_low + self.stuck_high + self.retention_drift;
+        if sum > 1.0 {
+            return Err(EngineError::InvalidConfig(format!(
+                "stuck_low + stuck_high + retention_drift = {sum} exceeds 1"
+            )));
+        }
+        Ok(())
+    }
+
+    /// Apply the model to a string's programmed levels (in place), one
+    /// RNG draw per cell. Legacy block-level path (program-time only, no
+    /// persistence); the engine serves faults through [`FaultState`].
     /// Returns the number of corrupted cells.
     pub fn corrupt_string(&self, cells: &mut [u8; CELLS_PER_STRING], rng: &mut Rng) -> usize {
         if self.is_none() {
@@ -58,6 +127,187 @@ impl FaultModel {
     }
 }
 
+/// Domain-separation salts for the independent per-cell hash streams.
+const STUCK_SALT: u64 = 0x57;
+const DRIFT_SALT: u64 = 0xD12F7;
+const DISTURB_SALT: u64 = 0xD157;
+
+/// What a cell is stuck at, if anything.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StuckAt {
+    Free,
+    Low,
+    High,
+}
+
+/// Persistent fault state for one engine: rate model + seed + logical
+/// retention clock. Per-string bookkeeping (program epoch, age and sense
+/// counters) lives with the slot table in the engine; this type answers
+/// "what does physical string `key` read as, given that bookkeeping" as
+/// a pure function — replaying a campaign from the same seed is bitwise.
+#[derive(Debug, Clone, Copy)]
+pub struct FaultState {
+    pub model: FaultModel,
+    /// Fault stream seed (derive it from the engine seed so one
+    /// `EngineConfig::with_seed` value still pins the whole run).
+    pub seed: u64,
+    /// Logical retention clock, advanced by
+    /// [`crate::search::engine::SearchEngine::advance_age`].
+    pub age: u64,
+}
+
+impl FaultState {
+    pub fn new(model: FaultModel, seed: u64) -> FaultState {
+        FaultState { model, seed, age: 0 }
+    }
+
+    pub fn is_none(&self) -> bool {
+        self.model.is_none()
+    }
+
+    /// Uniform `[0, 1)` hash of `(salt-domain seed, string key, cell,
+    /// extra)` — the per-cell threshold draw.
+    fn unit_hash(&self, salt: u64, key: u64, cell: u64, extra: u64) -> f64 {
+        let h = derive_seed(derive_seed(derive_seed(self.seed ^ salt, key), cell), extra);
+        (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// The durable defect at `(key, cell)`. Keyed **without** the program
+    /// epoch: reprogramming the string lands on the same stuck cells —
+    /// only remapping to a different physical key escapes them.
+    pub fn stuck_at(&self, key: u64, cell: usize) -> StuckAt {
+        if self.model.stuck_low == 0.0 && self.model.stuck_high == 0.0 {
+            return StuckAt::Free;
+        }
+        let u = self.unit_hash(STUCK_SALT, key, cell as u64, 0);
+        if u < self.model.stuck_low {
+            StuckAt::Low
+        } else if u < self.model.stuck_low + self.model.stuck_high {
+            StuckAt::High
+        } else {
+            StuckAt::Free
+        }
+    }
+
+    /// Count of stuck cells on a string (remap-policy input).
+    pub fn stuck_cells(&self, key: u64) -> usize {
+        (0..CELLS_PER_STRING)
+            .filter(|&c| self.stuck_at(key, c) != StuckAt::Free)
+            .count()
+    }
+
+    /// Read `intended` through the fault overlay: retention drift (one
+    /// level down after `age_since_program` logical ticks beat the cell's
+    /// threshold), then read disturb (one level up after `senses` reads
+    /// beat it), then stuck-at defects override everything. Pure — no RNG
+    /// stream is consumed. Returns `(cells, corrupted_count)`.
+    pub fn read_string(
+        &self,
+        key: u64,
+        epoch: u32,
+        age_since_program: u64,
+        senses: u64,
+        intended: &[u8; CELLS_PER_STRING],
+    ) -> ([u8; CELLS_PER_STRING], usize) {
+        let mut out = *intended;
+        if self.is_none() {
+            return (out, 0);
+        }
+        let drift_p = cumulative(self.model.retention_drift, age_since_program);
+        let disturb_p = cumulative(self.model.read_disturb, senses);
+        let mut corrupted = 0usize;
+        for (c, cell) in out.iter_mut().enumerate() {
+            let want = *cell;
+            if drift_p > 0.0
+                && *cell > 0
+                && self.unit_hash(DRIFT_SALT, key, c as u64, epoch as u64) < drift_p
+            {
+                *cell -= 1;
+            }
+            if disturb_p > 0.0
+                && *cell < 3
+                && self.unit_hash(DISTURB_SALT, key, c as u64, epoch as u64) < disturb_p
+            {
+                *cell += 1;
+            }
+            match self.stuck_at(key, c) {
+                StuckAt::Low => *cell = 0,
+                StuckAt::High => *cell = 3,
+                StuckAt::Free => {}
+            }
+            if *cell != want {
+                corrupted += 1;
+            }
+        }
+        (out, corrupted)
+    }
+}
+
+/// `1 − (1−p)^n`: probability at least one of `n` independent trials at
+/// rate `p` fired — monotone in `n`, so aging never un-drifts a cell.
+fn cumulative(p: f64, n: u64) -> f64 {
+    if p <= 0.0 || n == 0 {
+        0.0
+    } else if p >= 1.0 {
+        1.0
+    } else {
+        1.0 - (1.0 - p).powf(n as f64)
+    }
+}
+
+/// Online-scrubbing policy knobs (`[scrub]` TOML section; DESIGN.md
+/// §Reliability). Scrubbing is opt-in: a default-constructed engine
+/// reserves no spares and programs no canaries, keeping the clean path
+/// bitwise identical to builds without the reliability layer.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScrubConfig {
+    /// Known-pattern canary strings per shard, re-sensed by every scrub
+    /// pass to estimate margin loss.
+    pub canaries: usize,
+    /// Spare slots per shard for remapping strings with persistent stuck
+    /// faults.
+    pub spares: usize,
+    /// Canary cell-match fraction below which the shard is `Degraded`.
+    pub margin_threshold: f64,
+    /// Remap a slot to a spare once this many of its cells are stuck
+    /// (reprogramming cannot heal stuck cells; light damage is cheaper
+    /// to tolerate than to burn a spare on).
+    pub remap_stuck_cells: usize,
+}
+
+impl Default for ScrubConfig {
+    fn default() -> Self {
+        ScrubConfig {
+            canaries: 4,
+            spares: 2,
+            margin_threshold: 0.9,
+            remap_stuck_cells: 1,
+        }
+    }
+}
+
+impl ScrubConfig {
+    pub fn validate(&self) -> Result<(), EngineError> {
+        if !self.margin_threshold.is_finite() || !(0.0..=1.0).contains(&self.margin_threshold) {
+            return Err(EngineError::InvalidConfig(format!(
+                "scrub margin_threshold = {} must be in [0, 1]",
+                self.margin_threshold
+            )));
+        }
+        if self.canaries == 0 {
+            return Err(EngineError::InvalidConfig(
+                "scrub needs at least one canary string per shard".to_string(),
+            ));
+        }
+        if self.remap_stuck_cells == 0 {
+            return Err(EngineError::InvalidConfig(
+                "remap_stuck_cells must be >= 1 (0 would remap healthy strings)".to_string(),
+            ));
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -72,7 +322,7 @@ mod tests {
 
     #[test]
     fn stuck_low_zeroes_cells() {
-        let model = FaultModel { stuck_low: 1.0, stuck_high: 0.0, retention_drift: 0.0 };
+        let model = FaultModel { stuck_low: 1.0, ..FaultModel::NONE };
         let mut rng = Rng::new(2);
         let mut cells = [3u8; CELLS_PER_STRING];
         let n = model.corrupt_string(&mut cells, &mut rng);
@@ -82,7 +332,7 @@ mod tests {
 
     #[test]
     fn retention_drifts_one_level_down() {
-        let model = FaultModel { stuck_low: 0.0, stuck_high: 0.0, retention_drift: 1.0 };
+        let model = FaultModel { retention_drift: 1.0, ..FaultModel::NONE };
         let mut rng = Rng::new(3);
         let mut cells = [2u8; CELLS_PER_STRING];
         model.corrupt_string(&mut cells, &mut rng);
@@ -95,7 +345,7 @@ mod tests {
 
     #[test]
     fn corruption_rate_tracks_probability() {
-        let model = FaultModel { stuck_low: 0.05, stuck_high: 0.0, retention_drift: 0.0 };
+        let model = FaultModel { stuck_low: 0.05, ..FaultModel::NONE };
         let mut rng = Rng::new(4);
         let mut total = 0usize;
         let trials = 2000;
@@ -105,5 +355,105 @@ mod tests {
         }
         let rate = total as f64 / (trials * CELLS_PER_STRING) as f64;
         assert!((rate - 0.05).abs() < 0.01, "rate {rate}");
+    }
+
+    #[test]
+    fn validation_rejects_out_of_range_rates() {
+        assert!(FaultModel::NONE.validate().is_ok());
+        assert!(FaultModel::worn().validate().is_ok());
+        for bad in [
+            FaultModel { stuck_low: 1.1, ..FaultModel::NONE },
+            FaultModel { stuck_high: -0.2, ..FaultModel::NONE },
+            FaultModel { retention_drift: f64::NAN, ..FaultModel::NONE },
+            FaultModel { read_disturb: f64::INFINITY, ..FaultModel::NONE },
+            FaultModel {
+                stuck_low: 0.5,
+                stuck_high: 0.4,
+                retention_drift: 0.2,
+                read_disturb: 0.0,
+            },
+        ] {
+            assert!(
+                matches!(bad.validate(), Err(EngineError::InvalidConfig(_))),
+                "{bad:?} must be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn stuck_cells_survive_reprogramming() {
+        let state = FaultState::new(
+            FaultModel { stuck_low: 0.2, stuck_high: 0.2, ..FaultModel::NONE },
+            0xFA017,
+        );
+        let intended = [2u8; CELLS_PER_STRING];
+        let (epoch0, n0) = state.read_string(9, 0, 0, 0, &intended);
+        assert!(n0 > 0, "40% stuck rate must hit a 24-cell string");
+        // epoch bump (reprogram) lands on the same defects
+        let (epoch5, n5) = state.read_string(9, 5, 0, 0, &intended);
+        assert_eq!(epoch0, epoch5);
+        assert_eq!(n0, n5);
+        // a different physical key escapes them (almost surely differs)
+        let (other, _) = state.read_string(10, 0, 0, 0, &intended);
+        assert_ne!(epoch0, other);
+    }
+
+    #[test]
+    fn retention_is_monotone_in_age_and_healed_by_epoch_bump() {
+        let state = FaultState::new(
+            FaultModel { retention_drift: 0.05, ..FaultModel::NONE },
+            0xA6E,
+        );
+        let intended = [3u8; CELLS_PER_STRING];
+        let mut drifted_prev = 0usize;
+        for age in [0u64, 1, 5, 20, 80] {
+            let (_, drifted) = state.read_string(3, 0, age, 0, &intended);
+            assert!(drifted >= drifted_prev, "aging must never heal drift");
+            drifted_prev = drifted;
+        }
+        assert!(drifted_prev > 0, "80 ticks at 5%/tick must drift something");
+        // reprogramming at the same age resets the since-program clock
+        let (healed, n) = state.read_string(3, 1, 0, 0, &intended);
+        assert_eq!(n, 0);
+        assert_eq!(healed, intended);
+    }
+
+    #[test]
+    fn read_disturb_accumulates_with_senses_and_shifts_up() {
+        let state = FaultState::new(
+            FaultModel { read_disturb: 0.001, ..FaultModel::NONE },
+            0xD15,
+        );
+        let intended = [1u8; CELLS_PER_STRING];
+        let (fresh, n_fresh) = state.read_string(7, 0, 0, 0, &intended);
+        assert_eq!((fresh, n_fresh), (intended, 0));
+        let (worn, n_worn) = state.read_string(7, 0, 0, 5000, &intended);
+        assert!(n_worn > 0, "5000 senses at 1e-3/sense must disturb");
+        for (w, i) in worn.iter().zip(&intended) {
+            assert!(w >= i, "disturb shifts levels up, never down");
+        }
+        // reset by reprogram (sense counter restarts under a new epoch)
+        let (reset, n_reset) = state.read_string(7, 1, 0, 0, &intended);
+        assert_eq!((reset, n_reset), (intended, 0));
+    }
+
+    #[test]
+    fn overlay_is_a_pure_function() {
+        let state = FaultState::new(FaultModel::worn(), 0xB17);
+        let intended = [2u8; CELLS_PER_STRING];
+        let a = state.read_string(42, 3, 17, 900, &intended);
+        let b = state.read_string(42, 3, 17, 900, &intended);
+        assert_eq!(a, b, "same inputs, same corruption — replay is bitwise");
+    }
+
+    #[test]
+    fn scrub_config_validation() {
+        assert!(ScrubConfig::default().validate().is_ok());
+        let bad_margin = ScrubConfig { margin_threshold: 1.5, ..Default::default() };
+        assert!(matches!(bad_margin.validate(), Err(EngineError::InvalidConfig(_))));
+        let no_canary = ScrubConfig { canaries: 0, ..Default::default() };
+        assert!(matches!(no_canary.validate(), Err(EngineError::InvalidConfig(_))));
+        let zero_remap = ScrubConfig { remap_stuck_cells: 0, ..Default::default() };
+        assert!(matches!(zero_remap.validate(), Err(EngineError::InvalidConfig(_))));
     }
 }

@@ -32,13 +32,20 @@ pub struct EnergyModel {
     pub e_cell_pj: f64,
     /// Per SA threshold comparison on one string.
     pub e_sa_pj: f64,
+    /// Per cell *programmed* (ISPP pulse train) — scrub reprogramming and
+    /// spare remapping book program/erase cycles through this.
+    pub e_program_pj: f64,
+    /// Per string erased (block-erase cost amortized per string).
+    pub e_erase_pj: f64,
 }
 
 impl Default for EnergyModel {
     fn default() -> Self {
         // [14]-plausible magnitudes: ~10 fJ/cell search event, ~0.5 pJ per
-        // SA comparison. Only ratios matter for the reproduced figures.
-        EnergyModel { e_cell_pj: 0.01, e_sa_pj: 0.5 }
+        // SA comparison; programming is orders costlier than sensing
+        // (ISPP pulse trains vs a single drive). Only ratios matter for
+        // the reproduced figures.
+        EnergyModel { e_cell_pj: 0.01, e_sa_pj: 0.5, e_program_pj: 10.0, e_erase_pj: 50.0 }
     }
 }
 
@@ -49,6 +56,11 @@ impl EnergyModel {
         strings as f64
             * (CELLS_PER_STRING as f64 * self.e_cell_pj + ladder_len as f64 * self.e_sa_pj)
     }
+
+    /// Energy of one erase + reprogram cycle over `strings` strings.
+    pub fn program_energy_pj(&self, strings: u64) -> f64 {
+        strings as f64 * (CELLS_PER_STRING as f64 * self.e_program_pj + self.e_erase_pj)
+    }
 }
 
 /// Running energy account for a workload.
@@ -57,12 +69,22 @@ pub struct EnergyAccount {
     pub total_pj: f64,
     pub sensed_strings: u64,
     pub searches: u64,
+    /// Strings rewritten by scrub passes (program/erase cycles).
+    pub programmed_strings: u64,
 }
 
 impl EnergyAccount {
     pub fn add_sense(&mut self, model: &EnergyModel, strings: u64, ladder_len: usize) {
         self.total_pj += model.sense_energy_pj(strings, ladder_len);
         self.sensed_strings += strings;
+    }
+
+    /// Book an erase + reprogram cycle over `strings` strings (the scrub
+    /// path's P/E cost — folded into the same per-search ledger so a
+    /// scrubbed campaign's energy numbers stay honest).
+    pub fn add_program(&mut self, model: &EnergyModel, strings: u64) {
+        self.total_pj += model.program_energy_pj(strings);
+        self.programmed_strings += strings;
     }
 
     pub fn finish_search(&mut self) {
@@ -86,9 +108,24 @@ mod tests {
 
     #[test]
     fn sense_energy_formula() {
-        let m = EnergyModel { e_cell_pj: 0.01, e_sa_pj: 0.5 };
+        let m = EnergyModel { e_cell_pj: 0.01, e_sa_pj: 0.5, ..Default::default() };
         // 10 strings: 10 * (24*0.01 + 16*0.5) = 10 * 8.24 = 82.4 pJ
         assert_close(m.sense_energy_pj(10, 16), 82.4, 1e-12);
+    }
+
+    #[test]
+    fn program_energy_books_pe_cycles() {
+        let m = EnergyModel::default();
+        let mut acc = EnergyAccount::default();
+        acc.add_program(&m, 16);
+        acc.finish_search();
+        assert_eq!(acc.programmed_strings, 16);
+        // 16 * (24*10 + 50) = 4640 pJ
+        assert_close(acc.total_pj, 4640.0, 1e-12);
+        assert!(
+            m.program_energy_pj(1) > m.sense_energy_pj(1, 32),
+            "a P/E cycle must dominate even a deep sense"
+        );
     }
 
     #[test]

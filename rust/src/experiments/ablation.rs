@@ -105,13 +105,13 @@ pub fn fault_injection(
         ("worn", FaultModel::worn()),
         (
             "heavy-retention",
-            FaultModel { stuck_low: 0.0, stuck_high: 0.0, retention_drift: 0.10 },
+            FaultModel { retention_drift: 0.10, ..FaultModel::NONE },
         ),
     ] {
         let cfg = EngineConfig::new(Encoding::Mtmc, 8, SearchMode::Avss, clip)
             .with_seed(settings.seed);
         let mut engine = SearchEngine::new(cfg, ds.dims, settings.n_way * settings.k_shot)?;
-        engine.set_faults(faults);
+        engine.set_faults(faults)?;
         let mut acc = AccuracyMeter::default();
         for ep_idx in 0..settings.episodes {
             let mut rng = episode_rng(settings.seed, ep_idx as u64);

@@ -1,0 +1,512 @@
+//! `fig_faults` — the reliability campaign (DESIGN.md §Reliability; this
+//! figure has no paper counterpart — it measures the fault/scrub story
+//! §2.3 motivates but never quantifies).
+//!
+//! A deliberately *hard* synthetic episode (64 tightly packed classes,
+//! 48-d, protos drawn close together so device damage actually moves
+//! decisions) is programmed into an otherwise-ideal engine. Each sweep
+//! point runs the same protocol:
+//!
+//! 1. **clean** — a fresh engine with no faults, the accuracy ceiling;
+//! 2. **faulty** — a fresh engine with a [`FaultModel`] installed and the
+//!    retention clock advanced; its accuracy is the *no-scrub* outcome
+//!    (the scrub-off arm of the scrub axis);
+//! 3. **scrubbed** — the same damaged engine after one
+//!    [`SearchEngine::scrub`] pass (canary re-sense, reprogram drifted
+//!    slots, remap persistently-stuck slots to spares).
+//!
+//! `recovered_frac` is the fraction of the fault-induced accuracy loss
+//! the scrub pass won back. Retention drift heals completely (the epoch
+//! bump redraws thresholds at zero age); stuck damage only heals up to
+//! the spare budget, so the stuck-heavy rows honestly report partial
+//! recovery and `Degraded` shards (served majority-of-3).
+//!
+//! Axes: fault scenario (stuck-at rate, retention age, read disturb,
+//! the `worn()` end-of-life profile) × encoding (MTMC / B4E / SRE) ×
+//! controller (HAT vs non-HAT, trained on the rust-native synth set).
+
+use crate::device::faults::{FaultModel, ScrubConfig};
+use crate::encoding::Encoding;
+use crate::hat;
+use crate::metrics::CsvTable;
+use crate::search::engine::{EngineConfig, SearchEngine};
+use crate::search::{SearchMode, SearchRequest, ShardHealth};
+use crate::testutil::Rng;
+use anyhow::Result;
+
+/// Episode shape: same scale as `fig_cascade` (512 slots, 64-way) but
+/// with the classes packed close together — protos jittered around a
+/// common center instead of spanning the quantizer range — so the clean
+/// margin is thin enough for §2.3-scale faults to cost accuracy.
+const DIMS: usize = 48;
+const CLASSES: usize = 64;
+const PER_CLASS: usize = 8;
+const QUERIES_PER_CLASS: usize = 4;
+const CL: usize = 8;
+const CLIP: f64 = 3.0;
+const PROTO_CENTER: f64 = 1.6;
+const PROTO_SPREAD: f64 = 0.12;
+const JITTER: f64 = 0.05;
+
+/// Logical retention age the `worn()` acceptance point is measured at:
+/// `1 − 0.98^80 ≈ 0.80` of cells past their drift threshold.
+const WORN_AGE: u64 = 80;
+
+/// One measured reliability point.
+#[derive(Debug, Clone)]
+pub struct FaultPoint {
+    pub label: String,
+    pub encoding: String,
+    /// Controller axis: `true` for hardware-aware-trained embeddings.
+    pub hat: bool,
+    pub faults: FaultModel,
+    /// Logical retention age at measurement time.
+    pub age: u64,
+    /// Accuracy ceiling (fresh engine, no faults).
+    pub clean_accuracy_pct: f64,
+    /// Accuracy with faults installed and no scrub — the no-scrub arm.
+    pub faulty_accuracy_pct: f64,
+    /// Accuracy after one scrub pass on the damaged engine.
+    pub scrubbed_accuracy_pct: f64,
+    /// Fraction of the fault-induced loss the scrub won back (1.0 when
+    /// nothing was lost).
+    pub recovered_frac: f64,
+    pub strings_scrubbed: u64,
+    pub slots_reprogrammed: u64,
+    pub slots_remapped: u64,
+    pub spares_remaining: usize,
+    pub canary_margin: f64,
+    /// Shards left `Degraded` after the scrub (spares exhausted / thin
+    /// margin) — these serve majority-of-3.
+    pub degraded_after_scrub: usize,
+}
+
+/// The full campaign.
+#[derive(Debug, Clone)]
+pub struct FaultSweep {
+    pub points: Vec<FaultPoint>,
+}
+
+impl FaultSweep {
+    /// The MTMC full-precision `worn()` acceptance point.
+    pub fn worn_mtmc(&self) -> Option<&FaultPoint> {
+        self.points
+            .iter()
+            .find(|p| !p.hat && p.encoding == "mtmc" && p.faults == FaultModel::worn())
+    }
+}
+
+/// Deterministic hard episode: tightly packed class protos, members and
+/// queries jittered around them.
+fn synth_episode(seed: u64) -> (Vec<Vec<f32>>, Vec<u32>, Vec<Vec<f32>>, Vec<u32>) {
+    let mut rng = Rng::new(seed);
+    let mut support = Vec::with_capacity(CLASSES * PER_CLASS);
+    let mut labels = Vec::with_capacity(CLASSES * PER_CLASS);
+    let mut queries = Vec::with_capacity(CLASSES * QUERIES_PER_CLASS);
+    let mut truth = Vec::with_capacity(CLASSES * QUERIES_PER_CLASS);
+    for c in 0..CLASSES {
+        let proto: Vec<f64> =
+            (0..DIMS).map(|_| PROTO_CENTER + PROTO_SPREAD * rng.gaussian()).collect();
+        for _ in 0..PER_CLASS {
+            support.push(jitter(&proto, &mut rng));
+            labels.push(c as u32);
+        }
+        for _ in 0..QUERIES_PER_CLASS {
+            queries.push(jitter(&proto, &mut rng));
+            truth.push(c as u32);
+        }
+    }
+    (support, labels, queries, truth)
+}
+
+fn jitter(proto: &[f64], rng: &mut Rng) -> Vec<f32> {
+    proto.iter().map(|&p| (p + JITTER * rng.gaussian()).max(0.0) as f32).collect()
+}
+
+/// Top-1 accuracy of `engine` over the query set.
+fn accuracy_pct(
+    engine: &mut SearchEngine,
+    queries: &[Vec<f32>],
+    truth: &[u32],
+) -> Result<f64> {
+    let mut correct = 0usize;
+    for (query, &want) in queries.iter().zip(truth) {
+        let response = engine.search(&SearchRequest::new(query))?;
+        if response.top().map(|h| h.label) == Some(want) {
+            correct += 1;
+        }
+    }
+    Ok(100.0 * correct as f64 / truth.len() as f64)
+}
+
+fn fresh_engine(
+    encoding: Encoding,
+    cl: usize,
+    clip: f64,
+    dims: usize,
+    refs: &[&[f32]],
+    labels: &[u32],
+    seed: u64,
+) -> Result<SearchEngine> {
+    let cfg = EngineConfig::new(encoding, cl, SearchMode::Avss, clip).ideal().with_seed(seed);
+    let mut engine = SearchEngine::new(cfg, dims, refs.len())?;
+    engine.program_support(refs, labels)?;
+    Ok(engine)
+}
+
+/// Run the clean / faulty / scrubbed protocol for one configuration.
+#[allow(clippy::too_many_arguments)]
+fn measure_point(
+    label: &str,
+    encoding: Encoding,
+    hat: bool,
+    cl: usize,
+    clip: f64,
+    dims: usize,
+    refs: &[&[f32]],
+    labels: &[u32],
+    queries: &[Vec<f32>],
+    truth: &[u32],
+    faults: FaultModel,
+    age: u64,
+    seed: u64,
+) -> Result<FaultPoint> {
+    // clean ceiling: a separate engine, so its sense counts never feed
+    // the damaged engine's read-disturb accumulation
+    let mut clean = fresh_engine(encoding, cl, clip, dims, refs, labels, seed)?;
+    let clean_accuracy_pct = accuracy_pct(&mut clean, queries, truth)?;
+
+    // faulty: same seed (bitwise-identical programming), faults on,
+    // retention clock advanced, no scrub — the no-scrub arm
+    let mut engine = fresh_engine(encoding, cl, clip, dims, refs, labels, seed)?;
+    engine.set_faults(faults)?;
+    engine.advance_age(age);
+    let faulty_accuracy_pct = accuracy_pct(&mut engine, queries, truth)?;
+
+    // scrubbed: one pass over the same damaged engine, then re-measure
+    engine.set_scrub(Some(ScrubConfig::default()))?;
+    let report = engine.scrub()?;
+    let scrubbed_accuracy_pct = accuracy_pct(&mut engine, queries, truth)?;
+
+    let lost = clean_accuracy_pct - faulty_accuracy_pct;
+    let recovered_frac = if lost > 1e-9 {
+        (scrubbed_accuracy_pct - faulty_accuracy_pct) / lost
+    } else {
+        1.0
+    };
+    let degraded_after_scrub =
+        engine.shard_health().iter().filter(|h| **h == ShardHealth::Degraded).count();
+    Ok(FaultPoint {
+        label: label.to_string(),
+        encoding: encoding.name().to_string(),
+        hat,
+        faults,
+        age,
+        clean_accuracy_pct,
+        faulty_accuracy_pct,
+        scrubbed_accuracy_pct,
+        recovered_frac,
+        strings_scrubbed: report.strings_scrubbed,
+        slots_reprogrammed: report.slots_reprogrammed,
+        slots_remapped: report.slots_remapped,
+        spares_remaining: report.spares_remaining,
+        canary_margin: report.canary_margin,
+        degraded_after_scrub,
+    })
+}
+
+/// The device-axis scenarios (label, rates, retention age). `worn()` at
+/// [`WORN_AGE`] is the acceptance point.
+fn scenarios() -> Vec<(&'static str, FaultModel, u64)> {
+    vec![
+        ("no faults", FaultModel::NONE, 0),
+        (
+            "stuck 1%",
+            FaultModel { stuck_low: 0.005, stuck_high: 0.005, ..FaultModel::NONE },
+            0,
+        ),
+        ("drift age 20", FaultModel { retention_drift: 0.02, ..FaultModel::NONE }, 20),
+        (
+            "disturb",
+            FaultModel { read_disturb: 5e-5, ..FaultModel::NONE },
+            0,
+        ),
+        ("worn age 80", FaultModel::worn(), WORN_AGE),
+    ]
+}
+
+/// Device sweep: every scenario at MTMC, plus the worn acceptance
+/// scenario across the alternative encodings.
+fn device_points(seed: u64) -> Result<Vec<FaultPoint>> {
+    let (support, labels, queries, truth) = synth_episode(seed);
+    let refs: Vec<&[f32]> = support.iter().map(|e| e.as_slice()).collect();
+    let mut points = Vec::new();
+    for (label, faults, age) in scenarios() {
+        points.push(measure_point(
+            label,
+            Encoding::Mtmc,
+            false,
+            CL,
+            CLIP,
+            DIMS,
+            &refs,
+            &labels,
+            &queries,
+            &truth,
+            faults,
+            age,
+            seed,
+        )?);
+    }
+    for encoding in [Encoding::B4e, Encoding::Sre] {
+        points.push(measure_point(
+            "worn age 80",
+            encoding,
+            false,
+            CL,
+            CLIP,
+            DIMS,
+            &refs,
+            &labels,
+            &queries,
+            &truth,
+            FaultModel::worn(),
+            WORN_AGE,
+            seed,
+        )?);
+    }
+    Ok(points)
+}
+
+/// Controller axis: train the rust-native synth controller twice (`std`
+/// vs the paper's `hat_avss`) and measure both embedding spaces at the
+/// worn acceptance scenario. Support/queries split the embedded test
+/// classes `k_shot`-first.
+fn hat_points(seed: u64) -> Result<Vec<FaultPoint>> {
+    let synth = hat::data::generate(hat::data::SynthSpec::default_spec(), seed);
+    let cfg = hat::SYNTH_CONTROLLER;
+    let settings = crate::config::TrainSettings::synth();
+    let (pretrained, _) = hat::pretrain(&synth.train, &cfg, &settings, seed, &mut |_| {});
+    let mut points = Vec::new();
+    for variant in ["std", "hat_avss"] {
+        let params = hat::meta_train(
+            &pretrained,
+            &synth.train,
+            &cfg,
+            &settings,
+            variant,
+            seed,
+            &mut |_| {},
+        )?;
+        let train_emb = hat::embed_all(&params, &cfg, &synth.train);
+        let clip = crate::quant::calibrate_clip(&train_emb, crate::quant::CLIP_SIGMA);
+        let test_emb = hat::embed_all(&params, &cfg, &synth.test);
+        let dim = cfg.embed_dim;
+        let row = |r: usize| &test_emb[r * dim..(r + 1) * dim];
+
+        let mut refs: Vec<&[f32]> = Vec::new();
+        let mut labels: Vec<u32> = Vec::new();
+        let mut queries: Vec<Vec<f32>> = Vec::new();
+        let mut truth: Vec<u32> = Vec::new();
+        for class in synth.test.classes() {
+            for (i, &r) in synth.test.class_rows(class).iter().enumerate() {
+                if i < settings.k_shot + 2 {
+                    refs.push(row(r));
+                    labels.push(class);
+                } else {
+                    queries.push(row(r).to_vec());
+                    truth.push(class);
+                }
+            }
+        }
+        let hardware_aware = variant != "std";
+        points.push(measure_point(
+            &format!("worn age 80 ({variant})"),
+            Encoding::Mtmc,
+            hardware_aware,
+            settings.hat_cl,
+            clip,
+            dim,
+            &refs,
+            &labels,
+            &queries,
+            &truth,
+            FaultModel::worn(),
+            WORN_AGE,
+            seed,
+        )?);
+    }
+    Ok(points)
+}
+
+/// Run the full campaign. Deterministic for a fixed seed (ideal device;
+/// every fault decision is a pure hash of the fault stream).
+pub fn run(seed: u64) -> Result<FaultSweep> {
+    let mut points = device_points(seed)?;
+    points.extend(hat_points(seed)?);
+    Ok(FaultSweep { points })
+}
+
+/// Render the campaign as a text table.
+pub fn render(sweep: &FaultSweep) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "fig_faults — fault / scrub campaign ({} slots, {}-way packed synth + HAT synth)\n",
+        CLASSES * PER_CLASS,
+        CLASSES
+    ));
+    out.push_str(
+        "scenario                  | enc  | hat | clean% | faulty% | scrubbed% | recovered | reprog | remap | margin | degraded\n",
+    );
+    for p in &sweep.points {
+        out.push_str(&format!(
+            "{:<25} | {:<4} | {:<3} | {:>6.2} | {:>7.2} | {:>9.2} | {:>9.2} | {:>6} | {:>5} | {:>6.3} | {:>8}\n",
+            p.label,
+            p.encoding,
+            if p.hat { "yes" } else { "no" },
+            p.clean_accuracy_pct,
+            p.faulty_accuracy_pct,
+            p.scrubbed_accuracy_pct,
+            p.recovered_frac,
+            p.slots_reprogrammed,
+            p.slots_remapped,
+            p.canary_margin,
+            p.degraded_after_scrub,
+        ));
+    }
+    out
+}
+
+/// Machine-readable CSV rows (mirrors [`render`]).
+pub fn csv(sweep: &FaultSweep) -> CsvTable {
+    let mut table = CsvTable::new(&[
+        "label",
+        "encoding",
+        "hat",
+        "stuck_low",
+        "stuck_high",
+        "retention_drift",
+        "read_disturb",
+        "age",
+        "clean_accuracy_pct",
+        "faulty_accuracy_pct",
+        "scrubbed_accuracy_pct",
+        "recovered_frac",
+        "strings_scrubbed",
+        "slots_reprogrammed",
+        "slots_remapped",
+        "spares_remaining",
+        "canary_margin",
+        "degraded_after_scrub",
+    ]);
+    for p in &sweep.points {
+        table.row(&[
+            p.label.clone(),
+            p.encoding.clone(),
+            (p.hat as u8).to_string(),
+            format!("{}", p.faults.stuck_low),
+            format!("{}", p.faults.stuck_high),
+            format!("{}", p.faults.retention_drift),
+            format!("{}", p.faults.read_disturb),
+            p.age.to_string(),
+            format!("{:.3}", p.clean_accuracy_pct),
+            format!("{:.3}", p.faulty_accuracy_pct),
+            format!("{:.3}", p.scrubbed_accuracy_pct),
+            format!("{:.4}", p.recovered_frac),
+            p.strings_scrubbed.to_string(),
+            p.slots_reprogrammed.to_string(),
+            p.slots_remapped.to_string(),
+            p.spares_remaining.to_string(),
+            format!("{:.4}", p.canary_margin),
+            p.degraded_after_scrub.to_string(),
+        ]);
+    }
+    table
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The fig_faults acceptance criteria on the MTMC acceptance points
+    /// only (the full campaign, with the encoding and HAT axes, runs
+    /// through the `experiment` CLI).
+    #[test]
+    fn scrub_recovers_worn_losses_at_mtmc() {
+        let seed = 0xFA0175;
+        let (support, labels, queries, truth) = synth_episode(seed);
+        let refs: Vec<&[f32]> = support.iter().map(|e| e.as_slice()).collect();
+
+        // no-fault anchor: installing a NONE model + scrub machinery
+        // must not move accuracy at all (the no-fault path consumes no
+        // fault RNG, so all three measurements are the same bitwise run)
+        let none = measure_point(
+            "no faults",
+            Encoding::Mtmc,
+            false,
+            CL,
+            CLIP,
+            DIMS,
+            &refs,
+            &labels,
+            &queries,
+            &truth,
+            FaultModel::NONE,
+            0,
+            seed,
+        )
+        .unwrap();
+        assert_eq!(none.clean_accuracy_pct, none.faulty_accuracy_pct);
+        assert_eq!(none.clean_accuracy_pct, none.scrubbed_accuracy_pct);
+        assert_eq!(none.slots_reprogrammed, 0);
+        assert_eq!(none.slots_remapped, 0);
+        assert_eq!(none.canary_margin, 1.0);
+        assert!(none.clean_accuracy_pct > 80.0, "episode too hard: {:.2}%", none.clean_accuracy_pct);
+
+        // worn() at MTMC full precision: the faults must cost real
+        // accuracy, and one scrub pass must win at least half of it back
+        let worn = measure_point(
+            "worn age 80",
+            Encoding::Mtmc,
+            false,
+            CL,
+            CLIP,
+            DIMS,
+            &refs,
+            &labels,
+            &queries,
+            &truth,
+            FaultModel::worn(),
+            WORN_AGE,
+            seed,
+        )
+        .unwrap();
+        let lost = worn.clean_accuracy_pct - worn.faulty_accuracy_pct;
+        assert!(
+            lost >= 1.0,
+            "worn profile cost only {lost:.2} points ({:.2}% -> {:.2}%)",
+            worn.clean_accuracy_pct,
+            worn.faulty_accuracy_pct
+        );
+        let recovered = worn.scrubbed_accuracy_pct - worn.faulty_accuracy_pct;
+        assert!(
+            recovered >= 0.5 * lost - 1e-9,
+            "scrub recovered {recovered:.2} of {lost:.2} lost points \
+             (clean {:.2}% faulty {:.2}% scrubbed {:.2}%)",
+            worn.clean_accuracy_pct,
+            worn.faulty_accuracy_pct,
+            worn.scrubbed_accuracy_pct
+        );
+        assert!(worn.strings_scrubbed > 0);
+        assert!(worn.slots_reprogrammed > 0, "age-80 drift must force reprograms");
+
+        // rendering (text + CSV) covers the measured points
+        let sweep = FaultSweep { points: vec![none, worn] };
+        assert!(sweep.worn_mtmc().is_some());
+        let text = render(&sweep);
+        assert!(text.contains("worn age 80"));
+        assert!(text.contains("recovered"));
+        let table = csv(&sweep);
+        assert!(table.render().contains("scrubbed_accuracy_pct"));
+    }
+}

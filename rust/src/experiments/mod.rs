@@ -10,6 +10,7 @@ pub mod fig6;
 pub mod fig7;
 pub mod fig9;
 pub mod fig_cascade;
+pub mod fig_faults;
 pub mod headline;
 pub mod table1;
 pub mod table2;

@@ -13,6 +13,10 @@
 //!                [--max-connections N] [--max-in-flight N]
 //!                [--idle-timeout-ms MS] [--addr-file path]
 //!                [--serve-seconds S]
+//!                [--faults] [--stuck-low P] [--stuck-high P]
+//!                [--retention-drift P] [--read-disturb P]
+//!                [--scrub] [--scrub-canaries N] [--scrub-spares N]
+//!                [--scrub-margin F] [--scrub-every N]
 //! mcamvss bench-client --connect HOST:PORT [--clients N] [--requests M]
 //!                [--dims D] [--top-k K] [--shutdown-server]
 //! mcamvss train  [--smoke] [--variant std|hat_svss|hat_avss]
@@ -144,6 +148,53 @@ fn load_config(args: &Args) -> Result<Config> {
         }
         cfg.cascade = Some(cascade);
     }
+    // --faults enables the worn-device profile; each rate key overrides
+    // one probability (out-of-range rates rejected by cfg.validate()).
+    let fault_keys = ["stuck-low", "stuck-high", "retention-drift", "read-disturb"];
+    if args.flag("faults") || fault_keys.iter().any(|k| args.opt(k).is_some()) {
+        let mut faults = cfg.faults.take().unwrap_or_default();
+        let parse_rate = |key: &str| -> Result<Option<f64>> {
+            match args.opt(key) {
+                None => Ok(None),
+                Some(raw) => raw
+                    .parse()
+                    .map(Some)
+                    .with_context(|| format!("--{key}: expected float, got {raw:?}")),
+            }
+        };
+        if let Some(v) = parse_rate("stuck-low")? {
+            faults.stuck_low = v;
+        }
+        if let Some(v) = parse_rate("stuck-high")? {
+            faults.stuck_high = v;
+        }
+        if let Some(v) = parse_rate("retention-drift")? {
+            faults.retention_drift = v;
+        }
+        if let Some(v) = parse_rate("read-disturb")? {
+            faults.read_disturb = v;
+        }
+        cfg.faults = Some(faults);
+    }
+    let scrub_keys = ["scrub-canaries", "scrub-spares", "scrub-margin", "scrub-every"];
+    if args.flag("scrub") || scrub_keys.iter().any(|k| args.opt(k).is_some()) {
+        let mut scrub = cfg.scrub.take().unwrap_or_default();
+        if let Some(v) = args.opt_usize("scrub-canaries")? {
+            scrub.canaries = v;
+        }
+        if let Some(v) = args.opt_usize("scrub-spares")? {
+            scrub.spares = v;
+        }
+        if let Some(raw) = args.opt("scrub-margin") {
+            scrub.margin_threshold = raw
+                .parse()
+                .with_context(|| format!("--scrub-margin: expected float, got {raw:?}"))?;
+        }
+        if let Some(v) = args.opt_usize("scrub-every")? {
+            scrub.every_batches = v as u64;
+        }
+        cfg.scrub = Some(scrub);
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -253,6 +304,7 @@ fn build_server(
             max_batch: cfg.max_batch,
             ..Default::default()
         },
+        scrub_every_batches: cfg.scrub.as_ref().map(|s| s.every_batches),
     };
     let cascade = cfg
         .cascade
@@ -266,16 +318,33 @@ fn build_server(
             cascade.iteration_budget
         );
     }
+    if let Some(faults) = &cfg.faults {
+        println!(
+            "faults: stuck {}/{}, retention_drift {}, read_disturb {} (persistent, seed-derived)",
+            faults.stuck_low, faults.stuck_high, faults.retention_drift, faults.read_disturb
+        );
+    }
+    if let Some(scrub) = &cfg.scrub {
+        println!(
+            "scrub: {} canaries + {} spares per shard, margin threshold {}, every {} batches",
+            scrub.canaries, scrub.spares, scrub.margin_threshold, scrub.every_batches
+        );
+    }
     let server = match args.opt("backend").unwrap_or("mcam") {
         "mcam" => {
             let engine_cfg = EngineConfig::new(cfg.encoding, cfg.cl, cfg.mode, clip)
                 .with_variation(cfg.variation)
                 .with_seed(cfg.seed)
                 .with_shards(cfg.shards);
-            Server::start_cascade(
+            let setup = mcamvss::coordinator::EngineSetup {
+                cascade,
+                faults: cfg.faults.as_ref().map(|f| f.to_model()),
+                scrub: cfg.scrub.as_ref().map(|s| s.to_scrub()),
+            };
+            Server::start_configured(
                 coord_cfg,
                 engine_cfg,
-                cascade,
+                setup,
                 dims,
                 support,
                 labels,
@@ -285,6 +354,9 @@ fn build_server(
         "float" => {
             if cascade.is_some() {
                 bail!("--cascade requires the mcam backend (the float baseline has no device)");
+            }
+            if cfg.faults.is_some() || cfg.scrub.is_some() {
+                bail!("--faults/--scrub require the mcam backend (no flash media to wear out)");
             }
             let metric = match args.opt("metric") {
                 Some(name) => Metric::from_name(name)
@@ -359,9 +431,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         truth.push(label);
         server.submit_with(Payload::Embedding(ds.embedding(row).to_vec()), options);
     }
+    let stats = server.stats_handle();
     let responses = server.shutdown();
     let wall = t0.elapsed();
     report_serve(&responses, &truth, wall, top_k);
+    println!("server stats: {}", stats.to_json().render());
     Ok(())
 }
 
@@ -497,8 +571,10 @@ fn cmd_serve_listen(args: &Args, cfg: &Config, addr: &str) -> Result<()> {
 
     println!("shutting down: draining connections, then the coordinator");
     let stats = net.net_stats_handle();
+    let server_stats = net.server_stats_handle();
     let leftover = net.shutdown();
     println!("net stats: {}", stats.to_json().render());
+    println!("server stats: {}", server_stats.to_json().render());
     if !leftover.is_empty() {
         // only in-process submissions land here; wire responses were
         // routed to their connections
@@ -555,7 +631,7 @@ fn cmd_bench_client(args: &Args) -> Result<()> {
     for c in 0..clients {
         let addr = addr.clone();
         handles.push(std::thread::spawn(
-            move || -> std::result::Result<(Vec<f64>, usize, usize), String> {
+            move || -> std::result::Result<(Vec<f64>, usize, usize, f64), String> {
                 let mut client = WireClient::connect(addr.as_str())
                     .map_err(|e| format!("client {c}: connect {addr}: {e}"))?;
                 client
@@ -564,14 +640,16 @@ fn cmd_bench_client(args: &Args) -> Result<()> {
                 let mut rng = mcamvss::testutil::Rng::new(0xBE7C + c as u64);
                 let mut latencies_us = Vec::with_capacity(requests);
                 let (mut ok, mut shed) = (0usize, 0usize);
+                let mut min_coverage = 1.0f64;
                 for i in 0..requests {
                     let id = (c * requests + i) as u64;
                     let data: Vec<f32> = (0..dims).map(|_| rng.gaussian() as f32).collect();
                     let options = SearchOptions { top_k, ..Default::default() };
                     let sent = Instant::now();
                     match client.search(id, QueryKind::Embedding, data, options) {
-                        Ok(Frame::Response { id: got, .. }) if got == id => {
+                        Ok(Frame::Response { id: got, response }) if got == id => {
                             latencies_us.push(sent.elapsed().as_secs_f64() * 1e6);
+                            min_coverage = min_coverage.min(response.coverage);
                             ok += 1;
                         }
                         Ok(Frame::Error { id: got, .. }) if got == id => {
@@ -591,22 +669,24 @@ fn cmd_bench_client(args: &Args) -> Result<()> {
                         Err(e) => return Err(format!("client {c} request {id}: {e}")),
                     }
                 }
-                Ok((latencies_us, ok, shed))
+                Ok((latencies_us, ok, shed, min_coverage))
             },
         ));
     }
 
     let mut hist = LatencyHistogram::default();
     let (mut ok_total, mut shed_total) = (0usize, 0usize);
+    let mut min_coverage = 1.0f64;
     let mut failures: Vec<String> = Vec::new();
     for handle in handles {
         match handle.join() {
-            Ok(Ok((latencies_us, ok, shed))) => {
+            Ok(Ok((latencies_us, ok, shed, min_cov))) => {
                 for us in latencies_us {
                     hist.record_us(us);
                 }
                 ok_total += ok;
                 shed_total += shed;
+                min_coverage = min_coverage.min(min_cov);
             }
             Ok(Err(msg)) => failures.push(msg),
             Err(_) => failures.push("client thread panicked".into()),
@@ -632,6 +712,12 @@ fn cmd_bench_client(args: &Args) -> Result<()> {
         "answered {answered}/{expected} ({ok_total} ok, {shed_total} shed) in {wall:.2}s  \
          ({throughput:.0} req/s)"
     );
+    if min_coverage < 1.0 {
+        println!(
+            "coverage: some responses were partial (min {min_coverage:.3}) — the fleet served \
+             with degraded/failed shards"
+        );
+    }
     println!(
         "latency µs: mean {:.0}  p50 {:.0}  p90 {:.0}  p99 {:.0}  max {:.0}",
         hist.mean_us(),
@@ -655,6 +741,7 @@ fn cmd_bench_client(args: &Args) -> Result<()> {
         .field("dims", Json::num(dims as f64))
         .field("ok", Json::num(ok_total as f64))
         .field("shed", Json::num(shed_total as f64))
+        .field("min_coverage", Json::num(min_coverage))
         .field("wall_s", Json::num(wall))
         .field("throughput_req_per_s", Json::num(throughput))
         .field("latency_us", latency)
@@ -799,6 +886,18 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         println!("{}", experiments::fig_cascade::render(&sweep));
         write_csv("fig_cascade", &experiments::fig_cascade::csv(&sweep))?;
         if filter == "fig_cascade" {
+            return Ok(());
+        }
+    }
+
+    // fig_faults sweeps the reliability axes (stuck-at x retention age x
+    // read disturb x encoding x HAT x scrub) on the same built-in synth
+    // episode — also artifact-free.
+    if want("fig_faults") {
+        let sweep = experiments::fig_faults::run(0xFA0175)?;
+        println!("{}", experiments::fig_faults::render(&sweep));
+        write_csv("fig_faults", &experiments::fig_faults::csv(&sweep))?;
+        if filter == "fig_faults" {
             return Ok(());
         }
     }

@@ -190,10 +190,12 @@ pub struct Hit {
 ///     hits: vec![Hit { index: 3, label: 7, score: 41.0 }],
 ///     iterations: 2,
 ///     device_latency_us: 100.0,
+///     coverage: 1.0,
 ///     full_scores: None,
 ///     cascade: None,
 /// };
 /// assert_eq!(response.top().unwrap().label, 7);
+/// assert!(!response.is_partial());
 /// ```
 #[derive(Debug, Clone, PartialEq)]
 pub struct SearchResponse {
@@ -211,6 +213,13 @@ pub struct SearchResponse {
     /// Simulated device latency of this search, in microseconds
     /// (`iterations × 50 µs` — only iterations actually executed).
     pub device_latency_us: f64,
+    /// Fraction of live support slots this answer actually searched
+    /// (DESIGN.md §Reliability). `1.0` on a healthy fleet; below `1.0`
+    /// when `Failed` shards were excluded from sensing and ranking — a
+    /// typed partial result instead of a panic or a silent drop. Always
+    /// in `(0, 1]` (a fleet with *every* shard failed is
+    /// [`EngineError::EmptySupport`]).
+    pub coverage: f64,
     /// Dense per-slot scores, present iff the request opted in. Includes
     /// tombstoned slots (their strings are still physically sensed until
     /// the next rebalance) — rank only via `hits`. On the cascade path
@@ -227,6 +236,67 @@ impl SearchResponse {
     /// The best hit, if any.
     pub fn top(&self) -> Option<&Hit> {
         self.hits.first()
+    }
+
+    /// True iff failed shards excluded part of the support set from this
+    /// answer (`coverage < 1.0`).
+    pub fn is_partial(&self) -> bool {
+        self.coverage < 1.0
+    }
+}
+
+/// Health of one storage shard (DESIGN.md §Reliability's state machine).
+///
+/// `Healthy → Degraded` when a scrub pass measures canary margin below
+/// the configured threshold or finds stuck slots it cannot remap (spares
+/// exhausted); `Degraded → Healthy` when a later pass measures clean.
+/// `Failed` is entered only by an explicit
+/// [`VectorSearchBackend::fail_shard`] (an operator decision / fatal
+/// device event, not something a margin estimate should infer) and left
+/// when a scrub pass erases and rebuilds the shard.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardHealth {
+    /// Serving normally.
+    Healthy,
+    /// Serving, but margin is thin: reads are re-sensed majority-of-3.
+    Degraded,
+    /// Excluded from sensing and ranking; answers carry
+    /// [`SearchResponse::coverage`] < 1.0 until scrub rebuilds it.
+    Failed,
+}
+
+/// What one scrub pass did (per [`VectorSearchBackend::scrub`] call,
+/// summed over shards).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScrubReport {
+    /// Worst per-shard canary cell-match fraction observed this pass
+    /// (1.0 = every canary cell read back exactly).
+    pub canary_margin: f64,
+    /// Support strings re-sensed and compared against their intended
+    /// levels.
+    pub strings_scrubbed: u64,
+    /// Slots rewritten in place (drift/disturb damage — reprogramming
+    /// heals it).
+    pub slots_reprogrammed: u64,
+    /// Slots remapped to spare strings (persistent stuck damage —
+    /// reprogramming cannot heal it).
+    pub slots_remapped: u64,
+    /// Spare strings still unassigned across the fleet.
+    pub spares_remaining: usize,
+    /// `Failed` shards erased and rebuilt back to `Healthy`.
+    pub shards_rebuilt: usize,
+}
+
+impl Default for ScrubReport {
+    fn default() -> Self {
+        ScrubReport {
+            canary_margin: 1.0,
+            strings_scrubbed: 0,
+            slots_reprogrammed: 0,
+            slots_remapped: 0,
+            spares_remaining: 0,
+            shards_rebuilt: 0,
+        }
     }
 }
 
@@ -268,6 +338,34 @@ pub struct BackendStats {
     /// Average search energy so far, in nanojoules (0 for software
     /// backends).
     pub nj_per_search: f64,
+    /// Per-shard health (empty for software backends — they have no
+    /// device to degrade).
+    pub shard_health: Vec<ShardHealth>,
+    /// Scrub passes completed since construction.
+    pub scrub_passes: u64,
+    /// Support strings re-sensed by scrub passes.
+    pub strings_scrubbed: u64,
+    /// Slots rewritten in place by scrub passes.
+    pub slots_reprogrammed: u64,
+    /// Slots remapped to spare strings by scrub passes.
+    pub slots_remapped: u64,
+    /// Spare strings still unassigned (0 when scrubbing is off).
+    pub spares_remaining: usize,
+    /// Worst canary margin from the most recent scrub pass (1.0 before
+    /// the first pass, and always for software backends).
+    pub canary_margin: f64,
+}
+
+impl BackendStats {
+    /// Shards currently `Failed`.
+    pub fn failed_shards(&self) -> usize {
+        self.shard_health.iter().filter(|h| **h == ShardHealth::Failed).count()
+    }
+
+    /// Shards currently `Degraded`.
+    pub fn degraded_shards(&self) -> usize {
+        self.shard_health.iter().filter(|h| **h == ShardHealth::Degraded).count()
+    }
 }
 
 /// An owned, validated support set: `n × dims` embeddings with one label
@@ -470,6 +568,25 @@ pub trait VectorSearchBackend {
     /// Aggregate statistics for monitoring.
     fn stats(&self) -> BackendStats;
 
+    /// Run one maintenance pass over the backend's storage: re-sense
+    /// canaries, heal drifted strings, remap persistently-stuck ones to
+    /// spares, rebuild `Failed` shards (DESIGN.md §Reliability). Software
+    /// backends have nothing to scrub: the default is a no-op reporting a
+    /// clean margin.
+    fn scrub(&mut self) -> Result<ScrubReport, EngineError> {
+        Ok(ScrubReport::default())
+    }
+
+    /// Force shard `shard` into [`ShardHealth::Failed`]: it stops being
+    /// sensed and ranked, and responses carry
+    /// [`SearchResponse::coverage`] < 1.0 until a scrub pass rebuilds it.
+    /// Backends without failable shards return a typed error.
+    fn fail_shard(&mut self, shard: usize) -> Result<(), EngineError> {
+        Err(EngineError::InvalidConfig(format!(
+            "backend has no failable shard {shard}"
+        )))
+    }
+
     /// Single-request convenience over [`Self::search_batch`].
     fn search(&mut self, request: &SearchRequest<'_>) -> Result<SearchResponse, EngineError> {
         let mut responses = self.search_batch(std::slice::from_ref(request))?;
@@ -626,12 +743,14 @@ pub fn decode_request_body(r: &mut ByteReader<'_>) -> Result<WireRequest, BinioE
     Ok(WireRequest { kind, data, options: SearchOptions { top_k, mode, full_scores } })
 }
 
-/// Response body: `iterations u64 | device_latency_us f64 | hits (count
-/// u32 + [index u64 | label u32 | score f64]) | full_scores (present u8
-/// [+ f64 vec]) | cascade (present u8 [+ stages])`.
+/// Response body: `iterations u64 | device_latency_us f64 | coverage f64
+/// | hits (count u32 + [index u64 | label u32 | score f64]) |
+/// full_scores (present u8 [+ f64 vec]) | cascade (present u8 [+
+/// stages])`.
 pub fn encode_response_body(resp: &SearchResponse, w: &mut ByteWriter) {
     w.u64(resp.iterations);
     w.f64(resp.device_latency_us);
+    w.f64(resp.coverage);
     w.u32(resp.hits.len() as u32);
     for hit in &resp.hits {
         w.u64(hit.index as u64);
@@ -674,6 +793,7 @@ fn decode_flag(v: u8, what: &'static str) -> Result<bool, BinioError> {
 pub fn decode_response_body(r: &mut ByteReader<'_>) -> Result<SearchResponse, BinioError> {
     let iterations = r.u64()?;
     let device_latency_us = r.f64()?;
+    let coverage = r.f64()?;
     // each hit is 20 bytes on the wire, so the declared count is
     // validated against the bytes actually present before allocating
     let n_hits = r.capped_count(20)?;
@@ -705,7 +825,7 @@ pub fn decode_response_body(r: &mut ByteReader<'_>) -> Result<SearchResponse, Bi
         None
     };
     r.expect_end()?;
-    Ok(SearchResponse { hits, iterations, device_latency_us, full_scores, cascade })
+    Ok(SearchResponse { hits, iterations, device_latency_us, coverage, full_scores, cascade })
 }
 
 /// Error body: `code u16 | a u64 | b u64 | message (len u32 + utf-8)`.
@@ -896,6 +1016,7 @@ mod tests {
             hits: vec![hit(3, 41.0), hit(0, 12.5)],
             iterations: 6,
             device_latency_us: 300.0,
+            coverage: 0.75,
             full_scores: Some(vec![41.0, -2.0, 0.0, 12.5]),
             cascade: Some(CascadeStats {
                 stage_sensed: vec![16, 4],
@@ -919,6 +1040,7 @@ mod tests {
             hits: vec![],
             iterations: 0,
             device_latency_us: 0.0,
+            coverage: 1.0,
             full_scores: None,
             cascade: None,
         };
@@ -987,6 +1109,7 @@ mod tests {
         let mut w = ByteWriter::new();
         w.u64(0);
         w.f64(0.0);
+        w.f64(1.0); // coverage
         w.u32(u32::MAX); // hits "count"
         let bytes = w.into_bytes();
         assert!(matches!(

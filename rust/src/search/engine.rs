@@ -40,7 +40,7 @@
 //! bit-identical — `rust/tests/test_determinism.rs` locks this in.
 
 use crate::device::block::McamBlock;
-use crate::device::faults::FaultModel;
+use crate::device::faults::{FaultModel, FaultState, ScrubConfig};
 use crate::device::sense::SenseLadder;
 use crate::device::timing::{SearchTiming, SEARCH_ITERATION_US};
 use crate::device::variation::VariationModel;
@@ -50,8 +50,8 @@ use crate::energy::{EnergyAccount, EnergyModel};
 use crate::mapping::VectorLayout;
 use crate::quant::{QuantScheme, QuantSpec};
 use crate::search::api::{
-    rank_top_k, BackendStats, EngineError, Hit, SearchRequest, SearchResponse, SupportSet,
-    VectorSearchBackend,
+    rank_top_k, BackendStats, EngineError, Hit, ScrubReport, SearchRequest, SearchResponse,
+    ShardHealth, SupportSet, VectorSearchBackend,
 };
 use crate::search::cascade::{CascadeConfig, CascadeStats, Shortlist};
 use crate::search::SearchMode;
@@ -71,6 +71,19 @@ pub const REBALANCE_DEAD_FRACTION: f64 = 0.25;
 /// comfortably dwarf a spawn/join; below that, fan-out overhead
 /// dominates. Shared by the plain and cascade paths.
 const PARALLEL_SENSE_FLOOR: usize = 4096;
+
+/// Stream index for deriving the engine's fault-overlay seed from
+/// [`EngineConfig::seed`] — one seed still pins a whole reliability
+/// campaign bitwise.
+const FAULT_STREAM: u64 = 0xFA0175;
+
+/// Physical-key address ranges of the fault overlay. A slot's initial
+/// placement keys its strings as `slot · strings_per_vector + column`;
+/// remapped spares and canaries live in disjoint ranges, so remapping a
+/// slot really escapes the old strings' stuck cells (which are keyed by
+/// physical position, not by slot number).
+const SPARE_KEY_BASE: u64 = 1 << 32;
+const CANARY_KEY_BASE: u64 = 1 << 48;
 
 /// Engine configuration (one per experiment point).
 #[derive(Debug, Clone, Copy)]
@@ -136,6 +149,45 @@ struct SupportEntry {
     alive: bool,
 }
 
+/// Per-slot reliability bookkeeping feeding the fault overlay
+/// ([`FaultState::read_string`]). Deterministic shard rebuilds
+/// (append/rebalance) **preserve** this record — they re-place the same
+/// logical content, and the overlay must not shift under them (the
+/// append-vs-bulk bitwise contract). Only `program`/`append` create it
+/// and only scrub rewrites advance the epoch.
+#[derive(Debug, Clone, Copy)]
+struct SlotFaultMeta {
+    /// Program epoch: bumped by scrub reprogram/remap. Drift thresholds
+    /// and disturb damage are keyed per epoch, so a bump heals both;
+    /// stuck cells are keyed *without* it and persist.
+    epoch: u32,
+    /// Engine logical age when the slot was last physically programmed.
+    programmed_at_age: u64,
+    /// Engine sweep counter when the slot was last physically programmed
+    /// (read disturb accumulates over the sweeps since).
+    programmed_at_sweep: u64,
+    /// Physical placement of the slot's string group. Initially the
+    /// global slot index at creation; remapping moves it into the
+    /// [`SPARE_KEY_BASE`] range.
+    phys: u64,
+}
+
+/// Known canary pattern `k`: a fixed 4-level ramp, phase-shifted per
+/// canary so the set exercises every level in every cell position.
+fn canary_pattern(k: usize) -> [u8; CELLS_PER_STRING] {
+    let mut cells = [0u8; CELLS_PER_STRING];
+    for (c, cell) in cells.iter_mut().enumerate() {
+        *cell = ((c + k) % 4) as u8;
+    }
+    cells
+}
+
+/// Elementwise majority vote for the bounded re-sense retry: the median
+/// of three reads of the same string range.
+fn median3(a: f64, b: f64, c: f64) -> f64 {
+    a.max(b).min(a.min(b).max(c))
+}
+
 /// One resolved stage of an installed cascade schedule: every `None`
 /// knob of the [`CascadeConfig`] stage replaced by the engine's
 /// configured value, the stage ladder built, and the word-line iteration
@@ -178,6 +230,14 @@ struct Shard {
     base: usize,
     /// Slots programmed into this shard (live + tombstoned).
     n: usize,
+    /// Health state (DESIGN.md §Reliability): `Failed` shards are
+    /// excluded from sensing and ranking, `Degraded` ones answer through
+    /// the majority-of-3 re-sense.
+    health: ShardHealth,
+    /// Canary cell-match fraction from the most recent scrub pass.
+    canary_margin: f64,
+    /// Spare strings this shard has burned on remaps.
+    spares_used: usize,
 }
 
 impl Shard {
@@ -266,6 +326,36 @@ impl Shard {
     }
 }
 
+/// Health-aware shard scoring for the plain path (free function so both
+/// the threaded and inline dispatches share it): a `Failed` shard is not
+/// sensed at all — its zeroed partials are excluded from ranking by the
+/// caller — and a `Degraded` shard gets the bounded majority-of-3
+/// re-sense (three full reads, elementwise median), which suppresses
+/// transient sense noise at 3× the sense cost (booked by the caller).
+fn score_shard_batch(
+    shard: &mut Shard,
+    wordlines: &[(SearchMode, Vec<[u8; CELLS_PER_STRING]>)],
+    groups: usize,
+    word_length: usize,
+    weights: &[f64],
+    ladder: &SenseLadder,
+) -> Vec<f64> {
+    match shard.health {
+        ShardHealth::Failed => vec![0f64; wordlines.len() * shard.n],
+        ShardHealth::Healthy => shard.score_batch(wordlines, groups, word_length, weights, ladder),
+        ShardHealth::Degraded => {
+            let a = shard.score_batch(wordlines, groups, word_length, weights, ladder);
+            let b = shard.score_batch(wordlines, groups, word_length, weights, ladder);
+            let c = shard.score_batch(wordlines, groups, word_length, weights, ladder);
+            a.iter()
+                .zip(&b)
+                .zip(&c)
+                .map(|((&a, &b), &c)| median3(a, b, c))
+                .collect()
+        }
+    }
+}
+
 /// A programmed, block-sharded MCAM search engine.
 ///
 /// ```
@@ -292,7 +382,29 @@ pub struct SearchEngine {
     entries: Vec<SupportEntry>,
     /// Tombstoned slots awaiting rebalance.
     dead: usize,
-    faults: FaultModel,
+    /// Persistent fault overlay (rates + seed + logical retention clock).
+    fault_state: FaultState,
+    /// Per-slot reliability bookkeeping, parallel to `entries`.
+    slot_meta: Vec<SlotFaultMeta>,
+    /// Next unused physical placement id (never reused across compaction,
+    /// so two slots can never share strings).
+    next_phys: u64,
+    /// Next unused spare string-group id.
+    next_spare: u64,
+    /// Full scans served — the per-string sense count since a string's
+    /// last program, for read-disturb accumulation. Advanced per request
+    /// (each full scan senses every programmed string once); the cascade
+    /// path's refine-stage subsets and the majority-of-3 retry are
+    /// folded into this same counter as a documented approximation.
+    sweeps: u64,
+    /// Scrub policy; `None` disables the maintenance path entirely.
+    scrub_cfg: Option<ScrubConfig>,
+    scrub_passes: u64,
+    strings_scrubbed: u64,
+    slots_reprogrammed: u64,
+    slots_remapped: u64,
+    /// Worst per-shard canary margin from the most recent scrub pass.
+    canary_margin: f64,
     support_spec: QuantSpec,
     svss_query_spec: QuantSpec,
     avss_query_spec: QuantSpec,
@@ -359,6 +471,9 @@ impl SearchEngine {
                 ),
                 base: 0,
                 n: 0,
+                health: ShardHealth::Healthy,
+                canary_margin: 1.0,
+                spares_used: 0,
             })
             .collect();
         Ok(SearchEngine {
@@ -369,7 +484,17 @@ impl SearchEngine {
             weights: cfg.encoding.accumulation_weights(cfg.cl),
             entries: Vec::new(),
             dead: 0,
-            faults: FaultModel::NONE,
+            fault_state: FaultState::new(FaultModel::NONE, derive_seed(cfg.seed, FAULT_STREAM)),
+            slot_meta: Vec::new(),
+            next_phys: 0,
+            next_spare: 0,
+            sweeps: 0,
+            scrub_cfg: None,
+            scrub_passes: 0,
+            strings_scrubbed: 0,
+            slots_reprogrammed: 0,
+            slots_remapped: 0,
+            canary_margin: 1.0,
             support_spec: QuantSpec::new(support_levels, cfg.clip),
             svss_query_spec: QuantSpec::new(
                 QuantScheme::Symmetric.query_levels(support_levels),
@@ -496,13 +621,228 @@ impl SearchEngine {
         &self.timing
     }
 
-    /// Configure fault injection for subsequently programmed support
-    /// (reliability ablations; call before [`Self::program`]). Applies to
-    /// every shard at its next (re)programming.
-    pub fn set_faults(&mut self, faults: FaultModel) {
-        self.faults = faults;
-        for shard in &mut self.shards {
-            shard.block.set_faults(faults);
+    /// Install (or clear, with [`FaultModel::NONE`]) the persistent fault
+    /// model. Rates are validated ([`FaultModel::validate`]) and the
+    /// model applies **immediately**: already-programmed shards are
+    /// re-materialized through the new overlay, so a model installed
+    /// after [`Self::program`] corrupts the array from the next sense on
+    /// instead of silently waiting for the next reprogram (the old trap).
+    pub fn set_faults(&mut self, faults: FaultModel) -> Result<(), EngineError> {
+        faults.validate()?;
+        self.fault_state.model = faults;
+        for s in 0..self.shards.len() {
+            self.refresh_shard_overlay(s);
+        }
+        Ok(())
+    }
+
+    /// The installed fault model ([`FaultModel::NONE`] by default).
+    pub fn fault_model(&self) -> FaultModel {
+        self.fault_state.model
+    }
+
+    /// Logical retention clock (ticks since construction).
+    pub fn age(&self) -> u64 {
+        self.fault_state.age
+    }
+
+    /// Advance the logical retention clock by `ticks` (campaign
+    /// harnesses model bake time between query bursts). Strings whose
+    /// drift thresholds the new age crosses read corrupted from the next
+    /// sense on; scrub reprogramming resets a string's since-program age.
+    pub fn advance_age(&mut self, ticks: u64) {
+        if ticks == 0 {
+            return;
+        }
+        self.fault_state.age += ticks;
+        if self.fault_state.model.retention_drift > 0.0 {
+            for s in 0..self.shards.len() {
+                self.refresh_shard_overlay(s);
+            }
+        }
+    }
+
+    /// Install (or clear) the scrub policy. Scrubbing stays fully opt-in:
+    /// with `None` (the default) [`Self::scrub`] is a typed error and the
+    /// engine reserves no spares.
+    pub fn set_scrub(&mut self, scrub: Option<ScrubConfig>) -> Result<(), EngineError> {
+        if let Some(cfg) = &scrub {
+            cfg.validate()?;
+        }
+        self.scrub_cfg = scrub;
+        Ok(())
+    }
+
+    /// The installed scrub policy, if any.
+    pub fn scrub_config(&self) -> Option<ScrubConfig> {
+        self.scrub_cfg
+    }
+
+    /// Per-shard health states.
+    pub fn shard_health(&self) -> Vec<ShardHealth> {
+        self.shards.iter().map(|s| s.health).collect()
+    }
+
+    /// Force shard `shard` into [`ShardHealth::Failed`] (operator
+    /// decision / fatal device event): it stops being sensed and ranked,
+    /// and every response carries [`SearchResponse::coverage`] < 1.0
+    /// until a scrub pass erases and rebuilds it.
+    pub fn fail_shard(&mut self, shard: usize) -> Result<(), EngineError> {
+        if shard >= self.shards.len() {
+            return Err(EngineError::IndexOutOfRange { index: shard, len: self.shards.len() });
+        }
+        self.shards[shard].health = ShardHealth::Failed;
+        Ok(())
+    }
+
+    /// One online scrub pass over every shard (DESIGN.md §Reliability).
+    /// Per shard: (0) a `Failed` shard is erased and rebuilt outright —
+    /// every slot reprograms under a fresh epoch; (1) the shard's canary
+    /// strings are re-sensed against their known patterns to estimate
+    /// margin; (2) every slot is re-sensed and compared with its intended
+    /// levels — slots with ≥ [`ScrubConfig::remap_stuck_cells`] stuck
+    /// cells remap to a spare string group (new physical key escapes the
+    /// defects) while drift/disturb-only damage reprograms in place (the
+    /// epoch bump heals it); (3) health becomes `Degraded` when margin
+    /// falls below the threshold or stuck slots could not be remapped
+    /// (spares exhausted), `Healthy` otherwise. Every canary/slot
+    /// re-sense and every erase + reprogram is booked in the energy
+    /// ledger — scrubbing's P/E cost shows up in `nj_per_search`.
+    ///
+    /// Typed error if no policy is installed ([`Self::set_scrub`]).
+    pub fn scrub(&mut self) -> Result<ScrubReport, EngineError> {
+        let Some(cfg) = self.scrub_cfg else {
+            return Err(EngineError::InvalidConfig(
+                "scrubbing is not configured (install a policy with set_scrub)".into(),
+            ));
+        };
+        let spv = self.layout.strings_per_vector();
+        let age_now = self.fault_state.age;
+        let sweeps_now = self.sweeps;
+        let mut report = ScrubReport::default();
+        let mut worst_margin = 1.0f64;
+        for s in 0..self.shards.len() {
+            // (0) Failed shard: erase + full rebuild under a fresh epoch.
+            if self.shards[s].health == ShardHealth::Failed {
+                let (base, n) = (self.shards[s].base, self.shards[s].n);
+                for meta in &mut self.slot_meta[base..base + n] {
+                    meta.epoch += 1;
+                    meta.programmed_at_age = age_now;
+                    meta.programmed_at_sweep = sweeps_now;
+                }
+                self.shards[s].health = ShardHealth::Healthy;
+                self.rebuild_shard(s);
+                self.energy.add_program(&self.energy_model, (n * spv) as u64);
+                report.shards_rebuilt += 1;
+            }
+            // (1) Canaries: known patterns re-read through the overlay.
+            let mut matched = 0usize;
+            for k in 0..cfg.canaries {
+                let key = CANARY_KEY_BASE + (s * cfg.canaries + k) as u64;
+                let pattern = canary_pattern(k);
+                let (_, corrupted) =
+                    self.fault_state.read_string(key, 0, age_now, sweeps_now, &pattern);
+                matched += CELLS_PER_STRING - corrupted;
+            }
+            let margin = matched as f64 / (cfg.canaries * CELLS_PER_STRING) as f64;
+            self.shards[s].canary_margin = margin;
+            worst_margin = worst_margin.min(margin);
+            self.energy.add_sense(&self.energy_model, cfg.canaries as u64, self.ladder.len());
+
+            // (2) Sweep every slot: re-sense, compare, heal or remap.
+            let (base, n) = (self.shards[s].base, self.shards[s].n);
+            let mut stuck_unremapped = 0usize;
+            for i in base..base + n {
+                let meta = self.slot_meta[i];
+                let age = age_now.saturating_sub(meta.programmed_at_age);
+                let senses = sweeps_now.saturating_sub(meta.programmed_at_sweep);
+                let mut damaged = false;
+                let mut stuck = 0usize;
+                for (column, intended) in self.entries[i].strings.iter().enumerate() {
+                    let key = meta.phys * spv as u64 + column as u64;
+                    let (_, corrupted) =
+                        self.fault_state.read_string(key, meta.epoch, age, senses, intended);
+                    damaged |= corrupted > 0;
+                    stuck += self.fault_state.stuck_cells(key);
+                }
+                report.strings_scrubbed += spv as u64;
+                self.energy.add_sense(&self.energy_model, spv as u64, self.ladder.len());
+                if stuck >= cfg.remap_stuck_cells {
+                    if self.shards[s].spares_used < cfg.spares {
+                        // Remap: a fresh physical key in the spare range
+                        // escapes the stuck cells for good.
+                        self.shards[s].spares_used += 1;
+                        let spare = self.next_spare;
+                        self.next_spare += 1;
+                        let meta = &mut self.slot_meta[i];
+                        meta.phys = SPARE_KEY_BASE + spare;
+                        meta.epoch += 1;
+                        meta.programmed_at_age = age_now;
+                        meta.programmed_at_sweep = sweeps_now;
+                        self.energy.add_program(&self.energy_model, spv as u64);
+                        report.slots_remapped += 1;
+                    } else {
+                        stuck_unremapped += 1;
+                    }
+                } else if damaged {
+                    // Drift/disturb only: reprogramming in place heals it
+                    // (the epoch bump redraws thresholds at age zero).
+                    let meta = &mut self.slot_meta[i];
+                    meta.epoch += 1;
+                    meta.programmed_at_age = age_now;
+                    meta.programmed_at_sweep = sweeps_now;
+                    self.energy.add_program(&self.energy_model, spv as u64);
+                    report.slots_reprogrammed += 1;
+                }
+            }
+            // (3) Health verdict (never *enters* Failed — that is an
+            // explicit operator/event decision via `fail_shard`).
+            self.shards[s].health = if margin < cfg.margin_threshold || stuck_unremapped > 0 {
+                ShardHealth::Degraded
+            } else {
+                ShardHealth::Healthy
+            };
+            report.spares_remaining += cfg.spares - self.shards[s].spares_used;
+            self.refresh_shard_overlay(s);
+        }
+        report.canary_margin = worst_margin;
+        self.canary_margin = worst_margin;
+        self.scrub_passes += 1;
+        self.strings_scrubbed += report.strings_scrubbed;
+        self.slots_reprogrammed += report.slots_reprogrammed;
+        self.slots_remapped += report.slots_remapped;
+        Ok(report)
+    }
+
+    /// Re-materialize shard `s`'s programmed cells through the fault
+    /// overlay: each string's intended levels are rewritten as what the
+    /// overlay says they read as now. Pure hash, zero RNG draws
+    /// ([`McamBlock::rewrite_cells`] does not touch the variation
+    /// stream), so the no-fault path stays bitwise identical to builds
+    /// without the reliability layer.
+    fn refresh_shard_overlay(&mut self, s: usize) {
+        if self.fault_state.is_none() {
+            return;
+        }
+        let (base, n) = (self.shards[s].base, self.shards[s].n);
+        let spv = self.layout.strings_per_vector();
+        let age_now = self.fault_state.age;
+        let sweeps_now = self.sweeps;
+        for i in base..base + n {
+            let meta = self.slot_meta[i];
+            let age = age_now.saturating_sub(meta.programmed_at_age);
+            let senses = sweeps_now.saturating_sub(meta.programmed_at_sweep);
+            for column in 0..spv {
+                let key = meta.phys * spv as u64 + column as u64;
+                let (cells, _) = self.fault_state.read_string(
+                    key,
+                    meta.epoch,
+                    age,
+                    senses,
+                    &self.entries[i].strings[column],
+                );
+                self.shards[s].block.rewrite_cells(column * n + (i - base), &cells);
+            }
         }
     }
 
@@ -549,18 +889,28 @@ impl SearchEngine {
             self.cfg.variation,
             derive_seed(self.cfg.seed, s as u64),
         );
-        block.set_faults(self.faults);
         for column in 0..spv {
             for entry in &self.entries[lo..hi] {
                 block.program_string(&entry.strings[column]);
             }
         }
-        self.shards[s] = Shard { block, base: lo, n: count };
+        // Health, margin and spare accounting survive the rebuild: a
+        // deterministic re-placement is not a repair (`Failed` stays
+        // failed until a scrub pass rebuilds it deliberately).
+        let old = &self.shards[s];
+        let (health, canary_margin, spares_used) =
+            (old.health, old.canary_margin, old.spares_used);
+        self.shards[s] = Shard { block, base: lo, n: count, health, canary_margin, spares_used };
+        self.refresh_shard_overlay(s);
     }
 
     /// Drop tombstoned slots, renumber survivors, and reprogram every
     /// shard (the rebalance step behind [`REBALANCE_DEAD_FRACTION`]).
     fn compact(&mut self) {
+        // The fault bookkeeping travels with its slot through renumbering
+        // (a slot's physical placement key outlives its index).
+        let mut keep = self.entries.iter().map(|e| e.alive);
+        self.slot_meta.retain(|_| keep.next().unwrap());
         self.entries.retain(|e| e.alive);
         self.dead = 0;
         for s in 0..self.shards.len() {
@@ -592,6 +942,15 @@ impl SearchEngine {
             .collect();
         self.entries = entries;
         self.dead = 0;
+        self.slot_meta = (0..self.entries.len())
+            .map(|i| SlotFaultMeta {
+                epoch: 0,
+                programmed_at_age: self.fault_state.age,
+                programmed_at_sweep: self.sweeps,
+                phys: i as u64,
+            })
+            .collect();
+        self.next_phys = self.entries.len() as u64;
         for s in 0..self.shards.len() {
             self.rebuild_shard(s);
         }
@@ -631,6 +990,16 @@ impl SearchEngine {
         }
         let entry = self.encode_entry(embedding, label);
         self.entries.push(entry);
+        self.slot_meta.push(SlotFaultMeta {
+            epoch: 0,
+            programmed_at_age: self.fault_state.age,
+            programmed_at_sweep: self.sweeps,
+            // `next_phys` never reuses a placement (compaction renumbers
+            // slots but retired physical keys stay retired), so an
+            // appended slot can never share strings with a survivor.
+            phys: self.next_phys,
+        });
+        self.next_phys += 1;
         let index = self.entries.len() - 1;
         self.rebuild_shard(index / self.per_shard);
         Ok(index)
@@ -736,12 +1105,37 @@ impl SearchEngine {
                 ));
             }
         }
+        // Graceful degradation: `Failed` shards are excluded from sensing
+        // and ranking, and the response says so (`coverage` < 1.0). A
+        // fleet with nothing left to sense is a typed EmptySupport, never
+        // a confident zero-hit answer.
+        let covered_live = self
+            .entries
+            .iter()
+            .enumerate()
+            .filter(|&(i, e)| {
+                e.alive && self.shards[i / self.per_shard].health != ShardHealth::Failed
+            })
+            .count();
+        if covered_live == 0 {
+            return Err(EngineError::EmptySupport);
+        }
+        let coverage = covered_live as f64 / self.n_vectors() as f64;
+        // Read disturb grows with the sweeps absorbed since each string's
+        // last program: re-materialize once per batch (a scalar call is a
+        // one-query batch, so the disturb clock still advances per
+        // request on the scalar path).
+        if self.fault_state.model.read_disturb > 0.0 {
+            for s in 0..self.shards.len() {
+                self.refresh_shard_overlay(s);
+            }
+        }
         if self.cascade.is_some() {
             // Take the plan out for the duration of the call (no per-batch
             // clone on the hot path) and restore it afterwards; there is
             // no early return in between.
             let plan = self.cascade.take().expect("checked just above");
-            let result = self.search_batch_cascade(&plan, requests);
+            let result = self.search_batch_cascade(&plan, requests, coverage, covered_live);
             self.cascade = Some(plan);
             return result;
         }
@@ -773,12 +1167,12 @@ impl SearchEngine {
         let partials: Vec<Vec<f64>> =
             if self.shards.len() > 1 && sense_events_per_shard >= PARALLEL_SENSE_FLOOR {
                 par_map_mut(&mut self.shards, |_, shard| {
-                    shard.score_batch(wl_ref, groups, w, weights, ladder)
+                    score_shard_batch(shard, wl_ref, groups, w, weights, ladder)
                 })
             } else {
                 self.shards
                     .iter_mut()
-                    .map(|shard| shard.score_batch(wl_ref, groups, w, weights, ladder))
+                    .map(|shard| score_shard_batch(shard, wl_ref, groups, w, weights, ladder))
                     .collect()
             };
 
@@ -794,39 +1188,55 @@ impl SearchEngine {
                 }
             }
             // Honest accounting for the full scan: every programmed
-            // string really is sensed once per search in both modes
-            // (slots·G·W strings through the full ladder), and all of the
-            // mode's word-line iterations execute. The cascade path
-            // counts its own (smaller) actuals per stage.
-            let iterations = Self::mode_iterations(&self.layout, wordlines[qi].0);
+            // string of a non-failed shard really is sensed once per
+            // search in both modes (Degraded shards three times — the
+            // majority retry is real work), and all of the mode's
+            // word-line iterations execute, tripled when any shard
+            // re-senses (shards run in parallel, so the slowest sets the
+            // latency). The cascade path counts its own (smaller)
+            // actuals per stage.
+            let retry =
+                self.shards.iter().any(|s| s.health == ShardHealth::Degraded && s.n > 0);
+            let iterations = Self::mode_iterations(&self.layout, wordlines[qi].0)
+                * if retry { 3 } else { 1 };
             self.timing.add_iterations(iterations);
             self.timing.finish_search();
-            self.energy.add_sense(
-                &self.energy_model,
-                (slots * groups * w) as u64,
-                self.ladder.len(),
-            );
+            let sensed: u64 = self
+                .shards
+                .iter()
+                .map(|s| match s.health {
+                    ShardHealth::Failed => 0,
+                    ShardHealth::Healthy => (s.n * groups * w) as u64,
+                    ShardHealth::Degraded => 3 * (s.n * groups * w) as u64,
+                })
+                .sum();
+            self.energy.add_sense(&self.energy_model, sensed, self.ladder.len());
             self.energy.finish_search();
-            // Clamp to the live slot count: `hits` can never exceed it, and
-            // the clamp keeps a huge client-supplied top_k from asking the
-            // heap for an absurd allocation.
-            let top_k = request.options.top_k.min(self.n_vectors());
+            // Clamp to the covered live slot count: `hits` can never
+            // exceed it, and the clamp keeps a huge client-supplied top_k
+            // from asking the heap for an absurd allocation.
+            let top_k = request.options.top_k.min(covered_live);
             let hits = rank_top_k(
                 top_k,
-                self.entries.iter().enumerate().filter(|(_, e)| e.alive).map(|(i, e)| Hit {
-                    index: i,
-                    label: e.label,
-                    score: scores[i],
-                }),
+                self.entries
+                    .iter()
+                    .enumerate()
+                    .filter(|&(i, e)| {
+                        e.alive
+                            && self.shards[i / self.per_shard].health != ShardHealth::Failed
+                    })
+                    .map(|(i, e)| Hit { index: i, label: e.label, score: scores[i] }),
             );
             responses.push(SearchResponse {
                 hits,
                 iterations,
                 device_latency_us: iterations as f64 * SEARCH_ITERATION_US,
+                coverage,
                 full_scores: if request.options.full_scores { Some(scores) } else { None },
                 cascade: None,
             });
         }
+        self.sweeps += requests.len() as u64;
         Ok(responses)
     }
 
@@ -841,6 +1251,8 @@ impl SearchEngine {
         &mut self,
         plan: &CascadePlan,
         requests: &[SearchRequest<'_>],
+        coverage: f64,
+        covered_live: usize,
     ) -> Result<Vec<SearchResponse>, EngineError> {
         let slots = self.entries.len();
         let groups = self.layout.groups;
@@ -857,8 +1269,13 @@ impl SearchEngine {
             }
 
             // Per-slot state: the most refined score so far and the
-            // deepest stage that sensed the slot (stage 0 senses all).
-            let mut cand: Vec<usize> = (0..slots).collect();
+            // deepest stage that sensed the slot (stage 0 senses every
+            // slot of a non-failed shard; Failed shards never enter the
+            // candidate set, so their strings are neither sensed nor
+            // billed).
+            let mut cand: Vec<usize> = (0..slots)
+                .filter(|&i| self.shards[i / self.per_shard].health != ShardHealth::Failed)
+                .collect();
             let mut scores = vec![0f64; slots];
             let mut stage_of = vec![0usize; slots];
             let mut stage_sensed: Vec<usize> = Vec::with_capacity(plan.stages.len());
@@ -948,7 +1365,7 @@ impl SearchEngine {
             // compares across stages — survivors of the final executed
             // stage outrank pruned slots, which rank among themselves by
             // their last (coarse) score.
-            let top_k = request.options.top_k.min(self.n_vectors());
+            let top_k = request.options.top_k.min(covered_live);
             let deepest = stage_sensed.len() - 1;
             let mut hits = Vec::with_capacity(top_k);
             for s in (0..=deepest).rev() {
@@ -961,7 +1378,12 @@ impl SearchEngine {
                     self.entries
                         .iter()
                         .enumerate()
-                        .filter(|&(i, e)| e.alive && stage_of[i] == s)
+                        .filter(|&(i, e)| {
+                            e.alive
+                                && stage_of[i] == s
+                                && self.shards[i / self.per_shard].health
+                                    != ShardHealth::Failed
+                        })
                         .map(|(i, e)| Hit { index: i, label: e.label, score: scores[i] }),
                 ));
             }
@@ -970,6 +1392,7 @@ impl SearchEngine {
                 hits,
                 iterations,
                 device_latency_us: iterations as f64 * SEARCH_ITERATION_US,
+                coverage,
                 full_scores: request.options.full_scores.then_some(scores),
                 cascade: Some(CascadeStats {
                     stage_sensed,
@@ -978,6 +1401,7 @@ impl SearchEngine {
                 }),
             });
         }
+        self.sweeps += requests.len() as u64;
         Ok(responses)
     }
 
@@ -1073,7 +1497,25 @@ impl VectorSearchBackend for SearchEngine {
                 .unwrap_or(0),
             avg_iterations_per_search: self.timing.avg_iterations_per_search(),
             nj_per_search: self.energy.nj_per_search(),
+            shard_health: self.shards.iter().map(|s| s.health).collect(),
+            scrub_passes: self.scrub_passes,
+            strings_scrubbed: self.strings_scrubbed,
+            slots_reprogrammed: self.slots_reprogrammed,
+            slots_remapped: self.slots_remapped,
+            spares_remaining: self
+                .scrub_cfg
+                .map(|c| self.shards.iter().map(|s| c.spares - s.spares_used).sum())
+                .unwrap_or(0),
+            canary_margin: self.canary_margin,
         }
+    }
+
+    fn scrub(&mut self) -> Result<ScrubReport, EngineError> {
+        SearchEngine::scrub(self)
+    }
+
+    fn fail_shard(&mut self, shard: usize) -> Result<(), EngineError> {
+        SearchEngine::fail_shard(self, shard)
     }
 }
 
@@ -1504,5 +1946,184 @@ mod tests {
         assert_eq!(eng.slots(), 8);
         let err = eng.append(&extra, 43).unwrap_err();
         assert_eq!(err, EngineError::CapacityExceeded { capacity: 8, requested: 9 });
+    }
+
+    #[test]
+    fn set_faults_applies_immediately_and_validates() {
+        // Regression: installing a model on a *programmed* engine used to
+        // be a silent no-op until the next reprogram.
+        let mut rng = Rng::new(0xFA);
+        let (embs, labels) = cluster_embeddings(&mut rng, 4, 2, 48, 0.0);
+        let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
+        let cfg = EngineConfig::new(Encoding::Mtmc, 8, SearchMode::Avss, 3.0).ideal();
+        let mut eng = SearchEngine::new(cfg, 48, embs.len()).unwrap();
+        eng.program_support(&refs, &labels).unwrap();
+        let clean = eng.search(&SearchRequest::new(&embs[0]).with_full_scores()).unwrap();
+        let model = FaultModel { stuck_low: 0.5, stuck_high: 0.5, ..FaultModel::NONE };
+        eng.set_faults(model).unwrap();
+        let faulty = eng.search(&SearchRequest::new(&embs[0]).with_full_scores()).unwrap();
+        assert_ne!(
+            clean.full_scores, faulty.full_scores,
+            "set_faults after program must corrupt without a reprogram"
+        );
+        // out-of-range rates are typed errors and leave the model alone
+        let bad = FaultModel { stuck_low: 1.5, ..FaultModel::NONE };
+        assert!(matches!(eng.set_faults(bad), Err(EngineError::InvalidConfig(_))));
+        assert_eq!(eng.fault_model(), model);
+        // clearing the model restores the clean read exactly
+        eng.set_faults(FaultModel::NONE).unwrap();
+        let restored = eng.search(&SearchRequest::new(&embs[0]).with_full_scores()).unwrap();
+        assert_eq!(clean.full_scores, restored.full_scores);
+    }
+
+    #[test]
+    fn failed_shard_gives_partial_coverage_and_scrub_rebuilds_it() {
+        let mut rng = Rng::new(0xDE6);
+        let (embs, labels) = cluster_embeddings(&mut rng, 8, 1, 48, 0.0);
+        let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
+        let cfg = EngineConfig::new(Encoding::Mtmc, 4, SearchMode::Avss, 3.0)
+            .ideal()
+            .with_shards(4);
+        let mut eng = SearchEngine::new(cfg, 48, 8).unwrap();
+        eng.program_support(&refs, &labels).unwrap();
+        eng.set_scrub(Some(ScrubConfig::default())).unwrap();
+        eng.fail_shard(0).unwrap();
+        // slots 0 and 1 live in the failed shard: the probe for slot 0
+        // comes back typed and partial, and never names a failed slot
+        let partial = eng.search(&SearchRequest::new(&embs[0]).with_top_k(8)).unwrap();
+        assert!(partial.is_partial());
+        assert_eq!(partial.coverage, 6.0 / 8.0);
+        assert_eq!(partial.hits.len(), 6, "top_k clamps to covered live slots");
+        assert!(partial.hits.iter().all(|h| h.index >= 2));
+        assert_eq!(eng.stats().failed_shards(), 1);
+        // failing everything leaves nothing to sense: typed, not a panic
+        for s in 1..4 {
+            eng.fail_shard(s).unwrap();
+        }
+        let err = eng.search(&SearchRequest::new(&embs[0])).unwrap_err();
+        assert_eq!(err, EngineError::EmptySupport);
+        assert_eq!(
+            eng.fail_shard(9).unwrap_err(),
+            EngineError::IndexOutOfRange { index: 9, len: 4 }
+        );
+        // one scrub pass erases + rebuilds the failed shards
+        let report = eng.scrub().unwrap();
+        assert_eq!(report.shards_rebuilt, 4);
+        let healed = eng.search(&SearchRequest::new(&embs[0]).with_top_k(8)).unwrap();
+        assert!(!healed.is_partial());
+        assert_eq!(healed.top().unwrap().index, 0);
+        assert_eq!(eng.stats().failed_shards(), 0);
+    }
+
+    #[test]
+    fn scrub_heals_retention_drift_and_books_pe_energy() {
+        let mut rng = Rng::new(0x5C2B);
+        let (embs, labels) = cluster_embeddings(&mut rng, 8, 2, 48, 0.0);
+        let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
+        let cfg = EngineConfig::new(Encoding::Mtmc, 8, SearchMode::Avss, 3.0).ideal();
+        let mut eng = SearchEngine::new(cfg, 48, embs.len()).unwrap();
+        eng.program_support(&refs, &labels).unwrap();
+        let clean = eng.search(&SearchRequest::new(&embs[0]).with_full_scores()).unwrap();
+        eng.set_faults(FaultModel { retention_drift: 0.05, ..FaultModel::NONE }).unwrap();
+        eng.set_scrub(Some(ScrubConfig::default())).unwrap();
+        eng.advance_age(40);
+        let aged = eng.search(&SearchRequest::new(&embs[0]).with_full_scores()).unwrap();
+        assert_ne!(
+            clean.full_scores, aged.full_scores,
+            "40 ticks at 5%/tick must corrupt the read scores"
+        );
+        assert!(eng.scrub().unwrap().slots_reprogrammed > 0);
+        assert!(eng.energy().programmed_strings > 0, "scrub books P/E cycles");
+        let healed = eng.search(&SearchRequest::new(&embs[0]).with_full_scores()).unwrap();
+        assert_eq!(
+            clean.full_scores, healed.full_scores,
+            "reprogramming heals pure drift exactly (stuck-free model)"
+        );
+    }
+
+    #[test]
+    fn scrub_remaps_stuck_slots_until_spares_run_out() {
+        let mut rng = Rng::new(0x57);
+        let (embs, labels) = cluster_embeddings(&mut rng, 8, 2, 48, 0.0);
+        let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
+        let cfg = EngineConfig::new(Encoding::Mtmc, 8, SearchMode::Avss, 3.0).ideal();
+        let mut eng = SearchEngine::new(cfg, 48, embs.len()).unwrap();
+        eng.program_support(&refs, &labels).unwrap();
+        eng.set_faults(FaultModel { stuck_low: 0.02, ..FaultModel::NONE }).unwrap();
+        eng.set_scrub(Some(ScrubConfig::default())).unwrap();
+        // 16 slots × 384 cells at 2% stuck: virtually every slot trips
+        // the remap policy, but only `spares` spare groups exist
+        let report = eng.scrub().unwrap();
+        assert_eq!(report.slots_remapped, 2);
+        assert_eq!(report.spares_remaining, 0);
+        assert_eq!(eng.shard_health(), vec![ShardHealth::Degraded]);
+        assert_eq!(eng.stats().slots_remapped, 2);
+        // no spares left: a second pass cannot remap further
+        assert_eq!(eng.scrub().unwrap().slots_remapped, 0);
+        // scrubbing without a policy is a typed error
+        let mut bare = SearchEngine::new(cfg, 48, 4).unwrap();
+        assert!(matches!(bare.scrub(), Err(EngineError::InvalidConfig(_))));
+    }
+
+    #[test]
+    fn degraded_majority_resense_is_exact_on_ideal_device_and_billed() {
+        let mut rng = Rng::new(0x3D);
+        let (embs, labels) = cluster_embeddings(&mut rng, 4, 2, 48, 0.0);
+        let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
+        let cfg = EngineConfig::new(Encoding::Mtmc, 8, SearchMode::Avss, 3.0).ideal();
+        let mut healthy = SearchEngine::new(cfg, 48, embs.len()).unwrap();
+        let mut degraded = SearchEngine::new(cfg, 48, embs.len()).unwrap();
+        healthy.program_support(&refs, &labels).unwrap();
+        degraded.program_support(&refs, &labels).unwrap();
+        // force Degraded via a scrub pass whose canary margin must fail:
+        // threshold 1.0 + a drift model that corrupts canaries
+        degraded
+            .set_faults(FaultModel { retention_drift: 0.5, ..FaultModel::NONE })
+            .unwrap();
+        degraded
+            .set_scrub(Some(ScrubConfig { margin_threshold: 1.0, ..Default::default() }))
+            .unwrap();
+        degraded.advance_age(20);
+        degraded.scrub().unwrap();
+        assert_eq!(degraded.shard_health(), vec![ShardHealth::Degraded]);
+        // scrub healed the support (epoch bump), so the majority-of-3
+        // median over an ideal device reproduces the healthy scores…
+        let sensed_before = degraded.energy().sensed_strings;
+        let a = healthy.search(&SearchRequest::new(&embs[0]).with_full_scores()).unwrap();
+        let b = degraded.search(&SearchRequest::new(&embs[0]).with_full_scores()).unwrap();
+        assert_eq!(a.full_scores, b.full_scores);
+        assert_eq!(a.hits, b.hits);
+        // …but the re-sense work is billed honestly: 3× iterations and 3×
+        // sensed strings for the degraded fleet
+        assert_eq!(b.iterations, 3 * a.iterations);
+        assert_eq!(
+            degraded.energy().sensed_strings - sensed_before,
+            3 * healthy.energy().sensed_strings
+        );
+    }
+
+    #[test]
+    fn clean_path_consumes_no_fault_rng_and_reads_identically() {
+        // The reliability layer must be invisible until a fault model is
+        // installed: same seed, with and without a scrub policy, yields
+        // bitwise-identical scores.
+        let mut rng = Rng::new(0xC1EA);
+        let (embs, labels) = cluster_embeddings(&mut rng, 6, 3, 48, 0.05);
+        let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
+        let cfg = EngineConfig::new(Encoding::Mtmc, 8, SearchMode::Avss, 3.0).with_seed(0xD15E);
+        let mut plain = SearchEngine::new(cfg, 48, embs.len()).unwrap();
+        let mut scrubbed = SearchEngine::new(cfg, 48, embs.len()).unwrap();
+        plain.program_support(&refs, &labels).unwrap();
+        scrubbed.program_support(&refs, &labels).unwrap();
+        scrubbed.set_scrub(Some(ScrubConfig::default())).unwrap();
+        scrubbed.set_faults(FaultModel::NONE).unwrap();
+        scrubbed.advance_age(100);
+        for q in refs.iter().take(4) {
+            let a = plain.search(&SearchRequest::new(q).with_full_scores()).unwrap();
+            let b = scrubbed.search(&SearchRequest::new(q).with_full_scores()).unwrap();
+            assert_eq!(a.full_scores, b.full_scores);
+            assert_eq!(a.hits, b.hits);
+            assert_eq!(b.coverage, 1.0);
+        }
     }
 }

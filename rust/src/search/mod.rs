@@ -26,8 +26,8 @@ pub mod distance;
 pub mod engine;
 
 pub use api::{
-    BackendStats, EngineError, Hit, SearchOptions, SearchRequest, SearchResponse, SupportSet,
-    SupportSetBuilder, VectorSearchBackend,
+    BackendStats, EngineError, Hit, ScrubReport, SearchOptions, SearchRequest, SearchResponse,
+    ShardHealth, SupportSet, SupportSetBuilder, VectorSearchBackend,
 };
 pub use cascade::{CascadeConfig, CascadeStage, CascadeStats, Shortlist};
 

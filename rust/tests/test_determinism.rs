@@ -187,6 +187,135 @@ fn mode_override_matches_natively_configured_engine() {
 // episode-stream determinism (ISSUE 4, satellite 3)
 // ---------------------------------------------------------------------------
 
+// ---------------------------------------------------------------------------
+// fault-overlay determinism (ISSUE 7, satellite c)
+// ---------------------------------------------------------------------------
+
+mod fault_determinism {
+    use super::{clustered, DIMS};
+    use mcamvss::device::faults::FaultModel;
+    use mcamvss::encoding::Encoding;
+    use mcamvss::search::engine::{EngineConfig, SearchEngine};
+    use mcamvss::search::{SearchMode, SearchRequest, SearchResponse};
+
+    /// Every persistent effect at once (disturb excluded: it keys on
+    /// accumulated sense counts, which these scenarios vary on purpose).
+    fn heavy() -> FaultModel {
+        FaultModel {
+            stuck_low: 0.01,
+            stuck_high: 0.01,
+            retention_drift: 0.05,
+            read_disturb: 0.0,
+        }
+    }
+
+    const AGE: u64 = 25;
+
+    fn base(shards: usize) -> EngineConfig {
+        EngineConfig::new(Encoding::Mtmc, 8, SearchMode::Avss, 3.0)
+            .ideal()
+            .with_seed(0xFA_17)
+            .with_shards(shards)
+    }
+
+    /// Build, program (bulk or one append per slot), install faults, age,
+    /// and read dense scores.
+    fn run_faulty(
+        cfg: EngineConfig,
+        refs: &[&[f32]],
+        labels: &[u32],
+        queries: &[&[f32]],
+        bulk: bool,
+        faults: FaultModel,
+    ) -> Vec<SearchResponse> {
+        let mut engine = SearchEngine::new(cfg, DIMS, refs.len()).unwrap();
+        if bulk {
+            engine.program_support(refs, labels).unwrap();
+        } else {
+            for (i, (&e, &l)) in refs.iter().zip(labels).enumerate() {
+                assert_eq!(engine.append(e, l).unwrap(), i);
+            }
+        }
+        engine.set_faults(faults).unwrap();
+        engine.advance_age(AGE);
+        queries
+            .iter()
+            .map(|&q| engine.search(&SearchRequest::new(q).with_full_scores()).unwrap())
+            .collect()
+    }
+
+    #[test]
+    fn fault_overlay_is_bitwise_identical_across_shard_counts() {
+        // Corruption keys on per-engine physical string placement (one
+        // derived fault stream per engine, never per shard), so the same
+        // seed + model must damage the same cells no matter how the
+        // slots are partitioned. Ideal device: without faults, all shard
+        // counts already agree bitwise, so any divergence here is the
+        // overlay's fault.
+        let (embs, labels) = clustered(21, 8, 4);
+        let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
+        let queries: Vec<&[f32]> = refs.iter().take(8).copied().collect();
+        let clean = run_faulty(base(1), &refs, &labels, &queries, true, FaultModel::NONE);
+        let reference = run_faulty(base(1), &refs, &labels, &queries, true, heavy());
+        assert!(
+            clean.iter().zip(&reference).any(|(c, f)| c.full_scores != f.full_scores),
+            "the heavy fault profile must actually corrupt reads"
+        );
+        for shards in [2usize, 4] {
+            let got = run_faulty(base(shards), &refs, &labels, &queries, true, heavy());
+            for (r, g) in reference.iter().zip(&got) {
+                assert_eq!(
+                    r.full_scores, g.full_scores,
+                    "{shards} shards vs 1 shard: corruption must be placement-stable"
+                );
+                assert_eq!(r.hits, g.hits);
+            }
+        }
+    }
+
+    #[test]
+    fn append_then_search_matches_bulk_program_under_faults() {
+        // Appended slots take the same physical string keys bulk
+        // programming would assign (`next_phys` counts up from zero
+        // either way), so the overlay — stuck cells included — lands on
+        // identical cells.
+        let (embs, labels) = clustered(22, 6, 4);
+        let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
+        let queries: Vec<&[f32]> = refs.iter().take(6).copied().collect();
+        for shards in [1usize, 2] {
+            let bulk = run_faulty(base(shards), &refs, &labels, &queries, true, heavy());
+            let appended = run_faulty(base(shards), &refs, &labels, &queries, false, heavy());
+            for (b, a) in bulk.iter().zip(&appended) {
+                assert_eq!(
+                    b.full_scores, a.full_scores,
+                    "{shards} shards: append vs bulk program under faults"
+                );
+                assert_eq!(b.hits, a.hits);
+            }
+        }
+    }
+
+    #[test]
+    fn faulty_replay_is_bitwise_on_a_noisy_device() {
+        // Same seed + same model replays the corruption bitwise even with
+        // program-time variation and read noise in the mix (the fault
+        // stream is derived, not drawn from the device streams).
+        let (embs, labels) = clustered(23, 6, 4);
+        let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
+        let queries: Vec<&[f32]> = refs.iter().take(6).copied().collect();
+        let cfg = EngineConfig::new(Encoding::Mtmc, 8, SearchMode::Avss, 3.0)
+            .with_seed(0xFA_5EED)
+            .with_shards(2);
+        let a = run_faulty(cfg, &refs, &labels, &queries, true, FaultModel::worn());
+        let b = run_faulty(cfg, &refs, &labels, &queries, true, FaultModel::worn());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.full_scores, y.full_scores, "seeded faulty replay must be bitwise");
+            assert_eq!(x.hits, y.hits);
+            assert_eq!(x.iterations, y.iterations);
+        }
+    }
+}
+
 mod episode_stream {
     use super::{clustered, DIMS};
     use mcamvss::baselines::{FloatBaseline, Metric};

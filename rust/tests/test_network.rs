@@ -365,6 +365,85 @@ fn idle_connections_are_reaped_but_server_stays_live() {
 }
 
 #[test]
+fn failed_shard_serves_partial_coverage_then_scrub_restores_it() {
+    // Forced-failure acceptance (ISSUE 7): with 1 of 4 shards Failed the
+    // TCP server answers every request with a typed partial response
+    // (coverage < 1.0, hits from live shards only), never panics, and
+    // recovers full coverage once the background scrub cadence rebuilds
+    // the shard.
+    use mcamvss::device::faults::ScrubConfig;
+    use mcamvss::search::engine::SearchEngine;
+    use std::sync::atomic::Ordering;
+
+    let mut rng = Rng::new(0xFA11);
+    let (embs, labels) = support_set(&mut rng, 5, 3);
+    let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
+    let n = refs.len();
+    let shards = 4usize;
+    let per_shard = n.div_ceil(shards);
+    let covered = n - per_shard;
+
+    let mut engine = SearchEngine::new(engine_cfg().with_shards(shards), DIMS, n).unwrap();
+    engine.program_support(&refs, &labels).unwrap();
+    engine.set_scrub(Some(ScrubConfig::default())).unwrap();
+    engine.fail_shard(0).unwrap();
+
+    let server = Server::start_with_backends(
+        CoordinatorConfig {
+            workers: 1,
+            queue_capacity: 16,
+            batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) },
+            scrub_every_batches: Some(1),
+        },
+        vec![engine],
+        identity_embed(),
+    )
+    .unwrap();
+    let net = NetServer::start(server, "127.0.0.1:0", NetConfig::default()).unwrap();
+    let stats = net.server_stats_handle();
+    let mut client = connect(&net);
+    let options = || SearchOptions { top_k: 3, ..Default::default() };
+
+    // The first answer arrives before any scrub pass has run: typed,
+    // partial, and honest about what it covers.
+    let first = client
+        .search_expect(0, QueryKind::Embedding, query(&mut rng), options())
+        .unwrap();
+    assert!(first.coverage < 1.0, "failed shard must surface as partial coverage");
+    assert!(
+        (first.coverage - covered as f64 / n as f64).abs() < 1e-9,
+        "coverage {} != {covered}/{n}",
+        first.coverage
+    );
+    assert!(!first.hits.is_empty(), "live shards still rank");
+    for h in &first.hits {
+        assert!(h.index >= per_shard, "failed shard's slots must not be ranked");
+    }
+
+    // The worker scrubs between batches (cadence 1); every in-between
+    // answer stays typed, and coverage returns to 1.0 once the shard is
+    // erased + rebuilt.
+    let mut healed = None;
+    for id in 1..50u64 {
+        let r = client
+            .search_expect(id, QueryKind::Embedding, query(&mut rng), options())
+            .unwrap();
+        assert!(!r.hits.is_empty(), "typed answers throughout recovery");
+        if r.coverage == 1.0 {
+            healed = Some(r);
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let healed = healed.expect("scrub cadence never rebuilt the failed shard");
+    assert!(!healed.is_partial());
+
+    net.shutdown();
+    assert!(stats.scrub_passes.load(Ordering::Relaxed) >= 1, "scrub ledger counts the pass");
+    assert_eq!(stats.failed_shards.load(Ordering::Relaxed), 0, "health gauge back to clean");
+}
+
+#[test]
 fn client_shutdown_frame_drains_the_server() {
     let net = start_net(NetConfig::default(), 1, 16, identity_embed());
     let mut rng = Rng::new(9);
