@@ -14,12 +14,14 @@
 //!   throughput numbers for DESIGN.md §Perf.
 //!
 //! The tracked perf targets (`perf_kernel`, `perf_engine`,
-//! `perf_batch_shards`, `perf_topk`, `perf_cascade`) additionally write
-//! their measurements into `BENCH_engine.json` at the repository root
-//! (merged key-by-key, so partial runs keep the other sections), tracking
-//! the perf trajectory across PRs. `perf_cascade` doubles as the cascade
-//! acceptance smoke: ≥2× sensed-string reduction at ≤0.5% synth accuracy
-//! drop is asserted on every run.
+//! `perf_batch_shards`, `perf_topk`, `perf_cascade`, `perf_routing`)
+//! additionally write their measurements into `BENCH_engine.json` at the
+//! repository root (merged key-by-key, so partial runs keep the other
+//! sections), tracking the perf trajectory across PRs. `perf_cascade`
+//! doubles as the cascade acceptance smoke: ≥2× sensed-string reduction
+//! at ≤0.5% synth accuracy drop is asserted on every run. `perf_routing`
+//! does the same for the shard-routing tier: ≥4× sensed-shard reduction
+//! at ≤1% accuracy drop on the clustered smoke episode.
 
 use mcamvss::coordinator::{CoordinatorConfig, Payload, Server};
 use mcamvss::device::block::McamBlock;
@@ -175,6 +177,16 @@ fn main() {
         println!("[fig_faults wall: {:.1}s]\n", t0.elapsed().as_secs_f64());
     }
 
+    // perf_routing renders the same sweep; skip the figure section when
+    // both would run so it executes once.
+    if want("fig_routing") && !want("perf_routing") {
+        section("fig_routing");
+        let t0 = Instant::now();
+        let sweep = experiments::fig_routing::run(0xC0A25E).unwrap();
+        println!("{}", experiments::fig_routing::render(&sweep));
+        println!("[fig_routing wall: {:.1}s]\n", t0.elapsed().as_secs_f64());
+    }
+
     if want("ablation") {
         if let Some(store) = &store {
             section("ablations");
@@ -224,6 +236,10 @@ fn main() {
     if want("perf_cascade") {
         section("perf_cascade");
         perf_cascade(&mut report);
+    }
+    if want("perf_routing") {
+        section("perf_routing");
+        perf_routing(&mut report);
     }
     if want("perf_coordinator") {
         section("perf_coordinator");
@@ -615,6 +631,98 @@ fn perf_cascade(report: &mut Vec<(String, Json)>) {
             .field("best_avg_iterations", Json::num(best.avg_iterations))
             .field("host_full_scan_searches_per_s", Json::num(measured[0].1))
             .field("host_cascade_searches_per_s", Json::num(measured[1].1))
+            .field("host_speedup", Json::num(measured[1].1 / measured[0].1))
+            .build(),
+    ));
+}
+
+/// Routing acceptance smoke + the paper-scale sweep: the shard-routing
+/// tier must cut sensed shards ≥4× on the clustered 512-slot smoke
+/// episode at ≤1% accuracy drop versus the flat scan — asserted on every
+/// run — then the 10⁴-slot sweep (16–64 shards × probe budgets) renders
+/// the recall/iterations frontier, and a host-side throughput pair
+/// (flat vs probe-4 at 32 shards) lands in the tracked report.
+fn perf_routing(report: &mut Vec<(String, Json)>) {
+    use mcamvss::search::routing::RoutingConfig;
+
+    // Acceptance bar on the CI-sized episode (same assertions as the
+    // fig_routing unit test, re-run here so `cargo bench -- perf_routing`
+    // is self-checking).
+    let smoke = experiments::fig_routing::run_at(
+        experiments::fig_routing::Scale::smoke(),
+        0xC0A25E,
+    )
+    .unwrap();
+    let flat = smoke.point(16, 0).expect("flat baseline");
+    let routed = smoke.point(16, 4).expect("probe-4 point");
+    let shard_reduction = flat.shard_senses_per_query / routed.shard_senses_per_query;
+    assert!(
+        shard_reduction >= 4.0 - 1e-9,
+        "sensed-shard reduction {shard_reduction:.2}x below the 4x acceptance bar"
+    );
+    let drop = flat.accuracy_pct - routed.accuracy_pct;
+    assert!(
+        drop <= 1.0 + 1e-9,
+        "accuracy drop {drop:.2}% > 1% (flat {:.2}%)",
+        flat.accuracy_pct
+    );
+    println!(
+        "ACCEPTANCE: {} -> {shard_reduction:.2}x sensed-shard ({:.2}x sensed-string) \
+         reduction, accuracy {:.2}% (flat {:.2}%, drop {drop:.2}%)",
+        routed.label, routed.reduction, routed.accuracy_pct, flat.accuracy_pct
+    );
+
+    // The figure itself, at the 10⁴-slot operating point.
+    let t0 = Instant::now();
+    let sweep = experiments::fig_routing::run(0xC0A25E).unwrap();
+    println!("{}", experiments::fig_routing::render(&sweep));
+    println!("[fig_routing wall: {:.1}s]", t0.elapsed().as_secs_f64());
+
+    // Host throughput, flat vs routed, at 10,240 slots x 32 shards.
+    let mut rng = Rng::new(0xC0A2);
+    let dims = 48;
+    let n_vectors = 10_240;
+    let shards = 32;
+    let embs: Vec<Vec<f32>> = (0..n_vectors)
+        .map(|_| (0..dims).map(|_| rng.range_f64(0.0, 3.0) as f32).collect())
+        .collect();
+    let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
+    let labels: Vec<u32> = (0..n_vectors as u32).map(|i| i / 20).collect();
+    let reps = 3;
+    let queries = 48;
+    let mut measured: Vec<(&str, f64)> = Vec::new();
+    for (name, routing) in [("flat", None), ("probe4", Some(RoutingConfig::probe_count(4)))] {
+        let cfg = EngineConfig::new(Encoding::Mtmc, 8, SearchMode::Avss, 3.0)
+            .ideal()
+            .with_seed(7)
+            .with_shards(shards);
+        let mut engine = SearchEngine::new(cfg, dims, n_vectors).unwrap();
+        engine.program_support(&refs, &labels).unwrap();
+        engine.set_routing(routing).unwrap();
+        engine.search(&SearchRequest::new(&embs[0])).unwrap(); // warmup
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            for q in embs.iter().take(queries) {
+                engine.search(&SearchRequest::new(q)).unwrap();
+            }
+        }
+        let per_s = (reps * queries) as f64 / t0.elapsed().as_secs_f64();
+        println!("{name} ({n_vectors} slots, {shards} shards): {per_s:.0} searches/s (host)");
+        measured.push((name, per_s));
+    }
+    println!("host speedup {:.2}x from routing\n", measured[1].1 / measured[0].1);
+
+    report.push((
+        "perf_routing".to_string(),
+        ObjBuilder::new()
+            .field("smoke_shard_reduction", Json::num(shard_reduction))
+            .field("smoke_string_reduction", Json::num(routed.reduction))
+            .field("smoke_flat_accuracy_pct", Json::num(flat.accuracy_pct))
+            .field("smoke_routed_accuracy_pct", Json::num(routed.accuracy_pct))
+            .field("smoke_flat_agreement_pct", Json::num(routed.flat_agreement_pct))
+            .field("sweep_slots", Json::num(sweep.scale_slots as f64))
+            .field("host_flat_searches_per_s", Json::num(measured[0].1))
+            .field("host_routed_searches_per_s", Json::num(measured[1].1))
             .field("host_speedup", Json::num(measured[1].1 / measured[0].1))
             .build(),
     ));

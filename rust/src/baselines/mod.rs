@@ -285,6 +285,7 @@ impl VectorSearchBackend for FloatBaseline {
                 coverage: 1.0,
                 full_scores,
                 cascade: None,
+                routing: None,
             });
         }
         Ok(responses)

@@ -23,7 +23,8 @@ const VALUE_KEYS: &[&str] = &[
     "addr-file", "serve-seconds", "max-connections", "max-in-flight",
     "idle-timeout-ms", "dims", "stuck-low", "stuck-high", "retention-drift",
     "read-disturb", "scrub-canaries", "scrub-spares", "scrub-margin",
-    "scrub-every",
+    "scrub-every", "routing-probes", "routing-fraction", "routing-min-coverage",
+    "routing-refresh",
 ];
 
 impl Args {
@@ -173,6 +174,19 @@ mod tests {
         assert_eq!(args.opt_usize("scrub-spares").unwrap(), Some(3));
         assert_eq!(args.opt("scrub-margin"), Some("0.85"));
         assert_eq!(args.opt_usize("scrub-every").unwrap(), Some(16));
+    }
+
+    #[test]
+    fn routing_keys_take_values() {
+        let args = parse(&[
+            "serve", "--routing", "--routing-probes", "4", "--routing-fraction",
+            "0.25", "--routing-min-coverage", "0.5", "--routing-refresh", "eager",
+        ]);
+        assert!(args.flag("routing"));
+        assert_eq!(args.opt_usize("routing-probes").unwrap(), Some(4));
+        assert_eq!(args.opt("routing-fraction"), Some("0.25"));
+        assert_eq!(args.opt("routing-min-coverage"), Some("0.5"));
+        assert_eq!(args.opt("routing-refresh"), Some("eager"));
     }
 
     #[test]

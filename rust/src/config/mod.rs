@@ -10,6 +10,7 @@ use crate::device::faults::{FaultModel, ScrubConfig};
 use crate::device::variation::VariationModel;
 use crate::encoding::Encoding;
 use crate::search::cascade::{CascadeConfig, CascadeStage, Shortlist};
+use crate::search::routing::{Probes, RefreshPolicy, RoutingConfig};
 use crate::search::SearchMode;
 use anyhow::{bail, Context, Result};
 use std::path::Path;
@@ -92,6 +93,56 @@ impl CascadeSettings {
         if self.iteration_budget == Some(0) {
             bail!("cascade iteration_budget must be >= 1");
         }
+        Ok(())
+    }
+}
+
+/// The `[routing]` TOML section: the hierarchical shard-routing tier
+/// (DESIGN.md §Routing). Enabled with `enabled = true`; the defaults
+/// probe the best 4 shards per query with lazy centroid refresh, so
+/// `[routing]\nenabled = true` alone turns flat sharding into a routed
+/// fleet. Resolved by [`RoutingSettings::to_routing`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct RoutingSettings {
+    /// Shards probed per query, as a count (ignored when
+    /// [`Self::fraction`] is set). `None` with no fraction resolves to
+    /// [`Probes::All`] — the exact bypass.
+    pub probes: Option<usize>,
+    /// Shards probed per query, as a fraction of the eligible shards
+    /// (`0 < f <= 1`); takes precedence over [`Self::probes`].
+    pub fraction: Option<f64>,
+    /// Minimum fraction of live slots the probed shards must cover
+    /// (the probe set widens best-first until it does).
+    pub min_coverage: f64,
+    /// Centroid refresh policy: `"eager"` or `"lazy"`.
+    pub refresh: RefreshPolicy,
+}
+
+impl Default for RoutingSettings {
+    fn default() -> Self {
+        RoutingSettings {
+            probes: Some(4),
+            fraction: None,
+            min_coverage: 0.0,
+            refresh: RefreshPolicy::Lazy,
+        }
+    }
+}
+
+impl RoutingSettings {
+    /// Resolve into the engine's routing policy (the engine re-validates
+    /// at install time).
+    pub fn to_routing(&self) -> RoutingConfig {
+        let probes = match (self.fraction, self.probes) {
+            (Some(f), _) => Probes::Fraction(f),
+            (None, Some(n)) => Probes::Count(n),
+            (None, None) => Probes::All,
+        };
+        RoutingConfig { probes, refresh: self.refresh, min_coverage: self.min_coverage }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        self.to_routing().validate()?;
         Ok(())
     }
 }
@@ -380,6 +431,9 @@ pub struct Config {
     /// Optional progressive-precision cascade (`[cascade]` section /
     /// `--cascade` flags); `None` serves full scans.
     pub cascade: Option<CascadeSettings>,
+    /// Optional hierarchical shard routing (`[routing]` section /
+    /// `--routing` flags); `None` senses every shard on every request.
+    pub routing: Option<RoutingSettings>,
     /// Optional persistent device faults (`[faults]` section /
     /// `--faults` flag); `None` serves a pristine device.
     pub faults: Option<FaultSettings>,
@@ -411,6 +465,7 @@ impl Config {
             train: TrainSettings::omniglot(),
             serve: ServeSettings::default(),
             cascade: None,
+            routing: None,
             faults: None,
             scrub: None,
         }
@@ -438,6 +493,7 @@ impl Config {
             train: TrainSettings::cub(),
             serve: ServeSettings::default(),
             cascade: None,
+            routing: None,
             faults: None,
             scrub: None,
         }
@@ -466,6 +522,7 @@ impl Config {
             train: TrainSettings::synth(),
             serve: ServeSettings::default(),
             cascade: None,
+            routing: None,
             faults: None,
             scrub: None,
         }
@@ -627,6 +684,33 @@ impl Config {
             }
             cfg.cascade = Some(cascade);
         }
+        if doc.get_bool("routing", "enabled") == Some(true) {
+            let get_pos = |key: &str| -> Result<Option<usize>> {
+                match doc.get_int("routing", key) {
+                    None => Ok(None),
+                    Some(v) if v >= 1 => Ok(Some(v as usize)),
+                    Some(v) => bail!("routing {key} must be >= 1, got {v}"),
+                }
+            };
+            let mut routing = RoutingSettings::default();
+            if let Some(v) = get_pos("probes")? {
+                routing.probes = Some(v);
+            }
+            if let Some(v) = doc.get_float("routing", "fraction") {
+                routing.fraction = Some(v);
+            }
+            if let Some(v) = doc.get_float("routing", "min_coverage") {
+                routing.min_coverage = v;
+            }
+            if let Some(v) = doc.get_str("routing", "refresh") {
+                routing.refresh = match v.to_ascii_lowercase().as_str() {
+                    "eager" => RefreshPolicy::Eager,
+                    "lazy" => RefreshPolicy::Lazy,
+                    other => bail!("routing refresh must be \"eager\" or \"lazy\", got {other:?}"),
+                };
+            }
+            cfg.routing = Some(routing);
+        }
         if doc.get_bool("faults", "enabled") == Some(true) {
             // Rates default to the worn-device profile; each key
             // overrides one rate. Range checks live in
@@ -699,6 +783,9 @@ impl Config {
         self.serve.validate()?;
         if let Some(cascade) = &self.cascade {
             cascade.validate()?;
+        }
+        if let Some(routing) = &self.routing {
+            routing.validate()?;
         }
         if let Some(faults) = &self.faults {
             faults.validate()?;
@@ -854,6 +941,53 @@ program_sigma = 0.3
             "[serve]\nmax_in_flight = -2\n",
             "[serve]\nidle_timeout_ms = 9999999999\n",
             "[serve]\nmax_frame_bytes = 8\n",
+        ] {
+            let doc = TomlDoc::parse(bad).unwrap();
+            assert!(Config::from_toml(&doc).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn routing_section_parses_and_validates() {
+        let doc = TomlDoc::parse(
+            "[routing]\nenabled = true\nprobes = 2\nmin_coverage = 0.5\nrefresh = \"eager\"\n",
+        )
+        .unwrap();
+        let cfg = Config::from_toml(&doc).unwrap();
+        let routing = cfg.routing.expect("enabled section");
+        assert_eq!(routing.probes, Some(2));
+        assert_eq!(routing.min_coverage, 0.5);
+        assert_eq!(routing.refresh, RefreshPolicy::Eager);
+        let resolved = routing.to_routing();
+        assert_eq!(resolved.probes, Probes::Count(2));
+        assert_eq!(resolved.min_coverage, 0.5);
+        resolved.validate().unwrap();
+
+        // fraction takes precedence over the count
+        let doc =
+            TomlDoc::parse("[routing]\nenabled = true\nprobes = 2\nfraction = 0.25\n").unwrap();
+        let routing = Config::from_toml(&doc).unwrap().routing.unwrap();
+        assert_eq!(routing.to_routing().probes, Probes::Fraction(0.25));
+
+        // a bare enable is the probe-4 lazy default
+        let doc = TomlDoc::parse("[routing]\nenabled = true\n").unwrap();
+        let routing = Config::from_toml(&doc).unwrap().routing.unwrap();
+        assert_eq!(routing, RoutingSettings::default());
+        assert_eq!(routing.to_routing().probes, Probes::Count(4));
+
+        // not enabled → None
+        let doc = TomlDoc::parse("[routing]\nprobes = 2\n").unwrap();
+        assert!(Config::from_toml(&doc).unwrap().routing.is_none());
+
+        // malformed values are typed config errors
+        for bad in [
+            "[routing]\nenabled = true\nprobes = 0\n",
+            "[routing]\nenabled = true\nprobes = -2\n",
+            "[routing]\nenabled = true\nfraction = 1.5\n",
+            "[routing]\nenabled = true\nfraction = 0.0\n",
+            "[routing]\nenabled = true\nmin_coverage = -0.5\n",
+            "[routing]\nenabled = true\nmin_coverage = 1.5\n",
+            "[routing]\nenabled = true\nrefresh = \"sometimes\"\n",
         ] {
             let doc = TomlDoc::parse(bad).unwrap();
             assert!(Config::from_toml(&doc).is_err(), "accepted {bad:?}");

@@ -172,6 +172,9 @@ pub struct ServerStats {
     /// Gauges: shard-health census of the last-scrubbed replica.
     pub failed_shards: AtomicU64,
     pub degraded_shards: AtomicU64,
+    /// Gauge: shards the routing tier may still dispatch to on the
+    /// last-scrubbed replica (non-`Failed`; 0 until a pass has run).
+    pub routing_eligible_shards: AtomicU64,
     /// Gauge: worst canary sense margin seen on the last scrub pass,
     /// stored as f64 bits (atomics hold integers).
     canary_margin_bits: AtomicU64,
@@ -192,6 +195,7 @@ impl Default for ServerStats {
             spares_remaining: AtomicU64::new(0),
             failed_shards: AtomicU64::new(0),
             degraded_shards: AtomicU64::new(0),
+            routing_eligible_shards: AtomicU64::new(0),
             // an unscrubbed fleet has full margin, not zero
             canary_margin_bits: AtomicU64::new(1.0f64.to_bits()),
         }
@@ -215,6 +219,8 @@ impl ServerStats {
         self.spares_remaining.store(report.spares_remaining as u64, Ordering::Relaxed);
         self.failed_shards.store(backend.failed_shards() as u64, Ordering::Relaxed);
         self.degraded_shards.store(backend.degraded_shards() as u64, Ordering::Relaxed);
+        self.routing_eligible_shards
+            .store(backend.routing_eligible_shards() as u64, Ordering::Relaxed);
         self.canary_margin_bits.store(report.canary_margin.to_bits(), Ordering::Relaxed);
     }
 
@@ -250,6 +256,10 @@ impl ServerStats {
                 "degraded_shards",
                 Json::num(self.degraded_shards.load(Ordering::Relaxed) as f64),
             )
+            .field(
+                "routing_eligible_shards",
+                Json::num(self.routing_eligible_shards.load(Ordering::Relaxed) as f64),
+            )
             .field("canary_margin", Json::num(self.canary_margin()))
             .build()
     }
@@ -282,11 +292,13 @@ impl Default for CoordinatorConfig {
 }
 
 /// Per-replica engine setup applied by [`Server::start_configured`]:
-/// cascade schedule, fault model, and scrub policy — everything the
-/// serving CLI can install on top of a bare [`EngineConfig`].
+/// cascade schedule, shard-routing policy, fault model, and scrub
+/// policy — everything the serving CLI can install on top of a bare
+/// [`EngineConfig`].
 #[derive(Debug, Clone, Default)]
 pub struct EngineSetup {
     pub cascade: Option<crate::search::cascade::CascadeConfig>,
+    pub routing: Option<crate::search::routing::RoutingConfig>,
     pub faults: Option<FaultModel>,
     pub scrub: Option<ScrubConfig>,
 }
@@ -430,6 +442,7 @@ impl Server {
             let mut engine = SearchEngine::new(ecfg, dims, support_set.len().max(1))?;
             engine.program(&support_set)?;
             engine.set_cascade(setup.cascade.clone())?;
+            engine.set_routing(setup.routing.clone())?;
             if let Some(faults) = setup.faults {
                 engine.set_faults(faults)?;
             }
@@ -735,6 +748,7 @@ mod tests {
         let ecfg = EngineConfig::new(Encoding::Mtmc, 8, SearchMode::Avss, 3.0).ideal();
         let setup = EngineSetup {
             cascade: None,
+            routing: None,
             faults: Some(FaultModel { retention_drift: 0.2, ..FaultModel::NONE }),
             scrub: Some(ScrubConfig::default()),
         };
@@ -761,9 +775,12 @@ mod tests {
         assert!(stats_arc.scrub_passes.load(Ordering::Relaxed) >= 1);
         assert_eq!(stats_arc.canary_margin(), 1.0);
         assert_eq!(stats_arc.failed_shards.load(Ordering::Relaxed), 0);
+        // the single-shard replica stays fully routable
+        assert_eq!(stats_arc.routing_eligible_shards.load(Ordering::Relaxed), 1);
         let json = stats_arc.to_json().render();
         assert!(json.contains("\"scrub_passes\""), "{json}");
         assert!(json.contains("\"canary_margin\""), "{json}");
+        assert!(json.contains("\"routing_eligible_shards\""), "{json}");
     }
 
     #[test]

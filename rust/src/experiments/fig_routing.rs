@@ -1,0 +1,384 @@
+//! `fig_routing` — recall/energy tradeoff of the hierarchical shard
+//! routing tier (DESIGN.md §Routing; like `fig_cascade` this figure has
+//! no paper counterpart — it evaluates the serving-side scale-out this
+//! repo adds on top of the paper's AVSS result).
+//!
+//! A hierarchically-clustered synthetic support set (class prototypes
+//! drawn around per-group centres, groups contiguous in slot order so
+//! they align with shard ownership) is programmed into an ideal-device
+//! MTMC/AVSS engine at several shard counts. For each shard count the
+//! sweep measures the flat scan (every shard sensed — the exact
+//! baseline) and routed scans at increasing probe budgets. Every point
+//! reports the **honest** sensed-string count per query straight from
+//! the energy ledger (representative senses billed), the shard senses
+//! per query, the reduction versus the flat scan, classification
+//! accuracy, and top-1 agreement with the flat scan (recall@1 of the
+//! routed search against its own exact counterpart).
+
+use crate::metrics::CsvTable;
+use crate::search::engine::{EngineConfig, SearchEngine};
+use crate::search::routing::RoutingConfig;
+use crate::search::{SearchMode, SearchRequest};
+use crate::testutil::Rng;
+use anyhow::Result;
+use crate::encoding::Encoding;
+
+const DIMS: usize = 48;
+const CL: usize = 8;
+const CLIP: f64 = 3.0;
+/// Spread of class prototypes around their group centre (the coarse
+/// structure routing exploits).
+const GROUP_SPREAD: f64 = 0.25;
+/// Spread of support members around their class prototype.
+const MEMBER_SPREAD: f64 = 0.03;
+/// Spread of queries around their class prototype.
+const QUERY_SPREAD: f64 = 0.05;
+
+/// Sweep sizing. [`Scale::paper`] is the 10⁴-slot operating point the
+/// `experiment`/bench harnesses run; [`Scale::smoke`] is the CI-sized
+/// episode behind the acceptance test.
+#[derive(Debug, Clone, Copy)]
+pub struct Scale {
+    pub classes: usize,
+    pub per_class: usize,
+    pub n_queries: usize,
+    /// Shard counts measured (support is clustered into
+    /// `shard_counts.last()` groups so every count aligns with the
+    /// cluster structure).
+    pub shard_counts: &'static [usize],
+    /// Routed probe budgets measured per shard count.
+    pub probe_counts: &'static [usize],
+}
+
+impl Scale {
+    /// 512 classes × 20 members = 10,240 slots across 16–64 shards.
+    pub fn paper() -> Scale {
+        Scale {
+            classes: 512,
+            per_class: 20,
+            n_queries: 48,
+            shard_counts: &[16, 32, 64],
+            probe_counts: &[1, 2, 4, 8],
+        }
+    }
+
+    /// 64 classes × 8 members = 512 slots across 16 shards.
+    pub fn smoke() -> Scale {
+        Scale {
+            classes: 64,
+            per_class: 8,
+            n_queries: 128,
+            shard_counts: &[16],
+            probe_counts: &[2, 4],
+        }
+    }
+
+    fn groups(&self) -> usize {
+        *self.shard_counts.last().expect("at least one shard count")
+    }
+}
+
+/// One measured sweep point (`probes == 0` is the flat baseline).
+#[derive(Debug, Clone)]
+pub struct RoutingPoint {
+    pub label: String,
+    pub shards: usize,
+    /// Probe budget (0 for the flat scan).
+    pub probes: usize,
+    /// Strings sensed per query (energy-ledger actuals, representative
+    /// senses included).
+    pub sensed_per_query: f64,
+    /// Shard sense passes per query (flat = every shard).
+    pub shard_senses_per_query: f64,
+    /// Flat sensed strings / this point's sensed strings (same shard
+    /// count).
+    pub reduction: f64,
+    /// Mean `RoutingStats::iterations_saved` per query (0 for flat).
+    pub saved_per_query: f64,
+    pub accuracy_pct: f64,
+    /// Top-1 label agreement with the flat scan at the same shard count
+    /// — routed recall@1 against its exact counterpart.
+    pub flat_agreement_pct: f64,
+    /// Pareto-efficient within its shard count (no point senses no more
+    /// and scores strictly better).
+    pub frontier: bool,
+}
+
+/// The full sweep over shard counts × probe budgets.
+#[derive(Debug, Clone)]
+pub struct RoutingSweep {
+    pub scale_slots: usize,
+    pub points: Vec<RoutingPoint>,
+}
+
+impl RoutingSweep {
+    pub fn point(&self, shards: usize, probes: usize) -> Option<&RoutingPoint> {
+        self.points.iter().find(|p| p.shards == shards && p.probes == probes)
+    }
+}
+
+/// Deterministic hierarchically-clustered episode: group centres,
+/// class prototypes around them (classes contiguous per group, so slot
+/// order aligns with shard ownership), support members and queries
+/// jittered around the prototypes.
+fn synth_hierarchical(
+    scale: &Scale,
+    seed: u64,
+) -> (Vec<Vec<f32>>, Vec<u32>, Vec<Vec<f32>>, Vec<u32>) {
+    let groups = scale.groups();
+    assert_eq!(scale.classes % groups, 0, "classes must split evenly over groups");
+    let per_group = scale.classes / groups;
+    let mut rng = Rng::new(seed);
+    let clamp = |v: f64| v.clamp(0.0, CLIP) as f32;
+    let mut protos = Vec::with_capacity(scale.classes);
+    let mut support = Vec::with_capacity(scale.classes * scale.per_class);
+    let mut labels = Vec::with_capacity(scale.classes * scale.per_class);
+    for _ in 0..groups {
+        let centre: Vec<f64> = (0..DIMS).map(|_| rng.range_f64(0.4, 2.6)).collect();
+        for _ in 0..per_group {
+            let proto: Vec<f64> =
+                centre.iter().map(|&c| c + GROUP_SPREAD * rng.gaussian()).collect();
+            let class = protos.len() as u32;
+            for _ in 0..scale.per_class {
+                support.push(
+                    proto.iter().map(|&p| clamp(p + MEMBER_SPREAD * rng.gaussian())).collect(),
+                );
+                labels.push(class);
+            }
+            protos.push(proto);
+        }
+    }
+    let mut queries = Vec::with_capacity(scale.n_queries);
+    let mut truth = Vec::with_capacity(scale.n_queries);
+    for i in 0..scale.n_queries {
+        let class = i * scale.classes / scale.n_queries;
+        queries.push(
+            protos[class].iter().map(|&p| clamp(p + QUERY_SPREAD * rng.gaussian())).collect(),
+        );
+        truth.push(class as u32);
+    }
+    (support, labels, queries, truth)
+}
+
+/// Measure one (shard count, probe budget) point. Returns per-query
+/// top-1 labels plus (sensed/query, shard senses/query, saved/query,
+/// accuracy%).
+fn measure(
+    shards: usize,
+    probes: Option<usize>,
+    support: &[Vec<f32>],
+    labels: &[u32],
+    queries: &[Vec<f32>],
+    truth: &[u32],
+    seed: u64,
+) -> Result<(Vec<Option<u32>>, f64, f64, f64, f64)> {
+    let refs: Vec<&[f32]> = support.iter().map(|e| e.as_slice()).collect();
+    let cfg = EngineConfig::new(Encoding::Mtmc, CL, SearchMode::Avss, CLIP)
+        .ideal()
+        .with_seed(seed)
+        .with_shards(shards);
+    let mut engine = SearchEngine::new(cfg, DIMS, refs.len())?;
+    engine.program_support(&refs, labels)?;
+    engine.set_routing(probes.map(RoutingConfig::probe_count))?;
+    let mut preds = Vec::with_capacity(queries.len());
+    let mut correct = 0usize;
+    let mut shard_senses = 0u64;
+    let mut saved = 0i64;
+    for (query, &want) in queries.iter().zip(truth) {
+        let response = engine.search(&SearchRequest::new(query))?;
+        let got = response.top().map(|h| h.label);
+        if got == Some(want) {
+            correct += 1;
+        }
+        match &response.routing {
+            Some(stats) => {
+                shard_senses += stats.shards_sensed as u64;
+                saved += stats.iterations_saved;
+            }
+            None => shard_senses += shards as u64,
+        }
+        preds.push(got);
+    }
+    let n = queries.len() as f64;
+    Ok((
+        preds,
+        engine.energy().sensed_strings as f64 / n,
+        shard_senses as f64 / n,
+        saved as f64 / n,
+        100.0 * correct as f64 / n,
+    ))
+}
+
+/// Run the sweep at a given scale. Deterministic for a fixed seed
+/// (ideal device).
+pub fn run_at(scale: Scale, seed: u64) -> Result<RoutingSweep> {
+    let (support, labels, queries, truth) = synth_hierarchical(&scale, seed);
+    let mut points = Vec::new();
+    for &shards in scale.shard_counts {
+        let (flat_preds, flat_sensed, flat_shards, _, flat_acc) =
+            measure(shards, None, &support, &labels, &queries, &truth, seed)?;
+        points.push(RoutingPoint {
+            label: format!("{shards} shards, flat"),
+            shards,
+            probes: 0,
+            sensed_per_query: flat_sensed,
+            shard_senses_per_query: flat_shards,
+            reduction: 1.0,
+            saved_per_query: 0.0,
+            accuracy_pct: flat_acc,
+            flat_agreement_pct: 100.0,
+            frontier: false,
+        });
+        for &probes in scale.probe_counts {
+            if probes >= shards {
+                continue; // probing every shard is the flat bypass
+            }
+            let (preds, sensed, shard_senses, saved, acc) =
+                measure(shards, Some(probes), &support, &labels, &queries, &truth, seed)?;
+            let agree = preds.iter().zip(&flat_preds).filter(|(a, b)| a == b).count();
+            points.push(RoutingPoint {
+                label: format!("{shards} shards, probe {probes}"),
+                shards,
+                probes,
+                sensed_per_query: sensed,
+                shard_senses_per_query: shard_senses,
+                reduction: flat_sensed / sensed.max(1.0),
+                saved_per_query: saved,
+                accuracy_pct: acc,
+                flat_agreement_pct: 100.0 * agree as f64 / queries.len() as f64,
+                frontier: false,
+            });
+        }
+    }
+
+    // Pareto frontier within each shard count: dominated = someone
+    // senses no more and scores strictly better (or senses strictly
+    // less at equal accuracy).
+    for i in 0..points.len() {
+        let dominated = (0..points.len()).any(|j| {
+            j != i
+                && points[j].shards == points[i].shards
+                && points[j].sensed_per_query <= points[i].sensed_per_query
+                && points[j].accuracy_pct >= points[i].accuracy_pct
+                && (points[j].sensed_per_query < points[i].sensed_per_query
+                    || points[j].accuracy_pct > points[i].accuracy_pct)
+        });
+        points[i].frontier = !dominated;
+    }
+
+    Ok(RoutingSweep { scale_slots: support.len(), points })
+}
+
+/// Run the paper-scale sweep (the `experiment --filter fig_routing` /
+/// bench entry point).
+pub fn run(seed: u64) -> Result<RoutingSweep> {
+    run_at(Scale::paper(), seed)
+}
+
+/// Render the sweep as a text table (grouped by shard count, walking
+/// down each group's probe budgets).
+pub fn render(sweep: &RoutingSweep) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "fig_routing — shard-routing frontier ({} slots, ideal device, honest ledger)\n",
+        sweep.scale_slots
+    ));
+    out.push_str(
+        "config                 | sensed/q | shard senses/q | reduction | saved/q | acc%   | vs flat% | frontier\n",
+    );
+    for p in &sweep.points {
+        out.push_str(&format!(
+            "{:<22} | {:>8.0} | {:>14.1} | {:>8.2}x | {:>7.0} | {:>6.2} | {:>8.2} | {}\n",
+            p.label,
+            p.sensed_per_query,
+            p.shard_senses_per_query,
+            p.reduction,
+            p.saved_per_query,
+            p.accuracy_pct,
+            p.flat_agreement_pct,
+            if p.frontier { "*" } else { "" }
+        ));
+    }
+    out
+}
+
+/// Machine-readable CSV rows (mirrors [`render`]).
+pub fn csv(sweep: &RoutingSweep) -> CsvTable {
+    let mut table = CsvTable::new(&[
+        "label",
+        "shards",
+        "probes",
+        "sensed_per_query",
+        "shard_senses_per_query",
+        "reduction",
+        "saved_per_query",
+        "accuracy_pct",
+        "flat_agreement_pct",
+        "frontier",
+    ]);
+    for p in &sweep.points {
+        table.row(&[
+            p.label.clone(),
+            p.shards.to_string(),
+            p.probes.to_string(),
+            format!("{:.1}", p.sensed_per_query),
+            format!("{:.2}", p.shard_senses_per_query),
+            format!("{:.3}", p.reduction),
+            format!("{:.1}", p.saved_per_query),
+            format!("{:.3}", p.accuracy_pct),
+            format!("{:.3}", p.flat_agreement_pct),
+            (p.frontier as u8).to_string(),
+        ]);
+    }
+    table
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_meets_acceptance_frontier() {
+        // The fig_routing acceptance criteria, asserted as a test so the
+        // tradeoff can never silently regress: probing 4 of 16 shards on
+        // a clustered 512-slot episode must cut shard senses 4× (and
+        // sensed strings ≥3.5× — representatives are billed) at ≤1%
+        // accuracy cost versus the flat scan.
+        let sweep = run_at(Scale::smoke(), 0xC0A25E).unwrap();
+        let flat = sweep.point(16, 0).expect("flat baseline measured");
+        assert_eq!(flat.reduction, 1.0);
+        assert_eq!(flat.shard_senses_per_query, 16.0, "flat senses every shard");
+        let routed = sweep.point(16, 4).expect("probe-4 point measured");
+        assert_eq!(routed.shard_senses_per_query, 4.0, "router dispatches 4 shards");
+        assert!(
+            flat.shard_senses_per_query / routed.shard_senses_per_query >= 4.0 - 1e-9,
+            "≥4x sensed-shard reduction"
+        );
+        assert!(
+            routed.reduction >= 3.5,
+            "string-sense reduction with reps billed: {:.2}x",
+            routed.reduction
+        );
+        // representative senses are billed: routed senses strictly more
+        // than a quarter of the flat strings
+        assert!(routed.sensed_per_query > flat.sensed_per_query * 4.0 / 16.0);
+        assert!(routed.saved_per_query > 0.0, "routing must save net work here");
+        assert!(
+            flat.accuracy_pct - routed.accuracy_pct <= 1.0 + 1e-9,
+            "accuracy cost too large: flat {:.2}% vs routed {:.2}%",
+            flat.accuracy_pct,
+            routed.accuracy_pct
+        );
+        assert!(
+            routed.flat_agreement_pct >= 95.0,
+            "routed top-1 must track the flat scan: {:.2}%",
+            routed.flat_agreement_pct
+        );
+        // rendering (text + CSV) covers the same sweep
+        let text = render(&sweep);
+        assert!(text.contains("16 shards, flat"));
+        assert!(text.contains("16 shards, probe 4"));
+        let table = csv(&sweep);
+        assert!(table.render().contains("shard_senses_per_query"));
+    }
+}

@@ -11,6 +11,7 @@ pub mod fig7;
 pub mod fig9;
 pub mod fig_cascade;
 pub mod fig_faults;
+pub mod fig_routing;
 pub mod headline;
 pub mod table1;
 pub mod table2;
@@ -22,6 +23,7 @@ use crate::fsl::{episode_rng, evaluate_episode, sample_episode};
 use crate::metrics::AccuracyMeter;
 use crate::search::cascade::CascadeConfig;
 use crate::search::engine::{EngineConfig, SearchEngine};
+use crate::search::routing::RoutingConfig;
 use crate::search::SearchMode;
 use anyhow::Result;
 
@@ -82,8 +84,20 @@ pub struct RunResult {
     pub throughput_per_s: f64,
 }
 
+/// Optional engine features threaded through [`run_mcam_eval_opts`]
+/// (avoids a fresh positional argument per subsystem).
+#[derive(Debug, Clone, Default)]
+pub struct EvalOpts<'a> {
+    /// Progressive-precision cascade schedule, if any.
+    pub cascade: Option<&'a CascadeConfig>,
+    /// MCAM shards the support set is split across (`0`/`1` = one block).
+    pub shards: usize,
+    /// Hierarchical shard routing policy, if any.
+    pub routing: Option<RoutingConfig>,
+}
+
 /// Evaluate an engine configuration over episodes of (dataset, variant)
-/// test embeddings — [`run_mcam_eval_opts`] with no cascade.
+/// test embeddings — [`run_mcam_eval_opts`] with every option off.
 pub fn run_mcam_eval(
     store: &ArtifactStore,
     dataset: &str,
@@ -94,11 +108,22 @@ pub fn run_mcam_eval(
     variation: VariationModel,
     settings: EpisodeSettings,
 ) -> Result<RunResult> {
-    run_mcam_eval_opts(store, dataset, variant, encoding, cl, mode, variation, settings, None)
+    run_mcam_eval_opts(
+        store,
+        dataset,
+        variant,
+        encoding,
+        cl,
+        mode,
+        variation,
+        settings,
+        EvalOpts::default(),
+    )
 }
 
 /// Evaluate an engine configuration over episodes of (dataset, variant)
-/// test embeddings, optionally through a progressive-precision cascade.
+/// test embeddings, optionally through a progressive-precision cascade
+/// and/or a routed shard fleet ([`EvalOpts`]).
 #[allow(clippy::too_many_arguments)]
 pub fn run_mcam_eval_opts(
     store: &ArtifactStore,
@@ -109,16 +134,18 @@ pub fn run_mcam_eval_opts(
     mode: SearchMode,
     variation: VariationModel,
     settings: EpisodeSettings,
-    cascade: Option<&CascadeConfig>,
+    opts: EvalOpts<'_>,
 ) -> Result<RunResult> {
     let ds = store.embeddings(dataset, variant, "test")?;
     let clip = store.clip(dataset, variant)?;
     let cfg = EngineConfig::new(encoding, cl, mode, clip)
         .with_variation(variation)
-        .with_seed(settings.seed);
+        .with_seed(settings.seed)
+        .with_shards(opts.shards.max(1));
     let mut engine =
         SearchEngine::new(cfg, ds.dims, settings.n_way * settings.k_shot)?;
-    engine.set_cascade(cascade.cloned())?;
+    engine.set_cascade(opts.cascade.cloned())?;
+    engine.set_routing(opts.routing.clone())?;
     let mut accuracy = AccuracyMeter::default();
     for ep_idx in 0..settings.episodes {
         let mut rng = episode_rng(settings.seed, ep_idx as u64);

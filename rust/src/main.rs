@@ -9,6 +9,8 @@
 //!                [--cascade] [--cascade-columns N] [--cascade-ladder N]
 //!                [--cascade-shortlist N] [--cascade-margin F]
 //!                [--cascade-budget N]
+//!                [--routing] [--routing-probes N] [--routing-fraction F]
+//!                [--routing-min-coverage F] [--routing-refresh eager|lazy]
 //! mcamvss serve  --listen 127.0.0.1:7171 [--synthetic --dims 48]
 //!                [--max-connections N] [--max-in-flight N]
 //!                [--idle-timeout-ms MS] [--addr-file path]
@@ -21,7 +23,7 @@
 //!                [--dims D] [--top-k K] [--shutdown-server]
 //! mcamvss train  [--smoke] [--variant std|hat_svss|hat_avss]
 //!                [--steps N] [--meta-episodes N] [--cl N] [--out dir]
-//! mcamvss experiment --filter table2   # or fig_cascade, fig9, ...
+//! mcamvss experiment --filter table2   # or fig_cascade, fig_routing, ...
 //! ```
 //!
 //! `serve` without `--listen` runs the in-process closed loop; with
@@ -148,6 +150,34 @@ fn load_config(args: &Args) -> Result<Config> {
         }
         cfg.cascade = Some(cascade);
     }
+    // --routing enables the probe-4 lazy default; each key overrides one
+    // knob (malformed values rejected by cfg.validate()).
+    let routing_keys =
+        ["routing-probes", "routing-fraction", "routing-min-coverage", "routing-refresh"];
+    if args.flag("routing") || routing_keys.iter().any(|k| args.opt(k).is_some()) {
+        let mut routing = cfg.routing.take().unwrap_or_default();
+        if let Some(v) = args.opt_usize("routing-probes")? {
+            routing.probes = Some(v);
+        }
+        if let Some(raw) = args.opt("routing-fraction") {
+            routing.fraction = Some(raw.parse().with_context(|| {
+                format!("--routing-fraction: expected float, got {raw:?}")
+            })?);
+        }
+        if let Some(raw) = args.opt("routing-min-coverage") {
+            routing.min_coverage = raw.parse().with_context(|| {
+                format!("--routing-min-coverage: expected float, got {raw:?}")
+            })?;
+        }
+        if let Some(raw) = args.opt("routing-refresh") {
+            routing.refresh = match raw.to_ascii_lowercase().as_str() {
+                "eager" => mcamvss::search::RefreshPolicy::Eager,
+                "lazy" => mcamvss::search::RefreshPolicy::Lazy,
+                other => bail!("--routing-refresh: expected eager or lazy, got {other:?}"),
+            };
+        }
+        cfg.routing = Some(routing);
+    }
     // --faults enables the worn-device profile; each rate key overrides
     // one probability (out-of-range rates rejected by cfg.validate()).
     let fault_keys = ["stuck-low", "stuck-high", "retention-drift", "read-disturb"];
@@ -253,6 +283,13 @@ fn cmd_eval(args: &Args) -> Result<()> {
         .cascade
         .as_ref()
         .map(|settings| settings.to_cascade(cfg.encoding.word_length(cfg.cl)));
+    let routing = cfg.routing.as_ref().map(|settings| settings.to_routing());
+    if let Some(routing) = &routing {
+        println!(
+            "routing: {:?} of {} shard(s), min_coverage {}, {:?} refresh",
+            routing.probes, cfg.shards, routing.min_coverage, routing.refresh
+        );
+    }
     let t0 = Instant::now();
     let result = experiments::run_mcam_eval_opts(
         &store,
@@ -263,7 +300,7 @@ fn cmd_eval(args: &Args) -> Result<()> {
         cfg.mode,
         cfg.variation,
         settings,
-        cascade.as_ref(),
+        experiments::EvalOpts { cascade: cascade.as_ref(), shards: cfg.shards, routing },
     )?;
     println!(
         "accuracy {}%  energy {:.2} nJ/search  iterations {}  device-throughput {:.1}/s  (wall {:.1}s)",
@@ -318,6 +355,13 @@ fn build_server(
             cascade.iteration_budget
         );
     }
+    let routing = cfg.routing.as_ref().map(|settings| settings.to_routing());
+    if let Some(routing) = &routing {
+        println!(
+            "routing: {:?} of {} shard(s), min_coverage {}, {:?} refresh",
+            routing.probes, cfg.shards, routing.min_coverage, routing.refresh
+        );
+    }
     if let Some(faults) = &cfg.faults {
         println!(
             "faults: stuck {}/{}, retention_drift {}, read_disturb {} (persistent, seed-derived)",
@@ -338,6 +382,7 @@ fn build_server(
                 .with_shards(cfg.shards);
             let setup = mcamvss::coordinator::EngineSetup {
                 cascade,
+                routing,
                 faults: cfg.faults.as_ref().map(|f| f.to_model()),
                 scrub: cfg.scrub.as_ref().map(|s| s.to_scrub()),
             };
@@ -354,6 +399,9 @@ fn build_server(
         "float" => {
             if cascade.is_some() {
                 bail!("--cascade requires the mcam backend (the float baseline has no device)");
+            }
+            if routing.is_some() {
+                bail!("--routing requires the mcam backend (the float baseline has no shards)");
             }
             if cfg.faults.is_some() || cfg.scrub.is_some() {
                 bail!("--faults/--scrub require the mcam backend (no flash media to wear out)");
@@ -494,6 +542,20 @@ fn report_serve(responses: &[Response], truth: &[u32], wall: std::time::Duration
             sensed as f64 / cascaded.len() as f64,
             saved,
             exits
+        );
+    }
+    // Honest routing accounting, aggregated the same way.
+    let routed: Vec<&mcamvss::search::RoutingStats> = sorted
+        .iter()
+        .filter_map(|r| r.outcome.as_ref().ok().and_then(|o| o.routing.as_ref()))
+        .collect();
+    if !routed.is_empty() {
+        let probed: usize = routed.iter().map(|s| s.shards_probed).sum();
+        let saved: i64 = routed.iter().map(|s| s.iterations_saved).sum();
+        println!(
+            "routing: {:.1} shard(s) probed/request ({} string senses saved vs flat scans)",
+            probed as f64 / routed.len() as f64,
+            saved
         );
     }
 }
@@ -862,8 +924,22 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Experiment names `experiment --filter` accepts (besides `all`).
+/// An unknown filter is a hard error listing these — a typo'd name must
+/// never silently run zero experiments and exit 0.
+const EXPERIMENTS: &[&str] = &[
+    "fig_cascade", "fig_faults", "fig_routing", "table1", "headline", "fig2", "fig3", "fig5",
+    "fig6", "fig7", "fig9", "table2",
+];
+
 fn cmd_experiment(args: &Args) -> Result<()> {
     let filter = args.opt("filter").unwrap_or("all");
+    if filter != "all" && !EXPERIMENTS.contains(&filter) {
+        bail!(
+            "--filter {filter:?} matches no experiment (known: all, {})",
+            EXPERIMENTS.join(", ")
+        );
+    }
     let smoke = args.flag("smoke");
     let out_dir = args.opt("out").map(std::path::PathBuf::from);
     if let Some(dir) = &out_dir {
@@ -898,6 +974,17 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         println!("{}", experiments::fig_faults::render(&sweep));
         write_csv("fig_faults", &experiments::fig_faults::csv(&sweep))?;
         if filter == "fig_faults" {
+            return Ok(());
+        }
+    }
+
+    // fig_routing sweeps shards-probed x shard count on a built-in
+    // hierarchically-clustered episode — also artifact-free.
+    if want("fig_routing") {
+        let sweep = experiments::fig_routing::run(0xC0A25E)?;
+        println!("{}", experiments::fig_routing::render(&sweep));
+        write_csv("fig_routing", &experiments::fig_routing::csv(&sweep))?;
+        if filter == "fig_routing" {
             return Ok(());
         }
     }
@@ -985,4 +1072,33 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         }
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A typo'd `--filter` must be a hard error naming every experiment,
+    /// not a silent zero-experiment success.
+    #[test]
+    fn experiment_filter_rejects_unknown_names() {
+        let argv: Vec<String> =
+            ["experiment", "--filter", "fig_nonexistent"].iter().map(|s| s.to_string()).collect();
+        let args = Args::parse(&argv).unwrap();
+        let err = cmd_experiment(&args).expect_err("unknown filter must fail");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("fig_nonexistent"), "names the bad filter: {msg}");
+        for name in EXPERIMENTS {
+            assert!(msg.contains(name), "lists {name}: {msg}");
+        }
+    }
+
+    #[test]
+    fn experiment_list_covers_dispatch() {
+        // every `--filter` early-out name must be in the known list
+        for name in ["fig_cascade", "fig_faults", "fig_routing", "table2"] {
+            assert!(EXPERIMENTS.contains(&name), "{name} missing from EXPERIMENTS");
+        }
+        assert!(!EXPERIMENTS.contains(&"all"), "`all` is implicit, not a name");
+    }
 }

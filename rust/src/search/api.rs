@@ -19,6 +19,7 @@
 //!   back as a typed `Err`, never a panic.
 
 use crate::search::cascade::CascadeStats;
+use crate::search::routing::RoutingStats;
 use crate::search::SearchMode;
 use std::fmt;
 
@@ -193,6 +194,7 @@ pub struct Hit {
 ///     coverage: 1.0,
 ///     full_scores: None,
 ///     cascade: None,
+///     routing: None,
 /// };
 /// assert_eq!(response.top().unwrap().label, 7);
 /// assert!(!response.is_partial());
@@ -230,6 +232,13 @@ pub struct SearchResponse {
     /// through a progressive-precision cascade
     /// ([`crate::search::cascade::CascadeConfig`]).
     pub cascade: Option<CascadeStats>,
+    /// Shard-routing accounting; present iff the backend answered through
+    /// the routed path ([`crate::search::routing::RoutingConfig`] with
+    /// probes other than `All` — the `All` bypass runs the flat path
+    /// verbatim and attaches nothing). Routing narrows which shards were
+    /// *sensed*; [`Self::coverage`] stays health-based, so a routed and a
+    /// flat answer from the same fleet report the same coverage.
+    pub routing: Option<RoutingStats>,
 }
 
 impl SearchResponse {
@@ -365,6 +374,15 @@ impl BackendStats {
     /// Shards currently `Degraded`.
     pub fn degraded_shards(&self) -> usize {
         self.shard_health.iter().filter(|h| **h == ShardHealth::Degraded).count()
+    }
+
+    /// Shards the routing tier may dispatch to: everything not `Failed`
+    /// (DESIGN.md §Routing — `Degraded` shards stay eligible, merely
+    /// deprioritized; an *empty* eligible set means every response is
+    /// [`EngineError::EmptySupport`], routed or not). Software backends
+    /// report their single logical shard as eligible.
+    pub fn routing_eligible_shards(&self) -> usize {
+        self.shards - self.failed_shards()
     }
 }
 
@@ -746,7 +764,8 @@ pub fn decode_request_body(r: &mut ByteReader<'_>) -> Result<WireRequest, BinioE
 /// Response body: `iterations u64 | device_latency_us f64 | coverage f64
 /// | hits (count u32 + [index u64 | label u32 | score f64]) |
 /// full_scores (present u8 [+ f64 vec]) | cascade (present u8 [+
-/// stages])`.
+/// stages]) | routing (present u8 [+ shards_probed u64 + shards_sensed
+/// u64 + iterations_saved u64])`.
 pub fn encode_response_body(resp: &SearchResponse, w: &mut ByteWriter) {
     w.u64(resp.iterations);
     w.f64(resp.device_latency_us);
@@ -774,6 +793,15 @@ pub fn encode_response_body(resp: &SearchResponse, w: &mut ByteWriter) {
             }
             w.u64(stats.iterations_saved as u64);
             w.u8(stats.early_exited as u8);
+        }
+    }
+    match &resp.routing {
+        None => w.u8(0),
+        Some(stats) => {
+            w.u8(1);
+            w.u64(stats.shards_probed as u64);
+            w.u64(stats.shards_sensed as u64);
+            w.u64(stats.iterations_saved as u64);
         }
     }
 }
@@ -824,8 +852,24 @@ pub fn decode_response_body(r: &mut ByteReader<'_>) -> Result<SearchResponse, Bi
     } else {
         None
     };
+    let routing = if decode_flag(r.u8()?, "bad routing presence flag")? {
+        let shards_probed = decode_usize(r.u64()?, "shards_probed overflows usize")?;
+        let shards_sensed = decode_usize(r.u64()?, "shards_sensed overflows usize")?;
+        let iterations_saved = r.u64()? as i64;
+        Some(RoutingStats { shards_probed, shards_sensed, iterations_saved })
+    } else {
+        None
+    };
     r.expect_end()?;
-    Ok(SearchResponse { hits, iterations, device_latency_us, coverage, full_scores, cascade })
+    Ok(SearchResponse {
+        hits,
+        iterations,
+        device_latency_us,
+        coverage,
+        full_scores,
+        cascade,
+        routing,
+    })
 }
 
 /// Error body: `code u16 | a u64 | b u64 | message (len u32 + utf-8)`.
@@ -1023,6 +1067,12 @@ mod tests {
                 iterations_saved: -3,
                 early_exited: true,
             }),
+            routing: Some(RoutingStats {
+                shards_probed: 2,
+                shards_sensed: 4,
+                // negative saved survives the u64 two's-complement trip
+                iterations_saved: -17,
+            }),
         };
         let mut w = ByteWriter::new();
         encode_response_body(&resp, &mut w);
@@ -1043,6 +1093,7 @@ mod tests {
             coverage: 1.0,
             full_scores: None,
             cascade: None,
+            routing: None,
         };
         let mut w = ByteWriter::new();
         encode_response_body(&resp, &mut w);

@@ -25,8 +25,19 @@
 //! reprograms only the affected shard (a fresh block reseeded from the
 //! same derived stream — bit-identical to having programmed everything at
 //! once), and [`SearchEngine::remove`] tombstones a slot (its strings stay
-//! physically sensed but never ranked) until the dead fraction crosses
-//! [`REBALANCE_DEAD_FRACTION`], when the engine compacts and renumbers.
+//! physically sensed but never ranked) until the **shard's own** dead
+//! fraction crosses [`REBALANCE_DEAD_FRACTION`], when only that shard
+//! reclaims its tombstones — global indices stay stable and untouched
+//! shards stay bitwise identical, so a large table never stops the world.
+//! Appending into a full table still compacts globally (renumbering) to
+//! free capacity.
+//!
+//! **Routing** ([`SearchEngine::set_routing`], DESIGN.md §Routing): with
+//! a [`RoutingConfig`] installed, a cheap per-shard-centroid coarse stage
+//! picks the few shards worth sensing and only those run the kernel —
+//! with honest representative billing and [`RoutingStats`] on every
+//! routed response. `probes = All` (or no routing) runs the flat path
+//! verbatim.
 //!
 //! **Top-k** selection runs through the bounded heap of
 //! [`crate::search::api::rank_top_k`] — O(k) memory per response instead
@@ -54,16 +65,20 @@ use crate::search::api::{
     ShardHealth, SupportSet, VectorSearchBackend,
 };
 use crate::search::cascade::{CascadeConfig, CascadeStats, Shortlist};
+use crate::search::routing::{Probes, RefreshPolicy, RoutingConfig, RoutingStats};
 use crate::search::SearchMode;
 use crate::testutil::derive_seed;
 use crate::util::par::par_map_mut;
 use crate::CELLS_PER_STRING;
 
-/// Tombstoned fraction of the slot table that triggers a compaction:
-/// dead slots are dropped, survivors renumbered, and every shard
-/// reprogrammed from its seed-derived stream. Until then tombstoned
-/// strings keep drawing sense energy (they are physically programmed),
-/// exactly like dead rows on a real die awaiting garbage collection.
+/// Tombstoned fraction of a **shard's** programmed slots that triggers
+/// that shard's local reclaim: only the crossing shard reprograms (its
+/// live slots, from its seed-derived stream) — global indices stay
+/// stable, no renumbering, and untouched shards stay bitwise identical.
+/// Until then tombstoned strings keep drawing sense energy (they are
+/// physically programmed), exactly like dead rows on a real die awaiting
+/// garbage collection. A *global* compact+renumber now happens only when
+/// an append hits a full table that still holds tombstones.
 pub const REBALANCE_DEAD_FRACTION: f64 = 0.25;
 
 /// Minimum string senses per shard before batched search pays for a
@@ -142,9 +157,12 @@ impl EngineConfig {
 }
 
 /// One support slot: the vector's encoded NAND strings (kept so shards
-/// can be reprogrammed on append/rebalance), its label, and liveness.
+/// can be reprogrammed on append/rebalance), its raw embedding (kept so
+/// the routing tier can build shard centroids host-side), its label, and
+/// liveness.
 struct SupportEntry {
     strings: Vec<[u8; CELLS_PER_STRING]>,
+    embedding: Vec<f32>,
     label: u32,
     alive: bool,
 }
@@ -223,13 +241,38 @@ impl CascadePlan {
     }
 }
 
-/// One MCAM block holding a contiguous slice of the slot table.
+/// Installed routing tier (see [`SearchEngine::set_routing`]): the source
+/// policy plus per-shard centroid representatives with staleness
+/// tracking.
+struct RoutingState {
+    config: RoutingConfig,
+    /// Per-shard centroid of the live programmed embeddings (`None`
+    /// while the shard holds no live slots — such shards are never
+    /// probed).
+    centroids: Vec<Option<Vec<f32>>>,
+    /// Shards mutated since their centroid was last computed.
+    dirty: Vec<bool>,
+}
+
+/// A resolved routed dispatch for one batch: per-request probed shard
+/// sets plus the representative-scan cost every request paid.
+struct RoutePlan {
+    /// Probed shard indices per request, ascending.
+    probed: Vec<Vec<usize>>,
+    /// Eligible shards whose representatives were scored per request —
+    /// billed as one summary-string sense each.
+    eligible: usize,
+}
+
+/// One MCAM block holding a slice of the slot table.
 struct Shard {
     block: McamBlock,
-    /// Global slot index of this shard's first support vector.
-    base: usize,
-    /// Slots programmed into this shard (live + tombstoned).
-    n: usize,
+    /// Global slot indices programmed into this shard, ascending (live +
+    /// tombstoned). Slot `i` is *owned* by shard `i / per_shard`, but a
+    /// shard-local reclaim may have dropped owned tombstones from the
+    /// block — `slots` is what is physically programmed (and sensed),
+    /// position `j` in this list is the block's string-table column `j`.
+    slots: Vec<usize>,
     /// Health state (DESIGN.md §Reliability): `Failed` shards are
     /// excluded from sensing and ranking, `Degraded` ones answer through
     /// the majority-of-3 re-sense.
@@ -244,7 +287,8 @@ impl Shard {
     /// Score every query of the batch against this shard's slots.
     /// `wordlines[q]` carries the query's (possibly overridden) mode and
     /// its iteration-major drives: `g·W + c` for SVSS, `g` for AVSS.
-    /// Returns `wordlines.len() × n` partial scores (query-major). Each
+    /// Returns `wordlines.len() × slots.len()` partial scores
+    /// (query-major). Each
     /// iteration hands its contiguous string range straight to the fused
     /// sense→vote→accumulate kernel ([`McamBlock::sense_votes_range`]) —
     /// no intermediate currents buffer — and the kernel preserves the
@@ -258,7 +302,7 @@ impl Shard {
         weights: &[f64],
         ladder: &SenseLadder,
     ) -> Vec<f64> {
-        let m = self.n;
+        let m = self.slots.len();
         let mut partial = vec![0f64; wordlines.len() * m];
         if m == 0 {
             return partial;
@@ -285,13 +329,14 @@ impl Shard {
         partial
     }
 
-    /// Selectively score this shard's candidate slots (local indices,
-    /// ascending) for one cascade stage: iteration (g, c) senses only
-    /// the strings `(g·W + c)·n + local[j]` through the stage's ladder
-    /// ([`McamBlock::sense_votes_select`]), accumulating weighted votes
-    /// per candidate. With `local == 0..n` and a full-precision stage
-    /// this is bit-identical to [`Self::score_batch`] for one query —
-    /// the cascade parity contract.
+    /// Selectively score this shard's candidate slots (positions within
+    /// `slots`, ascending) for one cascade stage: iteration (g, c)
+    /// senses only the strings `(g·W + c)·m + local[j]` through the
+    /// stage's ladder ([`McamBlock::sense_votes_select`]), accumulating
+    /// weighted votes per candidate. With `local == 0..m` and a
+    /// full-precision stage this is bit-identical to
+    /// [`Self::score_batch`] for one query — the cascade parity
+    /// contract.
     fn score_select(
         &mut self,
         local: &[usize],
@@ -305,7 +350,7 @@ impl Shard {
         if local.is_empty() {
             return scores;
         }
-        let m = self.n;
+        let m = self.slots.len();
         for g in 0..groups {
             for c in 0..stage.columns {
                 let wl = match stage.mode {
@@ -341,7 +386,7 @@ fn score_shard_batch(
     ladder: &SenseLadder,
 ) -> Vec<f64> {
     match shard.health {
-        ShardHealth::Failed => vec![0f64; wordlines.len() * shard.n],
+        ShardHealth::Failed => vec![0f64; wordlines.len() * shard.slots.len()],
         ShardHealth::Healthy => shard.score_batch(wordlines, groups, word_length, weights, ladder),
         ShardHealth::Degraded => {
             let a = shard.score_batch(wordlines, groups, word_length, weights, ladder);
@@ -413,6 +458,8 @@ pub struct SearchEngine {
     timing: SearchTiming,
     /// Installed progressive-precision schedule (see [`Self::set_cascade`]).
     cascade: Option<CascadePlan>,
+    /// Installed shard-routing tier (see [`Self::set_routing`]).
+    routing: Option<RoutingState>,
 }
 
 impl SearchEngine {
@@ -469,8 +516,7 @@ impl SearchEngine {
                     cfg.variation,
                     derive_seed(cfg.seed, s as u64),
                 ),
-                base: 0,
-                n: 0,
+                slots: Vec::new(),
                 health: ShardHealth::Healthy,
                 canary_margin: 1.0,
                 spares_used: 0,
@@ -508,6 +554,7 @@ impl SearchEngine {
             energy: EnergyAccount::default(),
             timing: SearchTiming::default(),
             cascade: None,
+            routing: None,
             cfg,
         })
     }
@@ -580,6 +627,91 @@ impl SearchEngine {
         self.cascade.as_ref().map(|plan| &plan.config)
     }
 
+    /// Install (or clear, with `None`) the hierarchical shard-routing
+    /// tier (DESIGN.md §Routing). Subsequent searches run a cheap coarse
+    /// stage first — the query is scored against one centroid
+    /// *representative* per shard — and the full sense→vote→accumulate
+    /// kernel dispatches only to the best [`Probes`] shards, with every
+    /// representative comparison billed as one summary-string sense and a
+    /// [`RoutingStats`] on every routed response. `Failed` shards are
+    /// never probed; `Degraded` shards are deprioritized (and still pay
+    /// their majority-of-3 re-sense when probed). [`Probes::All`] is the
+    /// exact bypass: searches run the flat (or cascade) path verbatim,
+    /// bitwise identical to an engine with no routing installed.
+    ///
+    /// Malformed policies come back as [`EngineError::InvalidConfig`]
+    /// and leave no routing installed. Routing composes with an
+    /// installed cascade: the router picks shards, the cascade then
+    /// prunes strings within them.
+    pub fn set_routing(&mut self, routing: Option<RoutingConfig>) -> Result<(), EngineError> {
+        let Some(config) = routing else {
+            self.routing = None;
+            return Ok(());
+        };
+        config.validate()?;
+        let shards = self.shards.len();
+        let eager = config.refresh == RefreshPolicy::Eager;
+        self.routing = Some(RoutingState {
+            config,
+            centroids: vec![None; shards],
+            dirty: vec![true; shards],
+        });
+        if eager {
+            for s in 0..shards {
+                self.refresh_centroid(s);
+            }
+        }
+        Ok(())
+    }
+
+    /// The installed routing policy, if any.
+    pub fn routing(&self) -> Option<&RoutingConfig> {
+        self.routing.as_ref().map(|rt| &rt.config)
+    }
+
+    /// Recompute shard `s`'s representative if it is stale: the centroid
+    /// (per-dimension mean) of the shard's live programmed embeddings,
+    /// `None` when the shard holds no live slots. Pure host arithmetic —
+    /// no device RNG is consumed, so installing routing never perturbs
+    /// seeded sensing streams.
+    fn refresh_centroid(&mut self, s: usize) {
+        let Some(rt) = self.routing.as_mut() else { return };
+        if !rt.dirty[s] {
+            return;
+        }
+        let mut sum = vec![0f64; self.layout.dims];
+        let mut count = 0usize;
+        for &i in &self.shards[s].slots {
+            let entry = &self.entries[i];
+            if !entry.alive {
+                continue;
+            }
+            for (acc, &x) in sum.iter_mut().zip(&entry.embedding) {
+                *acc += x as f64;
+            }
+            count += 1;
+        }
+        rt.centroids[s] =
+            (count > 0).then(|| sum.iter().map(|&v| (v / count as f64) as f32).collect());
+        rt.dirty[s] = false;
+    }
+
+    /// Mark shard `s`'s representative stale after any mutation that can
+    /// move its centroid (append/remove/reclaim/rebuild/scrub), honoring
+    /// the installed [`RefreshPolicy`].
+    fn note_shard_mutated(&mut self, s: usize) {
+        let eager = match self.routing.as_mut() {
+            None => return,
+            Some(rt) => {
+                rt.dirty[s] = true;
+                rt.config.refresh == RefreshPolicy::Eager
+            }
+        };
+        if eager {
+            self.refresh_centroid(s);
+        }
+    }
+
     pub fn layout(&self) -> &VectorLayout {
         &self.layout
     }
@@ -608,9 +740,12 @@ impl SearchEngine {
         self.shards.len()
     }
 
-    /// Slots held by each shard (test/introspection).
+    /// Slots physically programmed in each shard (test/introspection) —
+    /// after a shard-local reclaim this can be fewer than the slots the
+    /// shard *owns*, because reclaimed tombstones are no longer
+    /// programmed.
     pub fn shard_sizes(&self) -> Vec<usize> {
-        self.shards.iter().map(|s| s.n).collect()
+        self.shards.iter().map(|s| s.slots.len()).collect()
     }
 
     pub fn energy(&self) -> &EnergyAccount {
@@ -724,14 +859,16 @@ impl SearchEngine {
         for s in 0..self.shards.len() {
             // (0) Failed shard: erase + full rebuild under a fresh epoch.
             if self.shards[s].health == ShardHealth::Failed {
-                let (base, n) = (self.shards[s].base, self.shards[s].n);
-                for meta in &mut self.slot_meta[base..base + n] {
+                let held = self.shards[s].slots.clone();
+                for &i in &held {
+                    let meta = &mut self.slot_meta[i];
                     meta.epoch += 1;
                     meta.programmed_at_age = age_now;
                     meta.programmed_at_sweep = sweeps_now;
                 }
                 self.shards[s].health = ShardHealth::Healthy;
-                self.rebuild_shard(s);
+                let n = held.len();
+                self.rebuild_shard(s, held);
                 self.energy.add_program(&self.energy_model, (n * spv) as u64);
                 report.shards_rebuilt += 1;
             }
@@ -749,10 +886,11 @@ impl SearchEngine {
             worst_margin = worst_margin.min(margin);
             self.energy.add_sense(&self.energy_model, cfg.canaries as u64, self.ladder.len());
 
-            // (2) Sweep every slot: re-sense, compare, heal or remap.
-            let (base, n) = (self.shards[s].base, self.shards[s].n);
+            // (2) Sweep every programmed slot: re-sense, compare, heal
+            // or remap.
+            let held = self.shards[s].slots.clone();
             let mut stuck_unremapped = 0usize;
-            for i in base..base + n {
+            for i in held {
                 let meta = self.slot_meta[i];
                 let age = age_now.saturating_sub(meta.programmed_at_age);
                 let senses = sweeps_now.saturating_sub(meta.programmed_at_sweep);
@@ -804,6 +942,10 @@ impl SearchEngine {
             };
             report.spares_remaining += cfg.spares - self.shards[s].spares_used;
             self.refresh_shard_overlay(s);
+            // Remaps moved physical keys; routed centroids are embedding-
+            // based so this is a cheap no-op recompute, but the contract
+            // is "any shard mutation invalidates its representative".
+            self.note_shard_mutated(s);
         }
         report.canary_margin = worst_margin;
         self.canary_margin = worst_margin;
@@ -824,11 +966,12 @@ impl SearchEngine {
         if self.fault_state.is_none() {
             return;
         }
-        let (base, n) = (self.shards[s].base, self.shards[s].n);
         let spv = self.layout.strings_per_vector();
         let age_now = self.fault_state.age;
         let sweeps_now = self.sweeps;
-        for i in base..base + n {
+        let m = self.shards[s].slots.len();
+        for local in 0..m {
+            let i = self.shards[s].slots[local];
             let meta = self.slot_meta[i];
             let age = age_now.saturating_sub(meta.programmed_at_age);
             let senses = sweeps_now.saturating_sub(meta.programmed_at_sweep);
@@ -841,7 +984,7 @@ impl SearchEngine {
                     senses,
                     &self.entries[i].strings[column],
                 );
-                self.shards[s].block.rewrite_cells(column * n + (i - base), &cells);
+                self.shards[s].block.rewrite_cells(column * m + local, &cells);
             }
         }
     }
@@ -868,20 +1011,24 @@ impl SearchEngine {
     fn encode_entry(&self, embedding: &[f32], label: u32) -> SupportEntry {
         let values = self.support_spec.quantize_vec(embedding);
         let words = self.cfg.encoding.encode_vector(&values, self.cfg.cl);
-        SupportEntry { strings: self.layout.strings_for(&words), label, alive: true }
+        SupportEntry {
+            strings: self.layout.strings_for(&words),
+            embedding: embedding.to_vec(),
+            label,
+            alive: true,
+        }
     }
 
-    /// Reprogram shard `s` from the slot table: a **fresh** block seeded
-    /// from the engine's derived stream (program/erase cycle on a real
-    /// die), programmed column-major — iteration (g, c) owns the
-    /// contiguous per-shard range `[(g·W + c)·m, (g·W + c + 1)·m)`.
-    /// Because the block RNG restarts from the same derived seed every
-    /// rebuild, incremental appends land bit-identical to programming the
-    /// whole slot table at once (`rust/tests/test_api.rs`).
-    fn rebuild_shard(&mut self, s: usize) {
-        let lo = (s * self.per_shard).min(self.entries.len());
-        let hi = ((s + 1) * self.per_shard).min(self.entries.len());
-        let count = hi - lo;
+    /// Reprogram shard `s` to hold exactly `slots` (ascending global
+    /// indices into the slot table): a **fresh** block seeded from the
+    /// engine's derived stream (program/erase cycle on a real die),
+    /// programmed column-major — iteration (g, c) owns the contiguous
+    /// per-shard range `[(g·W + c)·m, (g·W + c + 1)·m)` with
+    /// `m = slots.len()`. Because the block RNG restarts from the same
+    /// derived seed every rebuild, incremental appends land bit-identical
+    /// to programming the whole slot table at once
+    /// (`rust/tests/test_api.rs`).
+    fn rebuild_shard(&mut self, s: usize, slots: Vec<usize>) {
         let spv = self.layout.strings_per_vector();
         let mut block = McamBlock::new(
             self.per_shard * spv,
@@ -890,8 +1037,8 @@ impl SearchEngine {
             derive_seed(self.cfg.seed, s as u64),
         );
         for column in 0..spv {
-            for entry in &self.entries[lo..hi] {
-                block.program_string(&entry.strings[column]);
+            for &gi in &slots {
+                block.program_string(&self.entries[gi].strings[column]);
             }
         }
         // Health, margin and spare accounting survive the rebuild: a
@@ -900,12 +1047,39 @@ impl SearchEngine {
         let old = &self.shards[s];
         let (health, canary_margin, spares_used) =
             (old.health, old.canary_margin, old.spares_used);
-        self.shards[s] = Shard { block, base: lo, n: count, health, canary_margin, spares_used };
+        self.shards[s] = Shard { block, slots, health, canary_margin, spares_used };
         self.refresh_shard_overlay(s);
+        self.note_shard_mutated(s);
+    }
+
+    /// The full slot range shard `s` owns (live + tombstoned).
+    fn shard_slot_range(&self, s: usize) -> Vec<usize> {
+        let lo = (s * self.per_shard).min(self.entries.len());
+        let hi = ((s + 1) * self.per_shard).min(self.entries.len());
+        (lo..hi).collect()
+    }
+
+    /// Shard-local tombstone reclaim: rebuild shard `s` programming only
+    /// its live slots. Global indices are untouched — tombstoned slots
+    /// stay in the table (still counted by [`Self::slots`], still typed
+    /// [`EngineError::AlreadyRemoved`] on a re-remove) but stop being
+    /// sensed and billed, and **other shards' blocks are not rebuilt**,
+    /// so their reads stay bitwise identical (`rust/tests/test_api.rs`
+    /// pins this).
+    fn reclaim_shard(&mut self, s: usize) {
+        let keep: Vec<usize> = self.shards[s]
+            .slots
+            .iter()
+            .copied()
+            .filter(|&i| self.entries[i].alive)
+            .collect();
+        self.rebuild_shard(s, keep);
     }
 
     /// Drop tombstoned slots, renumber survivors, and reprogram every
-    /// shard (the rebalance step behind [`REBALANCE_DEAD_FRACTION`]).
+    /// shard — the global rebalance behind the append-at-capacity path
+    /// (per-shard threshold crossings reclaim locally instead, see
+    /// [`Self::reclaim_shard`]).
     fn compact(&mut self) {
         // The fault bookkeeping travels with its slot through renumbering
         // (a slot's physical placement key outlives its index).
@@ -914,7 +1088,8 @@ impl SearchEngine {
         self.entries.retain(|e| e.alive);
         self.dead = 0;
         for s in 0..self.shards.len() {
-            self.rebuild_shard(s);
+            let range = self.shard_slot_range(s);
+            self.rebuild_shard(s, range);
         }
     }
 
@@ -952,7 +1127,8 @@ impl SearchEngine {
             .collect();
         self.next_phys = self.entries.len() as u64;
         for s in 0..self.shards.len() {
-            self.rebuild_shard(s);
+            let range = self.shard_slot_range(s);
+            self.rebuild_shard(s, range);
         }
         Ok(())
     }
@@ -1001,14 +1177,21 @@ impl SearchEngine {
         });
         self.next_phys += 1;
         let index = self.entries.len() - 1;
-        self.rebuild_shard(index / self.per_shard);
+        let s = index / self.per_shard;
+        // The owning shard reprograms whatever it currently holds plus
+        // the new slot — if a local reclaim dropped tombstones earlier,
+        // they stay dropped.
+        let mut slots = std::mem::take(&mut self.shards[s].slots);
+        slots.push(index);
+        self.rebuild_shard(s, slots);
         Ok(index)
     }
 
     /// Tombstone slot `index`: its strings stay programmed (and sensed)
-    /// but it can never be ranked. Once the dead fraction reaches
-    /// [`REBALANCE_DEAD_FRACTION`] the slot table compacts — survivors
-    /// are **renumbered** and every shard reprograms.
+    /// but it can never be ranked. Once the **owning shard's** dead
+    /// fraction reaches [`REBALANCE_DEAD_FRACTION`] that shard alone
+    /// reclaims its tombstones — indices never shift and other shards'
+    /// blocks are untouched.
     pub fn remove(&mut self, index: usize) -> Result<(), EngineError> {
         match self.entries.get_mut(index) {
             None => Err(EngineError::IndexOutOfRange { index, len: self.entries.len() }),
@@ -1016,8 +1199,17 @@ impl SearchEngine {
             Some(entry) => {
                 entry.alive = false;
                 self.dead += 1;
-                if self.dead as f64 >= REBALANCE_DEAD_FRACTION * self.entries.len() as f64 {
-                    self.compact();
+                let s = index / self.per_shard;
+                let programmed = self.shards[s].slots.len();
+                let dead_here = self.shards[s]
+                    .slots
+                    .iter()
+                    .filter(|&&i| !self.entries[i].alive)
+                    .count();
+                if dead_here as f64 >= REBALANCE_DEAD_FRACTION * programmed as f64 {
+                    self.reclaim_shard(s);
+                } else {
+                    self.note_shard_mutated(s);
                 }
                 Ok(())
             }
@@ -1130,14 +1322,23 @@ impl SearchEngine {
                 self.refresh_shard_overlay(s);
             }
         }
+        // Routing tier: resolve each request's probed shard set up front.
+        // `None` means run the flat/cascade path verbatim (no routing
+        // installed, or the `Probes::All` exact bypass) — bitwise
+        // identical to an engine with no routing.
+        let route = self.plan_route(requests);
         if self.cascade.is_some() {
             // Take the plan out for the duration of the call (no per-batch
             // clone on the hot path) and restore it afterwards; there is
             // no early return in between.
             let plan = self.cascade.take().expect("checked just above");
-            let result = self.search_batch_cascade(&plan, requests, coverage, covered_live);
+            let result =
+                self.search_batch_cascade(&plan, route.as_ref(), requests, coverage, covered_live);
             self.cascade = Some(plan);
             return result;
+        }
+        if let Some(route) = route {
+            return self.search_batch_routed(&route, requests, coverage);
         }
         let slots = self.entries.len();
         let groups = self.layout.groups;
@@ -1162,7 +1363,7 @@ impl SearchEngine {
         let weights = &self.weights;
         let ladder = &self.ladder;
         let wl_ref = &wordlines;
-        let max_shard_vectors = self.shards.iter().map(|s| s.n).max().unwrap_or(0);
+        let max_shard_vectors = self.shards.iter().map(|s| s.slots.len()).max().unwrap_or(0);
         let sense_events_per_shard = max_shard_vectors * groups * w * requests.len();
         let partials: Vec<Vec<f64>> =
             if self.shards.len() > 1 && sense_events_per_shard >= PARALLEL_SENSE_FLOOR {
@@ -1180,11 +1381,14 @@ impl SearchEngine {
         // score vectors and rank the live slots.
         let mut responses = Vec::with_capacity(requests.len());
         for (qi, request) in requests.iter().enumerate() {
+            // Scatter-stitch per shard slot list (a locally-reclaimed
+            // tombstone is no longer programmed, so its `full_scores`
+            // entry stays 0.0).
             let mut scores = vec![0f64; slots];
             for (shard, partial) in self.shards.iter().zip(&partials) {
-                if shard.n > 0 {
-                    scores[shard.base..shard.base + shard.n]
-                        .copy_from_slice(&partial[qi * shard.n..(qi + 1) * shard.n]);
+                let m = shard.slots.len();
+                for (local, &gi) in shard.slots.iter().enumerate() {
+                    scores[gi] = partial[qi * m + local];
                 }
             }
             // Honest accounting for the full scan: every programmed
@@ -1195,8 +1399,10 @@ impl SearchEngine {
             // re-senses (shards run in parallel, so the slowest sets the
             // latency). The cascade path counts its own (smaller)
             // actuals per stage.
-            let retry =
-                self.shards.iter().any(|s| s.health == ShardHealth::Degraded && s.n > 0);
+            let retry = self
+                .shards
+                .iter()
+                .any(|s| s.health == ShardHealth::Degraded && !s.slots.is_empty());
             let iterations = Self::mode_iterations(&self.layout, wordlines[qi].0)
                 * if retry { 3 } else { 1 };
             self.timing.add_iterations(iterations);
@@ -1206,8 +1412,8 @@ impl SearchEngine {
                 .iter()
                 .map(|s| match s.health {
                     ShardHealth::Failed => 0,
-                    ShardHealth::Healthy => (s.n * groups * w) as u64,
-                    ShardHealth::Degraded => 3 * (s.n * groups * w) as u64,
+                    ShardHealth::Healthy => (s.slots.len() * groups * w) as u64,
+                    ShardHealth::Degraded => 3 * (s.slots.len() * groups * w) as u64,
                 })
                 .sum();
             self.energy.add_sense(&self.energy_model, sensed, self.ladder.len());
@@ -1234,6 +1440,252 @@ impl SearchEngine {
                 coverage,
                 full_scores: if request.options.full_scores { Some(scores) } else { None },
                 cascade: None,
+                routing: None,
+            });
+        }
+        self.sweeps += requests.len() as u64;
+        Ok(responses)
+    }
+
+    /// Resolve the routed probe set for a batch, or `None` when the
+    /// batch should run the flat/cascade path verbatim (no routing
+    /// installed, or the [`Probes::All`] exact bypass — which returns
+    /// before touching any routing state, so the bypass costs nothing).
+    ///
+    /// Eligible shards are non-`Failed` with at least one live slot (a
+    /// centroid exists exactly when there is live content). Per request,
+    /// shards are ordered health band first (`Healthy` before
+    /// `Degraded`), then by centroid score (negated L1 distance to the
+    /// query, best first), ties to the lowest shard index; the probe set
+    /// is the first [`Probes::probe_of`] shards, widened best-first
+    /// until [`RoutingConfig::min_coverage`] of the live slots is
+    /// covered (capped at all eligible shards). Representative scoring
+    /// is pure host arithmetic — no device RNG — so probed shards sense
+    /// exactly as they would serving the request alone.
+    fn plan_route(&mut self, requests: &[SearchRequest<'_>]) -> Option<RoutePlan> {
+        match &self.routing {
+            None => return None,
+            Some(rt) if matches!(rt.config.probes, Probes::All) => return None,
+            Some(_) => {}
+        }
+        for s in 0..self.shards.len() {
+            self.refresh_centroid(s);
+        }
+        let rt = self.routing.as_ref().expect("checked just above");
+        let live_total = self.n_vectors();
+        let eligible: Vec<usize> = self
+            .shards
+            .iter()
+            .enumerate()
+            .filter(|&(s, shard)| {
+                shard.health != ShardHealth::Failed && rt.centroids[s].is_some()
+            })
+            .map(|(s, _)| s)
+            .collect();
+        let live_of = |s: usize| -> usize {
+            self.shards[s].slots.iter().filter(|&&i| self.entries[i].alive).count()
+        };
+        let mut probed = Vec::with_capacity(requests.len());
+        for request in requests {
+            let mut order: Vec<(usize, f64)> = eligible
+                .iter()
+                .map(|&s| {
+                    let centroid = rt.centroids[s].as_ref().expect("eligible has centroid");
+                    let dist: f64 = centroid
+                        .iter()
+                        .zip(request.query)
+                        .map(|(&c, &q)| (c as f64 - q as f64).abs())
+                        .sum();
+                    (s, -dist)
+                })
+                .collect();
+            order.sort_by(|a, b| {
+                let band = |s: usize| (self.shards[s].health == ShardHealth::Degraded) as u8;
+                band(a.0)
+                    .cmp(&band(b.0))
+                    .then_with(|| b.1.total_cmp(&a.1))
+                    .then_with(|| a.0.cmp(&b.0))
+            });
+            let mut take = rt.config.probes.probe_of(order.len());
+            if rt.config.min_coverage > 0.0 && live_total > 0 {
+                let mut covered: usize = order[..take].iter().map(|&(s, _)| live_of(s)).sum();
+                while take < order.len()
+                    && (covered as f64) < rt.config.min_coverage * live_total as f64
+                {
+                    covered += live_of(order[take].0);
+                    take += 1;
+                }
+            }
+            let mut set: Vec<usize> = order[..take].iter().map(|&(s, _)| s).collect();
+            set.sort_unstable();
+            probed.push(set);
+        }
+        Some(RoutePlan { probed, eligible: eligible.len() })
+    }
+
+    /// Routing's share of one request's accounting: the string senses a
+    /// flat health-weighted scan would have spent on the un-probed
+    /// shards, minus the representative senses the coarse stage cost.
+    /// The cascade's own `iterations_saved` (when one is installed) is
+    /// measured against the probed candidate set, so the two shares
+    /// never double-count.
+    fn routing_stats_for(
+        &self,
+        probed: &[usize],
+        eligible: usize,
+        groups: usize,
+        w: usize,
+    ) -> RoutingStats {
+        let billed = |shard: &Shard| -> i64 {
+            let strings = (shard.slots.len() * groups * w) as i64;
+            match shard.health {
+                ShardHealth::Failed => 0,
+                ShardHealth::Healthy => strings,
+                ShardHealth::Degraded => 3 * strings,
+            }
+        };
+        let flat: i64 = self.shards.iter().map(billed).sum();
+        let routed: i64 = probed.iter().map(|&s| billed(&self.shards[s])).sum();
+        let shards_sensed = probed
+            .iter()
+            .map(|&s| match self.shards[s].health {
+                ShardHealth::Degraded => 3,
+                _ => 1,
+            })
+            .sum();
+        RoutingStats {
+            shards_probed: probed.len(),
+            shards_sensed,
+            iterations_saved: flat - routed - eligible as i64,
+        }
+    }
+
+    /// Execute a batch through the routing tier with no cascade: the
+    /// coarse stage has already picked each request's probed shards
+    /// ([`Self::plan_route`]); only those shards sense, and each senses
+    /// only the requests that probed it, in request order. Per-shard RNG
+    /// streams are independent, so the sense stream a probed shard
+    /// consumes for its request subset is exactly what it would consume
+    /// serving those requests alone — routed batches stay bit-identical
+    /// to routed scalar replay (`rust/tests/test_routing.rs`).
+    fn search_batch_routed(
+        &mut self,
+        route: &RoutePlan,
+        requests: &[SearchRequest<'_>],
+        coverage: f64,
+    ) -> Result<Vec<SearchResponse>, EngineError> {
+        let slots = self.entries.len();
+        let groups = self.layout.groups;
+        let w = self.layout.word_length;
+        // Phase 1: encode every query once under its (possibly
+        // overridden) mode.
+        let wordlines: Vec<(SearchMode, Vec<[u8; CELLS_PER_STRING]>)> = requests
+            .iter()
+            .map(|request| {
+                let mode = request.options.mode.unwrap_or(self.cfg.mode);
+                (mode, self.query_wordlines(request.query, mode))
+            })
+            .collect();
+        // Phase 2: each shard scores the subset of the batch that probed
+        // it (ascending request order).
+        let req_of_shard: Vec<Vec<usize>> = (0..self.shards.len())
+            .map(|s| {
+                (0..requests.len())
+                    .filter(|&qi| route.probed[qi].binary_search(&s).is_ok())
+                    .collect()
+            })
+            .collect();
+        let shard_wordlines: Vec<Vec<(SearchMode, Vec<[u8; CELLS_PER_STRING]>)>> = req_of_shard
+            .iter()
+            .map(|reqs| reqs.iter().map(|&qi| wordlines[qi].clone()).collect())
+            .collect();
+        let weights = &self.weights;
+        let ladder = &self.ladder;
+        let swl = &shard_wordlines;
+        let max_shard_vectors = self.shards.iter().map(|s| s.slots.len()).max().unwrap_or(0);
+        let sense_events_per_shard = max_shard_vectors * groups * w * requests.len();
+        let partials: Vec<Vec<f64>> =
+            if self.shards.len() > 1 && sense_events_per_shard >= PARALLEL_SENSE_FLOOR {
+                par_map_mut(&mut self.shards, |s, shard| {
+                    score_shard_batch(shard, &swl[s], groups, w, weights, ladder)
+                })
+            } else {
+                self.shards
+                    .iter_mut()
+                    .enumerate()
+                    .map(|(s, shard)| score_shard_batch(shard, &swl[s], groups, w, weights, ladder))
+                    .collect()
+            };
+        // Phase 3: stitch each request's probed partials and rank within
+        // the probed shards. Coverage stays health-based — routing
+        // narrowing is a ranking decision, not lost capacity.
+        let mut responses = Vec::with_capacity(requests.len());
+        for (qi, request) in requests.iter().enumerate() {
+            let probed = &route.probed[qi];
+            let mut scores = vec![0f64; slots];
+            let mut probed_live = 0usize;
+            for &s in probed {
+                let shard = &self.shards[s];
+                let m = shard.slots.len();
+                let row = req_of_shard[s]
+                    .binary_search(&qi)
+                    .expect("request probes this shard");
+                for (local, &gi) in shard.slots.iter().enumerate() {
+                    scores[gi] = partials[s][row * m + local];
+                    probed_live += self.entries[gi].alive as usize;
+                }
+            }
+            let retry = probed.iter().any(|&s| {
+                self.shards[s].health == ShardHealth::Degraded
+                    && !self.shards[s].slots.is_empty()
+            });
+            let iterations =
+                Self::mode_iterations(&self.layout, wordlines[qi].0) * if retry { 3 } else { 1 };
+            self.timing.add_iterations(iterations);
+            self.timing.finish_search();
+            // Billing: the representative scan (one summary-string sense
+            // per eligible shard) plus the probed shards' strings,
+            // health-weighted exactly like the flat path.
+            let sensed: u64 = probed
+                .iter()
+                .map(|&s| {
+                    let shard = &self.shards[s];
+                    let strings = (shard.slots.len() * groups * w) as u64;
+                    match shard.health {
+                        ShardHealth::Failed => 0,
+                        ShardHealth::Healthy => strings,
+                        ShardHealth::Degraded => 3 * strings,
+                    }
+                })
+                .sum();
+            self.energy.add_sense(
+                &self.energy_model,
+                route.eligible as u64 + sensed,
+                self.ladder.len(),
+            );
+            self.energy.finish_search();
+            let stats = self.routing_stats_for(probed, route.eligible, groups, w);
+            let mut probe_mask = vec![false; self.shards.len()];
+            for &s in probed {
+                probe_mask[s] = true;
+            }
+            let top_k = request.options.top_k.min(probed_live);
+            let hits = rank_top_k(
+                top_k,
+                self.entries
+                    .iter()
+                    .enumerate()
+                    .filter(|&(i, e)| e.alive && probe_mask[i / self.per_shard])
+                    .map(|(i, e)| Hit { index: i, label: e.label, score: scores[i] }),
+            );
+            responses.push(SearchResponse {
+                hits,
+                iterations,
+                device_latency_us: iterations as f64 * SEARCH_ITERATION_US,
+                coverage,
+                full_scores: request.options.full_scores.then_some(scores),
+                cascade: None,
+                routing: Some(stats),
             });
         }
         self.sweeps += requests.len() as u64;
@@ -1247,9 +1699,18 @@ impl SearchEngine {
     /// is per stage actually executed: `iterations`, the energy ledger
     /// and the timing model see exactly what ran, and every response
     /// carries a [`CascadeStats`].
+    ///
+    /// With a routed dispatch (`route`), the candidate set narrows to the
+    /// request's probed shards before stage 0 — the router picks shards,
+    /// the cascade prunes strings within them — and the representative
+    /// scan is billed per request on top of the stage senses. The
+    /// cascade's `iterations_saved` baseline is the probed candidate set,
+    /// so it never double-counts the routing tier's share (which
+    /// [`RoutingStats::iterations_saved`] reports against the flat scan).
     fn search_batch_cascade(
         &mut self,
         plan: &CascadePlan,
+        route: Option<&RoutePlan>,
         requests: &[SearchRequest<'_>],
         coverage: f64,
         covered_live: usize,
@@ -1257,9 +1718,8 @@ impl SearchEngine {
         let slots = self.entries.len();
         let groups = self.layout.groups;
         let w = self.layout.word_length;
-        let full_scan_sensed = (slots * groups * w) as i64;
         let mut responses = Vec::with_capacity(requests.len());
-        for request in requests {
+        for (qi, request) in requests.iter().enumerate() {
             // Encode the query once per distinct stage mode.
             let mut wl_cache: Vec<(SearchMode, Vec<[u8; CELLS_PER_STRING]>)> = Vec::new();
             for stage in &plan.stages {
@@ -1269,13 +1729,37 @@ impl SearchEngine {
             }
 
             // Per-slot state: the most refined score so far and the
-            // deepest stage that sensed the slot (stage 0 senses every
-            // slot of a non-failed shard; Failed shards never enter the
-            // candidate set, so their strings are neither sensed nor
-            // billed).
-            let mut cand: Vec<usize> = (0..slots)
-                .filter(|&i| self.shards[i / self.per_shard].health != ShardHealth::Failed)
-                .collect();
+            // deepest stage that sensed the slot. Stage 0 senses every
+            // *programmed* slot of a non-failed — and, when routing is
+            // installed, probed — shard; everything else never enters
+            // the candidate set, so its strings are neither sensed nor
+            // billed (nor ranked: `in_cand` gates the ranking loop).
+            // Shards hold ascending slot lists, so `cand` is ascending.
+            let probed = route.map(|r| r.probed[qi].as_slice());
+            let mut cand: Vec<usize> = Vec::new();
+            for (s, shard) in self.shards.iter().enumerate() {
+                if shard.health == ShardHealth::Failed {
+                    continue;
+                }
+                if let Some(p) = probed {
+                    if p.binary_search(&s).is_err() {
+                        continue;
+                    }
+                }
+                cand.extend_from_slice(&shard.slots);
+            }
+            // What a flat scan over these candidates would sense — the
+            // cascade's savings baseline.
+            let full_scan_sensed = (cand.len() * groups * w) as i64;
+            let mut in_cand = vec![false; slots];
+            for &i in &cand {
+                in_cand[i] = true;
+            }
+            // The coarse routing stage is billed before any cascade
+            // stage: one summary-string sense per eligible shard.
+            if let Some(r) = route {
+                self.energy.add_sense(&self.energy_model, r.eligible as u64, self.ladder.len());
+            }
             let mut scores = vec![0f64; slots];
             let mut stage_of = vec![0usize; slots];
             let mut stage_sensed: Vec<usize> = Vec::with_capacity(plan.stages.len());
@@ -1378,12 +1862,7 @@ impl SearchEngine {
                     self.entries
                         .iter()
                         .enumerate()
-                        .filter(|&(i, e)| {
-                            e.alive
-                                && stage_of[i] == s
-                                && self.shards[i / self.per_shard].health
-                                    != ShardHealth::Failed
-                        })
+                        .filter(|&(i, e)| e.alive && in_cand[i] && stage_of[i] == s)
                         .map(|(i, e)| Hit { index: i, label: e.label, score: scores[i] }),
                 ));
             }
@@ -1399,6 +1878,8 @@ impl SearchEngine {
                     iterations_saved: full_scan_sensed - total_sensed as i64,
                     early_exited,
                 }),
+                routing: route
+                    .map(|r| self.routing_stats_for(&r.probed[qi], r.eligible, groups, w)),
             });
         }
         self.sweeps += requests.len() as u64;
@@ -1408,10 +1889,9 @@ impl SearchEngine {
     /// Sense one cascade stage: every candidate slot (global indices,
     /// ascending) against the stage's word lines, column prefix and
     /// ladder. Returns one accumulated vote score per candidate. Shards
-    /// own disjoint contiguous slot ranges, so each shard senses a
-    /// contiguous subrange of the candidate list — fanned out on scoped
-    /// threads when the stage's work clears the same floor as the plain
-    /// path.
+    /// own disjoint slot-index ranges, so each shard senses a contiguous
+    /// subrange of the candidate list — fanned out on scoped threads when
+    /// the stage's work clears the same floor as the plain path.
     fn sense_stage(
         &mut self,
         stage: &CascadePlanStage,
@@ -1421,13 +1901,21 @@ impl SearchEngine {
         cand: &[usize],
     ) -> Vec<f64> {
         let mut stage_scores = vec![0f64; cand.len()];
-        // Per-shard contiguous candidate subranges, as shard-local
-        // string-table indices.
+        // Per-shard contiguous candidate subranges, as positions within
+        // the shard's programmed slot list.
         let mut spans: Vec<(usize, usize, Vec<usize>)> = Vec::with_capacity(self.shards.len());
         let mut lo = 0usize;
-        for shard in &self.shards {
-            let hi = lo + cand[lo..].partition_point(|&i| i < shard.base + shard.n);
-            let local: Vec<usize> = cand[lo..hi].iter().map(|&i| i - shard.base).collect();
+        for (s, shard) in self.shards.iter().enumerate() {
+            let hi = lo + cand[lo..].partition_point(|&i| i < (s + 1) * self.per_shard);
+            let local: Vec<usize> = cand[lo..hi]
+                .iter()
+                .map(|&i| {
+                    shard
+                        .slots
+                        .binary_search(&i)
+                        .expect("cascade candidates are programmed slots")
+                })
+                .collect();
             spans.push((lo, hi, local));
             lo = hi;
         }
@@ -2099,6 +2587,120 @@ mod tests {
         assert_eq!(
             degraded.energy().sensed_strings - sensed_before,
             3 * healthy.energy().sensed_strings
+        );
+    }
+
+    /// Four shards of eight constant vectors on well-separated plateaus:
+    /// shard `s` holds slots `8s..8s+8` at value `0.4 + 0.7s` (+ a tiny
+    /// per-slot offset), so a query on plateau `s` must route there.
+    fn plateau_engine(shards: usize) -> (SearchEngine, Vec<Vec<f32>>) {
+        let cfg = EngineConfig::new(Encoding::Mtmc, 8, SearchMode::Avss, 3.0)
+            .ideal()
+            .with_shards(shards);
+        let mut eng = SearchEngine::new(cfg, 48, 8 * shards).unwrap();
+        let mut embs = Vec::new();
+        let mut labels = Vec::new();
+        for slot in 0..8 * shards {
+            let val = 0.4 + 0.7 * (slot / 8) as f32 + 0.01 * (slot % 8) as f32;
+            embs.push(vec![val; 48]);
+            labels.push(slot as u32);
+        }
+        let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
+        eng.program_support(&refs, &labels).unwrap();
+        (eng, embs)
+    }
+
+    #[test]
+    fn routed_search_reports_honest_accounting() {
+        let (mut eng, _) = plateau_engine(4);
+        eng.set_routing(Some(RoutingConfig::probe_count(1))).unwrap();
+        let query = vec![0.4 + 0.7 * 2.0 + 0.002f32; 48];
+        let response = eng
+            .search(&SearchRequest::new(&query).with_top_k(8).with_full_scores())
+            .unwrap();
+        // Every hit comes from the probed plateau shard (slots 16..24).
+        assert_eq!(response.hits.len(), 8);
+        assert!(response.hits.iter().all(|h| (16..24).contains(&h.index)));
+        // Routing narrows ranking, not capacity: coverage stays health-based.
+        assert_eq!(response.coverage, 1.0);
+        // AVSS: groups = 2 word-line iterations, one probed Healthy shard.
+        assert_eq!(response.iterations, 2);
+        let stats = response.routing.expect("routed response carries stats");
+        assert_eq!(stats.shards_probed, 1);
+        assert_eq!(stats.shards_sensed, 1);
+        // flat = 32 slots × 2 groups × 8 columns = 512 senses; routed =
+        // 8 × 2 × 8 = 128 + 4 representative senses.
+        assert_eq!(stats.iterations_saved, 512 - 128 - 4);
+        assert_eq!(eng.energy().sensed_strings, 128 + 4);
+        // Un-probed slots read 0.0 in the dense dump.
+        let scores = response.full_scores.as_ref().unwrap();
+        assert!(scores[..16].iter().chain(&scores[24..]).all(|&v| v == 0.0));
+        assert!(scores[16..24].iter().all(|&v| v > 0.0));
+    }
+
+    #[test]
+    fn routing_install_validates_and_clears() {
+        let (mut eng, _) = plateau_engine(2);
+        assert!(eng.routing().is_none());
+        assert!(matches!(
+            eng.set_routing(Some(RoutingConfig::probe_count(0))),
+            Err(EngineError::InvalidConfig(_))
+        ));
+        assert!(eng.routing().is_none(), "rejected install leaves no routing");
+        let ok = RoutingConfig::probe_count(1).with_refresh(RefreshPolicy::Eager);
+        eng.set_routing(Some(ok.clone())).unwrap();
+        assert_eq!(eng.routing(), Some(&ok));
+        eng.set_routing(None).unwrap();
+        assert!(eng.routing().is_none());
+    }
+
+    #[test]
+    fn routing_never_probes_failed_shards_and_min_coverage_widens() {
+        let (mut eng, _) = plateau_engine(4);
+        eng.set_routing(Some(RoutingConfig::probe_count(1))).unwrap();
+        // Fail the plateau the query sits on: the router must fall back
+        // to the nearest healthy shard, never the failed one.
+        eng.fail_shard(2).unwrap();
+        let query = vec![0.4 + 0.7 * 2.0 + 0.002f32; 48];
+        let response = eng.search(&SearchRequest::new(&query).with_top_k(4)).unwrap();
+        assert!(response.is_partial());
+        assert_eq!(response.coverage, 24.0 / 32.0);
+        assert!(response.hits.iter().all(|h| !(16..24).contains(&h.index)));
+        let stats = response.routing.unwrap();
+        assert_eq!(stats.shards_probed, 1);
+        // min_coverage = 1.0 widens to every eligible (non-failed) shard.
+        eng.set_routing(Some(RoutingConfig::probe_count(1).with_min_coverage(1.0)))
+            .unwrap();
+        let wide = eng.search(&SearchRequest::new(&query).with_top_k(4)).unwrap();
+        assert_eq!(wide.routing.unwrap().shards_probed, 3);
+    }
+
+    #[test]
+    fn shard_local_reclaim_rebuilds_only_the_crossing_shard() {
+        let (mut eng, embs) = plateau_engine(2);
+        // per_shard = 8: one remove (1 < 0.25·8) tombstones in place,
+        // the second crosses the threshold and reclaims shard 0 only.
+        eng.remove(1).unwrap();
+        assert_eq!(eng.shard_sizes(), vec![8, 8], "below threshold: still programmed");
+        eng.remove(2).unwrap();
+        assert_eq!(eng.shard_sizes(), vec![6, 8], "shard 0 reclaimed its tombstones");
+        assert_eq!(eng.slots(), 16, "no renumbering");
+        assert_eq!(eng.n_vectors(), 14);
+        // Reclaimed and tombstoned slots never rank or score; survivors
+        // keep their original indices.
+        let response = eng
+            .search(&SearchRequest::new(&embs[3]).with_full_scores())
+            .unwrap();
+        let scores = response.full_scores.as_ref().unwrap();
+        let hit = response.top().unwrap();
+        assert_eq!(scores[hit.index], scores[3], "winner ties the exact match");
+        assert!(hit.index != 1 && hit.index != 2);
+        assert_eq!(scores[1], 0.0, "reclaimed tombstones are not sensed");
+        assert_eq!(scores[2], 0.0);
+        assert_eq!(
+            eng.remove(2).unwrap_err(),
+            EngineError::AlreadyRemoved { index: 2 },
+            "reclaimed slots still answer typed on re-remove"
         );
     }
 

@@ -17,6 +17,11 @@
 //!   ([`cascade::CascadeConfig`]): a coarse pass over all slots, then
 //!   high-precision refinement of a shortlist, with honest per-request
 //!   iteration/energy accounting ([`cascade::CascadeStats`]).
+//! * [`routing`] — the hierarchical shard-routing tier
+//!   ([`routing::RoutingConfig`]): per-shard centroid representatives
+//!   pick the few shards worth sensing before the full kernel runs, with
+//!   the same honest accounting ([`routing::RoutingStats`]) and an exact
+//!   `probes = All` bypass.
 //! * [`distance`] — ideal (device-free) quantized distances behind the
 //!   Fig. 6 analysis.
 
@@ -24,12 +29,14 @@ pub mod api;
 pub mod cascade;
 pub mod distance;
 pub mod engine;
+pub mod routing;
 
 pub use api::{
     BackendStats, EngineError, Hit, ScrubReport, SearchOptions, SearchRequest, SearchResponse,
     ShardHealth, SupportSet, SupportSetBuilder, VectorSearchBackend,
 };
 pub use cascade::{CascadeConfig, CascadeStage, CascadeStats, Shortlist};
+pub use routing::{Probes, RefreshPolicy, RoutingConfig, RoutingStats};
 
 use crate::quant::QuantScheme;
 

@@ -1,0 +1,232 @@
+//! Hierarchical shard routing: a cheap coarse stage ahead of the full
+//! kernel (DESIGN.md §Routing).
+//!
+//! Flat sharding senses every shard on every request, so capacity growth
+//! buys nothing on latency or energy. A [`RoutingConfig`] installs a
+//! routing tier on the engine instead: the router keeps one
+//! *representative* per shard — the centroid of the shard's live
+//! programmed support embeddings, standing in for a per-shard summary
+//! string on a real die — scores the query against every representative,
+//! and dispatches the full sense→vote→accumulate kernel only to the best
+//! [`Probes`] shards. This generalizes the cascade ("prune strings within
+//! a scan") to "prune shards within a fleet" — the MCAM analog of IVF
+//! coarse quantization.
+//!
+//! Accounting is **honest** (the same ledger discipline as DESIGN.md
+//! §Cascade): every representative comparison is billed as one summary
+//! string sense, only probed shards' strings are sensed and billed, and
+//! every routed response carries a [`RoutingStats`] breakdown. Routing
+//! composes with the fault layer — `Failed` shards are never probed,
+//! `Degraded` ones are deprioritized (and still pay their majority-of-3
+//! re-sense when probed) — and with the cascade, which then prunes
+//! strings *within* the probed shards.
+//!
+//! The exact-bypass contract: `probes:` [`Probes::All`] disables the
+//! coarse stage entirely — the engine runs the flat (or cascade) path
+//! verbatim, bitwise identical to an engine with no routing installed,
+//! with no representative senses billed and no [`RoutingStats`] attached
+//! (`rust/tests/test_routing.rs` locks this in).
+//!
+//! ```
+//! use mcamvss::search::routing::{Probes, RefreshPolicy, RoutingConfig};
+//!
+//! // Probe the best 4 shards per query, lazily refreshing centroids.
+//! let routing = RoutingConfig::probe_count(4).with_refresh(RefreshPolicy::Lazy);
+//! assert!(routing.validate().is_ok());
+//! assert_eq!(routing.probes.probe_of(16), 4);
+//! ```
+
+use crate::search::api::EngineError;
+
+/// How many shards the router dispatches the full kernel to.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Probes {
+    /// Probe every shard — the exact bypass: the engine runs the flat
+    /// scan verbatim (no representative scoring, no routing billing),
+    /// bitwise identical to an engine with no routing installed.
+    All,
+    /// Probe the best `n` eligible shards (capped by the eligible count).
+    Count(usize),
+    /// Probe the best `ceil(fraction × eligible shards)`, `0 < f <= 1`.
+    Fraction(f64),
+}
+
+impl Probes {
+    /// Shards probed out of `eligible` (always >= 1 when `eligible >= 1`;
+    /// validation rejects specs that could return 0).
+    pub fn probe_of(&self, eligible: usize) -> usize {
+        if eligible == 0 {
+            return 0;
+        }
+        match *self {
+            Probes::All => eligible,
+            Probes::Count(n) => n.min(eligible),
+            Probes::Fraction(f) => (((f * eligible as f64).ceil()) as usize).clamp(1, eligible),
+        }
+    }
+
+    fn validate(&self) -> Result<(), EngineError> {
+        match *self {
+            Probes::All => Ok(()),
+            Probes::Count(0) => Err(EngineError::InvalidConfig(
+                "routing must probe at least one shard".into(),
+            )),
+            Probes::Count(_) => Ok(()),
+            Probes::Fraction(f) if f.is_finite() && f > 0.0 && f <= 1.0 => Ok(()),
+            Probes::Fraction(f) => Err(EngineError::InvalidConfig(format!(
+                "routing probe fraction must be in (0, 1], got {f}"
+            ))),
+        }
+    }
+}
+
+/// When shard representatives are recomputed after a mutation
+/// (`append`/`remove`/compaction/scrub). Both policies are observably
+/// equivalent — a stale centroid is never consulted — they only move the
+/// recompute cost between the mutation and the next search.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RefreshPolicy {
+    /// Recompute a shard's centroid immediately when it mutates (mutation
+    /// pays; searches never stall on a refresh).
+    Eager,
+    /// Mark the centroid stale and recompute on the next routed search
+    /// (the default: mutation bursts fold their refreshes together).
+    #[default]
+    Lazy,
+}
+
+/// A shard-routing policy, installed on the engine with
+/// [`crate::search::engine::SearchEngine::set_routing`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct RoutingConfig {
+    /// Shards dispatched per query. [`Probes::All`] is the exact bypass.
+    pub probes: Probes,
+    /// Centroid refresh policy (see [`RefreshPolicy`]).
+    pub refresh: RefreshPolicy,
+    /// Minimum fraction of live support slots the probed shards must
+    /// cover: the probe set is widened (best-scored first) until it does.
+    /// `0.0` (the default) never widens; `1.0` effectively probes every
+    /// eligible shard. This bounds recall loss on skewed shard sizes —
+    /// note it widens by *routing order*, so it is a floor on probed
+    /// slots, not a recall guarantee.
+    pub min_coverage: f64,
+}
+
+impl RoutingConfig {
+    /// Probe every shard — the exact bypass (useful for A/B'ing routing
+    /// against the flat scan without reconfiguring the engine).
+    pub fn all() -> RoutingConfig {
+        RoutingConfig { probes: Probes::All, refresh: RefreshPolicy::default(), min_coverage: 0.0 }
+    }
+
+    /// Probe the best `n` shards per query.
+    pub fn probe_count(n: usize) -> RoutingConfig {
+        RoutingConfig {
+            probes: Probes::Count(n),
+            refresh: RefreshPolicy::default(),
+            min_coverage: 0.0,
+        }
+    }
+
+    /// Probe the best `ceil(f × eligible shards)` per query.
+    pub fn probe_fraction(f: f64) -> RoutingConfig {
+        RoutingConfig {
+            probes: Probes::Fraction(f),
+            refresh: RefreshPolicy::default(),
+            min_coverage: 0.0,
+        }
+    }
+
+    pub fn with_refresh(mut self, refresh: RefreshPolicy) -> RoutingConfig {
+        self.refresh = refresh;
+        self
+    }
+
+    pub fn with_min_coverage(mut self, min_coverage: f64) -> RoutingConfig {
+        self.min_coverage = min_coverage;
+        self
+    }
+
+    /// Validation (the engine re-runs this at install time; bad configs
+    /// are typed [`EngineError::InvalidConfig`]s, never panics).
+    pub fn validate(&self) -> Result<(), EngineError> {
+        self.probes.validate()?;
+        if !self.min_coverage.is_finite() || !(0.0..=1.0).contains(&self.min_coverage) {
+            return Err(EngineError::InvalidConfig(format!(
+                "routing min_coverage must be in [0, 1], got {}",
+                self.min_coverage
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Per-request routing accounting, attached to every
+/// [`crate::search::SearchResponse`] answered through the routed path
+/// (absent under [`Probes::All`] — the bypass runs the flat path
+/// verbatim).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RoutingStats {
+    /// Shards the router selected for the full kernel (after any
+    /// [`RoutingConfig::min_coverage`] widening).
+    pub shards_probed: usize,
+    /// Shard sense passes actually executed: one per probed `Healthy`
+    /// shard, three per probed `Degraded` shard (the majority-of-3
+    /// re-sense is real work, billed like everywhere else).
+    pub shards_sensed: usize,
+    /// String-sense events saved versus the flat health-weighted scan —
+    /// the un-probed shards' senses minus the representative senses this
+    /// request paid for routing. Negative when the coarse stage cost more
+    /// than it pruned (e.g. many tiny shards, wide probes). The same
+    /// honest work metric as
+    /// [`crate::search::cascade::CascadeStats::iterations_saved`]; when a
+    /// cascade is also installed the two never double-count — the
+    /// cascade's baseline is the probed candidate set.
+    pub iterations_saved: i64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn probe_of() {
+        assert_eq!(Probes::All.probe_of(16), 16);
+        assert_eq!(Probes::Count(4).probe_of(16), 4);
+        assert_eq!(Probes::Count(40).probe_of(16), 16);
+        assert_eq!(Probes::Fraction(0.25).probe_of(16), 4);
+        assert_eq!(Probes::Fraction(1.0).probe_of(16), 16);
+        assert_eq!(Probes::Fraction(0.001).probe_of(16), 1); // never empty
+        assert_eq!(Probes::Fraction(0.5).probe_of(0), 0); // no shards, no panic
+    }
+
+    #[test]
+    fn validate_accepts_sensible_configs() {
+        RoutingConfig::all().validate().unwrap();
+        RoutingConfig::probe_count(1).validate().unwrap();
+        RoutingConfig::probe_fraction(0.25)
+            .with_refresh(RefreshPolicy::Eager)
+            .with_min_coverage(0.5)
+            .validate()
+            .unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_malformed_configs() {
+        let bad = [
+            RoutingConfig::probe_count(0),
+            RoutingConfig::probe_fraction(0.0),
+            RoutingConfig::probe_fraction(1.5),
+            RoutingConfig::probe_fraction(f64::NAN),
+            RoutingConfig::probe_count(2).with_min_coverage(-0.1),
+            RoutingConfig::probe_count(2).with_min_coverage(1.5),
+            RoutingConfig::probe_count(2).with_min_coverage(f64::NAN),
+        ];
+        for cfg in bad {
+            assert!(
+                matches!(cfg.validate(), Err(EngineError::InvalidConfig(_))),
+                "{cfg:?} must be rejected"
+            );
+        }
+    }
+}

@@ -8,7 +8,9 @@
 //!   panics — engine and float baseline alike;
 //! * **dynamic support**: `append`-then-search is bitwise identical to
 //!   program-all-at-once-then-search on a noisy seeded device; tombstone
-//!   `remove` excludes slots from ranking and rebalances on threshold;
+//!   `remove` excludes slots from ranking, and a shard crossing the dead
+//!   threshold reclaims **locally** — indices never shift and the other
+//!   shards' noisy reads stay bitwise untouched;
 //! * **backend genericity**: the MCAM engine and the float baseline run
 //!   through the same `VectorSearchBackend`-generic coordinator path.
 
@@ -188,8 +190,12 @@ fn support_set_builder_programs_any_backend() {
 }
 
 #[test]
-fn tombstone_remove_excludes_and_rebalances_on_threshold() {
-    let (embs, labels) = clustered(0x7057, 8, 1, 0.0);
+fn tombstone_remove_excludes_and_reclaims_shard_locally() {
+    // 16 slots across 2 shards (8/shard). One remove tombstones in
+    // place; the second remove in the same shard hits the 25% dead
+    // threshold and that shard alone reclaims — global indices never
+    // shift, the other shard's block is untouched.
+    let (embs, labels) = clustered(0x7057, 16, 1, 0.0);
     let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
     let cfg = EngineConfig::new(Encoding::Mtmc, 8, SearchMode::Avss, 3.0)
         .ideal()
@@ -197,28 +203,45 @@ fn tombstone_remove_excludes_and_rebalances_on_threshold() {
     let mut engine = SearchEngine::new(cfg, DIMS, refs.len()).unwrap();
     engine.program_support(&refs, &labels).unwrap();
 
-    // 1st remove: below the 25% threshold — tombstone only.
+    // 1st remove: 1/8 is below the 25% threshold — tombstone only, the
+    // dead slot's strings are still physically programmed (and sensed).
     engine.remove(2).unwrap();
-    assert_eq!(engine.n_vectors(), 7);
-    assert_eq!(engine.slots(), 8, "tombstoned slot still occupies the table");
+    assert_eq!(engine.n_vectors(), 15);
+    assert_eq!(engine.slots(), 16, "tombstoned slot still occupies the table");
+    assert_eq!(engine.shard_sizes(), vec![8, 8], "below threshold: still programmed");
     let response = engine
-        .search(&SearchRequest::new(refs[2]).with_top_k(8).with_full_scores())
+        .search(&SearchRequest::new(refs[2]).with_top_k(16).with_full_scores())
         .unwrap();
-    assert_eq!(response.hits.len(), 7, "dead slot never ranked");
+    assert_eq!(response.hits.len(), 15, "dead slot never ranked");
     assert!(response.hits.iter().all(|h| h.index != 2));
     assert_eq!(
         response.full_scores.as_ref().unwrap().len(),
-        8,
+        16,
         "dense dump still covers every physical slot"
     );
     assert_eq!(engine.stats().tombstones, 1);
 
-    // 2nd remove: 2/8 = 25% dead — the table compacts and renumbers.
+    // 2nd remove in shard 0: 2/8 = 25% dead — shard 0 reclaims its
+    // tombstones locally. No renumbering, shard 1 keeps all 8 slots.
     engine.remove(5).unwrap();
-    assert_eq!(engine.n_vectors(), 6);
-    assert_eq!(engine.slots(), 6, "rebalance dropped the tombstones");
-    assert_eq!(engine.stats().tombstones, 0);
-    // survivors keep their labels; exact-match queries still resolve
+    assert_eq!(engine.n_vectors(), 14);
+    assert_eq!(engine.slots(), 16, "local reclaim never renumbers");
+    assert_eq!(engine.shard_sizes(), vec![6, 8], "only shard 0 reclaimed");
+    assert_eq!(engine.stats().tombstones, 2, "reclaimed slots stay tombstoned");
+    let response = engine
+        .search(&SearchRequest::new(refs[3]).with_top_k(16).with_full_scores())
+        .unwrap();
+    let scores = response.full_scores.as_ref().unwrap();
+    assert_eq!(scores.len(), 16, "dense dump still covers every slot index");
+    assert_eq!(scores[2], 0.0, "reclaimed slots are no longer sensed");
+    assert_eq!(scores[5], 0.0, "reclaimed slots are no longer sensed");
+    assert_eq!(
+        engine.remove(5).unwrap_err(),
+        EngineError::AlreadyRemoved { index: 5 },
+        "reclaimed slots still answer typed on re-remove"
+    );
+    // Survivors keep their indices and labels; exact-match queries still
+    // resolve to their own slot.
     for (i, &label) in labels.iter().enumerate() {
         if i == 2 || i == 5 {
             continue;
@@ -228,7 +251,48 @@ fn tombstone_remove_excludes_and_rebalances_on_threshold() {
             .unwrap()
             .top()
             .unwrap();
-        assert_eq!(hit.label, label, "survivor {i} must keep its label after renumbering");
+        assert_eq!(hit.index, i, "survivor {i} keeps its slot index");
+        assert_eq!(hit.label, label, "survivor {i} keeps its label");
+    }
+}
+
+#[test]
+fn shard_local_reclaim_leaves_other_shards_bitwise_untouched() {
+    // The regression the shard-local design is for: reclaiming one
+    // shard's tombstones reprograms *that shard only*, so on a noisy
+    // seeded device every other shard's reads — driven by its own
+    // derived RNG stream — stay bitwise identical to a twin engine that
+    // never saw the removes.
+    let (embs, labels) = clustered(0x10CA1, 16, 1, 0.0);
+    let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
+    let cfg = EngineConfig::new(Encoding::Mtmc, 8, SearchMode::Avss, 3.0)
+        .with_seed(0x5EED)
+        .with_shards(2);
+    let mut control = SearchEngine::new(cfg, DIMS, refs.len()).unwrap();
+    control.program_support(&refs, &labels).unwrap();
+    let mut reclaimed = SearchEngine::new(cfg, DIMS, refs.len()).unwrap();
+    reclaimed.program_support(&refs, &labels).unwrap();
+
+    // Two removes in shard 0 cross its 25% threshold → local reclaim.
+    reclaimed.remove(0).unwrap();
+    reclaimed.remove(1).unwrap();
+    assert_eq!(reclaimed.shard_sizes(), vec![6, 8], "shard 0 reclaimed, shard 1 untouched");
+
+    for q in refs.iter().take(6) {
+        let request = SearchRequest::new(q).with_top_k(16).with_full_scores();
+        let a = control.search(&request).unwrap();
+        let b = reclaimed.search(&request).unwrap();
+        let (sa, sb) = (a.full_scores.as_ref().unwrap(), b.full_scores.as_ref().unwrap());
+        for i in 8..16 {
+            assert_eq!(
+                sa[i].to_bits(),
+                sb[i].to_bits(),
+                "slot {i}: shard 1's noisy reads must be bitwise identical"
+            );
+        }
+        assert_eq!(sb[0], 0.0, "reclaimed slots are not sensed");
+        assert_eq!(sb[1], 0.0, "reclaimed slots are not sensed");
+        assert!(b.hits.iter().all(|h| h.index >= 2), "dead slots never ranked");
     }
 }
 

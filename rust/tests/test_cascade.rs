@@ -329,16 +329,19 @@ fn cascade_respects_tombstones_and_ledgers_agree() {
         .with_shards(2);
     let mut eng = engine(cfg, &refs, &labels);
     eng.set_cascade(Some(CascadeConfig::two_stage(2, Shortlist::Count(3)))).unwrap();
-    // one tombstone (below the 25% rebalance threshold)
+    // One remove puts shard 0 (4 programmed slots) exactly at the 25%
+    // dead threshold: the shard reclaims locally, so the dead slot is no
+    // longer programmed — indices never shift, but it stops being sensed.
     eng.remove(2).unwrap();
+    assert_eq!(eng.shard_sizes(), vec![3, 4], "shard 0 reclaimed its tombstone");
     let before = eng.energy().sensed_strings;
     let response = eng
         .search(&SearchRequest::new(refs[2]).with_top_k(8).with_full_scores())
         .unwrap();
     let stats = response.cascade.as_ref().unwrap();
-    // the dead slot is still physically sensed by the coarse pass...
-    assert_eq!(stats.stage_sensed[0], 8 * 2 * 2, "coarse senses live + dead slots");
-    // ...but never ranked, and never carried into the refine shortlist
+    // the coarse pass senses only the 7 still-programmed slots...
+    assert_eq!(stats.stage_sensed[0], 7 * 2 * 2, "reclaimed slot is not sensed");
+    // ...and the dead slot is never ranked or carried into the shortlist
     assert_eq!(stats.stage_sensed[1], 3 * 2 * 8);
     assert!(response.hits.iter().all(|h| h.index != 2));
     assert_eq!(response.hits.len(), 7, "top_k clamps to live slots");

@@ -69,6 +69,7 @@ fn prop_exactly_once_delivery_and_reference_agreement() {
                     max_batch,
                     max_wait: Duration::from_millis(1),
                 },
+                scrub_every_batches: None,
             },
             engine_cfg(),
             DIMS,
@@ -135,6 +136,7 @@ fn prop_malformed_requests_are_answered_with_typed_errors() {
                     max_batch: 1 + rng.below(6),
                     max_wait: Duration::from_millis(1),
                 },
+                scrub_every_batches: None,
             },
             engine_cfg(),
             DIMS,
@@ -210,6 +212,7 @@ fn prop_concurrent_producers_preserve_pairing() {
                         max_batch: 4,
                         max_wait: Duration::from_millis(1),
                     },
+                    scrub_every_batches: None,
                 },
                 engine_cfg(),
                 DIMS,
@@ -268,6 +271,7 @@ fn prop_try_submit_accounts_every_accept() {
             workers: 1,
             queue_capacity: 4,
             batcher: BatcherConfig { max_batch: 2, max_wait: Duration::from_millis(1) },
+            scrub_every_batches: None,
         },
         engine_cfg(),
         DIMS,

@@ -67,6 +67,7 @@ fn start_net(
             workers,
             queue_capacity,
             batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) },
+            scrub_every_batches: None,
         },
         engine_cfg(),
         DIMS,
@@ -366,13 +367,15 @@ fn idle_connections_are_reaped_but_server_stays_live() {
 
 #[test]
 fn failed_shard_serves_partial_coverage_then_scrub_restores_it() {
-    // Forced-failure acceptance (ISSUE 7): with 1 of 4 shards Failed the
-    // TCP server answers every request with a typed partial response
-    // (coverage < 1.0, hits from live shards only), never panics, and
-    // recovers full coverage once the background scrub cadence rebuilds
-    // the shard.
+    // Forced-failure acceptance (ISSUE 7), served through the routing
+    // tier (ISSUE 8): with 1 of 4 shards Failed the TCP server answers
+    // every request with a typed partial response (coverage < 1.0, hits
+    // from live shards only, `RoutingStats` round-tripping the wire, the
+    // Failed shard never probed), never panics, and recovers full
+    // coverage once the background scrub cadence rebuilds the shard.
     use mcamvss::device::faults::ScrubConfig;
     use mcamvss::search::engine::SearchEngine;
+    use mcamvss::search::routing::RoutingConfig;
     use std::sync::atomic::Ordering;
 
     let mut rng = Rng::new(0xFA11);
@@ -386,6 +389,7 @@ fn failed_shard_serves_partial_coverage_then_scrub_restores_it() {
     let mut engine = SearchEngine::new(engine_cfg().with_shards(shards), DIMS, n).unwrap();
     engine.program_support(&refs, &labels).unwrap();
     engine.set_scrub(Some(ScrubConfig::default())).unwrap();
+    engine.set_routing(Some(RoutingConfig::probe_count(2))).unwrap();
     engine.fail_shard(0).unwrap();
 
     let server = Server::start_with_backends(
@@ -419,6 +423,22 @@ fn failed_shard_serves_partial_coverage_then_scrub_restores_it() {
     for h in &first.hits {
         assert!(h.index >= per_shard, "failed shard's slots must not be ranked");
     }
+    let routed = first.routing.expect("routing stats survive the wire");
+    assert_eq!(routed.shards_probed, 2, "2 of the 3 eligible (non-Failed) shards probed");
+    assert_eq!(routed.shards_sensed, 2, "healthy probes sense once each");
+    assert!(
+        routed.iterations_saved > 0,
+        "routing around a degraded fleet still saves senses, got {}",
+        routed.iterations_saved
+    );
+    // Wire parity for the routing block: re-encoding the decoded
+    // response reproduces the frame byte-identically.
+    let frame = Frame::Response { id: 0, response: first };
+    let bytes = wire::encode_frame(&frame);
+    let mut cursor = std::io::Cursor::new(bytes.clone());
+    let again = wire::read_frame(&mut cursor, wire::DEFAULT_MAX_FRAME_BYTES).unwrap();
+    assert_eq!(again, frame);
+    assert_eq!(wire::encode_frame(&again), bytes);
 
     // The worker scrubs between batches (cadence 1); every in-between
     // answer stays typed, and coverage returns to 1.0 once the shard is
@@ -437,10 +457,20 @@ fn failed_shard_serves_partial_coverage_then_scrub_restores_it() {
     }
     let healed = healed.expect("scrub cadence never rebuilt the failed shard");
     assert!(!healed.is_partial());
+    assert_eq!(
+        healed.routing.expect("still routed after recovery").shards_probed,
+        2,
+        "back to 2 of 4 eligible shards"
+    );
 
     net.shutdown();
     assert!(stats.scrub_passes.load(Ordering::Relaxed) >= 1, "scrub ledger counts the pass");
     assert_eq!(stats.failed_shards.load(Ordering::Relaxed), 0, "health gauge back to clean");
+    assert_eq!(
+        stats.routing_eligible_shards.load(Ordering::Relaxed),
+        shards as u64,
+        "eligibility gauge recovers with the shard"
+    );
 }
 
 #[test]

@@ -1,0 +1,269 @@
+//! Acceptance suite for the hierarchical shard-routing tier (ISSUE 8):
+//!
+//! * **exact bypass**: `Probes::All` is bitwise identical to an engine
+//!   with no routing installed — hits, dense scores, iterations, energy
+//!   ledger — on ideal *and* noisy devices across shard counts, and the
+//!   bypass attaches no `RoutingStats`;
+//! * **centroid freshness**: a router that lived through
+//!   append/remove/reclaim mutations answers exactly like a router
+//!   installed fresh on the mutated engine, and `Eager` == `Lazy`;
+//! * **typed errors**: malformed `RoutingConfig`s are
+//!   `EngineError::InvalidConfig`, never panics, and a rejected install
+//!   leaves the previously installed policy untouched;
+//! * **batch parity**: a routed batch is bitwise identical to routed
+//!   scalar replay on the same seeded (noisy) engine;
+//! * **fault composition**: `Failed` shards are never probed, routed
+//!   coverage matches the flat scan's health-based coverage, and
+//!   `min_coverage` widens the probe set.
+
+use mcamvss::encoding::Encoding;
+use mcamvss::search::engine::{EngineConfig, SearchEngine};
+use mcamvss::search::routing::{Probes, RefreshPolicy, RoutingConfig};
+use mcamvss::search::{EngineError, SearchMode, SearchRequest};
+use mcamvss::testutil::Rng;
+
+const DIMS: usize = 48;
+
+fn clustered(seed: u64, n_classes: usize, per: usize, spread: f64) -> (Vec<Vec<f32>>, Vec<u32>) {
+    let mut rng = Rng::new(seed);
+    let mut embs = Vec::new();
+    let mut labels = Vec::new();
+    for c in 0..n_classes {
+        let proto: Vec<f64> = (0..DIMS).map(|_| rng.range_f64(0.2, 2.8)).collect();
+        for _ in 0..per {
+            embs.push(
+                proto
+                    .iter()
+                    .map(|&p| (p + spread * rng.gaussian()).max(0.0) as f32)
+                    .collect(),
+            );
+            labels.push(c as u32);
+        }
+    }
+    (embs, labels)
+}
+
+fn engine(cfg: EngineConfig, refs: &[&[f32]], labels: &[u32]) -> SearchEngine {
+    let mut engine = SearchEngine::new(cfg, DIMS, refs.len()).unwrap();
+    engine.program_support(refs, labels).unwrap();
+    engine
+}
+
+#[test]
+fn probes_all_is_bitwise_flat_scan() {
+    // The bypass contract: `Probes::All` returns before touching any
+    // routing state, so the engine runs the flat path verbatim — same
+    // hits, same dense scores, same iteration count, same RNG draws
+    // (noisy parity), same energy ledger — and attaches no stats.
+    for shards in [1usize, 2, 4] {
+        for ideal in [true, false] {
+            let (embs, labels) = clustered(0xD15E, 8, 4, 0.05);
+            let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
+            let mut cfg = EngineConfig::new(Encoding::Mtmc, 8, SearchMode::Avss, 3.0)
+                .with_seed(0x2007E)
+                .with_shards(shards);
+            if ideal {
+                cfg = cfg.ideal();
+            }
+            let mut plain = engine(cfg, &refs, &labels);
+            let mut routed = engine(cfg, &refs, &labels);
+            routed.set_routing(Some(RoutingConfig::all())).unwrap();
+            for q in refs.iter().take(6) {
+                let request = SearchRequest::new(q).with_top_k(4).with_full_scores();
+                let a = plain.search(&request).unwrap();
+                let b = routed.search(&request).unwrap();
+                assert_eq!(a.hits, b.hits, "shards={shards} ideal={ideal}");
+                assert_eq!(
+                    a.full_scores, b.full_scores,
+                    "shards={shards} ideal={ideal}: scores must be bitwise"
+                );
+                assert_eq!(a.iterations, b.iterations);
+                assert!(b.routing.is_none(), "the All bypass attaches no stats");
+            }
+            assert_eq!(
+                plain.energy().sensed_strings,
+                routed.energy().sensed_strings,
+                "shards={shards} ideal={ideal}: the bypass bills no representative senses"
+            );
+        }
+    }
+}
+
+#[test]
+fn centroids_track_append_remove_and_reclaim() {
+    // Freshness contract: a router installed *before* a mutation burst
+    // (appends into one shard, removals deep enough to trigger the
+    // owning shard's local reclaim) must answer exactly like a router
+    // installed *after* the same burst — i.e. invalidation never leaves
+    // a stale centroid in play. Ideal device: responses are then a pure
+    // function of programmed state.
+    let (embs, labels) = clustered(0xF2E5, 8, 2, 0.04);
+    let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
+    let (extra, extra_labels) = clustered(0xF2E6, 4, 1, 0.04);
+    let cfg = EngineConfig::new(Encoding::Mtmc, 8, SearchMode::Avss, 3.0)
+        .ideal()
+        .with_seed(0xA11)
+        .with_shards(2);
+    // Capacity 24 across 2 shards (12/shard); 16 programmed up front.
+    let build = |routing: Option<RoutingConfig>| -> SearchEngine {
+        let mut engine = SearchEngine::new(cfg, DIMS, 24).unwrap();
+        engine.program_support(&refs, &labels).unwrap();
+        engine.set_routing(routing).unwrap();
+        for (e, &l) in extra.iter().zip(&extra_labels) {
+            engine.append(e, l).unwrap(); // slots 16.. — all owned by shard 1
+        }
+        // 3 of shard 0's 12 programmed slots = the 0.25 dead fraction:
+        // the third removal triggers shard 0's local reclaim.
+        for dead in [0usize, 5, 9] {
+            engine.remove(dead).unwrap();
+        }
+        engine
+    };
+    let lazy = RoutingConfig::probe_count(1).with_refresh(RefreshPolicy::Lazy);
+    let eager = RoutingConfig::probe_count(1).with_refresh(RefreshPolicy::Eager);
+    let mut lived_lazy = build(Some(lazy.clone()));
+    let mut lived_eager = build(Some(eager));
+    let mut fresh = build(None);
+    fresh.set_routing(Some(lazy)).unwrap();
+    let queries: Vec<&[f32]> =
+        refs.iter().copied().chain(extra.iter().map(|e| e.as_slice())).collect();
+    for q in queries.iter().take(12) {
+        let request = SearchRequest::new(q).with_top_k(3).with_full_scores();
+        let a = lived_lazy.search(&request).unwrap();
+        let b = fresh.search(&request).unwrap();
+        let c = lived_eager.search(&request).unwrap();
+        assert_eq!(a.hits, b.hits, "lived-through router == freshly installed router");
+        assert_eq!(a.full_scores, b.full_scores);
+        assert_eq!(a.routing, b.routing);
+        assert_eq!(a.hits, c.hits, "Eager and Lazy are observably equivalent");
+        assert_eq!(a.full_scores, c.full_scores);
+        assert_eq!(a.routing, c.routing);
+        assert!(a.routing.expect("routed response carries stats").shards_probed >= 1);
+    }
+}
+
+#[test]
+fn malformed_routing_configs_are_typed_and_leave_policy_untouched() {
+    let (embs, labels) = clustered(0xBAD, 4, 3, 0.05);
+    let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
+    let cfg = EngineConfig::new(Encoding::Mtmc, 8, SearchMode::Avss, 3.0)
+        .ideal()
+        .with_seed(1)
+        .with_shards(2);
+    let mut engine = engine(cfg, &refs, &labels);
+    let bad = [
+        RoutingConfig { probes: Probes::Count(0), ..RoutingConfig::all() },
+        RoutingConfig::probe_fraction(0.0),
+        RoutingConfig::probe_fraction(1.5),
+        RoutingConfig::probe_fraction(f64::NAN),
+        RoutingConfig::probe_count(2).with_min_coverage(1.5),
+        RoutingConfig::probe_count(2).with_min_coverage(f64::NAN),
+    ];
+    // Rejected installs on a bare engine leave no routing installed...
+    for config in &bad {
+        let err = engine.set_routing(Some(config.clone())).unwrap_err();
+        assert!(
+            matches!(err, EngineError::InvalidConfig(_)),
+            "{config:?} must be InvalidConfig, got {err:?}"
+        );
+        assert!(engine.routing().is_none(), "{config:?} must not install");
+    }
+    // ...and on an engine with a valid policy, the old policy survives.
+    let good = RoutingConfig::probe_count(1);
+    engine.set_routing(Some(good.clone())).unwrap();
+    for config in &bad {
+        assert!(engine.set_routing(Some(config.clone())).is_err());
+        assert_eq!(engine.routing(), Some(&good), "rejected install must not clobber");
+    }
+    let response = engine.search(&SearchRequest::new(&embs[0])).unwrap();
+    assert!(response.routing.is_some(), "engine still routes after rejected installs");
+}
+
+#[test]
+fn routed_batch_is_bitwise_scalar_replay() {
+    // Per-shard RNG streams are independent, and a probed shard senses
+    // its request subset in request order — so a routed batch on a noisy
+    // device must match routed scalar replay draw for draw.
+    let (embs, labels) = clustered(0xBA7C, 8, 4, 0.05);
+    let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
+    let cfg = EngineConfig::new(Encoding::Mtmc, 8, SearchMode::Avss, 3.0)
+        .with_seed(0x5EED)
+        .with_shards(4);
+    let routing = RoutingConfig::probe_count(2);
+    let mut batched = engine(cfg, &refs, &labels);
+    batched.set_routing(Some(routing.clone())).unwrap();
+    let mut scalar = engine(cfg, &refs, &labels);
+    scalar.set_routing(Some(routing)).unwrap();
+    let requests: Vec<SearchRequest<'_>> = refs
+        .iter()
+        .take(8)
+        .map(|q| SearchRequest::new(q).with_top_k(3).with_full_scores())
+        .collect();
+    let batch = batched.search_batch(&requests).unwrap();
+    for (request, a) in requests.iter().zip(&batch) {
+        let b = scalar.search(request).unwrap();
+        assert_eq!(a.hits, b.hits, "routed batch == routed scalar replay");
+        assert_eq!(a.full_scores, b.full_scores, "scores must be bitwise");
+        assert_eq!(a.iterations, b.iterations);
+        assert_eq!(a.routing, b.routing);
+    }
+    assert_eq!(
+        batched.energy().sensed_strings,
+        scalar.energy().sensed_strings,
+        "batch and scalar replay bill identically"
+    );
+}
+
+#[test]
+fn failed_shards_are_never_probed_and_min_coverage_widens() {
+    // 4 shards × 8 slots. Failing shard 1 removes slots 8..16 from every
+    // answer; the router must route around it (coverage matches the flat
+    // scan's health-based 0.75), and `min_coverage: 1.0` must widen a
+    // one-probe policy to every eligible shard.
+    let (embs, labels) = clustered(0xFA17, 8, 4, 0.05);
+    let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
+    let cfg = EngineConfig::new(Encoding::Mtmc, 8, SearchMode::Avss, 3.0)
+        .ideal()
+        .with_seed(0xFA)
+        .with_shards(4);
+    let mut flat = engine(cfg, &refs, &labels);
+    let mut routed = engine(cfg, &refs, &labels);
+    routed.set_routing(Some(RoutingConfig::probe_count(2))).unwrap();
+    flat.fail_shard(1).unwrap();
+    routed.fail_shard(1).unwrap();
+    for q in refs.iter().take(8) {
+        let request = SearchRequest::new(q).with_top_k(8);
+        let a = flat.search(&request).unwrap();
+        let b = routed.search(&request).unwrap();
+        assert_eq!(a.coverage, b.coverage, "coverage stays health-based under routing");
+        assert!(b.is_partial(), "a failed shard is a typed partial answer");
+        let stats = b.routing.expect("routed stats");
+        assert_eq!(stats.shards_probed, 2);
+        assert_eq!(stats.shards_sensed, 2, "healthy probes sense once each");
+        assert!(
+            stats.iterations_saved > 0,
+            "2 of 3 eligible shards probed must save senses, got {}",
+            stats.iterations_saved
+        );
+        for hit in &b.hits {
+            assert!(
+                !(8..16).contains(&hit.index),
+                "slot {} is owned by the failed shard",
+                hit.index
+            );
+        }
+    }
+    // min_coverage widening: one probe can cover at most 8 of 24 live
+    // slots — a 1.0 floor forces every eligible shard into the set.
+    routed
+        .set_routing(Some(RoutingConfig::probe_count(1).with_min_coverage(1.0)))
+        .unwrap();
+    let wide = routed.search(&SearchRequest::new(&embs[0])).unwrap();
+    let stats = wide.routing.expect("routed stats");
+    assert_eq!(stats.shards_probed, 3, "widened to every non-failed shard");
+    assert_eq!(
+        stats.iterations_saved,
+        -(stats.shards_probed as i64),
+        "probing everything saves nothing and still pays the representative scan"
+    );
+}
