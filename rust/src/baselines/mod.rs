@@ -286,6 +286,7 @@ impl VectorSearchBackend for FloatBaseline {
                 full_scores,
                 cascade: None,
                 routing: None,
+                snapshot_version: None,
             });
         }
         Ok(responses)

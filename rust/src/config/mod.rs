@@ -307,6 +307,42 @@ impl ServeSettings {
     }
 }
 
+/// The `[snapshot]` TOML section: zero-downtime support refresh for
+/// `serve --listen`. When [`Self::watch`] names an artifact directory,
+/// the serve loop polls its `manifest.txt` and, on change, loads a new
+/// support set and hot-swaps every worker replica via
+/// [`crate::coordinator::Server::install_snapshot`] — in-flight
+/// requests keep being answered by the old version until their batch
+/// boundary (DESIGN.md §Snapshots).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SnapshotSettings {
+    /// Artifact directory to watch for refreshed support embeddings;
+    /// `None` disables the refresh loop.
+    pub watch: Option<String>,
+    /// How often the serve loop checks the watch directory (milliseconds).
+    pub poll_ms: u64,
+}
+
+impl Default for SnapshotSettings {
+    fn default() -> Self {
+        SnapshotSettings { watch: None, poll_ms: 500 }
+    }
+}
+
+impl SnapshotSettings {
+    pub fn validate(&self) -> Result<()> {
+        if self.poll_ms == 0 || self.poll_ms > 3_600_000 {
+            bail!("snapshot poll_ms must be in 1..=3600000");
+        }
+        if let Some(watch) = &self.watch {
+            if watch.is_empty() {
+                bail!("snapshot watch path must be non-empty");
+            }
+        }
+        Ok(())
+    }
+}
+
 /// Budgeted hyper-parameters for one HAT training run (mirror of the
 /// python `TrainSettings` in `compile/hat.py`), consumed by
 /// [`crate::hat`]. Presets follow the python module; `synth` targets
@@ -428,6 +464,9 @@ pub struct Config {
     pub train: TrainSettings,
     /// Network limits for `serve --listen` (`[serve]` section).
     pub serve: ServeSettings,
+    /// Zero-downtime support refresh for `serve --listen`
+    /// (`[snapshot]` section / `--snapshot-watch` flag).
+    pub snapshot: SnapshotSettings,
     /// Optional progressive-precision cascade (`[cascade]` section /
     /// `--cascade` flags); `None` serves full scans.
     pub cascade: Option<CascadeSettings>,
@@ -464,6 +503,7 @@ impl Config {
             seed: 0x5EED,
             train: TrainSettings::omniglot(),
             serve: ServeSettings::default(),
+            snapshot: SnapshotSettings::default(),
             cascade: None,
             routing: None,
             faults: None,
@@ -492,6 +532,7 @@ impl Config {
             seed: 0x5EED,
             train: TrainSettings::cub(),
             serve: ServeSettings::default(),
+            snapshot: SnapshotSettings::default(),
             cascade: None,
             routing: None,
             faults: None,
@@ -521,6 +562,7 @@ impl Config {
             seed: 0x5EED,
             train: TrainSettings::synth(),
             serve: ServeSettings::default(),
+            snapshot: SnapshotSettings::default(),
             cascade: None,
             routing: None,
             faults: None,
@@ -753,6 +795,14 @@ impl Config {
             }
             cfg.scrub = Some(scrub);
         }
+        if let Some(watch) = doc.get_str("snapshot", "watch") {
+            cfg.snapshot.watch = Some(watch.to_string());
+        }
+        match doc.get_int("snapshot", "poll_ms") {
+            None => {}
+            Some(v) if v >= 1 => cfg.snapshot.poll_ms = v as u64,
+            Some(v) => bail!("snapshot poll_ms must be >= 1, got {v}"),
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -781,6 +831,7 @@ impl Config {
         }
         self.train.validate()?;
         self.serve.validate()?;
+        self.snapshot.validate()?;
         if let Some(cascade) = &self.cascade {
             cascade.validate()?;
         }
@@ -941,6 +992,32 @@ program_sigma = 0.3
             "[serve]\nmax_in_flight = -2\n",
             "[serve]\nidle_timeout_ms = 9999999999\n",
             "[serve]\nmax_frame_bytes = 8\n",
+        ] {
+            let doc = TomlDoc::parse(bad).unwrap();
+            assert!(Config::from_toml(&doc).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn snapshot_section_parses_and_validates() {
+        let doc = TomlDoc::parse(
+            "[snapshot]\nwatch = \"/tmp/mcamvss_snap\"\npoll_ms = 100\n",
+        )
+        .unwrap();
+        let cfg = Config::from_toml(&doc).unwrap();
+        assert_eq!(cfg.snapshot.watch.as_deref(), Some("/tmp/mcamvss_snap"));
+        assert_eq!(cfg.snapshot.poll_ms, 100);
+
+        // defaults apply without the section: refresh loop disabled
+        let cfg = Config::from_toml(&TomlDoc::parse("").unwrap()).unwrap();
+        assert_eq!(cfg.snapshot, SnapshotSettings::default());
+        assert!(cfg.snapshot.watch.is_none());
+
+        // zero / negative / absurd cadences are typed config errors
+        for bad in [
+            "[snapshot]\npoll_ms = 0\n",
+            "[snapshot]\npoll_ms = -5\n",
+            "[snapshot]\npoll_ms = 9999999999\n",
         ] {
             let doc = TomlDoc::parse(bad).unwrap();
             assert!(Config::from_toml(&doc).is_err(), "accepted {bad:?}");

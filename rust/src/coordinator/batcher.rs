@@ -9,6 +9,7 @@
 //! whole batch.
 
 use super::queue::BoundedQueue;
+use super::worker::WorkItem;
 use super::{route_response, Request, Response, ServerStats};
 use crate::search::api::EngineError;
 use std::sync::atomic::Ordering;
@@ -33,7 +34,7 @@ impl Default for BatcherConfig {
 pub fn spawn(
     cfg: BatcherConfig,
     ingress: Arc<BoundedQueue<Request>>,
-    workers: Vec<Arc<BoundedQueue<Vec<Request>>>>,
+    workers: Vec<Arc<BoundedQueue<WorkItem>>>,
     responses: Arc<Mutex<Vec<Response>>>,
     stats: Arc<ServerStats>,
 ) -> JoinHandle<()> {
@@ -85,7 +86,7 @@ pub fn spawn(
 
 fn flush(
     batch: &mut Vec<Request>,
-    workers: &[Arc<BoundedQueue<Vec<Request>>>],
+    workers: &[Arc<BoundedQueue<WorkItem>>],
     next_worker: &mut usize,
     responses: &Mutex<Vec<Response>>,
     stats: &ServerStats,
@@ -95,23 +96,39 @@ fn flush(
     }
     let out = std::mem::take(batch);
     stats.batches.fetch_add(1, Ordering::Relaxed);
-    let target = &workers[*next_worker % workers.len()];
+    let start = *next_worker;
     *next_worker += 1;
-    if let Err(refused) = target.push(out) {
+    // First pass: non-blocking, starting at the round-robin choice and
+    // failing over past full queues. A single backlogged worker (e.g.
+    // mid-scrub) must not stall dispatch while its peers sit idle —
+    // blocking on one queue here is head-of-line blocking for the whole
+    // ingress.
+    let mut item = WorkItem::Batch(out);
+    for probe in 0..workers.len() {
+        match workers[(start + probe) % workers.len()].try_push(item) {
+            Ok(()) => return,
+            Err(refused) => item = refused.into_inner(),
+        }
+    }
+    // Every queue is full (or closed): block on the round-robin choice —
+    // backpressure is correct when the whole pool is saturated.
+    if let Err(refused) = workers[start % workers.len()].push(item) {
         // The worker queue closed under us (shutdown race): answer every
         // request in the batch with a typed shutdown error instead of
         // losing it.
-        for req in refused.into_inner() {
-            stats.errored.fetch_add(1, Ordering::Relaxed);
-            route_response(
-                responses,
-                req.reply,
-                Response {
-                    id: req.id,
-                    outcome: Err(EngineError::ShuttingDown),
-                    wall_latency: req.submitted_at.elapsed(),
-                },
-            );
+        if let WorkItem::Batch(reqs) = refused.into_inner() {
+            for req in reqs {
+                stats.errored.fetch_add(1, Ordering::Relaxed);
+                route_response(
+                    responses,
+                    req.reply,
+                    Response {
+                        id: req.id,
+                        outcome: Err(EngineError::ShuttingDown),
+                        wall_latency: req.submitted_at.elapsed(),
+                    },
+                );
+            }
         }
     }
 }
@@ -132,10 +149,17 @@ mod tests {
         }
     }
 
+    fn pop_batch(queue: &BoundedQueue<WorkItem>) -> Option<Vec<Request>> {
+        queue.pop().map(|item| match item {
+            WorkItem::Batch(batch) => batch,
+            WorkItem::Swap(_) => panic!("batcher never enqueues swaps"),
+        })
+    }
+
     #[test]
     fn batches_up_to_max() {
         let ingress = Arc::new(BoundedQueue::new(64));
-        let worker: Arc<BoundedQueue<Vec<Request>>> = Arc::new(BoundedQueue::new(64));
+        let worker: Arc<BoundedQueue<WorkItem>> = Arc::new(BoundedQueue::new(64));
         let responses = Arc::new(Mutex::new(Vec::new()));
         let stats = Arc::new(ServerStats::default());
         let handle = spawn(
@@ -151,7 +175,7 @@ mod tests {
         ingress.close();
         handle.join().unwrap();
         let mut sizes = Vec::new();
-        while let Some(batch) = worker.pop() {
+        while let Some(batch) = pop_batch(&worker) {
             sizes.push(batch.len());
         }
         assert_eq!(sizes.iter().sum::<usize>(), 7);
@@ -162,7 +186,7 @@ mod tests {
     #[test]
     fn flushes_partial_batch_on_timeout() {
         let ingress = Arc::new(BoundedQueue::new(64));
-        let worker: Arc<BoundedQueue<Vec<Request>>> = Arc::new(BoundedQueue::new(64));
+        let worker: Arc<BoundedQueue<WorkItem>> = Arc::new(BoundedQueue::new(64));
         let stats = Arc::new(ServerStats::default());
         let handle = spawn(
             BatcherConfig { max_batch: 100, max_wait: Duration::from_millis(5) },
@@ -173,7 +197,7 @@ mod tests {
         );
         ingress.push(req(0)).unwrap();
         // partial batch must arrive without more input
-        let batch = worker.pop().expect("timed flush");
+        let batch = pop_batch(&worker).expect("timed flush");
         assert_eq!(batch.len(), 1);
         ingress.close();
         handle.join().unwrap();
@@ -182,8 +206,8 @@ mod tests {
     #[test]
     fn round_robins_workers() {
         let ingress = Arc::new(BoundedQueue::new(64));
-        let w1: Arc<BoundedQueue<Vec<Request>>> = Arc::new(BoundedQueue::new(64));
-        let w2: Arc<BoundedQueue<Vec<Request>>> = Arc::new(BoundedQueue::new(64));
+        let w1: Arc<BoundedQueue<WorkItem>> = Arc::new(BoundedQueue::new(64));
+        let w2: Arc<BoundedQueue<WorkItem>> = Arc::new(BoundedQueue::new(64));
         let stats = Arc::new(ServerStats::default());
         let handle = spawn(
             BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(1) },
@@ -206,8 +230,46 @@ mod tests {
             n2 += 1;
         }
         assert_eq!(n1 + n2, 6);
+        // neither queue fills, so failover never fires and the split is
+        // the exact round-robin
         assert_eq!(n1, 3);
         assert_eq!(n2, 3);
+    }
+
+    /// Regression (head-of-line blocking): one stalled worker whose
+    /// queue is full must not block dispatch — batches fail over to the
+    /// idle worker and the batcher keeps draining ingress.
+    #[test]
+    fn full_worker_queue_fails_over_to_idle_worker() {
+        let ingress = Arc::new(BoundedQueue::new(64));
+        // "stalled" worker: capacity-1 queue, pre-filled, never popped
+        let stalled: Arc<BoundedQueue<WorkItem>> = Arc::new(BoundedQueue::new(1));
+        stalled.push(WorkItem::Batch(vec![req(99)])).unwrap();
+        let idle: Arc<BoundedQueue<WorkItem>> = Arc::new(BoundedQueue::new(64));
+        let stats = Arc::new(ServerStats::default());
+        let handle = spawn(
+            BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(1) },
+            Arc::clone(&ingress),
+            vec![Arc::clone(&stalled), Arc::clone(&idle)],
+            Arc::new(Mutex::new(Vec::new())),
+            Arc::clone(&stats),
+        );
+        // 4 single-request batches; round-robin would block on the
+        // stalled queue for half of them
+        for i in 0..4 {
+            ingress.push(req(i)).unwrap();
+        }
+        ingress.close();
+        // joining proves the batcher never blocked on the stalled worker
+        handle.join().unwrap();
+        let mut ids = Vec::new();
+        while let Some(batch) = pop_batch(&idle) {
+            for r in batch {
+                ids.push(r.id);
+            }
+        }
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 1, 2, 3], "all batches failed over to the idle worker");
     }
 
     /// A batch flushed into an already-closed worker queue (shutdown
@@ -216,7 +278,7 @@ mod tests {
     #[test]
     fn closed_worker_queue_answers_batch_with_shutdown_errors() {
         let ingress = Arc::new(BoundedQueue::new(64));
-        let worker: Arc<BoundedQueue<Vec<Request>>> = Arc::new(BoundedQueue::new(64));
+        let worker: Arc<BoundedQueue<WorkItem>> = Arc::new(BoundedQueue::new(64));
         let responses = Arc::new(Mutex::new(Vec::new()));
         let stats = Arc::new(ServerStats::default());
         worker.close(); // close before the batcher ever flushes

@@ -166,18 +166,53 @@ pub struct ServerStats {
     pub strings_scrubbed: AtomicU64,
     pub slots_reprogrammed: AtomicU64,
     pub slots_remapped: AtomicU64,
-    /// Gauge: spare string groups still unused on the last-scrubbed
-    /// replica.
-    pub spares_remaining: AtomicU64,
-    /// Gauges: shard-health census of the last-scrubbed replica.
-    pub failed_shards: AtomicU64,
-    pub degraded_shards: AtomicU64,
-    /// Gauge: shards the routing tier may still dispatch to on the
+    /// Gauge: version of the [`crate::search::api::SupportSnapshot`]
+    /// currently serving (boot support is version 1). Bumped by
+    /// [`Server::install_snapshot`] once every worker's swap ticket is
+    /// dispatched.
+    pub snapshot_version: AtomicU64,
+    /// Per-replica hot-swaps completed (one per worker per installed
+    /// snapshot).
+    pub swaps_completed: AtomicU64,
+    /// Gauge: wall-clock milliseconds spent building the replica fleet
+    /// for the most recent [`Server::install_snapshot`].
+    pub swap_build_ms: AtomicU64,
+    /// Gauges from the most recent scrub pass, stored as one coherent
+    /// block: concurrent passes from different worker replicas would
+    /// otherwise interleave their stores and publish a blend of two
+    /// replicas (e.g. replica A's `failed_shards` with replica B's
+    /// `canary_margin`).
+    scrub_gauges: Mutex<ScrubGauges>,
+}
+
+/// Shard-health gauges from one scrub pass — always published and read
+/// as a unit ([`ServerStats::scrub_gauges`]), so the "last-scrubbed
+/// replica" view is never a blend of two replicas.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScrubGauges {
+    /// Spare string groups still unused on the last-scrubbed replica.
+    pub spares_remaining: u64,
+    /// Shard-health census of the last-scrubbed replica.
+    pub failed_shards: u64,
+    pub degraded_shards: u64,
+    /// Shards the routing tier may still dispatch to on the
     /// last-scrubbed replica (non-`Failed`; 0 until a pass has run).
-    pub routing_eligible_shards: AtomicU64,
-    /// Gauge: worst canary sense margin seen on the last scrub pass,
-    /// stored as f64 bits (atomics hold integers).
-    canary_margin_bits: AtomicU64,
+    pub routing_eligible_shards: u64,
+    /// Worst canary sense margin seen on the last scrub pass.
+    pub canary_margin: f64,
+}
+
+impl Default for ScrubGauges {
+    fn default() -> Self {
+        ScrubGauges {
+            spares_remaining: 0,
+            failed_shards: 0,
+            degraded_shards: 0,
+            routing_eligible_shards: 0,
+            // an unscrubbed fleet has full margin, not zero
+            canary_margin: 1.0,
+        }
+    }
 }
 
 impl Default for ServerStats {
@@ -192,12 +227,10 @@ impl Default for ServerStats {
             strings_scrubbed: AtomicU64::new(0),
             slots_reprogrammed: AtomicU64::new(0),
             slots_remapped: AtomicU64::new(0),
-            spares_remaining: AtomicU64::new(0),
-            failed_shards: AtomicU64::new(0),
-            degraded_shards: AtomicU64::new(0),
-            routing_eligible_shards: AtomicU64::new(0),
-            // an unscrubbed fleet has full margin, not zero
-            canary_margin_bits: AtomicU64::new(1.0f64.to_bits()),
+            snapshot_version: AtomicU64::new(0),
+            swaps_completed: AtomicU64::new(0),
+            swap_build_ms: AtomicU64::new(0),
+            scrub_gauges: Mutex::new(ScrubGauges::default()),
         }
     }
 }
@@ -206,31 +239,53 @@ impl ServerStats {
     /// Worst canary margin observed by the most recent scrub pass
     /// (1.0 until a pass has run).
     pub fn canary_margin(&self) -> f64 {
-        f64::from_bits(self.canary_margin_bits.load(Ordering::Relaxed))
+        self.scrub_gauges().canary_margin
+    }
+
+    /// A coherent copy of the most recent scrub pass's gauges — every
+    /// field describes the *same* replica at the *same* pass.
+    pub fn scrub_gauges(&self) -> ScrubGauges {
+        *self.scrub_gauges.lock().unwrap()
     }
 
     /// Fold one scrub pass into the ledger: counters accumulate, gauges
-    /// snapshot the scrubbed replica's post-pass state.
+    /// snapshot the scrubbed replica's post-pass state. The gauge block
+    /// is replaced under one lock so concurrent passes serialize instead
+    /// of interleaving field stores.
     pub(crate) fn record_scrub(&self, report: &ScrubReport, backend: &BackendStats) {
         self.scrub_passes.fetch_add(1, Ordering::Relaxed);
         self.strings_scrubbed.fetch_add(report.strings_scrubbed, Ordering::Relaxed);
         self.slots_reprogrammed.fetch_add(report.slots_reprogrammed, Ordering::Relaxed);
         self.slots_remapped.fetch_add(report.slots_remapped, Ordering::Relaxed);
-        self.spares_remaining.store(report.spares_remaining as u64, Ordering::Relaxed);
-        self.failed_shards.store(backend.failed_shards() as u64, Ordering::Relaxed);
-        self.degraded_shards.store(backend.degraded_shards() as u64, Ordering::Relaxed);
-        self.routing_eligible_shards
-            .store(backend.routing_eligible_shards() as u64, Ordering::Relaxed);
-        self.canary_margin_bits.store(report.canary_margin.to_bits(), Ordering::Relaxed);
+        *self.scrub_gauges.lock().unwrap() = ScrubGauges {
+            spares_remaining: report.spares_remaining as u64,
+            failed_shards: backend.failed_shards() as u64,
+            degraded_shards: backend.degraded_shards() as u64,
+            routing_eligible_shards: backend.routing_eligible_shards() as u64,
+            canary_margin: report.canary_margin,
+        };
     }
 
     pub fn to_json(&self) -> Json {
+        let gauges = self.scrub_gauges();
         ObjBuilder::new()
             .field("submitted", Json::num(self.submitted.load(Ordering::Relaxed) as f64))
             .field("completed", Json::num(self.completed.load(Ordering::Relaxed) as f64))
             .field("rejected", Json::num(self.rejected.load(Ordering::Relaxed) as f64))
             .field("errored", Json::num(self.errored.load(Ordering::Relaxed) as f64))
             .field("batches", Json::num(self.batches.load(Ordering::Relaxed) as f64))
+            .field(
+                "snapshot_version",
+                Json::num(self.snapshot_version.load(Ordering::Relaxed) as f64),
+            )
+            .field(
+                "swaps_completed",
+                Json::num(self.swaps_completed.load(Ordering::Relaxed) as f64),
+            )
+            .field(
+                "swap_build_ms",
+                Json::num(self.swap_build_ms.load(Ordering::Relaxed) as f64),
+            )
             .field("scrub_passes", Json::num(self.scrub_passes.load(Ordering::Relaxed) as f64))
             .field(
                 "strings_scrubbed",
@@ -244,23 +299,14 @@ impl ServerStats {
                 "slots_remapped",
                 Json::num(self.slots_remapped.load(Ordering::Relaxed) as f64),
             )
-            .field(
-                "spares_remaining",
-                Json::num(self.spares_remaining.load(Ordering::Relaxed) as f64),
-            )
-            .field(
-                "failed_shards",
-                Json::num(self.failed_shards.load(Ordering::Relaxed) as f64),
-            )
-            .field(
-                "degraded_shards",
-                Json::num(self.degraded_shards.load(Ordering::Relaxed) as f64),
-            )
+            .field("spares_remaining", Json::num(gauges.spares_remaining as f64))
+            .field("failed_shards", Json::num(gauges.failed_shards as f64))
+            .field("degraded_shards", Json::num(gauges.degraded_shards as f64))
             .field(
                 "routing_eligible_shards",
-                Json::num(self.routing_eligible_shards.load(Ordering::Relaxed) as f64),
+                Json::num(gauges.routing_eligible_shards as f64),
             )
-            .field("canary_margin", Json::num(self.canary_margin()))
+            .field("canary_margin", Json::num(gauges.canary_margin))
             .build()
     }
 }
@@ -327,6 +373,48 @@ pub struct Server {
     pool: WorkerPool,
     batcher_handle: Option<std::thread::JoinHandle<()>>,
     next_id: AtomicU64,
+    /// How to rebuild engine replicas for a snapshot install; `None` for
+    /// servers started from caller-supplied backends
+    /// ([`Self::start_with_backends`] — use
+    /// [`Self::install_snapshot_backends`] there).
+    factory: Option<ReplicaFactory>,
+    /// Serializes snapshot installs: version check → build → dispatch
+    /// must not interleave with another install.
+    install: Mutex<()>,
+}
+
+/// Recipe for building fresh [`SearchEngine`] replicas on snapshot
+/// install: the boot `EngineConfig` (per-worker seeds are re-derived
+/// from it, so a swapped-in replica is bitwise identical to a cold
+/// start on the same snapshot) and the server's embedding dims.
+#[derive(Debug, Clone, Copy)]
+struct ReplicaFactory {
+    engine_cfg: EngineConfig,
+    dims: usize,
+}
+
+/// Build worker `w`'s engine replica: derived seed, programmed support,
+/// and the full policy block. Shared by [`Server::start_configured`]
+/// (boot) and [`Server::install_snapshot`] (hot-swap), which is what
+/// makes post-swap results bitwise identical to a cold start.
+fn build_replica(
+    engine_cfg: EngineConfig,
+    dims: usize,
+    w: usize,
+    support: &crate::search::api::SupportSet,
+    setup: &EngineSetup,
+) -> std::result::Result<SearchEngine, EngineError> {
+    let mut ecfg = engine_cfg;
+    ecfg.seed = crate::testutil::derive_seed(engine_cfg.seed, 0x1000 + w as u64);
+    let mut engine = SearchEngine::new(ecfg, dims, support.len().max(1))?;
+    engine.program(support)?;
+    engine.set_cascade(setup.cascade.clone())?;
+    engine.set_routing(setup.routing.clone())?;
+    if let Some(faults) = setup.faults {
+        engine.set_faults(faults)?;
+    }
+    engine.set_scrub(setup.scrub)?;
+    Ok(engine)
 }
 
 impl Server {
@@ -355,11 +443,18 @@ impl Server {
                 backends.len()
             )));
         }
+        let boxed: Vec<Box<dyn VectorSearchBackend + Send>> = backends
+            .into_iter()
+            .map(|b| Box::new(b) as Box<dyn VectorSearchBackend + Send>)
+            .collect();
         let ingress = Arc::new(BoundedQueue::new(cfg.queue_capacity));
         let responses = Arc::new(Mutex::new(Vec::new()));
         let stats = Arc::new(ServerStats::default());
+        // boot support is snapshot version 1; installs must go higher
+        stats.snapshot_version.store(1, Ordering::Relaxed);
         let pool = WorkerPool::start(
-            backends,
+            boxed,
+            1,
             embed,
             Arc::clone(&responses),
             Arc::clone(&stats),
@@ -379,6 +474,8 @@ impl Server {
             pool,
             batcher_handle: Some(batcher_handle),
             next_id: AtomicU64::new(0),
+            factory: None,
+            install: Mutex::new(()),
         })
     }
 
@@ -437,19 +534,127 @@ impl Server {
         let support_set = crate::search::api::SupportSet::from_refs(dims, support, labels)?;
         let mut engines = Vec::with_capacity(cfg.workers);
         for w in 0..cfg.workers {
-            let mut ecfg = engine_cfg;
-            ecfg.seed = crate::testutil::derive_seed(engine_cfg.seed, 0x1000 + w as u64);
-            let mut engine = SearchEngine::new(ecfg, dims, support_set.len().max(1))?;
-            engine.program(&support_set)?;
-            engine.set_cascade(setup.cascade.clone())?;
-            engine.set_routing(setup.routing.clone())?;
-            if let Some(faults) = setup.faults {
-                engine.set_faults(faults)?;
-            }
-            engine.set_scrub(setup.scrub)?;
-            engines.push(engine);
+            engines.push(build_replica(engine_cfg, dims, w, &support_set, &setup)?);
         }
-        Ok(Self::start_with_backends(cfg, engines, embed)?)
+        let mut server = Self::start_with_backends(cfg, engines, embed)?;
+        server.factory = Some(ReplicaFactory { engine_cfg, dims });
+        Ok(server)
+    }
+
+    /// Hot-swap the serving support set — zero downtime, no hot-path
+    /// locks (DESIGN.md §Snapshots). Builds one fresh engine replica per
+    /// worker on *this* thread (same derived seeds as boot, so the
+    /// swapped fleet answers bitwise identically to a cold start on
+    /// `snapshot`), then enqueues a swap ticket into every worker queue.
+    /// Each worker exchanges its backend at a batch boundary: batches
+    /// already queued ahead of the ticket are answered by the old
+    /// replica, everything after by the new one, and no request ever
+    /// sees a half-programmed engine. The old replica drops on the
+    /// worker thread right after its last batch drains.
+    ///
+    /// Returns the installed version. Typed rejections leave the old
+    /// version serving untouched: [`EngineError::InvalidConfig`] for an
+    /// empty snapshot, a dims mismatch, a non-increasing version, or a
+    /// backend-supplied server (no factory);
+    /// [`EngineError::ShuttingDown`] when the worker queues are closed.
+    pub fn install_snapshot(
+        &self,
+        snapshot: &crate::search::api::SupportSnapshot,
+    ) -> std::result::Result<u64, EngineError> {
+        let factory = self.factory.as_ref().ok_or_else(|| {
+            EngineError::InvalidConfig(
+                "server was started from caller-supplied backends; \
+                 use install_snapshot_backends to swap them"
+                    .into(),
+            )
+        })?;
+        let _guard = self.install.lock().unwrap();
+        if snapshot.support.is_empty() {
+            return Err(EngineError::InvalidConfig("snapshot has no support vectors".into()));
+        }
+        if snapshot.dims() != factory.dims {
+            return Err(EngineError::InvalidConfig(format!(
+                "snapshot dims ({}) != serving dims ({})",
+                snapshot.dims(),
+                factory.dims
+            )));
+        }
+        let current = self.stats.snapshot_version.load(Ordering::Relaxed);
+        if snapshot.version <= current {
+            return Err(EngineError::InvalidConfig(format!(
+                "snapshot version {} is not newer than serving version {current}",
+                snapshot.version
+            )));
+        }
+        let build_started = Instant::now();
+        let mut replicas: Vec<Box<dyn VectorSearchBackend + Send>> =
+            Vec::with_capacity(self.pool.workers());
+        for w in 0..self.pool.workers() {
+            replicas.push(Box::new(build_replica(
+                factory.engine_cfg,
+                factory.dims,
+                w,
+                &snapshot.support,
+                &snapshot.setup,
+            )?));
+        }
+        self.stats
+            .swap_build_ms
+            .store(build_started.elapsed().as_millis() as u64, Ordering::Relaxed);
+        self.dispatch_swap(snapshot.version, replicas)
+    }
+
+    /// [`Self::install_snapshot`] for servers whose replicas the caller
+    /// builds directly (the [`Self::start_with_backends`] path, e.g. a
+    /// [`crate::baselines::FloatBaseline`] fleet): swap in
+    /// pre-programmed replacement backends, one per worker.
+    pub fn install_snapshot_backends<B>(
+        &self,
+        version: u64,
+        backends: Vec<B>,
+    ) -> std::result::Result<u64, EngineError>
+    where
+        B: VectorSearchBackend + Send + 'static,
+    {
+        let _guard = self.install.lock().unwrap();
+        if backends.len() != self.pool.workers() {
+            return Err(EngineError::InvalidConfig(format!(
+                "snapshot carries {} replicas for {} workers; \
+                 the pool swaps one replica per worker",
+                backends.len(),
+                self.pool.workers()
+            )));
+        }
+        let current = self.stats.snapshot_version.load(Ordering::Relaxed);
+        if version <= current {
+            return Err(EngineError::InvalidConfig(format!(
+                "snapshot version {version} is not newer than serving version {current}"
+            )));
+        }
+        let boxed: Vec<Box<dyn VectorSearchBackend + Send>> = backends
+            .into_iter()
+            .map(|b| Box::new(b) as Box<dyn VectorSearchBackend + Send>)
+            .collect();
+        self.dispatch_swap(version, boxed)
+    }
+
+    /// Enqueue one swap ticket per worker, then publish the version.
+    /// Caller holds the install lock (or is the only installer).
+    fn dispatch_swap(
+        &self,
+        version: u64,
+        replicas: Vec<Box<dyn VectorSearchBackend + Send>>,
+    ) -> std::result::Result<u64, EngineError> {
+        for (w, backend) in replicas.into_iter().enumerate() {
+            let ticket = worker::SwapTicket::new(version, backend);
+            if self.pool.senders()[w].push(worker::WorkItem::Swap(ticket)).is_err() {
+                // worker queues only close at shutdown; replicas already
+                // dispatched ride out the drain harmlessly
+                return Err(EngineError::ShuttingDown);
+            }
+        }
+        self.stats.snapshot_version.store(version, Ordering::Relaxed);
+        Ok(version)
     }
 
     /// Submit a top-1 request; blocks when the queue is full
@@ -462,23 +667,31 @@ impl Server {
     ///
     /// If the server is shutting down (ingress closed), the request is
     /// still answered — with a typed [`EngineError::ShuttingDown`]
-    /// response — never silently dropped.
+    /// response — never silently dropped. Accounting matches
+    /// [`Self::try_submit_routed`]: a refused request counts as
+    /// `rejected`, never `submitted`, so the invariant
+    /// `submitted == completed + errored + in-flight` holds on every
+    /// entry path.
     pub fn submit_with(&self, payload: Payload, options: SearchOptions) -> u64 {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        self.stats.submitted.fetch_add(1, Ordering::Relaxed);
         let req = Request { id, payload, options, submitted_at: Instant::now(), reply: None };
-        if let Err(refused) = self.ingress.push(req) {
-            let req = refused.into_inner();
-            self.stats.errored.fetch_add(1, Ordering::Relaxed);
-            route_response(
-                &self.responses,
-                req.reply,
-                Response {
-                    id: req.id,
-                    outcome: Err(EngineError::ShuttingDown),
-                    wall_latency: req.submitted_at.elapsed(),
-                },
-            );
+        match self.ingress.push(req) {
+            Ok(()) => {
+                self.stats.submitted.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(refused) => {
+                let req = refused.into_inner();
+                self.stats.rejected.fetch_add(1, Ordering::Relaxed);
+                route_response(
+                    &self.responses,
+                    req.reply,
+                    Response {
+                        id: req.id,
+                        outcome: Err(EngineError::ShuttingDown),
+                        wall_latency: req.submitted_at.elapsed(),
+                    },
+                );
+            }
         }
         id
     }
@@ -773,14 +986,152 @@ mod tests {
         // fleet never aged (logical clock untouched) so canaries hold full
         // margin
         assert!(stats_arc.scrub_passes.load(Ordering::Relaxed) >= 1);
-        assert_eq!(stats_arc.canary_margin(), 1.0);
-        assert_eq!(stats_arc.failed_shards.load(Ordering::Relaxed), 0);
+        let gauges = stats_arc.scrub_gauges();
+        assert_eq!(gauges.canary_margin, 1.0);
+        assert_eq!(gauges.failed_shards, 0);
         // the single-shard replica stays fully routable
-        assert_eq!(stats_arc.routing_eligible_shards.load(Ordering::Relaxed), 1);
+        assert_eq!(gauges.routing_eligible_shards, 1);
         let json = stats_arc.to_json().render();
         assert!(json.contains("\"scrub_passes\""), "{json}");
         assert!(json.contains("\"canary_margin\""), "{json}");
         assert!(json.contains("\"routing_eligible_shards\""), "{json}");
+    }
+
+    #[test]
+    fn concurrent_scrub_passes_never_tear_the_gauge_block() {
+        use crate::search::api::{ScrubReport, ShardHealth};
+        // Two replicas publish scrub passes with *coherent but distinct*
+        // gauge blocks; every reader snapshot must wholly match one of
+        // them — a blend (A's failed_shards with B's canary_margin) is
+        // exactly the tearing bug the single-lock block fixes.
+        fn backend_stats(shard_health: Vec<ShardHealth>) -> BackendStats {
+            BackendStats {
+                backend: "mcam".into(),
+                vectors: 8,
+                tombstones: 0,
+                shards: shard_health.len(),
+                max_iterations_per_search: 0,
+                svss_iterations_per_search: 0,
+                avss_iterations_per_search: 0,
+                cascade_max_iterations_per_search: 0,
+                avg_iterations_per_search: 0.0,
+                nj_per_search: 0.0,
+                shard_health,
+                scrub_passes: 1,
+                strings_scrubbed: 0,
+                slots_reprogrammed: 0,
+                slots_remapped: 0,
+                spares_remaining: 0,
+                canary_margin: 1.0,
+            }
+        }
+        let view_a = ScrubGauges {
+            spares_remaining: 7,
+            failed_shards: 2,
+            degraded_shards: 0,
+            routing_eligible_shards: 1,
+            canary_margin: 0.25,
+        };
+        let view_b = ScrubGauges {
+            spares_remaining: 11,
+            failed_shards: 0,
+            degraded_shards: 0,
+            routing_eligible_shards: 5,
+            canary_margin: 1.0,
+        };
+        let stats = Arc::new(ServerStats::default());
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let mut writers = Vec::new();
+        for (health, report) in [
+            (
+                vec![ShardHealth::Failed, ShardHealth::Failed, ShardHealth::Healthy],
+                ScrubReport { canary_margin: 0.25, spares_remaining: 7, ..Default::default() },
+            ),
+            (
+                vec![ShardHealth::Healthy; 5],
+                ScrubReport { canary_margin: 1.0, spares_remaining: 11, ..Default::default() },
+            ),
+        ] {
+            let stats = Arc::clone(&stats);
+            let stop = Arc::clone(&stop);
+            writers.push(std::thread::spawn(move || {
+                let backend = backend_stats(health);
+                while !stop.load(Ordering::Relaxed) {
+                    stats.record_scrub(&report, &backend);
+                }
+            }));
+        }
+        for _ in 0..2000 {
+            let got = stats.scrub_gauges();
+            assert!(
+                got == view_a || got == view_b || got == ScrubGauges::default(),
+                "torn gauge block: {got:?}"
+            );
+        }
+        stop.store(true, Ordering::Relaxed);
+        for w in writers {
+            w.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn backend_swap_replaces_float_replicas_in_place() {
+        // start_with_backends has no factory: install_snapshot is a
+        // typed refusal, install_snapshot_backends swaps caller-built
+        // replicas.
+        use crate::baselines::{FloatBaseline, Metric};
+        let build = |labels: &[u32]| {
+            let mut b = FloatBaseline::new(2, Metric::L2).unwrap();
+            b.program_support(&[&[0.0f32, 0.0] as &[f32], &[1.0, 1.0]], labels).unwrap();
+            b
+        };
+        let server = Server::start_with_backends(
+            CoordinatorConfig { workers: 2, ..Default::default() },
+            vec![build(&[10, 20]), build(&[10, 20])],
+            worker::identity_embed(),
+        )
+        .unwrap();
+        let snap = crate::search::api::SupportSnapshot::new(
+            2,
+            crate::search::api::SupportSet::from_refs(
+                2,
+                &[&[0.0f32, 0.0] as &[f32]],
+                &[9],
+            )
+            .unwrap(),
+        );
+        assert!(matches!(
+            server.install_snapshot(&snap),
+            Err(EngineError::InvalidConfig(_))
+        ));
+        // wrong replica count is refused, version stays at boot
+        assert!(matches!(
+            server.install_snapshot_backends(2, vec![build(&[30, 40])]),
+            Err(EngineError::InvalidConfig(_))
+        ));
+        // stale version is refused
+        assert!(matches!(
+            server.install_snapshot_backends(1, vec![build(&[30, 40]), build(&[30, 40])]),
+            Err(EngineError::InvalidConfig(_))
+        ));
+        assert_eq!(server.stats().snapshot_version.load(Ordering::Relaxed), 1);
+        assert_eq!(
+            server
+                .install_snapshot_backends(2, vec![build(&[30, 40]), build(&[30, 40])])
+                .unwrap(),
+            2
+        );
+        // drain the swap tickets, then new labels serve
+        std::thread::sleep(Duration::from_millis(20));
+        server.submit(Payload::Embedding(vec![0.9, 1.1]));
+        let responses = server.shutdown();
+        assert_eq!(responses.len(), 1);
+        assert_eq!(responses[0].label(), Some(40));
+        assert_eq!(
+            responses[0].outcome.as_ref().unwrap().snapshot_version,
+            Some(2),
+            "response is tagged with the swapped-in version"
+        );
     }
 
     #[test]

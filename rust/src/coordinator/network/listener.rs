@@ -103,6 +103,13 @@ impl NetServer {
         self.server.stats()
     }
 
+    /// The coordinator behind this listener — the snapshot control
+    /// plane ([`crate::coordinator::Server::install_snapshot`]) lives
+    /// there, and installs are safe while connections are serving.
+    pub fn server(&self) -> &crate::coordinator::Server {
+        &self.server
+    }
+
     /// A shared handle to the coordinator counters (serving + scrub
     /// ledger) that outlives [`Self::shutdown`].
     pub fn server_stats_handle(&self) -> Arc<ServerStats> {

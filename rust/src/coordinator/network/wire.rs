@@ -11,6 +11,8 @@
 //!                | hits (count u32 + [index u64 | label u32 | score f64])
 //!                | full_scores (present u8 [+ count u32 + f64s])
 //!                | cascade (present u8 [+ stages])
+//!                | routing (present u8 [+ shard counts])
+//!                | snapshot_version (present u8 [+ u64])
 //!   3 Error    : id u64 | code u16 | a u64 | b u64 | msg (len u32 + utf-8)
 //!   4 Shutdown : (empty) — drain the server and exit
 //! ```
@@ -219,6 +221,8 @@ mod tests {
                     coverage: 0.75,
                     full_scores: None,
                     cascade: None,
+                    routing: None,
+                    snapshot_version: Some(2),
                 },
             },
             Frame::Error { id: 7, error: EngineError::Overloaded },

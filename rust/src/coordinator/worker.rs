@@ -30,26 +30,55 @@ pub fn identity_embed() -> EmbedFn {
     })
 }
 
+/// A replacement backend replica for one worker, built off the worker
+/// thread by [`super::Server::install_snapshot`] /
+/// [`super::Server::install_snapshot_backends`]. The worker adopts it
+/// at the next batch boundary and drops its old replica in place.
+pub struct SwapTicket {
+    version: u64,
+    backend: Box<dyn VectorSearchBackend + Send>,
+}
+
+impl SwapTicket {
+    pub(crate) fn new(version: u64, backend: Box<dyn VectorSearchBackend + Send>) -> SwapTicket {
+        SwapTicket { version, backend }
+    }
+}
+
+impl std::fmt::Debug for SwapTicket {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SwapTicket").field("version", &self.version).finish_non_exhaustive()
+    }
+}
+
+/// One unit of work on a worker queue. The queue is FIFO, so a `Swap`
+/// enqueued after a `Batch` is adopted only once that batch has been
+/// fully answered by the old replica — the swap happens at a batch
+/// boundary and no request ever sees a half-programmed engine.
+#[derive(Debug)]
+pub enum WorkItem {
+    Batch(Vec<Request>),
+    Swap(SwapTicket),
+}
+
 pub struct WorkerPool {
-    senders: Vec<Arc<BoundedQueue<Vec<Request>>>>,
+    senders: Vec<Arc<BoundedQueue<WorkItem>>>,
     handles: Vec<JoinHandle<()>>,
 }
 
 impl WorkerPool {
-    pub fn start<B>(
-        backends: Vec<B>,
+    pub fn start(
+        backends: Vec<Box<dyn VectorSearchBackend + Send>>,
+        boot_version: u64,
         embed: EmbedFn,
         responses: Arc<Mutex<Vec<Response>>>,
         stats: Arc<ServerStats>,
         scrub_every_batches: Option<u64>,
-    ) -> WorkerPool
-    where
-        B: VectorSearchBackend + Send + 'static,
-    {
+    ) -> WorkerPool {
         let mut senders = Vec::new();
         let mut handles = Vec::new();
         for (w, mut backend) in backends.into_iter().enumerate() {
-            let queue: Arc<BoundedQueue<Vec<Request>>> = Arc::new(BoundedQueue::new(64));
+            let queue: Arc<BoundedQueue<WorkItem>> = Arc::new(BoundedQueue::new(64));
             senders.push(Arc::clone(&queue));
             let responses = Arc::clone(&responses);
             let stats = Arc::clone(&stats);
@@ -58,8 +87,24 @@ impl WorkerPool {
                 std::thread::Builder::new()
                     .name(format!("mcamvss-worker-{w}"))
                     .spawn(move || {
+                        let mut version = boot_version;
                         let mut batches_since_scrub = 0u64;
-                        while let Some(mut batch) = queue.pop() {
+                        while let Some(item) = queue.pop() {
+                            let mut batch = match item {
+                                WorkItem::Batch(batch) => batch,
+                                WorkItem::Swap(ticket) => {
+                                    // Adopt the fresh replica; the old one
+                                    // drops here, after its last batch
+                                    // (queued ahead of the ticket, FIFO)
+                                    // has drained. Reset the scrub cadence
+                                    // — the new replica starts unworn.
+                                    backend = ticket.backend;
+                                    version = ticket.version;
+                                    batches_since_scrub = 0;
+                                    stats.swaps_completed.fetch_add(1, Ordering::Relaxed);
+                                    continue;
+                                }
+                            };
                             // Detach reply sinks first: `process_batch`
                             // reorders output relative to input, so
                             // responses are matched back to sinks by id.
@@ -67,13 +112,20 @@ impl WorkerPool {
                                 .iter_mut()
                                 .filter_map(|r| r.reply.take().map(|s| (r.id, s)))
                                 .collect();
-                            let out = process_batch(&mut backend, &embed, batch);
+                            let out = process_batch(&mut *backend, &embed, batch);
                             let ok = out.iter().filter(|r| r.is_ok()).count() as u64;
                             stats.completed.fetch_add(ok, Ordering::Relaxed);
                             stats
                                 .errored
                                 .fetch_add(out.len() as u64 - ok, Ordering::Relaxed);
-                            for resp in out {
+                            for mut resp in out {
+                                // Tag the version this replica was
+                                // programmed from — the whole batch ran on
+                                // one replica, so the whole batch carries
+                                // one version.
+                                if let Ok(r) = &mut resp.outcome {
+                                    r.snapshot_version = Some(version);
+                                }
                                 let sink = sinks.remove(&resp.id);
                                 route_response(&responses, sink, resp);
                             }
@@ -99,8 +151,13 @@ impl WorkerPool {
         WorkerPool { senders, handles }
     }
 
-    pub fn senders(&self) -> Vec<Arc<BoundedQueue<Vec<Request>>>> {
+    pub fn senders(&self) -> Vec<Arc<BoundedQueue<WorkItem>>> {
         self.senders.clone()
+    }
+
+    /// Number of worker threads (== replica count).
+    pub fn workers(&self) -> usize {
+        self.handles.len()
     }
 
     pub fn join(self) {
@@ -115,7 +172,7 @@ impl WorkerPool {
 
 /// Answer one batch: every request of `batch` yields exactly one
 /// [`Response`], success or typed error.
-fn process_batch<B: VectorSearchBackend>(
+fn process_batch<B: VectorSearchBackend + ?Sized>(
     backend: &mut B,
     embed: &EmbedFn,
     batch: Vec<Request>,

@@ -19,6 +19,7 @@
 //!                [--retention-drift P] [--read-disturb P]
 //!                [--scrub] [--scrub-canaries N] [--scrub-spares N]
 //!                [--scrub-margin F] [--scrub-every N]
+//!                [--snapshot-watch dir] [--snapshot-poll-ms MS]
 //! mcamvss bench-client --connect HOST:PORT [--clients N] [--requests M]
 //!                [--dims D] [--top-k K] [--shutdown-server]
 //! mcamvss train  [--smoke] [--variant std|hat_svss|hat_avss]
@@ -30,6 +31,10 @@
 //! `--listen` it takes the same coordinator over TCP (the MVW1 wire
 //! protocol of DESIGN.md §Wire) until a client sends a shutdown frame,
 //! `--serve-seconds` expires, or the process is signalled.
+//! `--snapshot-watch dir` additionally polls `dir/manifest.txt` and
+//! hot-swaps a refreshed support set under live traffic with zero
+//! downtime (DESIGN.md §Snapshots) — stage a new artifact tree with an
+//! atomic `mv` into the watch path.
 //! `bench-client` is the closed-loop load generator for that mode: it
 //! asserts every request is answered exactly once and merges latency
 //! percentiles into `BENCH_engine.json`.
@@ -224,6 +229,12 @@ fn load_config(args: &Args) -> Result<Config> {
             scrub.every_batches = v as u64;
         }
         cfg.scrub = Some(scrub);
+    }
+    if let Some(dir) = args.opt("snapshot-watch") {
+        cfg.snapshot.watch = Some(dir.to_string());
+    }
+    if let Some(v) = args.opt_usize("snapshot-poll-ms")? {
+        cfg.snapshot.poll_ms = v as u64;
     }
     cfg.validate()?;
     Ok(cfg)
@@ -622,10 +633,34 @@ fn cmd_serve_listen(args: &Args, cfg: &Config, addr: &str) -> Result<()> {
     let deadline = args
         .opt_usize("serve-seconds")?
         .map(|s| Instant::now() + Duration::from_secs(s as u64));
+    let watch = cfg.snapshot.watch.as_ref().map(std::path::PathBuf::from);
+    if let Some(dir) = &watch {
+        println!(
+            "snapshot watch: {} (poll every {}ms, serving version {})",
+            dir.display(),
+            cfg.snapshot.poll_ms,
+            net.server_stats().snapshot_version.load(std::sync::atomic::Ordering::Relaxed)
+        );
+    }
+    let poll = Duration::from_millis(cfg.snapshot.poll_ms);
+    let mut next_poll = Instant::now();
+    let mut last_seen: Option<std::time::SystemTime> = None;
     while !net.shutdown_requested() {
         if let Some(d) = deadline {
             if Instant::now() >= d {
                 break;
+            }
+        }
+        if let Some(dir) = &watch {
+            if Instant::now() >= next_poll {
+                next_poll = Instant::now() + poll;
+                match try_refresh_snapshot(net.server(), cfg, dir, &mut last_seen) {
+                    Ok(Some(version)) => println!("snapshot installed: version {version}"),
+                    Ok(None) => {}
+                    // e.g. a half-copied artifact tree: leave `last_seen`
+                    // behind so the next tick retries
+                    Err(err) => println!("snapshot refresh failed (will retry): {err:#}"),
+                }
             }
         }
         std::thread::sleep(Duration::from_millis(50));
@@ -643,6 +678,57 @@ fn cmd_serve_listen(args: &Args, cfg: &Config, addr: &str) -> Result<()> {
         println!("{} unrouted response(s) drained", leftover.len());
     }
     Ok(())
+}
+
+/// One poll tick of the `--snapshot-watch` loop: stat `manifest.txt`
+/// in the watch directory and, on a changed mtime, load the refreshed
+/// support set (same episode sampling as boot) and hot-swap it into
+/// the live coordinator. Returns the installed version, or `None` when
+/// nothing new is staged. `last_seen` advances only after a successful
+/// install, so a half-copied artifact tree is simply retried on the
+/// next tick — stage trees with an atomic `mv` into the watch path.
+fn try_refresh_snapshot(
+    server: &Server,
+    cfg: &Config,
+    dir: &std::path::Path,
+    last_seen: &mut Option<std::time::SystemTime>,
+) -> Result<Option<u64>> {
+    let mtime = match std::fs::metadata(dir.join("manifest.txt")).and_then(|m| m.modified()) {
+        Ok(t) => t,
+        // nothing staged yet (or not readable): keep serving quietly
+        Err(_) => return Ok(None),
+    };
+    if *last_seen == Some(mtime) {
+        return Ok(None);
+    }
+    let store = ArtifactStore::open(dir)?;
+    let ds = store.embeddings(&cfg.dataset, &cfg.variant, "test")?;
+    let mut rng = episode_rng(cfg.seed, 0);
+    let episode = sample_episode(&ds, &mut rng, cfg.n_way, cfg.k_shot, cfg.n_query);
+    let support: Vec<&[f32]> =
+        episode.support.iter().map(|&(row, _)| ds.embedding(row)).collect();
+    let labels: Vec<u32> = episode.support.iter().map(|&(_, l)| l).collect();
+    let support_set = mcamvss::search::api::SupportSet::from_refs(ds.dims, &support, &labels)?;
+    let version = server
+        .stats()
+        .snapshot_version
+        .load(std::sync::atomic::Ordering::Relaxed)
+        + 1;
+    let mut snapshot = mcamvss::search::api::SupportSnapshot::new(version, support_set);
+    // Replacement replicas keep the serving feature set (cascade /
+    // routing / faults / scrub), exactly as build_server installed it.
+    snapshot.setup = mcamvss::coordinator::EngineSetup {
+        cascade: cfg
+            .cascade
+            .as_ref()
+            .map(|s| s.to_cascade(cfg.encoding.word_length(cfg.cl))),
+        routing: cfg.routing.as_ref().map(|s| s.to_routing()),
+        faults: cfg.faults.as_ref().map(|f| f.to_model()),
+        scrub: cfg.scrub.as_ref().map(|s| s.to_scrub()),
+    };
+    let installed = server.install_snapshot(&snapshot)?;
+    *last_seen = Some(mtime);
+    Ok(Some(installed))
 }
 
 /// Deterministic clustered support set for artifact-free serving:
@@ -850,14 +936,39 @@ fn cmd_train(args: &Args) -> Result<()> {
     if args.flag("smoke") {
         // The smoke harness runs a fixed tiny budget; refuse flags it
         // would silently drop rather than pretend they took effect
-        // (--config included: only --seed reaches the smoke run).
-        for key in ["steps", "meta-episodes", "cl", "variant", "out", "config"] {
+        // (--config included: only --seed and --out reach the smoke run).
+        for key in ["steps", "meta-episodes", "cl", "variant", "config"] {
             if args.opt(key).is_some() {
                 bail!("--{key} is not supported with --smoke (fixed smoke budget)");
             }
         }
         println!("train --smoke: pretrain + 2 meta steps per variant (ideal device, seed {seed})");
         print!("{}", hat::smoke(seed)?);
+        // --smoke --out: additionally export a smoke-budget artifact
+        // tree (every variant, same fixed budget). CI's swap-smoke job
+        // stages one into a `serve --snapshot-watch` directory to
+        // exercise a live hot-swap without the full training budget.
+        if let Some(dir) = args.opt("out").map(std::path::PathBuf::from) {
+            let settings = TrainSettings::synth().smoke();
+            let data = hat::data::generate(hat::data::SynthSpec::smoke(), seed);
+            let cfg = hat::SYNTH_CONTROLLER;
+            let mut log = |_line: String| {};
+            let (pretrained, _) = hat::pretrain(&data.train, &cfg, &settings, seed, &mut log);
+            for variant in hat::VARIANTS {
+                let trained = hat::meta_train(
+                    &pretrained,
+                    &data.train,
+                    &cfg,
+                    &settings,
+                    variant,
+                    seed,
+                    &mut log,
+                )?;
+                let clip = hat::export_artifacts(&dir, "synth", variant, &cfg, &trained, &data)?;
+                hat::save_params(&dir.join("weights").join(format!("synth_{variant}")), &trained)?;
+                println!("  [export {variant}] clip {clip:.4} -> {}", dir.display());
+            }
+        }
         println!("train smoke ok");
         return Ok(());
     }

@@ -195,6 +195,7 @@ pub struct Hit {
 ///     full_scores: None,
 ///     cascade: None,
 ///     routing: None,
+///     snapshot_version: None,
 /// };
 /// assert_eq!(response.top().unwrap().label, 7);
 /// assert!(!response.is_partial());
@@ -239,6 +240,15 @@ pub struct SearchResponse {
     /// *sensed*; [`Self::coverage`] stays health-based, so a routed and a
     /// flat answer from the same fleet report the same coverage.
     pub routing: Option<RoutingStats>,
+    /// Version of the [`SupportSnapshot`] the serving replica was
+    /// programmed from; present iff the answer came through a
+    /// version-tracking coordinator ([`crate::coordinator::Server`] —
+    /// boot support is version 1, each
+    /// [`crate::coordinator::Server::install_snapshot`] hot-swap bumps
+    /// it). A bare engine attaches nothing. Every response observes
+    /// exactly one version: workers swap replicas only at batch
+    /// boundaries (DESIGN.md §Snapshots).
+    pub snapshot_version: Option<u64>,
 }
 
 impl SearchResponse {
@@ -447,6 +457,38 @@ impl SupportSet {
 
     pub fn labels(&self) -> &[u32] {
         &self.labels
+    }
+}
+
+/// An immutable, versioned support set plus the policy block a
+/// coordinator programs replicas with — the unit of zero-downtime
+/// refresh (DESIGN.md §Snapshots).
+///
+/// Versions are chosen by the caller and must strictly increase per
+/// server; [`crate::coordinator::Server::install_snapshot`] rejects a
+/// stale or equal version with a typed
+/// [`EngineError::InvalidConfig`] and leaves the old version serving.
+/// Boot support is version 1, so the first refresh is version 2.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SupportSnapshot {
+    /// Strictly increasing per server; echoed in every
+    /// [`SearchResponse::snapshot_version`] answered from this support.
+    pub version: u64,
+    /// The support vectors to program into each fresh replica.
+    pub support: SupportSet,
+    /// Cascade/routing/fault/scrub policies reinstalled on the fresh
+    /// replicas (a refresh can retune policy, not just support).
+    pub setup: crate::coordinator::EngineSetup,
+}
+
+impl SupportSnapshot {
+    /// Snapshot with the given version and support, default policies.
+    pub fn new(version: u64, support: SupportSet) -> SupportSnapshot {
+        SupportSnapshot { version, support, setup: crate::coordinator::EngineSetup::default() }
+    }
+
+    pub fn dims(&self) -> usize {
+        self.support.dims()
     }
 }
 
@@ -765,7 +807,7 @@ pub fn decode_request_body(r: &mut ByteReader<'_>) -> Result<WireRequest, BinioE
 /// | hits (count u32 + [index u64 | label u32 | score f64]) |
 /// full_scores (present u8 [+ f64 vec]) | cascade (present u8 [+
 /// stages]) | routing (present u8 [+ shards_probed u64 + shards_sensed
-/// u64 + iterations_saved u64])`.
+/// u64 + iterations_saved u64]) | snapshot_version (present u8 [+ u64])`.
 pub fn encode_response_body(resp: &SearchResponse, w: &mut ByteWriter) {
     w.u64(resp.iterations);
     w.f64(resp.device_latency_us);
@@ -802,6 +844,13 @@ pub fn encode_response_body(resp: &SearchResponse, w: &mut ByteWriter) {
             w.u64(stats.shards_probed as u64);
             w.u64(stats.shards_sensed as u64);
             w.u64(stats.iterations_saved as u64);
+        }
+    }
+    match resp.snapshot_version {
+        None => w.u8(0),
+        Some(version) => {
+            w.u8(1);
+            w.u64(version);
         }
     }
 }
@@ -860,6 +909,11 @@ pub fn decode_response_body(r: &mut ByteReader<'_>) -> Result<SearchResponse, Bi
     } else {
         None
     };
+    let snapshot_version = if decode_flag(r.u8()?, "bad snapshot_version presence flag")? {
+        Some(r.u64()?)
+    } else {
+        None
+    };
     r.expect_end()?;
     Ok(SearchResponse {
         hits,
@@ -869,6 +923,7 @@ pub fn decode_response_body(r: &mut ByteReader<'_>) -> Result<SearchResponse, Bi
         full_scores,
         cascade,
         routing,
+        snapshot_version,
     })
 }
 
@@ -1073,6 +1128,7 @@ mod tests {
                 // negative saved survives the u64 two's-complement trip
                 iterations_saved: -17,
             }),
+            snapshot_version: Some(7),
         };
         let mut w = ByteWriter::new();
         encode_response_body(&resp, &mut w);
@@ -1094,6 +1150,7 @@ mod tests {
             full_scores: None,
             cascade: None,
             routing: None,
+            snapshot_version: None,
         };
         let mut w = ByteWriter::new();
         encode_response_body(&resp, &mut w);

@@ -1133,6 +1133,23 @@ impl SearchEngine {
         Ok(())
     }
 
+    /// Build a fresh engine with this engine's configuration — same
+    /// encoding, shard layout, **and seed**, so the derived per-shard
+    /// variation streams are identical — and program it with `support`.
+    /// This is the snapshot hot-swap builder
+    /// ([`crate::coordinator::Server::install_snapshot`]): the
+    /// replacement replica is constructed off the worker thread while
+    /// the old replica keeps serving, and because the seed is reused the
+    /// swapped-in engine answers bitwise identically to a cold start on
+    /// the same snapshot. Policies (cascade/routing/faults/scrub) are
+    /// *not* carried over — the caller reinstalls them from its
+    /// [`crate::coordinator::EngineSetup`].
+    pub fn clone_program(&self, support: &SupportSet) -> Result<SearchEngine, EngineError> {
+        let mut fresh = SearchEngine::new(self.cfg, self.layout.dims, support.len().max(1))?;
+        fresh.program(support)?;
+        Ok(fresh)
+    }
+
     /// Convenience wrapper over [`Self::program`] for borrowed support.
     pub fn program_support(
         &mut self,
@@ -1441,6 +1458,7 @@ impl SearchEngine {
                 full_scores: if request.options.full_scores { Some(scores) } else { None },
                 cascade: None,
                 routing: None,
+                snapshot_version: None,
             });
         }
         self.sweeps += requests.len() as u64;
@@ -1686,6 +1704,7 @@ impl SearchEngine {
                 full_scores: request.options.full_scores.then_some(scores),
                 cascade: None,
                 routing: Some(stats),
+                snapshot_version: None,
             });
         }
         self.sweeps += requests.len() as u64;
@@ -1880,6 +1899,7 @@ impl SearchEngine {
                 }),
                 routing: route
                     .map(|r| self.routing_stats_for(&r.probed[qi], r.eligible, groups, w)),
+                snapshot_version: None,
             });
         }
         self.sweeps += requests.len() as u64;

@@ -10,7 +10,10 @@
 //! * **state isolation**: interleaved submissions from multiple producer
 //!   threads preserve per-request payload→response pairing;
 //! * **backpressure**: `try_submit` never blocks and never loses an
-//!   accepted request.
+//!   accepted request;
+//! * **accounting**: after shutdown, `submitted == completed + errored`
+//!   on every submit path (refusals count as `rejected`, never
+//!   `submitted`).
 
 use mcamvss::coordinator::batcher::BatcherConfig;
 use mcamvss::coordinator::worker::identity_embed;
@@ -45,6 +48,23 @@ fn support_set(rng: &mut Rng, n_classes: usize, per: usize) -> (Vec<Vec<f32>>, V
 fn engine_cfg() -> EngineConfig {
     // ideal device + fixed seed → deterministic predictions
     EngineConfig::new(Encoding::Mtmc, 4, SearchMode::Avss, 3.0).ideal()
+}
+
+/// The coordinator's accounting invariant, checked after shutdown when
+/// nothing is in flight: every submission that was accepted into the
+/// ingress is eventually answered (ok or typed error), and refusals
+/// are counted separately as `rejected` — never as `submitted`.
+fn assert_accounting(stats: &mcamvss::coordinator::ServerStats) {
+    use std::sync::atomic::Ordering;
+    let submitted = stats.submitted.load(Ordering::Relaxed);
+    let completed = stats.completed.load(Ordering::Relaxed);
+    let errored = stats.errored.load(Ordering::Relaxed);
+    assert_eq!(
+        submitted,
+        completed + errored,
+        "accounting invariant: submitted ({submitted}) != completed ({completed}) + \
+         errored ({errored})"
+    );
 }
 
 #[test]
@@ -91,7 +111,9 @@ fn prop_exactly_once_delivery_and_reference_agreement() {
         for q in &queries {
             ids.push(server.submit(Payload::Embedding(q.clone())));
         }
+        let stats = server.stats_handle();
         let mut responses = server.shutdown();
+        assert_accounting(&stats);
 
         // exactly-once: response ids == submitted ids as a set
         let mut got: Vec<u64> = responses.iter().map(|r| r.id).collect();
@@ -178,7 +200,9 @@ fn prop_malformed_requests_are_answered_with_typed_errors() {
                 }
             }
         }
+        let stats = server.stats_handle();
         let responses = server.shutdown();
+        assert_accounting(&stats);
         assert_eq!(responses.len(), expectations.len(), "case {case}: exactly-once");
         for (id, expected_err) in expectations {
             let resp = responses.iter().find(|r| r.id == id).unwrap();
@@ -246,7 +270,9 @@ fn prop_concurrent_producers_preserve_pairing() {
             h.join().unwrap();
         }
         let server = Arc::try_unwrap(server).ok().expect("sole owner");
+        let stats = server.stats_handle();
         let responses = server.shutdown();
+        assert_accounting(&stats);
         let truth: std::collections::HashMap<u64, u32> =
             submitted.lock().unwrap().iter().copied().collect();
         assert_eq!(responses.len(), truth.len());
@@ -289,10 +315,17 @@ fn prop_try_submit_accounts_every_accept() {
             accepted += 1;
         }
     }
+    let stats = server.stats_handle();
     let responses = server.shutdown();
+    assert_accounting(&stats);
     assert_eq!(
         responses.len(),
         accepted,
         "accepted requests must all be answered"
+    );
+    assert_eq!(
+        stats.submitted.load(std::sync::atomic::Ordering::Relaxed) as usize,
+        accepted,
+        "refused try_submit calls must count as rejected, not submitted"
     );
 }

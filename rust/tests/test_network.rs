@@ -465,9 +465,10 @@ fn failed_shard_serves_partial_coverage_then_scrub_restores_it() {
 
     net.shutdown();
     assert!(stats.scrub_passes.load(Ordering::Relaxed) >= 1, "scrub ledger counts the pass");
-    assert_eq!(stats.failed_shards.load(Ordering::Relaxed), 0, "health gauge back to clean");
+    let gauges = stats.scrub_gauges();
+    assert_eq!(gauges.failed_shards, 0, "health gauge back to clean");
     assert_eq!(
-        stats.routing_eligible_shards.load(Ordering::Relaxed),
+        gauges.routing_eligible_shards,
         shards as u64,
         "eligibility gauge recovers with the shard"
     );

@@ -1,0 +1,352 @@
+//! Versioned-snapshot hot-swap suite (DESIGN.md §Snapshots):
+//!
+//! * **exactly one version per response**: every answered request is
+//!   tagged with exactly one `snapshot_version`, requests completed
+//!   before an install carry the old version, requests after the swap
+//!   carry the new one;
+//! * **bitwise parity**: after a swap, the fleet answers bitwise
+//!   identically to a cold start on the new snapshot (same derived
+//!   per-replica seeds);
+//! * **typed rejection**: an invalid snapshot (dims mismatch, stale
+//!   version, empty support) is refused with `InvalidConfig` and the
+//!   old version keeps serving;
+//! * **swap x scrub**: installs compose with the worker scrub cadence
+//!   on a faulted device — no panics, every request answered;
+//! * **live wire traffic**: a loopback TCP fleet swaps under
+//!   concurrent closed-loop clients with zero dropped or duplicated
+//!   responses.
+
+use mcamvss::coordinator::batcher::BatcherConfig;
+use mcamvss::coordinator::network::{NetConfig, NetServer, WireClient};
+use mcamvss::coordinator::worker::identity_embed;
+use mcamvss::coordinator::{CoordinatorConfig, EngineSetup, Payload, Server, ServerStats};
+use mcamvss::device::faults::{FaultModel, ScrubConfig};
+use mcamvss::encoding::Encoding;
+use mcamvss::search::api::{EngineError, QueryKind, SupportSet, SupportSnapshot};
+use mcamvss::search::engine::EngineConfig;
+use mcamvss::search::{SearchMode, SearchOptions};
+use mcamvss::testutil::Rng;
+use std::sync::atomic::Ordering;
+use std::time::Duration;
+
+const DIMS: usize = 48;
+
+fn support_set(seed: u64, n_classes: usize, per: usize) -> (Vec<Vec<f32>>, Vec<u32>) {
+    let mut rng = Rng::new(seed);
+    let mut embs = Vec::new();
+    let mut labels = Vec::new();
+    for c in 0..n_classes {
+        let proto: Vec<f64> = (0..DIMS).map(|_| rng.range_f64(0.2, 2.8)).collect();
+        for _ in 0..per {
+            embs.push(
+                proto
+                    .iter()
+                    .map(|&p| (p + 0.03 * rng.gaussian()).max(0.0) as f32)
+                    .collect(),
+            );
+            labels.push(c as u32);
+        }
+    }
+    (embs, labels)
+}
+
+fn engine_cfg() -> EngineConfig {
+    EngineConfig::new(Encoding::Mtmc, 4, SearchMode::Avss, 3.0).ideal()
+}
+
+fn coord_cfg(workers: usize) -> CoordinatorConfig {
+    CoordinatorConfig {
+        workers,
+        queue_capacity: 128,
+        batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) },
+        scrub_every_batches: None,
+    }
+}
+
+fn start_server(workers: usize, embs: &[Vec<f32>], labels: &[u32]) -> Server {
+    let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
+    Server::start(coord_cfg(workers), engine_cfg(), DIMS, &refs, labels, identity_embed())
+        .unwrap()
+}
+
+fn snapshot(version: u64, embs: &[Vec<f32>], labels: &[u32]) -> SupportSnapshot {
+    let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
+    SupportSnapshot::new(version, SupportSet::from_refs(DIMS, &refs, labels).unwrap())
+}
+
+/// Spin until `stats.completed` reaches `n` (all in-flight work
+/// answered) — bounded so a lost response fails the test instead of
+/// hanging it.
+fn wait_completed(stats: &ServerStats, n: u64) {
+    for _ in 0..2000 {
+        if stats.completed.load(Ordering::Relaxed) >= n {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    panic!(
+        "completed stuck at {} (want {n})",
+        stats.completed.load(Ordering::Relaxed)
+    );
+}
+
+/// Spin until every worker has adopted its swap ticket.
+fn wait_swapped(stats: &ServerStats, workers: u64) {
+    for _ in 0..2000 {
+        if stats.swaps_completed.load(Ordering::Relaxed) >= workers {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    panic!(
+        "swaps_completed stuck at {} (want {workers})",
+        stats.swaps_completed.load(Ordering::Relaxed)
+    );
+}
+
+#[test]
+fn every_response_carries_exactly_one_version_across_an_install() {
+    let (embs_a, labels_a) = support_set(0xA, 5, 3);
+    let (embs_b, labels_b) = support_set(0xB, 5, 3);
+    let server = start_server(2, &embs_a, &labels_a);
+    let stats = server.stats_handle();
+
+    const N: usize = 30;
+    let mut before = Vec::new();
+    for i in 0..N {
+        before.push(server.submit(Payload::Embedding(embs_a[i % embs_a.len()].clone())));
+    }
+    wait_completed(&stats, N as u64);
+
+    let installed = server.install_snapshot(&snapshot(2, &embs_b, &labels_b)).unwrap();
+    assert_eq!(installed, 2);
+    assert_eq!(stats.snapshot_version.load(Ordering::Relaxed), 2);
+    wait_swapped(&stats, 2);
+
+    let mut after = Vec::new();
+    for i in 0..N {
+        after.push(server.submit(Payload::Embedding(embs_b[i % embs_b.len()].clone())));
+    }
+    let responses = server.shutdown();
+    assert_eq!(responses.len(), 2 * N, "exactly-once across the swap");
+    assert_eq!(stats.swaps_completed.load(Ordering::Relaxed), 2, "one swap per worker");
+
+    for resp in &responses {
+        let ok = resp.outcome.as_ref().expect("well-formed request");
+        let version = ok.snapshot_version.expect("every response tagged");
+        if before.contains(&resp.id) {
+            assert_eq!(version, 1, "pre-install request {} served by boot support", resp.id);
+        } else {
+            assert!(after.contains(&resp.id));
+            assert_eq!(version, 2, "post-swap request {} served by the snapshot", resp.id);
+        }
+    }
+}
+
+#[test]
+fn post_swap_results_are_bitwise_identical_to_a_cold_start() {
+    let (embs_a, labels_a) = support_set(0xA, 4, 2);
+    let (embs_b, labels_b) = support_set(0xB, 4, 2);
+    let queries: Vec<Vec<f32>> = support_set(0xC, 4, 2).0;
+
+    // Fleet A: boots on support A, hot-swaps to B.
+    let swapped = start_server(1, &embs_a, &labels_a);
+    let swapped_stats = swapped.stats_handle();
+    swapped.install_snapshot(&snapshot(2, &embs_b, &labels_b)).unwrap();
+    wait_swapped(&swapped_stats, 1);
+
+    // Fleet B: cold start directly on support B.
+    let cold = start_server(1, &embs_b, &labels_b);
+
+    let options = SearchOptions { top_k: 3, full_scores: true, ..Default::default() };
+    for q in &queries {
+        swapped.submit_with(Payload::Embedding(q.clone()), options);
+        cold.submit_with(Payload::Embedding(q.clone()), options);
+    }
+    let mut from_swapped = swapped.shutdown();
+    let mut from_cold = cold.shutdown();
+    from_swapped.sort_by_key(|r| r.id);
+    from_cold.sort_by_key(|r| r.id);
+    assert_eq!(from_swapped.len(), queries.len());
+
+    for (s, c) in from_swapped.iter().zip(&from_cold) {
+        let mut s = s.outcome.clone().unwrap();
+        let mut c = c.outcome.clone().unwrap();
+        // the only permitted difference is the version tag itself
+        assert_eq!(s.snapshot_version, Some(2));
+        assert_eq!(c.snapshot_version, Some(1));
+        s.snapshot_version = None;
+        c.snapshot_version = None;
+        assert_eq!(s, c, "swap must reproduce a cold start bit for bit");
+    }
+}
+
+#[test]
+fn rejected_snapshots_leave_the_old_version_serving() {
+    let (embs_a, labels_a) = support_set(0xA, 4, 2);
+    let server = start_server(2, &embs_a, &labels_a);
+    let stats = server.stats_handle();
+
+    // dims mismatch
+    let (short, short_labels) = {
+        let mut rng = Rng::new(0xD);
+        let embs: Vec<Vec<f32>> =
+            (0..4).map(|_| (0..8).map(|_| rng.range_f64(0.0, 3.0) as f32).collect()).collect();
+        (embs, vec![0u32, 0, 1, 1])
+    };
+    let refs: Vec<&[f32]> = short.iter().map(|e| e.as_slice()).collect();
+    let bad_dims =
+        SupportSnapshot::new(2, SupportSet::from_refs(8, &refs, &short_labels).unwrap());
+    assert!(matches!(
+        server.install_snapshot(&bad_dims),
+        Err(EngineError::InvalidConfig(msg)) if msg.contains("dims")
+    ));
+
+    // stale version (boot support is version 1)
+    assert!(matches!(
+        server.install_snapshot(&snapshot(1, &embs_a, &labels_a)),
+        Err(EngineError::InvalidConfig(msg)) if msg.contains("version")
+    ));
+
+    // empty support
+    let empty = SupportSnapshot::new(3, SupportSet::from_refs(DIMS, &[], &[]).unwrap());
+    assert!(matches!(
+        server.install_snapshot(&empty),
+        Err(EngineError::InvalidConfig(_))
+    ));
+
+    // the old version is still the one serving
+    assert_eq!(stats.snapshot_version.load(Ordering::Relaxed), 1);
+    assert_eq!(stats.swaps_completed.load(Ordering::Relaxed), 0);
+    server.submit(Payload::Embedding(embs_a[0].clone()));
+    let responses = server.shutdown();
+    assert_eq!(responses.len(), 1);
+    let ok = responses[0].outcome.as_ref().unwrap();
+    assert_eq!(ok.snapshot_version, Some(1));
+    assert!(responses[0].label().is_some());
+}
+
+#[test]
+fn swaps_compose_with_the_scrub_cadence_on_a_faulted_device() {
+    let (embs_a, labels_a) = support_set(0xA, 4, 2);
+    let (embs_b, labels_b) = support_set(0xB, 4, 2);
+    let refs: Vec<&[f32]> = embs_a.iter().map(|e| e.as_slice()).collect();
+    let setup = EngineSetup {
+        faults: Some(FaultModel { retention_drift: 0.2, ..FaultModel::NONE }),
+        scrub: Some(ScrubConfig::default()),
+        ..Default::default()
+    };
+    let mut cfg = coord_cfg(2);
+    cfg.scrub_every_batches = Some(1); // scrub after every served batch
+    let server = Server::start_configured(
+        cfg,
+        engine_cfg(),
+        setup.clone(),
+        DIMS,
+        &refs,
+        &labels_a,
+        identity_embed(),
+    )
+    .unwrap();
+    let stats = server.stats_handle();
+
+    for i in 0..20 {
+        server.submit(Payload::Embedding(embs_a[i % embs_a.len()].clone()));
+    }
+    wait_completed(&stats, 20);
+    assert!(stats.scrub_passes.load(Ordering::Relaxed) >= 1, "cadence fired pre-swap");
+
+    // swapped replicas carry the same fault + scrub policy
+    let mut snap = snapshot(2, &embs_b, &labels_b);
+    snap.setup = setup;
+    server.install_snapshot(&snap).unwrap();
+    wait_swapped(&stats, 2);
+
+    for i in 0..20 {
+        server.submit(Payload::Embedding(embs_b[i % embs_b.len()].clone()));
+    }
+    let responses = server.shutdown();
+    assert_eq!(responses.len(), 40, "exactly-once across swap + scrubbing");
+    for resp in &responses {
+        let ok = resp.outcome.as_ref().expect("every request answered ok");
+        assert!(ok.snapshot_version == Some(1) || ok.snapshot_version == Some(2));
+    }
+    // the swap reset each worker's cadence counter; passes keep accruing
+    assert!(stats.scrub_passes.load(Ordering::Relaxed) >= 2, "cadence survives the swap");
+}
+
+#[test]
+fn loopback_tcp_hot_swap_under_live_load_drops_nothing() {
+    const CLIENTS: usize = 3;
+    const REQUESTS: usize = 40;
+    let (embs_a, labels_a) = support_set(0xA, 5, 3);
+    let (embs_b, labels_b) = support_set(0xB, 5, 3);
+    let refs: Vec<&[f32]> = embs_a.iter().map(|e| e.as_slice()).collect();
+    let server =
+        Server::start(coord_cfg(2), engine_cfg(), DIMS, &refs, &labels_a, identity_embed())
+            .unwrap();
+    let net = NetServer::start(server, "127.0.0.1:0", NetConfig::default()).unwrap();
+    let addr = net.local_addr();
+
+    let handles: Vec<_> = (0..CLIENTS)
+        .map(|c| {
+            let query_pool = embs_a.clone();
+            std::thread::spawn(move || {
+                let mut client = WireClient::connect(addr).unwrap();
+                client.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+                let mut seen = Vec::new();
+                for i in 0..REQUESTS {
+                    let id = (c * REQUESTS + i) as u64;
+                    let response = client
+                        .search_expect(
+                            id,
+                            QueryKind::Embedding,
+                            query_pool[i % query_pool.len()].clone(),
+                            SearchOptions::default(),
+                        )
+                        .unwrap();
+                    let version =
+                        response.snapshot_version.expect("wire responses carry the version");
+                    assert!(
+                        version == 1 || version == 2,
+                        "request {id} saw impossible version {version}"
+                    );
+                    seen.push((id, version));
+                }
+                seen
+            })
+        })
+        .collect();
+
+    // Install mid-flight: clients are pounding the fleet right now.
+    std::thread::sleep(Duration::from_millis(20));
+    let refs_b: Vec<&[f32]> = embs_b.iter().map(|e| e.as_slice()).collect();
+    let snap = SupportSnapshot::new(
+        2,
+        SupportSet::from_refs(DIMS, &refs_b, &labels_b).unwrap(),
+    );
+    net.server().install_snapshot(&snap).unwrap();
+
+    let mut all: Vec<(u64, u64)> =
+        handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+    all.sort_unstable();
+    let ids: Vec<u64> = all.iter().map(|&(id, _)| id).collect();
+    let expected: Vec<u64> = (0..(CLIENTS * REQUESTS) as u64).collect();
+    assert_eq!(ids, expected, "zero dropped, zero duplicated across the swap");
+
+    let stats = net.server_stats_handle();
+    wait_swapped(&stats, 2);
+    // after every worker swapped, new traffic is all version 2
+    let mut client = WireClient::connect(addr).unwrap();
+    client.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let response = client
+        .search_expect(9000, QueryKind::Embedding, embs_b[0].clone(), SearchOptions::default())
+        .unwrap();
+    assert_eq!(response.snapshot_version, Some(2));
+    drop(client);
+
+    assert_eq!(stats.snapshot_version.load(Ordering::Relaxed), 2);
+    let net_stats = net.net_stats_handle();
+    net.shutdown();
+    assert_eq!(net_stats.dropped_replies.load(Ordering::Relaxed), 0);
+}
