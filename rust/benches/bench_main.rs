@@ -16,8 +16,13 @@
 //! The tracked perf targets (`perf_kernel`, `perf_engine`,
 //! `perf_batch_shards`, `perf_topk`, `perf_cascade`, `perf_routing`)
 //! additionally write their measurements into `BENCH_engine.json` at the
-//! repository root (merged key-by-key, so partial runs keep the other
-//! sections), tracking the perf trajectory across PRs. `perf_cascade`
+//! repository root under the build's `BENCH_RUN_ID` (an **append-only**
+//! per-PR record: the deep merge only touches the current run's slot,
+//! so prior PRs' entries — and other targets' sections from partial
+//! runs — always survive; DESIGN.md §Perf). `perf_kernel` asserts its
+//! perf floors every run: ≥2× vs the naive reference, ≥1.5× for SIMD vs
+//! scalar fused when built with `--features simd`, and no worse than
+//! 0.6× the best previously recorded run. `perf_cascade`
 //! doubles as the cascade acceptance smoke: ≥2× sensed-string reduction
 //! at ≤0.5% synth accuracy drop is asserted on every run. `perf_routing`
 //! does the same for the shard-routing tier: ≥4× sensed-shard reduction
@@ -34,7 +39,7 @@ use mcamvss::fsl::store::ArtifactStore;
 use mcamvss::search::engine::{EngineConfig, SearchEngine};
 use mcamvss::search::{SearchMode, SearchRequest};
 use mcamvss::testutil::Rng;
-use mcamvss::util::json::{Json, ObjBuilder};
+use mcamvss::util::json::{keyed_by_run, Json, ObjBuilder, BENCH_RUN_ID};
 use mcamvss::CELLS_PER_STRING;
 use std::path::Path;
 use std::time::Instant;
@@ -253,30 +258,63 @@ fn main() {
 }
 
 /// Merge the measured perf entries into `BENCH_engine.json` at the repo
-/// root via [`mcamvss::util::json::merge_report`]: earlier (or partial)
-/// runs keep their keys, re-measured keys are replaced. The
-/// `bench-client` CLI subcommand merges into the same report.
+/// root via [`mcamvss::util::json::merge_report`]. Each section is
+/// recorded under the current [`BENCH_RUN_ID`] (`{target: {run_id:
+/// {...}}}`), and `merge_report`'s deep-merge only touches that id's
+/// slot — the committed record is append-only across PRs (DESIGN.md
+/// §Perf). The `bench-client` CLI subcommand merges into the same
+/// report the same way.
 fn write_report(entries: Vec<(String, Json)>) {
     if entries.is_empty() {
         return;
     }
-    let root = Path::new(env!("CARGO_MANIFEST_DIR")).parent().expect("crate has a parent dir");
-    let path = root.join("BENCH_engine.json");
-    match mcamvss::util::json::merge_report(&path, entries) {
-        Ok(()) => println!("[bench report → {}]", path.display()),
+    let path = report_path();
+    let keyed = entries.into_iter().map(|(k, v)| (k, keyed_by_run(v))).collect();
+    match mcamvss::util::json::merge_report(&path, keyed) {
+        Ok(()) => println!("[bench report → {} under run id {BENCH_RUN_ID}]", path.display()),
         Err(e) => eprintln!("WARNING: could not write {}: {e}", path.display()),
     }
+}
+
+/// `BENCH_engine.json` at the repository root.
+fn report_path() -> std::path::PathBuf {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).parent().expect("crate has a parent dir");
+    root.join("BENCH_engine.json")
+}
+
+/// Best `kernel_mcells_per_s` recorded in `BENCH_engine.json` by any
+/// *previous* run (any `perf_kernel` entry whose run id differs from
+/// [`BENCH_RUN_ID`]). `None` when there is no comparable prior entry.
+fn recorded_prior_kernel_throughput() -> Option<f64> {
+    let text = std::fs::read_to_string(report_path()).ok()?;
+    let parsed = Json::parse(&text).ok()?;
+    let Json::Obj(runs) = parsed.get("perf_kernel")? else {
+        return None;
+    };
+    runs.iter()
+        .filter(|(run, _)| run.as_str() != BENCH_RUN_ID)
+        .filter_map(|(_, entry)| entry.get("kernel_mcells_per_s")?.as_f64())
+        .filter(|&t| t > 0.0)
+        .fold(None, |best: Option<f64>, t| Some(best.map_or(t, |b| b.max(t))))
 }
 
 fn section(name: &str) {
     println!("==================== {name} ====================");
 }
 
-/// Acceptance microbench (ISSUE 2): fused tiled sense→vote→accumulate
-/// kernel vs the retained scalar reference on a fully occupied ideal
-/// block, plus a bench-local replica of the pre-tiling **string-major**
-/// storage for the honest before/after number. All three paths must
-/// produce bit-identical scores; the fused/naive ratio targets ≥2x.
+/// Acceptance microbench (ISSUE 2, extended in ISSUE 10): every
+/// sense→vote→accumulate kernel variant on a fully occupied ideal
+/// block — the per-string naive walk, a bench-local replica of the
+/// pre-tiling **string-major** storage (the honest PR-1 baseline), the
+/// scalar fused kernel, the integer-vote-accumulation kernel, the
+/// dispatcher (whatever [`McamBlock::active_kernel`] resolves to), and
+/// the SIMD kernel when built with `--features simd`. All paths must
+/// produce bit-identical scores. Asserted perf floors: the dispatched
+/// kernel ≥2× the naive reference; under `--features simd` the SIMD
+/// kernel ≥1.5× the scalar fused kernel; and the dispatched throughput
+/// must not regress below 0.6× the best entry any previous run
+/// recorded in `BENCH_engine.json` (the 0.6 bar absorbs machine-to-
+/// machine variance while catching real regressions — DESIGN.md §Perf).
 fn perf_kernel(report: &mut Vec<(String, Json)>) {
     let n = mcamvss::STRINGS_PER_BLOCK;
     let params = McamParams::default();
@@ -336,6 +374,37 @@ fn perf_kernel(report: &mut Vec<(String, Json)>) {
     }
     let naive_dt = t0.elapsed().as_secs_f64() / reps as f64;
 
+    let mut scalar_scores = vec![0f64; n];
+    block.sense_votes_range_scalar(&wordline, 0, n, &ladder, 1.0, &mut scalar_scores);
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        block.sense_votes_range_scalar(&wordline, 0, n, &ladder, 1.0, &mut scalar_scores);
+    }
+    let scalar_dt = t0.elapsed().as_secs_f64() / reps as f64;
+
+    let mut int_scores = vec![0f64; n];
+    block.sense_votes_range_int(&wordline, 0, n, &ladder, 1.0, &mut int_scores);
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        block.sense_votes_range_int(&wordline, 0, n, &ladder, 1.0, &mut int_scores);
+    }
+    let int_dt = t0.elapsed().as_secs_f64() / reps as f64;
+
+    #[cfg(feature = "simd")]
+    let simd_dt = {
+        let mut simd_scores = vec![0f64; n];
+        block.sense_votes_range_simd(&wordline, 0, n, &ladder, 1.0, &mut simd_scores);
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            block.sense_votes_range_simd(&wordline, 0, n, &ladder, 1.0, &mut simd_scores);
+        }
+        let dt = t0.elapsed().as_secs_f64() / reps as f64;
+        assert_eq!(simd_scores, naive_scores, "simd kernel != scalar reference");
+        dt
+    };
+
+    // the dispatched kernel — whatever variant this build selected
+    let kernel = McamBlock::active_kernel();
     let mut fused_scores = vec![0f64; n];
     block.sense_votes_range(&wordline, 0, n, &ladder, 1.0, &mut fused_scores);
     let t0 = Instant::now();
@@ -345,14 +414,22 @@ fn perf_kernel(report: &mut Vec<(String, Json)>) {
     let fused_dt = t0.elapsed().as_secs_f64() / reps as f64;
 
     // Every path accumulated reps + 1 identical passes: bit-identity is
-    // checked end to end on the full block, every run.
-    assert_eq!(fused_scores, naive_scores, "fused kernel != scalar reference");
-    assert_eq!(fused_scores, legacy_scores, "fused kernel != string-major replica");
+    // checked end to end on the full block, every run, across every
+    // kernel variant this build can express.
+    assert_eq!(fused_scores, naive_scores, "dispatched kernel != scalar reference");
+    assert_eq!(fused_scores, legacy_scores, "dispatched kernel != string-major replica");
+    assert_eq!(scalar_scores, naive_scores, "scalar fused kernel != scalar reference");
+    assert_eq!(int_scores, naive_scores, "integer-accum kernel != scalar reference");
 
     let cell_evals = (n * CELLS_PER_STRING) as f64;
     let speedup_naive = naive_dt / fused_dt;
     let speedup_legacy = legacy_dt / fused_dt;
-    println!("kernel: {n} strings x {CELLS_PER_STRING} cells, ladder 16, {reps} reps");
+    let kernel_mcells = cell_evals / fused_dt / 1e6;
+    println!(
+        "kernel: {n} strings x {CELLS_PER_STRING} cells, ladder 16, {reps} reps \
+         (active variant: {})",
+        kernel.name()
+    );
     println!(
         "  naive reference:     {:.2} ms/pass ({:.0} M cells/s)",
         naive_dt * 1e3,
@@ -364,28 +441,74 @@ fn perf_kernel(report: &mut Vec<(String, Json)>) {
         cell_evals / legacy_dt / 1e6
     );
     println!(
-        "  fused tiled kernel:  {:.2} ms/pass ({:.0} M cells/s)",
-        fused_dt * 1e3,
-        cell_evals / fused_dt / 1e6
+        "  scalar fused:        {:.2} ms/pass ({:.0} M cells/s)",
+        scalar_dt * 1e3,
+        cell_evals / scalar_dt / 1e6
+    );
+    println!(
+        "  integer-accum:       {:.2} ms/pass ({:.0} M cells/s)",
+        int_dt * 1e3,
+        cell_evals / int_dt / 1e6
+    );
+    #[cfg(feature = "simd")]
+    println!(
+        "  simd:                {:.2} ms/pass ({:.0} M cells/s, {:.2}x vs scalar fused)",
+        simd_dt * 1e3,
+        cell_evals / simd_dt / 1e6,
+        scalar_dt / simd_dt
+    );
+    println!(
+        "  dispatched [{}]:     {:.2} ms/pass ({kernel_mcells:.0} M cells/s)",
+        kernel.name(),
+        fused_dt * 1e3
     );
     println!(
         "  SPEEDUP: {speedup_naive:.2}x vs naive reference (target >= 2x), \
          {speedup_legacy:.2}x vs PR-1 string-major layout\n"
     );
-    report.push((
-        "perf_kernel".to_string(),
-        ObjBuilder::new()
-            .field("strings", Json::num(n as f64))
-            .field("ladder", Json::num(16))
-            .field("reps", Json::num(reps))
-            .field("naive_ms_per_pass", Json::num(naive_dt * 1e3))
-            .field("legacy_ms_per_pass", Json::num(legacy_dt * 1e3))
-            .field("fused_ms_per_pass", Json::num(fused_dt * 1e3))
-            .field("fused_mcells_per_s", Json::num(cell_evals / fused_dt / 1e6))
-            .field("speedup_vs_naive", Json::num(speedup_naive))
-            .field("speedup_vs_pr1_layout", Json::num(speedup_legacy))
-            .build(),
-    ));
+    assert!(
+        speedup_naive >= 2.0,
+        "dispatched kernel fell below the 2x floor vs the naive reference \
+         ({speedup_naive:.2}x)"
+    );
+    #[cfg(feature = "simd")]
+    assert!(
+        scalar_dt / simd_dt >= 1.5,
+        "simd kernel below the 1.5x floor vs scalar fused ({:.2}x)",
+        scalar_dt / simd_dt
+    );
+    if let Some(prior) = recorded_prior_kernel_throughput() {
+        let floor = 0.6 * prior;
+        println!(
+            "  regression check: {kernel_mcells:.0} M cells/s vs recorded best \
+             {prior:.0} (floor {floor:.0})"
+        );
+        assert!(
+            kernel_mcells >= floor,
+            "dispatched kernel regressed: {kernel_mcells:.0} M cells/s is below \
+             0.6x the best recorded prior run ({prior:.0} M cells/s)"
+        );
+    }
+
+    let entry = ObjBuilder::new()
+        .field("strings", Json::num(n as f64))
+        .field("ladder", Json::num(16))
+        .field("reps", Json::num(reps))
+        .field("kernel", Json::str(kernel.name()))
+        .field("naive_ms_per_pass", Json::num(naive_dt * 1e3))
+        .field("legacy_ms_per_pass", Json::num(legacy_dt * 1e3))
+        .field("scalar_fused_ms_per_pass", Json::num(scalar_dt * 1e3))
+        .field("int_accum_ms_per_pass", Json::num(int_dt * 1e3))
+        .field("fused_ms_per_pass", Json::num(fused_dt * 1e3))
+        .field("fused_mcells_per_s", Json::num(kernel_mcells))
+        .field("kernel_mcells_per_s", Json::num(kernel_mcells))
+        .field("speedup_vs_naive", Json::num(speedup_naive))
+        .field("speedup_vs_pr1_layout", Json::num(speedup_legacy));
+    #[cfg(feature = "simd")]
+    let entry = entry
+        .field("simd_ms_per_pass", Json::num(simd_dt * 1e3))
+        .field("simd_speedup_vs_scalar_fused", Json::num(scalar_dt / simd_dt));
+    report.push(("perf_kernel".to_string(), entry.build()));
 }
 
 /// Currents path: word-line search over a fully programmed 128K-string

@@ -11,11 +11,28 @@
 //! evaluations per engine iteration at full block occupancy). Cells are
 //! stored **cell-major** (structure-of-arrays: one plane per word line,
 //! strings contiguous within a plane) and sensed by the fused, tiled
-//! sense→vote→accumulate kernel [`McamBlock::sense_votes_range`]; the
-//! scalar walk is retained as [`McamBlock::sense_votes_range_naive`],
-//! the reference oracle for the kernel-equivalence tests and the
-//! `perf_kernel` microbench. See DESIGN.md §Perf for the optimization
-//! log.
+//! sense→vote→accumulate kernel [`McamBlock::sense_votes_range`].
+//!
+//! The kernel comes in layered variants (see [`KernelVariant`] and
+//! DESIGN.md §Perf), all bit-identical on every path:
+//!
+//! * [`McamBlock::sense_votes_range_naive`] — the pre-tiling per-string
+//!   scalar walk, the reference oracle;
+//! * [`McamBlock::sense_votes_range_scalar`] — the tiled scalar fused
+//!   kernel (PR 2), retained verbatim as the second oracle and the
+//!   `perf_kernel` baseline;
+//! * [`McamBlock::sense_votes_range_int`] — the default hot path:
+//!   same f32 series tiles, but ladder votes are counted branchlessly
+//!   into an `i16`/`i32` tile accumulator (integer-vote accumulation);
+//! * `sense_votes_range_simd` (`--features simd`, nightly) — the
+//!   portable `std::simd` tile loop over the same plane-contiguous
+//!   strides.
+//!
+//! [`McamBlock::sense_votes_range`] / [`McamBlock::sense_votes_select`]
+//! dispatch to the build's active variant on the ideal path; the noisy
+//! path is one shared body (in-order RNG draws), so every variant is
+//! bit-identical there by construction. The differential harness in
+//! `rust/tests/test_kernel_equivalence.rs` sweeps all of them.
 
 use super::faults::FaultModel;
 use super::sense::{SenseLadder, SeriesRungs};
@@ -30,6 +47,89 @@ use crate::CELLS_PER_STRING;
 /// enough ILP to hide the dependent-add latency the scalar walk
 /// serializes on.
 const SENSE_TILE: usize = 64;
+
+/// The fused-kernel implementation a build dispatches to on the ideal
+/// (noise-free) path — decided at compile time by the `simd` cargo
+/// feature (see [`McamBlock::active_kernel`]). Every variant is
+/// bit-identical; the distinction is purely how the tile work is
+/// scheduled, and benches/CI use the name to label perf records.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelVariant {
+    /// Tiled scalar fused kernel with break-loop series-domain voting —
+    /// the retained PR-2 path, never dispatched to but kept callable as
+    /// the correctness oracle and bench baseline.
+    ScalarFused,
+    /// Scalar fused kernel with branchless integer-vote tile
+    /// accumulation (`i16`/`i32`) — the default-build hot path.
+    IntegerAccum,
+    /// Portable `std::simd` tile loop (`--features simd`, nightly).
+    Simd,
+}
+
+impl KernelVariant {
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelVariant::ScalarFused => "scalar-fused",
+            KernelVariant::IntegerAccum => "integer-accum",
+            KernelVariant::Simd => "simd",
+        }
+    }
+}
+
+/// Ladder depths beyond `i16::MAX` widen the per-tile vote accumulator
+/// from `i16` to `i32` lanes. A string earns at most one vote per rung
+/// per kernel call, so while the ladder fits in `i16` the narrow
+/// accumulator provably cannot overflow — and a `Vec`-backed ladder can
+/// never outgrow `i32` (its length is far below `i32::MAX`). The exact
+/// boundary is pinned by the `vote_saturating_*` unit tests below.
+pub const fn vote_accumulator_widens(ladder_len: usize) -> bool {
+    ladder_len > i16::MAX as usize
+}
+
+/// Branchless integer-vote tile count: `votes[i]` = number of rungs at
+/// or above `series[i]`. The rungs descend, so the cleared set is a
+/// prefix and counting **all** cleared rungs equals the oracle's
+/// break-at-first-miss count for every input
+/// ([`SeriesRungs::votes_for_series_dense`] pins the equivalence). The
+/// rung-major loop has no data-dependent branch, so it autovectorizes;
+/// the `i16` fast path halves the accumulator traffic and widens to
+/// `i32` only for ladders deeper than `i16::MAX`
+/// ([`vote_accumulator_widens`]).
+#[inline]
+fn tile_votes_int(rungs: &[f32], series: &[f32], votes: &mut [i32; SENSE_TILE]) {
+    let tile = series.len();
+    if vote_accumulator_widens(rungs.len()) {
+        votes[..tile].fill(0);
+        for &r in rungs {
+            for (v, &s) in votes[..tile].iter_mut().zip(series) {
+                *v += (s <= r) as i32;
+            }
+        }
+    } else {
+        let mut votes16 = [0i16; SENSE_TILE];
+        for &r in rungs {
+            for (v, &s) in votes16[..tile].iter_mut().zip(series) {
+                *v += (s <= r) as i16;
+            }
+        }
+        for (w, &v) in votes[..tile].iter_mut().zip(&votes16[..tile]) {
+            *w = v as i32;
+        }
+    }
+}
+
+/// Convert a tile of integer vote counts to weighted f64 scores —
+/// `score += weight * votes` exactly as the scalar oracle's per-string
+/// update. A `u32`-range integer converts to f64 exactly, and this is
+/// the **same single multiply-add per slot per call** the oracle
+/// performs, so integer accumulation changes no representable result
+/// (the bitwise-equivalence argument in DESIGN.md §Perf).
+#[inline]
+fn accumulate_votes(weight: f64, votes: &[i32], scores: &mut [f64]) {
+    for (score, &v) in scores.iter_mut().zip(votes) {
+        *score += weight * v as f64;
+    }
+}
 
 /// One MCAM block.
 pub struct McamBlock {
@@ -243,20 +343,47 @@ impl McamBlock {
         }
     }
 
+    /// The fused-kernel variant this build dispatches to on the ideal
+    /// path: [`KernelVariant::Simd`] under `--features simd`, otherwise
+    /// [`KernelVariant::IntegerAccum`]. [`KernelVariant::ScalarFused`]
+    /// is never the dispatch target — it is the retained oracle,
+    /// callable explicitly via [`Self::sense_votes_range_scalar`].
+    pub const fn active_kernel() -> KernelVariant {
+        if cfg!(feature = "simd") {
+            KernelVariant::Simd
+        } else {
+            KernelVariant::IntegerAccum
+        }
+    }
+
+    /// Refresh the cached series-domain rungs if `ladder` changed since
+    /// the last ideal-path sense (compared by exact threshold values).
+    #[inline]
+    fn ensure_rungs(&mut self, ladder: &SenseLadder) {
+        if self.rung_thresholds.as_slice() != ladder.thresholds() {
+            self.rung_thresholds.clear();
+            self.rung_thresholds.extend_from_slice(ladder.thresholds());
+            self.rungs = ladder.series_rungs(self.params.v_bl);
+        }
+    }
+
     /// Fused sense→vote→accumulate over the strings in
     /// `[first, first + count)`: drive `wordline`, sense every string,
     /// convert each sensed current into ladder votes, and add
     /// `weight * votes` into the matching `scores` slot — the L3 hot
-    /// path, replacing the currents-`Vec` round-trip of the scalar
-    /// reference ([`Self::sense_votes_range_naive`]).
+    /// path behind the engine's shard scorer (`Shard::score_batch`),
+    /// the cascade scans, and the routing tier.
     ///
-    /// On the ideal path (no read noise) the ladder compare runs in the
-    /// **series-resistance domain** ([`SeriesRungs`]): the per-string
-    /// `v_bl / series` division disappears, and the exact-boundary rungs
-    /// keep the votes bit-identical to the current-domain compare. The
-    /// noisy path computes real currents (read noise consumes the block
-    /// RNG in string order, exactly like the reference) and routes each
-    /// tile through [`SenseLadder::votes_batch`].
+    /// Dispatches to the build's [`Self::active_kernel`] on the ideal
+    /// path (no read noise): integer-vote accumulation by default, the
+    /// portable-SIMD tile loop under `--features simd`. Both run the
+    /// ladder compare in the **series-resistance domain**
+    /// ([`SeriesRungs`]): the per-string `v_bl / series` division
+    /// disappears, and the exact-boundary rungs keep the votes
+    /// bit-identical to the current-domain compare. The noisy path is
+    /// the single shared body every variant uses (real currents, read
+    /// noise consuming the block RNG in string order exactly like the
+    /// reference, tiles routed through [`SenseLadder::votes_batch`]).
     pub fn sense_votes_range(
         &mut self,
         wordline: &[u8; CELLS_PER_STRING],
@@ -269,13 +396,37 @@ impl McamBlock {
         assert!(first + count <= self.programmed, "search beyond programmed region");
         assert_eq!(scores.len(), count, "one score slot per sensed string");
         let rows = self.wordline_rows(wordline);
-        let mut acc = [0f32; SENSE_TILE];
         if self.variation.read_sigma == 0.0 {
-            if self.rung_thresholds.as_slice() != ladder.thresholds() {
-                self.rung_thresholds.clear();
-                self.rung_thresholds.extend_from_slice(ladder.thresholds());
-                self.rungs = ladder.series_rungs(self.params.v_bl);
-            }
+            self.ensure_rungs(ladder);
+            #[cfg(feature = "simd")]
+            self.range_ideal_simd(&rows, first, count, weight, scores);
+            #[cfg(not(feature = "simd"))]
+            self.range_ideal_int(&rows, first, count, weight, scores);
+        } else {
+            self.range_noisy(&rows, first, count, ladder, weight, scores);
+        }
+    }
+
+    /// The tiled **scalar fused** kernel (PR 2), retained verbatim as
+    /// the second correctness oracle (after the per-string naive walk)
+    /// and the `perf_kernel` baseline the SIMD speedup is measured
+    /// against. Bit-identical to [`Self::sense_votes_range`] on every
+    /// path — the differential harness asserts it.
+    pub fn sense_votes_range_scalar(
+        &mut self,
+        wordline: &[u8; CELLS_PER_STRING],
+        first: usize,
+        count: usize,
+        ladder: &SenseLadder,
+        weight: f64,
+        scores: &mut [f64],
+    ) {
+        assert!(first + count <= self.programmed, "search beyond programmed region");
+        assert_eq!(scores.len(), count, "one score slot per sensed string");
+        let rows = self.wordline_rows(wordline);
+        if self.variation.read_sigma == 0.0 {
+            self.ensure_rungs(ladder);
+            let mut acc = [0f32; SENSE_TILE];
             let mut done = 0;
             while done < count {
                 let tile = (count - done).min(SENSE_TILE);
@@ -286,19 +437,147 @@ impl McamBlock {
                 done += tile;
             }
         } else {
-            let mut currents = [0f64; SENSE_TILE];
-            let mut done = 0;
-            while done < count {
-                let tile = (count - done).min(SENSE_TILE);
-                self.tile_currents(&rows, first + done, tile, &mut acc, &mut currents);
-                self.votes_scratch.clear();
-                ladder.votes_batch(&currents[..tile], &mut self.votes_scratch);
-                let votes = &self.votes_scratch;
-                for (score, &v) in scores[done..done + tile].iter_mut().zip(votes) {
-                    *score += weight * v as f64;
-                }
-                done += tile;
+            self.range_noisy(&rows, first, count, ladder, weight, scores);
+        }
+    }
+
+    /// The **integer-vote accumulation** kernel — the default-build
+    /// dispatch target of [`Self::sense_votes_range`], callable
+    /// explicitly so the differential harness and `perf_kernel` can
+    /// exercise it regardless of the active feature set. Ladder votes
+    /// are counted branchlessly into an `i16`/`i32` tile accumulator
+    /// (`tile_votes_int`) and converted to weighted f64 scores once per
+    /// slot per call — bitwise identical to the scalar fused oracle
+    /// (argument on `accumulate_votes` and in DESIGN.md §Perf).
+    pub fn sense_votes_range_int(
+        &mut self,
+        wordline: &[u8; CELLS_PER_STRING],
+        first: usize,
+        count: usize,
+        ladder: &SenseLadder,
+        weight: f64,
+        scores: &mut [f64],
+    ) {
+        assert!(first + count <= self.programmed, "search beyond programmed region");
+        assert_eq!(scores.len(), count, "one score slot per sensed string");
+        let rows = self.wordline_rows(wordline);
+        if self.variation.read_sigma == 0.0 {
+            self.ensure_rungs(ladder);
+            self.range_ideal_int(&rows, first, count, weight, scores);
+        } else {
+            self.range_noisy(&rows, first, count, ladder, weight, scores);
+        }
+    }
+
+    /// The portable **`std::simd`** kernel (`--features simd`, nightly)
+    /// — the dispatch target of [`Self::sense_votes_range`] when the
+    /// feature is on. Same plane-contiguous strides and per-string
+    /// l = 0..23 sum order as the scalar tile (SIMD runs *across*
+    /// strings, never across a string's cells), so the f32 series sums
+    /// — and therefore the votes — are bit-identical.
+    #[cfg(feature = "simd")]
+    pub fn sense_votes_range_simd(
+        &mut self,
+        wordline: &[u8; CELLS_PER_STRING],
+        first: usize,
+        count: usize,
+        ladder: &SenseLadder,
+        weight: f64,
+        scores: &mut [f64],
+    ) {
+        assert!(first + count <= self.programmed, "search beyond programmed region");
+        assert_eq!(scores.len(), count, "one score slot per sensed string");
+        let rows = self.wordline_rows(wordline);
+        if self.variation.read_sigma == 0.0 {
+            self.ensure_rungs(ladder);
+            self.range_ideal_simd(&rows, first, count, weight, scores);
+        } else {
+            self.range_noisy(&rows, first, count, ladder, weight, scores);
+        }
+    }
+
+    /// Ideal-path integer-accumulation tile loop shared by the
+    /// dispatcher and [`Self::sense_votes_range_int`]. Caller must have
+    /// run [`Self::ensure_rungs`].
+    fn range_ideal_int(
+        &self,
+        rows: &[[f32; 4]; CELLS_PER_STRING],
+        first: usize,
+        count: usize,
+        weight: f64,
+        scores: &mut [f64],
+    ) {
+        let mut acc = [0f32; SENSE_TILE];
+        let mut votes = [0i32; SENSE_TILE];
+        let mut done = 0;
+        while done < count {
+            let tile = (count - done).min(SENSE_TILE);
+            self.tile_series(rows, first + done, tile, &mut acc);
+            tile_votes_int(self.rungs.rungs(), &acc[..tile], &mut votes);
+            accumulate_votes(weight, &votes[..tile], &mut scores[done..done + tile]);
+            done += tile;
+        }
+    }
+
+    /// Ideal-path portable-SIMD tile loop. Caller must have run
+    /// [`Self::ensure_rungs`].
+    #[cfg(feature = "simd")]
+    fn range_ideal_simd(
+        &self,
+        rows: &[[f32; 4]; CELLS_PER_STRING],
+        first: usize,
+        count: usize,
+        weight: f64,
+        scores: &mut [f64],
+    ) {
+        let mut acc = [0f32; SENSE_TILE];
+        let mut votes = [0i32; SENSE_TILE];
+        let mut done = 0;
+        while done < count {
+            let tile = (count - done).min(SENSE_TILE);
+            simd_core::tile_series(
+                rows,
+                &self.levels,
+                &self.var,
+                self.capacity,
+                first + done,
+                tile,
+                &mut acc,
+            );
+            simd_core::tile_votes(self.rungs.rungs(), &acc[..tile], &mut votes);
+            accumulate_votes(weight, &votes[..tile], &mut scores[done..done + tile]);
+            done += tile;
+        }
+    }
+
+    /// Noisy-path range core shared by **every** kernel variant: tile
+    /// currents (read noise consumes the block RNG in string order) →
+    /// [`SenseLadder::votes_batch`] → weighted f64 accumulate. One body
+    /// means the variants are bit-identical under noise — and draw the
+    /// RNG identically — by construction, which is why the differential
+    /// harness pins the noisy-path tolerance at exactly zero.
+    fn range_noisy(
+        &mut self,
+        rows: &[[f32; 4]; CELLS_PER_STRING],
+        first: usize,
+        count: usize,
+        ladder: &SenseLadder,
+        weight: f64,
+        scores: &mut [f64],
+    ) {
+        let mut acc = [0f32; SENSE_TILE];
+        let mut currents = [0f64; SENSE_TILE];
+        let mut done = 0;
+        while done < count {
+            let tile = (count - done).min(SENSE_TILE);
+            self.tile_currents(rows, first + done, tile, &mut acc, &mut currents);
+            self.votes_scratch.clear();
+            ladder.votes_batch(&currents[..tile], &mut self.votes_scratch);
+            let votes = &self.votes_scratch;
+            for (score, &v) in scores[done..done + tile].iter_mut().zip(votes) {
+                *score += weight * v as f64;
             }
+            done += tile;
         }
     }
 
@@ -386,6 +665,12 @@ impl McamBlock {
     /// and sensing `offset + 0..count` is bit-identical to
     /// [`Self::sense_votes_range`] over the same range (ideal *and*
     /// noisy paths — same tile boundaries, same in-order draws).
+    ///
+    /// Dispatches exactly like [`Self::sense_votes_range`]: the ideal
+    /// path runs the build's [`Self::active_kernel`] vote stage over
+    /// gathered series sums, the noisy path is the shared body. The
+    /// SIMD variant keeps the **gather** scalar (index lists defeat
+    /// contiguous loads) and vectorizes only the vote count.
     pub fn sense_votes_select(
         &mut self,
         wordline: &[u8; CELLS_PER_STRING],
@@ -405,13 +690,41 @@ impl McamBlock {
         );
         assert!(offset + last < self.programmed, "search beyond programmed region");
         let rows = self.wordline_rows(wordline);
-        let mut acc = [0f32; SENSE_TILE];
         if self.variation.read_sigma == 0.0 {
-            if self.rung_thresholds.as_slice() != ladder.thresholds() {
-                self.rung_thresholds.clear();
-                self.rung_thresholds.extend_from_slice(ladder.thresholds());
-                self.rungs = ladder.series_rungs(self.params.v_bl);
-            }
+            self.ensure_rungs(ladder);
+            #[cfg(feature = "simd")]
+            self.select_ideal_simd(&rows, offset, indices, weight, scores);
+            #[cfg(not(feature = "simd"))]
+            self.select_ideal_int(&rows, offset, indices, weight, scores);
+        } else {
+            self.select_noisy(&rows, offset, indices, ladder, weight, scores);
+        }
+    }
+
+    /// The tiled scalar fused selective kernel — oracle twin of
+    /// [`Self::sense_votes_range_scalar`] for the select path.
+    pub fn sense_votes_select_scalar(
+        &mut self,
+        wordline: &[u8; CELLS_PER_STRING],
+        offset: usize,
+        indices: &[usize],
+        ladder: &SenseLadder,
+        weight: f64,
+        scores: &mut [f64],
+    ) {
+        assert_eq!(scores.len(), indices.len(), "one score slot per sensed string");
+        let Some(&last) = indices.last() else {
+            return;
+        };
+        debug_assert!(
+            indices.windows(2).all(|w| w[0] < w[1]),
+            "selected indices must ascend strictly"
+        );
+        assert!(offset + last < self.programmed, "search beyond programmed region");
+        let rows = self.wordline_rows(wordline);
+        if self.variation.read_sigma == 0.0 {
+            self.ensure_rungs(ladder);
+            let mut acc = [0f32; SENSE_TILE];
             let mut done = 0;
             while done < indices.len() {
                 let tile = (indices.len() - done).min(SENSE_TILE);
@@ -422,25 +735,148 @@ impl McamBlock {
                 done += tile;
             }
         } else {
-            let mut currents = [0f64; SENSE_TILE];
-            let mut done = 0;
-            while done < indices.len() {
-                let tile = (indices.len() - done).min(SENSE_TILE);
-                self.tile_currents_select(
-                    &rows,
-                    offset,
-                    &indices[done..done + tile],
-                    &mut acc,
-                    &mut currents,
-                );
-                self.votes_scratch.clear();
-                ladder.votes_batch(&currents[..tile], &mut self.votes_scratch);
-                let votes = &self.votes_scratch;
-                for (score, &v) in scores[done..done + tile].iter_mut().zip(votes) {
-                    *score += weight * v as f64;
-                }
-                done += tile;
+            self.select_noisy(&rows, offset, indices, ladder, weight, scores);
+        }
+    }
+
+    /// Integer-vote-accumulation selective kernel — explicit twin of
+    /// [`Self::sense_votes_range_int`], the default-build dispatch
+    /// target of [`Self::sense_votes_select`].
+    pub fn sense_votes_select_int(
+        &mut self,
+        wordline: &[u8; CELLS_PER_STRING],
+        offset: usize,
+        indices: &[usize],
+        ladder: &SenseLadder,
+        weight: f64,
+        scores: &mut [f64],
+    ) {
+        assert_eq!(scores.len(), indices.len(), "one score slot per sensed string");
+        let Some(&last) = indices.last() else {
+            return;
+        };
+        debug_assert!(
+            indices.windows(2).all(|w| w[0] < w[1]),
+            "selected indices must ascend strictly"
+        );
+        assert!(offset + last < self.programmed, "search beyond programmed region");
+        let rows = self.wordline_rows(wordline);
+        if self.variation.read_sigma == 0.0 {
+            self.ensure_rungs(ladder);
+            self.select_ideal_int(&rows, offset, indices, weight, scores);
+        } else {
+            self.select_noisy(&rows, offset, indices, ladder, weight, scores);
+        }
+    }
+
+    /// Portable-SIMD selective kernel (`--features simd`) — explicit
+    /// twin of `sense_votes_range_simd`: scalar gather, SIMD vote count.
+    #[cfg(feature = "simd")]
+    pub fn sense_votes_select_simd(
+        &mut self,
+        wordline: &[u8; CELLS_PER_STRING],
+        offset: usize,
+        indices: &[usize],
+        ladder: &SenseLadder,
+        weight: f64,
+        scores: &mut [f64],
+    ) {
+        assert_eq!(scores.len(), indices.len(), "one score slot per sensed string");
+        let Some(&last) = indices.last() else {
+            return;
+        };
+        debug_assert!(
+            indices.windows(2).all(|w| w[0] < w[1]),
+            "selected indices must ascend strictly"
+        );
+        assert!(offset + last < self.programmed, "search beyond programmed region");
+        let rows = self.wordline_rows(wordline);
+        if self.variation.read_sigma == 0.0 {
+            self.ensure_rungs(ladder);
+            self.select_ideal_simd(&rows, offset, indices, weight, scores);
+        } else {
+            self.select_noisy(&rows, offset, indices, ladder, weight, scores);
+        }
+    }
+
+    /// Ideal-path integer-accumulation loop over gathered tiles. Caller
+    /// must have run [`Self::ensure_rungs`].
+    fn select_ideal_int(
+        &self,
+        rows: &[[f32; 4]; CELLS_PER_STRING],
+        offset: usize,
+        indices: &[usize],
+        weight: f64,
+        scores: &mut [f64],
+    ) {
+        let mut acc = [0f32; SENSE_TILE];
+        let mut votes = [0i32; SENSE_TILE];
+        let mut done = 0;
+        while done < indices.len() {
+            let tile = (indices.len() - done).min(SENSE_TILE);
+            self.tile_series_select(rows, offset, &indices[done..done + tile], &mut acc);
+            tile_votes_int(self.rungs.rungs(), &acc[..tile], &mut votes);
+            accumulate_votes(weight, &votes[..tile], &mut scores[done..done + tile]);
+            done += tile;
+        }
+    }
+
+    /// Ideal-path SIMD-vote loop over gathered tiles (scalar gather —
+    /// the index list defeats contiguous loads; the vote count is where
+    /// the ladder-length work is). Caller must have run
+    /// [`Self::ensure_rungs`].
+    #[cfg(feature = "simd")]
+    fn select_ideal_simd(
+        &self,
+        rows: &[[f32; 4]; CELLS_PER_STRING],
+        offset: usize,
+        indices: &[usize],
+        weight: f64,
+        scores: &mut [f64],
+    ) {
+        let mut acc = [0f32; SENSE_TILE];
+        let mut votes = [0i32; SENSE_TILE];
+        let mut done = 0;
+        while done < indices.len() {
+            let tile = (indices.len() - done).min(SENSE_TILE);
+            self.tile_series_select(rows, offset, &indices[done..done + tile], &mut acc);
+            simd_core::tile_votes(self.rungs.rungs(), &acc[..tile], &mut votes);
+            accumulate_votes(weight, &votes[..tile], &mut scores[done..done + tile]);
+            done += tile;
+        }
+    }
+
+    /// Noisy-path select core shared by every kernel variant — gather
+    /// twin of [`Self::range_noisy`], same one-body bit-identity
+    /// guarantee.
+    fn select_noisy(
+        &mut self,
+        rows: &[[f32; 4]; CELLS_PER_STRING],
+        offset: usize,
+        indices: &[usize],
+        ladder: &SenseLadder,
+        weight: f64,
+        scores: &mut [f64],
+    ) {
+        let mut acc = [0f32; SENSE_TILE];
+        let mut currents = [0f64; SENSE_TILE];
+        let mut done = 0;
+        while done < indices.len() {
+            let tile = (indices.len() - done).min(SENSE_TILE);
+            self.tile_currents_select(
+                rows,
+                offset,
+                &indices[done..done + tile],
+                &mut acc,
+                &mut currents,
+            );
+            self.votes_scratch.clear();
+            ladder.votes_batch(&currents[..tile], &mut self.votes_scratch);
+            let votes = &self.votes_scratch;
+            for (score, &v) in scores[done..done + tile].iter_mut().zip(votes) {
+                *score += weight * v as f64;
             }
+            done += tile;
         }
     }
 
@@ -494,6 +930,100 @@ impl McamBlock {
             self.tile_currents(&rows, first + done, tile, &mut acc, &mut currents);
             out.extend_from_slice(&currents[..tile]);
             done += tile;
+        }
+    }
+}
+
+/// Portable `std::simd` tile cores (`--features simd`, nightly).
+///
+/// Layout notes (DESIGN.md §Perf): the cell planes are already
+/// SoA-contiguous, so an 8-lane f32 vector covers 8 *strings* of one
+/// word line — each lane's 24-term sum runs in the same l = 0..23 order
+/// as the scalar kernel, which is what keeps the f32 series sums
+/// bit-identical (f32 addition is commutative-unsafe across *terms*,
+/// but lanes never mix terms between strings). The 4-entry LUT row is
+/// applied by two mask selects on the level bits instead of a gather:
+/// `row[s] = s&1 ? (s&2 ? row3 : row1) : (s&2 ? row2 : row0)`.
+#[cfg(feature = "simd")]
+mod simd_core {
+    use super::{CELLS_PER_STRING, SENSE_TILE};
+    use std::simd::prelude::*;
+
+    const LANES: usize = 8;
+    type F32s = Simd<f32, LANES>;
+    type I32s = Simd<i32, LANES>;
+    type U8s = Simd<u8, LANES>;
+    type MaskI32 = Mask<i32, LANES>;
+
+    /// SIMD twin of `McamBlock::tile_series`: series-resistance sums of
+    /// `tile` strings starting at `base`, 8 strings per vector, scalar
+    /// remainder for `tile % 8`.
+    pub(super) fn tile_series(
+        rows: &[[f32; 4]; CELLS_PER_STRING],
+        levels: &[u8],
+        var: &[f32],
+        capacity: usize,
+        base: usize,
+        tile: usize,
+        acc: &mut [f32; SENSE_TILE],
+    ) {
+        acc[..tile].fill(0.0);
+        let vec_tile = tile - tile % LANES;
+        for (l, row) in rows.iter().enumerate() {
+            let plane = l * capacity + base;
+            let lv = &levels[plane..plane + tile];
+            let vr = &var[plane..plane + tile];
+            let row0 = F32s::splat(row[0]);
+            let row1 = F32s::splat(row[1]);
+            let row2 = F32s::splat(row[2]);
+            let row3 = F32s::splat(row[3]);
+            let mut s = 0;
+            while s < vec_tile {
+                let lvls = U8s::from_slice(&lv[s..s + LANES]);
+                let bit0: MaskI32 = (lvls & U8s::splat(1)).simd_ne(U8s::splat(0)).cast();
+                let bit1: MaskI32 = (lvls & U8s::splat(2)).simd_ne(U8s::splat(0)).cast();
+                let even = bit1.select(row2, row0);
+                let odd = bit1.select(row3, row1);
+                let conductance = bit0.select(odd, even);
+                let v = F32s::from_slice(&vr[s..s + LANES]);
+                let mut a = F32s::from_slice(&acc[s..s + LANES]);
+                a += conductance * v;
+                a.copy_to_slice(&mut acc[s..s + LANES]);
+                s += LANES;
+            }
+            for ((a, &lvl), &v) in
+                acc[vec_tile..tile].iter_mut().zip(&lv[vec_tile..]).zip(&vr[vec_tile..])
+            {
+                *a += row[(lvl & 3) as usize] * v;
+            }
+        }
+    }
+
+    /// SIMD twin of `tile_votes_int`: branchless cleared-rung count, 8
+    /// strings per vector (`votes -= (series <= rung) mask`, a mask
+    /// lane being -1), scalar remainder. Same full-ladder counting
+    /// scheme, so the counts equal the break-loop oracle's (descending
+    /// rungs ⇒ the cleared set is a prefix).
+    pub(super) fn tile_votes(rungs: &[f32], series: &[f32], votes: &mut [i32; SENSE_TILE]) {
+        let tile = series.len();
+        votes[..tile].fill(0);
+        let vec_tile = tile - tile % LANES;
+        let mut s = 0;
+        while s < vec_tile {
+            let sv = F32s::from_slice(&series[s..s + LANES]);
+            let mut v = I32s::splat(0);
+            for &r in rungs {
+                v -= sv.simd_le(F32s::splat(r)).to_int();
+            }
+            v.copy_to_slice(&mut votes[s..s + LANES]);
+            s += LANES;
+        }
+        for (v, &x) in votes[vec_tile..tile].iter_mut().zip(&series[vec_tile..]) {
+            let mut n = 0i32;
+            for &r in rungs {
+                n += (x <= r) as i32;
+            }
+            *v = n;
         }
     }
 }
@@ -847,5 +1377,146 @@ mod tests {
             block.sense_votes_range_naive(&wl, 0, 40, &ladder, 1.0, &mut naive);
             assert_eq!(fused, naive, "ladder depth {len}");
         }
+    }
+
+    #[test]
+    fn active_kernel_matches_build_features() {
+        let expected = if cfg!(feature = "simd") {
+            KernelVariant::Simd
+        } else {
+            KernelVariant::IntegerAccum
+        };
+        assert_eq!(McamBlock::active_kernel(), expected);
+        assert_eq!(KernelVariant::IntegerAccum.name(), "integer-accum");
+    }
+
+    #[test]
+    fn range_variants_match_scalar_fused_ideal_bitwise() {
+        // Ideal path consumes no RNG, so every variant — the dispatcher,
+        // the explicit integer-accumulation kernel, and (under
+        // `--features simd`) the SIMD kernel — can run on one block and
+        // must reproduce the scalar fused oracle to the last bit.
+        let variation = VariationModel { program_sigma: 0.25, read_sigma: 0.0 };
+        let mut block = random_block(150, variation, 61);
+        let ladder = SenseLadder::new(&McamParams::default(), 16);
+        let mut rng = Rng::new(17);
+        for (first, count) in [(0, 150), (0, 1), (3, 64), (5, 129), (64, 64), (149, 1)] {
+            let wl = random_wordline(&mut rng);
+            let weight = rng.range_f64(0.25, 4.0);
+            let mut oracle = vec![0.125f64; count];
+            let mut dispatch = vec![0.125f64; count];
+            let mut int = vec![0.125f64; count];
+            block.sense_votes_range_scalar(&wl, first, count, &ladder, weight, &mut oracle);
+            block.sense_votes_range(&wl, first, count, &ladder, weight, &mut dispatch);
+            block.sense_votes_range_int(&wl, first, count, &ladder, weight, &mut int);
+            assert_eq!(dispatch, oracle, "dispatch, range ({first}, {count})");
+            assert_eq!(int, oracle, "int, range ({first}, {count})");
+            #[cfg(feature = "simd")]
+            {
+                let mut simd = vec![0.125f64; count];
+                block.sense_votes_range_simd(&wl, first, count, &ladder, weight, &mut simd);
+                assert_eq!(simd, oracle, "simd, range ({first}, {count})");
+            }
+        }
+    }
+
+    #[test]
+    fn range_variants_match_scalar_fused_noisy_bitwise() {
+        // Under read noise every variant shares `range_noisy`, so
+        // identically seeded twins must agree bit for bit AND leave
+        // their RNG streams aligned across repeated calls.
+        let variation = VariationModel { program_sigma: 0.15, read_sigma: 0.05 };
+        let mut a = random_block(130, variation, 29);
+        let mut b = random_block(130, variation, 29);
+        let ladder = SenseLadder::new(&McamParams::default(), 12);
+        let mut rng = Rng::new(53);
+        for (first, count) in [(0, 130), (7, 65), (0, 64), (129, 1), (40, 13)] {
+            let wl = random_wordline(&mut rng);
+            let mut oracle = vec![0f64; count];
+            let mut int = vec![0f64; count];
+            a.sense_votes_range_scalar(&wl, first, count, &ladder, 1.5, &mut oracle);
+            b.sense_votes_range_int(&wl, first, count, &ladder, 1.5, &mut int);
+            assert_eq!(int, oracle, "range ({first}, {count})");
+        }
+    }
+
+    #[test]
+    fn select_variants_match_scalar_fused_ideal_bitwise() {
+        let variation = VariationModel { program_sigma: 0.2, read_sigma: 0.0 };
+        let mut block = random_block(150, variation, 83);
+        let ladder = SenseLadder::new(&McamParams::default(), 16);
+        let mut rng = Rng::new(41);
+        for trial in 0..6 {
+            let wl = random_wordline(&mut rng);
+            let indices: Vec<usize> = (0..150).filter(|_| rng.below(2) == 0).collect();
+            let weight = rng.range_f64(0.25, 4.0);
+            let mut oracle = vec![0.5f64; indices.len()];
+            let mut dispatch = vec![0.5f64; indices.len()];
+            let mut int = vec![0.5f64; indices.len()];
+            block.sense_votes_select_scalar(&wl, 0, &indices, &ladder, weight, &mut oracle);
+            block.sense_votes_select(&wl, 0, &indices, &ladder, weight, &mut dispatch);
+            block.sense_votes_select_int(&wl, 0, &indices, &ladder, weight, &mut int);
+            assert_eq!(dispatch, oracle, "dispatch, trial {trial}");
+            assert_eq!(int, oracle, "int, trial {trial}");
+            #[cfg(feature = "simd")]
+            {
+                let mut simd = vec![0.5f64; indices.len()];
+                block.sense_votes_select_simd(&wl, 0, &indices, &ladder, weight, &mut simd);
+                assert_eq!(simd, oracle, "simd, trial {trial}");
+            }
+        }
+    }
+
+    #[test]
+    fn vote_accumulator_widens_exactly_past_i16_max() {
+        assert!(!vote_accumulator_widens(1));
+        assert!(!vote_accumulator_widens(i16::MAX as usize));
+        assert!(vote_accumulator_widens(i16::MAX as usize + 1));
+    }
+
+    #[test]
+    fn vote_saturating_episode_at_i16_boundary() {
+        // The deliberately vote-saturating episode: the deepest ladder
+        // the narrow path accepts (i16::MAX rungs) against a
+        // perfect-match string, scored with the largest production
+        // accumulation weight (B4E's 4^7). The i16 tile accumulator
+        // reaches exactly i16::MAX on that slot — the most votes a
+        // string can earn in one call — and cannot overflow because a
+        // string earns at most one vote per rung.
+        let depth = i16::MAX as usize;
+        assert!(!vote_accumulator_widens(depth));
+        let mut block = ideal_block(2);
+        let cells = [2u8; CELLS_PER_STRING];
+        block.program_string(&cells);
+        block.program_string(&[0u8; CELLS_PER_STRING]);
+        let ladder = SenseLadder::new(&McamParams::default(), depth);
+        let weight = 4f64.powi(7);
+        let mut int = vec![0f64; 2];
+        let mut naive = vec![0f64; 2];
+        block.sense_votes_range_int(&cells, 0, 2, &ladder, weight, &mut int);
+        block.sense_votes_range_naive(&cells, 0, 2, &ladder, weight, &mut naive);
+        assert_eq!(int, naive);
+        // i_max clears every threshold: full-ladder vote count, exact in
+        // f64 (32767 * 4^7 < 2^53).
+        assert_eq!(int[0], weight * depth as f64);
+    }
+
+    #[test]
+    fn vote_saturating_episode_one_past_boundary_widens() {
+        // One rung past i16::MAX: the tile accumulator widens to i32 and
+        // the full-ladder count lands one above what i16 could hold.
+        let depth = i16::MAX as usize + 1;
+        assert!(vote_accumulator_widens(depth));
+        let mut block = ideal_block(2);
+        let cells = [2u8; CELLS_PER_STRING];
+        block.program_string(&cells);
+        block.program_string(&[0u8; CELLS_PER_STRING]);
+        let ladder = SenseLadder::new(&McamParams::default(), depth);
+        let mut int = vec![0f64; 2];
+        let mut naive = vec![0f64; 2];
+        block.sense_votes_range_int(&cells, 0, 2, &ladder, 1.0, &mut int);
+        block.sense_votes_range_naive(&cells, 0, 2, &ladder, 1.0, &mut naive);
+        assert_eq!(int, naive);
+        assert_eq!(int[0], depth as f64);
     }
 }

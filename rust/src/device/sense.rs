@@ -137,6 +137,25 @@ impl SeriesRungs {
         }
         votes
     }
+
+    /// Branchless twin of [`Self::votes_for_series`]: count **every**
+    /// cleared rung instead of breaking at the first miss. The rungs are
+    /// non-increasing, so `series <= rungs[t]` holds on a prefix of the
+    /// ladder — if rung `t` misses, every later (smaller-or-equal) rung
+    /// misses too — and the full count equals the break-loop count for
+    /// every input, NaN included (`series <= r` is false, both paths
+    /// count zero). This is the counting scheme of the integer-vote tile
+    /// accumulators in [`crate::device::block::McamBlock`]: with no
+    /// data-dependent branch the loop vectorizes, at the cost of always
+    /// walking the whole ladder.
+    #[inline]
+    pub fn votes_for_series_dense(&self, series: f32) -> u32 {
+        let mut votes = 0u32;
+        for &r in &self.rungs {
+            votes += (series <= r) as u32;
+        }
+        votes
+    }
 }
 
 /// Largest non-negative f32 `s` for which the ideal current `v_bl / s`
@@ -300,6 +319,34 @@ mod tests {
                 rungs.votes_for_series(s) == l.votes(current)
             },
         );
+    }
+
+    #[test]
+    fn dense_votes_equal_break_loop_votes() {
+        // The prefix property the integer-vote kernels lean on, probed
+        // adversarially: random series sums plus values within a few
+        // ULPs of every rung (where a non-monotone ladder would betray
+        // the full count first).
+        let p = McamParams::default();
+        let l = ladder(16);
+        let rungs = l.series_rungs(p.v_bl);
+        forall(
+            "dense rung count == break-loop rung count",
+            512,
+            |rng| {
+                if rng.below(2) == 0 {
+                    rng.range_f64(20.0, 6000.0) as f32
+                } else {
+                    let r = rungs.rungs()[rng.below(16)];
+                    let offset = rng.below(7) as i64 - 3;
+                    f32::from_bits((r.to_bits() as i64 + offset) as u32)
+                }
+            },
+            |&s| rungs.votes_for_series_dense(s) == rungs.votes_for_series(s),
+        );
+        // NaN: both schemes count zero (every compare is false).
+        assert_eq!(rungs.votes_for_series(f32::NAN), 0);
+        assert_eq!(rungs.votes_for_series_dense(f32::NAN), 0);
     }
 
     #[test]

@@ -30,6 +30,11 @@
 //! serving API (§API), the cascade scheduler (§Cascade), and the perf
 //! log; `cargo bench` regenerates the measured-vs-paper tables.
 
+// The `simd` cargo feature swaps the sense kernel's tile core for
+// portable `std::simd` (DESIGN.md §Perf). `portable_simd` is a nightly
+// feature, so the gate rides the cargo feature: default builds stay on
+// stable rust and keep the scalar fused kernel as the oracle.
+#![cfg_attr(feature = "simd", feature(portable_simd))]
 // Rustdoc is part of the public API surface: a broken intra-doc link is
 // a build error (CI runs `cargo doc --no-deps` and `cargo test --doc`).
 #![deny(rustdoc::broken_intra_doc_links)]

@@ -875,7 +875,9 @@ fn cmd_bench_client(args: &Args) -> Result<()> {
         hist.max_us()
     );
 
-    // Merge into the tracked perf report, alongside the bench harness.
+    // Merge into the tracked perf report, alongside the bench harness —
+    // keyed under the build's run id so the record stays append-only
+    // across PRs (DESIGN.md §Perf).
     let latency = ObjBuilder::new()
         .field("mean", Json::num(hist.mean_us()))
         .field("p50", Json::num(hist.quantile_us(0.5)))
@@ -898,7 +900,8 @@ fn cmd_bench_client(args: &Args) -> Result<()> {
         .parent()
         .expect("crate has a parent dir");
     let report = root.join("BENCH_engine.json");
-    match merge_report(&report, vec![("bench_client".to_string(), entry)]) {
+    let keyed = mcamvss::util::json::keyed_by_run(entry);
+    match merge_report(&report, vec![("bench_client".to_string(), keyed)]) {
         Ok(()) => println!("[bench report -> {}]", report.display()),
         Err(e) => eprintln!("WARNING: could not write {}: {e}", report.display()),
     }

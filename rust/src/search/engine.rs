@@ -290,10 +290,13 @@ impl Shard {
     /// Returns `wordlines.len() × slots.len()` partial scores
     /// (query-major). Each
     /// iteration hands its contiguous string range straight to the fused
-    /// sense→vote→accumulate kernel ([`McamBlock::sense_votes_range`]) —
-    /// no intermediate currents buffer — and the kernel preserves the
-    /// scalar reference's per-string cell-sum and RNG draw order, so
-    /// results stay bit-identical to the legacy single-block engine.
+    /// sense→vote→accumulate kernel ([`McamBlock::sense_votes_range`],
+    /// which dispatches to the build's active variant — integer-vote
+    /// accumulation by default, portable SIMD under `--features simd`) —
+    /// no intermediate currents buffer — and every kernel variant
+    /// preserves the scalar reference's per-string cell-sum and RNG draw
+    /// order, so results stay bit-identical to the legacy single-block
+    /// engine regardless of which variant the build selects.
     fn score_batch(
         &mut self,
         wordlines: &[(SearchMode, Vec<[u8; CELLS_PER_STRING]>)],
@@ -738,6 +741,14 @@ impl SearchEngine {
 
     pub fn n_shards(&self) -> usize {
         self.shards.len()
+    }
+
+    /// The fused-kernel variant every sense in this build dispatches to
+    /// on the ideal path ([`McamBlock::active_kernel`]) — surfaced here
+    /// so benches and serving diagnostics can label throughput numbers
+    /// with the kernel that produced them.
+    pub fn kernel_variant(&self) -> crate::device::block::KernelVariant {
+        McamBlock::active_kernel()
     }
 
     /// Slots physically programmed in each shard (test/introspection) —

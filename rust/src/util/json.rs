@@ -339,12 +339,38 @@ impl Json {
     }
 }
 
-/// Merge `entries` into the JSON object stored at `path`, key by key:
-/// existing keys from earlier (or partial) runs are preserved,
-/// re-measured keys are replaced. Creates the file if missing; an
-/// unreadable/non-object file is replaced wholesale. Shared by the bench
-/// harness and the `bench-client` CLI subcommand, both of which track
-/// measurements in `BENCH_engine.json` at the repository root.
+/// Run id under which this build's bench sections are recorded in
+/// `BENCH_engine.json` — the committed perf record is **append-only
+/// keyed by PR/run id** (DESIGN.md §Perf): each bench target's section
+/// is an object mapping run ids to that run's measurements, and
+/// [`merge_report`]'s deep-merge only ever touches the current id's
+/// slot, so prior PRs' entries survive every re-run. Override with the
+/// `BENCH_RUN_ID` env var at *compile* time (the driver sets it per
+/// PR); defaults to the id of the PR that introduced the record.
+pub const BENCH_RUN_ID: &str = match option_env!("BENCH_RUN_ID") {
+    Some(id) => id,
+    None => "pr10",
+};
+
+/// Wrap a bench section's measurements under the current
+/// [`BENCH_RUN_ID`], producing the `{run_id: {...measurements}}` shape
+/// [`merge_report`] appends without clobbering other runs' entries.
+pub fn keyed_by_run(value: Json) -> Json {
+    Json::Obj(vec![(BENCH_RUN_ID.to_string(), value)])
+}
+
+/// Merge `entries` into the JSON object stored at `path`. The merge is
+/// **deep on objects**: when an existing key and its replacement are
+/// both objects, their fields merge recursively (new sub-keys append,
+/// shared sub-keys recurse), so run-id-keyed bench sections
+/// ([`keyed_by_run`]) are append-only — re-running a bench target
+/// updates only the current run's slot and every other run's entry
+/// survives. Non-object values (and object/non-object mismatches)
+/// replace, which is what re-measured leaf numbers want. Creates the
+/// file if missing; an unreadable/non-object file is replaced
+/// wholesale. Shared by the bench harness and the `bench-client` CLI
+/// subcommand, both of which track measurements in `BENCH_engine.json`
+/// at the repository root.
 pub fn merge_report(path: &std::path::Path, entries: Vec<(String, Json)>) -> std::io::Result<()> {
     let mut fields: Vec<(String, Json)> = match std::fs::read_to_string(path) {
         Ok(text) => match Json::parse(&text) {
@@ -353,14 +379,22 @@ pub fn merge_report(path: &std::path::Path, entries: Vec<(String, Json)>) -> std
         },
         Err(_) => Vec::new(),
     };
+    merge_fields(&mut fields, entries);
+    std::fs::write(path, Json::Obj(fields).render())
+}
+
+/// Recursive object merge behind [`merge_report`].
+fn merge_fields(fields: &mut Vec<(String, Json)>, entries: Vec<(String, Json)>) {
     for (key, value) in entries {
         if let Some(slot) = fields.iter_mut().find(|(k, _)| *k == key) {
-            slot.1 = value;
+            match (&mut slot.1, value) {
+                (Json::Obj(existing), Json::Obj(incoming)) => merge_fields(existing, incoming),
+                (slot_value, other) => *slot_value = other,
+            }
         } else {
             fields.push((key, value));
         }
     }
-    std::fs::write(path, Json::Obj(fields).render())
 }
 
 /// Convenience builder for JSON objects.
@@ -475,6 +509,51 @@ mod tests {
         let parsed = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
         assert_eq!(parsed.get("c").unwrap().as_f64(), Some(3.0));
         assert_eq!(parsed.get("a"), None);
+    }
+
+    #[test]
+    fn merge_report_is_append_only_for_run_keyed_sections() {
+        // The committed-perf-record contract (DESIGN.md §Perf): a bench
+        // section is an object keyed by run id, and merging a second
+        // run's entry must preserve the first — two merges, both entries
+        // survive. A re-merge of the SAME run id updates only that slot.
+        let dir = std::env::temp_dir().join("mcamvss_json_merge_runs");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("report.json");
+        let _ = std::fs::remove_file(&path);
+
+        let entry = |ms: f64| ObjBuilder::new().field("kernel_ms", Json::num(ms)).build();
+        merge_report(
+            &path,
+            vec![("perf_kernel".into(), Json::Obj(vec![("pr9".into(), entry(4.0))]))],
+        )
+        .unwrap();
+        merge_report(
+            &path,
+            vec![("perf_kernel".into(), Json::Obj(vec![("pr10".into(), entry(2.0))]))],
+        )
+        .unwrap();
+        let parsed = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let section = parsed.get("perf_kernel").unwrap();
+        assert_eq!(section.get("pr9").unwrap().get("kernel_ms").unwrap().as_f64(), Some(4.0));
+        assert_eq!(section.get("pr10").unwrap().get("kernel_ms").unwrap().as_f64(), Some(2.0));
+
+        // re-running the current id replaces only its own slot
+        merge_report(
+            &path,
+            vec![("perf_kernel".into(), Json::Obj(vec![("pr10".into(), entry(1.5))]))],
+        )
+        .unwrap();
+        let parsed = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let section = parsed.get("perf_kernel").unwrap();
+        assert_eq!(section.get("pr9").unwrap().get("kernel_ms").unwrap().as_f64(), Some(4.0));
+        assert_eq!(section.get("pr10").unwrap().get("kernel_ms").unwrap().as_f64(), Some(1.5));
+    }
+
+    #[test]
+    fn keyed_by_run_wraps_under_current_run_id() {
+        let wrapped = keyed_by_run(Json::num(7));
+        assert_eq!(wrapped.get(BENCH_RUN_ID).unwrap().as_f64(), Some(7.0));
     }
 
     #[test]

@@ -93,6 +93,45 @@ fn full_keep_single_stage_cascade_is_bitwise_plain_scan() {
 }
 
 #[test]
+fn ideal_path_pins_survive_kernel_variant_swap() {
+    // Stale-pin sweep (ISSUE 10): every parity pin in this suite
+    // compares engine paths that now ride the dispatched kernel variant
+    // (integer-vote accumulation by default, SIMD under `--features
+    // simd`) — none pins a literal score constant, and the kernel swap
+    // changes no representable result on the ideal path, so no pin
+    // needed recomputing. This test asserts that explicitly: with MTMC
+    // (unit accumulation weights) on an ideal device, every dense score
+    // is an exact integer vote count — any rounding introduced by a
+    // kernel variant would leave a fractional residue — and a full-keep
+    // cascade reproduces those integers bitwise through the selective
+    // kernel.
+    let (embs, labels) = clustered(0x9117, 5, 3, 0.05);
+    let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
+    let cfg = EngineConfig::new(Encoding::Mtmc, 8, SearchMode::Avss, 3.0)
+        .ideal()
+        .with_seed(0xD15)
+        .with_shards(2);
+    let mut plain = engine(cfg, &refs, &labels);
+    let mut cascaded = engine(cfg, &refs, &labels);
+    cascaded.set_cascade(Some(CascadeConfig::new(vec![CascadeStage::full()]))).unwrap();
+    for q in refs.iter().take(5) {
+        let request = SearchRequest::new(q).with_top_k(3).with_full_scores();
+        let a = plain.search(&request).unwrap();
+        let b = cascaded.search(&request).unwrap();
+        let scores = a.full_scores.as_ref().expect("dense scores requested");
+        for (slot, &s) in scores.iter().enumerate() {
+            assert!(
+                s >= 0.0 && s.fract() == 0.0,
+                "ideal-path MTMC score must be an exact integer vote count; \
+                 slot {slot} scored {s}"
+            );
+        }
+        assert_eq!(a.full_scores, b.full_scores, "cascade refine rides the same kernel");
+        assert_eq!(a.hits, b.hits);
+    }
+}
+
+#[test]
 fn full_keep_two_stage_cascade_matches_plain_scan_on_ideal_path() {
     // Coarse pass + full-precision refine with Shortlist::All: the final
     // stage re-senses every slot, so ideal-path hits and dense scores

@@ -1,12 +1,20 @@
-//! forall kernel-equivalence: the fused, tiled, cell-major sense kernel
-//! (`McamBlock::sense_votes_range`) must be **bit-identical** to the
-//! retained scalar reference (`sense_votes_range_naive`) across random
-//! encodings, code-word lengths, ladder depths, shard counts, and
-//! noisy/ideal variation models — same per-string f32 cell-sum order,
-//! same per-shard RNG draw order, so accumulated scores match to the
-//! last bit (the PR's acceptance criterion).
+//! forall kernel-equivalence: every sense-kernel variant —
+//! `sense_votes_range` (the dispatcher), `sense_votes_range_scalar`
+//! (the scalar fused oracle), `sense_votes_range_int` (integer-vote
+//! accumulation), `sense_votes_range_simd` (with `--features simd`),
+//! and the per-string naive reference — must be **bit-identical**
+//! across random encodings, code-word lengths, ladder depths, shard
+//! counts, fault states, and noisy/ideal variation models.
+//!
+//! The pinned noisy-path tolerance is **exactly zero**: all variants
+//! share one noisy body inside `McamBlock` (same per-string f32
+//! cell-sum order, same in-order RNG draws), so even under read noise
+//! identically seeded twins agree to the last bit. A failing case is
+//! reported by `forall` with its replayable seed and the full `Case`
+//! debug dump.
 
 use mcamvss::device::block::McamBlock;
+use mcamvss::device::faults::FaultModel;
 use mcamvss::device::sense::SenseLadder;
 use mcamvss::device::variation::VariationModel;
 use mcamvss::device::McamParams;
@@ -22,6 +30,15 @@ const VARIATIONS: [VariationModel; 4] = [
     VariationModel { program_sigma: 0.15, read_sigma: 0.05 },
 ];
 
+/// Program-time fault states: pristine, a mild end-of-life profile, and
+/// a deliberately harsh one. Twins share a seed, so the corruption
+/// draws land on identical cells in every block.
+const FAULTS: [FaultModel; 3] = [
+    FaultModel::NONE,
+    FaultModel { stuck_low: 0.002, stuck_high: 0.002, retention_drift: 0.02, read_disturb: 0.0 },
+    FaultModel { stuck_low: 0.02, stuck_high: 0.02, retention_drift: 0.1, read_disturb: 0.0 },
+];
+
 #[derive(Debug)]
 struct Case {
     encoding: Encoding,
@@ -31,48 +48,71 @@ struct Case {
     shards: usize,
     ladder_len: usize,
     variation: VariationModel,
+    faults: FaultModel,
     seed: u64,
     weight: f64,
 }
 
+fn random_case(rng: &mut Rng) -> Case {
+    Case {
+        encoding: ALL_ENCODINGS[rng.below(ALL_ENCODINGS.len())],
+        cl: 1 + rng.below(4),
+        dims: 1 + rng.below(52),
+        n_vectors: 1 + rng.below(40),
+        shards: 1 + rng.below(4),
+        ladder_len: 1 + rng.below(24),
+        variation: VARIATIONS[rng.below(VARIATIONS.len())],
+        faults: FAULTS[rng.below(FAULTS.len())],
+        seed: rng.next_u64(),
+        weight: rng.range_f64(0.25, 4.0),
+    }
+}
+
+/// Encode a realistic support set for the case (quantized values →
+/// code words → per-string cell arrays, padding lanes included) and the
+/// AVSS word lines for a random query.
+fn support_and_wordlines(
+    case: &Case,
+) -> (Vec<[u8; CELLS_PER_STRING]>, Vec<[u8; CELLS_PER_STRING]>) {
+    let layout = VectorLayout::new(case.dims, case.encoding, case.cl);
+    let levels = case.encoding.levels(case.cl);
+    let mut data_rng = Rng::new(case.seed ^ 0xDA7A);
+    let mut strings: Vec<[u8; CELLS_PER_STRING]> = Vec::new();
+    for _ in 0..case.n_vectors {
+        let values: Vec<u32> = (0..case.dims).map(|_| data_rng.below(levels) as u32).collect();
+        let words = case.encoding.encode_vector(&values, case.cl);
+        strings.extend(layout.strings_for(&words));
+    }
+    let q4: Vec<u8> = (0..case.dims).map(|_| data_rng.below(4) as u8).collect();
+    let wordlines: Vec<[u8; CELLS_PER_STRING]> =
+        (0..layout.groups).map(|g| layout.avss_wordline(&q4, g)).collect();
+    (strings, wordlines)
+}
+
+/// A twin block for one shard of the case: same seed, same fault model,
+/// same programmed strings — so program-time corruption and read-noise
+/// draws replay identically across every kernel variant's copy.
+fn twin_block(case: &Case, strings: &[[u8; CELLS_PER_STRING]], shard: u64) -> McamBlock {
+    let seed = derive_seed(case.seed, shard);
+    let mut block = McamBlock::new(strings.len(), McamParams::default(), case.variation, seed);
+    block.set_faults(case.faults);
+    for cells in strings {
+        block.program_string(cells);
+    }
+    block
+}
+
 #[test]
-fn fused_kernel_matches_naive_reference_bitwise() {
+fn all_range_kernels_match_scalar_fused_oracle_bitwise() {
     forall(
-        "fused tiled kernel == scalar reference (bitwise)",
+        "range kernel variants == scalar fused oracle (bitwise, ideal and noisy)",
         48,
-        |rng| Case {
-            encoding: ALL_ENCODINGS[rng.below(ALL_ENCODINGS.len())],
-            cl: 1 + rng.below(4),
-            dims: 1 + rng.below(52),
-            n_vectors: 1 + rng.below(40),
-            shards: 1 + rng.below(4),
-            ladder_len: 1 + rng.below(24),
-            variation: VARIATIONS[rng.below(VARIATIONS.len())],
-            seed: rng.next_u64(),
-            weight: rng.range_f64(0.25, 4.0),
-        },
+        random_case,
         |case| {
-            let params = McamParams::default();
-            let ladder = SenseLadder::new(&params, case.ladder_len);
+            let ladder = SenseLadder::new(&McamParams::default(), case.ladder_len);
             let layout = VectorLayout::new(case.dims, case.encoding, case.cl);
             let spv = layout.strings_per_vector();
-            let levels = case.encoding.levels(case.cl);
-            let mut data_rng = Rng::new(case.seed ^ 0xDA7A);
-
-            // A realistic support set: quantized values → code words →
-            // per-string cell arrays (includes padding lanes).
-            let mut strings: Vec<[u8; CELLS_PER_STRING]> = Vec::new();
-            for _ in 0..case.n_vectors {
-                let values: Vec<u32> =
-                    (0..case.dims).map(|_| data_rng.below(levels) as u32).collect();
-                let words = case.encoding.encode_vector(&values, case.cl);
-                strings.extend(layout.strings_for(&words));
-            }
-
-            // Word lines driven from a random 4-level query word per dim.
-            let q4: Vec<u8> = (0..case.dims).map(|_| data_rng.below(4) as u8).collect();
-            let wordlines: Vec<[u8; CELLS_PER_STRING]> =
-                (0..layout.groups).map(|g| layout.avss_wordline(&q4, g)).collect();
+            let (strings, wordlines) = support_and_wordlines(case);
 
             // Partition vector-contiguously across shards like the engine
             // and compare the kernels shard by shard on seeded twins.
@@ -84,57 +124,153 @@ fn fused_kernel_matches_naive_reference_bitwise() {
                     continue;
                 }
                 let shard_strings = &strings[lo * spv..hi * spv];
-                let seed = derive_seed(case.seed, shard as u64);
-                let mut fused_block =
-                    McamBlock::new(shard_strings.len(), params, case.variation, seed);
-                let mut naive_block =
-                    McamBlock::new(shard_strings.len(), params, case.variation, seed);
-                for cells in shard_strings {
-                    fused_block.program_string(cells);
-                    naive_block.program_string(cells);
-                }
                 let total = shard_strings.len();
-                let mut fused = vec![0f64; total];
+                let mut oracle_block = twin_block(case, shard_strings, shard as u64);
+                let mut naive_block = twin_block(case, shard_strings, shard as u64);
+                let mut dispatch_block = twin_block(case, shard_strings, shard as u64);
+                let mut int_block = twin_block(case, shard_strings, shard as u64);
+                #[cfg(feature = "simd")]
+                let mut simd_block = twin_block(case, shard_strings, shard as u64);
+
+                let mut oracle = vec![0f64; total];
                 let mut naive = vec![0f64; total];
+                let mut dispatch = vec![0f64; total];
+                let mut int = vec![0f64; total];
+                #[cfg(feature = "simd")]
+                let mut simd = vec![0f64; total];
                 for wl in &wordlines {
-                    fused_block.sense_votes_range(wl, 0, total, &ladder, case.weight, &mut fused);
-                    naive_block.sense_votes_range_naive(
-                        wl,
-                        0,
-                        total,
-                        &ladder,
-                        case.weight,
-                        &mut naive,
-                    );
+                    let w = case.weight;
+                    oracle_block.sense_votes_range_scalar(wl, 0, total, &ladder, w, &mut oracle);
+                    naive_block.sense_votes_range_naive(wl, 0, total, &ladder, w, &mut naive);
+                    dispatch_block.sense_votes_range(wl, 0, total, &ladder, w, &mut dispatch);
+                    int_block.sense_votes_range_int(wl, 0, total, &ladder, w, &mut int);
+                    #[cfg(feature = "simd")]
+                    simd_block.sense_votes_range_simd(wl, 0, total, &ladder, w, &mut simd);
                 }
+                // Tolerance is zero on BOTH paths — bitwise or bust.
+                if naive != oracle || dispatch != oracle || int != oracle {
+                    return false;
+                }
+                #[cfg(feature = "simd")]
+                if simd != oracle {
+                    return false;
+                }
+
                 // An unaligned subrange exercises the tile boundaries.
                 let first = total / 3;
                 let count = total - first;
-                let mut fused_sub = vec![0f64; count];
-                let mut naive_sub = vec![0f64; count];
-                fused_block.sense_votes_range(
-                    &wordlines[0],
+                let w = case.weight;
+                let mut oracle_sub = vec![0f64; count];
+                let mut dispatch_sub = vec![0f64; count];
+                let mut int_sub = vec![0f64; count];
+                let wl = &wordlines[0];
+                oracle_block.sense_votes_range_scalar(
+                    wl,
                     first,
                     count,
                     &ladder,
-                    case.weight,
-                    &mut fused_sub,
+                    w,
+                    &mut oracle_sub,
                 );
-                naive_block.sense_votes_range_naive(
-                    &wordlines[0],
-                    first,
-                    count,
-                    &ladder,
-                    case.weight,
-                    &mut naive_sub,
-                );
-                if fused != naive || fused_sub != naive_sub {
+                dispatch_block.sense_votes_range(wl, first, count, &ladder, w, &mut dispatch_sub);
+                int_block.sense_votes_range_int(wl, first, count, &ladder, w, &mut int_sub);
+                if dispatch_sub != oracle_sub || int_sub != oracle_sub {
                     return false;
+                }
+                #[cfg(feature = "simd")]
+                {
+                    let mut simd_sub = vec![0f64; count];
+                    simd_block.sense_votes_range_simd(wl, first, count, &ladder, w, &mut simd_sub);
+                    if simd_sub != oracle_sub {
+                        return false;
+                    }
                 }
             }
             true
         },
     );
+}
+
+#[test]
+fn all_select_kernels_match_scalar_fused_oracle_bitwise() {
+    // The cascade refine kernel: random strictly ascending subsets, every
+    // select variant against the scalar fused select oracle — zero
+    // tolerance on ideal AND noisy paths, faults included.
+    forall(
+        "select kernel variants == scalar fused oracle (bitwise)",
+        32,
+        random_case,
+        |case| {
+            let ladder = SenseLadder::new(&McamParams::default(), case.ladder_len);
+            let (strings, wordlines) = support_and_wordlines(case);
+            let total = strings.len();
+            let mut pick_rng = Rng::new(case.seed ^ 0x5E1EC7);
+            let indices: Vec<usize> = (0..total).filter(|_| pick_rng.below(3) != 0).collect();
+            if indices.is_empty() {
+                return true;
+            }
+            let mut oracle_block = twin_block(case, &strings, 0);
+            let mut naive_block = twin_block(case, &strings, 0);
+            let mut dispatch_block = twin_block(case, &strings, 0);
+            let mut int_block = twin_block(case, &strings, 0);
+            #[cfg(feature = "simd")]
+            let mut simd_block = twin_block(case, &strings, 0);
+
+            let mut oracle = vec![0f64; indices.len()];
+            let mut naive = vec![0f64; indices.len()];
+            let mut dispatch = vec![0f64; indices.len()];
+            let mut int = vec![0f64; indices.len()];
+            #[cfg(feature = "simd")]
+            let mut simd = vec![0f64; indices.len()];
+            for wl in &wordlines {
+                let w = case.weight;
+                oracle_block.sense_votes_select_scalar(wl, 0, &indices, &ladder, w, &mut oracle);
+                naive_block.sense_votes_select_naive(wl, 0, &indices, &ladder, w, &mut naive);
+                dispatch_block.sense_votes_select(wl, 0, &indices, &ladder, w, &mut dispatch);
+                int_block.sense_votes_select_int(wl, 0, &indices, &ladder, w, &mut int);
+                #[cfg(feature = "simd")]
+                simd_block.sense_votes_select_simd(wl, 0, &indices, &ladder, w, &mut simd);
+            }
+            if naive != oracle || dispatch != oracle || int != oracle {
+                return false;
+            }
+            #[cfg(feature = "simd")]
+            if simd != oracle {
+                return false;
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn vote_saturating_episode_is_exact_across_variants() {
+    // The deliberately vote-saturating episode at integration level: the
+    // deepest ladder the i16 tile accumulator accepts, B4E's maximum
+    // accumulation weight (4^7), and a perfect-match string that clears
+    // every rung. The integer path must reproduce the oracle exactly and
+    // land on the analytically known score.
+    let depth = i16::MAX as usize;
+    let params = McamParams::default();
+    let mut block = McamBlock::new(3, params, VariationModel::IDEAL, 7);
+    let cells = [2u8; CELLS_PER_STRING];
+    block.program_string(&cells);
+    block.program_string(&[0u8; CELLS_PER_STRING]);
+    block.program_string(&[3u8; CELLS_PER_STRING]);
+    let ladder = SenseLadder::new(&params, depth);
+    let weight = 4f64.powi(7);
+    let mut int = vec![0f64; 3];
+    let mut oracle = vec![0f64; 3];
+    block.sense_votes_range_int(&cells, 0, 3, &ladder, weight, &mut int);
+    block.sense_votes_range_scalar(&cells, 0, 3, &ladder, weight, &mut oracle);
+    assert_eq!(int, oracle);
+    assert_eq!(int[0], weight * depth as f64, "perfect match must clear the full ladder");
+    #[cfg(feature = "simd")]
+    {
+        let mut simd = vec![0f64; 3];
+        block.sense_votes_range_simd(&cells, 0, 3, &ladder, weight, &mut simd);
+        assert_eq!(simd, oracle);
+    }
 }
 
 #[test]

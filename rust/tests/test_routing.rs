@@ -90,6 +90,44 @@ fn probes_all_is_bitwise_flat_scan() {
 }
 
 #[test]
+fn ideal_path_pins_survive_kernel_variant_swap() {
+    // Stale-pin sweep (ISSUE 10): the parity pins in this suite compare
+    // engine paths that now ride the dispatched kernel variant
+    // (integer-vote accumulation by default, SIMD under `--features
+    // simd`); no literal score constants are pinned and the swap
+    // changes no representable result on the ideal path, so no pin
+    // needed recomputing. Assert that explicitly: MTMC unit weights on
+    // an ideal device make every dense score an exact integer vote
+    // count — any rounding a kernel variant introduced would leave a
+    // fractional residue — and routed probing returns a subset of
+    // exactly those integers.
+    let (embs, labels) = clustered(0x9118, 6, 4, 0.05);
+    let refs: Vec<&[f32]> = embs.iter().map(|e| e.as_slice()).collect();
+    let cfg = EngineConfig::new(Encoding::Mtmc, 8, SearchMode::Avss, 3.0)
+        .ideal()
+        .with_seed(0xD16)
+        .with_shards(3);
+    let mut plain = engine(cfg, &refs, &labels);
+    let mut routed = engine(cfg, &refs, &labels);
+    routed.set_routing(Some(RoutingConfig::all())).unwrap();
+    for q in refs.iter().take(5) {
+        let request = SearchRequest::new(q).with_top_k(3).with_full_scores();
+        let a = plain.search(&request).unwrap();
+        let b = routed.search(&request).unwrap();
+        let scores = a.full_scores.as_ref().expect("dense scores requested");
+        for (slot, &s) in scores.iter().enumerate() {
+            assert!(
+                s >= 0.0 && s.fract() == 0.0,
+                "ideal-path MTMC score must be an exact integer vote count; \
+                 slot {slot} scored {s}"
+            );
+        }
+        assert_eq!(a.full_scores, b.full_scores, "routing rides the same kernel");
+        assert_eq!(a.hits, b.hits);
+    }
+}
+
+#[test]
 fn centroids_track_append_remove_and_reclaim() {
     // Freshness contract: a router installed *before* a mutation burst
     // (appends into one shard, removals deep enough to trigger the
